@@ -1,0 +1,60 @@
+//! Quickstart: factor a random symmetric matrix into G-transforms and a
+//! random general matrix into T-transforms, then use the fast apply.
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use fastes::factor::{GeneralFactorizer, GeneralOptions, SymFactorizer, SymOptions};
+use fastes::linalg::{Mat, Rng64};
+
+fn main() {
+    let n = 128;
+    let mut rng = Rng64::new(7);
+
+    // --- symmetric case: S ≈ Ū diag(s̄) Ūᵀ --------------------------------
+    let x = Mat::randn(n, n, &mut rng);
+    let s = &x + &x.transpose();
+    // budget: g = 2·n·log₂n extended Givens factors
+    let g = 2 * n * (n as f64).log2() as usize;
+    let f = SymFactorizer::new(&s, g, SymOptions::default()).run();
+    println!(
+        "symmetric n={n}: g={} factors, relative error {:.4}",
+        f.chain.len(),
+        f.relative_error(&s)
+    );
+    println!(
+        "  fast apply: {} flops vs {} dense ({}x fewer)",
+        f.chain.flops(),
+        2 * n * n,
+        (2 * n * n) as f64 / f.chain.flops().max(1) as f64
+    );
+
+    // multiply a vector by the approximation: Ū diag(s̄) Ūᵀ x — O(g + n)
+    let mut v: Vec<f64> = (0..n).map(|_| rng.randn()).collect();
+    let dense_result = {
+        let approx = f.chain.reconstruct(&f.spectrum);
+        approx.matvec(&v)
+    };
+    f.chain.apply_vec_t(&mut v);
+    for (vi, si) in v.iter_mut().zip(f.spectrum.iter()) {
+        *vi *= si;
+    }
+    f.chain.apply_vec(&mut v);
+    let max_dev = v
+        .iter()
+        .zip(dense_result.iter())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+    println!("  fast-path vs dense reconstruction: max deviation {max_dev:.2e}");
+    assert!(max_dev < 1e-8);
+
+    // --- general case: C ≈ T̄ diag(c̄) T̄⁻¹ ---------------------------------
+    let c = Mat::randn(64, 64, &mut rng);
+    let m = 2 * 64 * 6;
+    let fg = GeneralFactorizer::new(&c, m, GeneralOptions::default()).run();
+    println!(
+        "general n=64: m={} factors, relative error {:.4}, {} flops/apply",
+        fg.chain.len(),
+        fg.relative_error(&c),
+        fg.chain.flops()
+    );
+}

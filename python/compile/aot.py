@@ -1,0 +1,103 @@
+"""AOT lowering: JAX (L2) + Pallas (L1) -> HLO text artifacts + manifest.
+
+Interchange format is HLO *text*, NOT a serialized HloModuleProto: jax >=
+0.5 emits protos with 64-bit instruction ids which the rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. Lowered with ``return_tuple=True``
+(the rust loader unwraps with ``to_tuple1``).
+
+Usage: ``python -m compile.aot --out ../artifacts``
+The Makefile invokes this once; it is a no-op for up-to-date artifacts.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# (kind, n, g, batch): small shapes exercise the pytest/rust integration
+# suite; the n=128 shapes are what examples/serve_pipeline serves.
+CONFIGS = [
+    ("gft_fwd", 16, 48, 4),
+    ("gft_inv", 16, 48, 4),
+    ("graph_filter", 16, 48, 4),
+    ("gft_fwd", 128, 1792, 8),
+    ("gft_inv", 128, 1792, 8),
+    ("graph_filter", 128, 1792, 8),
+]
+
+KIND_FN = {
+    "gft_fwd": model.gft_fwd,
+    "gft_inv": model.gft_inv,
+    "graph_filter": model.graph_filter,
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_config(kind: str, n: int, g: int, batch: int) -> str:
+    """Lower one artifact configuration to HLO text."""
+    fn = KIND_FN[kind]
+    f32 = jnp.float32
+    i32 = jnp.int32
+    args = [
+        jax.ShapeDtypeStruct((batch, n), f32),  # x
+        jax.ShapeDtypeStruct((g,), i32),  # ii
+        jax.ShapeDtypeStruct((g,), i32),  # jj
+        jax.ShapeDtypeStruct((g,), f32),  # c
+        jax.ShapeDtypeStruct((g,), f32),  # s
+        jax.ShapeDtypeStruct((g,), f32),  # sg
+    ]
+    if kind == "graph_filter":
+        args.append(jax.ShapeDtypeStruct((n,), f32))  # h
+    lowered = jax.jit(fn).lower(*args)
+    return to_hlo_text(lowered)
+
+
+def artifact_name(kind: str, n: int, g: int, batch: int) -> str:
+    return f"{kind}_n{n}_g{g}_b{batch}"
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts", help="artifact output directory")
+    parser.add_argument(
+        "--force", action="store_true", help="regenerate even when artifacts exist"
+    )
+    args = parser.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest_lines = ["# fastes artifact manifest v1"]
+    for kind, n, g, batch in CONFIGS:
+        name = artifact_name(kind, n, g, batch)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(args.out, fname)
+        manifest_lines.append(
+            f"artifact {name} kind={kind} n={n} g={g} batch={batch} file={fname}"
+        )
+        if os.path.exists(path) and not args.force:
+            print(f"[aot] keep {fname}")
+            continue
+        text = lower_config(kind, n, g, batch)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"[aot] wrote {fname} ({len(text)} chars)")
+
+    with open(os.path.join(args.out, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"[aot] manifest: {len(CONFIGS)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

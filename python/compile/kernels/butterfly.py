@@ -1,0 +1,81 @@
+"""L1 — the Pallas butterfly kernel.
+
+Applies a chain of g extended orthonormal Givens transformations
+(G-transforms, paper eq. (3)-(5)) to a batch of signals. This is the
+compute hot-spot of the fast graph Fourier transform: 6g flops per signal
+instead of the dense 2n^2.
+
+TPU mapping (DESIGN.md §3, Hardware-Adaptation): the signals are laid out
+``(batch, n)`` and the per-stage 2x2 update is vectorized across the batch
+dimension (VPU lanes); the plan scalars (indices/values) live in scalar
+memory; the whole signal block stays resident in VMEM across the
+sequential k = 1..g loop, so HBM traffic is exactly one read + one write
+of the block. ``interpret=True`` is mandatory here: the CPU PJRT plugin
+cannot execute Mosaic custom-calls, and the interpret path lowers the
+kernel to plain HLO that both the build-time pytest oracle and the rust
+runtime execute bit-identically.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _butterfly_kernel(x_ref, ii_ref, jj_ref, c_ref, s_ref, sg_ref, o_ref, *, g, transpose):
+    """Pallas kernel body: sequential chain of 2x2 row mixes.
+
+    x_ref/o_ref: (batch, n) f32. ii/jj: (g,) i32. c/s/sg: (g,) f32.
+    sg is +1 for a rotation, -1 for a reflection.
+    """
+    o_ref[...] = x_ref[...]
+
+    def body(k, _):
+        idx = g - 1 - k if transpose else k
+        i = ii_ref[idx]
+        j = jj_ref[idx]
+        c = c_ref[idx]
+        s = s_ref[idx]
+        sg = sg_ref[idx]
+        xi = pl.load(o_ref, (slice(None), pl.dslice(i, 1)))  # (batch, 1)
+        xj = pl.load(o_ref, (slice(None), pl.dslice(j, 1)))
+        if transpose:
+            # Gᵀ: rotation -> [[c,-s],[s,c]]; reflection is symmetric.
+            yi = c * xi - sg * s * xj
+            yj = s * xi + sg * c * xj
+        else:
+            # G: rows [c, s] and sg*[-s, c]
+            yi = c * xi + s * xj
+            yj = sg * (c * xj - s * xi)
+        pl.store(o_ref, (slice(None), pl.dslice(i, 1)), yi)
+        pl.store(o_ref, (slice(None), pl.dslice(j, 1)), yj)
+        return 0
+
+    jax.lax.fori_loop(0, g, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("transpose",))
+def butterfly_apply(x, ii, jj, c, s, sg, *, transpose=False):
+    """Apply ``Ū x`` (or ``Ūᵀ x`` when ``transpose``) for a G-chain plan.
+
+    Args:
+      x: (batch, n) f32 signals.
+      ii, jj: (g,) i32 coordinates per stage, ``ii < jj``.
+      c, s: (g,) f32 transform values, ``c² + s² = 1``.
+      sg: (g,) f32 kind flags (+1 rotation, -1 reflection).
+      transpose: apply the transposed chain (the forward GFT direction).
+
+    Returns:
+      (batch, n) f32 transformed signals.
+    """
+    g = ii.shape[0]
+    batch, n = x.shape
+    if g == 0:
+        return jnp.asarray(x, jnp.float32)
+    kernel = functools.partial(_butterfly_kernel, g=g, transpose=transpose)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((batch, n), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, ii, jj, c, s, sg)

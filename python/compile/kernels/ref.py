@@ -1,0 +1,58 @@
+"""Pure-jnp oracle for the butterfly kernel (no Pallas).
+
+The correctness contract for L1: ``butterfly_apply`` must match
+``butterfly_ref`` to float32 accuracy for every shape/plan. pytest (with
+hypothesis sweeps) enforces it at build time.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def butterfly_ref(x, ii, jj, c, s, sg, *, transpose=False):
+    """Reference chain application via lax.fori_loop + dynamic slicing."""
+    g = ii.shape[0]
+    x = jnp.asarray(x)
+    ii = jnp.asarray(ii)
+    jj = jnp.asarray(jj)
+    c = jnp.asarray(c)
+    s = jnp.asarray(s)
+    sg = jnp.asarray(sg)
+
+    def body(k, acc):
+        idx = g - 1 - k if transpose else k
+        i = ii[idx]
+        j = jj[idx]
+        ck = c[idx]
+        sk = s[idx]
+        sgk = sg[idx]
+        xi = jax.lax.dynamic_slice_in_dim(acc, i, 1, axis=1)
+        xj = jax.lax.dynamic_slice_in_dim(acc, j, 1, axis=1)
+        if transpose:
+            yi = ck * xi - sgk * sk * xj
+            yj = sk * xi + sgk * ck * xj
+        else:
+            yi = ck * xi + sk * xj
+            yj = sgk * (ck * xj - sk * xi)
+        acc = jax.lax.dynamic_update_slice_in_dim(acc, yi, i, axis=1)
+        acc = jax.lax.dynamic_update_slice_in_dim(acc, yj, j, axis=1)
+        return acc
+
+    return jax.lax.fori_loop(0, g, body, x.astype(jnp.float32))
+
+
+def dense_chain(n, ii, jj, c, s, sg):
+    """Materialize the dense Ū = G_g ... G_1 (numpy-side test helper)."""
+    import numpy as np
+
+    u = np.eye(n, dtype=np.float64)
+    for k in range(len(ii)):
+        gmat = np.eye(n, dtype=np.float64)
+        i, j = int(ii[k]), int(jj[k])
+        ck, sk, sgk = float(c[k]), float(s[k]), float(sg[k])
+        gmat[i, i] = ck
+        gmat[i, j] = sk
+        gmat[j, i] = -sgk * sk
+        gmat[j, j] = sgk * ck
+        u = gmat @ u
+    return u

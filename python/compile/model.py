@@ -1,0 +1,36 @@
+"""L2 — the JAX GFT compute graph (build-time only).
+
+Composes the L1 Pallas butterfly kernel into the three computations the
+serving runtime executes:
+
+* ``gft_fwd``      — analysis  ``x̂ = Ūᵀ x``
+* ``gft_inv``      — synthesis ``x = Ū x̂``
+* ``graph_filter`` — spectral filtering ``y = Ū diag(h) Ūᵀ x``
+
+The transform *plan* (ii, jj, c, s, sg) is a runtime input, so one lowered
+artifact serves every factorization of matching shape. Everything here is
+lowered once by ``aot.py`` to HLO text; python never runs at serve time.
+"""
+
+from .kernels.butterfly import butterfly_apply
+
+
+def gft_fwd(x, ii, jj, c, s, sg):
+    """Forward (analysis) GFT: ``x̂ = Ūᵀ x`` for a G-chain plan."""
+    return (butterfly_apply(x, ii, jj, c, s, sg, transpose=True),)
+
+
+def gft_inv(x, ii, jj, c, s, sg):
+    """Inverse (synthesis) GFT: ``x = Ū x̂``."""
+    return (butterfly_apply(x, ii, jj, c, s, sg, transpose=False),)
+
+
+def graph_filter(x, ii, jj, c, s, sg, h):
+    """Spectral graph filter: ``y = Ū diag(h) Ūᵀ x``.
+
+    ``h`` is the filter response evaluated at the (approximate) graph
+    frequencies — e.g. a low-pass ``h = exp(-τ λ̄)``.
+    """
+    xhat = butterfly_apply(x, ii, jj, c, s, sg, transpose=True)
+    xhat = xhat * h[None, :]
+    return (butterfly_apply(xhat, ii, jj, c, s, sg, transpose=False),)

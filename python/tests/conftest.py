@@ -1,0 +1,24 @@
+"""Shared test fixtures: random G-chain plans."""
+
+import numpy as np
+import pytest
+
+
+def random_plan(rng: np.random.Generator, n: int, g: int):
+    """Random valid plan arrays (ii < jj, unit-norm (c, s), ±1 kinds)."""
+    ii = np.empty(g, dtype=np.int32)
+    jj = np.empty(g, dtype=np.int32)
+    for k in range(g):
+        i = rng.integers(0, n - 1)
+        j = rng.integers(i + 1, n)
+        ii[k], jj[k] = i, j
+    theta = rng.uniform(0.0, 2.0 * np.pi, size=g)
+    c = np.cos(theta).astype(np.float32)
+    s = np.sin(theta).astype(np.float32)
+    sg = np.where(rng.random(g) < 0.5, 1.0, -1.0).astype(np.float32)
+    return ii, jj, c, s, sg
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(1234)

@@ -1,0 +1,37 @@
+"""AOT lowering: HLO-text artifacts are well-formed and deterministic."""
+
+import numpy as np
+
+from compile import aot
+
+
+def test_small_config_lowers_to_hlo_text():
+    text = aot.lower_config("gft_fwd", 8, 12, 2)
+    assert "ENTRY" in text
+    assert "HloModule" in text
+    # six parameters: x, ii, jj, c, s, sg
+    assert text.count("parameter(") >= 6
+
+
+def test_filter_config_has_seven_params():
+    text = aot.lower_config("graph_filter", 8, 12, 2)
+    assert text.count("parameter(") >= 7
+
+
+def test_lowering_is_deterministic():
+    a = aot.lower_config("gft_inv", 6, 10, 2)
+    b = aot.lower_config("gft_inv", 6, 10, 2)
+    assert a == b
+
+
+def test_artifact_names_unique():
+    names = [aot.artifact_name(k, n, g, b) for (k, n, g, b) in aot.CONFIGS]
+    assert len(names) == len(set(names))
+
+
+def test_no_mosaic_custom_calls():
+    # interpret=True must avoid Mosaic custom-calls (CPU PJRT cannot run
+    # them); plain HLO only.
+    text = aot.lower_config("gft_fwd", 8, 12, 2)
+    assert "tpu_custom_call" not in text
+    assert "mosaic" not in text.lower()

@@ -1,0 +1,108 @@
+"""L1 correctness: Pallas butterfly kernel vs the pure-jnp oracle.
+
+This is the CORE correctness signal for the AOT pipeline: the same
+pallas_call that these tests validate is what gets lowered into the HLO
+artifacts the rust runtime executes.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.butterfly import butterfly_apply
+from compile.kernels.ref import butterfly_ref, dense_chain
+
+from .conftest import random_plan
+
+
+def _rand_case(seed: int, n: int, g: int, batch: int):
+    r = np.random.default_rng(seed)
+    ii, jj, c, s, sg = random_plan(r, n, g)
+    x = r.standard_normal((batch, n)).astype(np.float32)
+    return x, ii, jj, c, s, sg
+
+
+@pytest.mark.parametrize("transpose", [False, True])
+@pytest.mark.parametrize("n,g,batch", [(4, 3, 1), (8, 20, 3), (16, 48, 4), (32, 100, 2)])
+def test_kernel_matches_ref(n, g, batch, transpose):
+    x, ii, jj, c, s, sg = _rand_case(42 + n, n, g, batch)
+    got = butterfly_apply(x, ii, jj, c, s, sg, transpose=transpose)
+    want = butterfly_ref(x, ii, jj, c, s, sg, transpose=transpose)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("transpose", [False, True])
+def test_kernel_matches_dense_chain(transpose):
+    n, g, batch = 10, 25, 3
+    x, ii, jj, c, s, sg = _rand_case(7, n, g, batch)
+    u = dense_chain(n, ii, jj, c, s, sg)
+    mat = u.T if transpose else u
+    want = (mat @ x.astype(np.float64).T).T
+    got = np.asarray(butterfly_apply(x, ii, jj, c, s, sg, transpose=transpose))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_forward_then_transpose_is_identity():
+    n, g, batch = 12, 30, 4
+    x, ii, jj, c, s, sg = _rand_case(11, n, g, batch)
+    y = butterfly_apply(x, ii, jj, c, s, sg, transpose=False)
+    back = butterfly_apply(np.asarray(y), ii, jj, c, s, sg, transpose=True)
+    np.testing.assert_allclose(np.asarray(back), x, rtol=1e-4, atol=1e-4)
+
+
+def test_orthonormal_chain_preserves_norms():
+    n, g, batch = 16, 48, 4
+    x, ii, jj, c, s, sg = _rand_case(13, n, g, batch)
+    y = np.asarray(butterfly_apply(x, ii, jj, c, s, sg))
+    np.testing.assert_allclose(
+        np.linalg.norm(y, axis=1), np.linalg.norm(x, axis=1), rtol=1e-5
+    )
+
+
+def test_empty_plan_is_identity():
+    n, batch = 6, 2
+    r = np.random.default_rng(3)
+    x = r.standard_normal((batch, n)).astype(np.float32)
+    z = np.zeros(0, dtype=np.float32)
+    zi = np.zeros(0, dtype=np.int32)
+    y = butterfly_apply(x, zi, zi, z, z, z)
+    np.testing.assert_allclose(np.asarray(y), x)
+
+
+def test_identity_stages_are_identity():
+    # the rust runtime pads plans with (i=0, j=1, c=1, s=0, sg=1)
+    n, batch, g = 5, 2, 7
+    r = np.random.default_rng(4)
+    x = r.standard_normal((batch, n)).astype(np.float32)
+    ii = np.zeros(g, dtype=np.int32)
+    jj = np.ones(g, dtype=np.int32)
+    c = np.ones(g, dtype=np.float32)
+    s = np.zeros(g, dtype=np.float32)
+    sg = np.ones(g, dtype=np.float32)
+    for transpose in (False, True):
+        y = butterfly_apply(x, ii, jj, c, s, sg, transpose=transpose)
+        np.testing.assert_allclose(np.asarray(y), x, rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(min_value=2, max_value=24),
+    g=st.integers(min_value=1, max_value=60),
+    batch=st.integers(min_value=1, max_value=6),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    transpose=st.booleans(),
+)
+def test_hypothesis_kernel_vs_ref(n, g, batch, seed, transpose):
+    x, ii, jj, c, s, sg = _rand_case(seed, n, g, batch)
+    got = butterfly_apply(x, ii, jj, c, s, sg, transpose=transpose)
+    want = butterfly_ref(x, ii, jj, c, s, sg, transpose=transpose)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_hypothesis_roundtrip(seed):
+    x, ii, jj, c, s, sg = _rand_case(seed, 9, 22, 3)
+    y = butterfly_apply(x, ii, jj, c, s, sg, transpose=False)
+    back = butterfly_apply(np.asarray(y), ii, jj, c, s, sg, transpose=True)
+    np.testing.assert_allclose(np.asarray(back), x, rtol=1e-4, atol=1e-4)

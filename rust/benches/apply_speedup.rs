@@ -1,0 +1,74 @@
+//! Fig.-6 bench: butterfly apply vs dense mat-vec at the paper's
+//! real-graph sizes, f32, single vector, one core. Prints measured times,
+//! the FLOP-count ratio and the measured speedup.
+//!
+//! Run with: `cargo bench --bench apply_speedup`
+
+use fastes::bench_util::bench;
+use fastes::cli::figures::{budget, random_gplan, random_tplan};
+use fastes::graphs::RealWorldGraph;
+use fastes::linalg::Rng64;
+use fastes::transforms::{apply_gchain_batch_f32, apply_tchain_batch_f32, SignalBlock};
+
+fn main() {
+    println!("# apply_speedup — butterfly vs dense mat-vec (f32, 1 vector, 1 core)");
+    let alpha = 2usize;
+    let mut rng = Rng64::new(99);
+    for w in RealWorldGraph::all() {
+        let (n, _) = w.dimensions();
+        let g = budget(alpha, n);
+        let gplan = random_gplan(n, g, &mut rng).to_plan();
+        let tplan = random_tplan(n, g, &mut rng).to_plan();
+        let dense: Vec<f32> = (0..n * n).map(|_| rng.randn() as f32).collect();
+        let x: Vec<f32> = (0..n).map(|_| rng.randn() as f32).collect();
+
+        let mut y = vec![0f32; n];
+        let td = bench(&format!("{}/dense-gemv n={n}", w.name()), 7, 0.05, || {
+            for (r, yr) in y.iter_mut().enumerate() {
+                let row = &dense[r * n..(r + 1) * n];
+                let mut acc = 0f32;
+                for (a, b) in row.iter().zip(x.iter()) {
+                    acc += a * b;
+                }
+                *yr = acc;
+            }
+            y[0]
+        });
+        let mut blk = SignalBlock::from_signals(&[x.clone()]);
+        let tg = bench(&format!("{}/G-chain g={g}", w.name()), 7, 0.05, || {
+            apply_gchain_batch_f32(&gplan, &mut blk);
+            blk.data[0]
+        });
+        let mut blk2 = SignalBlock::from_signals(&[x.clone()]);
+        let tt = bench(&format!("{}/T-chain m={g}", w.name()), 7, 0.05, || {
+            apply_tchain_batch_f32(&tplan, &mut blk2, false);
+            blk2.data[0]
+        });
+        println!("{}", td.line());
+        println!("{}", tg.line());
+        println!("{}", tt.line());
+        println!(
+            "{:<14} flopx(G)={:<8.2} measured(G)={:<8.2} flopx(T)={:<8.2} measured(T)={:<8.2}",
+            w.name(),
+            (2 * n * n) as f64 / (6 * g) as f64,
+            td.min_s / tg.min_s,
+            (2 * n * n) as f64 / (2 * g) as f64,
+            td.min_s / tt.min_s,
+        );
+    }
+    // batched-apply scaling: the serving hot path
+    println!("\n# batched apply (n=128, g=1792) — serving hot path");
+    let n = 128;
+    let g = budget(2, n);
+    let plan = random_gplan(n, g, &mut rng).to_plan();
+    for batch in [1usize, 4, 8, 32, 128] {
+        let signals: Vec<Vec<f32>> =
+            (0..batch).map(|_| (0..n).map(|_| rng.randn() as f32).collect()).collect();
+        let mut blk = SignalBlock::from_signals(&signals);
+        let t = bench(&format!("batch={batch}"), 7, 0.05, || {
+            apply_gchain_batch_f32(&plan, &mut blk);
+            blk.data[0]
+        });
+        println!("{}  ({:.1} ns/signal)", t.line(), t.min_s * 1e9 / batch as f64);
+    }
+}

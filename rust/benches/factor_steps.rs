@@ -1,0 +1,66 @@
+//! Factorization-engine benches: per-phase cost of Algorithm 1 —
+//! Theorem-1 init throughput (factors/s), polish sweep cost, and the
+//! general-case (T) init cost; plus the symmetric eigensolver substrate.
+//!
+//! Run with: `cargo bench --bench factor_steps`
+
+use fastes::bench_util::bench;
+use fastes::factor::{GeneralFactorizer, GeneralOptions, SymFactorizer, SymOptions};
+use fastes::graphs;
+use fastes::linalg::{eigh, Mat, Rng64};
+
+fn main() {
+    println!("# factor_steps — Algorithm 1 phase costs");
+    for n in [64usize, 128, 256] {
+        let mut rng = Rng64::new(5);
+        let graph = graphs::community(n, &mut rng);
+        let l = graph.laplacian();
+        let g = 2 * n * (n as f64).log2() as usize;
+
+        let t_init = bench(&format!("sym init+0 sweeps n={n} g={g}"), 3, 0.2, || {
+            let f = SymFactorizer::new(
+                &l,
+                g,
+                SymOptions { max_sweeps: 0, ..Default::default() },
+            )
+            .run();
+            f.init_objective
+        });
+        println!("{}  ({:.0} factors/s)", t_init.line(), g as f64 / t_init.min_s);
+
+        let t_full = bench(&format!("sym init+2 sweeps n={n} g={g}"), 3, 0.2, || {
+            let f = SymFactorizer::new(
+                &l,
+                g,
+                SymOptions { max_sweeps: 2, eps: 0.0, ..Default::default() },
+            )
+            .run();
+            f.objective()
+        });
+        println!("{}", t_full.line());
+    }
+    // T-transform init (the O(n²)-per-factor path)
+    for n in [32usize, 64] {
+        let mut rng = Rng64::new(6);
+        let c = Mat::randn(n, n, &mut rng);
+        let m = n * (n as f64).log2() as usize;
+        let t = bench(&format!("gen init+1 sweep n={n} m={m}"), 3, 0.3, || {
+            let f = GeneralFactorizer::new(
+                &c,
+                m,
+                GeneralOptions { max_sweeps: 1, eps: 0.0, ..Default::default() },
+            )
+            .run();
+            f.objective()
+        });
+        println!("{}  ({:.0} factors/s)", t.line(), m as f64 / t.min_s);
+    }
+    // substrate: eigensolver
+    for n in [128usize, 256, 512] {
+        let mut rng = Rng64::new(7);
+        let x = Mat::randn(n, n, &mut rng);
+        let s = &x + &x.transpose();
+        let t = bench(&format!("eigh n={n}"), 3, 0.3, || eigh(&s).values[0]);
+        println!("{}", t.line());
+    }
+}

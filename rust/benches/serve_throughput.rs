@@ -1,0 +1,89 @@
+//! Serving-coordinator bench: end-to-end request throughput and latency
+//! for the native backend across batch limits, plus the PJRT backend when
+//! artifacts are present.
+//!
+//! Run with: `cargo bench --bench serve_throughput`
+
+use std::path::Path;
+use std::time::Instant;
+
+use fastes::cli::figures::{budget, random_gplan};
+use fastes::linalg::Rng64;
+use fastes::runtime::ArtifactStore;
+use fastes::serve::{
+    Backend, Coordinator, NativeGftBackend, PjrtGftBackend, ServeConfig, TransformDirection,
+};
+
+fn drive(coord: &Coordinator, n: usize, requests: usize, seed: u64) -> f64 {
+    let mut rng = Rng64::new(seed);
+    let t0 = Instant::now();
+    let mut pending = Vec::with_capacity(256);
+    for _ in 0..requests {
+        let sig: Vec<f32> = (0..n).map(|_| rng.randn() as f32).collect();
+        pending.push(coord.submit(sig).unwrap());
+        if pending.len() == 256 {
+            for t in pending.drain(..) {
+                t.wait().unwrap();
+            }
+        }
+    }
+    for t in pending.drain(..) {
+        t.wait().unwrap();
+    }
+    requests as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    println!("# serve_throughput — coordinator end-to-end");
+    let n = 128;
+    let g = budget(2, n);
+    let mut rng = Rng64::new(31);
+    let plan = random_gplan(n, g, &mut rng).to_plan();
+
+    for max_batch in [1usize, 4, 8, 32] {
+        let p = plan.clone();
+        let coord = Coordinator::start(
+            move || {
+                Ok(Box::new(NativeGftBackend::new(
+                    p,
+                    TransformDirection::Forward,
+                    max_batch,
+                    None,
+                )) as Box<dyn Backend>)
+            },
+            ServeConfig { max_batch, ..Default::default() },
+        )
+        .unwrap();
+        let rps = drive(&coord, n, 20_000, 32);
+        let m = coord.shutdown();
+        println!(
+            "native  max_batch={max_batch:<3} {rps:>10.0} req/s  p50={:>8.1}µs p99={:>8.1}µs mean_batch={:.2}",
+            m.p50_latency_s * 1e6,
+            m.p99_latency_s * 1e6,
+            m.mean_batch
+        );
+    }
+
+    if Path::new("artifacts/manifest.txt").exists() {
+        let p = plan.clone();
+        let coord = Coordinator::start(
+            move || {
+                let store = ArtifactStore::open(Path::new("artifacts"))?;
+                Ok(Box::new(PjrtGftBackend::new(store, TransformDirection::Forward, p, 8, None)?)
+                    as Box<dyn Backend>)
+            },
+            ServeConfig { max_batch: 8, ..Default::default() },
+        )
+        .unwrap();
+        let rps = drive(&coord, n, 500, 33);
+        let m = coord.shutdown();
+        println!(
+            "pjrt    max_batch=8   {rps:>10.0} req/s  p50={:>8.1}µs p99={:>8.1}µs mean_batch={:.2}",
+            m.p50_latency_s * 1e6,
+            m.p99_latency_s * 1e6,
+            m.mean_batch
+        );
+    } else {
+        println!("pjrt    skipped (run `make artifacts`)");
+    }
+}

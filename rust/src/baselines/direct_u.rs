@@ -1,0 +1,203 @@
+//! Factoring a *known* orthonormal eigenspace directly — the approach of
+//! Rusu & Rosasco (2019) that the paper compares against in Fig. 4.
+//!
+//! Given `U` (from a precomputed eigendecomposition), greedily build
+//! `Ū = G_g … G_1` minimizing `‖(U − Ū) diag(w)‖²_F` for a weight vector
+//! `w` (all-ones = plain eigenspace approximation; `w = λ` = the weighted
+//! `U_γ` variant). Each step maximizes the alignment trace
+//! `tr(diag(w²) Ūᵀ U)` by a one-sided 2×2 Procrustes (polar factor) on
+//! the working matrix `M = U diag(w²) Ū'ᵀ`.
+
+use crate::linalg::{procrustes2_rotation, Mat};
+use crate::transforms::{GChain, GTransform};
+
+/// Result of a direct-eigenspace factorization.
+#[derive(Clone, Debug)]
+pub struct DirectUResult {
+    /// The factored orthonormal approximation `Ū`.
+    pub chain: GChain,
+    /// Final weighted alignment `tr(diag(w²) Ūᵀ U)` (higher is better;
+    /// equals `Σ w²` at perfect recovery).
+    pub alignment: f64,
+}
+
+impl DirectUResult {
+    /// `‖(U − Ū) diag(w)‖²_F = 2 Σw² − 2·alignment` (for orthonormal
+    /// `U`, `Ū`).
+    pub fn weighted_error_sq(&self, weights: &[f64]) -> f64 {
+        let total: f64 = weights.iter().map(|w| w * w).sum();
+        (2.0 * total - 2.0 * self.alignment).max(0.0)
+    }
+}
+
+/// Greedily factor orthonormal `u` into `g` G-transforms, minimizing the
+/// `w`-weighted Frobenius error.
+pub fn factor_orthonormal(u: &Mat, weights: &[f64], g: usize) -> DirectUResult {
+    let n = u.rows();
+    assert!(u.is_square());
+    assert_eq!(weights.len(), n);
+    // M = U diag(w²) Ū'ᵀ, Ū' the chain so far (initially I).
+    let mut m = u.clone();
+    for (j, &w) in weights.iter().enumerate() {
+        m.scale_col(j, w * w);
+    }
+    // tr(diag(w²)ŪᵀU) = Σ_k w_k² (ŪᵀU)_kk; define M = U·diag(w²) so the
+    // target is tr(Ūᵀ M) = ⟨Ū, M⟩. Choose each new factor G (prepended to
+    // Ū) to maximize ⟨G Ū', M⟩ = ⟨G, W⟩ with W := M Ū'ᵀ (maintained by
+    // right-multiplying M with Gᵀ). The per-pair gain is the polar
+    // alignment of the 2×2 block; right-multiplying by Gᵀ only touches
+    // columns (i, j), so row-maxima bookkeeping keeps each step O(n)
+    // amortized.
+    let pair_gain = |m: &Mat, i: usize, j: usize| -> f64 {
+        let block = [[m[(i, i)], m[(i, j)]], [m[(j, i)], m[(j, j)]]];
+        let gblk = procrustes2_rotation(block, true);
+        let tr_new = gblk[0][0] * block[0][0]
+            + gblk[0][1] * block[0][1]
+            + gblk[1][0] * block[1][0]
+            + gblk[1][1] * block[1][1];
+        tr_new - (block[0][0] + block[1][1])
+    };
+    let mut best_j = vec![usize::MAX; n];
+    let mut best_v = vec![f64::NEG_INFINITY; n];
+    let rescan = |m: &Mat, i: usize, best_j: &mut [usize], best_v: &mut [f64]| {
+        let mut bj = usize::MAX;
+        let mut bv = f64::NEG_INFINITY;
+        for j in (i + 1)..n {
+            let v = pair_gain(m, i, j);
+            if v > bv {
+                bv = v;
+                bj = j;
+            }
+        }
+        best_j[i] = bj;
+        best_v[i] = bv;
+    };
+    for i in 0..n.saturating_sub(1) {
+        rescan(&m, i, &mut best_j, &mut best_v);
+    }
+    let mut picked: Vec<GTransform> = Vec::with_capacity(g);
+    for _ in 0..g {
+        let mut bi = 0;
+        for r in 1..n.saturating_sub(1) {
+            if best_v[r] > best_v[bi] {
+                bi = r;
+            }
+        }
+        let (i, j, gain) = (bi, best_j[bi], best_v[bi]);
+        if j == usize::MAX || gain <= 1e-14 * (1.0 + m.max_abs()) {
+            break;
+        }
+        let block = [[m[(i, i)], m[(i, j)]], [m[(j, i)], m[(j, j)]]];
+        let t = GTransform::from_block(i, j, procrustes2_rotation(block, true));
+        t.apply_right_t(&mut m);
+        picked.push(t);
+        for r in 0..n.saturating_sub(1) {
+            if r == i || r == j {
+                rescan(&m, r, &mut best_j, &mut best_v);
+            } else {
+                let mut need_rescan = false;
+                for &t2 in &[i, j] {
+                    if t2 > r {
+                        let v = pair_gain(&m, r, t2);
+                        if v > best_v[r] {
+                            best_v[r] = v;
+                            best_j[r] = t2;
+                        } else if best_j[r] == t2 {
+                            need_rescan = true;
+                        }
+                    }
+                }
+                if need_rescan {
+                    rescan(&m, r, &mut best_j, &mut best_v);
+                }
+            }
+        }
+    }
+    // Ū = G_last … G_first: the first picked factor is the innermost
+    // (applied first to a vector) — wait: we appended on the LEFT each
+    // time, so the last picked is the leftmost G_g and the first picked
+    // is G_1, which the chain stores first. No reversal needed.
+    let chain = GChain { n, transforms: picked };
+    let alignment: f64 = {
+        // tr(Ūᵀ M_original) with M_original = U diag(w²): recompute
+        let mut m2 = u.clone();
+        for (j, &w) in weights.iter().enumerate() {
+            m2.scale_col(j, w * w);
+        }
+        let ubar = chain.to_dense();
+        ubar.fro_dot(&m2)
+    };
+    DirectUResult { chain, alignment }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{eigh, Rng64};
+
+    fn random_orthonormal(n: usize, seed: u64) -> Mat {
+        let mut rng = Rng64::new(seed);
+        let x = Mat::randn(n, n, &mut rng);
+        let s = &x + &x.transpose();
+        eigh(&s).vectors
+    }
+
+    #[test]
+    fn alignment_increases_with_budget() {
+        let u = random_orthonormal(8, 521);
+        let w = vec![1.0; 8];
+        let mut prev = f64::NEG_INFINITY;
+        for g in [2, 8, 28, 84] {
+            let r = factor_orthonormal(&u, &w, g);
+            assert!(r.alignment >= prev - 1e-10, "g={g}");
+            prev = r.alignment;
+        }
+    }
+
+    #[test]
+    fn exact_recovery_with_enough_factors() {
+        // an orthonormal U needs at most n(n−1)/2 G-transforms
+        let u = random_orthonormal(6, 522);
+        let w = vec![1.0; 6];
+        let r = factor_orthonormal(&u, &w, 60);
+        let err = r.weighted_error_sq(&w);
+        assert!(err < 1e-12, "error {err}");
+        // dense check
+        let dist = r.chain.to_dense().fro_dist_sq(&u);
+        assert!(dist < 1e-12, "dense dist {dist}");
+    }
+
+    #[test]
+    fn weighted_error_formula_matches_dense() {
+        let u = random_orthonormal(7, 523);
+        let w: Vec<f64> = (0..7).map(|i| 1.0 + i as f64 * 0.3).collect();
+        let r = factor_orthonormal(&u, &w, 10);
+        let formula = r.weighted_error_sq(&w);
+        // dense: ‖(U − Ū)diag(w)‖²
+        let mut d = &u - &r.chain.to_dense();
+        for (j, &wj) in w.iter().enumerate() {
+            d.scale_col(j, wj);
+        }
+        assert!(
+            (formula - d.fro_norm_sq()).abs() < 1e-7 * (1.0 + formula),
+            "{formula} vs {}",
+            d.fro_norm_sq()
+        );
+    }
+
+    #[test]
+    fn weights_bias_the_approximation() {
+        // heavily weighting the first column should approximate it better
+        let u = random_orthonormal(10, 524);
+        let mut w = vec![0.1; 10];
+        w[0] = 10.0;
+        let r = factor_orthonormal(&u, &w, 12);
+        let ubar = r.chain.to_dense();
+        let col_err = |m: &Mat, j: usize| -> f64 {
+            (0..10).map(|i| (m[(i, j)] - u[(i, j)]) * (m[(i, j)] - u[(i, j)])).sum()
+        };
+        let e0 = col_err(&ubar, 0);
+        let eother: f64 = (1..10).map(|j| col_err(&ubar, j)).sum::<f64>() / 9.0;
+        assert!(e0 < eother, "weighted column error {e0} vs avg {eother}");
+    }
+}

@@ -1,0 +1,176 @@
+//! Rotation-only greedy factorization with the eigenvalue-blind score
+//! `𝒜_ij = γ_ij` (paper Remark 1) — our stand-in for the multiresolution
+//! greedy Givens construction of Kondor et al. (2014). Unlike
+//! [`super::jacobi`], the pair selection accounts for the diagonal
+//! disparity (`γ_ij → S_ii − S_jj` when the off-diagonal is small), and
+//! unlike the proposed method it never uses reflections or eigenvalue
+//! pairing.
+//!
+//! Uses the same incremental row-maxima bookkeeping as the other greedy
+//! paths: a conjugation at `(p, q)` only re-scores pairs touching `p` or
+//! `q`, so each step is `O(n)` amortized instead of an `O(n²)` rescan.
+
+use crate::linalg::{sym2_eig, Mat};
+use crate::transforms::{GChain, GTransform};
+
+use super::jacobi::JacobiResult;
+
+/// The off-diagonal-driven part of `γ_ij` (paper eq. (16)):
+/// `½(√((S_ii−S_jj)² + 4S_ij²) − |S_ii − S_jj|) = 2S_ij²/(rad + |d|)`.
+///
+/// The raw `γ` keeps a positive diagonal-disparity term even for
+/// already-diagonal pairs, so a greedy driven by it re-selects the same
+/// pair with identity transforms forever (the stall is visible as a
+/// flat accuracy-vs-g curve). Removing the `|d|` offset keeps the
+/// γ-characteristic ranking — `≈ |S_ij|` when the off-diagonal dominates,
+/// `≈ S_ij²/|S_ii−S_jj|` when the disparity dominates (the two regimes of
+/// Remark 1) — while vanishing exactly when there is nothing to rotate.
+#[inline]
+fn gamma(w: &Mat, i: usize, j: usize) -> f64 {
+    let d = w[(i, i)] - w[(j, j)];
+    let off = w[(i, j)];
+    let rad = (d * d + 4.0 * off * off).sqrt();
+    0.5 * (rad - d.abs())
+}
+
+/// Run `g` greedy rotation-only steps with the `γ` score.
+pub fn greedy_givens(s: &Mat, g: usize) -> JacobiResult {
+    let n = s.rows();
+    let mut w = s.clone();
+    let mut picked: Vec<GTransform> = Vec::with_capacity(g);
+    if n < 2 {
+        return JacobiResult { chain: GChain { n, transforms: picked }, spectrum: w.diag(), objective: 0.0 };
+    }
+    // row-maxima bookkeeping over the γ score
+    let mut best_j = vec![usize::MAX; n];
+    let mut best_v = vec![f64::NEG_INFINITY; n];
+    let rescan = |w: &Mat, i: usize, best_j: &mut [usize], best_v: &mut [f64]| {
+        let mut bj = usize::MAX;
+        let mut bv = f64::NEG_INFINITY;
+        for j in (i + 1)..n {
+            let v = gamma(w, i, j);
+            if v > bv {
+                bv = v;
+                bj = j;
+            }
+        }
+        best_j[i] = bj;
+        best_v[i] = bv;
+    };
+    for i in 0..n - 1 {
+        rescan(&w, i, &mut best_j, &mut best_v);
+    }
+
+    for _ in 0..g {
+        let mut bi = 0;
+        for i in 1..n - 1 {
+            if best_v[i] > best_v[bi] {
+                bi = i;
+            }
+        }
+        let (i, j, score) = (bi, best_j[bi], best_v[bi]);
+        if j == usize::MAX || score <= 1e-14 * (1.0 + w.max_abs()) {
+            break;
+        }
+        let e = sym2_eig(w[(i, i)], w[(i, j)], w[(j, j)]);
+        let v = [[e.v1[0], e.v2[0]], [e.v1[1], e.v2[1]]];
+        let t = GTransform::from_block(i, j, v);
+        t.conjugate_t(&mut w);
+        picked.push(t);
+        // refresh bookkeeping for pairs touching (i, j)
+        for r in 0..n - 1 {
+            if r == i || r == j {
+                rescan(&w, r, &mut best_j, &mut best_v);
+            } else {
+                let mut need_rescan = false;
+                for &t2 in &[i, j] {
+                    if t2 > r {
+                        let val = gamma(&w, r, t2);
+                        if val > best_v[r] {
+                            best_v[r] = val;
+                            best_j[r] = t2;
+                        } else if best_j[r] == t2 {
+                            need_rescan = true;
+                        }
+                    }
+                }
+                if need_rescan {
+                    rescan(&w, r, &mut best_j, &mut best_v);
+                }
+            }
+        }
+    }
+    picked.reverse();
+    let chain = GChain { n, transforms: picked };
+    let spectrum = w.diag();
+    JacobiResult { chain, spectrum, objective: w.off_diag_sq() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Rng64;
+
+    fn random_sym(n: usize, seed: u64) -> Mat {
+        let mut rng = Rng64::new(seed);
+        let x = Mat::randn(n, n, &mut rng);
+        &x + &x.transpose()
+    }
+
+    #[test]
+    fn improves_with_budget() {
+        let s = random_sym(9, 511);
+        let r1 = greedy_givens(&s, 8);
+        let r2 = greedy_givens(&s, 40);
+        assert!(r2.objective <= r1.objective * (1.0 + 1e-12));
+    }
+
+    #[test]
+    fn objective_consistent() {
+        let s = random_sym(7, 512);
+        let r = greedy_givens(&s, 12);
+        let direct = r.chain.objective(&s, &r.spectrum);
+        assert!((direct - r.objective).abs() < 1e-8 * (1.0 + direct));
+    }
+
+    #[test]
+    fn gamma_is_nonnegative() {
+        let s = random_sym(6, 513);
+        for i in 0..5 {
+            for j in (i + 1)..6 {
+                assert!(gamma(&s, i, j) >= 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn incremental_matches_exhaustive_selection_quality() {
+        // the bookkeeping must not degrade the greedy: objective within a
+        // whisker of a brute-force O(n²)-per-step variant
+        let s = random_sym(10, 514);
+        let fast = greedy_givens(&s, 25);
+        // brute-force reference
+        let n = 10;
+        let mut w = s.clone();
+        for _ in 0..25 {
+            let mut best = (0usize, 1usize, f64::NEG_INFINITY);
+            for i in 0..n - 1 {
+                for j in (i + 1)..n {
+                    let v = gamma(&w, i, j);
+                    if v > best.2 {
+                        best = (i, j, v);
+                    }
+                }
+            }
+            let e = sym2_eig(w[(best.0, best.0)], w[(best.0, best.1)], w[(best.1, best.1)]);
+            let v = [[e.v1[0], e.v2[0]], [e.v1[1], e.v2[1]]];
+            GTransform::from_block(best.0, best.1, v).conjugate_t(&mut w);
+        }
+        let brute_obj = w.off_diag_sq();
+        assert!(
+            (fast.objective - brute_obj).abs() < 1e-6 * (1.0 + brute_obj),
+            "fast {} vs brute {brute_obj}",
+            fast.objective
+        );
+    }
+}

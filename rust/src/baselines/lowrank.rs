@@ -1,0 +1,99 @@
+//! Rank-`r` approximation baselines at matched flop budgets (Fig. 5).
+//!
+//! A rank-`r` factorization costs `2rn` flops per matrix–vector product,
+//! so Fig. 5 matches `r = 3·α·log₂n` against `g = α·n·log₂n` G-transforms
+//! (6 flops each) and `r = α·log₂n` against the same number of
+//! T-transforms (2 flops each).
+
+use crate::linalg::{eigh, Mat};
+
+/// Squared singular values of a general square matrix, descending
+/// (computed as the eigenvalues of `AᵀA`).
+pub fn svd_values(a: &Mat) -> Vec<f64> {
+    let ata = a.transpose().matmul(a);
+    eigh(&ata).values.into_iter().map(|v| v.max(0.0)).collect()
+}
+
+/// `‖S − S_r‖²_F` of the best rank-`r` approximation of a *symmetric*
+/// matrix: keep the `r` eigenvalues of largest magnitude.
+pub fn lowrank_error_symmetric(s: &Mat, r: usize) -> f64 {
+    let mut vals = eigh(s).values;
+    // sort by |λ| descending; discard the r largest
+    vals.sort_by(|a, b| b.abs().partial_cmp(&a.abs()).unwrap());
+    vals.iter().skip(r).map(|v| v * v).sum()
+}
+
+/// `‖C − C_r‖²_F` of the best rank-`r` approximation of a general matrix
+/// (Eckart–Young): the sum of the discarded squared singular values.
+pub fn lowrank_error_general(c: &Mat, r: usize) -> f64 {
+    svd_values(c).into_iter().skip(r).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Rng64;
+
+    #[test]
+    fn full_rank_is_exact() {
+        let mut rng = Rng64::new(531);
+        let x = Mat::randn(6, 6, &mut rng);
+        let s = &x + &x.transpose();
+        assert!(lowrank_error_symmetric(&s, 6) < 1e-9);
+        assert!(lowrank_error_general(&x, 6) < 1e-9 * x.fro_norm_sq());
+    }
+
+    #[test]
+    fn zero_rank_is_full_norm() {
+        let mut rng = Rng64::new(532);
+        let x = Mat::randn(5, 5, &mut rng);
+        let s = &x + &x.transpose();
+        assert!((lowrank_error_symmetric(&s, 0) - s.fro_norm_sq()).abs() < 1e-8);
+        assert!((lowrank_error_general(&x, 0) - x.fro_norm_sq()).abs() < 1e-8);
+    }
+
+    #[test]
+    fn monotone_in_rank() {
+        let mut rng = Rng64::new(533);
+        let x = Mat::randn(8, 8, &mut rng);
+        let s = &x + &x.transpose();
+        let mut prev = f64::INFINITY;
+        for r in 0..=8 {
+            let e = lowrank_error_symmetric(&s, r);
+            assert!(e <= prev + 1e-10);
+            prev = e;
+        }
+    }
+
+    #[test]
+    fn svd_values_match_known() {
+        // diag(3, -4) has singular values 4, 3
+        let a = Mat::from_diag(&[3.0, -4.0]);
+        let sv = svd_values(&a);
+        assert!((sv[0] - 16.0).abs() < 1e-10);
+        assert!((sv[1] - 9.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn eckart_young_dominates_random_projection() {
+        // best rank-1 error must be ≤ error of any specific rank-1 approx
+        let mut rng = Rng64::new(534);
+        let x = Mat::randn(5, 5, &mut rng);
+        let best = lowrank_error_general(&x, 1);
+        for _ in 0..10 {
+            let u: Vec<f64> = (0..5).map(|_| rng.randn()).collect();
+            let unorm: f64 = u.iter().map(|v| v * v).sum::<f64>().sqrt();
+            let u: Vec<f64> = u.iter().map(|v| v / unorm).collect();
+            // projection of each column on u
+            let mut approx = Mat::zeros(5, 5);
+            for j in 0..5 {
+                let col = x.col(j);
+                let dot: f64 = col.iter().zip(u.iter()).map(|(a, b)| a * b).sum();
+                for i in 0..5 {
+                    approx[(i, j)] = dot * u[i];
+                }
+            }
+            assert!(best <= x.fro_dist_sq(&approx) + 1e-9);
+        }
+    }
+}

@@ -1,0 +1,23 @@
+//! Baseline methods the paper compares against (Figs. 2–5).
+//!
+//! * [`jacobi`] — truncated Jacobi diagonalization (Le Magoarou, Gribonval
+//!   & Tremblay 2018): classic max-off-diagonal Givens *rotations* only.
+//! * [`greedy_givens`] — rotation-only greedy with the eigenvalue-blind
+//!   score `𝒜 = γ_ij` (the paper's Remark-1 reduction, standing in for
+//!   the multiresolution greedy of Kondor et al. 2014).
+//! * [`direct_u`] — factoring a *known* orthonormal eigenspace `U`
+//!   directly (Rusu & Rosasco 2019), optionally weighted by the spectrum
+//!   (the `U_γ` variant of Fig. 4); greedy one-sided 2×2 Procrustes.
+//! * [`lowrank`] — best rank-`r` approximation at a matched flop budget
+//!   (Fig. 5's black curves): truncated eigendecomposition for symmetric
+//!   inputs, truncated SVD for general inputs.
+
+mod direct_u;
+mod greedy_givens;
+mod jacobi;
+mod lowrank;
+
+pub use direct_u::{factor_orthonormal, DirectUResult};
+pub use greedy_givens::greedy_givens;
+pub use jacobi::{truncated_jacobi, JacobiResult};
+pub use lowrank::{lowrank_error_general, lowrank_error_symmetric, svd_values};

@@ -1,0 +1,127 @@
+//! Minimal benchmarking harness (criterion is unavailable in this
+//! environment's offline crate snapshot — see Cargo.toml).
+//!
+//! Provides warmed-up, repeated timing with mean / std / min statistics
+//! and ns-per-iteration reporting. The `cargo bench` targets are plain
+//! `harness = false` binaries built on this module.
+
+use std::time::Instant;
+
+/// Result of a timed measurement.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    /// Benchmark label.
+    pub name: String,
+    /// Mean wall time per iteration, seconds.
+    pub mean_s: f64,
+    /// Standard deviation across measurement batches, seconds.
+    pub std_s: f64,
+    /// Minimum batch mean, seconds.
+    pub min_s: f64,
+    /// Number of iterations per batch.
+    pub iters_per_batch: usize,
+}
+
+impl BenchResult {
+    /// Human-readable one-line summary.
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} {:>12} ± {:<10} (min {})",
+            self.name,
+            fmt_time(self.mean_s),
+            fmt_time(self.std_s),
+            fmt_time(self.min_s),
+        )
+    }
+}
+
+/// Format seconds with an adaptive unit.
+pub fn fmt_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.3} s", s)
+    }
+}
+
+/// Benchmark `f`, auto-calibrating the batch size so one batch takes
+/// roughly `target_batch_s`, then running `batches` measured batches after
+/// one warm-up batch. A `black_box`-style sink prevents the optimizer from
+/// deleting the work: `f` should return a value that depends on its
+/// computation.
+pub fn bench<R>(name: &str, batches: usize, target_batch_s: f64, mut f: impl FnMut() -> R) -> BenchResult {
+    // calibrate
+    let mut iters = 1usize;
+    loop {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            sink(f());
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        if dt >= target_batch_s || iters >= 1 << 24 {
+            break;
+        }
+        let grow = if dt <= 1e-9 { 16.0 } else { (target_batch_s / dt).min(16.0).max(2.0) };
+        iters = ((iters as f64) * grow).ceil() as usize;
+    }
+    // warm-up
+    for _ in 0..iters {
+        sink(f());
+    }
+    // measure
+    let mut means = Vec::with_capacity(batches);
+    for _ in 0..batches {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            sink(f());
+        }
+        means.push(t0.elapsed().as_secs_f64() / iters as f64);
+    }
+    let mean = means.iter().sum::<f64>() / means.len() as f64;
+    let var = means.iter().map(|m| (m - mean) * (m - mean)).sum::<f64>() / means.len() as f64;
+    let min = means.iter().cloned().fold(f64::INFINITY, f64::min);
+    BenchResult {
+        name: name.to_string(),
+        mean_s: mean,
+        std_s: var.sqrt(),
+        min_s: min,
+        iters_per_batch: iters,
+    }
+}
+
+/// Opaque value sink (stable-rust black box).
+#[inline]
+pub fn sink<T>(value: T) -> T {
+    std::hint::black_box(value)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("spin", 3, 0.005, || {
+            let mut acc = 0u64;
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(r.mean_s > 0.0);
+        assert!(r.min_s <= r.mean_s + 1e-12);
+        assert!(r.iters_per_batch >= 1);
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert!(fmt_time(2.5e-9).contains("ns"));
+        assert!(fmt_time(2.5e-6).contains("µs"));
+        assert!(fmt_time(2.5e-3).contains("ms"));
+        assert!(fmt_time(2.5).contains(" s"));
+    }
+}

@@ -1,0 +1,267 @@
+//! Non-figure CLI commands: factor / gft / serve / eigen / bench-apply.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::bail;
+
+use super::figures::{budget, random_gplan};
+use super::Args;
+use crate::factor::{GeneralFactorizer, GeneralOptions, SymFactorizer, SymOptions};
+use crate::graphs::{self, RealWorldGraph};
+use crate::linalg::{eigh, Mat, Rng64};
+use crate::serve::{
+    Backend, Coordinator, NativeGftBackend, PjrtGftBackend, ServeConfig, TransformDirection,
+};
+use crate::transforms::SignalBlock;
+
+/// `fastes factor` — factor a random matrix and report accuracy/time.
+pub fn factor(a: &Args) -> crate::Result<()> {
+    let n: usize = a.get("n", 128)?;
+    let g: usize = a.get("budget", budget(2, n))?;
+    let seed: u64 = a.get("seed", 1)?;
+    let sweeps: usize = a.get("sweeps", 2)?;
+    let kind = a.get_str("kind", "sym");
+    let mut rng = Rng64::new(seed);
+    let x = Mat::randn(n, n, &mut rng);
+    let t0 = Instant::now();
+    match kind.as_str() {
+        "sym" | "psd" => {
+            let s = if kind == "psd" { x.matmul(&x.transpose()) } else { &x + &x.transpose() };
+            let opts = SymOptions {
+                max_sweeps: sweeps,
+                full_update: a.has("full-update"),
+                ..Default::default()
+            };
+            let f = SymFactorizer::new(&s, g, opts).run();
+            println!(
+                "sym n={n} g={g} init_rel={:.4} final_rel={:.4} sweeps={} flops/apply={} dense={} elapsed={:.2?}",
+                (f.init_objective / s.fro_norm_sq()).sqrt(),
+                f.relative_error(&s),
+                f.sweeps_run,
+                f.chain.flops(),
+                2 * n * n,
+                t0.elapsed()
+            );
+        }
+        "gen" => {
+            let opts = GeneralOptions {
+                max_sweeps: sweeps,
+                full_update: a.has("full-update"),
+                ..Default::default()
+            };
+            let f = GeneralFactorizer::new(&x, g, opts).run();
+            println!(
+                "gen n={n} m={g} init_rel={:.4} final_rel={:.4} sweeps={} flops/apply={} dense={} elapsed={:.2?}",
+                (f.init_objective / x.fro_norm_sq()).sqrt(),
+                f.relative_error(&x),
+                f.sweeps_run,
+                f.chain.flops(),
+                2 * n * n,
+                t0.elapsed()
+            );
+        }
+        other => bail!("--kind must be sym|psd|gen (got {other})"),
+    }
+    Ok(())
+}
+
+fn build_graph(a: &Args, rng: &mut Rng64) -> crate::Result<graphs::Graph> {
+    let n: usize = a.get("n", 128)?;
+    let name = a.get_str("graph", "community");
+    let scale: f64 = a.get("scale", 0.25)?;
+    Ok(match name.as_str() {
+        "community" => graphs::community(n, rng),
+        "er" | "erdos-renyi" => graphs::erdos_renyi(n, 0.3, rng),
+        "sensor" => graphs::sensor(n, rng),
+        "ring" => graphs::ring(n),
+        "minnesota" => graphs::real_world_substitute(RealWorldGraph::Minnesota, scale, rng),
+        "protein" => graphs::real_world_substitute(RealWorldGraph::HumanProtein, scale, rng),
+        "email" => graphs::real_world_substitute(RealWorldGraph::Email, scale, rng),
+        "facebook" => graphs::real_world_substitute(RealWorldGraph::Facebook, scale, rng),
+        other => bail!("unknown --graph {other}"),
+    })
+}
+
+/// `fastes gft` — build a graph, factor its Laplacian, report accuracy.
+pub fn gft(a: &Args) -> crate::Result<()> {
+    let seed: u64 = a.get("seed", 1)?;
+    let alpha: usize = a.get("alpha", 2)?;
+    let sweeps: usize = a.get("sweeps", 2)?;
+    let mut rng = Rng64::new(seed);
+    let graph = build_graph(a, &mut rng)?;
+    let n = graph.n;
+    let g = budget(alpha, n);
+    println!("graph n={n} |E|={} directed={}", graph.num_edges(), a.has("directed"));
+    let t0 = Instant::now();
+    if a.has("directed") {
+        let d = graph.randomly_directed(&mut rng);
+        let l = d.laplacian();
+        let f = GeneralFactorizer::new(
+            &l,
+            g,
+            GeneralOptions { max_sweeps: sweeps, ..Default::default() },
+        )
+        .run();
+        println!(
+            "T-chain m={} rel_err={:.4} flops/apply={} (dense {}) elapsed={:.2?}",
+            f.chain.len(),
+            f.relative_error(&l),
+            f.chain.flops(),
+            2 * n * n,
+            t0.elapsed()
+        );
+    } else {
+        let l = graph.laplacian();
+        let f = SymFactorizer::new(
+            &l,
+            g,
+            SymOptions { max_sweeps: sweeps, ..Default::default() },
+        )
+        .run();
+        println!(
+            "G-chain g={} rel_err={:.4} flops/apply={} (dense {}) elapsed={:.2?}",
+            f.chain.len(),
+            f.relative_error(&l),
+            f.chain.flops(),
+            2 * n * n,
+            t0.elapsed()
+        );
+    }
+    Ok(())
+}
+
+/// `fastes serve` — factor a community-graph GFT, serve batched requests
+/// through the coordinator, report latency/throughput.
+pub fn serve(a: &Args) -> crate::Result<()> {
+    let n: usize = a.get("n", 128)?;
+    let alpha: usize = a.get("alpha", 2)?;
+    let requests: usize = a.get("requests", 2000)?;
+    let batch: usize = a.get("batch", 8)?;
+    let backend_kind = a.get_str("backend", "native");
+    let artifacts = PathBuf::from(a.get_str("artifacts", "artifacts"));
+    let seed: u64 = a.get("seed", 1)?;
+
+    let mut rng = Rng64::new(seed);
+    let graph = graphs::community(n, &mut rng);
+    let l = graph.laplacian();
+    let g = budget(alpha, n);
+    println!("factoring community graph n={n} |E|={} with g={g}…", graph.num_edges());
+    let f = SymFactorizer::new(&l, g, SymOptions { max_sweeps: 1, ..Default::default() }).run();
+    println!("factored: rel_err={:.4}", f.relative_error(&l));
+    let plan = f.chain.to_plan();
+
+    let config = ServeConfig { max_batch: batch, ..Default::default() };
+    let coordinator = match backend_kind.as_str() {
+        "native" => {
+            let p = plan.clone();
+            Coordinator::start(
+                move || {
+                    Ok(Box::new(NativeGftBackend::new(p, TransformDirection::Forward, batch, None))
+                        as Box<dyn Backend>)
+                },
+                config,
+            )?
+        }
+        "pjrt" => {
+            let p = plan.clone();
+            Coordinator::start(
+                move || {
+                    let store = crate::runtime::ArtifactStore::open(&artifacts)?;
+                    Ok(Box::new(PjrtGftBackend::new(
+                        store,
+                        TransformDirection::Forward,
+                        p,
+                        batch,
+                        None,
+                    )?) as Box<dyn Backend>)
+                },
+                config,
+            )?
+        }
+        other => bail!("--backend must be native|pjrt (got {other})"),
+    };
+
+    println!("serving {requests} requests (backend={backend_kind}, batch={batch})…");
+    let t0 = Instant::now();
+    let mut pending = Vec::with_capacity(64);
+    let mut checked = 0usize;
+    for k in 0..requests {
+        let sig: Vec<f32> = (0..n).map(|_| rng.randn() as f32).collect();
+        pending.push((sig.clone(), coordinator.submit(sig)?));
+        if pending.len() >= 64 || k + 1 == requests {
+            for (sig, t) in pending.drain(..) {
+                let out = t.wait()?;
+                // spot-check against the native f64 path
+                if checked < 16 {
+                    let mut want: Vec<f64> = sig.iter().map(|&v| v as f64).collect();
+                    f.chain.apply_vec_t(&mut want);
+                    for (w, o) in want.iter().zip(out.iter()) {
+                        assert!((*w as f32 - o).abs() < 1e-2, "serving mismatch");
+                    }
+                    checked += 1;
+                }
+            }
+        }
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let m = coordinator.shutdown();
+    println!("throughput: {:.0} req/s over {:.2}s", requests as f64 / elapsed, elapsed);
+    println!("metrics: {}", m.line());
+    Ok(())
+}
+
+/// `fastes eigen` — symmetric eigensolver smoke test.
+pub fn eigen(a: &Args) -> crate::Result<()> {
+    let n: usize = a.get("n", 256)?;
+    let seed: u64 = a.get("seed", 1)?;
+    let mut rng = Rng64::new(seed);
+    let x = Mat::randn(n, n, &mut rng);
+    let s = &x + &x.transpose();
+    let t0 = Instant::now();
+    let e = eigh(&s);
+    let rel = e.reconstruct().fro_dist_sq(&s) / s.fro_norm_sq();
+    println!(
+        "eigh n={n}: reconstruction rel²={rel:.3e}, λ_max={:.4}, λ_min={:.4}, elapsed={:.2?}",
+        e.values[0],
+        e.values[n - 1],
+        t0.elapsed()
+    );
+    Ok(())
+}
+
+/// `fastes bench-apply` — quick butterfly vs dense apply timing.
+pub fn bench_apply(a: &Args) -> crate::Result<()> {
+    let n: usize = a.get("n", 1024)?;
+    let alpha: usize = a.get("alpha", 2)?;
+    let g = budget(alpha, n);
+    let mut rng = Rng64::new(3);
+    let plan = random_gplan(n, g, &mut rng).to_plan();
+    let x: Vec<f32> = (0..n).map(|_| rng.randn() as f32).collect();
+    let dense: Vec<f32> = (0..n * n).map(|_| rng.randn() as f32).collect();
+    let mut y = vec![0f32; n];
+    let td = crate::bench_util::bench("dense gemv", 7, 0.05, || {
+        for (r, yr) in y.iter_mut().enumerate() {
+            let row = &dense[r * n..(r + 1) * n];
+            let mut acc = 0f32;
+            for (u, v) in row.iter().zip(x.iter()) {
+                acc += u * v;
+            }
+            *yr = acc;
+        }
+        y[0]
+    });
+    let mut block = SignalBlock::from_signals(&[x.clone()]);
+    let tb = crate::bench_util::bench("butterfly apply", 7, 0.05, || {
+        crate::transforms::apply_gchain_batch_f32(&plan, &mut block);
+        block.data[0]
+    });
+    println!("{}", td.line());
+    println!("{}", tb.line());
+    println!(
+        "n={n} g={g}: flop ratio {:.2}, measured speedup {:.2}",
+        (2 * n * n) as f64 / (6 * g) as f64,
+        td.min_s / tb.min_s
+    );
+    Ok(())
+}

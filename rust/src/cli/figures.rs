@@ -1,0 +1,496 @@
+//! Figure harnesses: regenerate every table/figure of the paper's
+//! evaluation (§5 + supplementary). Each `figN` prints the series the
+//! paper plots and returns the rows for programmatic use; `make repro`
+//! tees them into `results/`.
+//!
+//! Scale: by default the harnesses run a *reduced* configuration
+//! (`--scale 0.25`, 3 realizations, sizes ≤ 256 for the directed/T cases)
+//! so the whole suite completes in minutes; `--full` restores the paper's
+//! sizes. The qualitative shapes (method ordering, crossovers, trends in
+//! α and n) are scale-invariant — see EXPERIMENTS.md.
+
+use anyhow::bail;
+
+use super::metrics::eigenspace_error;
+use super::Args;
+use crate::baselines;
+use crate::factor::{
+    GeneralFactorizer, GeneralOptions, SpectrumRule, SymFactorizer, SymOptions,
+};
+use crate::graphs::{self, Graph, RealWorldGraph};
+use crate::linalg::{eigh, mean_std, Mat, Rng64};
+use crate::transforms::{GChain, GKind, GTransform, TChain, TTransform};
+
+/// Common harness options (parsed from flags).
+#[derive(Clone, Debug)]
+pub struct FigOptions {
+    /// Graph-size scale factor for the real-world substitutes.
+    pub scale: f64,
+    /// Monte-Carlo realizations.
+    pub reals: usize,
+    /// Graph sizes `n` (Figs. 1 and 5).
+    pub sizes: Vec<usize>,
+    /// Transform-budget multipliers `α` (`g = α·n·log₂n`).
+    pub alphas: Vec<usize>,
+    /// Paper-scale run.
+    pub full: bool,
+    /// Base RNG seed.
+    pub seed: u64,
+    /// Iterative sweeps for Algorithm 1.
+    pub sweeps: usize,
+}
+
+impl FigOptions {
+    fn from_args(a: &Args) -> crate::Result<Self> {
+        let full = a.has("full");
+        Ok(FigOptions {
+            scale: a.get("scale", if full { 1.0 } else { 0.25 })?,
+            reals: a.get("reals", if full { 10 } else { 3 })?,
+            sizes: a.get_list("sizes", if full { &[128, 256, 512] } else { &[128, 256] })?,
+            alphas: a.get_list("alphas", if full { &[1, 2, 3, 4, 5, 6] } else { &[1, 2, 3, 4] })?,
+            full,
+            seed: a.get("seed", 2021)?,
+            sweeps: a.get("sweeps", 2)?,
+        })
+    }
+}
+
+/// One printed data point.
+#[derive(Clone, Debug)]
+pub struct Row {
+    /// Series label (figure, family, method, …).
+    pub label: String,
+    /// x-axis value (α or g).
+    pub x: f64,
+    /// Mean of the metric.
+    pub mean: f64,
+    /// Std of the metric.
+    pub std: f64,
+}
+
+fn emit(rows: &mut Vec<Row>, label: impl Into<String>, x: f64, samples: &[f64]) {
+    let (m, s) = mean_std(samples);
+    let label = label.into();
+    println!("{label:<58} x={x:<8} mean={m:.6} std={s:.6}");
+    rows.push(Row { label, x, mean: m, std: s });
+}
+
+/// `g = α·n·log₂n` (the paper's budget rule).
+pub fn budget(alpha: usize, n: usize) -> usize {
+    (alpha as f64 * n as f64 * (n as f64).log2()).round() as usize
+}
+
+/// Dispatch `repro --fig N`.
+pub fn run(args: &Args) -> crate::Result<()> {
+    let fig: usize = args.get("fig", 0)?;
+    let opts = FigOptions::from_args(args)?;
+    match fig {
+        1 => {
+            fig1(&opts);
+        }
+        2 => {
+            fig2(&opts);
+        }
+        3 => {
+            fig3(&opts);
+        }
+        4 => {
+            fig4(&opts);
+        }
+        5 => {
+            fig5(&opts);
+        }
+        6 => {
+            fig6(&opts);
+        }
+        _ => bail!("--fig must be 1..6"),
+    }
+    Ok(())
+}
+
+fn sym_factor(l: &Mat, g: usize, sweeps: usize) -> (GChain, Vec<f64>, f64) {
+    let f = SymFactorizer::new(
+        l,
+        g,
+        SymOptions { max_sweeps: sweeps, eps: 1e-2, ..Default::default() },
+    )
+    .run();
+    let rel = f.relative_error(l);
+    (f.chain, f.spectrum, rel)
+}
+
+fn gen_factor(c: &Mat, m: usize, sweeps: usize) -> (TChain, Vec<f64>, f64) {
+    let f = GeneralFactorizer::new(
+        c,
+        m,
+        GeneralOptions { max_sweeps: sweeps, eps: 1e-2, ..Default::default() },
+    )
+    .run();
+    let rel = f.relative_error(c);
+    (f.chain, f.spectrum, rel)
+}
+
+fn make_family(family: &str, n: usize, rng: &mut Rng64) -> Graph {
+    match family {
+        "community" => graphs::community(n, rng),
+        "erdos-renyi" => graphs::erdos_renyi(n, 0.3, rng),
+        "sensor" => graphs::sensor(n, rng),
+        other => panic!("unknown family {other}"),
+    }
+}
+
+/// **Fig. 1** — approximation accuracy (mean ± std) of the Laplacian vs
+/// `g = α·n·log₂n` on community / Erdős–Rényi(p=0.3) / sensor graphs;
+/// top: undirected (G-transforms), bottom: directed (T-transforms,
+/// random edge orientation with p=1/2). Spectrum rule: `'update'`.
+pub fn fig1(o: &FigOptions) -> Vec<Row> {
+    println!("# Fig 1 — random-graph Laplacian accuracy vs alpha (g = a·n·log2 n)");
+    let mut rows = Vec::new();
+    for family in ["community", "erdos-renyi", "sensor"] {
+        for &n in &o.sizes {
+            for &alpha in &o.alphas {
+                let g = budget(alpha, n);
+                let mut errs = Vec::new();
+                for r in 0..o.reals {
+                    let mut rng = Rng64::new(o.seed ^ (r as u64) << 8 ^ n as u64);
+                    let graph = make_family(family, n, &mut rng);
+                    let l = graph.laplacian();
+                    let (_, _, rel) = sym_factor(&l, g, o.sweeps);
+                    errs.push(rel);
+                }
+                emit(&mut rows, format!("fig1/undirected/{family}/n={n}"), alpha as f64, &errs);
+            }
+        }
+        // directed: T-transforms are O(n²)-per-factor at init → cap size
+        // unless --full
+        let dir_sizes: Vec<usize> = if o.full {
+            o.sizes.clone()
+        } else {
+            o.sizes.iter().copied().filter(|&n| n <= 128).collect()
+        };
+        for &n in &dir_sizes {
+            for &alpha in &o.alphas {
+                let m = budget(alpha, n);
+                let mut errs = Vec::new();
+                for r in 0..o.reals {
+                    let mut rng = Rng64::new(o.seed ^ 0xD17 ^ (r as u64) << 8 ^ n as u64);
+                    let graph = make_family(family, n, &mut rng).randomly_directed(&mut rng);
+                    let l = graph.laplacian();
+                    let (_, _, rel) = gen_factor(&l, m, o.sweeps.min(1));
+                    errs.push(rel);
+                }
+                emit(&mut rows, format!("fig1/directed/{family}/n={n}"), alpha as f64, &errs);
+            }
+        }
+    }
+    rows
+}
+
+/// The four Fig.-2 graphs as structure-matched substitutes.
+fn fig2_graphs(o: &FigOptions) -> Vec<(String, Graph)> {
+    RealWorldGraph::all()
+        .into_iter()
+        .map(|w| {
+            let mut rng = Rng64::new(o.seed ^ 0xF16_2);
+            (w.name().to_string(), graphs::real_world_substitute(w, o.scale, &mut rng))
+        })
+        .collect()
+}
+
+/// **Fig. 2** — eigenspace accuracy `‖U − Ū‖²_F/‖U‖²_F` vs `g` on the
+/// four real-world graphs (structure-matched substitutes — DESIGN.md §4):
+/// proposed (G-transforms) vs truncated Jacobi [LeMagoarou18] vs greedy
+/// Givens [Kondor14 proxy] vs the given-U Givens factorization
+/// [RusuRosasco19, standing in for the L1 method of FrerixBruna19, which
+/// also requires the precomputed eigenspace].
+pub fn fig2(o: &FigOptions) -> Vec<Row> {
+    println!("# Fig 2 — eigenspace accuracy vs g on real-world graph substitutes");
+    println!("# (scale {}: n is {}x the original)", o.scale, o.scale);
+    let mut rows = Vec::new();
+    for (name, graph) in fig2_graphs(o) {
+        let n = graph.n;
+        let l = graph.laplacian();
+        let e = eigh(&l);
+        for &alpha in &o.alphas {
+            let g = budget(alpha, n);
+            // proposed
+            let f = SymFactorizer::new(
+                &l,
+                g,
+                SymOptions { max_sweeps: o.sweeps, ..Default::default() },
+            )
+            .run();
+            let err = eigenspace_error(&e.vectors, &f.chain, &f.spectrum);
+            emit(&mut rows, format!("fig2/{name}/proposed"), g as f64, &[err]);
+            // truncated Jacobi
+            let j = baselines::truncated_jacobi(&l, g);
+            let err = eigenspace_error(&e.vectors, &j.chain, &j.spectrum);
+            emit(&mut rows, format!("fig2/{name}/jacobi"), g as f64, &[err]);
+            // greedy Givens (γ-score)
+            let gg = baselines::greedy_givens(&l, g);
+            let err = eigenspace_error(&e.vectors, &gg.chain, &gg.spectrum);
+            emit(&mut rows, format!("fig2/{name}/greedy-givens"), g as f64, &[err]);
+            // given-U factorization
+            let du = baselines::factor_orthonormal(&e.vectors, &vec![1.0; n], g);
+            let err = eigenspace_error(&e.vectors, &du.chain, &e.values);
+            emit(&mut rows, format!("fig2/{name}/given-U"), g as f64, &[err]);
+        }
+    }
+    rows
+}
+
+/// **Fig. 3** — overall Laplacian accuracy
+/// `‖L − Ū diag(λ̄) Ūᵀ‖_F/‖L‖_F` vs `g` for the same four graphs
+/// (proposed method with spectrum updates).
+pub fn fig3(o: &FigOptions) -> Vec<Row> {
+    println!("# Fig 3 — Laplacian accuracy vs g on real-world graph substitutes");
+    let mut rows = Vec::new();
+    for (name, graph) in fig2_graphs(o) {
+        let n = graph.n;
+        let l = graph.laplacian();
+        for &alpha in &o.alphas {
+            let g = budget(alpha, n);
+            let (_, _, rel) = sym_factor(&l, g, o.sweeps);
+            emit(&mut rows, format!("fig3/{name}/proposed"), g as f64, &[rel]);
+        }
+    }
+    rows
+}
+
+/// **Fig. 4** — Erdős–Rényi `n = 1024` (reduced: `n = 256` unless
+/// `--full`): approximate `L` directly from `L` (ours, ± spectrum update)
+/// vs approximating the explicitly-given eigendecomposition
+/// ([RusuRosasco19]: plain `U` and the weighted eigenspace `U·diag(λ)`).
+/// Metric: relative Laplacian error.
+pub fn fig4(o: &FigOptions) -> Vec<Row> {
+    println!("# Fig 4 — given-EVD vs matrix-only approximation (Erdos-Renyi)");
+    let n = if o.full { 1024 } else { 256 };
+    let mut rows = Vec::new();
+    let mut rng = Rng64::new(o.seed ^ 0xF16_4);
+    let graph = graphs::erdos_renyi(n, 0.3, &mut rng);
+    let l = graph.laplacian();
+    let e = eigh(&l);
+    for &alpha in &o.alphas {
+        let g = budget(alpha, n);
+        // (a) ours, update rule
+        let (_, _, rel) = sym_factor(&l, g, o.sweeps);
+        emit(&mut rows, "fig4/proposed-update", alpha as f64, &[rel]);
+        // (b) ours, true spectrum given
+        let f = SymFactorizer::new(
+            &l,
+            g,
+            SymOptions {
+                spectrum: SpectrumRule::Original(e.values.clone()),
+                max_sweeps: o.sweeps,
+                ..Default::default()
+            },
+        )
+        .run();
+        emit(&mut rows, "fig4/proposed-true-spectrum", alpha as f64, &[f.relative_error(&l)]);
+        // (c) given-U factorization, unweighted
+        let du = baselines::factor_orthonormal(&e.vectors, &vec![1.0; n], g);
+        let spec = crate::factor::oracle::lemma1_spectrum(&l, &du.chain);
+        let rel = (du.chain.objective(&l, &spec) / l.fro_norm_sq()).sqrt();
+        emit(&mut rows, "fig4/given-U-unweighted", alpha as f64, &[rel]);
+        // (d) given-U factorization, weighted by |λ|
+        let w: Vec<f64> = e.values.iter().map(|v| v.abs().max(1e-6)).collect();
+        let du = baselines::factor_orthonormal(&e.vectors, &w, g);
+        let spec = crate::factor::oracle::lemma1_spectrum(&l, &du.chain);
+        let rel = (du.chain.objective(&l, &spec) / l.fro_norm_sq()).sqrt();
+        emit(&mut rows, "fig4/given-U-weighted", alpha as f64, &[rel]);
+    }
+    rows
+}
+
+/// **Fig. 5 (supp)** — random unstructured matrices: symmetric indefinite
+/// `S = X+Xᵀ`, PSD `S = XXᵀ`, general `C = X`; proposed factorization vs
+/// the best rank-`r` baseline at matched apply-flops
+/// (`r = 3·α·log₂n` symmetric, `r = α·log₂n` general; both ≈ `2rn`
+/// flops).
+pub fn fig5(o: &FigOptions) -> Vec<Row> {
+    println!("# Fig 5 — random matrices vs low-rank baseline at matched flops");
+    let mut rows = Vec::new();
+    for &n in &o.sizes {
+        for &alpha in &o.alphas {
+            let logn = (n as f64).log2();
+            let mut e_indef = Vec::new();
+            let mut e_psd = Vec::new();
+            let mut e_gen = Vec::new();
+            let mut lr_sym_indef = Vec::new();
+            let mut lr_sym_psd = Vec::new();
+            let mut lr_gen = Vec::new();
+            for r in 0..o.reals {
+                let mut rng = Rng64::new(o.seed ^ 0xF16_5 ^ ((r as u64) << 16) ^ n as u64);
+                let x = Mat::randn(n, n, &mut rng);
+                // symmetric indefinite
+                let s = &x + &x.transpose();
+                let g = budget(alpha, n);
+                let (_, _, rel) = sym_factor(&s, g, o.sweeps);
+                e_indef.push(rel);
+                let r_sym = (3.0 * alpha as f64 * logn).round() as usize;
+                lr_sym_indef
+                    .push((baselines::lowrank_error_symmetric(&s, r_sym) / s.fro_norm_sq()).sqrt());
+                // PSD
+                let p = x.matmul(&x.transpose());
+                let (_, _, rel) = sym_factor(&p, g, o.sweeps);
+                e_psd.push(rel);
+                lr_sym_psd
+                    .push((baselines::lowrank_error_symmetric(&p, r_sym) / p.fro_norm_sq()).sqrt());
+                // general (T-transforms) — smaller n unless --full
+                if o.full || n <= 128 {
+                    let m = budget(alpha, n);
+                    let (_, _, rel) = gen_factor(&x, m, 1);
+                    e_gen.push(rel);
+                    let r_gen = (alpha as f64 * logn).round() as usize;
+                    lr_gen
+                        .push((baselines::lowrank_error_general(&x, r_gen) / x.fro_norm_sq()).sqrt());
+                }
+            }
+            emit(&mut rows, format!("fig5/sym-indefinite/n={n}/proposed"), alpha as f64, &e_indef);
+            emit(&mut rows, format!("fig5/sym-indefinite/n={n}/lowrank"), alpha as f64, &lr_sym_indef);
+            emit(&mut rows, format!("fig5/sym-psd/n={n}/proposed"), alpha as f64, &e_psd);
+            emit(&mut rows, format!("fig5/sym-psd/n={n}/lowrank"), alpha as f64, &lr_sym_psd);
+            if !e_gen.is_empty() {
+                emit(&mut rows, format!("fig5/general/n={n}/proposed"), alpha as f64, &e_gen);
+                emit(&mut rows, format!("fig5/general/n={n}/lowrank"), alpha as f64, &lr_gen);
+            }
+        }
+    }
+    rows
+}
+
+/// Random plan of `g` G-transforms (timing only — apply cost does not
+/// depend on the values).
+pub fn random_gplan(n: usize, g: usize, rng: &mut Rng64) -> GChain {
+    let mut ch = GChain::identity(n);
+    for _ in 0..g {
+        let i = rng.below(n - 1);
+        let j = i + 1 + rng.below(n - 1 - i);
+        let th = rng.uniform_in(0.0, std::f64::consts::TAU);
+        let kind = if rng.bernoulli(0.5) { GKind::Rotation } else { GKind::Reflection };
+        ch.transforms.push(GTransform::new(i, j, th.cos(), th.sin(), kind));
+    }
+    ch
+}
+
+/// Random T-plan of `m` transforms.
+pub fn random_tplan(n: usize, m: usize, rng: &mut Rng64) -> TChain {
+    let mut ch = TChain::identity(n);
+    for _ in 0..m {
+        let i = rng.below(n - 1);
+        let j = i + 1 + rng.below(n - 1 - i);
+        ch.transforms.push(match rng.below(3) {
+            0 => TTransform::Scaling { i, a: 1.0 + 0.1 * rng.randn() },
+            1 => TTransform::UpperShear { i, j, a: 0.2 * rng.randn() },
+            _ => TTransform::LowerShear { i, j, a: 0.2 * rng.randn() },
+        });
+    }
+    ch
+}
+
+/// **Fig. 6 (supp)** — apply-time speedup of the factored transforms vs
+/// dense matrix–vector multiplication for the Fig.-2 graphs (at the
+/// *original* sizes — timing does not need the factorization itself, only
+/// its shape): FLOP-count ratio and measured wall-clock ratio, f32,
+/// single vector, no parallelism (paper: C vs BLAS SGEMV on one core).
+pub fn fig6(o: &FigOptions) -> Vec<Row> {
+    println!("# Fig 6 — fast-apply speedup vs dense mat-vec (FLOPs and measured)");
+    let alpha = *o.alphas.first().unwrap_or(&2);
+    let mut rows = Vec::new();
+    for w in RealWorldGraph::all() {
+        let (n, _) = w.dimensions();
+        let n = if o.full { n } else { ((n as f64 * o.scale) as usize).max(64) };
+        let g = budget(alpha, n);
+        let mut rng = Rng64::new(o.seed ^ 0xF16_6);
+        let gplan = random_gplan(n, g, &mut rng).to_plan();
+        let tplan = random_tplan(n, g, &mut rng).to_plan();
+        // dense operator and a signal
+        let dense: Vec<f32> = (0..n * n).map(|_| rng.randn() as f32).collect();
+        let x: Vec<f32> = (0..n).map(|_| rng.randn() as f32).collect();
+        let mut y = vec![0f32; n];
+        let t_dense = crate::bench_util::bench(&format!("dense n={n}"), 5, 0.02, || {
+            // straightforward f32 gemv
+            for (r, yr) in y.iter_mut().enumerate() {
+                let row = &dense[r * n..(r + 1) * n];
+                let mut acc = 0f32;
+                for (a, b) in row.iter().zip(x.iter()) {
+                    acc += a * b;
+                }
+                *yr = acc;
+            }
+            y[0]
+        });
+        let mut block = crate::transforms::SignalBlock::from_signals(&[x.clone()]);
+        let t_g = crate::bench_util::bench(&format!("gchain n={n} g={g}"), 5, 0.02, || {
+            crate::transforms::apply_gchain_batch_f32(&gplan, &mut block);
+            block.data[0]
+        });
+        let mut block2 = crate::transforms::SignalBlock::from_signals(&[x.clone()]);
+        let t_t = crate::bench_util::bench(&format!("tchain n={n} m={g}"), 5, 0.02, || {
+            crate::transforms::apply_tchain_batch_f32(&tplan, &mut block2, false);
+            block2.data[0]
+        });
+        let flop_ratio_g = (2.0 * (n * n) as f64) / (6.0 * g as f64);
+        let flop_ratio_t = (2.0 * (n * n) as f64) / (2.0 * g as f64);
+        let meas_g = t_dense.min_s / t_g.min_s;
+        let meas_t = t_dense.min_s / t_t.min_s;
+        println!(
+            "fig6/{:<14} n={n:<6} g={g:<8} flopx(G)={flop_ratio_g:<8.2} measured(G)={meas_g:<8.2} flopx(T)={flop_ratio_t:<8.2} measured(T)={meas_t:<8.2}",
+            w.name()
+        );
+        rows.push(Row { label: format!("fig6/{}/G-flop", w.name()), x: n as f64, mean: flop_ratio_g, std: 0.0 });
+        rows.push(Row { label: format!("fig6/{}/G-measured", w.name()), x: n as f64, mean: meas_g, std: 0.0 });
+        rows.push(Row { label: format!("fig6/{}/T-flop", w.name()), x: n as f64, mean: flop_ratio_t, std: 0.0 });
+        rows.push(Row { label: format!("fig6/{}/T-measured", w.name()), x: n as f64, mean: meas_t, std: 0.0 });
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budget_rule() {
+        assert_eq!(budget(1, 128), 128 * 7);
+        assert_eq!(budget(2, 256), 2 * 256 * 8);
+    }
+
+    fn tiny_opts() -> FigOptions {
+        FigOptions {
+            scale: 0.02,
+            reals: 1,
+            sizes: vec![16],
+            alphas: vec![1],
+            full: false,
+            seed: 7,
+            sweeps: 1,
+        }
+    }
+
+    #[test]
+    fn fig1_tiny_runs_and_is_sane() {
+        let rows = fig1(&tiny_opts());
+        assert!(!rows.is_empty());
+        for r in &rows {
+            assert!(r.mean.is_finite() && r.mean >= 0.0, "{r:?}");
+        }
+    }
+
+    #[test]
+    fn fig5_tiny_proposed_beats_or_ties_lowrank_somewhere() {
+        let rows = fig5(&tiny_opts());
+        assert!(!rows.is_empty());
+        for r in &rows {
+            assert!(r.mean.is_finite());
+        }
+    }
+
+    #[test]
+    fn fig6_tiny_reports_positive_ratios() {
+        let rows = fig6(&tiny_opts());
+        for r in &rows {
+            assert!(r.mean > 0.0, "{r:?}");
+        }
+    }
+}

@@ -1,0 +1,80 @@
+//! Shared accuracy metrics for the figure harnesses.
+
+use crate::linalg::Mat;
+use crate::transforms::GChain;
+
+/// Relative Frobenius error `‖M − M̄‖_F / ‖M‖_F`.
+pub fn relative_error(m: &Mat, approx: &Mat) -> f64 {
+    (m.fro_dist_sq(approx) / m.fro_norm_sq().max(1e-300)).sqrt()
+}
+
+/// Eigenspace approximation error used by Fig. 2:
+/// `‖U − Ū·P‖²_F / ‖U‖²_F` where `P` aligns `Ū` to `U` by (i) ordering
+/// columns by the estimated eigenvalues (descending, matching `U`'s
+/// convention) and (ii) flipping column signs to maximize per-column
+/// correlation — both are symmetries of the factorization (an eigenvector
+/// is defined up to sign; the estimated spectrum defines the order).
+pub fn eigenspace_error(u_true: &Mat, chain: &GChain, est_spectrum: &[f64]) -> f64 {
+    let n = u_true.rows();
+    assert_eq!(est_spectrum.len(), n);
+    let ubar = chain.to_dense();
+    // column order by estimated eigenvalue, descending
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| est_spectrum[b].partial_cmp(&est_spectrum[a]).unwrap());
+    let mut err = 0.0;
+    for (target_col, &src_col) in order.iter().enumerate() {
+        // sign alignment
+        let mut dot = 0.0;
+        for r in 0..n {
+            dot += u_true[(r, target_col)] * ubar[(r, src_col)];
+        }
+        let sgn = if dot >= 0.0 { 1.0 } else { -1.0 };
+        for r in 0..n {
+            let d = u_true[(r, target_col)] - sgn * ubar[(r, src_col)];
+            err += d * d;
+        }
+    }
+    err / u_true.fro_norm_sq().max(1e-300)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{eigh, Rng64};
+
+    #[test]
+    fn relative_error_zero_for_equal() {
+        let mut rng = Rng64::new(801);
+        let m = Mat::randn(5, 5, &mut rng);
+        assert_eq!(relative_error(&m, &m), 0.0);
+    }
+
+    #[test]
+    fn eigenspace_error_zero_for_perfect_factorization() {
+        // factor U exactly with enough transforms, then the aligned error
+        // must vanish even under column permutation/sign symmetry
+        let mut rng = Rng64::new(802);
+        let x = Mat::randn(6, 6, &mut rng);
+        let s = &x + &x.transpose();
+        let e = eigh(&s);
+        let r = crate::baselines::factor_orthonormal(&e.vectors, &vec![1.0; 6], 60);
+        let err = eigenspace_error(&e.vectors, &r.chain, &e.values);
+        assert!(err < 1e-10, "err {err}");
+    }
+
+    #[test]
+    fn eigenspace_error_invariant_to_sign_flips() {
+        let mut rng = Rng64::new(803);
+        let x = Mat::randn(5, 5, &mut rng);
+        let s = &x + &x.transpose();
+        let e = eigh(&s);
+        let r = crate::baselines::factor_orthonormal(&e.vectors, &vec![1.0; 5], 10);
+        let base = eigenspace_error(&e.vectors, &r.chain, &e.values);
+        // flipping the sign of a whole column of U(true) must not blow up
+        // the metric beyond the column-alignment bound
+        let mut u2 = e.vectors.clone();
+        u2.scale_col(2, -1.0);
+        let flipped = eigenspace_error(&u2, &r.chain, &e.values);
+        assert!((base - flipped).abs() < 1e-9, "{base} vs {flipped}");
+    }
+}

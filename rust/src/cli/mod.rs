@@ -1,0 +1,152 @@
+//! Command-line interface of the `fastes` binary.
+//!
+//! Hand-rolled argument parsing (no clap in the offline crate snapshot):
+//! `fastes <command> [--flag value]...`. Commands:
+//!
+//! * `repro --fig N` — regenerate a paper figure (see [`figures`]).
+//! * `factor` — factor a random matrix and report accuracy.
+//! * `gft` — build a graph, factor its Laplacian, report the fast-GFT
+//!   accuracy and flop counts.
+//! * `serve` — run the serving coordinator on a factored GFT and report
+//!   latency/throughput.
+//! * `eigen` — eigendecomposition smoke (substrate sanity).
+//! * `bench-apply` — quick butterfly-vs-dense apply timing.
+
+pub mod commands;
+pub mod figures;
+pub mod metrics;
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail};
+
+/// Parsed command line: a command word plus `--key value` flags
+/// (bare `--flag` becomes `"true"`).
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    /// The command word.
+    pub command: String,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding `argv[0]`).
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> crate::Result<Args> {
+        let mut it = argv.into_iter().peekable();
+        let command = it.next().unwrap_or_else(|| "help".to_string());
+        let mut flags = HashMap::new();
+        while let Some(a) = it.next() {
+            let Some(key) = a.strip_prefix("--") else {
+                bail!("unexpected positional argument '{a}'");
+            };
+            let value = match it.peek() {
+                Some(v) if !v.starts_with("--") => it.next().unwrap(),
+                _ => "true".to_string(),
+            };
+            flags.insert(key.to_string(), value);
+        }
+        Ok(Args { command, flags })
+    }
+
+    /// String flag with default.
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Parsed flag with default.
+    pub fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> crate::Result<T> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("flag --{key}: cannot parse '{v}'")),
+        }
+    }
+
+    /// Comma-separated list flag.
+    pub fn get_list(&self, key: &str, default: &[usize]) -> crate::Result<Vec<usize>> {
+        match self.flags.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|p| p.trim().parse().map_err(|_| anyhow!("flag --{key}: bad item '{p}'")))
+                .collect(),
+        }
+    }
+
+    /// Boolean presence flag.
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.get(key).map(|v| v != "false").unwrap_or(false)
+    }
+}
+
+/// Top-level dispatch.
+pub fn run(args: Args) -> crate::Result<()> {
+    match args.command.as_str() {
+        "repro" => figures::run(&args),
+        "factor" => commands::factor(&args),
+        "gft" => commands::gft(&args),
+        "serve" => commands::serve(&args),
+        "eigen" => commands::eigen(&args),
+        "bench-apply" => commands::bench_apply(&args),
+        "help" | "--help" | "-h" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' (try 'fastes help')"),
+    }
+}
+
+const HELP: &str = "\
+fastes — fast approximate eigenspaces & fast graph Fourier transforms
+  (reproduction of Rusu & Rosasco, IEEE TSP 2021)
+
+USAGE: fastes <command> [--flag value]...
+
+COMMANDS
+  repro --fig N        regenerate paper figure N (1..6)
+                       [--scale F] [--reals R] [--sizes a,b] [--alphas a,b]
+                       [--seed S] [--full]
+  factor               factor a random matrix
+                       [--kind sym|psd|gen] [--n N] [--budget G] [--seed S]
+                       [--sweeps K] [--full-update]
+  gft                  fast GFT of a graph Laplacian
+                       [--graph community|er|sensor|minnesota|protein|email|facebook]
+                       [--n N] [--alpha A] [--directed] [--seed S]
+  serve                serve batched GFT requests
+                       [--backend native|pjrt] [--requests N] [--batch B]
+                       [--alpha A] [--artifacts DIR]
+  eigen                symmetric eigensolver smoke [--n N] [--seed S]
+  bench-apply          butterfly vs dense apply timing [--n N] [--alpha A]
+  help                 this text
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_flags() {
+        let a = Args::parse(
+            ["repro", "--fig", "3", "--full", "--sizes", "128,256"].map(String::from),
+        )
+        .unwrap();
+        assert_eq!(a.command, "repro");
+        assert_eq!(a.get("fig", 0usize).unwrap(), 3);
+        assert!(a.has("full"));
+        assert!(!a.has("absent"));
+        assert_eq!(a.get_list("sizes", &[]).unwrap(), vec![128, 256]);
+        assert_eq!(a.get("reals", 7usize).unwrap(), 7);
+    }
+
+    #[test]
+    fn rejects_positional() {
+        assert!(Args::parse(["repro", "oops"].map(String::from)).is_err());
+    }
+
+    #[test]
+    fn bad_flag_value() {
+        let a = Args::parse(["repro", "--fig", "xyz"].map(String::from)).unwrap();
+        assert!(a.get("fig", 0usize).is_err());
+    }
+}

@@ -1,0 +1,53 @@
+//! The paper's contribution: approximate eigenspace factorizations.
+//!
+//! * [`symmetric`] — `S ≈ Ū diag(s̄) Ūᵀ` with `Ū` a product of `g`
+//!   extended orthonormal Givens transformations (Theorems 1–2, Lemma 1,
+//!   Algorithm 1).
+//! * [`general`] — `C ≈ T̄ diag(c̄) T̄⁻¹` with `T̄` a product of `m` scaling
+//!   and shear transformations (Theorems 3–4, Lemma 2, Algorithm 1).
+//! * [`oracle`] — slow, from-the-definitions reference implementations of
+//!   every score and objective, used by the test-suite to validate the
+//!   fast incremental paths at small sizes.
+//!
+//! Both factorizers follow the same two-phase structure:
+//!
+//! 1. **Initialization** — greedily choose each factor with a closed-form
+//!    locally optimal solution (two-sided Procrustes for G; per-pair
+//!    quartic minimization for T), using `O(1)`-per-pair scores maintained
+//!    incrementally across steps.
+//! 2. **Iterations** — sweep the factors and re-solve each one with all
+//!    others fixed (the paper's experiments use the cheap "polish"
+//!    variant: indices stay fixed, only the 2×2 values are re-optimized),
+//!    optionally refreshing the spectrum estimate (Lemma 1 / Lemma 2)
+//!    between sweeps, until the objective decrease falls below `eps`.
+//!
+//! Every step is locally optimal and can only decrease the objective, so
+//! convergence to a stationary point is guaranteed; the test-suite asserts
+//! the monotone decrease property on random inputs.
+
+pub mod general;
+pub mod oracle;
+pub mod symmetric;
+
+pub use general::{GeneralFactorization, GeneralFactorizer, GeneralOptions};
+pub use symmetric::{SymFactorization, SymFactorizer, SymOptions};
+
+/// How the spectrum estimate is produced and maintained (paper Algorithm 1
+/// input "update rule").
+#[derive(Clone, Debug, PartialEq)]
+pub enum SpectrumRule {
+    /// `'update'` — start from `diag(S)` (made distinct by an infinitesimal
+    /// deterministic jitter, as required by Theorem 1's score) and refresh
+    /// via Lemma 1 / Lemma 2 after every sweep.
+    Update,
+    /// `'original'` — use the given (true) eigenvalues and keep them fixed.
+    Original(Vec<f64>),
+    /// Fixed user-provided estimate, never refreshed.
+    Fixed(Vec<f64>),
+}
+
+impl Default for SpectrumRule {
+    fn default() -> Self {
+        SpectrumRule::Update
+    }
+}

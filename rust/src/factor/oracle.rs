@@ -1,0 +1,182 @@
+//! From-the-definitions reference implementations.
+//!
+//! Everything here is written exactly as the paper states it — dense
+//! products, explicit matrices, brute-force searches — with no incremental
+//! state and no precomputation. The integration/property tests run these
+//! against the fast paths in [`super::symmetric`] and [`super::general`]
+//! at small sizes; any divergence means the fast path is wrong.
+
+use crate::linalg::Mat;
+use crate::transforms::{GChain, GKind, GTransform, TChain, TTransform};
+
+/// `‖S − Ū diag(s̄) Ūᵀ‖²_F` by dense reconstruction.
+pub fn sym_objective(s: &Mat, chain: &GChain, spectrum: &[f64]) -> f64 {
+    chain.reconstruct(spectrum).fro_dist_sq(s)
+}
+
+/// `‖C − T̄ diag(c̄) T̄⁻¹‖²_F` by dense reconstruction.
+pub fn gen_objective(c: &Mat, chain: &TChain, spectrum: &[f64]) -> f64 {
+    chain.reconstruct(spectrum).fro_dist_sq(c)
+}
+
+/// Lemma 1 by definition: `s̄* = diag(Ūᵀ S Ū)` via dense products.
+pub fn lemma1_spectrum(s: &Mat, chain: &GChain) -> Vec<f64> {
+    let u = chain.to_dense();
+    u.transpose().matmul(s).matmul(&u).diag()
+}
+
+/// Brute-force best single G-transform appended to nothing (first
+/// initialization step): scans all pairs and a dense angle grid over both
+/// the rotation and the reflection, minimizing
+/// `‖W − G diag(s̄) Gᵀ‖²_F` exactly. `O(n⁴ · grid)` — tiny `n` only.
+pub fn best_first_gtransform_bruteforce(
+    w: &Mat,
+    spectrum: &[f64],
+    grid: usize,
+) -> (usize, usize, f64) {
+    let n = w.rows();
+    let d = Mat::from_diag(spectrum);
+    let mut best = (0usize, 1usize, f64::INFINITY);
+    for i in 0..n - 1 {
+        for j in (i + 1)..n {
+            for k in 0..grid {
+                let th = std::f64::consts::TAU * k as f64 / grid as f64;
+                for kind in [GKind::Rotation, GKind::Reflection] {
+                    let g = GTransform::new(i, j, th.cos(), th.sin(), kind);
+                    let dense = g.to_dense(n);
+                    let obj = w.fro_dist_sq(&dense.matmul(&d).matmul(&dense.transpose()));
+                    if obj < best.2 {
+                        best = (i, j, obj);
+                    }
+                }
+            }
+        }
+    }
+    best
+}
+
+/// Brute-force best single T-transform on top of `B = diag(c̄)` (first
+/// initialization step of the general case): scans all ordered pairs and a
+/// dense grid over the coefficient.
+pub fn best_first_ttransform_bruteforce(
+    c: &Mat,
+    spectrum: &[f64],
+    grid: usize,
+    a_range: f64,
+) -> f64 {
+    let n = c.rows();
+    let b = Mat::from_diag(spectrum);
+    let mut best = f64::INFINITY;
+    let mut consider = |t: TTransform| {
+        let mut tb = b.clone();
+        t.conjugate(&mut tb);
+        let obj = c.fro_dist_sq(&tb);
+        if obj < best {
+            best = obj;
+        }
+    };
+    for k in 0..grid {
+        let a = -a_range + 2.0 * a_range * k as f64 / grid as f64;
+        if a.abs() < 1e-6 {
+            continue;
+        }
+        for i in 0..n {
+            consider(TTransform::Scaling { i, a });
+            for j in (i + 1)..n {
+                consider(TTransform::UpperShear { i, j, a });
+                consider(TTransform::LowerShear { i, j, a });
+            }
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::factor::{SymFactorizer, SymOptions};
+    use crate::linalg::Rng64;
+
+    #[test]
+    fn oracle_objective_matches_fast_objective() {
+        let mut rng = Rng64::new(401);
+        let x = Mat::randn(8, 8, &mut rng);
+        let s = &x + &x.transpose();
+        let f = SymFactorizer::new(&s, 16, SymOptions::default()).run();
+        let oracle = sym_objective(&s, &f.chain, &f.spectrum);
+        assert!(
+            (oracle - f.objective()).abs() < 1e-7 * (1.0 + oracle),
+            "oracle {oracle} vs fast {}",
+            f.objective()
+        );
+    }
+
+    #[test]
+    fn first_init_step_is_globally_optimal() {
+        // Theorem 1's first pick must match a dense (pair × angle × kind)
+        // brute-force search
+        use crate::factor::SpectrumRule;
+        use crate::linalg::eigh;
+        for seed in [212u64, 404, 405, 406] {
+            let mut rng = Rng64::new(seed);
+            let x = Mat::randn(6, 6, &mut rng);
+            let s = &x + &x.transpose();
+            let e = eigh(&s);
+            let opts = SymOptions {
+                spectrum: SpectrumRule::Original(e.values.clone()),
+                max_sweeps: 0,
+                ..Default::default()
+            };
+            let f = SymFactorizer::new(&s, 1, opts).run();
+            let (_, _, brute) = best_first_gtransform_bruteforce(&s, &e.values, 2048);
+            assert!(
+                f.init_objective <= brute + 1e-4 * (1.0 + brute),
+                "seed {seed}: greedy {} vs brute {brute}",
+                f.init_objective
+            );
+        }
+    }
+
+    #[test]
+    fn first_t_init_step_beats_bruteforce_grid() {
+        // Theorem 3's first pick must beat a coarse grid over all single
+        // T-transforms
+        use crate::factor::{GeneralFactorizer, GeneralOptions};
+        for seed in [407u64, 408] {
+            let mut rng = Rng64::new(seed);
+            let c = Mat::randn(6, 6, &mut rng);
+            let mut spec = c.diag();
+            // same distinct-ification as the factorizer applies
+            crate::factor::symmetric::make_distinct_pub(&mut spec);
+            let opts = GeneralOptions {
+                spectrum: crate::factor::SpectrumRule::Fixed(spec.clone()),
+                max_sweeps: 0,
+                ..Default::default()
+            };
+            let f = GeneralFactorizer::new(&c, 1, opts).run();
+            let brute = best_first_ttransform_bruteforce(&c, &spec, 800, 4.0);
+            assert!(
+                f.init_objective <= brute + 1e-4 * (1.0 + brute),
+                "seed {seed}: greedy {} vs brute {brute}",
+                f.init_objective
+            );
+        }
+    }
+
+    #[test]
+    fn lemma1_oracle_is_optimal() {
+        // for any fixed chain, the Lemma-1 spectrum must beat any perturbed
+        // spectrum
+        let mut rng = Rng64::new(402);
+        let x = Mat::randn(6, 6, &mut rng);
+        let s = &x + &x.transpose();
+        let f = SymFactorizer::new(&s, 8, SymOptions::default()).run();
+        let star = lemma1_spectrum(&s, &f.chain);
+        let base = sym_objective(&s, &f.chain, &star);
+        for _ in 0..20 {
+            let perturbed: Vec<f64> =
+                star.iter().map(|v| v + 0.1 * rng.randn()).collect();
+            assert!(sym_objective(&s, &f.chain, &perturbed) >= base - 1e-10);
+        }
+    }
+}

@@ -1,0 +1,366 @@
+//! Random graph generators.
+//!
+//! Mirrors the families the paper evaluates on: GSP-box–style community,
+//! Erdős–Rényi and sensor graphs (Fig. 1), plus structure-matched
+//! substitutes for the four real-world graphs of Figs. 2/3/6 (see
+//! DESIGN.md §4 for the substitution rationale).
+
+use super::graph::Graph;
+use crate::linalg::Rng64;
+
+/// Erdős–Rényi `G(n, p)`.
+pub fn erdos_renyi(n: usize, p: f64, rng: &mut Rng64) -> Graph {
+    let mut edges = Vec::new();
+    for u in 0..n {
+        for v in (u + 1)..n {
+            if rng.bernoulli(p) {
+                edges.push((u, v));
+            }
+        }
+    }
+    Graph::undirected_from_edges(n, edges)
+}
+
+/// GSP-box–style community graph: `c ≈ √n/2` communities of random sizes,
+/// dense within a community (`p_in`), sparse across (`p_out`). Default
+/// parameters follow the toolbox (world density `≈ 1/n` across).
+pub fn community(n: usize, rng: &mut Rng64) -> Graph {
+    let c = ((n as f64).sqrt() / 2.0).round().max(2.0) as usize;
+    community_with(n, c, 0.7, 1.0 / n as f64 * 2.0, rng)
+}
+
+/// Community graph with explicit parameters.
+pub fn community_with(n: usize, c: usize, p_in: f64, p_out: f64, rng: &mut Rng64) -> Graph {
+    // random community sizes: sample c−1 cut points
+    let mut cuts: Vec<usize> = (0..c - 1).map(|_| rng.below(n)).collect();
+    cuts.push(0);
+    cuts.push(n);
+    cuts.sort();
+    let mut label = vec![0usize; n];
+    for (k, w) in cuts.windows(2).enumerate() {
+        for v in w[0]..w[1] {
+            label[v] = k;
+        }
+    }
+    let mut edges = Vec::new();
+    for u in 0..n {
+        for v in (u + 1)..n {
+            let p = if label[u] == label[v] { p_in } else { p_out };
+            if rng.bernoulli(p) {
+                edges.push((u, v));
+            }
+        }
+    }
+    Graph::undirected_from_edges(n, edges)
+}
+
+/// GSP-box–style sensor graph: `n` points uniform in the unit square,
+/// each connected to its `k` nearest neighbours (default `k = 6`,
+/// the toolbox default for random sensor networks).
+pub fn sensor(n: usize, rng: &mut Rng64) -> Graph {
+    sensor_with(n, 6, rng)
+}
+
+/// Sensor graph with explicit neighbour count.
+pub fn sensor_with(n: usize, k: usize, rng: &mut Rng64) -> Graph {
+    let pts: Vec<(f64, f64)> = (0..n).map(|_| (rng.uniform(), rng.uniform())).collect();
+    let mut edges = Vec::new();
+    for u in 0..n {
+        // k nearest neighbours of u (O(n log n) per node; fine at our n)
+        let mut d: Vec<(f64, usize)> = (0..n)
+            .filter(|&v| v != u)
+            .map(|v| {
+                let dx = pts[u].0 - pts[v].0;
+                let dy = pts[u].1 - pts[v].1;
+                (dx * dx + dy * dy, v)
+            })
+            .collect();
+        d.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        for &(_, v) in d.iter().take(k.min(d.len())) {
+            edges.push((u, v));
+        }
+    }
+    Graph::undirected_from_edges(n, edges)
+}
+
+/// Barabási–Albert preferential attachment: each new vertex attaches to
+/// `m` existing vertices with probability proportional to degree.
+pub fn barabasi_albert(n: usize, m: usize, rng: &mut Rng64) -> Graph {
+    assert!(m >= 1 && n > m);
+    let mut edges: Vec<(usize, usize)> = Vec::new();
+    // repeated-vertex list implements preferential attachment
+    let mut targets: Vec<usize> = (0..=m).collect();
+    let mut repeated: Vec<usize> = Vec::new();
+    // seed: star on m+1 vertices
+    for v in 0..m {
+        edges.push((v, m));
+        repeated.push(v);
+        repeated.push(m);
+    }
+    for u in (m + 1)..n {
+        // choose m distinct targets by degree-proportional sampling
+        targets.clear();
+        let mut guard = 0;
+        while targets.len() < m {
+            guard += 1;
+            let t = if repeated.is_empty() || guard > 50 * m {
+                rng.below(u)
+            } else {
+                repeated[rng.below(repeated.len())]
+            };
+            if !targets.contains(&t) {
+                targets.push(t);
+            }
+        }
+        for &t in &targets[..m] {
+            edges.push((t, u));
+            repeated.push(t);
+            repeated.push(u);
+        }
+    }
+    Graph::undirected_from_edges(n, edges)
+}
+
+/// Planar road-like graph: jittered grid points connected to their
+/// nearest geometric neighbours with a low degree cap — produces the
+/// sparse, large-diameter, almost-planar topology of road networks
+/// (our Minnesota substitute).
+pub fn road_like(n: usize, avg_degree: f64, rng: &mut Rng64) -> Graph {
+    let side = (n as f64).sqrt().ceil() as usize;
+    let mut pts: Vec<(f64, f64)> = Vec::with_capacity(n);
+    'outer: for gy in 0..side {
+        for gx in 0..side {
+            if pts.len() == n {
+                break 'outer;
+            }
+            let jitter = 0.35;
+            pts.push((
+                (gx as f64 + rng.uniform_in(-jitter, jitter)) / side as f64,
+                (gy as f64 + rng.uniform_in(-jitter, jitter)) / side as f64,
+            ));
+        }
+    }
+    // connect each node to its 3 nearest neighbours, then trim to target
+    let mut edges = Vec::new();
+    let r = 2.0 / side as f64; // local search radius
+    for u in 0..n {
+        let mut cand: Vec<(f64, usize)> = (0..n)
+            .filter(|&v| v != u)
+            .filter_map(|v| {
+                let dx = pts[u].0 - pts[v].0;
+                let dy = pts[u].1 - pts[v].1;
+                let d2 = dx * dx + dy * dy;
+                (d2 < r * r).then_some((d2, v))
+            })
+            .collect();
+        cand.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        for &(_, v) in cand.iter().take(3) {
+            edges.push((u, v));
+        }
+    }
+    let mut g = Graph::undirected_from_edges(n, edges);
+    let target = (avg_degree * n as f64 / 2.0).round() as usize;
+    let mut r2 = Rng64::new(rng.next_u64());
+    if g.num_edges() > target {
+        g.trim_to_edges(target, &mut r2);
+    } else {
+        g.grow_to_edges(target, &mut r2);
+    }
+    g
+}
+
+/// Cycle graph.
+pub fn ring(n: usize) -> Graph {
+    Graph::undirected_from_edges(n, (0..n).map(|i| (i, (i + 1) % n)))
+}
+
+/// 2-D grid graph on `rows × cols` vertices.
+pub fn grid(rows: usize, cols: usize) -> Graph {
+    let idx = |r: usize, c: usize| r * cols + c;
+    let mut edges = Vec::new();
+    for r in 0..rows {
+        for c in 0..cols {
+            if c + 1 < cols {
+                edges.push((idx(r, c), idx(r, c + 1)));
+            }
+            if r + 1 < rows {
+                edges.push((idx(r, c), idx(r + 1, c)));
+            }
+        }
+    }
+    Graph::undirected_from_edges(rows * cols, edges)
+}
+
+/// The four real-world graphs of the paper's Figs. 2/3/6.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RealWorldGraph {
+    /// Minnesota road network, n = 2642, |E| = 3304.
+    Minnesota,
+    /// Human protein–protein interaction network, n = 3133, |E| = 6726.
+    HumanProtein,
+    /// University e-mail network, n = 1133, |E| = 5451.
+    Email,
+    /// Facebook ego-circles graph, n = 2888, |E| = 2981.
+    Facebook,
+}
+
+impl RealWorldGraph {
+    /// `(n, |E|)` of the original dataset.
+    pub fn dimensions(self) -> (usize, usize) {
+        match self {
+            RealWorldGraph::Minnesota => (2642, 3304),
+            RealWorldGraph::HumanProtein => (3133, 6726),
+            RealWorldGraph::Email => (1133, 5451),
+            RealWorldGraph::Facebook => (2888, 2981),
+        }
+    }
+
+    /// Display name.
+    pub fn name(self) -> &'static str {
+        match self {
+            RealWorldGraph::Minnesota => "Minnesota",
+            RealWorldGraph::HumanProtein => "HumanProtein",
+            RealWorldGraph::Email => "Email",
+            RealWorldGraph::Facebook => "Facebook",
+        }
+    }
+
+    /// All four graphs, in the paper's order.
+    pub fn all() -> [RealWorldGraph; 4] {
+        [
+            RealWorldGraph::Minnesota,
+            RealWorldGraph::HumanProtein,
+            RealWorldGraph::Email,
+            RealWorldGraph::Facebook,
+        ]
+    }
+}
+
+/// Structure-matched substitute for a real-world graph (see DESIGN.md §4):
+/// same `n`, same `|E|`, same topology class. `scale` ∈ (0, 1] shrinks the
+/// graph proportionally (used to keep harness wall-clock in budget; the
+/// paper-scale graphs are produced with `scale = 1.0`).
+pub fn real_world_substitute(which: RealWorldGraph, scale: f64, rng: &mut Rng64) -> Graph {
+    let (n0, e0) = which.dimensions();
+    let n = ((n0 as f64 * scale).round() as usize).max(16);
+    let e = ((e0 as f64 * scale).round() as usize).max(n);
+    let mut g = match which {
+        // sparse almost-planar road network
+        RealWorldGraph::Minnesota => road_like(n, 2.0 * e as f64 / n as f64, rng),
+        // scale-free PPI network: BA with m=2 ≈ 2.15 avg/2 edges per node
+        RealWorldGraph::HumanProtein => barabasi_albert(n, 2, rng),
+        // denser social communication network: BA with m=5
+        RealWorldGraph::Email => barabasi_albert(n, 5.min(n / 4).max(1), rng),
+        // extremely sparse ego-circles: communities + spanning sparsity
+        RealWorldGraph::Facebook => community_with(n, (n / 20).max(2), 0.08, 0.0001, rng),
+    };
+    // exact |E| match
+    let mut r2 = Rng64::new(rng.next_u64() ^ 0x9E37);
+    if g.num_edges() > e {
+        g.trim_to_edges(e, &mut r2);
+    } else {
+        g.grow_to_edges(e, &mut r2);
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn erdos_renyi_density() {
+        let mut rng = Rng64::new(101);
+        let g = erdos_renyi(100, 0.3, &mut rng);
+        let expected = 0.3 * (100.0 * 99.0 / 2.0);
+        let got = g.num_edges() as f64;
+        assert!((got - expected).abs() < 0.15 * expected, "{got} vs {expected}");
+    }
+
+    #[test]
+    fn community_has_blocks() {
+        let mut rng = Rng64::new(102);
+        let g = community(64, &mut rng);
+        assert!(g.num_edges() > 64, "communities should be dense: {}", g.num_edges());
+        assert_eq!(g.n, 64);
+    }
+
+    #[test]
+    fn sensor_degrees() {
+        let mut rng = Rng64::new(103);
+        let g = sensor(80, &mut rng);
+        let d = g.degrees();
+        // kNN with k=6 gives degree ≥ 6 before symmetrization dedup...
+        // at least k/2 on average and bounded above loosely
+        let avg = d.iter().sum::<usize>() as f64 / 80.0;
+        assert!(avg >= 6.0 && avg <= 12.0, "avg degree {avg}");
+    }
+
+    #[test]
+    fn ba_edge_count() {
+        let mut rng = Rng64::new(104);
+        let g = barabasi_albert(200, 3, &mut rng);
+        // ≈ m per added vertex
+        assert!(g.num_edges() >= 3 * (200 - 4) && g.num_edges() <= 3 * 200);
+        assert!(g.is_connected());
+    }
+
+    #[test]
+    fn ba_is_scale_free_ish() {
+        let mut rng = Rng64::new(105);
+        let g = barabasi_albert(400, 2, &mut rng);
+        let d = g.degrees();
+        let max = *d.iter().max().unwrap();
+        let avg = d.iter().sum::<usize>() as f64 / 400.0;
+        // hubs well above the mean are the signature of preferential attachment
+        assert!((max as f64) > 4.0 * avg, "max {max} avg {avg}");
+    }
+
+    #[test]
+    fn road_like_sparse() {
+        let mut rng = Rng64::new(106);
+        let g = road_like(256, 2.5, &mut rng);
+        let avg = 2.0 * g.num_edges() as f64 / 256.0;
+        assert!((avg - 2.5).abs() < 0.1, "avg degree {avg}");
+    }
+
+    #[test]
+    fn ring_and_grid() {
+        let r = ring(10);
+        assert_eq!(r.num_edges(), 10);
+        assert!(r.is_connected());
+        let g = grid(4, 5);
+        assert_eq!(g.n, 20);
+        assert_eq!(g.num_edges(), 4 * 4 + 3 * 5);
+        assert!(g.is_connected());
+    }
+
+    #[test]
+    fn substitutes_match_dimensions() {
+        let mut rng = Rng64::new(107);
+        for which in RealWorldGraph::all() {
+            let scale = 0.1;
+            let g = real_world_substitute(which, scale, &mut rng);
+            let (n0, e0) = which.dimensions();
+            let n = ((n0 as f64 * scale).round() as usize).max(16);
+            let e = ((e0 as f64 * scale).round() as usize).max(n);
+            assert_eq!(g.n, n, "{}", which.name());
+            assert_eq!(g.num_edges(), e, "{}", which.name());
+        }
+    }
+
+    #[test]
+    fn substitutes_full_scale_dims() {
+        let mut rng = Rng64::new(108);
+        let g = real_world_substitute(RealWorldGraph::Email, 1.0, &mut rng);
+        assert_eq!(g.n, 1133);
+        assert_eq!(g.num_edges(), 5451);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let g1 = erdos_renyi(50, 0.2, &mut Rng64::new(7));
+        let g2 = erdos_renyi(50, 0.2, &mut Rng64::new(7));
+        assert_eq!(g1.edges, g2.edges);
+    }
+}

@@ -1,0 +1,232 @@
+//! Graph type and Laplacian construction.
+
+use crate::linalg::{Mat, Rng64};
+
+/// A simple graph on `n` vertices, possibly directed.
+///
+/// Stored as an edge list; undirected edges are stored once with
+/// `u < v`. Directed edges `(u, v)` mean `u → v`.
+#[derive(Clone, Debug)]
+pub struct Graph {
+    /// Number of vertices.
+    pub n: usize,
+    /// Whether edges are directed.
+    pub directed: bool,
+    /// Edge list. For undirected graphs each pair appears once, `u < v`.
+    pub edges: Vec<(usize, usize)>,
+}
+
+impl Graph {
+    /// Empty (edgeless) graph.
+    pub fn empty(n: usize, directed: bool) -> Self {
+        Graph { n, directed, edges: Vec::new() }
+    }
+
+    /// Build an undirected graph from an edge list, normalizing order and
+    /// removing duplicates and self loops.
+    pub fn undirected_from_edges(n: usize, edges: impl IntoIterator<Item = (usize, usize)>) -> Self {
+        let mut es: Vec<(usize, usize)> = edges
+            .into_iter()
+            .filter(|&(u, v)| u != v)
+            .map(|(u, v)| if u < v { (u, v) } else { (v, u) })
+            .collect();
+        es.sort();
+        es.dedup();
+        for &(u, v) in &es {
+            assert!(u < n && v < n, "edge out of range");
+        }
+        Graph { n, directed: false, edges: es }
+    }
+
+    /// Number of edges.
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Degree sequence (total degree; for directed graphs in+out).
+    pub fn degrees(&self) -> Vec<usize> {
+        let mut d = vec![0usize; self.n];
+        for &(u, v) in &self.edges {
+            d[u] += 1;
+            d[v] += 1;
+        }
+        d
+    }
+
+    /// Dense adjacency matrix (`A_ij = 1` for an edge `i → j`; symmetric
+    /// when undirected).
+    pub fn adjacency(&self) -> Mat {
+        let mut a = Mat::zeros(self.n, self.n);
+        for &(u, v) in &self.edges {
+            a[(u, v)] = 1.0;
+            if !self.directed {
+                a[(v, u)] = 1.0;
+            }
+        }
+        a
+    }
+
+    /// Dense Laplacian `L = D − A` where `D = diag(A·1)` (out-degrees for
+    /// directed graphs) — the construction used in the paper's §5.
+    pub fn laplacian(&self) -> Mat {
+        let a = self.adjacency();
+        let mut l = Mat::zeros(self.n, self.n);
+        for i in 0..self.n {
+            let deg: f64 = a.row(i).iter().sum();
+            for j in 0..self.n {
+                l[(i, j)] = if i == j { deg - a[(i, j)] } else { -a[(i, j)] };
+            }
+        }
+        l
+    }
+
+    /// Random orientation of an undirected graph: each edge keeps or flips
+    /// direction with probability 1/2 (the Fig. 1 bottom-row construction).
+    pub fn randomly_directed(&self, rng: &mut Rng64) -> Graph {
+        assert!(!self.directed, "already directed");
+        let edges = self
+            .edges
+            .iter()
+            .map(|&(u, v)| if rng.bernoulli(0.5) { (u, v) } else { (v, u) })
+            .collect();
+        Graph { n: self.n, directed: true, edges }
+    }
+
+    /// Connectivity check via BFS over the undirected support.
+    pub fn is_connected(&self) -> bool {
+        if self.n == 0 {
+            return true;
+        }
+        let mut adj = vec![Vec::new(); self.n];
+        for &(u, v) in &self.edges {
+            adj[u].push(v);
+            adj[v].push(u);
+        }
+        let mut seen = vec![false; self.n];
+        let mut stack = vec![0usize];
+        seen[0] = true;
+        let mut count = 1;
+        while let Some(u) = stack.pop() {
+            for &v in &adj[u] {
+                if !seen[v] {
+                    seen[v] = true;
+                    count += 1;
+                    stack.push(v);
+                }
+            }
+        }
+        count == self.n
+    }
+
+    /// Delete uniformly-random edges until exactly `target` remain
+    /// (keeps a spanning structure best-effort by re-adding when the graph
+    /// would disconnect — cheap heuristic: deletions are accepted blindly,
+    /// which matches how the substitutes are used: only |E| matters).
+    pub fn trim_to_edges(&mut self, target: usize, rng: &mut Rng64) {
+        while self.edges.len() > target {
+            let k = rng.below(self.edges.len());
+            self.edges.swap_remove(k);
+        }
+    }
+
+    /// Add uniformly-random non-duplicate edges until `target` edges.
+    pub fn grow_to_edges(&mut self, target: usize, rng: &mut Rng64) {
+        use std::collections::HashSet;
+        let mut have: HashSet<(usize, usize)> = self.edges.iter().copied().collect();
+        let mut guard = 0usize;
+        while self.edges.len() < target {
+            guard += 1;
+            assert!(guard < 100 * target + 10_000, "grow_to_edges stuck");
+            let u = rng.below(self.n);
+            let v = rng.below(self.n);
+            if u == v {
+                continue;
+            }
+            let e = if self.directed || u < v { (u, v) } else { (v, u) };
+            if !self.directed && have.contains(&(e.1, e.0)) {
+                continue;
+            }
+            if have.insert(e) {
+                self.edges.push(e);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn laplacian_rows_sum_zero_undirected() {
+        let g = Graph::undirected_from_edges(4, vec![(0, 1), (1, 2), (2, 3), (3, 0)]);
+        let l = g.laplacian();
+        for i in 0..4 {
+            let s: f64 = l.row(i).iter().sum();
+            assert!(s.abs() < 1e-12);
+        }
+        assert_eq!(l.symmetry_defect(), 0.0);
+        assert_eq!(l[(0, 0)], 2.0);
+    }
+
+    #[test]
+    fn laplacian_psd_undirected() {
+        use crate::linalg::eigh;
+        let g = Graph::undirected_from_edges(6, vec![(0, 1), (1, 2), (2, 3), (3, 4), (4, 5), (0, 5), (1, 4)]);
+        let e = eigh(&g.laplacian());
+        for &v in &e.values {
+            assert!(v > -1e-10, "laplacian eigenvalue {v}");
+        }
+        // smallest eigenvalue ~ 0 with constant eigenvector
+        assert!(e.values.last().unwrap().abs() < 1e-10);
+    }
+
+    #[test]
+    fn directed_laplacian_row_sums() {
+        let g = Graph { n: 3, directed: true, edges: vec![(0, 1), (1, 2), (2, 0), (0, 2)] };
+        let l = g.laplacian();
+        for i in 0..3 {
+            let s: f64 = l.row(i).iter().sum();
+            assert!(s.abs() < 1e-12, "directed laplacian row sums zero (out-degree convention)");
+        }
+        assert_eq!(l[(0, 0)], 2.0); // out-degree of node 0
+    }
+
+    #[test]
+    fn dedup_and_selfloop_removal() {
+        let g = Graph::undirected_from_edges(3, vec![(0, 1), (1, 0), (2, 2), (1, 2)]);
+        assert_eq!(g.num_edges(), 2);
+    }
+
+    #[test]
+    fn random_orientation_preserves_edge_count() {
+        let mut rng = Rng64::new(91);
+        let g = Graph::undirected_from_edges(5, vec![(0, 1), (1, 2), (2, 3), (3, 4)]);
+        let d = g.randomly_directed(&mut rng);
+        assert!(d.directed);
+        assert_eq!(d.num_edges(), 4);
+    }
+
+    #[test]
+    fn connectivity() {
+        let g = Graph::undirected_from_edges(4, vec![(0, 1), (2, 3)]);
+        assert!(!g.is_connected());
+        let g2 = Graph::undirected_from_edges(4, vec![(0, 1), (1, 2), (2, 3)]);
+        assert!(g2.is_connected());
+    }
+
+    #[test]
+    fn trim_and_grow() {
+        let mut rng = Rng64::new(92);
+        let mut g = Graph::undirected_from_edges(10, (0..9).map(|i| (i, i + 1)));
+        g.grow_to_edges(20, &mut rng);
+        assert_eq!(g.num_edges(), 20);
+        // no duplicates
+        let mut es = g.edges.clone();
+        es.sort();
+        es.dedup();
+        assert_eq!(es.len(), 20);
+        g.trim_to_edges(5, &mut rng);
+        assert_eq!(g.num_edges(), 5);
+    }
+}

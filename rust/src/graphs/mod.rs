@@ -1,0 +1,19 @@
+//! Graph substrate: generators and Laplacians for the fast-GFT experiments.
+//!
+//! The paper evaluates on (i) synthetic families from the GSP toolbox —
+//! community, Erdős–Rényi and sensor graphs (Fig. 1) — and (ii) four
+//! real-world graphs — Minnesota roads, HumanProtein, Email, Facebook
+//! (Figs. 2, 3, 6). The real datasets are not redistributable here, so
+//! [`generators`] additionally provides *structure-matched substitutes*
+//! (same vertex count, same edge count, same topology class — see
+//! DESIGN.md §4): a planar road-like graph for Minnesota and
+//! preferential-attachment / sparse-community graphs for the others.
+
+mod generators;
+mod graph;
+
+pub use generators::{
+    barabasi_albert, community, erdos_renyi, grid, real_world_substitute, ring, road_like,
+    sensor, RealWorldGraph,
+};
+pub use graph::Graph;

@@ -1,0 +1,66 @@
+//! # fastes — fast approximate eigenspaces & fast graph Fourier transforms
+//!
+//! A production-oriented reproduction of
+//! *"Constructing fast approximate eigenspaces with application to the fast
+//! graph Fourier transforms"* (C. Rusu, L. Rosasco — IEEE TSP 2021).
+//!
+//! The library factors the eigenspace of a symmetric matrix `S` (or a
+//! general diagonalizable matrix `C`) into a fixed number of 2×2-supported
+//! butterflies:
+//!
+//! * **G-transforms** — extended orthonormal Givens transformations
+//!   (rotations *and* reflections), giving `S ≈ Ū diag(s̄) Ūᵀ` with
+//!   `Ū = G_g … G_1` and `O(g)` matrix–vector multiplication;
+//! * **T-transforms** — scalings and shears, giving
+//!   `C ≈ T̄ diag(c̄) T̄⁻¹` with `T̄ = T_m … T_1` and trivially invertible
+//!   factors.
+//!
+//! Both factorizations are computed by [`factor`]'s implementation of the
+//! paper's Algorithm 1 (closed-form locally-optimal initialization +
+//! iterative polishing), on top of a self-contained dense linear-algebra
+//! substrate in [`linalg`] (no LAPACK/BLAS dependency).
+//!
+//! The flagship application, the **fast graph Fourier transform**, lives in
+//! [`graphs`] (graph generators + Laplacians) and is served end-to-end by
+//! the tokio coordinator in [`serve`], which executes either the native
+//! rust butterfly fast-path from [`transforms`] or an AOT-compiled
+//! JAX/Pallas artifact through the PJRT runtime in [`runtime`].
+//!
+//! ## Layering (three-layer AOT architecture)
+//!
+//! ```text
+//! L3  rust   — this crate: factorization engine, coordinator, serving
+//! L2  jax    — python/compile/model.py: GFT compute graph (build-time)
+//! L1  pallas — python/compile/kernels/butterfly.py: butterfly kernel
+//! ```
+//!
+//! Python runs only at build time (`make artifacts`); the rust binary is
+//! self-contained afterwards.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use fastes::linalg::{Mat, Rng64};
+//! use fastes::factor::symmetric::{SymFactorizer, SymOptions};
+//!
+//! let mut rng = Rng64::new(7);
+//! let x = Mat::randn(64, 64, &mut rng);
+//! let s = &x + &x.transpose(); // symmetric target
+//! let opts = SymOptions::default();
+//! let fac = SymFactorizer::new(&s, 64 * 6, opts).run();
+//! println!("relative error {}", fac.relative_error(&s));
+//! ```
+
+pub mod baselines;
+pub mod bench_util;
+pub mod cli;
+pub mod factor;
+pub mod graphs;
+pub mod linalg;
+pub mod prop;
+pub mod runtime;
+pub mod serve;
+pub mod transforms;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

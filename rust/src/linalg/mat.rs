@@ -1,0 +1,552 @@
+//! Dense row-major `f64` matrix.
+//!
+//! Deliberately minimal: storage, element access, products, norms and the
+//! handful of structured operations the factorization engine needs
+//! (row/column rotations, rank-1 updates). Operations that are hot in the
+//! algorithms (conjugation by a 2×2-supported transform, rank-1 updates)
+//! have dedicated cache-friendly implementations here.
+
+use std::ops::{Add, Index, IndexMut, Mul, Neg, Sub};
+
+use super::rng::Rng64;
+
+/// Dense row-major matrix of `f64`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Mat {
+    /// All-zeros matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Identity matrix of order `n`.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Matrix from a row-major slice.
+    pub fn from_rows(rows: usize, cols: usize, data: &[f64]) -> Self {
+        assert_eq!(rows * cols, data.len(), "dimension mismatch");
+        Mat { rows, cols, data: data.to_vec() }
+    }
+
+    /// Matrix with i.i.d. standard-normal entries.
+    pub fn randn(rows: usize, cols: usize, rng: &mut Rng64) -> Self {
+        let mut m = Mat::zeros(rows, cols);
+        for v in m.data.iter_mut() {
+            *v = rng.randn();
+        }
+        m
+    }
+
+    /// Diagonal matrix from a vector.
+    pub fn from_diag(d: &[f64]) -> Self {
+        let mut m = Mat::zeros(d.len(), d.len());
+        for (i, &v) in d.iter().enumerate() {
+            m[(i, i)] = v;
+        }
+        m
+    }
+
+    /// Number of rows.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Number of columns.
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// `true` iff square.
+    #[inline]
+    pub fn is_square(&self) -> bool {
+        self.rows == self.cols
+    }
+
+    /// Raw row-major data.
+    #[inline]
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Mutable raw row-major data.
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Borrow row `i` as a slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Mutably borrow row `i` as a slice.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Copy of column `j`.
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        (0..self.rows).map(|i| self[(i, j)]).collect()
+    }
+
+    /// Diagonal as a vector (square or not: `min(rows, cols)` entries).
+    pub fn diag(&self) -> Vec<f64> {
+        (0..self.rows.min(self.cols)).map(|i| self[(i, i)]).collect()
+    }
+
+    /// Transpose.
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+
+    /// Matrix product `self * other` (naive triple loop with row-major
+    /// blocking via the k-loop-outer order, adequate for the sizes the
+    /// library handles; the *hot* paths never call dense gemm).
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul dimension mismatch");
+        let mut out = Mat::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            let ri = self.row(i);
+            let oi = out.row_mut(i);
+            for (k, &aik) in ri.iter().enumerate() {
+                if aik == 0.0 {
+                    continue;
+                }
+                let rk = &other.data[k * other.cols..(k + 1) * other.cols];
+                for (o, &b) in oi.iter_mut().zip(rk.iter()) {
+                    *o += aik * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// Matrix–vector product `self * x`.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, x.len(), "matvec dimension mismatch");
+        (0..self.rows)
+            .map(|i| self.row(i).iter().zip(x.iter()).map(|(a, b)| a * b).sum())
+            .collect()
+    }
+
+    /// `selfᵀ * x`.
+    pub fn tmatvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(self.rows, x.len(), "tmatvec dimension mismatch");
+        let mut out = vec![0.0; self.cols];
+        for (i, &xi) in x.iter().enumerate() {
+            if xi == 0.0 {
+                continue;
+            }
+            for (o, &a) in out.iter_mut().zip(self.row(i).iter()) {
+                *o += xi * a;
+            }
+        }
+        out
+    }
+
+    /// Squared Frobenius norm.
+    pub fn fro_norm_sq(&self) -> f64 {
+        self.data.iter().map(|v| v * v).sum()
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.fro_norm_sq().sqrt()
+    }
+
+    /// Frobenius inner product `⟨self, other⟩`.
+    pub fn fro_dot(&self, other: &Mat) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data.iter().zip(other.data.iter()).map(|(a, b)| a * b).sum()
+    }
+
+    /// Squared Frobenius distance `‖self − other‖²_F` without allocating.
+    pub fn fro_dist_sq(&self, other: &Mat) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum()
+    }
+
+    /// Max absolute entry.
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0f64, |m, v| m.max(v.abs()))
+    }
+
+    /// Symmetry defect `‖A − Aᵀ‖_∞`.
+    pub fn symmetry_defect(&self) -> f64 {
+        assert!(self.is_square());
+        let mut d = 0.0f64;
+        for i in 0..self.rows {
+            for j in (i + 1)..self.cols {
+                d = d.max((self[(i, j)] - self[(j, i)]).abs());
+            }
+        }
+        d
+    }
+
+    /// Force exact symmetry: `A ← (A + Aᵀ)/2`.
+    pub fn symmetrize(&mut self) {
+        assert!(self.is_square());
+        for i in 0..self.rows {
+            for j in (i + 1)..self.cols {
+                let v = 0.5 * (self[(i, j)] + self[(j, i)]);
+                self[(i, j)] = v;
+                self[(j, i)] = v;
+            }
+        }
+    }
+
+    /// Scale all entries in place.
+    pub fn scale(&mut self, a: f64) {
+        for v in self.data.iter_mut() {
+            *v *= a;
+        }
+    }
+
+    /// `self += a * other` (axpy).
+    pub fn axpy(&mut self, a: f64, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (s, o) in self.data.iter_mut().zip(other.data.iter()) {
+            *s += a * o;
+        }
+    }
+
+    /// Rank-1 update `self += a * u vᵀ`.
+    pub fn rank1_update(&mut self, a: f64, u: &[f64], v: &[f64]) {
+        assert_eq!(u.len(), self.rows);
+        assert_eq!(v.len(), self.cols);
+        for (i, &ui) in u.iter().enumerate() {
+            let c = a * ui;
+            if c == 0.0 {
+                continue;
+            }
+            for (s, &vj) in self.row_mut(i).iter_mut().zip(v.iter()) {
+                *s += c * vj;
+            }
+        }
+    }
+
+    // ----- structured operations used by the factorization engine -----
+
+    /// Apply a 2×2 block `[[g00,g01],[g10,g11]]` on the left to rows
+    /// `(i, j)`: `rows(i,j) ← G̃ · rows(i,j)`. `O(cols)`.
+    pub fn rotate_rows(&mut self, i: usize, j: usize, g00: f64, g01: f64, g10: f64, g11: f64) {
+        assert!(i != j && i < self.rows && j < self.rows);
+        let cols = self.cols;
+        let (lo, hi) = if i < j { (i, j) } else { (j, i) };
+        let (a, b) = self.data.split_at_mut(hi * cols);
+        let row_lo = &mut a[lo * cols..lo * cols + cols];
+        let row_hi = &mut b[..cols];
+        let (row_i, row_j): (&mut [f64], &mut [f64]) =
+            if i < j { (row_lo, row_hi) } else { (row_hi, row_lo) };
+        for (vi, vj) in row_i.iter_mut().zip(row_j.iter_mut()) {
+            let a = *vi;
+            let b = *vj;
+            *vi = g00 * a + g01 * b;
+            *vj = g10 * a + g11 * b;
+        }
+    }
+
+    /// Apply a 2×2 block on the right to columns `(i, j)`:
+    /// `cols(i,j) ← cols(i,j) · G̃ᵀ`, i.e. for every row `r`:
+    /// `(A_ri, A_rj) ← (g00·A_ri + g01·A_rj, g10·A_ri + g11·A_rj)`.
+    ///
+    /// Note this matches `A ← A · G̃ᵀ`; to compute `A · G̃` pass the
+    /// transposed block.
+    pub fn rotate_cols(&mut self, i: usize, j: usize, g00: f64, g01: f64, g10: f64, g11: f64) {
+        assert!(i != j && i < self.cols && j < self.cols);
+        let cols = self.cols;
+        for r in 0..self.rows {
+            let base = r * cols;
+            let a = self.data[base + i];
+            let b = self.data[base + j];
+            self.data[base + i] = g00 * a + g01 * b;
+            self.data[base + j] = g10 * a + g11 * b;
+        }
+    }
+
+    /// `row(i) += a * row(j)` (shear on the left).
+    pub fn add_row(&mut self, i: usize, j: usize, a: f64) {
+        assert!(i != j);
+        let cols = self.cols;
+        let (lo, hi) = if i < j { (i, j) } else { (j, i) };
+        let (x, y) = self.data.split_at_mut(hi * cols);
+        let row_lo = &mut x[lo * cols..lo * cols + cols];
+        let row_hi = &mut y[..cols];
+        let (dst, src): (&mut [f64], &[f64]) =
+            if i < j { (row_lo, row_hi) } else { (row_hi, row_lo) };
+        for (d, s) in dst.iter_mut().zip(src.iter()) {
+            *d += a * s;
+        }
+    }
+
+    /// `col(i) += a * col(j)` (shear on the right).
+    pub fn add_col(&mut self, i: usize, j: usize, a: f64) {
+        assert!(i != j);
+        for r in 0..self.rows {
+            let base = r * self.cols;
+            self.data[base + i] += a * self.data[base + j];
+        }
+    }
+
+    /// `row(i) *= a`.
+    pub fn scale_row(&mut self, i: usize, a: f64) {
+        for v in self.row_mut(i) {
+            *v *= a;
+        }
+    }
+
+    /// `col(j) *= a`.
+    pub fn scale_col(&mut self, j: usize, a: f64) {
+        for r in 0..self.rows {
+            self.data[r * self.cols + j] *= a;
+        }
+    }
+
+    /// Squared 2-norm of row `i`.
+    pub fn row_norm_sq(&self, i: usize) -> f64 {
+        self.row(i).iter().map(|v| v * v).sum()
+    }
+
+    /// Squared 2-norm of column `j`.
+    pub fn col_norm_sq(&self, j: usize) -> f64 {
+        (0..self.rows).map(|i| self[(i, j)] * self[(i, j)]).sum()
+    }
+
+    /// Off-diagonal squared Frobenius norm (Jacobi's `off(A)²`).
+    pub fn off_diag_sq(&self) -> f64 {
+        assert!(self.is_square());
+        let mut s = 0.0;
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                if i != j {
+                    s += self[(i, j)] * self[(i, j)];
+                }
+            }
+        }
+        s
+    }
+}
+
+impl Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl Add for &Mat {
+    type Output = Mat;
+    fn add(self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let mut out = self.clone();
+        out.axpy(1.0, other);
+        out
+    }
+}
+
+impl Sub for &Mat {
+    type Output = Mat;
+    fn sub(self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let mut out = self.clone();
+        out.axpy(-1.0, other);
+        out
+    }
+}
+
+impl Mul for &Mat {
+    type Output = Mat;
+    fn mul(self, other: &Mat) -> Mat {
+        self.matmul(other)
+    }
+}
+
+impl Neg for &Mat {
+    type Output = Mat;
+    fn neg(self) -> Mat {
+        let mut out = self.clone();
+        out.scale(-1.0);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_matmul() {
+        let mut rng = Rng64::new(1);
+        let a = Mat::randn(5, 5, &mut rng);
+        let i = Mat::eye(5);
+        assert!(a.matmul(&i).fro_dist_sq(&a) < 1e-24);
+        assert!(i.matmul(&a).fro_dist_sq(&a) < 1e-24);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Mat::from_rows(2, 2, &[1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::from_rows(2, 2, &[1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.as_slice(), &[3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn transpose_involutive() {
+        let mut rng = Rng64::new(2);
+        let a = Mat::randn(4, 7, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let mut rng = Rng64::new(3);
+        let a = Mat::randn(6, 4, &mut rng);
+        let x = Mat::randn(4, 1, &mut rng);
+        let via_mm = a.matmul(&x);
+        let via_mv = a.matvec(x.as_slice());
+        for i in 0..6 {
+            assert!((via_mm[(i, 0)] - via_mv[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn tmatvec_matches_transpose() {
+        let mut rng = Rng64::new(4);
+        let a = Mat::randn(6, 4, &mut rng);
+        let x: Vec<f64> = (0..6).map(|i| i as f64 - 2.5).collect();
+        let expect = a.transpose().matvec(&x);
+        let got = a.tmatvec(&x);
+        for (e, g) in expect.iter().zip(got.iter()) {
+            assert!((e - g).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn rotate_rows_matches_explicit() {
+        let mut rng = Rng64::new(5);
+        let a = Mat::randn(5, 5, &mut rng);
+        let (c, s) = (0.8, 0.6);
+        // explicit G with rotation block at (1,3)
+        let mut g = Mat::eye(5);
+        g[(1, 1)] = c;
+        g[(1, 3)] = s;
+        g[(3, 1)] = -s;
+        g[(3, 3)] = c;
+        let expect = g.matmul(&a);
+        let mut got = a.clone();
+        got.rotate_rows(1, 3, c, s, -s, c);
+        assert!(got.fro_dist_sq(&expect) < 1e-24);
+    }
+
+    #[test]
+    fn rotate_cols_matches_explicit() {
+        let mut rng = Rng64::new(6);
+        let a = Mat::randn(5, 5, &mut rng);
+        let (c, s) = (0.28, -0.96);
+        let mut g = Mat::eye(5);
+        g[(2, 2)] = c;
+        g[(2, 4)] = s;
+        g[(4, 2)] = -s;
+        g[(4, 4)] = c;
+        // rotate_cols computes A·G̃ᵀ
+        let expect = a.matmul(&g.transpose());
+        let mut got = a.clone();
+        got.rotate_cols(2, 4, c, s, -s, c);
+        assert!(got.fro_dist_sq(&expect) < 1e-24);
+    }
+
+    #[test]
+    fn shear_rows_cols() {
+        let mut rng = Rng64::new(7);
+        let a = Mat::randn(4, 4, &mut rng);
+        // T = I + 1.5 * e_0 e_2ᵀ on the left
+        let mut t = Mat::eye(4);
+        t[(0, 2)] = 1.5;
+        let expect = t.matmul(&a);
+        let mut got = a.clone();
+        got.add_row(0, 2, 1.5);
+        assert!(got.fro_dist_sq(&expect) < 1e-24);
+
+        let expect = a.matmul(&t);
+        let mut got = a.clone();
+        got.add_col(2, 0, 1.5); // col 2 += 1.5 * col 0  ⇔ A(I + 1.5 e0 e2ᵀ)
+        assert!(got.fro_dist_sq(&expect) < 1e-24);
+    }
+
+    #[test]
+    fn rank1_update_matches() {
+        let mut rng = Rng64::new(8);
+        let mut a = Mat::randn(3, 4, &mut rng);
+        let u = [1.0, -2.0, 0.5];
+        let v = [0.0, 1.0, 2.0, -1.0];
+        let mut expect = a.clone();
+        for i in 0..3 {
+            for j in 0..4 {
+                expect[(i, j)] += 0.7 * u[i] * v[j];
+            }
+        }
+        a.rank1_update(0.7, &u, &v);
+        assert!(a.fro_dist_sq(&expect) < 1e-24);
+    }
+
+    #[test]
+    fn norms() {
+        let a = Mat::from_rows(2, 2, &[3.0, 0.0, 0.0, 4.0]);
+        assert!((a.fro_norm() - 5.0).abs() < 1e-12);
+        assert_eq!(a.max_abs(), 4.0);
+        assert_eq!(a.off_diag_sq(), 0.0);
+    }
+
+    #[test]
+    fn symmetrize_works() {
+        let mut a = Mat::from_rows(2, 2, &[1.0, 2.0, 4.0, 1.0]);
+        assert!(a.symmetry_defect() > 1.0);
+        a.symmetrize();
+        assert_eq!(a.symmetry_defect(), 0.0);
+        assert_eq!(a[(0, 1)], 3.0);
+    }
+
+    #[test]
+    fn diag_and_from_diag() {
+        let d = [1.0, 2.0, 3.0];
+        let m = Mat::from_diag(&d);
+        assert_eq!(m.diag(), d.to_vec());
+        assert_eq!(m.fro_norm_sq(), 14.0);
+    }
+}

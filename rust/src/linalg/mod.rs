@@ -1,0 +1,29 @@
+//! Dense linear-algebra substrate.
+//!
+//! The paper's algorithms need a small but complete set of dense kernels:
+//! matrix storage and products, a symmetric eigensolver (for the reference
+//! graph Fourier transforms and the 2×2 Procrustes solutions), polynomial
+//! root finding (for the T-transform quartic/quintic score minimizations)
+//! and a sphere-constrained least-squares solver (for the G-transform
+//! update of Theorem 2). Everything is implemented from scratch — no BLAS /
+//! LAPACK — so the crate is fully self-contained and auditable.
+
+mod complex;
+mod eig;
+mod mat;
+mod poly;
+mod procrustes;
+mod rng;
+mod solve;
+mod sphere_ls;
+mod stats;
+
+pub use complex::Complex64;
+pub use eig::{eigh, general_eigenvalues, Eigh};
+pub use mat::Mat;
+pub use poly::{cubic_roots, polish_root, quartic_roots, real_roots, RootPolishResult};
+pub use procrustes::{procrustes2_rotation, sym2_eig, two_sided_procrustes2, Sym2Eig};
+pub use rng::Rng64;
+pub use solve::{polyfit_exact, solve_linear};
+pub use sphere_ls::{min_quadratic_on_circle, CircleMin};
+pub use stats::{mean, mean_std, percentile};

@@ -1,0 +1,366 @@
+//! Real roots of low-degree polynomials.
+//!
+//! The T-transform score minimizations (Theorems 3–4) reduce to minimizing
+//! quartic polynomials (shears) or quartic rational functions (scalings)
+//! in the transform coefficient `a`; their stationary points are roots of
+//! cubic/quartic polynomials. Those run inside the `O(n²)`-pair sweep, so
+//! they use closed forms (Cardano / Ferrari). A companion-matrix fallback
+//! handles arbitrary degree for validation and the quintic edge cases.
+
+use super::eig::general_eigenvalues;
+use super::mat::Mat;
+
+/// Result of polishing a root with Newton's method.
+#[derive(Clone, Copy, Debug)]
+pub struct RootPolishResult {
+    /// The polished root.
+    pub x: f64,
+    /// |p(x)| at the polished root.
+    pub residual: f64,
+}
+
+/// Real roots of `c0 + c1 x + c2 x² + c3 x³` (any leading zeros allowed).
+pub fn cubic_roots(c0: f64, c1: f64, c2: f64, c3: f64) -> Vec<f64> {
+    if c3.abs() < 1e-300 {
+        return quadratic_roots(c0, c1, c2);
+    }
+    // normalized: x³ + a x² + b x + c
+    let a = c2 / c3;
+    let b = c1 / c3;
+    let c = c0 / c3;
+    // depressed cubic t³ + p t + q with x = t − a/3
+    let p = b - a * a / 3.0;
+    let q = 2.0 * a * a * a / 27.0 - a * b / 3.0 + c;
+    let shift = -a / 3.0;
+    let disc = (q / 2.0) * (q / 2.0) + (p / 3.0) * (p / 3.0) * (p / 3.0);
+    let mut roots = Vec::with_capacity(3);
+    if disc > 0.0 {
+        // one real root (Cardano)
+        let sd = disc.sqrt();
+        let u = cbrt(-q / 2.0 + sd);
+        let v = cbrt(-q / 2.0 - sd);
+        roots.push(u + v + shift);
+    } else if disc == 0.0 {
+        if q == 0.0 && p == 0.0 {
+            roots.push(shift);
+        } else {
+            let u = cbrt(-q / 2.0);
+            roots.push(2.0 * u + shift);
+            roots.push(-u + shift);
+        }
+    } else {
+        // three real roots (trigonometric form)
+        let r = (-p / 3.0).sqrt();
+        let phi = (-q / (2.0 * r * r * r)).clamp(-1.0, 1.0).acos();
+        for k in 0..3 {
+            roots.push(2.0 * r * ((phi + 2.0 * std::f64::consts::PI * k as f64) / 3.0).cos() + shift);
+        }
+    }
+    // one Newton step each for accuracy
+    roots
+        .into_iter()
+        .map(|x| newton_step_poly(&[c0, c1, c2, c3], x))
+        .collect()
+}
+
+/// Real roots of `c0 + c1 x + c2 x²`.
+pub fn quadratic_roots(c0: f64, c1: f64, c2: f64) -> Vec<f64> {
+    if c2.abs() < 1e-300 {
+        if c1.abs() < 1e-300 {
+            return vec![];
+        }
+        return vec![-c0 / c1];
+    }
+    let disc = c1 * c1 - 4.0 * c2 * c0;
+    if disc < 0.0 {
+        return vec![];
+    }
+    let sq = disc.sqrt();
+    // numerically stable form
+    let q = -0.5 * (c1 + c1.signum() * sq);
+    if q == 0.0 {
+        return vec![0.0];
+    }
+    let r1 = q / c2;
+    let r2 = c0 / q;
+    if (r1 - r2).abs() < 1e-14 * (1.0 + r1.abs()) {
+        vec![r1]
+    } else {
+        vec![r1, r2]
+    }
+}
+
+/// Real roots of `c0 + c1 x + c2 x² + c3 x³ + c4 x⁴` via Ferrari's
+/// resolvent-cubic method, with a Newton polish per root.
+pub fn quartic_roots(c0: f64, c1: f64, c2: f64, c3: f64, c4: f64) -> Vec<f64> {
+    if c4.abs() < 1e-300 {
+        return cubic_roots(c0, c1, c2, c3);
+    }
+    // normalize: x⁴ + a x³ + b x² + c x + d
+    let a = c3 / c4;
+    let b = c2 / c4;
+    let c = c1 / c4;
+    let d = c0 / c4;
+    // depressed quartic y⁴ + p y² + q y + r, x = y − a/4
+    let p = b - 3.0 * a * a / 8.0;
+    let q = c - a * b / 2.0 + a * a * a / 8.0;
+    let r = d - a * c / 4.0 + a * a * b / 16.0 - 3.0 * a * a * a * a / 256.0;
+    let shift = -a / 4.0;
+    let coeffs = [c0, c1, c2, c3, c4];
+    let mut roots = Vec::with_capacity(4);
+    if q.abs() < 1e-12 * (1.0 + p.abs() + r.abs()) {
+        // biquadratic: y⁴ + p y² + r = 0
+        for z in quadratic_roots(r, p, 1.0) {
+            if z >= 0.0 {
+                let s = z.sqrt();
+                roots.push(s + shift);
+                if s > 0.0 {
+                    roots.push(-s + shift);
+                }
+            }
+        }
+    } else {
+        // resolvent cubic: m³ + p m² + (p²/4 − r) m − q²/8 = 0; need m > 0
+        let res = cubic_roots(-q * q / 8.0, p * p / 4.0 - r, p, 1.0);
+        let m = res
+            .into_iter()
+            .filter(|&m| m > 1e-300)
+            .fold(f64::NEG_INFINITY, f64::max);
+        if m.is_finite() && m > 0.0 {
+            let sqrt2m = (2.0 * m).sqrt();
+            // two quadratics: y² ± √(2m) y + (p/2 + m ∓ q/(2√(2m)))
+            for &sign in &[1.0f64, -1.0] {
+                let bq = sign * sqrt2m;
+                let cq = p / 2.0 + m - sign * q / (2.0 * sqrt2m);
+                for y in quadratic_roots(cq, bq, 1.0) {
+                    roots.push(y + shift);
+                }
+            }
+        }
+    }
+    let mut out: Vec<f64> = roots
+        .into_iter()
+        .map(|x| newton_step_poly(&coeffs, x))
+        .map(|x| newton_step_poly(&coeffs, x))
+        .collect();
+    out.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    out.dedup_by(|a, b| (*a - *b).abs() < 1e-10 * (1.0 + a.abs()));
+    out
+}
+
+/// Real roots of an arbitrary-degree polynomial `Σ coeffs[k] x^k` via the
+/// companion-matrix eigenvalues. `imag_tol` filters nearly-real roots.
+pub fn real_roots(coeffs: &[f64], imag_tol: f64) -> Vec<f64> {
+    // strip trailing (leading-coefficient) zeros
+    let mut deg = coeffs.len();
+    while deg > 0 && coeffs[deg - 1].abs() < 1e-300 {
+        deg -= 1;
+    }
+    if deg <= 1 {
+        return vec![];
+    }
+    let n = deg - 1; // polynomial degree
+    match n {
+        1 => return vec![-coeffs[0] / coeffs[1]],
+        2 => return quadratic_roots(coeffs[0], coeffs[1], coeffs[2]),
+        3 => return cubic_roots(coeffs[0], coeffs[1], coeffs[2], coeffs[3]),
+        _ => {}
+    }
+    let lead = coeffs[n];
+    let mut comp = Mat::zeros(n, n);
+    for k in 0..n {
+        comp[(0, k)] = -coeffs[n - 1 - k] / lead;
+    }
+    for k in 1..n {
+        comp[(k, k - 1)] = 1.0;
+    }
+    let mut out: Vec<f64> = general_eigenvalues(&comp)
+        .into_iter()
+        .filter(|z| z.im.abs() <= imag_tol * (1.0 + z.re.abs()))
+        .map(|z| newton_step_poly(&coeffs[..deg], z.re))
+        .collect();
+    out.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    out
+}
+
+/// Evaluate polynomial `Σ coeffs[k] x^k` (Horner).
+pub fn eval_poly(coeffs: &[f64], x: f64) -> f64 {
+    coeffs.iter().rev().fold(0.0, |acc, &c| acc * x + c)
+}
+
+/// Evaluate the derivative.
+pub fn eval_dpoly(coeffs: &[f64], x: f64) -> f64 {
+    let mut acc = 0.0;
+    for k in (1..coeffs.len()).rev() {
+        acc = acc * x + coeffs[k] * k as f64;
+    }
+    acc
+}
+
+fn newton_step_poly(coeffs: &[f64], x: f64) -> f64 {
+    let d = eval_dpoly(coeffs, x);
+    if d.abs() < 1e-300 {
+        return x;
+    }
+    let step = eval_poly(coeffs, x) / d;
+    if step.is_finite() {
+        x - step
+    } else {
+        x
+    }
+}
+
+/// Newton-polish a root of an arbitrary function given value/derivative
+/// closures (used by the trust-region secular equation).
+pub fn polish_root(
+    f: impl Fn(f64) -> f64,
+    df: impl Fn(f64) -> f64,
+    mut x: f64,
+    iters: usize,
+) -> RootPolishResult {
+    for _ in 0..iters {
+        let v = f(x);
+        let d = df(x);
+        if d.abs() < 1e-300 {
+            break;
+        }
+        let step = v / d;
+        if !step.is_finite() || step.abs() < 1e-16 * (1.0 + x.abs()) {
+            break;
+        }
+        x -= step;
+    }
+    RootPolishResult { x, residual: f(x).abs() }
+}
+
+fn cbrt(x: f64) -> f64 {
+    x.cbrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_roots_close(mut got: Vec<f64>, mut want: Vec<f64>, tol: f64) {
+        got.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        want.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(got.len(), want.len(), "got {got:?}, want {want:?}");
+        for (g, w) in got.iter().zip(want.iter()) {
+            assert!((g - w).abs() < tol * (1.0 + w.abs()), "got {got:?}, want {want:?}");
+        }
+    }
+
+    fn from_roots(roots: &[f64]) -> Vec<f64> {
+        // expand ∏(x − r)
+        let mut c = vec![1.0];
+        for &r in roots {
+            let mut nc = vec![0.0; c.len() + 1];
+            for (k, &ck) in c.iter().enumerate() {
+                nc[k + 1] += ck;
+                nc[k] -= r * ck;
+            }
+            c = nc;
+        }
+        c
+    }
+
+    #[test]
+    fn quadratic_basic() {
+        assert_roots_close(quadratic_roots(-6.0, 1.0, 1.0), vec![2.0, -3.0], 1e-12);
+        assert!(quadratic_roots(1.0, 0.0, 1.0).is_empty()); // x²+1
+        assert_roots_close(quadratic_roots(-2.0, 2.0, 0.0), vec![1.0], 1e-12); // linear
+    }
+
+    #[test]
+    fn cubic_three_real() {
+        let c = from_roots(&[1.0, 2.0, 3.0]);
+        assert_roots_close(cubic_roots(c[0], c[1], c[2], c[3]), vec![1.0, 2.0, 3.0], 1e-9);
+    }
+
+    #[test]
+    fn cubic_one_real() {
+        // (x−2)(x²+1) = x³ − 2x² + x − 2
+        let got = cubic_roots(-2.0, 1.0, -2.0, 1.0);
+        assert_roots_close(got, vec![2.0], 1e-10);
+    }
+
+    #[test]
+    fn cubic_repeated() {
+        // (x−1)²(x−4)
+        let c = from_roots(&[1.0, 1.0, 4.0]);
+        let got = cubic_roots(c[0], c[1], c[2], c[3]);
+        assert!(got.iter().any(|r| (r - 4.0).abs() < 1e-8), "{got:?}");
+        assert!(got.iter().any(|r| (r - 1.0).abs() < 1e-6), "{got:?}");
+    }
+
+    #[test]
+    fn quartic_four_real() {
+        let c = from_roots(&[-2.0, -0.5, 1.0, 3.0]);
+        assert_roots_close(
+            quartic_roots(c[0], c[1], c[2], c[3], c[4]),
+            vec![-2.0, -0.5, 1.0, 3.0],
+            1e-8,
+        );
+    }
+
+    #[test]
+    fn quartic_two_real() {
+        // (x−1)(x+2)(x²+x+1)
+        let real = from_roots(&[1.0, -2.0]);
+        // multiply by (x²+x+1)
+        let mut c = vec![0.0; 5];
+        for (k, &rk) in real.iter().enumerate() {
+            c[k] += rk;
+            c[k + 1] += rk;
+            c[k + 2] += rk;
+        }
+        assert_roots_close(quartic_roots(c[0], c[1], c[2], c[3], c[4]), vec![-2.0, 1.0], 1e-8);
+    }
+
+    #[test]
+    fn quartic_biquadratic() {
+        // x⁴ − 5x² + 4 = (x²−1)(x²−4)
+        assert_roots_close(
+            quartic_roots(4.0, 0.0, -5.0, 0.0, 1.0),
+            vec![-2.0, -1.0, 1.0, 2.0],
+            1e-10,
+        );
+    }
+
+    #[test]
+    fn quartic_no_real() {
+        // (x²+1)(x²+4)
+        let got = quartic_roots(4.0, 0.0, 5.0, 0.0, 1.0);
+        assert!(got.is_empty(), "{got:?}");
+    }
+
+    #[test]
+    fn companion_matches_closed_form() {
+        let c = from_roots(&[-1.5, 0.25, 2.0, 5.0]);
+        let via_comp = real_roots(&c, 1e-8);
+        assert_roots_close(via_comp, vec![-1.5, 0.25, 2.0, 5.0], 1e-7);
+    }
+
+    #[test]
+    fn companion_quintic() {
+        let c = from_roots(&[-3.0, -1.0, 0.5, 2.0, 4.0]);
+        let got = real_roots(&c, 1e-8);
+        assert_roots_close(got, vec![-3.0, -1.0, 0.5, 2.0, 4.0], 1e-6);
+    }
+
+    #[test]
+    fn eval_and_derivative() {
+        // p(x) = 1 + 2x + 3x²
+        assert_eq!(eval_poly(&[1.0, 2.0, 3.0], 2.0), 17.0);
+        assert_eq!(eval_dpoly(&[1.0, 2.0, 3.0], 2.0), 14.0);
+    }
+
+    #[test]
+    fn polish_converges() {
+        let f = |x: f64| x * x - 2.0;
+        let df = |x: f64| 2.0 * x;
+        let r = polish_root(f, df, 1.0, 20);
+        assert!((r.x - 2f64.sqrt()).abs() < 1e-12);
+        assert!(r.residual < 1e-12);
+    }
+}

@@ -1,0 +1,242 @@
+//! 2×2 spectral building blocks: closed-form symmetric eigendecomposition,
+//! the two-sided orthonormal Procrustes solution used by Theorem 1, and the
+//! one-sided (polar) Procrustes used by the direct-eigenspace baselines.
+
+/// Closed-form eigendecomposition of a symmetric 2×2 matrix
+/// `[[a, b], [b, c]]`.
+#[derive(Clone, Copy, Debug)]
+pub struct Sym2Eig {
+    /// Larger eigenvalue.
+    pub l1: f64,
+    /// Smaller eigenvalue.
+    pub l2: f64,
+    /// Unit eigenvector for `l1` (column 1 of `V`).
+    pub v1: [f64; 2],
+    /// Unit eigenvector for `l2` (column 2 of `V`).
+    pub v2: [f64; 2],
+}
+
+/// Eigendecomposition of `[[a, b], [b, c]]` with `l1 ≥ l2` and orthonormal
+/// eigenvectors.
+pub fn sym2_eig(a: f64, b: f64, c: f64) -> Sym2Eig {
+    let half_tr = 0.5 * (a + c);
+    let half_diff = 0.5 * (a - c);
+    let rad = half_diff.hypot(b);
+    let l1 = half_tr + rad;
+    let l2 = half_tr - rad;
+    // eigenvector for l1: proportional to (b, l1 − a) or (l1 − c, b);
+    // pick the better-conditioned of the two.
+    let (mut v1, degenerate) = if b.abs() > 1e-300 {
+        if half_diff >= 0.0 {
+            ([l1 - c, b], false)
+        } else {
+            ([b, l1 - a], false)
+        }
+    } else {
+        (if a >= c { [1.0, 0.0] } else { [0.0, 1.0] }, true)
+    };
+    let norm = (v1[0] * v1[0] + v1[1] * v1[1]).sqrt();
+    if norm > 0.0 && !degenerate {
+        v1 = [v1[0] / norm, v1[1] / norm];
+    }
+    let v2 = [-v1[1], v1[0]];
+    Sym2Eig { l1, l2, v1, v2 }
+}
+
+/// Solution of the two-sided orthonormal Procrustes problem of Theorem 1:
+/// find the 2×2 orthonormal `G̃` maximizing
+/// `tr(G̃ · S · G̃ᵀ · diag(s))` for symmetric `S = [[s_ii, s_ij], [s_ij, s_jj]]`
+/// and targets `(t_i, t_j)`.
+///
+/// Returns the row-major `G̃ = Vᵀ` (eigenvectors ordered so the larger
+/// eigenvalue of `S` pairs with the larger target — the rearrangement
+/// inequality) and the score gain
+/// `𝒜 = t·λ (optimally paired) − (t_i·s_ii + t_j·s_jj)`,
+/// i.e. by how much `tr` improves over the identity transform. The overall
+/// objective (34) decreases by exactly `2𝒜`.
+pub fn two_sided_procrustes2(
+    s_ii: f64,
+    s_ij: f64,
+    s_jj: f64,
+    t_i: f64,
+    t_j: f64,
+) -> ([[f64; 2]; 2], f64) {
+    let e = sym2_eig(s_ii, s_ij, s_jj);
+    // pair larger eigenvalue with larger target
+    let (ci, cj) = if t_i >= t_j { (e.v1, e.v2) } else { (e.v2, e.v1) };
+    let (li, lj) = if t_i >= t_j { (e.l1, e.l2) } else { (e.l2, e.l1) };
+    // G̃ = Vᵀ where V = [ci cj] (columns)
+    let g = [[ci[0], ci[1]], [cj[0], cj[1]]];
+    let gain = t_i * li + t_j * lj - (t_i * s_ii + t_j * s_jj);
+    (g, gain)
+}
+
+/// One-sided orthonormal Procrustes for 2×2 blocks: the orthonormal `G`
+/// maximizing `tr(Gᵀ M)` (equivalently minimizing `‖G − M‖_F`), i.e. the
+/// orthogonal polar factor of `M`. If `allow_reflection` is false the
+/// result is constrained to `det G = +1` (plain rotation).
+pub fn procrustes2_rotation(m: [[f64; 2]; 2], allow_reflection: bool) -> [[f64; 2]; 2] {
+    // Closed-form via the rotation/reflection decomposition:
+    //   best rotation:    angle θ_r = atan2(m01 − m10, m00 + m11)
+    //   best reflection:  angle θ_f = atan2(m01 + m10, m00 − m11)
+    let tr_rot = {
+        let x = m[0][0] + m[1][1];
+        let y = m[0][1] - m[1][0];
+        x.hypot(y)
+    };
+    let rot = {
+        let x = m[0][0] + m[1][1];
+        let y = m[0][1] - m[1][0];
+        let n = x.hypot(y);
+        if n < 1e-300 {
+            [[1.0, 0.0], [0.0, 1.0]]
+        } else {
+            let c = x / n;
+            let s = y / n;
+            [[c, s], [-s, c]]
+        }
+    };
+    if !allow_reflection {
+        return rot;
+    }
+    let tr_ref = {
+        let x = m[0][0] - m[1][1];
+        let y = m[0][1] + m[1][0];
+        x.hypot(y)
+    };
+    if tr_rot >= tr_ref {
+        rot
+    } else {
+        let x = m[0][0] - m[1][1];
+        let y = m[0][1] + m[1][0];
+        let n = x.hypot(y);
+        if n < 1e-300 {
+            [[1.0, 0.0], [0.0, -1.0]]
+        } else {
+            let c = x / n;
+            let s = y / n;
+            [[c, s], [s, -c]]
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::rng::Rng64;
+
+    fn mat2_mul(a: [[f64; 2]; 2], b: [[f64; 2]; 2]) -> [[f64; 2]; 2] {
+        let mut c = [[0.0; 2]; 2];
+        for i in 0..2 {
+            for j in 0..2 {
+                for k in 0..2 {
+                    c[i][j] += a[i][k] * b[k][j];
+                }
+            }
+        }
+        c
+    }
+
+    fn transpose2(a: [[f64; 2]; 2]) -> [[f64; 2]; 2] {
+        [[a[0][0], a[1][0]], [a[0][1], a[1][1]]]
+    }
+
+    fn is_orthonormal2(g: [[f64; 2]; 2]) -> bool {
+        let gt = transpose2(g);
+        let p = mat2_mul(g, gt);
+        (p[0][0] - 1.0).abs() < 1e-12
+            && (p[1][1] - 1.0).abs() < 1e-12
+            && p[0][1].abs() < 1e-12
+            && p[1][0].abs() < 1e-12
+    }
+
+    #[test]
+    fn sym2_diagonalizes() {
+        let mut rng = Rng64::new(21);
+        for _ in 0..200 {
+            let a = rng.randn();
+            let b = rng.randn();
+            let c = rng.randn();
+            let e = sym2_eig(a, b, c);
+            assert!(e.l1 >= e.l2);
+            // V diag(l) Vᵀ reconstructs
+            let v = [[e.v1[0], e.v2[0]], [e.v1[1], e.v2[1]]];
+            assert!(is_orthonormal2(v), "v not orthonormal");
+            let d = [[e.l1, 0.0], [0.0, e.l2]];
+            let r = mat2_mul(mat2_mul(v, d), transpose2(v));
+            assert!((r[0][0] - a).abs() < 1e-10, "{:?}", (a, b, c));
+            assert!((r[0][1] - b).abs() < 1e-10);
+            assert!((r[1][1] - c).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn sym2_diagonal_input() {
+        let e = sym2_eig(5.0, 0.0, -3.0);
+        assert_eq!(e.l1, 5.0);
+        assert_eq!(e.l2, -3.0);
+        assert_eq!(e.v1, [1.0, 0.0]);
+    }
+
+    #[test]
+    fn procrustes2_gain_is_optimal() {
+        // compare against dense angle scan over rotations and reflections
+        let mut rng = Rng64::new(22);
+        for _ in 0..100 {
+            let (a, b, c) = (rng.randn(), rng.randn(), rng.randn());
+            let (ti, tj) = (rng.randn(), rng.randn());
+            let (g, gain) = two_sided_procrustes2(a, b, c, ti, tj);
+            assert!(is_orthonormal2(g));
+            let s = [[a, b], [b, c]];
+            let tr_of = |g: [[f64; 2]; 2]| {
+                let m = mat2_mul(mat2_mul(g, s), transpose2(g));
+                ti * m[0][0] + tj * m[1][1]
+            };
+            let base = ti * a + tj * c;
+            assert!((tr_of(g) - base - gain).abs() < 1e-9, "gain formula");
+            // scan
+            let mut best = f64::NEG_INFINITY;
+            for k in 0..2000 {
+                let th = 2.0 * std::f64::consts::PI * k as f64 / 2000.0;
+                let (sn, cs) = th.sin_cos();
+                best = best.max(tr_of([[cs, sn], [-sn, cs]]));
+                best = best.max(tr_of([[cs, sn], [sn, -cs]]));
+            }
+            assert!(tr_of(g) >= best - 1e-4, "procrustes not optimal: {} < {best}", tr_of(g));
+            // and never worse than identity
+            assert!(gain >= -1e-12);
+        }
+    }
+
+    #[test]
+    fn polar_factor_is_optimal() {
+        let mut rng = Rng64::new(23);
+        for _ in 0..100 {
+            let m = [[rng.randn(), rng.randn()], [rng.randn(), rng.randn()]];
+            let g = procrustes2_rotation(m, true);
+            assert!(is_orthonormal2(g));
+            let tr_of = |g: [[f64; 2]; 2]| {
+                g[0][0] * m[0][0] + g[1][0] * m[1][0] + g[0][1] * m[0][1] + g[1][1] * m[1][1]
+            };
+            let mut best = f64::NEG_INFINITY;
+            for k in 0..2000 {
+                let th = 2.0 * std::f64::consts::PI * k as f64 / 2000.0;
+                let (sn, cs) = th.sin_cos();
+                best = best.max(tr_of([[cs, sn], [-sn, cs]]));
+                best = best.max(tr_of([[cs, sn], [sn, -cs]]));
+            }
+            assert!(tr_of(g) >= best - 1e-4);
+        }
+    }
+
+    #[test]
+    fn rotation_only_constraint() {
+        let mut rng = Rng64::new(24);
+        for _ in 0..50 {
+            let m = [[rng.randn(), rng.randn()], [rng.randn(), rng.randn()]];
+            let g = procrustes2_rotation(m, false);
+            let det = g[0][0] * g[1][1] - g[0][1] * g[1][0];
+            assert!((det - 1.0).abs() < 1e-12, "det {det}");
+        }
+    }
+}

@@ -1,0 +1,124 @@
+//! Dense linear solves (Gaussian elimination with partial pivoting) and a
+//! small exact polynomial fit used by the T-transform score machinery.
+
+use super::mat::Mat;
+
+/// Solve `A x = b` by Gaussian elimination with partial pivoting.
+/// Returns `None` when `A` is numerically singular.
+pub fn solve_linear(a: &Mat, b: &[f64]) -> Option<Vec<f64>> {
+    assert!(a.is_square());
+    let n = a.rows();
+    assert_eq!(b.len(), n);
+    let mut m = a.clone();
+    let mut x = b.to_vec();
+    for col in 0..n {
+        // pivot
+        let mut piv = col;
+        let mut best = m[(col, col)].abs();
+        for r in (col + 1)..n {
+            if m[(r, col)].abs() > best {
+                best = m[(r, col)].abs();
+                piv = r;
+            }
+        }
+        if best < 1e-300 {
+            return None;
+        }
+        if piv != col {
+            for c in 0..n {
+                let t = m[(piv, c)];
+                m[(piv, c)] = m[(col, c)];
+                m[(col, c)] = t;
+            }
+            x.swap(piv, col);
+        }
+        let d = m[(col, col)];
+        for r in (col + 1)..n {
+            let f = m[(r, col)] / d;
+            if f == 0.0 {
+                continue;
+            }
+            m[(r, col)] = 0.0;
+            for c in (col + 1)..n {
+                let delta = f * m[(col, c)];
+                m[(r, c)] -= delta;
+            }
+            x[r] -= f * x[col];
+        }
+    }
+    // back substitution
+    for col in (0..n).rev() {
+        let mut v = x[col];
+        for c in (col + 1)..n {
+            v -= m[(col, c)] * x[c];
+        }
+        x[col] = v / m[(col, col)];
+    }
+    Some(x)
+}
+
+/// Fit the unique polynomial of degree `≤ d` through `d+1` samples
+/// `(xs[k], ys[k])` (Vandermonde solve). Returns coefficients
+/// `c[0] + c[1]·x + …` or `None` when the sample points coincide.
+pub fn polyfit_exact(xs: &[f64], ys: &[f64]) -> Option<Vec<f64>> {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len();
+    let mut v = Mat::zeros(n, n);
+    for (r, &x) in xs.iter().enumerate() {
+        let mut p = 1.0;
+        for c in 0..n {
+            v[(r, c)] = p;
+            p *= x;
+        }
+    }
+    solve_linear(&v, ys)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::rng::Rng64;
+
+    #[test]
+    fn solve_identity() {
+        let a = Mat::eye(4);
+        let b = [1.0, 2.0, 3.0, 4.0];
+        let x = solve_linear(&a, &b).unwrap();
+        assert_eq!(x, b.to_vec());
+    }
+
+    #[test]
+    fn solve_random_roundtrip() {
+        let mut rng = Rng64::new(111);
+        for n in [1usize, 2, 5, 20] {
+            let a = Mat::randn(n, n, &mut rng);
+            let xtrue: Vec<f64> = (0..n).map(|_| rng.randn()).collect();
+            let b = a.matvec(&xtrue);
+            let x = solve_linear(&a, &b).unwrap();
+            for (u, v) in x.iter().zip(xtrue.iter()) {
+                assert!((u - v).abs() < 1e-8, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn solve_singular_returns_none() {
+        let a = Mat::from_rows(2, 2, &[1.0, 2.0, 2.0, 4.0]);
+        assert!(solve_linear(&a, &[1.0, 1.0]).is_none());
+    }
+
+    #[test]
+    fn polyfit_recovers_coefficients() {
+        // p(x) = 2 − x + 0.5x² + 3x³
+        let coeffs = [2.0, -1.0, 0.5, 3.0];
+        let xs = [-2.0, -1.0, 1.0, 2.0];
+        let ys: Vec<f64> = xs
+            .iter()
+            .map(|&x| coeffs.iter().rev().fold(0.0, |acc, &c| acc * x + c))
+            .collect();
+        let fit = polyfit_exact(&xs, &ys).unwrap();
+        for (f, c) in fit.iter().zip(coeffs.iter()) {
+            assert!((f - c).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,211 @@
+//! Sphere-constrained quadratic minimization (the Theorem 2 subproblem).
+//!
+//! Theorem 2 reduces the optimal update of a G-transform to
+//!
+//! ```text
+//! minimize  xᵀ R x + 2 gᵀ x    subject to  ‖x‖₂ = 1,   x ∈ ℝ²
+//! ```
+//!
+//! a constrained least-squares / trust-region-boundary problem
+//! (Gander, Golub & von Matt 1989). The paper solves it through a 4×4
+//! generalized eigenvalue pencil; we use the equivalent and numerically
+//! friendlier *secular equation*: with `R = Q diag(r) Qᵀ`, `g̃ = Qᵀ g`, the
+//! minimizer is `x = −(R + λI)⁻¹ g` where `λ ≥ −min(r)` is the unique root
+//! of `φ(λ) = Σ g̃ᵢ²/(rᵢ+λ)² − 1` on that interval (plus the classical
+//! "hard case" when `g̃` has no component along the minimal eigenvector).
+
+use super::procrustes::sym2_eig;
+
+/// Minimizer of `xᵀRx + 2gᵀx` on the unit circle.
+#[derive(Clone, Copy, Debug)]
+pub struct CircleMin {
+    /// The minimizing unit vector.
+    pub x: [f64; 2],
+    /// The minimum objective value `xᵀRx + 2gᵀx`.
+    pub value: f64,
+    /// The Lagrange multiplier λ.
+    pub lambda: f64,
+}
+
+/// Solve `min_{‖x‖=1} xᵀ R x + 2 gᵀ x` for symmetric
+/// `R = [[r00, r01], [r01, r11]]`.
+pub fn min_quadratic_on_circle(r00: f64, r01: f64, r11: f64, g: [f64; 2]) -> CircleMin {
+    let e = sym2_eig(r00, r01, r11);
+    // rotated coordinates: columns of Q are (v1, v2); order so r[0] ≤ r[1]
+    let (rmin, rmax, qmin, qmax) = (e.l2, e.l1, e.v2, e.v1);
+    let g0 = qmin[0] * g[0] + qmin[1] * g[1]; // component along min eigvec
+    let g1 = qmax[0] * g[0] + qmax[1] * g[1];
+    let scale = 1.0 + rmin.abs() + rmax.abs() + g0.abs() + g1.abs();
+    let tiny = 1e-14 * scale;
+
+    let y_from_lambda = |lam: f64| -> [f64; 2] {
+        [-g0 / (rmin + lam), -g1 / (rmax + lam)]
+    };
+    let phi = |lam: f64| -> f64 {
+        let y = y_from_lambda(lam);
+        y[0] * y[0] + y[1] * y[1] - 1.0
+    };
+
+    let y = if g0.abs() <= tiny && g1.abs() <= tiny {
+        // pure quadratic: minimizer is the eigenvector of the min eigenvalue
+        [1.0, 0.0]
+    } else if g0.abs() <= tiny {
+        // potential hard case: g has no component along the min eigenvector
+        let gap = rmax - rmin;
+        if gap > tiny && (g1 / gap).abs() <= 1.0 {
+            // λ = −rmin; free component along the min eigenvector
+            let y1 = -g1 / gap;
+            let y0 = (1.0 - y1 * y1).max(0.0).sqrt();
+            [y0, y1]
+        } else {
+            // interior secular root exists: g1²/(rmax+λ)² = 1, λ ≥ −rmin
+            let lam = g1.abs() - rmax;
+            let y = y_from_lambda(lam);
+            // normalize defensively
+            let n = (y[0] * y[0] + y[1] * y[1]).sqrt();
+            if n > 0.0 {
+                [y[0] / n, y[1] / n]
+            } else {
+                [0.0, -g1.signum()]
+            }
+        }
+    } else {
+        // generic case: bisection + Newton on φ over (−rmin, ∞)
+        // expand hi until φ(hi) < 0
+        let mut hi = -rmin + scale.max(g0.hypot(g1));
+        for _ in 0..200 {
+            if phi(hi) < 0.0 {
+                break;
+            }
+            hi = -rmin + 2.0 * (hi + rmin);
+        }
+        // make sure lo is on the positive side; step in until finite
+        let mut step = (hi + rmin) * 0.5;
+        while phi(-rmin + step) < 0.0 && step > 1e-300 {
+            hi = -rmin + step;
+            step *= 0.5;
+        }
+        let mut lo = -rmin + step.max(1e-300);
+        if phi(lo) < 0.0 {
+            // g0 tiny-but-not-flagged: λ → −rmin is the answer
+            lo = -rmin;
+        }
+        let mut lam = 0.5 * (lo + hi);
+        for _ in 0..100 {
+            let v = phi(lam);
+            if v > 0.0 {
+                lo = lam;
+            } else {
+                hi = lam;
+            }
+            lam = 0.5 * (lo + hi);
+            if (hi - lo) <= 1e-15 * (1.0 + lam.abs()) {
+                break;
+            }
+        }
+        let y = y_from_lambda(lam);
+        let n = (y[0] * y[0] + y[1] * y[1]).sqrt();
+        [y[0] / n, y[1] / n]
+    };
+
+    // map back: x = Q y = y0 * qmin + y1 * qmax
+    let x = [
+        y[0] * qmin[0] + y[1] * qmax[0],
+        y[0] * qmin[1] + y[1] * qmax[1],
+    ];
+    let value = quad_value(r00, r01, r11, g, x);
+    // recover λ for diagnostics: (R+λI)x = −g ⇒ λ = (−g − Rx)·x
+    let rx = [r00 * x[0] + r01 * x[1], r01 * x[0] + r11 * x[1]];
+    let lambda = (-g[0] - rx[0]) * x[0] + (-g[1] - rx[1]) * x[1];
+    CircleMin { x, value, lambda }
+}
+
+/// Objective value `xᵀRx + 2gᵀx`.
+pub fn quad_value(r00: f64, r01: f64, r11: f64, g: [f64; 2], x: [f64; 2]) -> f64 {
+    r00 * x[0] * x[0] + 2.0 * r01 * x[0] * x[1] + r11 * x[1] * x[1]
+        + 2.0 * (g[0] * x[0] + g[1] * x[1])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::rng::Rng64;
+
+    /// Brute-force oracle: dense scan over the circle + local refinement.
+    fn brute(r00: f64, r01: f64, r11: f64, g: [f64; 2]) -> f64 {
+        let mut best = f64::INFINITY;
+        let n = 20000;
+        for k in 0..n {
+            let th = 2.0 * std::f64::consts::PI * k as f64 / n as f64;
+            let x = [th.cos(), th.sin()];
+            best = best.min(quad_value(r00, r01, r11, g, x));
+        }
+        best
+    }
+
+    #[test]
+    fn matches_brute_force_random() {
+        let mut rng = Rng64::new(31);
+        for _ in 0..300 {
+            let (a, b, c) = (rng.randn(), rng.randn(), rng.randn());
+            let g = [rng.randn(), rng.randn()];
+            let m = min_quadratic_on_circle(a, b, c, g);
+            let norm = (m.x[0] * m.x[0] + m.x[1] * m.x[1]).sqrt();
+            assert!((norm - 1.0).abs() < 1e-9, "‖x‖ = {norm}");
+            let bf = brute(a, b, c, g);
+            assert!(
+                m.value <= bf + 1e-6 * (1.0 + bf.abs()),
+                "secular {} vs brute {bf} for R=[[{a},{b}],[{b},{c}]], g={g:?}",
+                m.value
+            );
+        }
+    }
+
+    #[test]
+    fn zero_linear_term_gives_min_eigvec() {
+        let m = min_quadratic_on_circle(3.0, 0.0, 1.0, [0.0, 0.0]);
+        // min eigenvalue 1 with eigenvector e2
+        assert!((m.value - 1.0).abs() < 1e-12);
+        assert!(m.x[0].abs() < 1e-9);
+    }
+
+    #[test]
+    fn hard_case_exact() {
+        // R = diag(1, 3), g = (0, 0.5): component along min eigvec is zero
+        // and |g1/(r2−r1)| = 0.25 ≤ 1 → the hard case branch
+        let m = min_quadratic_on_circle(1.0, 0.0, 3.0, [0.0, 0.5]);
+        let bf = brute(1.0, 0.0, 3.0, [0.0, 0.5]);
+        assert!(m.value <= bf + 1e-7, "{} vs {bf}", m.value);
+    }
+
+    #[test]
+    fn hard_case_large_g() {
+        // g1 big enough that the interior root takes over
+        let m = min_quadratic_on_circle(1.0, 0.0, 3.0, [0.0, 10.0]);
+        let bf = brute(1.0, 0.0, 3.0, [0.0, 10.0]);
+        assert!(m.value <= bf + 1e-6, "{} vs {bf}", m.value);
+        // minimizer should be close to (0, -1)
+        assert!(m.x[1] < -0.99, "{:?}", m.x);
+    }
+
+    #[test]
+    fn isotropic_r() {
+        // R = 2I: objective = 2 + 2gᵀx, minimized at x = −g/‖g‖
+        let m = min_quadratic_on_circle(2.0, 0.0, 2.0, [3.0, 4.0]);
+        assert!((m.x[0] + 0.6).abs() < 1e-9 && (m.x[1] + 0.8).abs() < 1e-9, "{:?}", m.x);
+        assert!((m.value - (2.0 - 10.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn scale_invariance_structure() {
+        let mut rng = Rng64::new(32);
+        for _ in 0..50 {
+            let (a, b, c) = (rng.randn(), rng.randn(), rng.randn());
+            let g = [rng.randn(), rng.randn()];
+            let m1 = min_quadratic_on_circle(a, b, c, g);
+            let s = 37.5;
+            let m2 = min_quadratic_on_circle(s * a, s * b, s * c, [s * g[0], s * g[1]]);
+            assert!((m1.value * s - m2.value).abs() < 1e-6 * (1.0 + m2.value.abs()));
+        }
+    }
+}

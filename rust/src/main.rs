@@ -1,0 +1,15 @@
+//! `fastes` binary entrypoint — see [`fastes::cli`].
+
+fn main() {
+    let args = match fastes::cli::Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = fastes::cli::run(args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

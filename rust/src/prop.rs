@@ -1,0 +1,88 @@
+//! Minimal property-testing harness (proptest is unavailable in this
+//! environment's offline crate snapshot — see Cargo.toml).
+//!
+//! [`forall`] runs a property over `cases` seeded random inputs produced
+//! by a generator closure; on failure it reports the seed and the case
+//! index so the exact input can be reproduced by re-running with that
+//! seed. A greedy "shrink by regeneration at smaller size" pass is
+//! provided through the optional size parameter handed to the generator.
+
+use crate::linalg::Rng64;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct PropConfig {
+    /// Number of random cases.
+    pub cases: usize,
+    /// Base seed; case `k` uses `seed + k`.
+    pub seed: u64,
+    /// Maximum "size" passed to the generator (scaled up over the run).
+    pub max_size: usize,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig { cases: 64, seed: 0xFA57E5, max_size: 24 }
+    }
+}
+
+/// Run `property` over random inputs from `generate`. The generator gets
+/// an RNG and a size hint that ramps from 2 to `max_size` over the run
+/// (small cases first — cheap shrinking by construction). The property
+/// returns `Err(reason)` to fail.
+///
+/// Panics with a reproduction line on the first failing case.
+pub fn forall<T: std::fmt::Debug>(
+    name: &str,
+    cfg: PropConfig,
+    mut generate: impl FnMut(&mut Rng64, usize) -> T,
+    mut property: impl FnMut(&T) -> Result<(), String>,
+) {
+    for k in 0..cfg.cases {
+        let seed = cfg.seed.wrapping_add(k as u64);
+        let mut rng = Rng64::new(seed);
+        let size = 2 + (cfg.max_size.saturating_sub(2)) * k / cfg.cases.max(1);
+        let input = generate(&mut rng, size);
+        if let Err(reason) = property(&input) {
+            panic!(
+                "property '{name}' failed at case {k}/{} (seed {seed}, size {size}): {reason}\ninput: {input:?}",
+                cfg.cases
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall(
+            "reverse-reverse is identity",
+            PropConfig { cases: 32, ..Default::default() },
+            |rng, size| (0..size).map(|_| rng.next_u64()).collect::<Vec<_>>(),
+            |xs| {
+                let mut twice = xs.clone();
+                twice.reverse();
+                twice.reverse();
+                if &twice == xs {
+                    Ok(())
+                } else {
+                    Err("mismatch".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_context() {
+        forall(
+            "always fails",
+            PropConfig { cases: 4, ..Default::default() },
+            |rng, _| rng.next_u64(),
+            |_| Err("nope".into()),
+        );
+    }
+}

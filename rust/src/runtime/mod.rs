@@ -1,0 +1,324 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them.
+//!
+//! The build-time python pipeline (`make artifacts`) lowers the L2 JAX
+//! model (which calls the L1 Pallas butterfly kernel) to **HLO text** and
+//! writes `artifacts/manifest.txt` + one `.hlo.txt` per artifact. This
+//! module is the only place that touches PJRT: it parses the manifest,
+//! compiles artifacts on the CPU PJRT client (once, cached), and exposes a
+//! typed [`GftEngine::execute`] that the serving coordinator calls on its
+//! hot path. Python is never involved at runtime.
+//!
+//! The transform *plan* (butterfly indices/values) is an artifact *input*,
+//! so a single compiled executable serves every factorization with the
+//! same `(n, g, batch)` shape; shorter plans are padded with identity
+//! stages.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context};
+
+use crate::transforms::{PlanArrays, SignalBlock};
+
+/// Artifact kinds produced by `python/compile/aot.py`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ArtifactKind {
+    /// Forward GFT `x̂ = Ūᵀ x`.
+    GftFwd,
+    /// Inverse GFT `x = Ū x̂`.
+    GftInv,
+    /// Spectral filter `y = Ū diag(h) Ūᵀ x`.
+    GraphFilter,
+}
+
+impl ArtifactKind {
+    /// Manifest string form.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ArtifactKind::GftFwd => "gft_fwd",
+            ArtifactKind::GftInv => "gft_inv",
+            ArtifactKind::GraphFilter => "graph_filter",
+        }
+    }
+
+    fn parse(s: &str) -> Option<Self> {
+        match s {
+            "gft_fwd" => Some(ArtifactKind::GftFwd),
+            "gft_inv" => Some(ArtifactKind::GftInv),
+            "graph_filter" => Some(ArtifactKind::GraphFilter),
+            _ => None,
+        }
+    }
+}
+
+/// One entry of `artifacts/manifest.txt`.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    /// Unique artifact name.
+    pub name: String,
+    /// Computation kind.
+    pub kind: ArtifactKind,
+    /// Signal dimension.
+    pub n: usize,
+    /// Plan length the executable was compiled for.
+    pub g: usize,
+    /// Batch size the executable was compiled for.
+    pub batch: usize,
+    /// HLO text file, relative to the manifest directory.
+    pub file: String,
+}
+
+/// Parse `artifacts/manifest.txt`.
+///
+/// Format: one record per line —
+/// `artifact <name> kind=<kind> n=<n> g=<g> batch=<b> file=<path>`;
+/// `#` comments and blank lines are ignored.
+pub fn parse_manifest(path: &Path) -> crate::Result<Vec<ArtifactMeta>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading manifest {}", path.display()))?;
+    let mut out = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let tag = parts.next().unwrap_or("");
+        if tag != "artifact" {
+            bail!("manifest line {}: expected 'artifact', got '{tag}'", lineno + 1);
+        }
+        let name = parts
+            .next()
+            .ok_or_else(|| anyhow!("manifest line {}: missing name", lineno + 1))?
+            .to_string();
+        let mut kv: HashMap<&str, &str> = HashMap::new();
+        for p in parts {
+            let (k, v) = p
+                .split_once('=')
+                .ok_or_else(|| anyhow!("manifest line {}: bad pair '{p}'", lineno + 1))?;
+            kv.insert(k, v);
+        }
+        let get = |k: &str| -> crate::Result<&str> {
+            kv.get(k)
+                .copied()
+                .ok_or_else(|| anyhow!("manifest line {}: missing {k}", lineno + 1))
+        };
+        out.push(ArtifactMeta {
+            kind: ArtifactKind::parse(get("kind")?)
+                .ok_or_else(|| anyhow!("manifest line {}: bad kind", lineno + 1))?,
+            n: get("n")?.parse().context("n")?,
+            g: get("g")?.parse().context("g")?,
+            batch: get("batch")?.parse().context("batch")?,
+            file: get("file")?.to_string(),
+            name,
+        });
+    }
+    Ok(out)
+}
+
+/// A compiled artifact bound to a PJRT client.
+pub struct GftEngine {
+    meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Artifact store: owns the PJRT client and the compiled executables.
+pub struct ArtifactStore {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Vec<ArtifactMeta>,
+    compiled: HashMap<String, GftEngine>,
+}
+
+impl ArtifactStore {
+    /// Open the artifact directory (expects `manifest.txt` inside) on the
+    /// CPU PJRT client.
+    pub fn open(dir: &Path) -> crate::Result<Self> {
+        let manifest = parse_manifest(&dir.join("manifest.txt"))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(ArtifactStore { client, dir: dir.to_path_buf(), manifest, compiled: HashMap::new() })
+    }
+
+    /// All manifest entries.
+    pub fn manifest(&self) -> &[ArtifactMeta] {
+        &self.manifest
+    }
+
+    /// Find an artifact by kind and shape.
+    pub fn find(&self, kind: ArtifactKind, n: usize, batch: usize) -> Option<&ArtifactMeta> {
+        self.manifest.iter().find(|m| m.kind == kind && m.n == n && m.batch == batch)
+    }
+
+    /// Find an artifact with plan capacity at least `g`.
+    pub fn find_with_capacity(
+        &self,
+        kind: ArtifactKind,
+        n: usize,
+        batch: usize,
+        g: usize,
+    ) -> Option<&ArtifactMeta> {
+        self.manifest
+            .iter()
+            .filter(|m| m.kind == kind && m.n == n && m.batch == batch && m.g >= g)
+            .min_by_key(|m| m.g)
+    }
+
+    /// Compile (or fetch the cached) engine for a named artifact.
+    pub fn engine(&mut self, name: &str) -> crate::Result<&GftEngine> {
+        if !self.compiled.contains_key(name) {
+            let meta = self
+                .manifest
+                .iter()
+                .find(|m| m.name == name)
+                .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?
+                .clone();
+            let path = self.dir.join(&meta.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("loading {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+            self.compiled.insert(name.to_string(), GftEngine { meta, exe });
+        }
+        Ok(&self.compiled[name])
+    }
+}
+
+impl GftEngine {
+    /// Artifact metadata.
+    pub fn meta(&self) -> &ArtifactMeta {
+        &self.meta
+    }
+
+    /// Execute on a signal block (layout `(n, batch)`), returning a new
+    /// block. `filter` is required for [`ArtifactKind::GraphFilter`] and
+    /// ignored otherwise. The plan may be shorter than the compiled `g`
+    /// (identity padding) but not longer; the block's `n`/`batch` must
+    /// match the artifact exactly (the coordinator pads batches).
+    pub fn execute(
+        &self,
+        plan: &PlanArrays,
+        block: &SignalBlock,
+        filter: Option<&[f32]>,
+    ) -> crate::Result<SignalBlock> {
+        let m = &self.meta;
+        if plan.n != m.n || block.n != m.n {
+            bail!("plan/block n mismatch: plan {} block {} artifact {}", plan.n, block.n, m.n);
+        }
+        if block.batch != m.batch {
+            bail!("batch mismatch: block {} artifact {}", block.batch, m.batch);
+        }
+        if plan.len() > m.g {
+            bail!("plan too long: {} > artifact capacity {}", plan.len(), m.g);
+        }
+
+        // pad plan to g with identity stages (rotation c=1, s=0)
+        let g = m.g;
+        let mut ii = vec![0i32; g];
+        let mut jj = vec![1i32; g];
+        let mut c = vec![1f32; g];
+        let mut s = vec![0f32; g];
+        let mut sigma = vec![1f32; g];
+        for k in 0..plan.len() {
+            ii[k] = plan.idx_i[k];
+            jj[k] = plan.idx_j[k];
+            c[k] = plan.p0[k];
+            s[k] = plan.p1[k];
+            sigma[k] = if plan.kind[k] >= 0 { 1.0 } else { -1.0 };
+        }
+
+        // signal literal: (batch, n) row-major — transpose of SignalBlock
+        let mut x = vec![0f32; m.batch * m.n];
+        for b in 0..m.batch {
+            for i in 0..m.n {
+                x[b * m.n + i] = block.data[i * block.batch + b];
+            }
+        }
+        let to_lit_err = |e: xla::Error| anyhow!("literal: {e:?}");
+        let x_lit = xla::Literal::vec1(&x)
+            .reshape(&[m.batch as i64, m.n as i64])
+            .map_err(to_lit_err)?;
+        let ii_lit = xla::Literal::vec1(&ii);
+        let jj_lit = xla::Literal::vec1(&jj);
+        let c_lit = xla::Literal::vec1(&c);
+        let s_lit = xla::Literal::vec1(&s);
+        let sg_lit = xla::Literal::vec1(&sigma);
+
+        let mut inputs = vec![x_lit, ii_lit, jj_lit, c_lit, s_lit, sg_lit];
+        if m.kind == ArtifactKind::GraphFilter {
+            let h = filter.ok_or_else(|| anyhow!("graph_filter artifact needs a filter"))?;
+            if h.len() != m.n {
+                bail!("filter length {} != n {}", h.len(), m.n);
+            }
+            inputs.push(xla::Literal::vec1(h));
+        }
+
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&inputs)
+            .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        // lowered with return_tuple=True → 1-tuple
+        let out = result.to_tuple1().map_err(|e| anyhow!("tuple: {e:?}"))?;
+        let y: Vec<f32> = out.to_vec().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+        if y.len() != m.batch * m.n {
+            bail!("unexpected output size {} (want {})", y.len(), m.batch * m.n);
+        }
+        // back to (n, batch)
+        let mut outb = SignalBlock::zeros(m.n, m.batch);
+        for b in 0..m.batch {
+            for i in 0..m.n {
+                outb.data[i * m.batch + b] = y[b * m.n + i];
+            }
+        }
+        Ok(outb)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    #[test]
+    fn manifest_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("fastes_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("manifest.txt");
+        let mut f = std::fs::File::create(&path).unwrap();
+        writeln!(f, "# comment").unwrap();
+        writeln!(f).unwrap();
+        writeln!(f, "artifact a1 kind=gft_fwd n=16 g=48 batch=4 file=a1.hlo.txt").unwrap();
+        writeln!(f, "artifact a2 kind=graph_filter n=128 g=1792 batch=8 file=a2.hlo.txt").unwrap();
+        let m = parse_manifest(&path).unwrap();
+        assert_eq!(m.len(), 2);
+        assert_eq!(m[0].kind, ArtifactKind::GftFwd);
+        assert_eq!(m[0].n, 16);
+        assert_eq!(m[1].batch, 8);
+        assert_eq!(m[1].file, "a2.hlo.txt");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn manifest_rejects_garbage() {
+        let dir = std::env::temp_dir().join(format!("fastes_manifest_bad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("manifest.txt");
+        std::fs::write(&path, "nonsense line\n").unwrap();
+        assert!(parse_manifest(&path).is_err());
+        std::fs::write(&path, "artifact x kind=unknown n=1 g=1 batch=1 file=f\n").unwrap();
+        assert!(parse_manifest(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn kind_string_roundtrip() {
+        for k in [ArtifactKind::GftFwd, ArtifactKind::GftInv, ArtifactKind::GraphFilter] {
+            assert_eq!(ArtifactKind::parse(k.as_str()), Some(k));
+        }
+        assert_eq!(ArtifactKind::parse("nope"), None);
+    }
+}

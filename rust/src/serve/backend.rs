@@ -1,0 +1,238 @@
+//! Serving backends: native rust butterflies or a PJRT artifact.
+
+use anyhow::bail;
+
+use crate::runtime::{ArtifactKind, ArtifactStore};
+use crate::transforms::{
+    apply_gchain_batch_f32, apply_gchain_batch_f32_t, batch::SignalBlock, PlanArrays,
+};
+
+/// Which direction of the transform the backend serves.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransformDirection {
+    /// Analysis / forward GFT: `x̂ = Ūᵀ x`.
+    Forward,
+    /// Synthesis / inverse GFT: `x = Ū x̂`.
+    Inverse,
+    /// Spectral filtering: `y = Ū diag(h) Ūᵀ x`.
+    Filter,
+}
+
+/// A batch-transform execution engine. Lives entirely on the worker
+/// thread (constructed there by the [`super::Coordinator::start`]
+/// factory), so it need not be `Send`.
+pub trait Backend {
+    /// Signal dimension.
+    fn n(&self) -> usize;
+    /// Maximum (= compiled) batch size.
+    fn max_batch(&self) -> usize;
+    /// Transform the block in place (columns beyond the live batch are
+    /// padding and may hold anything).
+    fn forward(&mut self, block: &mut SignalBlock) -> crate::Result<()>;
+    /// Diagnostic name.
+    fn name(&self) -> &str;
+}
+
+/// Native rust butterfly fast path (the Fig.-6 "C implementation"
+/// analogue).
+pub struct NativeGftBackend {
+    plan: PlanArrays,
+    direction: TransformDirection,
+    max_batch: usize,
+    /// Spectral filter diagonal (Filter direction only).
+    filter: Option<Vec<f32>>,
+}
+
+impl NativeGftBackend {
+    /// New backend over a G-chain plan.
+    pub fn new(
+        plan: PlanArrays,
+        direction: TransformDirection,
+        max_batch: usize,
+        filter: Option<Vec<f32>>,
+    ) -> Self {
+        if direction == TransformDirection::Filter {
+            assert!(filter.as_ref().is_some_and(|h| h.len() == plan.n), "filter length mismatch");
+        }
+        NativeGftBackend { plan, direction, max_batch, filter }
+    }
+}
+
+impl Backend for NativeGftBackend {
+    fn n(&self) -> usize {
+        self.plan.n
+    }
+
+    fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    fn forward(&mut self, block: &mut SignalBlock) -> crate::Result<()> {
+        if block.n != self.plan.n {
+            bail!("block n {} != plan n {}", block.n, self.plan.n);
+        }
+        match self.direction {
+            TransformDirection::Forward => apply_gchain_batch_f32_t(&self.plan, block),
+            TransformDirection::Inverse => apply_gchain_batch_f32(&self.plan, block),
+            TransformDirection::Filter => {
+                let h = self.filter.as_ref().expect("checked in new");
+                apply_gchain_batch_f32_t(&self.plan, block);
+                for i in 0..block.n {
+                    let hi = h[i];
+                    let b = block.batch;
+                    for v in &mut block.data[i * b..(i + 1) * b] {
+                        *v *= hi;
+                    }
+                }
+                apply_gchain_batch_f32(&self.plan, block);
+            }
+        }
+        Ok(())
+    }
+
+    fn name(&self) -> &str {
+        "native-gft"
+    }
+}
+
+/// PJRT-artifact backend: executes the AOT-compiled JAX/Pallas program.
+pub struct PjrtGftBackend {
+    store: ArtifactStore,
+    artifact: String,
+    plan: PlanArrays,
+    filter: Option<Vec<f32>>,
+    n: usize,
+    batch: usize,
+}
+
+impl PjrtGftBackend {
+    /// Bind a plan to a compatible artifact from `store` (matching kind /
+    /// n / batch, with plan capacity ≥ the plan length). Compiles eagerly
+    /// so the request path never pays compilation.
+    pub fn new(
+        mut store: ArtifactStore,
+        direction: TransformDirection,
+        plan: PlanArrays,
+        batch: usize,
+        filter: Option<Vec<f32>>,
+    ) -> crate::Result<Self> {
+        let kind = match direction {
+            TransformDirection::Forward => ArtifactKind::GftFwd,
+            TransformDirection::Inverse => ArtifactKind::GftInv,
+            TransformDirection::Filter => ArtifactKind::GraphFilter,
+        };
+        let meta = store
+            .find_with_capacity(kind, plan.n, batch, plan.len())
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "no artifact for kind={} n={} batch={batch} g≥{}",
+                    kind.as_str(),
+                    plan.n,
+                    plan.len()
+                )
+            })?
+            .clone();
+        if kind == ArtifactKind::GraphFilter && filter.as_ref().map_or(true, |h| h.len() != plan.n)
+        {
+            bail!("graph_filter backend needs a length-n filter");
+        }
+        store.engine(&meta.name)?; // compile now
+        Ok(PjrtGftBackend {
+            store,
+            artifact: meta.name,
+            n: plan.n,
+            batch,
+            plan,
+            filter,
+        })
+    }
+}
+
+impl Backend for PjrtGftBackend {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn max_batch(&self) -> usize {
+        self.batch
+    }
+
+    fn forward(&mut self, block: &mut SignalBlock) -> crate::Result<()> {
+        let engine = self.store.engine(&self.artifact)?;
+        let out = engine.execute(&self.plan, block, self.filter.as_deref())?;
+        *block = out;
+        Ok(())
+    }
+
+    fn name(&self) -> &str {
+        "pjrt-gft"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Rng64;
+    use crate::transforms::{GChain, GKind, GTransform};
+
+    fn random_plan(n: usize, g: usize, seed: u64) -> PlanArrays {
+        let mut rng = Rng64::new(seed);
+        let mut ch = GChain::identity(n);
+        for _ in 0..g {
+            let i = rng.below(n - 1);
+            let j = i + 1 + rng.below(n - 1 - i);
+            let th = rng.uniform_in(0.0, std::f64::consts::TAU);
+            let kind = if rng.bernoulli(0.5) { GKind::Rotation } else { GKind::Reflection };
+            ch.transforms.push(GTransform::new(i, j, th.cos(), th.sin(), kind));
+        }
+        ch.to_plan()
+    }
+
+    #[test]
+    fn native_forward_then_inverse_is_identity() {
+        let plan = random_plan(8, 20, 601);
+        let mut fwd = NativeGftBackend::new(plan.clone(), TransformDirection::Forward, 4, None);
+        let mut inv = NativeGftBackend::new(plan, TransformDirection::Inverse, 4, None);
+        let mut rng = Rng64::new(602);
+        let sig: Vec<f32> = (0..8).map(|_| rng.randn() as f32).collect();
+        let mut block = SignalBlock::from_signals(&vec![sig.clone(); 4]);
+        fwd.forward(&mut block).unwrap();
+        inv.forward(&mut block).unwrap();
+        for (a, b) in sig.iter().zip(block.signal(0).iter()) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn filter_all_ones_is_identity() {
+        let plan = random_plan(6, 15, 603);
+        let mut f = NativeGftBackend::new(
+            plan,
+            TransformDirection::Filter,
+            2,
+            Some(vec![1.0; 6]),
+        );
+        let sig: Vec<f32> = (0..6).map(|i| i as f32).collect();
+        let mut block = SignalBlock::from_signals(&vec![sig.clone(); 2]);
+        f.forward(&mut block).unwrap();
+        for (a, b) in sig.iter().zip(block.signal(0).iter()) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn filter_zero_annihilates() {
+        let plan = random_plan(5, 10, 604);
+        let mut f = NativeGftBackend::new(
+            plan,
+            TransformDirection::Filter,
+            1,
+            Some(vec![0.0; 5]),
+        );
+        let mut block = SignalBlock::from_signals(&[vec![1.0, -2.0, 3.0, 0.5, 4.0]]);
+        f.forward(&mut block).unwrap();
+        for v in block.signal(0) {
+            assert!(v.abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,134 @@
+//! Serving metrics: latency samples, batch occupancy, error counts.
+
+use std::sync::Mutex;
+
+/// Shared metrics sink updated by the worker thread.
+pub struct ServeMetrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Default)]
+struct Inner {
+    latencies: Vec<f64>,
+    exec_times: Vec<f64>,
+    batch_sizes: Vec<usize>,
+    completed: u64,
+    errors: u64,
+}
+
+/// Point-in-time metrics summary.
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    /// Requests answered successfully.
+    pub completed: u64,
+    /// Requests answered with an error.
+    pub errors: u64,
+    /// Mean end-to-end latency (s).
+    pub mean_latency_s: f64,
+    /// Median latency (s).
+    pub p50_latency_s: f64,
+    /// 99th-percentile latency (s).
+    pub p99_latency_s: f64,
+    /// Mean backend execution time per batch (s).
+    pub mean_exec_s: f64,
+    /// Mean live requests per executed batch.
+    pub mean_batch: f64,
+    /// Largest batch executed.
+    pub max_batch_seen: usize,
+}
+
+impl ServeMetrics {
+    /// Fresh sink.
+    pub fn new() -> Self {
+        ServeMetrics { inner: Mutex::new(Inner::default()) }
+    }
+
+    /// Record one successful request.
+    pub fn record(&self, latency_s: f64, exec_s: f64, batch: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.latencies.push(latency_s);
+        g.exec_times.push(exec_s);
+        g.batch_sizes.push(batch);
+        g.completed += 1;
+    }
+
+    /// Record one failed request.
+    pub fn record_error(&self) {
+        self.inner.lock().unwrap().errors += 1;
+    }
+
+    /// Snapshot the current statistics.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let g = self.inner.lock().unwrap();
+        let mean = |xs: &[f64]| {
+            if xs.is_empty() {
+                0.0
+            } else {
+                xs.iter().sum::<f64>() / xs.len() as f64
+            }
+        };
+        MetricsSnapshot {
+            completed: g.completed,
+            errors: g.errors,
+            mean_latency_s: mean(&g.latencies),
+            p50_latency_s: crate::linalg::percentile(&g.latencies, 50.0),
+            p99_latency_s: crate::linalg::percentile(&g.latencies, 99.0),
+            mean_exec_s: mean(&g.exec_times),
+            mean_batch: if g.batch_sizes.is_empty() {
+                0.0
+            } else {
+                g.batch_sizes.iter().sum::<usize>() as f64 / g.batch_sizes.len() as f64
+            },
+            max_batch_seen: g.batch_sizes.iter().copied().max().unwrap_or(0),
+        }
+    }
+}
+
+impl Default for ServeMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MetricsSnapshot {
+    /// One-line human summary.
+    pub fn line(&self) -> String {
+        format!(
+            "completed={} errors={} p50={:.1}µs p99={:.1}µs mean_exec={:.1}µs mean_batch={:.2} max_batch={}",
+            self.completed,
+            self.errors,
+            self.p50_latency_s * 1e6,
+            self.p99_latency_s * 1e6,
+            self.mean_exec_s * 1e6,
+            self.mean_batch,
+            self.max_batch_seen
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_snapshots() {
+        let m = ServeMetrics::new();
+        m.record(0.001, 0.0005, 3);
+        m.record(0.003, 0.0005, 5);
+        m.record_error();
+        let s = m.snapshot();
+        assert_eq!(s.completed, 2);
+        assert_eq!(s.errors, 1);
+        assert!((s.mean_latency_s - 0.002).abs() < 1e-12);
+        assert_eq!(s.max_batch_seen, 5);
+        assert!((s.mean_batch - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_snapshot_is_sane() {
+        let s = ServeMetrics::new().snapshot();
+        assert_eq!(s.completed, 0);
+        assert_eq!(s.mean_latency_s, 0.0);
+        assert_eq!(s.max_batch_seen, 0);
+    }
+}

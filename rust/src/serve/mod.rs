@@ -1,0 +1,360 @@
+//! Serving coordinator: batched GFT / spectral-filter serving.
+//!
+//! The L3 request path. Clients [`submit`](Coordinator::submit) signals;
+//! the coordinator queues them on a **bounded** channel (backpressure),
+//! a worker thread drains the queue into dynamic batches — up to
+//! `max_batch` requests or until `batch_window` elapses since the first
+//! queued request — executes the batch on a [`Backend`] (either the
+//! native rust butterfly fast path or a PJRT-compiled artifact), and
+//! answers each request on its own one-shot channel. Latency and batch
+//! occupancy metrics are recorded for every request.
+//!
+//! Design notes: the environment's crate snapshot has no tokio, so the
+//! coordinator is built directly on `std::sync::mpsc` — one OS thread
+//! owns the backend (PJRT executables are not Sync), `sync_channel`
+//! provides the bounded queue, and per-request one-shot replies are
+//! `sync_channel(1)`. This mirrors the paper's setting (Fig. 6 measures
+//! single-threaded transform application).
+
+mod backend;
+mod metrics;
+
+pub use backend::{Backend, NativeGftBackend, PjrtGftBackend, TransformDirection};
+pub use metrics::{MetricsSnapshot, ServeMetrics};
+
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail};
+
+use crate::transforms::SignalBlock;
+
+/// Coordinator configuration.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Maximum requests per executed batch (usually the backend batch).
+    pub max_batch: usize,
+    /// How long to wait for more requests after the first one arrives.
+    pub batch_window: Duration,
+    /// Bounded queue capacity (backpressure limit).
+    pub queue_capacity: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            max_batch: 8,
+            batch_window: Duration::from_micros(200),
+            queue_capacity: 1024,
+        }
+    }
+}
+
+struct Job {
+    signal: Vec<f32>,
+    enqueued: Instant,
+    reply: SyncSender<crate::Result<Vec<f32>>>,
+}
+
+enum Msg {
+    Job(Job),
+    Shutdown,
+}
+
+/// Handle for an in-flight request.
+pub struct Ticket {
+    rx: Receiver<crate::Result<Vec<f32>>>,
+}
+
+impl Ticket {
+    /// Block until the transformed signal is ready.
+    pub fn wait(self) -> crate::Result<Vec<f32>> {
+        self.rx.recv().map_err(|_| anyhow!("coordinator dropped the request"))?
+    }
+}
+
+/// The serving coordinator (see module docs).
+pub struct Coordinator {
+    tx: SyncSender<Msg>,
+    worker: Option<std::thread::JoinHandle<()>>,
+    metrics: Arc<ServeMetrics>,
+    n: usize,
+}
+
+impl Coordinator {
+    /// Start a coordinator. The backend is constructed *inside* the worker
+    /// thread by `factory` — PJRT clients/executables are not `Send`, so
+    /// they must never cross threads. Fails if the factory fails.
+    pub fn start<F>(factory: F, config: ServeConfig) -> crate::Result<Coordinator>
+    where
+        F: FnOnce() -> crate::Result<Box<dyn Backend>> + Send + 'static,
+    {
+        assert!(config.max_batch >= 1);
+        let (tx, rx) = sync_channel::<Msg>(config.queue_capacity);
+        let metrics = Arc::new(ServeMetrics::new());
+        let m2 = Arc::clone(&metrics);
+        let (ready_tx, ready_rx) = sync_channel::<crate::Result<(usize, usize)>>(1);
+        let cfg = config.clone();
+        let worker = std::thread::Builder::new()
+            .name("fastes-serve".into())
+            .spawn(move || {
+                let mut backend = match factory() {
+                    Ok(b) => {
+                        let _ = ready_tx.send(Ok((b.n(), b.max_batch())));
+                        b
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                worker_loop(&mut *backend, &rx, &cfg, &m2)
+            })
+            .expect("spawn serve worker");
+        let (n, backend_batch) = match ready_rx.recv() {
+            Ok(Ok(dims)) => dims,
+            Ok(Err(e)) => {
+                let _ = worker.join();
+                return Err(e);
+            }
+            Err(_) => bail!("serve worker died during startup"),
+        };
+        if config.max_batch > backend_batch {
+            bail!("max_batch {} exceeds backend capacity {backend_batch}", config.max_batch);
+        }
+        Ok(Coordinator { tx, worker: Some(worker), metrics, n })
+    }
+
+    /// Submit a signal; blocks while the queue is full (backpressure).
+    pub fn submit(&self, signal: Vec<f32>) -> crate::Result<Ticket> {
+        if signal.len() != self.n {
+            bail!("signal length {} != n {}", signal.len(), self.n);
+        }
+        let (rtx, rrx) = sync_channel(1);
+        self.tx
+            .send(Msg::Job(Job { signal, enqueued: Instant::now(), reply: rtx }))
+            .map_err(|_| anyhow!("coordinator is shut down"))?;
+        Ok(Ticket { rx: rrx })
+    }
+
+    /// Non-blocking submit; `Err` when the queue is full or closed.
+    pub fn try_submit(&self, signal: Vec<f32>) -> crate::Result<Ticket> {
+        if signal.len() != self.n {
+            bail!("signal length {} != n {}", signal.len(), self.n);
+        }
+        let (rtx, rrx) = sync_channel(1);
+        match self.tx.try_send(Msg::Job(Job { signal, enqueued: Instant::now(), reply: rtx })) {
+            Ok(()) => Ok(Ticket { rx: rrx }),
+            Err(TrySendError::Full(_)) => bail!("queue full (backpressure)"),
+            Err(TrySendError::Disconnected(_)) => bail!("coordinator is shut down"),
+        }
+    }
+
+    /// Submit and wait.
+    pub fn submit_blocking(&self, signal: Vec<f64>) -> crate::Result<Vec<f64>> {
+        let sig32: Vec<f32> = signal.iter().map(|&v| v as f32).collect();
+        let out = self.submit(sig32)?.wait()?;
+        Ok(out.into_iter().map(|v| v as f64).collect())
+    }
+
+    /// Current metrics.
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    /// Graceful shutdown: drains queued requests, stops the worker and
+    /// returns the final metrics.
+    pub fn shutdown(mut self) -> MetricsSnapshot {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+        self.metrics.snapshot()
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(
+    backend: &mut dyn Backend,
+    rx: &Receiver<Msg>,
+    config: &ServeConfig,
+    metrics: &ServeMetrics,
+) {
+    let n = backend.n();
+    loop {
+        // wait for the first request of the batch
+        let first = match rx.recv() {
+            Ok(Msg::Job(j)) => j,
+            Ok(Msg::Shutdown) | Err(_) => return,
+        };
+        let mut jobs = vec![first];
+        let deadline = Instant::now() + config.batch_window;
+        let mut shutdown_after = false;
+        while jobs.len() < config.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(Msg::Job(j)) => jobs.push(j),
+                Ok(Msg::Shutdown) => {
+                    shutdown_after = true;
+                    break;
+                }
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => {
+                    shutdown_after = true;
+                    break;
+                }
+            }
+        }
+
+        // assemble the (n, backend_batch) block, padding unused columns
+        let batch = jobs.len();
+        let mut block = SignalBlock::zeros(n, backend.max_batch());
+        for (b, j) in jobs.iter().enumerate() {
+            for i in 0..n {
+                block.data[i * block.batch + b] = j.signal[i];
+            }
+        }
+        let t0 = Instant::now();
+        let result = backend.forward(&mut block);
+        let exec_s = t0.elapsed().as_secs_f64();
+
+        match result {
+            Ok(()) => {
+                for (b, j) in jobs.into_iter().enumerate() {
+                    let out = block.signal(b);
+                    let latency = j.enqueued.elapsed().as_secs_f64();
+                    metrics.record(latency, exec_s, batch);
+                    let _ = j.reply.send(Ok(out));
+                }
+            }
+            Err(e) => {
+                let msg = format!("backend error: {e:#}");
+                for j in jobs.into_iter() {
+                    metrics.record_error();
+                    let _ = j.reply.send(Err(anyhow!(msg.clone())));
+                }
+            }
+        }
+        if shutdown_after {
+            return;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transforms::PlanArrays;
+
+    fn identity_plan(n: usize) -> PlanArrays {
+        PlanArrays { n, ..Default::default() }
+    }
+
+    #[test]
+    fn identity_roundtrip() {
+        let coord = Coordinator::start(
+            || Ok(Box::new(NativeGftBackend::new(identity_plan(4), TransformDirection::Forward, 8, None)) as Box<dyn Backend>),
+            ServeConfig::default(),
+        )
+        .unwrap();
+        let sig = vec![1.0f32, 2.0, 3.0, 4.0];
+        let out = coord.submit(sig.clone()).unwrap().wait().unwrap();
+        assert_eq!(out, sig);
+        let m = coord.shutdown();
+        assert_eq!(m.completed, 1);
+    }
+
+    #[test]
+    fn many_requests_all_answered_in_order_of_submission() {
+        let coord = Coordinator::start(
+            || Ok(Box::new(NativeGftBackend::new(identity_plan(3), TransformDirection::Forward, 4, None)) as Box<dyn Backend>),
+            ServeConfig { max_batch: 4, ..Default::default() },
+        )
+        .unwrap();
+        let tickets: Vec<_> = (0..40)
+            .map(|k| coord.submit(vec![k as f32, 0.0, 0.0]).unwrap())
+            .collect();
+        for (k, t) in tickets.into_iter().enumerate() {
+            let out = t.wait().unwrap();
+            assert_eq!(out[0], k as f32);
+        }
+        let m = coord.shutdown();
+        assert_eq!(m.completed, 40);
+        assert!(m.mean_batch >= 1.0);
+        assert!(m.max_batch_seen <= 4);
+    }
+
+    #[test]
+    fn rejects_wrong_length() {
+        let coord = Coordinator::start(
+            || Ok(Box::new(NativeGftBackend::new(identity_plan(4), TransformDirection::Forward, 8, None)) as Box<dyn Backend>),
+            ServeConfig::default(),
+        )
+        .unwrap();
+        assert!(coord.submit(vec![0.0; 3]).is_err());
+    }
+
+    #[test]
+    fn try_submit_backpressure() {
+        // a slow backend + capacity-1 queue must trigger Full
+        struct Slow;
+        impl Backend for Slow {
+            fn n(&self) -> usize {
+                2
+            }
+            fn max_batch(&self) -> usize {
+                1
+            }
+            fn forward(&mut self, _b: &mut SignalBlock) -> crate::Result<()> {
+                std::thread::sleep(Duration::from_millis(30));
+                Ok(())
+            }
+            fn name(&self) -> &str {
+                "slow"
+            }
+        }
+        let coord = Coordinator::start(
+            || Ok(Box::new(Slow) as Box<dyn Backend>),
+            ServeConfig { max_batch: 1, queue_capacity: 1, ..Default::default() },
+        )
+        .unwrap();
+        // flood; at least one try_submit must fail with backpressure
+        let mut saw_full = false;
+        let mut tickets = Vec::new();
+        for _ in 0..20 {
+            match coord.try_submit(vec![0.0, 0.0]) {
+                Ok(t) => tickets.push(t),
+                Err(_) => saw_full = true,
+            }
+        }
+        assert!(saw_full, "expected backpressure");
+        for t in tickets {
+            t.wait().unwrap();
+        }
+    }
+
+    #[test]
+    fn shutdown_drains() {
+        let coord = Coordinator::start(
+            || Ok(Box::new(NativeGftBackend::new(identity_plan(2), TransformDirection::Forward, 4, None)) as Box<dyn Backend>),
+            ServeConfig { max_batch: 4, ..Default::default() },
+        )
+        .unwrap();
+        let t1 = coord.submit(vec![5.0, 6.0]).unwrap();
+        let m = coord.shutdown();
+        assert!(m.completed >= 1);
+        assert_eq!(t1.wait().unwrap(), vec![5.0, 6.0]);
+    }
+}

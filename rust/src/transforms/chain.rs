@@ -1,0 +1,590 @@
+//! Ordered products of butterflies: `Ū = G_g … G_1` and `T̄ = T_m … T_1`.
+
+use crate::linalg::Mat;
+
+use super::gtransform::{GKind, GTransform};
+use super::ttransform::TTransform;
+
+/// Flat, runtime-friendly encoding of a chain: parallel arrays as consumed
+/// by the serving runtime and the AOT-compiled artifacts. For a G-chain,
+/// entry `k` applies
+/// `(x_i, x_j) ← (c·x_i + s·x_j, σ·(−s·x_i + c·x_j))`
+/// with `σ = +1` (rotation) or `σ = −1` (reflection). For a T-chain the
+/// same arrays are reused with `kind` selecting scaling/shear semantics.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PlanArrays {
+    /// Problem dimension `n`.
+    pub n: usize,
+    /// First coordinate per stage.
+    pub idx_i: Vec<i32>,
+    /// Second coordinate per stage.
+    pub idx_j: Vec<i32>,
+    /// First scalar per stage (`c` for G; `a` for T).
+    pub p0: Vec<f32>,
+    /// Second scalar per stage (`s` for G; unused 0 for T).
+    pub p1: Vec<f32>,
+    /// Stage kind: G: `+1` rotation / `−1` reflection;
+    /// T: `0` scaling / `1` upper shear / `2` lower shear.
+    pub kind: Vec<i32>,
+}
+
+impl PlanArrays {
+    /// Number of stages.
+    pub fn len(&self) -> usize {
+        self.idx_i.len()
+    }
+
+    /// `true` when the chain is empty.
+    pub fn is_empty(&self) -> bool {
+        self.idx_i.is_empty()
+    }
+}
+
+/// Product of G-transforms, stored in **application order**: index 0 is
+/// `G_1` (applied first in `Ū x`), paper eq. (5).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct GChain {
+    /// Dimension of the space.
+    pub n: usize,
+    /// Transforms in application order.
+    pub transforms: Vec<GTransform>,
+}
+
+impl GChain {
+    /// Empty chain (the identity) on dimension `n`.
+    pub fn identity(n: usize) -> Self {
+        GChain { n, transforms: Vec::new() }
+    }
+
+    /// Number of factors `g`.
+    pub fn len(&self) -> usize {
+        self.transforms.len()
+    }
+
+    /// `true` when the chain is the identity.
+    pub fn is_empty(&self) -> bool {
+        self.transforms.is_empty()
+    }
+
+    /// Flop count of one matrix–vector product (paper: `6g`).
+    pub fn flops(&self) -> usize {
+        6 * self.transforms.len()
+    }
+
+    /// `y = Ū x` in place.
+    pub fn apply_vec(&self, x: &mut [f64]) {
+        debug_assert_eq!(x.len(), self.n);
+        for g in &self.transforms {
+            g.apply_vec(x);
+        }
+    }
+
+    /// `y = Ūᵀ x` in place (reverse order, transposed factors).
+    pub fn apply_vec_t(&self, x: &mut [f64]) {
+        debug_assert_eq!(x.len(), self.n);
+        for g in self.transforms.iter().rev() {
+            g.apply_vec_t(x);
+        }
+    }
+
+    /// `M ← Ū M`.
+    pub fn apply_left(&self, m: &mut Mat) {
+        for g in &self.transforms {
+            g.apply_left(m);
+        }
+    }
+
+    /// `M ← Ūᵀ M`.
+    pub fn apply_left_t(&self, m: &mut Mat) {
+        for g in self.transforms.iter().rev() {
+            g.apply_left_t(m);
+        }
+    }
+
+    /// `M ← M Ū`.
+    pub fn apply_right(&self, m: &mut Mat) {
+        for g in self.transforms.iter().rev() {
+            g.apply_right(m);
+        }
+    }
+
+    /// `M ← M Ūᵀ`.
+    pub fn apply_right_t(&self, m: &mut Mat) {
+        for g in &self.transforms {
+            g.apply_right_t(m);
+        }
+    }
+
+    /// Reconstruct the approximation `Ū diag(s̄) Ūᵀ`.
+    pub fn reconstruct(&self, spectrum: &[f64]) -> Mat {
+        assert_eq!(spectrum.len(), self.n);
+        let mut m = Mat::from_diag(spectrum);
+        self.apply_left(&mut m);
+        self.apply_right_t(&mut m);
+        m
+    }
+
+    /// Objective `‖S − Ū diag(s̄) Ūᵀ‖²_F` (test/metric helper, `O(gn + n²)`).
+    pub fn objective(&self, s: &Mat, spectrum: &[f64]) -> f64 {
+        // cheaper equivalent: ‖Ūᵀ S Ū − diag(s̄)‖²_F by Frobenius invariance
+        let mut w = s.clone();
+        self.apply_left_t(&mut w);
+        self.apply_right(&mut w);
+        for (i, &sv) in spectrum.iter().enumerate() {
+            w[(i, i)] -= sv;
+        }
+        w.fro_norm_sq()
+    }
+
+    /// Dense materialization of `Ū` (tests / baselines; `O(gn)`).
+    pub fn to_dense(&self) -> Mat {
+        let mut m = Mat::eye(self.n);
+        self.apply_left(&mut m);
+        m
+    }
+
+    /// Flat plan export for the serving runtime / AOT artifacts.
+    pub fn to_plan(&self) -> PlanArrays {
+        let mut p = PlanArrays { n: self.n, ..Default::default() };
+        for g in &self.transforms {
+            p.idx_i.push(g.i as i32);
+            p.idx_j.push(g.j as i32);
+            p.p0.push(g.c as f32);
+            p.p1.push(g.s as f32);
+            p.kind.push(if g.kind == GKind::Rotation { 1 } else { -1 });
+        }
+        p
+    }
+
+    /// Rebuild from a flat plan (inverse of [`GChain::to_plan`], up to f32
+    /// rounding of the parameters).
+    pub fn from_plan(p: &PlanArrays) -> Self {
+        let transforms = (0..p.len())
+            .map(|k| {
+                GTransform::new(
+                    p.idx_i[k] as usize,
+                    p.idx_j[k] as usize,
+                    p.p0[k] as f64,
+                    p.p1[k] as f64,
+                    if p.kind[k] >= 0 { GKind::Rotation } else { GKind::Reflection },
+                )
+            })
+            .collect();
+        GChain { n: p.n, transforms }
+    }
+}
+
+/// Product of T-transforms, stored in application order (`T_1` first),
+/// paper eq. (10).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TChain {
+    /// Dimension of the space.
+    pub n: usize,
+    /// Transforms in application order.
+    pub transforms: Vec<TTransform>,
+}
+
+impl TChain {
+    /// Empty chain (the identity) on dimension `n`.
+    pub fn identity(n: usize) -> Self {
+        TChain { n, transforms: Vec::new() }
+    }
+
+    /// Number of factors `m`.
+    pub fn len(&self) -> usize {
+        self.transforms.len()
+    }
+
+    /// `true` when the chain is the identity.
+    pub fn is_empty(&self) -> bool {
+        self.transforms.is_empty()
+    }
+
+    /// Flop count of one matrix–vector product (paper: `m₁ + 2m₂`).
+    pub fn flops(&self) -> usize {
+        self.transforms.iter().map(|t| t.flops()).sum()
+    }
+
+    /// `y = T̄ x` in place.
+    pub fn apply_vec(&self, x: &mut [f64]) {
+        debug_assert_eq!(x.len(), self.n);
+        for t in &self.transforms {
+            t.apply_vec(x);
+        }
+    }
+
+    /// `y = T̄⁻¹ x` in place (reverse order, inverted factors).
+    pub fn apply_vec_inv(&self, x: &mut [f64]) {
+        debug_assert_eq!(x.len(), self.n);
+        for t in self.transforms.iter().rev() {
+            t.apply_vec_inv(x);
+        }
+    }
+
+    /// `M ← T̄ M`.
+    pub fn apply_left(&self, m: &mut Mat) {
+        for t in &self.transforms {
+            t.apply_left(m);
+        }
+    }
+
+    /// `M ← T̄⁻¹ M`.
+    pub fn apply_left_inv(&self, m: &mut Mat) {
+        for t in self.transforms.iter().rev() {
+            t.apply_left_inv(m);
+        }
+    }
+
+    /// `M ← M T̄`.
+    pub fn apply_right(&self, m: &mut Mat) {
+        for t in self.transforms.iter().rev() {
+            t.apply_right(m);
+        }
+    }
+
+    /// `M ← M T̄⁻¹`.
+    pub fn apply_right_inv(&self, m: &mut Mat) {
+        for t in &self.transforms {
+            t.apply_right_inv(m);
+        }
+    }
+
+    /// Reconstruct the approximation `T̄ diag(c̄) T̄⁻¹`.
+    pub fn reconstruct(&self, spectrum: &[f64]) -> Mat {
+        assert_eq!(spectrum.len(), self.n);
+        let mut m = Mat::from_diag(spectrum);
+        self.apply_left(&mut m);
+        self.apply_right_inv(&mut m);
+        m
+    }
+
+    /// Objective `‖C − T̄ diag(c̄) T̄⁻¹‖²_F` (`O(mn + n²)`).
+    pub fn objective(&self, c: &Mat, spectrum: &[f64]) -> f64 {
+        self.reconstruct(spectrum).fro_dist_sq(c)
+    }
+
+    /// Dense materialization of `T̄`.
+    pub fn to_dense(&self) -> Mat {
+        let mut m = Mat::eye(self.n);
+        self.apply_left(&mut m);
+        m
+    }
+
+    /// Dense materialization of `T̄⁻¹`.
+    pub fn to_dense_inv(&self) -> Mat {
+        let mut m = Mat::eye(self.n);
+        self.apply_left_inv(&mut m);
+        m
+    }
+
+    /// Flat plan export. Kind codes: 0 scaling, 1 upper shear, 2 lower.
+    pub fn to_plan(&self) -> PlanArrays {
+        let mut p = PlanArrays { n: self.n, ..Default::default() };
+        for t in &self.transforms {
+            let (i, j) = t.coords();
+            p.idx_i.push(i as i32);
+            p.idx_j.push(j as i32);
+            p.p0.push(t.param() as f32);
+            p.p1.push(0.0);
+            p.kind.push(match t {
+                TTransform::Scaling { .. } => 0,
+                TTransform::UpperShear { .. } => 1,
+                TTransform::LowerShear { .. } => 2,
+            });
+        }
+        p
+    }
+
+    /// Rebuild from a flat plan.
+    pub fn from_plan(p: &PlanArrays) -> Self {
+        let transforms = (0..p.len())
+            .map(|k| {
+                let (i, j, a) = (p.idx_i[k] as usize, p.idx_j[k] as usize, p.p0[k] as f64);
+                match p.kind[k] {
+                    0 => TTransform::Scaling { i, a },
+                    1 => TTransform::UpperShear { i, j, a },
+                    2 => TTransform::LowerShear { i, j, a },
+                    k => panic!("bad T plan kind {k}"),
+                }
+            })
+            .collect();
+        TChain { n: p.n, transforms }
+    }
+
+    /// Convert a G-chain into an equivalent T-chain by the lifting scheme
+    /// (Daubechies & Sweldens 1998; paper Remark 2): a rotation
+    /// `[[c, s], [−s, c]]` factors into three shears
+    /// `[[1, (c−1)/s], [0, 1]]·[[1, 0], [s, 1]]·[[1, (c−1)/s], [0, 1]]`,
+    /// and a reflection is a rotation times `diag(1, −1)`. Degenerate
+    /// angles (`s ≈ 0`) become scalings. The result applies identically
+    /// (up to rounding) with `≤ 4` T-transforms per G-transform — the
+    /// paper's `m = 4g` initialization for refining a G-factorization
+    /// with the cheaper-per-flop T machinery.
+    pub fn from_gchain(g: &super::GChain) -> TChain {
+        use super::gtransform::GKind;
+        let mut out = TChain::identity(g.n);
+        for t in &g.transforms {
+            let (i, j, c, s) = (t.i, t.j, t.c, t.s);
+            // rotation part: R(θ) = U·L·U with U = [[1, u], [0, 1]],
+            // L = [[1, 0], [−s, 1]], u = (1−c)/s — pushed in application
+            // order (rightmost factor of the product first)
+            if s.abs() < 1e-12 {
+                // degenerate angle: R = diag(c, c), c = ±1
+                if c < 0.0 {
+                    out.transforms.push(TTransform::Scaling { i, a: c });
+                    out.transforms.push(TTransform::Scaling { i: j, a: c });
+                }
+            } else {
+                let u = (1.0 - c) / s;
+                out.transforms.push(TTransform::UpperShear { i, j, a: u });
+                out.transforms.push(TTransform::LowerShear { i, j, a: -s });
+                out.transforms.push(TTransform::UpperShear { i, j, a: u });
+            }
+            if t.kind == GKind::Reflection {
+                // [[c, s], [s, −c]] = diag(1, −1) · R(θ): D applies last
+                out.transforms.push(TTransform::Scaling { i: j, a: -1.0 });
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Rng64;
+
+    pub fn random_gchain(rng: &mut Rng64, n: usize, g: usize) -> GChain {
+        let mut ch = GChain::identity(n);
+        for _ in 0..g {
+            let i = rng.below(n - 1);
+            let j = i + 1 + rng.below(n - 1 - i);
+            let th = rng.uniform_in(0.0, std::f64::consts::TAU);
+            let kind = if rng.bernoulli(0.5) { GKind::Rotation } else { GKind::Reflection };
+            ch.transforms.push(GTransform::new(i, j, th.cos(), th.sin(), kind));
+        }
+        ch
+    }
+
+    pub fn random_tchain(rng: &mut Rng64, n: usize, m: usize) -> TChain {
+        let mut ch = TChain::identity(n);
+        for _ in 0..m {
+            let i = rng.below(n - 1);
+            let j = i + 1 + rng.below(n - 1 - i);
+            ch.transforms.push(match rng.below(3) {
+                0 => TTransform::Scaling { i, a: rng.randn().abs() + 0.2 },
+                1 => TTransform::UpperShear { i, j, a: 0.5 * rng.randn() },
+                _ => TTransform::LowerShear { i, j, a: 0.5 * rng.randn() },
+            });
+        }
+        ch
+    }
+
+    #[test]
+    fn gchain_dense_consistency() {
+        let mut rng = Rng64::new(61);
+        let ch = random_gchain(&mut rng, 7, 12);
+        let dense = ch.to_dense();
+        // orthonormality of the dense product
+        let prod = dense.transpose().matmul(&dense);
+        assert!(prod.fro_dist_sq(&Mat::eye(7)) < 1e-18);
+        // vector apply matches dense
+        let x: Vec<f64> = (0..7).map(|_| rng.randn()).collect();
+        let want = dense.matvec(&x);
+        let mut got = x.clone();
+        ch.apply_vec(&mut got);
+        for (w, g) in want.iter().zip(got.iter()) {
+            assert!((w - g).abs() < 1e-10);
+        }
+        // transpose apply
+        let want_t = dense.tmatvec(&x);
+        let mut got_t = x.clone();
+        ch.apply_vec_t(&mut got_t);
+        for (w, g) in want_t.iter().zip(got_t.iter()) {
+            assert!((w - g).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn gchain_transpose_inverse() {
+        let mut rng = Rng64::new(62);
+        let ch = random_gchain(&mut rng, 9, 20);
+        let mut x: Vec<f64> = (0..9).map(|_| rng.randn()).collect();
+        let orig = x.clone();
+        ch.apply_vec(&mut x);
+        ch.apply_vec_t(&mut x);
+        for (a, b) in orig.iter().zip(x.iter()) {
+            assert!((a - b).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn gchain_matrix_ops_match_dense() {
+        let mut rng = Rng64::new(63);
+        let ch = random_gchain(&mut rng, 5, 8);
+        let dense = ch.to_dense();
+        let m = Mat::randn(5, 5, &mut rng);
+        let mut l = m.clone();
+        ch.apply_left(&mut l);
+        assert!(l.fro_dist_sq(&dense.matmul(&m)) < 1e-18);
+        let mut r = m.clone();
+        ch.apply_right(&mut r);
+        assert!(r.fro_dist_sq(&m.matmul(&dense)) < 1e-18);
+        let mut rt = m.clone();
+        ch.apply_right_t(&mut rt);
+        assert!(rt.fro_dist_sq(&m.matmul(&dense.transpose())) < 1e-18);
+        let mut lt = m.clone();
+        ch.apply_left_t(&mut lt);
+        assert!(lt.fro_dist_sq(&dense.transpose().matmul(&m)) < 1e-18);
+    }
+
+    #[test]
+    fn gchain_objective_matches_direct() {
+        let mut rng = Rng64::new(64);
+        let ch = random_gchain(&mut rng, 6, 10);
+        let x = Mat::randn(6, 6, &mut rng);
+        let s = &x + &x.transpose();
+        let spec: Vec<f64> = (0..6).map(|_| rng.randn()).collect();
+        let direct = ch.reconstruct(&spec).fro_dist_sq(&s);
+        let via_inv = ch.objective(&s, &spec);
+        assert!((direct - via_inv).abs() < 1e-8 * (1.0 + direct), "{direct} vs {via_inv}");
+    }
+
+    #[test]
+    fn gchain_plan_roundtrip() {
+        let mut rng = Rng64::new(65);
+        let ch = random_gchain(&mut rng, 8, 15);
+        let p = ch.to_plan();
+        assert_eq!(p.len(), 15);
+        let back = GChain::from_plan(&p);
+        // f32 rounding: compare applies loosely
+        let x: Vec<f64> = (0..8).map(|_| rng.randn()).collect();
+        let mut a = x.clone();
+        let mut b = x.clone();
+        ch.apply_vec(&mut a);
+        back.apply_vec(&mut b);
+        for (u, v) in a.iter().zip(b.iter()) {
+            assert!((u - v).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn tchain_dense_consistency() {
+        let mut rng = Rng64::new(66);
+        let ch = random_tchain(&mut rng, 7, 12);
+        let dense = ch.to_dense();
+        let x: Vec<f64> = (0..7).map(|_| rng.randn()).collect();
+        let want = dense.matvec(&x);
+        let mut got = x.clone();
+        ch.apply_vec(&mut got);
+        for (w, g) in want.iter().zip(got.iter()) {
+            assert!((w - g).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn tchain_inverse_roundtrip() {
+        let mut rng = Rng64::new(67);
+        let ch = random_tchain(&mut rng, 9, 25);
+        let mut x: Vec<f64> = (0..9).map(|_| rng.randn()).collect();
+        let orig = x.clone();
+        ch.apply_vec(&mut x);
+        ch.apply_vec_inv(&mut x);
+        for (a, b) in orig.iter().zip(x.iter()) {
+            assert!((a - b).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn tchain_dense_inverse() {
+        let mut rng = Rng64::new(68);
+        let ch = random_tchain(&mut rng, 6, 10);
+        let prod = ch.to_dense().matmul(&ch.to_dense_inv());
+        assert!(prod.fro_dist_sq(&Mat::eye(6)) < 1e-16);
+    }
+
+    #[test]
+    fn tchain_reconstruct_similarity() {
+        let mut rng = Rng64::new(69);
+        let ch = random_tchain(&mut rng, 5, 8);
+        let spec: Vec<f64> = (0..5).map(|_| rng.randn()).collect();
+        let rec = ch.reconstruct(&spec);
+        let dense = ch.to_dense();
+        let want = dense.matmul(&Mat::from_diag(&spec)).matmul(&ch.to_dense_inv());
+        assert!(rec.fro_dist_sq(&want) < 1e-16);
+        // similarity preserves trace
+        let tr: f64 = rec.diag().iter().sum();
+        let st: f64 = spec.iter().sum();
+        assert!((tr - st).abs() < 1e-8);
+    }
+
+    #[test]
+    fn tchain_plan_roundtrip() {
+        let mut rng = Rng64::new(70);
+        let ch = random_tchain(&mut rng, 8, 14);
+        let p = ch.to_plan();
+        let back = TChain::from_plan(&p);
+        let x: Vec<f64> = (0..8).map(|_| rng.randn()).collect();
+        let mut a = x.clone();
+        let mut b = x.clone();
+        ch.apply_vec(&mut a);
+        back.apply_vec(&mut b);
+        for (u, v) in a.iter().zip(b.iter()) {
+            assert!((u - v).abs() < 1e-4, "{u} vs {v}");
+        }
+    }
+
+    #[test]
+    fn lifting_conversion_is_exact() {
+        // T-chain from G-chain must apply identically (Remark 2 / the
+        // Daubechies–Sweldens lifting factorization)
+        let mut rng = Rng64::new(72);
+        for trial in 0..20 {
+            let ch = random_gchain(&mut rng, 8, 12);
+            let t = TChain::from_gchain(&ch);
+            assert!(t.len() <= 4 * ch.len(), "≤ 4 T per G");
+            let dg = ch.to_dense();
+            let dt = t.to_dense();
+            assert!(
+                dg.fro_dist_sq(&dt) < 1e-18 * (1.0 + dg.fro_norm_sq()),
+                "trial {trial}: lifting mismatch {}",
+                dg.fro_dist_sq(&dt)
+            );
+        }
+    }
+
+    #[test]
+    fn lifting_handles_degenerate_angles() {
+        use crate::transforms::{GKind, GTransform};
+        for (c, s, kind) in [
+            (1.0, 0.0, GKind::Rotation),
+            (-1.0, 0.0, GKind::Rotation),
+            (1.0, 0.0, GKind::Reflection),
+            (-1.0, 0.0, GKind::Reflection),
+            (0.0, 1.0, GKind::Rotation),
+            (0.0, -1.0, GKind::Reflection),
+        ] {
+            let ch = GChain { n: 4, transforms: vec![GTransform::new(0, 2, c, s, kind)] };
+            let t = TChain::from_gchain(&ch);
+            assert!(
+                ch.to_dense().fro_dist_sq(&t.to_dense()) < 1e-20,
+                "degenerate ({c},{s},{kind:?})"
+            );
+        }
+    }
+
+    #[test]
+    fn flop_accounting() {
+        let mut rng = Rng64::new(71);
+        let g = random_gchain(&mut rng, 8, 10);
+        assert_eq!(g.flops(), 60);
+        let t = TChain {
+            n: 4,
+            transforms: vec![
+                TTransform::Scaling { i: 0, a: 2.0 },
+                TTransform::UpperShear { i: 0, j: 1, a: 1.0 },
+            ],
+        };
+        assert_eq!(t.flops(), 3);
+    }
+}

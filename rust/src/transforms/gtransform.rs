@@ -1,0 +1,262 @@
+//! The extended orthonormal Givens transformation (G-transform).
+
+use crate::linalg::Mat;
+
+/// Which of the two orthonormal 2×2 shapes of paper eq. (3) is used.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GKind {
+    /// `[[c, s], [-s, c]]` — plain Givens/Jacobi rotation.
+    Rotation,
+    /// `[[c, s], [s, -c]]` — reflection (the "extension").
+    Reflection,
+}
+
+/// A G-transform `G_{ij}` (paper eq. (4)): identity except for the 2×2
+/// orthonormal block at rows/columns `(i, j)`, `i < j`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GTransform {
+    /// First coordinate (row/column), `i < j`.
+    pub i: usize,
+    /// Second coordinate.
+    pub j: usize,
+    /// Cosine-like parameter; `c² + s² = 1`.
+    pub c: f64,
+    /// Sine-like parameter.
+    pub s: f64,
+    /// Rotation or reflection.
+    pub kind: GKind,
+}
+
+impl GTransform {
+    /// New transform; asserts `i < j` and normalizes `(c, s)` to the unit
+    /// circle (defensive against accumulated rounding).
+    pub fn new(i: usize, j: usize, c: f64, s: f64, kind: GKind) -> Self {
+        assert!(i < j, "GTransform requires i < j (got {i}, {j})");
+        let n = (c * c + s * s).sqrt();
+        let (c, s) = if n > 0.0 { (c / n, s / n) } else { (1.0, 0.0) };
+        GTransform { i, j, c, s, kind }
+    }
+
+    /// Identity transform at `(i, j)`.
+    pub fn identity(i: usize, j: usize) -> Self {
+        GTransform::new(i, j, 1.0, 0.0, GKind::Rotation)
+    }
+
+    /// From a row-major 2×2 orthonormal block (e.g. the Procrustes
+    /// solution `Vᵀ`), classifying it as rotation (det +1) or reflection
+    /// (det −1).
+    pub fn from_block(i: usize, j: usize, b: [[f64; 2]; 2]) -> Self {
+        let det = b[0][0] * b[1][1] - b[0][1] * b[1][0];
+        if det >= 0.0 {
+            // rotation [[c, s], [-s, c]]
+            GTransform::new(i, j, b[0][0], b[0][1], GKind::Rotation)
+        } else {
+            // reflection [[c, s], [s, -c]]
+            GTransform::new(i, j, b[0][0], b[0][1], GKind::Reflection)
+        }
+    }
+
+    /// The non-trivial 2×2 block, row-major.
+    #[inline]
+    pub fn block(&self) -> [[f64; 2]; 2] {
+        match self.kind {
+            GKind::Rotation => [[self.c, self.s], [-self.s, self.c]],
+            GKind::Reflection => [[self.c, self.s], [self.s, -self.c]],
+        }
+    }
+
+    /// Block of the transpose `G̃ᵀ` (a rotation transposes to the opposite
+    /// rotation; a reflection is symmetric).
+    #[inline]
+    pub fn block_t(&self) -> [[f64; 2]; 2] {
+        match self.kind {
+            GKind::Rotation => [[self.c, -self.s], [self.s, self.c]],
+            GKind::Reflection => [[self.c, self.s], [self.s, -self.c]],
+        }
+    }
+
+    /// Apply `y = G x` in place (6 flops on 2 entries).
+    #[inline]
+    pub fn apply_vec(&self, x: &mut [f64]) {
+        let (xi, xj) = (x[self.i], x[self.j]);
+        let b = self.block();
+        x[self.i] = b[0][0] * xi + b[0][1] * xj;
+        x[self.j] = b[1][0] * xi + b[1][1] * xj;
+    }
+
+    /// Apply `y = Gᵀ x` in place.
+    #[inline]
+    pub fn apply_vec_t(&self, x: &mut [f64]) {
+        let (xi, xj) = (x[self.i], x[self.j]);
+        let b = self.block_t();
+        x[self.i] = b[0][0] * xi + b[0][1] * xj;
+        x[self.j] = b[1][0] * xi + b[1][1] * xj;
+    }
+
+    /// Left-multiply a matrix: `M ← G M`.
+    #[inline]
+    pub fn apply_left(&self, m: &mut Mat) {
+        let b = self.block();
+        m.rotate_rows(self.i, self.j, b[0][0], b[0][1], b[1][0], b[1][1]);
+    }
+
+    /// Left-multiply by the transpose: `M ← Gᵀ M`.
+    #[inline]
+    pub fn apply_left_t(&self, m: &mut Mat) {
+        let b = self.block_t();
+        m.rotate_rows(self.i, self.j, b[0][0], b[0][1], b[1][0], b[1][1]);
+    }
+
+    /// Right-multiply by the transpose: `M ← M Gᵀ`.
+    #[inline]
+    pub fn apply_right_t(&self, m: &mut Mat) {
+        let b = self.block();
+        // rotate_cols computes M·B̃ᵀ from block B̃
+        m.rotate_cols(self.i, self.j, b[0][0], b[0][1], b[1][0], b[1][1]);
+    }
+
+    /// Right-multiply: `M ← M G`.
+    #[inline]
+    pub fn apply_right(&self, m: &mut Mat) {
+        let b = self.block_t();
+        m.rotate_cols(self.i, self.j, b[0][0], b[0][1], b[1][0], b[1][1]);
+    }
+
+    /// Symmetric conjugation `M ← G M Gᵀ` (the Jacobi-style two-sided
+    /// update; `O(n)`).
+    #[inline]
+    pub fn conjugate(&self, m: &mut Mat) {
+        self.apply_left(m);
+        self.apply_right_t(m);
+    }
+
+    /// Inverse conjugation `M ← Gᵀ M G`.
+    #[inline]
+    pub fn conjugate_t(&self, m: &mut Mat) {
+        self.apply_left_t(m);
+        self.apply_right(m);
+    }
+
+    /// Dense n×n materialization (tests only).
+    pub fn to_dense(&self, n: usize) -> Mat {
+        let mut m = Mat::eye(n);
+        let b = self.block();
+        m[(self.i, self.i)] = b[0][0];
+        m[(self.i, self.j)] = b[0][1];
+        m[(self.j, self.i)] = b[1][0];
+        m[(self.j, self.j)] = b[1][1];
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Rng64;
+
+    fn random_g(rng: &mut Rng64, n: usize) -> GTransform {
+        let i = rng.below(n - 1);
+        let j = i + 1 + rng.below(n - 1 - i);
+        let th = rng.uniform_in(0.0, std::f64::consts::TAU);
+        let kind = if rng.bernoulli(0.5) { GKind::Rotation } else { GKind::Reflection };
+        GTransform::new(i, j, th.cos(), th.sin(), kind)
+    }
+
+    #[test]
+    fn orthonormal_block() {
+        let mut rng = Rng64::new(41);
+        for _ in 0..100 {
+            let g = random_g(&mut rng, 8);
+            let b = g.block();
+            let dot = b[0][0] * b[1][0] + b[0][1] * b[1][1];
+            assert!(dot.abs() < 1e-12);
+            assert!((b[0][0] * b[0][0] + b[0][1] * b[0][1] - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn apply_matches_dense() {
+        let mut rng = Rng64::new(42);
+        for _ in 0..50 {
+            let g = random_g(&mut rng, 6);
+            let dense = g.to_dense(6);
+            let x: Vec<f64> = (0..6).map(|_| rng.randn()).collect();
+            let want = dense.matvec(&x);
+            let mut got = x.clone();
+            g.apply_vec(&mut got);
+            for (w, gv) in want.iter().zip(got.iter()) {
+                assert!((w - gv).abs() < 1e-12);
+            }
+            // transpose
+            let want_t = dense.transpose().matvec(&x);
+            let mut got_t = x.clone();
+            g.apply_vec_t(&mut got_t);
+            for (w, gv) in want_t.iter().zip(got_t.iter()) {
+                assert!((w - gv).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_is_inverse() {
+        let mut rng = Rng64::new(43);
+        for _ in 0..50 {
+            let g = random_g(&mut rng, 5);
+            let mut x: Vec<f64> = (0..5).map(|_| rng.randn()).collect();
+            let orig = x.clone();
+            g.apply_vec(&mut x);
+            g.apply_vec_t(&mut x);
+            for (a, b) in orig.iter().zip(x.iter()) {
+                assert!((a - b).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn matrix_ops_match_dense() {
+        let mut rng = Rng64::new(44);
+        let g = random_g(&mut rng, 5);
+        let dense = g.to_dense(5);
+        let m = Mat::randn(5, 5, &mut rng);
+
+        let mut left = m.clone();
+        g.apply_left(&mut left);
+        assert!(left.fro_dist_sq(&dense.matmul(&m)) < 1e-22);
+
+        let mut left_t = m.clone();
+        g.apply_left_t(&mut left_t);
+        assert!(left_t.fro_dist_sq(&dense.transpose().matmul(&m)) < 1e-22);
+
+        let mut right = m.clone();
+        g.apply_right(&mut right);
+        assert!(right.fro_dist_sq(&m.matmul(&dense)) < 1e-22);
+
+        let mut right_t = m.clone();
+        g.apply_right_t(&mut right_t);
+        assert!(right_t.fro_dist_sq(&m.matmul(&dense.transpose())) < 1e-22);
+
+        let mut conj = m.clone();
+        g.conjugate(&mut conj);
+        assert!(conj.fro_dist_sq(&dense.matmul(&m).matmul(&dense.transpose())) < 1e-22);
+    }
+
+    #[test]
+    fn from_block_roundtrip() {
+        let mut rng = Rng64::new(45);
+        for _ in 0..50 {
+            let g = random_g(&mut rng, 4);
+            let g2 = GTransform::from_block(g.i, g.j, g.block());
+            assert_eq!(g.kind, g2.kind);
+            assert!((g.c - g2.c).abs() < 1e-12 && (g.s - g2.s).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn reflection_equals_swap_then_rotation() {
+        // the paper's remark: [[c,s],[s,-c]] = [[c,s],[-s,c]]·[[0,1],[1,0]]... as structure
+        let g = GTransform::new(0, 1, 0.6, 0.8, GKind::Reflection);
+        let b = g.block();
+        let det = b[0][0] * b[1][1] - b[0][1] * b[1][0];
+        assert!((det + 1.0).abs() < 1e-12, "reflection has det −1");
+    }
+}

@@ -1,0 +1,28 @@
+//! Butterfly transforms — the fundamental components of the factorizations.
+//!
+//! * [`GTransform`] — *extended orthonormal Givens transformation*
+//!   (paper eq. (3)–(4)): a 2×2 rotation **or reflection** embedded at
+//!   coordinates `(i, j)` of the identity. `6` flops per application.
+//! * [`TTransform`] — *scaling or shear transformation* (paper eq. (8)–(9)):
+//!   `1` flop (scaling) or `2` flops (shear) per application, with a
+//!   trivial inverse.
+//! * [`GChain`] / [`TChain`] — ordered products `G_g … G_1` / `T_m … T_1`
+//!   (paper eq. (5)/(10)) with `O(g)` matrix–vector products, transpose /
+//!   inverse application, dense materialization for tests, FLOP accounting
+//!   and a flat [`plan`](PlanArrays) export consumed by the serving
+//!   runtime and the AOT artifacts.
+//!
+//! The batched `f32` fast path used on the serving hot loop lives in
+//! [`batch`].
+
+pub mod batch;
+mod chain;
+mod gtransform;
+mod ttransform;
+
+pub use batch::{
+    apply_gchain_batch_f32, apply_gchain_batch_f32_t, apply_tchain_batch_f32, SignalBlock,
+};
+pub use chain::{GChain, PlanArrays, TChain};
+pub use gtransform::{GKind, GTransform};
+pub use ttransform::TTransform;

@@ -1,0 +1,262 @@
+//! Scaling and shear transformations (T-transforms).
+
+use crate::linalg::Mat;
+
+/// A T-transform (paper eq. (8)–(9)): identity except for one of
+///
+/// * `Scaling { i, a }` — diagonal entry `i` is `a` (`a ≠ 0`);
+/// * `UpperShear { i, j, a }` — entry `(i, j)` is `a`, `i < j`
+///   (`[[1, a], [0, 1]]` on the `(i, j)` plane);
+/// * `LowerShear { i, j, a }` — entry `(j, i)` is `a`, `i < j`
+///   (`[[1, 0], [a, 1]]` on the `(i, j)` plane).
+///
+/// All three have trivial inverses (`1/a` or `−a`), which is why the paper
+/// picks them: the factored eigenspace `T̄` and its inverse `T̄⁻¹` are both
+/// `O(m)` to apply.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TTransform {
+    /// `T = I + (a−1)·e_i e_iᵀ`.
+    Scaling {
+        /// Scaled coordinate.
+        i: usize,
+        /// Scale factor, non-zero.
+        a: f64,
+    },
+    /// `T = I + a·e_i e_jᵀ` with `i < j`.
+    UpperShear {
+        /// Destination row.
+        i: usize,
+        /// Source column, `j > i`.
+        j: usize,
+        /// Shear coefficient.
+        a: f64,
+    },
+    /// `T = I + a·e_j e_iᵀ` with `i < j`.
+    LowerShear {
+        /// Source column.
+        i: usize,
+        /// Destination row, `j > i`.
+        j: usize,
+        /// Shear coefficient.
+        a: f64,
+    },
+}
+
+impl TTransform {
+    /// The inverse transform (same structural kind).
+    #[inline]
+    pub fn inverse(&self) -> TTransform {
+        match *self {
+            TTransform::Scaling { i, a } => TTransform::Scaling { i, a: 1.0 / a },
+            TTransform::UpperShear { i, j, a } => TTransform::UpperShear { i, j, a: -a },
+            TTransform::LowerShear { i, j, a } => TTransform::LowerShear { i, j, a: -a },
+        }
+    }
+
+    /// Flop count of one application (paper §3.2: scalings 1, shears 2).
+    #[inline]
+    pub fn flops(&self) -> usize {
+        match self {
+            TTransform::Scaling { .. } => 1,
+            _ => 2,
+        }
+    }
+
+    /// Apply `x ← T x` in place.
+    #[inline]
+    pub fn apply_vec(&self, x: &mut [f64]) {
+        match *self {
+            TTransform::Scaling { i, a } => x[i] *= a,
+            TTransform::UpperShear { i, j, a } => x[i] += a * x[j],
+            TTransform::LowerShear { i, j, a } => x[j] += a * x[i],
+        }
+    }
+
+    /// Apply `x ← T⁻¹ x` in place.
+    #[inline]
+    pub fn apply_vec_inv(&self, x: &mut [f64]) {
+        self.inverse().apply_vec(x);
+    }
+
+    /// Left-multiply a matrix: `M ← T M`.
+    #[inline]
+    pub fn apply_left(&self, m: &mut Mat) {
+        match *self {
+            TTransform::Scaling { i, a } => m.scale_row(i, a),
+            TTransform::UpperShear { i, j, a } => m.add_row(i, j, a),
+            TTransform::LowerShear { i, j, a } => m.add_row(j, i, a),
+        }
+    }
+
+    /// Left-multiply by the inverse: `M ← T⁻¹ M`.
+    #[inline]
+    pub fn apply_left_inv(&self, m: &mut Mat) {
+        self.inverse().apply_left(m);
+    }
+
+    /// Right-multiply: `M ← M T`. (`(MT)_{:,t}`: scaling scales column `i`;
+    /// `I + a·e_i e_jᵀ` adds `a·col_i` to `col_j`.)
+    #[inline]
+    pub fn apply_right(&self, m: &mut Mat) {
+        match *self {
+            TTransform::Scaling { i, a } => m.scale_col(i, a),
+            TTransform::UpperShear { i, j, a } => m.add_col(j, i, a),
+            TTransform::LowerShear { i, j, a } => m.add_col(i, j, a),
+        }
+    }
+
+    /// Right-multiply by the inverse: `M ← M T⁻¹`.
+    #[inline]
+    pub fn apply_right_inv(&self, m: &mut Mat) {
+        self.inverse().apply_right(m);
+    }
+
+    /// Similarity update `M ← T M T⁻¹` (`O(n)`).
+    #[inline]
+    pub fn conjugate(&self, m: &mut Mat) {
+        self.apply_left(m);
+        self.apply_right_inv(m);
+    }
+
+    /// Inverse similarity `M ← T⁻¹ M T`.
+    #[inline]
+    pub fn conjugate_inv(&self, m: &mut Mat) {
+        self.apply_left_inv(m);
+        self.apply_right(m);
+    }
+
+    /// Dense n×n materialization (tests only).
+    pub fn to_dense(&self, n: usize) -> Mat {
+        let mut m = Mat::eye(n);
+        match *self {
+            TTransform::Scaling { i, a } => m[(i, i)] = a,
+            TTransform::UpperShear { i, j, a } => m[(i, j)] = a,
+            TTransform::LowerShear { i, j, a } => m[(j, i)] = a,
+        }
+        m
+    }
+
+    /// Coordinates `(i, j)` touched (scaling reports `(i, i)`).
+    #[inline]
+    pub fn coords(&self) -> (usize, usize) {
+        match *self {
+            TTransform::Scaling { i, .. } => (i, i),
+            TTransform::UpperShear { i, j, .. } | TTransform::LowerShear { i, j, .. } => (i, j),
+        }
+    }
+
+    /// The scalar parameter `a`.
+    #[inline]
+    pub fn param(&self) -> f64 {
+        match *self {
+            TTransform::Scaling { a, .. }
+            | TTransform::UpperShear { a, .. }
+            | TTransform::LowerShear { a, .. } => a,
+        }
+    }
+
+    /// Replace the scalar parameter (used by the polish step).
+    #[inline]
+    pub fn with_param(&self, a: f64) -> TTransform {
+        match *self {
+            TTransform::Scaling { i, .. } => TTransform::Scaling { i, a },
+            TTransform::UpperShear { i, j, .. } => TTransform::UpperShear { i, j, a },
+            TTransform::LowerShear { i, j, .. } => TTransform::LowerShear { i, j, a },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Rng64;
+
+    fn random_t(rng: &mut Rng64, n: usize) -> TTransform {
+        let i = rng.below(n - 1);
+        let j = i + 1 + rng.below(n - 1 - i);
+        match rng.below(3) {
+            0 => TTransform::Scaling { i, a: rng.randn().abs() + 0.1 },
+            1 => TTransform::UpperShear { i, j, a: rng.randn() },
+            _ => TTransform::LowerShear { i, j, a: rng.randn() },
+        }
+    }
+
+    #[test]
+    fn apply_matches_dense() {
+        let mut rng = Rng64::new(51);
+        for _ in 0..60 {
+            let t = random_t(&mut rng, 6);
+            let dense = t.to_dense(6);
+            let x: Vec<f64> = (0..6).map(|_| rng.randn()).collect();
+            let want = dense.matvec(&x);
+            let mut got = x.clone();
+            t.apply_vec(&mut got);
+            for (w, g) in want.iter().zip(got.iter()) {
+                assert!((w - g).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn inverse_roundtrip() {
+        let mut rng = Rng64::new(52);
+        for _ in 0..60 {
+            let t = random_t(&mut rng, 5);
+            let mut x: Vec<f64> = (0..5).map(|_| rng.randn()).collect();
+            let orig = x.clone();
+            t.apply_vec(&mut x);
+            t.apply_vec_inv(&mut x);
+            for (a, b) in orig.iter().zip(x.iter()) {
+                assert!((a - b).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn dense_inverse_matches() {
+        let mut rng = Rng64::new(53);
+        for _ in 0..40 {
+            let t = random_t(&mut rng, 4);
+            let prod = t.to_dense(4).matmul(&t.inverse().to_dense(4));
+            assert!(prod.fro_dist_sq(&Mat::eye(4)) < 1e-20);
+        }
+    }
+
+    #[test]
+    fn matrix_ops_match_dense() {
+        let mut rng = Rng64::new(54);
+        for _ in 0..40 {
+            let t = random_t(&mut rng, 5);
+            let dense = t.to_dense(5);
+            let m = Mat::randn(5, 5, &mut rng);
+
+            let mut left = m.clone();
+            t.apply_left(&mut left);
+            assert!(left.fro_dist_sq(&dense.matmul(&m)) < 1e-20);
+
+            let mut right = m.clone();
+            t.apply_right(&mut right);
+            assert!(right.fro_dist_sq(&m.matmul(&dense)) < 1e-20);
+
+            let mut conj = m.clone();
+            t.conjugate(&mut conj);
+            let want = dense.matmul(&m).matmul(&t.inverse().to_dense(5));
+            assert!(conj.fro_dist_sq(&want) < 1e-18);
+        }
+    }
+
+    #[test]
+    fn flops_per_paper() {
+        assert_eq!(TTransform::Scaling { i: 0, a: 2.0 }.flops(), 1);
+        assert_eq!(TTransform::UpperShear { i: 0, j: 1, a: 2.0 }.flops(), 2);
+        assert_eq!(TTransform::LowerShear { i: 0, j: 1, a: 2.0 }.flops(), 2);
+    }
+
+    #[test]
+    fn with_param_preserves_structure() {
+        let t = TTransform::UpperShear { i: 1, j: 3, a: 0.5 };
+        let t2 = t.with_param(-2.0);
+        assert_eq!(t2.coords(), (1, 3));
+        assert_eq!(t2.param(), -2.0);
+    }
+}

@@ -1,0 +1,154 @@
+//! Cross-layer integration: the PJRT-executed AOT artifact must agree
+//! with the native rust butterfly fast path on random plans.
+//!
+//! Requires `make artifacts` (skips with a message when absent so
+//! `cargo test` works on a fresh checkout).
+
+use std::path::Path;
+
+use fastes::linalg::Rng64;
+use fastes::runtime::{ArtifactKind, ArtifactStore};
+use fastes::transforms::{
+    apply_gchain_batch_f32, apply_gchain_batch_f32_t, GChain, GKind, GTransform, SignalBlock,
+};
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.txt").exists().then_some(dir)
+}
+
+fn random_chain(rng: &mut Rng64, n: usize, g: usize) -> GChain {
+    let mut ch = GChain::identity(n);
+    for _ in 0..g {
+        let i = rng.below(n - 1);
+        let j = i + 1 + rng.below(n - 1 - i);
+        let th = rng.uniform_in(0.0, std::f64::consts::TAU);
+        let kind = if rng.bernoulli(0.5) { GKind::Rotation } else { GKind::Reflection };
+        ch.transforms.push(GTransform::new(i, j, th.cos(), th.sin(), kind));
+    }
+    ch
+}
+
+fn random_block(rng: &mut Rng64, n: usize, batch: usize) -> SignalBlock {
+    let signals: Vec<Vec<f32>> = (0..batch)
+        .map(|_| (0..n).map(|_| rng.randn() as f32).collect())
+        .collect();
+    SignalBlock::from_signals(&signals)
+}
+
+#[test]
+fn pjrt_gft_fwd_matches_native() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let mut store = ArtifactStore::open(&dir).unwrap();
+    let meta = store.find(ArtifactKind::GftFwd, 16, 4).expect("n=16 artifact").clone();
+    let mut rng = Rng64::new(701);
+    for trial in 0..3 {
+        // vary the live plan length to exercise identity padding
+        let g = [meta.g, meta.g / 2, 1][trial % 3];
+        let plan = random_chain(&mut rng, meta.n, g).to_plan();
+        let block = random_block(&mut rng, meta.n, meta.batch);
+        let engine = store.engine(&meta.name).unwrap();
+        let got = engine.execute(&plan, &block, None).unwrap();
+        let mut want = block.clone();
+        apply_gchain_batch_f32_t(&plan, &mut want);
+        for b in 0..meta.batch {
+            for (x, y) in got.signal(b).iter().zip(want.signal(b).iter()) {
+                assert!((x - y).abs() < 1e-4, "trial {trial} b={b}: {x} vs {y}");
+            }
+        }
+    }
+}
+
+#[test]
+fn pjrt_gft_inv_matches_native() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let mut store = ArtifactStore::open(&dir).unwrap();
+    let meta = store.find(ArtifactKind::GftInv, 16, 4).expect("artifact").clone();
+    let mut rng = Rng64::new(702);
+    let plan = random_chain(&mut rng, meta.n, meta.g).to_plan();
+    let block = random_block(&mut rng, meta.n, meta.batch);
+    let engine = store.engine(&meta.name).unwrap();
+    let got = engine.execute(&plan, &block, None).unwrap();
+    let mut want = block.clone();
+    apply_gchain_batch_f32(&plan, &mut want);
+    for b in 0..meta.batch {
+        for (x, y) in got.signal(b).iter().zip(want.signal(b).iter()) {
+            assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+        }
+    }
+}
+
+#[test]
+fn pjrt_filter_matches_native_composition() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let mut store = ArtifactStore::open(&dir).unwrap();
+    let meta = store.find(ArtifactKind::GraphFilter, 16, 4).expect("artifact").clone();
+    let mut rng = Rng64::new(703);
+    let plan = random_chain(&mut rng, meta.n, meta.g / 2).to_plan();
+    let block = random_block(&mut rng, meta.n, meta.batch);
+    let h: Vec<f32> = (0..meta.n).map(|_| rng.uniform_in(0.0, 2.0) as f32).collect();
+    let engine = store.engine(&meta.name).unwrap();
+    let got = engine.execute(&plan, &block, Some(&h)).unwrap();
+    // native composition: Ū diag(h) Ūᵀ x
+    let mut want = block.clone();
+    apply_gchain_batch_f32_t(&plan, &mut want);
+    for i in 0..meta.n {
+        for b in 0..meta.batch {
+            want.data[i * want.batch + b] *= h[i];
+        }
+    }
+    apply_gchain_batch_f32(&plan, &mut want);
+    for b in 0..meta.batch {
+        for (x, y) in got.signal(b).iter().zip(want.signal(b).iter()) {
+            assert!((x - y).abs() < 2e-4, "{x} vs {y}");
+        }
+    }
+}
+
+#[test]
+fn pjrt_fwd_then_inv_roundtrip() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let mut store = ArtifactStore::open(&dir).unwrap();
+    let fwd = store.find(ArtifactKind::GftFwd, 16, 4).unwrap().clone();
+    let inv = store.find(ArtifactKind::GftInv, 16, 4).unwrap().clone();
+    let mut rng = Rng64::new(704);
+    let plan = random_chain(&mut rng, 16, fwd.g).to_plan();
+    let block = random_block(&mut rng, 16, 4);
+    let mid = store.engine(&fwd.name).unwrap().execute(&plan, &block, None).unwrap();
+    let back = store.engine(&inv.name).unwrap().execute(&plan, &mid, None).unwrap();
+    for b in 0..4 {
+        for (x, y) in back.signal(b).iter().zip(block.signal(b).iter()) {
+            assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+        }
+    }
+}
+
+#[test]
+fn engine_rejects_bad_shapes() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let mut store = ArtifactStore::open(&dir).unwrap();
+    let meta = store.find(ArtifactKind::GftFwd, 16, 4).unwrap().clone();
+    let mut rng = Rng64::new(705);
+    let plan_too_long = random_chain(&mut rng, 16, meta.g + 1).to_plan();
+    let block = random_block(&mut rng, 16, 4);
+    let engine = store.engine(&meta.name).unwrap();
+    assert!(engine.execute(&plan_too_long, &block, None).is_err());
+    let wrong_batch = random_block(&mut rng, 16, 3);
+    let plan = random_chain(&mut rng, 16, 4).to_plan();
+    assert!(engine.execute(&plan, &wrong_batch, None).is_err());
+}

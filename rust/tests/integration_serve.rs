@@ -1,0 +1,148 @@
+//! End-to-end serving integration: factored GFT plans through the
+//! coordinator, native and PJRT backends, correctness under load.
+
+use std::path::Path;
+
+use fastes::factor::{SymFactorizer, SymOptions};
+use fastes::graphs;
+use fastes::linalg::Rng64;
+use fastes::runtime::ArtifactStore;
+use fastes::serve::{
+    Backend, Coordinator, NativeGftBackend, PjrtGftBackend, ServeConfig, TransformDirection,
+};
+
+fn factored_plan(n: usize, g: usize, seed: u64) -> (fastes::transforms::GChain, fastes::transforms::PlanArrays) {
+    let mut rng = Rng64::new(seed);
+    let graph = graphs::community(n, &mut rng);
+    let l = graph.laplacian();
+    let f = SymFactorizer::new(&l, g, SymOptions { max_sweeps: 1, ..Default::default() }).run();
+    let plan = f.chain.to_plan();
+    (f.chain, plan)
+}
+
+#[test]
+fn native_serving_matches_reference_under_load() {
+    let n = 32;
+    let (chain, plan) = factored_plan(n, 200, 1001);
+    let coord = Coordinator::start(
+        move || {
+            Ok(Box::new(NativeGftBackend::new(plan, TransformDirection::Forward, 8, None))
+                as Box<dyn Backend>)
+        },
+        ServeConfig { max_batch: 8, ..Default::default() },
+    )
+    .unwrap();
+    let mut rng = Rng64::new(1002);
+    let mut pairs = Vec::new();
+    for _ in 0..200 {
+        let sig: Vec<f32> = (0..n).map(|_| rng.randn() as f32).collect();
+        let t = coord.submit(sig.clone()).unwrap();
+        pairs.push((sig, t));
+    }
+    for (sig, t) in pairs {
+        let out = t.wait().unwrap();
+        let mut want: Vec<f64> = sig.iter().map(|&v| v as f64).collect();
+        chain.apply_vec_t(&mut want);
+        for (w, o) in want.iter().zip(out.iter()) {
+            assert!((*w as f32 - o).abs() < 1e-3, "{w} vs {o}");
+        }
+    }
+    let m = coord.shutdown();
+    assert_eq!(m.completed, 200);
+    assert_eq!(m.errors, 0);
+}
+
+#[test]
+fn pjrt_serving_matches_native_serving() {
+    if !Path::new("artifacts/manifest.txt").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let n = 16;
+    let (_, plan) = factored_plan(n, 48, 1003);
+    let batch = 4;
+
+    let p1 = plan.clone();
+    let native = Coordinator::start(
+        move || {
+            Ok(Box::new(NativeGftBackend::new(p1, TransformDirection::Forward, batch, None))
+                as Box<dyn Backend>)
+        },
+        ServeConfig { max_batch: batch, ..Default::default() },
+    )
+    .unwrap();
+    let p2 = plan.clone();
+    let pjrt = Coordinator::start(
+        move || {
+            let store = ArtifactStore::open(Path::new("artifacts"))?;
+            Ok(Box::new(PjrtGftBackend::new(store, TransformDirection::Forward, p2, batch, None)?)
+                as Box<dyn Backend>)
+        },
+        ServeConfig { max_batch: batch, ..Default::default() },
+    )
+    .unwrap();
+
+    let mut rng = Rng64::new(1004);
+    for _ in 0..20 {
+        let sig: Vec<f32> = (0..n).map(|_| rng.randn() as f32).collect();
+        let a = native.submit(sig.clone()).unwrap().wait().unwrap();
+        let b = pjrt.submit(sig).unwrap().wait().unwrap();
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+        }
+    }
+    assert_eq!(native.shutdown().errors, 0);
+    assert_eq!(pjrt.shutdown().errors, 0);
+}
+
+#[test]
+fn pjrt_backend_reports_missing_artifact() {
+    if !Path::new("artifacts/manifest.txt").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    // n=7 has no artifact → the coordinator factory must fail cleanly
+    let plan = fastes::transforms::PlanArrays { n: 7, ..Default::default() };
+    let r = Coordinator::start(
+        move || {
+            let store = ArtifactStore::open(Path::new("artifacts"))?;
+            Ok(Box::new(PjrtGftBackend::new(store, TransformDirection::Forward, plan, 4, None)?)
+                as Box<dyn Backend>)
+        },
+        ServeConfig::default(),
+    );
+    assert!(r.is_err(), "expected startup failure for missing artifact");
+}
+
+#[test]
+fn filter_serving_is_consistent_with_manual_composition() {
+    let n = 24;
+    let (chain, plan) = factored_plan(n, 150, 1005);
+    let h: Vec<f32> = (0..n).map(|i| 1.0 / (1.0 + i as f32)).collect();
+    let h2 = h.clone();
+    let coord = Coordinator::start(
+        move || {
+            Ok(Box::new(NativeGftBackend::new(
+                plan,
+                TransformDirection::Filter,
+                4,
+                Some(h2),
+            )) as Box<dyn Backend>)
+        },
+        ServeConfig { max_batch: 4, ..Default::default() },
+    )
+    .unwrap();
+    let mut rng = Rng64::new(1006);
+    let sig: Vec<f32> = (0..n).map(|_| rng.randn() as f32).collect();
+    let out = coord.submit(sig.clone()).unwrap().wait().unwrap();
+    // manual: Ū diag(h) Ūᵀ x in f64
+    let mut want: Vec<f64> = sig.iter().map(|&v| v as f64).collect();
+    chain.apply_vec_t(&mut want);
+    for (v, hv) in want.iter_mut().zip(h.iter()) {
+        *v *= *hv as f64;
+    }
+    chain.apply_vec(&mut want);
+    for (w, o) in want.iter().zip(out.iter()) {
+        assert!((*w as f32 - o).abs() < 1e-3, "{w} vs {o}");
+    }
+}

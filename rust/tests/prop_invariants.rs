@@ -1,0 +1,258 @@
+//! Property-based tests (crate-local harness — `fastes::prop`) over the
+//! coordinator, the chains and Algorithm 1.
+
+use fastes::factor::{GeneralFactorizer, GeneralOptions, SymFactorizer, SymOptions};
+use fastes::linalg::{Mat, Rng64};
+use fastes::prop::{forall, PropConfig};
+use fastes::serve::{
+    Backend, Coordinator, NativeGftBackend, ServeConfig, TransformDirection,
+};
+use fastes::transforms::{GChain, GKind, GTransform, TChain, TTransform};
+
+fn random_gchain(rng: &mut Rng64, n: usize, g: usize) -> GChain {
+    let mut ch = GChain::identity(n);
+    for _ in 0..g {
+        let i = rng.below(n - 1);
+        let j = i + 1 + rng.below(n - 1 - i);
+        let th = rng.uniform_in(0.0, std::f64::consts::TAU);
+        let kind = if rng.bernoulli(0.5) { GKind::Rotation } else { GKind::Reflection };
+        ch.transforms.push(GTransform::new(i, j, th.cos(), th.sin(), kind));
+    }
+    ch
+}
+
+fn random_tchain(rng: &mut Rng64, n: usize, m: usize) -> TChain {
+    let mut ch = TChain::identity(n);
+    for _ in 0..m {
+        let i = rng.below(n - 1);
+        let j = i + 1 + rng.below(n - 1 - i);
+        ch.transforms.push(match rng.below(3) {
+            0 => TTransform::Scaling { i, a: rng.randn().abs() + 0.3 },
+            1 => TTransform::UpperShear { i, j, a: 0.4 * rng.randn() },
+            _ => TTransform::LowerShear { i, j, a: 0.4 * rng.randn() },
+        });
+    }
+    ch
+}
+
+#[test]
+fn prop_gchain_is_orthonormal() {
+    forall(
+        "G-chain dense product is orthonormal",
+        PropConfig { cases: 40, max_size: 20, ..Default::default() },
+        |rng, size| {
+            let n = size.max(2);
+            random_gchain(rng, n, 3 * n)
+        },
+        |ch| {
+            let d = ch.to_dense();
+            let p = d.transpose().matmul(&d);
+            let err = p.fro_dist_sq(&Mat::eye(ch.n));
+            if err < 1e-16 * (ch.n as f64) {
+                Ok(())
+            } else {
+                Err(format!("UᵀU deviates from I by {err}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_frobenius_invariance_under_gchain() {
+    forall(
+        "‖ŪM‖_F = ‖M‖_F",
+        PropConfig { cases: 30, max_size: 16, ..Default::default() },
+        |rng, size| {
+            let n = size.max(2);
+            (random_gchain(rng, n, 2 * n), Mat::randn(n, n, rng))
+        },
+        |(ch, m)| {
+            let before = m.fro_norm_sq();
+            let mut after = m.clone();
+            ch.apply_left(&mut after);
+            let after = after.fro_norm_sq();
+            if (before - after).abs() < 1e-9 * (1.0 + before) {
+                Ok(())
+            } else {
+                Err(format!("{before} → {after}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_tchain_inverse_roundtrip() {
+    forall(
+        "T̄⁻¹ T̄ x = x",
+        PropConfig { cases: 40, max_size: 20, ..Default::default() },
+        |rng, size| {
+            let n = size.max(2);
+            let ch = random_tchain(rng, n, 3 * n);
+            let x: Vec<f64> = (0..n).map(|_| rng.randn()).collect();
+            (ch, x)
+        },
+        |(ch, x)| {
+            let mut y = x.clone();
+            ch.apply_vec(&mut y);
+            ch.apply_vec_inv(&mut y);
+            let dev = x
+                .iter()
+                .zip(y.iter())
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f64, f64::max);
+            if dev < 1e-6 {
+                Ok(())
+            } else {
+                Err(format!("round-trip deviation {dev}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_sym_factorization_monotone_and_bounded() {
+    forall(
+        "Algorithm 1 (sym): monotone objective, error ≤ identity baseline",
+        PropConfig { cases: 12, max_size: 18, ..Default::default() },
+        |rng, size| {
+            let n = size.max(4);
+            let x = Mat::randn(n, n, rng);
+            &x + &x.transpose()
+        },
+        |s| {
+            let n = s.rows();
+            let f = SymFactorizer::new(
+                s,
+                3 * n,
+                SymOptions { max_sweeps: 3, eps: 0.0, ..Default::default() },
+            )
+            .run();
+            let mut prev = f.init_objective;
+            for &o in &f.objective_trace {
+                if o > prev * (1.0 + 1e-7) + 1e-7 {
+                    return Err(format!("objective increased {prev} → {o}"));
+                }
+                prev = o;
+            }
+            // identity baseline: s̄ = diag(S), Ū = I
+            let mut base = s.clone();
+            for i in 0..n {
+                base[(i, i)] = 0.0;
+            }
+            if f.objective() <= base.fro_norm_sq() * (1.0 + 1e-9) {
+                Ok(())
+            } else {
+                Err(format!("worse than identity: {} vs {}", f.objective(), base.fro_norm_sq()))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_gen_factorization_monotone() {
+    forall(
+        "Algorithm 1 (general): monotone objective",
+        PropConfig { cases: 8, max_size: 14, ..Default::default() },
+        |rng, size| Mat::randn(size.max(4), size.max(4), rng),
+        |c| {
+            let n = c.rows();
+            let f = GeneralFactorizer::new(
+                c,
+                3 * n,
+                GeneralOptions { max_sweeps: 2, eps: 0.0, ..Default::default() },
+            )
+            .run();
+            let mut prev = f.init_objective;
+            for &o in &f.objective_trace {
+                if o > prev * (1.0 + 1e-7) + 1e-7 {
+                    return Err(format!("objective increased {prev} → {o}"));
+                }
+                prev = o;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_coordinator_preserves_request_response_pairing() {
+    // whatever the batching, request k must get the transform of ITS
+    // signal (identity plan → response == request)
+    forall(
+        "coordinator pairing",
+        PropConfig { cases: 10, max_size: 12, ..Default::default() },
+        |rng, size| {
+            let n = size.max(2);
+            let count = 5 + rng.below(40);
+            let signals: Vec<Vec<f32>> = (0..count)
+                .map(|_| (0..n).map(|_| rng.randn() as f32).collect())
+                .collect();
+            (n, signals)
+        },
+        |(n, signals)| {
+            let n = *n;
+            let plan = fastes::transforms::PlanArrays { n, ..Default::default() };
+            let coord = Coordinator::start(
+                move || {
+                    Ok(Box::new(NativeGftBackend::new(
+                        plan,
+                        TransformDirection::Forward,
+                        4,
+                        None,
+                    )) as Box<dyn Backend>)
+                },
+                ServeConfig { max_batch: 4, ..Default::default() },
+            )
+            .map_err(|e| e.to_string())?;
+            let tickets: Vec<_> = signals
+                .iter()
+                .map(|s| coord.submit(s.clone()).map_err(|e| e.to_string()))
+                .collect::<Result<_, _>>()?;
+            for (sig, t) in signals.iter().zip(tickets) {
+                let out = t.wait().map_err(|e| e.to_string())?;
+                if &out != sig {
+                    return Err("response does not match request".into());
+                }
+            }
+            let m = coord.shutdown();
+            if m.completed as usize != signals.len() {
+                return Err(format!("completed {} of {}", m.completed, signals.len()));
+            }
+            if m.max_batch_seen > 4 {
+                return Err(format!("batch overflow {}", m.max_batch_seen));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_plan_roundtrip_preserves_apply() {
+    forall(
+        "plan serialization round-trip",
+        PropConfig { cases: 30, max_size: 16, ..Default::default() },
+        |rng, size| {
+            let n = size.max(2);
+            let ch = random_gchain(rng, n, 2 * n);
+            let x: Vec<f64> = (0..n).map(|_| rng.randn()).collect();
+            (ch, x)
+        },
+        |(ch, x)| {
+            let back = GChain::from_plan(&ch.to_plan());
+            let mut a = x.clone();
+            let mut b = x.clone();
+            ch.apply_vec(&mut a);
+            back.apply_vec(&mut b);
+            let dev = a
+                .iter()
+                .zip(b.iter())
+                .map(|(u, v)| (u - v).abs())
+                .fold(0.0f64, f64::max);
+            if dev < 1e-4 {
+                Ok(())
+            } else {
+                Err(format!("deviation {dev}"))
+            }
+        },
+    );
+}
