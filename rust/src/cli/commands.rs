@@ -5,7 +5,7 @@ use std::time::Instant;
 
 use anyhow::bail;
 
-use super::figures::{budget, random_gplan};
+use super::figures::{budget, random_gplan, random_tplan};
 use super::Args;
 use crate::factor::{GeneralFactorizer, GeneralOptions, SymFactorizer, SymOptions};
 use crate::graphs::{self, RealWorldGraph};
@@ -13,7 +13,7 @@ use crate::linalg::{eigh, Mat, Rng64};
 use crate::serve::{
     Backend, Coordinator, NativeGftBackend, PjrtGftBackend, ServeConfig, TransformDirection,
 };
-use crate::transforms::SignalBlock;
+use crate::transforms::{default_threads, ChainKind, CompiledPlan, SignalBlock};
 
 /// `fastes factor` — factor a random matrix and report accuracy/time.
 pub fn factor(a: &Args) -> crate::Result<()> {
@@ -141,6 +141,11 @@ pub fn serve(a: &Args) -> crate::Result<()> {
     let backend_kind = a.get_str("backend", "native");
     let artifacts = PathBuf::from(a.get_str("artifacts", "artifacts"));
     let seed: u64 = a.get("seed", 1)?;
+    let scheduled = a.has("scheduled");
+    let threads: usize = a.get("threads", default_threads())?;
+    if scheduled && backend_kind != "native" {
+        bail!("--scheduled is only supported with --backend native (got {backend_kind})");
+    }
 
     let mut rng = Rng64::new(seed);
     let graph = graphs::community(n, &mut rng);
@@ -157,8 +162,14 @@ pub fn serve(a: &Args) -> crate::Result<()> {
             let p = plan.clone();
             Coordinator::start(
                 move || {
-                    Ok(Box::new(NativeGftBackend::new(p, TransformDirection::Forward, batch, None))
-                        as Box<dyn Backend>)
+                    Ok(Box::new(NativeGftBackend::with_schedule(
+                        p,
+                        TransformDirection::Forward,
+                        batch,
+                        None,
+                        scheduled,
+                        threads,
+                    )) as Box<dyn Backend>)
                 },
                 config,
             )?
@@ -182,7 +193,10 @@ pub fn serve(a: &Args) -> crate::Result<()> {
         other => bail!("--backend must be native|pjrt (got {other})"),
     };
 
-    println!("serving {requests} requests (backend={backend_kind}, batch={batch})…");
+    println!(
+        "serving {requests} requests (backend={backend_kind}{}, batch={batch})…",
+        if scheduled { format!(" scheduled/{threads}t") } else { String::new() }
+    );
     let t0 = Instant::now();
     let mut pending = Vec::with_capacity(64);
     let mut checked = 0usize;
@@ -226,6 +240,65 @@ pub fn eigen(a: &Args) -> crate::Result<()> {
         e.values[0],
         e.values[n - 1],
         t0.elapsed()
+    );
+    Ok(())
+}
+
+/// `fastes schedule` — compile a butterfly chain into conflict-free
+/// layers, report the schedule shape (layer count / depth / width) and
+/// time sequential vs level-scheduled parallel apply.
+pub fn schedule(a: &Args) -> crate::Result<()> {
+    let n: usize = a.get("n", 512)?;
+    let alpha: usize = a.get("alpha", 2)?;
+    let batch: usize = a.get("batch", 32)?;
+    let threads: usize = a.get("threads", default_threads())?;
+    let seed: u64 = a.get("seed", 1)?;
+    let g = budget(alpha, n);
+    let mut rng = Rng64::new(seed);
+
+    let gchain = random_gplan(n, g, &mut rng);
+    let gcp = gchain.compile();
+    let tchain = random_tplan(n, g, &mut rng);
+    let tcp = tchain.compile();
+    for (label, stats) in [("G-chain", gcp.stats()), ("T-chain", tcp.stats())] {
+        println!(
+            "{label}: n={n} stages={} layers={} depth-reduction={:.1}x max-width={}",
+            stats.stages,
+            stats.layers,
+            stats.mean_width,
+            stats.max_width
+        );
+    }
+
+    // timing: sequential plan apply vs compiled apply at 1 and N threads
+    let plan = gchain.to_plan();
+    let signals: Vec<Vec<f32>> = (0..batch)
+        .map(|_| (0..n).map(|_| rng.randn() as f32).collect())
+        .collect();
+    let mut seq_block = SignalBlock::from_signals(&signals);
+    let t_seq = crate::bench_util::bench("sequential apply", 5, 0.05, || {
+        crate::transforms::apply_gchain_batch_f32(&plan, &mut seq_block);
+        seq_block.data[0]
+    });
+    let compiled = CompiledPlan::from_plan(&plan, ChainKind::G);
+    let mut one_block = SignalBlock::from_signals(&signals);
+    let t_one = crate::bench_util::bench("scheduled apply (1 thread)", 5, 0.05, || {
+        compiled.apply_batch(&mut one_block, 1);
+        one_block.data[0]
+    });
+    let mut par_block = SignalBlock::from_signals(&signals);
+    let t_par =
+        crate::bench_util::bench(&format!("scheduled apply ({threads} threads)"), 5, 0.05, || {
+            compiled.apply_batch(&mut par_block, threads);
+            par_block.data[0]
+        });
+    println!("{}", t_seq.line());
+    println!("{}", t_one.line());
+    println!("{}", t_par.line());
+    println!(
+        "batch={batch}: scheduled/1t vs sequential {:.2}x, scheduled/{threads}t vs sequential {:.2}x",
+        t_seq.min_s / t_one.min_s,
+        t_seq.min_s / t_par.min_s
     );
     Ok(())
 }

@@ -8,7 +8,10 @@
 //! * `gft` — build a graph, factor its Laplacian, report the fast-GFT
 //!   accuracy and flop counts.
 //! * `serve` — run the serving coordinator on a factored GFT and report
-//!   latency/throughput.
+//!   latency/throughput (`--scheduled` executes the level-scheduled
+//!   parallel plan).
+//! * `schedule` — compile a chain into conflict-free layers and report
+//!   layer counts/depth plus sequential-vs-parallel apply timings.
 //! * `eigen` — eigendecomposition smoke (substrate sanity).
 //! * `bench-apply` — quick butterfly-vs-dense apply timing.
 
@@ -87,6 +90,7 @@ pub fn run(args: Args) -> crate::Result<()> {
         "factor" => commands::factor(&args),
         "gft" => commands::gft(&args),
         "serve" => commands::serve(&args),
+        "schedule" => commands::schedule(&args),
         "eigen" => commands::eigen(&args),
         "bench-apply" => commands::bench_apply(&args),
         "help" | "--help" | "-h" => {
@@ -115,7 +119,12 @@ COMMANDS
                        [--n N] [--alpha A] [--directed] [--seed S]
   serve                serve batched GFT requests
                        [--backend native|pjrt] [--requests N] [--batch B]
-                       [--alpha A] [--artifacts DIR]
+                       [--alpha A] [--artifacts DIR] [--scheduled]
+                       [--threads T]
+  schedule             level-schedule a chain, report layers/depth and time
+                       sequential vs parallel apply
+                       [--n N] [--alpha A] [--batch B] [--threads T]
+                       [--seed S]
   eigen                symmetric eigensolver smoke [--n N] [--seed S]
   bench-apply          butterfly vs dense apply timing [--n N] [--alpha A]
   help                 this text

@@ -22,9 +22,24 @@
 //!
 //! The flagship application, the **fast graph Fourier transform**, lives in
 //! [`graphs`] (graph generators + Laplacians) and is served end-to-end by
-//! the tokio coordinator in [`serve`], which executes either the native
+//! the coordinator in [`serve`], which executes either the native
 //! rust butterfly fast-path from [`transforms`] or an AOT-compiled
 //! JAX/Pallas artifact through the PJRT runtime in [`runtime`].
+//!
+//! ## Level-scheduled parallel execution
+//!
+//! The `O(g)` apply is *sequential* as written (`G_1`, then `G_2`, …), but
+//! butterflies with disjoint `(i, j)` supports commute.
+//! [`transforms::schedule`] compiles any chain into **conflict-free
+//! layers** (greedy list scheduling over the coordinate-conflict DAG) and
+//! executes the compiled plan ([`transforms::CompiledPlan`]) with
+//! multi-threaded apply — across batch columns for serving workloads and
+//! across a layer's independent rotations for single large signals. The
+//! reordering only permutes commuting stages, so the scheduled apply is
+//! **bitwise identical** to the sequential one; the serving backend
+//! ([`serve::NativeGftBackend`]) exposes it as an opt-in fast path and the
+//! `fastes schedule` CLI reports layer counts, depth and measured
+//! speedups.
 //!
 //! ## Layering (three-layer AOT architecture)
 //!

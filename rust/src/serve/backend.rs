@@ -4,7 +4,8 @@ use anyhow::bail;
 
 use crate::runtime::{ArtifactKind, ArtifactStore};
 use crate::transforms::{
-    apply_gchain_batch_f32, apply_gchain_batch_f32_t, batch::SignalBlock, PlanArrays,
+    apply_gchain_batch_f32, apply_gchain_batch_f32_t, batch::SignalBlock, ChainKind, CompiledPlan,
+    PlanArrays,
 };
 
 /// Which direction of the transform the backend serves.
@@ -34,9 +35,16 @@ pub trait Backend {
 }
 
 /// Native rust butterfly fast path (the Fig.-6 "C implementation"
-/// analogue).
+/// analogue). Optionally executes through a level-scheduled
+/// [`CompiledPlan`] with multi-threaded apply (see
+/// [`crate::transforms::schedule`]); the compiled path is numerically
+/// identical to the sequential one.
 pub struct NativeGftBackend {
     plan: PlanArrays,
+    /// Level-scheduled execution plan (the parallel fast path).
+    compiled: Option<CompiledPlan>,
+    /// Worker threads for the compiled path.
+    threads: usize,
     direction: TransformDirection,
     max_batch: usize,
     /// Spectral filter diagonal (Filter direction only).
@@ -44,17 +52,49 @@ pub struct NativeGftBackend {
 }
 
 impl NativeGftBackend {
-    /// New backend over a G-chain plan.
+    /// New backend over a G-chain plan (sequential apply).
     pub fn new(
         plan: PlanArrays,
         direction: TransformDirection,
         max_batch: usize,
         filter: Option<Vec<f32>>,
     ) -> Self {
+        Self::with_schedule(plan, direction, max_batch, filter, false, 1)
+    }
+
+    /// New backend with an explicit execution strategy: when `scheduled`,
+    /// the plan is compiled into conflict-free layers at construction time
+    /// and applied with up to `threads` workers per batch.
+    pub fn with_schedule(
+        plan: PlanArrays,
+        direction: TransformDirection,
+        max_batch: usize,
+        filter: Option<Vec<f32>>,
+        scheduled: bool,
+        threads: usize,
+    ) -> Self {
         if direction == TransformDirection::Filter {
             assert!(filter.as_ref().is_some_and(|h| h.len() == plan.n), "filter length mismatch");
         }
-        NativeGftBackend { plan, direction, max_batch, filter }
+        let compiled = scheduled.then(|| CompiledPlan::from_plan(&plan, ChainKind::G));
+        NativeGftBackend {
+            plan,
+            compiled,
+            threads: threads.max(1),
+            direction,
+            max_batch,
+            filter,
+        }
+    }
+
+    /// `X ← diag(h) X` on the live block.
+    fn scale_rows(block: &mut SignalBlock, h: &[f32]) {
+        let b = block.batch;
+        for (i, &hi) in h.iter().enumerate() {
+            for v in &mut block.data[i * b..(i + 1) * b] {
+                *v *= hi;
+            }
+        }
     }
 }
 
@@ -71,19 +111,26 @@ impl Backend for NativeGftBackend {
         if block.n != self.plan.n {
             bail!("block n {} != plan n {}", block.n, self.plan.n);
         }
+        if let Some(cp) = &self.compiled {
+            match self.direction {
+                TransformDirection::Forward => cp.apply_batch_rev(block, self.threads),
+                TransformDirection::Inverse => cp.apply_batch(block, self.threads),
+                TransformDirection::Filter => {
+                    let h = self.filter.as_ref().expect("checked in with_schedule");
+                    cp.apply_batch_rev(block, self.threads);
+                    Self::scale_rows(block, h);
+                    cp.apply_batch(block, self.threads);
+                }
+            }
+            return Ok(());
+        }
         match self.direction {
             TransformDirection::Forward => apply_gchain_batch_f32_t(&self.plan, block),
             TransformDirection::Inverse => apply_gchain_batch_f32(&self.plan, block),
             TransformDirection::Filter => {
-                let h = self.filter.as_ref().expect("checked in new");
+                let h = self.filter.as_ref().expect("checked in with_schedule");
                 apply_gchain_batch_f32_t(&self.plan, block);
-                for i in 0..block.n {
-                    let hi = h[i];
-                    let b = block.batch;
-                    for v in &mut block.data[i * b..(i + 1) * b] {
-                        *v *= hi;
-                    }
-                }
+                Self::scale_rows(block, h);
                 apply_gchain_batch_f32(&self.plan, block);
             }
         }
@@ -91,7 +138,11 @@ impl Backend for NativeGftBackend {
     }
 
     fn name(&self) -> &str {
-        "native-gft"
+        if self.compiled.is_some() {
+            "native-gft-scheduled"
+        } else {
+            "native-gft"
+        }
     }
 }
 
@@ -217,6 +268,30 @@ mod tests {
         f.forward(&mut block).unwrap();
         for (a, b) in sig.iter().zip(block.signal(0).iter()) {
             assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn scheduled_backend_matches_sequential() {
+        let mut rng = Rng64::new(606);
+        let plan = random_plan(16, 120, 605);
+        let signals: Vec<Vec<f32>> =
+            (0..6).map(|_| (0..16).map(|_| rng.randn() as f32).collect()).collect();
+        let h: Vec<f32> = (0..16).map(|i| 1.0 / (1.0 + i as f32)).collect();
+        for direction in
+            [TransformDirection::Forward, TransformDirection::Inverse, TransformDirection::Filter]
+        {
+            let filter =
+                (direction == TransformDirection::Filter).then(|| h.clone());
+            let mut seq = NativeGftBackend::new(plan.clone(), direction, 6, filter.clone());
+            let mut sched =
+                NativeGftBackend::with_schedule(plan.clone(), direction, 6, filter, true, 4);
+            assert_eq!(sched.name(), "native-gft-scheduled");
+            let mut a = SignalBlock::from_signals(&signals);
+            let mut b = SignalBlock::from_signals(&signals);
+            seq.forward(&mut a).unwrap();
+            sched.forward(&mut b).unwrap();
+            assert_eq!(a.data, b.data, "direction {direction:?} diverged");
         }
     }
 

@@ -9,6 +9,7 @@
 //! kernel's batch-in-lanes mapping (DESIGN.md §3).
 
 use super::chain::PlanArrays;
+use super::schedule::CompiledPlan;
 
 /// An `(n, batch)` row-major block of `f32` signals: column `b` is the
 /// `b`-th signal. Rows are contiguous.
@@ -166,6 +167,20 @@ pub fn apply_tchain_batch_f32(plan: &PlanArrays, block: &mut SignalBlock, invers
     }
 }
 
+/// Apply a level-scheduled compiled plan to a signal block in place:
+/// `X ← Ū X` (G) or `X ← T̄ X` (T), on up to `threads` worker threads.
+/// Numerically identical to the sequential per-stage applies above — the
+/// schedule only reorders stages with disjoint supports.
+pub fn apply_compiled_batch_f32(cp: &CompiledPlan, block: &mut SignalBlock, threads: usize) {
+    cp.apply_batch(block, threads)
+}
+
+/// Reverse direction of [`apply_compiled_batch_f32`]: `X ← Ūᵀ X` (G, the
+/// forward GFT) or `X ← T̄⁻¹ X` (T).
+pub fn apply_compiled_batch_f32_rev(cp: &CompiledPlan, block: &mut SignalBlock, threads: usize) {
+    cp.apply_batch_rev(block, threads)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -245,6 +260,24 @@ mod tests {
         for (b, sig) in signals.iter().enumerate() {
             for (w, g) in sig.iter().zip(block.signal(b).iter()) {
                 assert!((w - g).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn compiled_wrappers_roundtrip() {
+        let mut rng = Rng64::new(85);
+        let n = 12;
+        let ch = random_gchain(&mut rng, n, 30);
+        let cp = ch.compile();
+        let signals: Vec<Vec<f32>> =
+            (0..3).map(|_| (0..n).map(|_| rng.randn() as f32).collect()).collect();
+        let mut block = SignalBlock::from_signals(&signals);
+        apply_compiled_batch_f32(&cp, &mut block, 2);
+        apply_compiled_batch_f32_rev(&cp, &mut block, 2);
+        for (b, sig) in signals.iter().enumerate() {
+            for (w, g) in sig.iter().zip(block.signal(b).iter()) {
+                assert!((w - g).abs() < 1e-4, "{w} vs {g}");
             }
         }
     }

@@ -156,6 +156,13 @@ impl GChain {
         p
     }
 
+    /// Compile into a level-scheduled [`super::CompiledPlan`]: conflict-free
+    /// layers of commuting butterflies with a multi-threaded executor. The
+    /// compiled apply is bitwise identical to the sequential apply.
+    pub fn compile(&self) -> super::schedule::CompiledPlan {
+        super::schedule::CompiledPlan::from_gchain(self)
+    }
+
     /// Rebuild from a flat plan (inverse of [`GChain::to_plan`], up to f32
     /// rounding of the parameters).
     pub fn from_plan(p: &PlanArrays) -> Self {
@@ -293,6 +300,13 @@ impl TChain {
             });
         }
         p
+    }
+
+    /// Compile into a level-scheduled [`super::CompiledPlan`] (see
+    /// [`GChain::compile`]); the reverse direction of the compiled plan is
+    /// the chain inverse `T̄⁻¹`.
+    pub fn compile(&self) -> super::schedule::CompiledPlan {
+        super::schedule::CompiledPlan::from_tchain(self)
     }
 
     /// Rebuild from a flat plan.

@@ -13,16 +13,21 @@
 //!   runtime and the AOT artifacts.
 //!
 //! The batched `f32` fast path used on the serving hot loop lives in
-//! [`batch`].
+//! [`batch`]; the level-scheduling compiler and its multi-threaded
+//! executor (conflict-free layers of commuting butterflies) live in
+//! [`schedule`].
 
 pub mod batch;
 mod chain;
 mod gtransform;
+pub mod schedule;
 mod ttransform;
 
 pub use batch::{
-    apply_gchain_batch_f32, apply_gchain_batch_f32_t, apply_tchain_batch_f32, SignalBlock,
+    apply_compiled_batch_f32, apply_compiled_batch_f32_rev, apply_gchain_batch_f32,
+    apply_gchain_batch_f32_t, apply_tchain_batch_f32, SignalBlock,
 };
 pub use chain::{GChain, PlanArrays, TChain};
 pub use gtransform::{GKind, GTransform};
+pub use schedule::{default_threads, ChainKind, CompiledPlan, ScheduleStats};
 pub use ttransform::TTransform;

@@ -1,0 +1,776 @@
+//! Level-scheduling compiler + parallel executor for butterfly chains.
+//!
+//! A chain `Ū = G_g … G_1` (or `T̄ = T_m … T_1`) is a *sequential* product,
+//! but most neighbouring factors touch disjoint coordinate pairs and
+//! therefore commute. This module compiles a chain into **conflict-free
+//! layers**: a greedy list-scheduling pass assigns stage `k` with support
+//! `{i, j}` to layer `max(earliest[i], earliest[j])` and bumps both
+//! coordinates' `earliest` counters, so
+//!
+//! * transforms inside one layer have pairwise-disjoint supports (they
+//!   commute and can run concurrently — the same stage-parallel structure
+//!   FFT butterflies and the factorizations of Le Magoarou et al. 2018 /
+//!   Frerix & Bruna 2019 exploit), and
+//! * any two transforms sharing a coordinate keep their original relative
+//!   order across layers, so executing layers in order — stages within a
+//!   layer in *any* order — reproduces the sequential product **bitwise**
+//!   (disjoint supports mean disjoint data, so no floating-point
+//!   reassociation happens at all).
+//!
+//! The compiled form ([`CompiledPlan`]) stores contiguous per-layer
+//! index/coefficient arrays (CSR-style `layer_ptr`), with coefficients in
+//! both `f64` (exact vector path) and `f32` (batched serving path).
+//! Execution is multi-threaded two ways:
+//!
+//! * **across signals** — for batches, each thread owns a contiguous range
+//!   of batch columns and streams the whole plan over it with no
+//!   synchronization at all (columns never interact);
+//! * **across rotations** — for a single large signal (or a tiny batch),
+//!   each layer's stages are dealt round-robin to the threads, which write
+//!   disjoint rows; a barrier separates layers.
+
+use std::ops::Range;
+use std::sync::Barrier;
+
+use super::batch::SignalBlock;
+use super::chain::{GChain, PlanArrays, TChain};
+use super::gtransform::GKind;
+use super::ttransform::TTransform;
+
+/// Which chain family a [`CompiledPlan`] executes. Determines the meaning
+/// of the "reverse" direction: transpose (`Ūᵀ`) for G, inverse (`T̄⁻¹`)
+/// for T.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChainKind {
+    /// Extended orthonormal Givens chain (rotations + reflections).
+    G,
+    /// Scaling/shear chain.
+    T,
+}
+
+// Per-stage opcodes (unified across chain kinds).
+const OP_ROTATION: i8 = 0;
+const OP_REFLECTION: i8 = 1;
+const OP_SCALING: i8 = 2;
+const OP_UPPER_SHEAR: i8 = 3;
+const OP_LOWER_SHEAR: i8 = 4;
+
+/// One stage as fed to the scheduling pass.
+struct Stage {
+    i: usize,
+    j: usize,
+    op: i8,
+    p0: f64,
+    p1: f64,
+}
+
+/// Summary statistics of a schedule (reported by the `schedule` CLI).
+#[derive(Clone, Copy, Debug)]
+pub struct ScheduleStats {
+    /// Number of butterfly stages (`g` / `m`).
+    pub stages: usize,
+    /// Number of conflict-free layers (the critical-path depth).
+    pub layers: usize,
+    /// Largest layer (peak available parallelism).
+    pub max_width: usize,
+    /// Mean stages per layer (`stages / layers`).
+    pub mean_width: f64,
+}
+
+/// Minimum total element-operations (`stages × batch`) before any
+/// thread-spawning mode is considered; below this the per-apply
+/// spawn/join cost dominates the whole transform and the plan runs
+/// inline.
+const PARALLEL_MIN_WORK: usize = 8192;
+
+/// Minimum per-layer element-operations (`batch × mean layer width`)
+/// for the barrier-synchronized rotation-parallel mode to pay off; below
+/// this the compiled plan runs inline (barrier latency would dominate).
+const LAYER_PARALLEL_MIN_WORK: f64 = 1024.0;
+
+/// A chain compiled into conflict-free layers with flat per-layer arrays.
+#[derive(Clone, Debug)]
+pub struct CompiledPlan {
+    n: usize,
+    kind: ChainKind,
+    /// Schedule shape, computed once at build time.
+    stats: ScheduleStats,
+    /// CSR offsets: layer `l` owns stage slots `layer_ptr[l]..layer_ptr[l+1]`.
+    layer_ptr: Vec<usize>,
+    idx_i: Vec<u32>,
+    idx_j: Vec<u32>,
+    op: Vec<i8>,
+    p0: Vec<f64>,
+    p1: Vec<f64>,
+    /// `f32` copies of the coefficients for the batched serving path.
+    p0f: Vec<f32>,
+    p1f: Vec<f32>,
+}
+
+impl CompiledPlan {
+    /// Compile a G-chain (exact `f64` coefficients).
+    pub fn from_gchain(chain: &GChain) -> CompiledPlan {
+        let stages: Vec<Stage> = chain
+            .transforms
+            .iter()
+            .map(|g| Stage {
+                i: g.i,
+                j: g.j,
+                op: if g.kind == GKind::Rotation { OP_ROTATION } else { OP_REFLECTION },
+                p0: g.c,
+                p1: g.s,
+            })
+            .collect();
+        Self::build(chain.n, ChainKind::G, stages)
+    }
+
+    /// Compile a T-chain (exact `f64` coefficients).
+    pub fn from_tchain(chain: &TChain) -> CompiledPlan {
+        let stages: Vec<Stage> = chain
+            .transforms
+            .iter()
+            .map(|t| match *t {
+                TTransform::Scaling { i, a } => Stage { i, j: i, op: OP_SCALING, p0: a, p1: 0.0 },
+                TTransform::UpperShear { i, j, a } => {
+                    Stage { i, j, op: OP_UPPER_SHEAR, p0: a, p1: 0.0 }
+                }
+                TTransform::LowerShear { i, j, a } => {
+                    Stage { i, j, op: OP_LOWER_SHEAR, p0: a, p1: 0.0 }
+                }
+            })
+            .collect();
+        Self::build(chain.n, ChainKind::T, stages)
+    }
+
+    /// Compile a flat [`PlanArrays`] (the serving/AOT interchange format).
+    /// The plan's `f32` parameters widen losslessly to `f64`, so the `f32`
+    /// batched path is bit-identical to the uncompiled plan path.
+    pub fn from_plan(plan: &PlanArrays, kind: ChainKind) -> CompiledPlan {
+        let stages: Vec<Stage> = (0..plan.len())
+            .map(|k| {
+                let i = plan.idx_i[k] as usize;
+                let j = plan.idx_j[k] as usize;
+                let op = match kind {
+                    ChainKind::G => {
+                        if plan.kind[k] >= 0 {
+                            OP_ROTATION
+                        } else {
+                            OP_REFLECTION
+                        }
+                    }
+                    ChainKind::T => match plan.kind[k] {
+                        0 => OP_SCALING,
+                        1 => OP_UPPER_SHEAR,
+                        2 => OP_LOWER_SHEAR,
+                        other => panic!("bad T plan kind {other}"),
+                    },
+                };
+                Stage { i, j, op, p0: plan.p0[k] as f64, p1: plan.p1[k] as f64 }
+            })
+            .collect();
+        Self::build(plan.n, kind, stages)
+    }
+
+    /// Greedy level scheduling + counting-sort into contiguous layers.
+    fn build(n: usize, kind: ChainKind, stages: Vec<Stage>) -> CompiledPlan {
+        let g = stages.len();
+        let mut earliest = vec![0usize; n.max(1)];
+        let mut layer_of = vec![0usize; g];
+        let mut layers = 0usize;
+        for (k, st) in stages.iter().enumerate() {
+            // hard asserts: these indices feed raw-pointer row offsets (and
+            // two disjoint &mut slices) in the unsafe batched executor, so
+            // malformed plans must panic here rather than alias or corrupt
+            // memory in release builds
+            assert!(st.i < n && st.j < n, "stage coordinates out of range (n = {n})");
+            assert!(
+                st.i != st.j || st.op == OP_SCALING,
+                "paired stage with i == j == {} (only scalings may touch one coordinate)",
+                st.i
+            );
+            let l = earliest[st.i].max(earliest[st.j]);
+            layer_of[k] = l;
+            earliest[st.i] = l + 1;
+            earliest[st.j] = l + 1;
+            layers = layers.max(l + 1);
+        }
+        let mut layer_ptr = vec![0usize; layers + 1];
+        for &l in &layer_of {
+            layer_ptr[l + 1] += 1;
+        }
+        for l in 0..layers {
+            layer_ptr[l + 1] += layer_ptr[l];
+        }
+        let mut cursor: Vec<usize> = layer_ptr[..layers].to_vec();
+        let mut idx_i = vec![0u32; g];
+        let mut idx_j = vec![0u32; g];
+        let mut op = vec![0i8; g];
+        let mut p0 = vec![0f64; g];
+        let mut p1 = vec![0f64; g];
+        for (k, st) in stages.iter().enumerate() {
+            let slot = cursor[layer_of[k]];
+            cursor[layer_of[k]] += 1;
+            idx_i[slot] = st.i as u32;
+            idx_j[slot] = st.j as u32;
+            op[slot] = st.op;
+            p0[slot] = st.p0;
+            p1[slot] = st.p1;
+        }
+        let p0f: Vec<f32> = p0.iter().map(|&v| v as f32).collect();
+        let p1f: Vec<f32> = p1.iter().map(|&v| v as f32).collect();
+        let max_width =
+            (0..layers).map(|l| layer_ptr[l + 1] - layer_ptr[l]).max().unwrap_or(0);
+        let stats = ScheduleStats {
+            stages: g,
+            layers,
+            max_width,
+            mean_width: if layers == 0 { 0.0 } else { g as f64 / layers as f64 },
+        };
+        CompiledPlan { n, kind, stats, layer_ptr, idx_i, idx_j, op, p0, p1, p0f, p1f }
+    }
+
+    /// Problem dimension `n`.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Number of stages.
+    pub fn len(&self) -> usize {
+        self.op.len()
+    }
+
+    /// `true` when the plan is the identity.
+    pub fn is_empty(&self) -> bool {
+        self.op.is_empty()
+    }
+
+    /// Chain family.
+    pub fn kind(&self) -> ChainKind {
+        self.kind
+    }
+
+    /// Number of conflict-free layers (critical-path depth).
+    pub fn num_layers(&self) -> usize {
+        self.layer_ptr.len() - 1
+    }
+
+    /// Stage-slot range of layer `l`.
+    pub fn layer_range(&self, l: usize) -> Range<usize> {
+        self.layer_ptr[l]..self.layer_ptr[l + 1]
+    }
+
+    /// Support of the stage in flattened slot `slot`: `(i, j)`, with
+    /// `i == j` for scalings.
+    pub fn stage_support(&self, slot: usize) -> (usize, usize) {
+        (self.idx_i[slot] as usize, self.idx_j[slot] as usize)
+    }
+
+    /// Schedule summary (computed once at build time).
+    pub fn stats(&self) -> ScheduleStats {
+        self.stats
+    }
+
+    // ---------------- f64 single-vector execution -----------------------
+
+    /// Forward apply in `f64`: `x ← Ū x` (G) or `x ← T̄ x` (T). Bitwise
+    /// identical to the sequential chain apply.
+    pub fn apply_vec(&self, x: &mut [f64]) {
+        self.apply_vec_dir(x, false)
+    }
+
+    /// Reverse apply in `f64`: `x ← Ūᵀ x` (G) or `x ← T̄⁻¹ x` (T).
+    pub fn apply_vec_rev(&self, x: &mut [f64]) {
+        self.apply_vec_dir(x, true)
+    }
+
+    fn apply_vec_dir(&self, x: &mut [f64], rev: bool) {
+        assert_eq!(x.len(), self.n, "vector length mismatch");
+        let layers = self.num_layers();
+        for lk in 0..layers {
+            let l = if rev { layers - 1 - lk } else { lk };
+            for slot in self.layer_range(l) {
+                let i = self.idx_i[slot] as usize;
+                let j = self.idx_j[slot] as usize;
+                let (c, s) = (self.p0[slot], self.p1[slot]);
+                match (self.op[slot], rev) {
+                    (OP_ROTATION, false) => {
+                        let (a, b) = (x[i], x[j]);
+                        x[i] = c * a + s * b;
+                        x[j] = c * b - s * a;
+                    }
+                    (OP_ROTATION, true) => {
+                        let (a, b) = (x[i], x[j]);
+                        x[i] = c * a - s * b;
+                        x[j] = s * a + c * b;
+                    }
+                    (OP_REFLECTION, _) => {
+                        let (a, b) = (x[i], x[j]);
+                        x[i] = c * a + s * b;
+                        x[j] = s * a - c * b;
+                    }
+                    (OP_SCALING, false) => x[i] *= c,
+                    (OP_SCALING, true) => x[i] *= 1.0 / c,
+                    (OP_UPPER_SHEAR, false) => x[i] += c * x[j],
+                    (OP_UPPER_SHEAR, true) => x[i] -= c * x[j],
+                    (OP_LOWER_SHEAR, false) => x[j] += c * x[i],
+                    (OP_LOWER_SHEAR, true) => x[j] -= c * x[i],
+                    (other, _) => unreachable!("bad opcode {other}"),
+                }
+            }
+        }
+    }
+
+    // ---------------- f32 batched execution -----------------------------
+
+    /// Forward batched apply: `X ← Ū X` / `X ← T̄ X` on an `(n, batch)`
+    /// block, using up to `threads` worker threads (1 = run inline).
+    pub fn apply_batch(&self, block: &mut SignalBlock, threads: usize) {
+        self.apply_batch_dir(block, false, threads)
+    }
+
+    /// Reverse batched apply: `X ← Ūᵀ X` / `X ← T̄⁻¹ X`.
+    pub fn apply_batch_rev(&self, block: &mut SignalBlock, threads: usize) {
+        self.apply_batch_dir(block, true, threads)
+    }
+
+    fn apply_batch_dir(&self, block: &mut SignalBlock, rev: bool, threads: usize) {
+        assert_eq!(block.n, self.n, "plan/block dimension mismatch");
+        if self.is_empty() || block.batch == 0 {
+            return;
+        }
+        let batch = block.batch;
+        // batch >= 1 here (empty-batch early return above), so the upper
+        // bound is always >= 1
+        let threads = threads.clamp(1, batch.max(self.stats.max_width));
+        let worth_spawning = threads > 1 && self.len() * batch >= PARALLEL_MIN_WORK;
+        if worth_spawning && batch >= 2 * threads {
+            self.run_column_parallel(block, rev, threads);
+        } else if worth_spawning && self.stats.mean_width * batch as f64 >= LAYER_PARALLEL_MIN_WORK
+        {
+            self.run_layer_parallel(block, rev, threads);
+        } else {
+            // single worker, too little total work to amortize thread
+            // spawns, or per-layer work too small for barriers
+            let ptr = block.data.as_mut_ptr();
+            // SAFETY: exclusive &mut borrow of the block; single thread.
+            unsafe { self.run_range(ptr, batch, 0, batch, rev) };
+        }
+    }
+
+    /// Batch-parallel mode: each worker owns a contiguous column range and
+    /// streams every layer over it; columns never interact, so no
+    /// synchronization is needed.
+    fn run_column_parallel(&self, block: &mut SignalBlock, rev: bool, threads: usize) {
+        let batch = block.batch;
+        let shared = SendPtr(block.data.as_mut_ptr());
+        std::thread::scope(|scope| {
+            for t in 0..threads {
+                let c0 = t * batch / threads;
+                let c1 = (t + 1) * batch / threads;
+                if c0 == c1 {
+                    continue;
+                }
+                let shared = &shared;
+                scope.spawn(move || {
+                    // SAFETY: workers touch pairwise-disjoint column ranges
+                    // [c0, c1) of every row; the scope joins before the
+                    // &mut borrow of the block ends.
+                    unsafe { self.run_range(shared.0, batch, c0, c1, rev) };
+                });
+            }
+        });
+    }
+
+    /// Rotation-parallel mode (single signal / tiny batch): within each
+    /// layer the stages are dealt round-robin to the workers — supports
+    /// inside a layer are pairwise disjoint, so the workers write disjoint
+    /// rows — and a barrier separates layers.
+    fn run_layer_parallel(&self, block: &mut SignalBlock, rev: bool, threads: usize) {
+        let batch = block.batch;
+        let layers = self.num_layers();
+        let shared = SendPtr(block.data.as_mut_ptr());
+        let barrier = Barrier::new(threads);
+        std::thread::scope(|scope| {
+            for t in 0..threads {
+                let shared = &shared;
+                let barrier = &barrier;
+                scope.spawn(move || {
+                    for lk in 0..layers {
+                        let l = if rev { layers - 1 - lk } else { lk };
+                        let range = self.layer_range(l);
+                        let mut slot = range.start + t;
+                        while slot < range.end {
+                            // SAFETY: stages within a layer have disjoint
+                            // supports, so each worker writes rows no other
+                            // worker touches; the barrier orders layers.
+                            unsafe { self.run_stage(shared.0, batch, 0, batch, slot, rev) };
+                            slot += threads;
+                        }
+                        barrier.wait();
+                    }
+                });
+            }
+        });
+    }
+
+    /// Execute every layer (in direction order) over columns `[c0, c1)`.
+    ///
+    /// # Safety
+    /// The caller must guarantee exclusive access to columns `[c0, c1)` of
+    /// the `(n, batch)` buffer behind `ptr` for the duration of the call.
+    unsafe fn run_range(&self, ptr: *mut f32, batch: usize, c0: usize, c1: usize, rev: bool) {
+        let layers = self.num_layers();
+        for lk in 0..layers {
+            let l = if rev { layers - 1 - lk } else { lk };
+            for slot in self.layer_range(l) {
+                self.run_stage(ptr, batch, c0, c1, slot, rev);
+            }
+        }
+    }
+
+    /// Execute one stage over columns `[c0, c1)`.
+    ///
+    /// # Safety
+    /// The caller must guarantee exclusive access to rows
+    /// `idx_i[slot]`/`idx_j[slot]`, columns `[c0, c1)`, of the `(n, batch)`
+    /// buffer behind `ptr`.
+    #[inline]
+    unsafe fn run_stage(
+        &self,
+        ptr: *mut f32,
+        batch: usize,
+        c0: usize,
+        c1: usize,
+        slot: usize,
+        rev: bool,
+    ) {
+        let i = self.idx_i[slot] as usize;
+        let j = self.idx_j[slot] as usize;
+        let (c, s) = (self.p0f[slot], self.p1f[slot]);
+        let w = c1 - c0;
+        let ri = std::slice::from_raw_parts_mut(ptr.add(i * batch + c0), w);
+        let op = self.op[slot];
+        if op == OP_SCALING {
+            let a = if rev { 1.0 / c } else { c };
+            for v in ri {
+                *v *= a;
+            }
+            return;
+        }
+        debug_assert_ne!(i, j);
+        let rj = std::slice::from_raw_parts_mut(ptr.add(j * batch + c0), w);
+        match (op, rev) {
+            (OP_ROTATION, false) => {
+                for (vi, vj) in ri.iter_mut().zip(rj.iter_mut()) {
+                    let (a, b) = (*vi, *vj);
+                    *vi = c * a + s * b;
+                    *vj = c * b - s * a;
+                }
+            }
+            (OP_ROTATION, true) => {
+                for (vi, vj) in ri.iter_mut().zip(rj.iter_mut()) {
+                    let (a, b) = (*vi, *vj);
+                    *vi = c * a - s * b;
+                    *vj = s * a + c * b;
+                }
+            }
+            (OP_REFLECTION, false) => {
+                // `-(c·b − s·a)` rather than `s·a − c·b`: equal for every
+                // nonzero result, but matches the sequential forward path's
+                // `sigma·(c·b − s·a)` bit-for-bit on signed zeros too
+                for (vi, vj) in ri.iter_mut().zip(rj.iter_mut()) {
+                    let (a, b) = (*vi, *vj);
+                    *vi = c * a + s * b;
+                    *vj = -(c * b - s * a);
+                }
+            }
+            (OP_REFLECTION, true) => {
+                for (vi, vj) in ri.iter_mut().zip(rj.iter_mut()) {
+                    let (a, b) = (*vi, *vj);
+                    *vi = c * a + s * b;
+                    *vj = s * a - c * b;
+                }
+            }
+            (OP_UPPER_SHEAR, false) => {
+                for (vi, vj) in ri.iter_mut().zip(rj.iter()) {
+                    *vi += c * *vj;
+                }
+            }
+            (OP_UPPER_SHEAR, true) => {
+                for (vi, vj) in ri.iter_mut().zip(rj.iter()) {
+                    *vi -= c * *vj;
+                }
+            }
+            (OP_LOWER_SHEAR, false) => {
+                for (vj, vi) in rj.iter_mut().zip(ri.iter()) {
+                    *vj += c * *vi;
+                }
+            }
+            (OP_LOWER_SHEAR, true) => {
+                for (vj, vi) in rj.iter_mut().zip(ri.iter()) {
+                    *vj -= c * *vi;
+                }
+            }
+            (other, _) => unreachable!("bad opcode {other}"),
+        }
+    }
+}
+
+/// Raw-pointer wrapper shared across scoped worker threads. Safety rests
+/// on the scheduling invariant (disjoint supports within a layer) and the
+/// column partition — see the call sites.
+struct SendPtr(*mut f32);
+
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+/// Default worker-thread count for parallel applies.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cli::figures::{random_gplan, random_tplan};
+    use crate::linalg::Rng64;
+    use crate::transforms::GTransform;
+
+    /// Disjointness within each layer + order preservation across layers.
+    fn check_schedule_invariants(cp: &CompiledPlan) {
+        let mut total = 0;
+        for l in 0..cp.num_layers() {
+            let mut seen = std::collections::HashSet::new();
+            for slot in cp.layer_range(l) {
+                let (i, j) = cp.stage_support(slot);
+                assert!(seen.insert(i), "layer {l}: coordinate {i} reused");
+                if j != i {
+                    assert!(seen.insert(j), "layer {l}: coordinate {j} reused");
+                }
+                total += 1;
+            }
+            assert!(!seen.is_empty(), "empty layer {l}");
+        }
+        assert_eq!(total, cp.len(), "stages lost by the scheduler");
+    }
+
+    #[test]
+    fn schedule_layers_are_conflict_free() {
+        let mut rng = Rng64::new(7101);
+        for &(n, g) in &[(8usize, 40usize), (16, 100), (33, 200)] {
+            let cp = CompiledPlan::from_gchain(&random_gplan(n, g, &mut rng));
+            check_schedule_invariants(&cp);
+            let cpt = CompiledPlan::from_tchain(&random_tplan(n, g, &mut rng));
+            check_schedule_invariants(&cpt);
+        }
+    }
+
+    #[test]
+    fn schedule_packs_disjoint_chain_into_one_layer() {
+        // n/2 transforms on disjoint pairs → a single layer of width n/2
+        let n = 16;
+        let mut ch = GChain::identity(n);
+        for k in 0..n / 2 {
+            ch.transforms.push(GTransform::new(2 * k, 2 * k + 1, 0.6, 0.8, GKind::Rotation));
+        }
+        let cp = ch.compile();
+        assert_eq!(cp.num_layers(), 1);
+        assert_eq!(cp.stats().max_width, n / 2);
+    }
+
+    #[test]
+    fn schedule_serial_chain_stays_serial() {
+        // every transform touches coordinate 0 → one stage per layer
+        let n = 8;
+        let mut ch = GChain::identity(n);
+        for j in 1..n {
+            ch.transforms.push(GTransform::new(0, j, 0.6, 0.8, GKind::Rotation));
+        }
+        let cp = ch.compile();
+        assert_eq!(cp.num_layers(), n - 1);
+        assert_eq!(cp.stats().max_width, 1);
+    }
+
+    #[test]
+    fn scheduled_vec_apply_is_bitwise_sequential_g() {
+        let mut rng = Rng64::new(7102);
+        for trial in 0..10 {
+            let n = 6 + trial;
+            let ch = random_gplan(n, 5 * n, &mut rng);
+            let cp = ch.compile();
+            let x: Vec<f64> = (0..n).map(|_| rng.randn()).collect();
+            let mut seq = x.clone();
+            ch.apply_vec(&mut seq);
+            let mut sched = x.clone();
+            cp.apply_vec(&mut sched);
+            assert_eq!(seq, sched, "forward trial {trial}");
+            let mut seq_t = x.clone();
+            ch.apply_vec_t(&mut seq_t);
+            let mut sched_t = x.clone();
+            cp.apply_vec_rev(&mut sched_t);
+            assert_eq!(seq_t, sched_t, "transpose trial {trial}");
+        }
+    }
+
+    #[test]
+    fn scheduled_vec_apply_is_bitwise_sequential_t() {
+        let mut rng = Rng64::new(7103);
+        for trial in 0..10 {
+            let n = 6 + trial;
+            let ch = random_tplan(n, 5 * n, &mut rng);
+            let cp = ch.compile();
+            let x: Vec<f64> = (0..n).map(|_| rng.randn()).collect();
+            let mut seq = x.clone();
+            ch.apply_vec(&mut seq);
+            let mut sched = x.clone();
+            cp.apply_vec(&mut sched);
+            assert_eq!(seq, sched, "forward trial {trial}");
+            let mut seq_i = x.clone();
+            ch.apply_vec_inv(&mut seq_i);
+            let mut sched_i = x.clone();
+            cp.apply_vec_rev(&mut sched_i);
+            assert_eq!(seq_i, sched_i, "inverse trial {trial}");
+        }
+    }
+
+    #[test]
+    fn batched_threads_match_inline() {
+        use crate::transforms::apply_gchain_batch_f32;
+        let mut rng = Rng64::new(7104);
+        let n = 32;
+        let ch = random_gplan(n, 6 * n, &mut rng);
+        let plan = ch.to_plan();
+        let cp = CompiledPlan::from_plan(&plan, ChainKind::G);
+        for batch in [1usize, 3, 8, 64] {
+            let signals: Vec<Vec<f32>> = (0..batch)
+                .map(|_| (0..n).map(|_| rng.randn() as f32).collect())
+                .collect();
+            let mut reference = SignalBlock::from_signals(&signals);
+            apply_gchain_batch_f32(&plan, &mut reference);
+            for threads in [1usize, 2, 4, 7] {
+                let mut got = SignalBlock::from_signals(&signals);
+                cp.apply_batch(&mut got, threads);
+                assert_eq!(
+                    reference.data, got.data,
+                    "batch={batch} threads={threads} diverged from sequential"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn batched_t_threads_match_sequential() {
+        use crate::transforms::apply_tchain_batch_f32;
+        let mut rng = Rng64::new(7108);
+        let n = 32;
+        let ch = random_tplan(n, 6 * n, &mut rng);
+        let plan = ch.to_plan();
+        let cp = CompiledPlan::from_plan(&plan, ChainKind::T);
+        for batch in [1usize, 5, 64] {
+            let signals: Vec<Vec<f32>> = (0..batch)
+                .map(|_| (0..n).map(|_| rng.randn() as f32).collect())
+                .collect();
+            let mut fwd_ref = SignalBlock::from_signals(&signals);
+            apply_tchain_batch_f32(&plan, &mut fwd_ref, false);
+            let mut inv_ref = SignalBlock::from_signals(&signals);
+            apply_tchain_batch_f32(&plan, &mut inv_ref, true);
+            for threads in [1usize, 4] {
+                let mut fwd = SignalBlock::from_signals(&signals);
+                cp.apply_batch(&mut fwd, threads);
+                assert_eq!(
+                    fwd_ref.data, fwd.data,
+                    "T forward batch={batch} threads={threads} diverged"
+                );
+                let mut inv = SignalBlock::from_signals(&signals);
+                cp.apply_batch_rev(&mut inv, threads);
+                assert_eq!(
+                    inv_ref.data, inv.data,
+                    "T inverse batch={batch} threads={threads} diverged"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn layer_parallel_mode_matches_inline() {
+        // synthetic wide chain: each round touches all n/2 disjoint pairs,
+        // so mean width = n/2 and `batch × mean_width` crosses
+        // LAYER_PARALLEL_MIN_WORK while batch < 2·threads — forcing the
+        // barrier-synchronized rotation-parallel mode
+        let n = 4096;
+        let rounds = 4;
+        let mut ch = GChain::identity(n);
+        for r in 0..rounds {
+            for k in 0..n / 2 {
+                let th = 0.1 + 0.01 * ((r * k) % 17) as f64;
+                ch.transforms.push(GTransform::new(
+                    2 * k,
+                    2 * k + 1,
+                    th.cos(),
+                    th.sin(),
+                    GKind::Rotation,
+                ));
+            }
+        }
+        let cp = ch.compile();
+        assert_eq!(cp.num_layers(), rounds);
+        assert_eq!(cp.stats().max_width, n / 2);
+        let mut rng = Rng64::new(7107);
+        let signals: Vec<Vec<f32>> =
+            (0..2).map(|_| (0..n).map(|_| rng.randn() as f32).collect()).collect();
+        let mut inline = SignalBlock::from_signals(&signals);
+        cp.apply_batch(&mut inline, 1);
+        // batch 2 < 2·4 threads and 2 × 2048 ≥ 1024 → layer-parallel mode
+        let mut par = SignalBlock::from_signals(&signals);
+        cp.apply_batch(&mut par, 4);
+        assert_eq!(inline.data, par.data, "layer-parallel diverged (forward)");
+        let mut inline_rev = SignalBlock::from_signals(&signals);
+        cp.apply_batch_rev(&mut inline_rev, 1);
+        let mut par_rev = SignalBlock::from_signals(&signals);
+        cp.apply_batch_rev(&mut par_rev, 4);
+        assert_eq!(inline_rev.data, par_rev.data, "layer-parallel diverged (reverse)");
+    }
+
+    #[test]
+    fn batched_reverse_roundtrips() {
+        let mut rng = Rng64::new(7105);
+        let n = 24;
+        let ch = random_gplan(n, 4 * n, &mut rng);
+        let cp = ch.compile();
+        let signals: Vec<Vec<f32>> =
+            (0..5).map(|_| (0..n).map(|_| rng.randn() as f32).collect()).collect();
+        let mut block = SignalBlock::from_signals(&signals);
+        cp.apply_batch(&mut block, 3);
+        cp.apply_batch_rev(&mut block, 3);
+        for (b, sig) in signals.iter().enumerate() {
+            for (w, g) in sig.iter().zip(block.signal(b).iter()) {
+                assert!((w - g).abs() < 1e-4, "{w} vs {g}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_plan_is_identity() {
+        let cp = CompiledPlan::from_gchain(&GChain::identity(5));
+        assert!(cp.is_empty());
+        assert_eq!(cp.num_layers(), 0);
+        let mut x = vec![1.0, 2.0, 3.0, 4.0, 5.0];
+        cp.apply_vec(&mut x);
+        assert_eq!(x, vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+        let mut block = SignalBlock::from_signals(&[vec![1.0f32; 5]]);
+        cp.apply_batch(&mut block, 4);
+        assert_eq!(block.signal(0), vec![1.0f32; 5]);
+    }
+
+    #[test]
+    fn stats_are_consistent() {
+        let mut rng = Rng64::new(7106);
+        let ch = random_gplan(20, 120, &mut rng);
+        let cp = ch.compile();
+        let st = cp.stats();
+        assert_eq!(st.stages, 120);
+        assert!(st.layers >= 120 / (20 / 2), "layers {} too few", st.layers);
+        assert!(st.max_width <= 10, "width {} exceeds n/2", st.max_width);
+        assert!((st.mean_width - 120.0 / st.layers as f64).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,285 @@
+//! Golden regression tests for the level-scheduled butterfly engine:
+//! compiled-plan execution vs dense `to_dense()` matrix products on
+//! fixed-seed chains mixing rotations, reflections, scalings and shears —
+//! plus a coordinator concurrency test over the parallel compiled backend.
+
+use fastes::cli::figures::{random_gplan, random_tplan};
+use fastes::linalg::{Mat, Rng64};
+use fastes::serve::{Backend, Coordinator, NativeGftBackend, ServeConfig, TransformDirection};
+use fastes::transforms::{ChainKind, CompiledPlan, GChain, SignalBlock, TChain};
+
+/// Fixed-seed G-chain (rotations + reflections) from the canonical
+/// generator the CLI and benches use.
+fn golden_gchain(n: usize, g: usize, seed: u64) -> GChain {
+    random_gplan(n, g, &mut Rng64::new(seed))
+}
+
+/// Fixed-seed T-chain mixing scalings and both shear kinds, from the
+/// canonical generator (near-identity coefficients keep `T̄`
+/// well-conditioned for the inverse golden check).
+fn golden_tchain(n: usize, m: usize, seed: u64) -> TChain {
+    random_tplan(n, m, &mut Rng64::new(seed))
+}
+
+fn max_dev(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b.iter()).map(|(u, v)| (u - v).abs()).fold(0.0f64, f64::max)
+}
+
+#[test]
+fn golden_g_compiled_matches_dense_matmul() {
+    for (seed, n, g) in [(8101u64, 12usize, 80usize), (8102, 24, 300), (8103, 40, 700)] {
+        let ch = golden_gchain(n, g, seed);
+        let cp = ch.compile();
+        assert_eq!(cp.len(), g);
+        let dense = ch.to_dense();
+        let mut rng = Rng64::new(seed ^ 0xDEAD);
+        let x: Vec<f64> = (0..n).map(|_| rng.randn()).collect();
+        // forward: Ū x
+        let want = dense.matvec(&x);
+        let mut got = x.clone();
+        cp.apply_vec(&mut got);
+        assert!(max_dev(&want, &got) < 1e-9, "seed {seed}: fwd dev {}", max_dev(&want, &got));
+        // reverse: Ūᵀ x
+        let want_t = dense.tmatvec(&x);
+        let mut got_t = x.clone();
+        cp.apply_vec_rev(&mut got_t);
+        assert!(
+            max_dev(&want_t, &got_t) < 1e-9,
+            "seed {seed}: rev dev {}",
+            max_dev(&want_t, &got_t)
+        );
+    }
+}
+
+#[test]
+fn golden_t_compiled_matches_dense_matmul() {
+    for (seed, n, m) in [(8201u64, 10usize, 60usize), (8202, 20, 200)] {
+        let ch = golden_tchain(n, m, seed);
+        let cp = ch.compile();
+        assert_eq!(cp.len(), m);
+        let dense = ch.to_dense();
+        let dense_inv = ch.to_dense_inv();
+        let mut rng = Rng64::new(seed ^ 0xBEEF);
+        let x: Vec<f64> = (0..n).map(|_| rng.randn()).collect();
+        let xmax = x.iter().fold(0.0f64, |a, v| a.max(v.abs()));
+        let scale = 1.0 + (dense.max_abs() + dense_inv.max_abs()) * xmax;
+        // forward: T̄ x
+        let want = dense.matvec(&x);
+        let mut got = x.clone();
+        cp.apply_vec(&mut got);
+        assert!(
+            max_dev(&want, &got) < 1e-9 * scale,
+            "seed {seed}: fwd dev {}",
+            max_dev(&want, &got)
+        );
+        // reverse: T̄⁻¹ x
+        let want_inv = dense_inv.matvec(&x);
+        let mut got_inv = x.clone();
+        cp.apply_vec_rev(&mut got_inv);
+        assert!(
+            max_dev(&want_inv, &got_inv) < 1e-7 * scale,
+            "seed {seed}: inv dev {}",
+            max_dev(&want_inv, &got_inv)
+        );
+    }
+}
+
+#[test]
+fn golden_g_compiled_reconstruction_matches_dense() {
+    // full reconstruction through the compiled plan: Ū diag(s) Ūᵀ x
+    let n = 16;
+    let ch = golden_gchain(n, 120, 8301);
+    let cp = ch.compile();
+    let mut rng = Rng64::new(8302);
+    let spec: Vec<f64> = (0..n).map(|_| rng.randn()).collect();
+    let dense = ch.reconstruct(&spec);
+    let x: Vec<f64> = (0..n).map(|_| rng.randn()).collect();
+    let want = dense.matvec(&x);
+    let mut got = x.clone();
+    cp.apply_vec_rev(&mut got);
+    for (v, s) in got.iter_mut().zip(spec.iter()) {
+        *v *= s;
+    }
+    cp.apply_vec(&mut got);
+    assert!(max_dev(&want, &got) < 1e-9, "dev {}", max_dev(&want, &got));
+}
+
+#[test]
+fn golden_f32_batched_compiled_matches_dense() {
+    // the f32 batched executor against the dense f64 operator, threaded
+    let n = 32;
+    let ch = golden_gchain(n, 250, 8401);
+    let plan = ch.to_plan();
+    let cp = CompiledPlan::from_plan(&plan, ChainKind::G);
+    let dense = GChain::from_plan(&plan).to_dense();
+    let mut rng = Rng64::new(8402);
+    let batch = 17;
+    let signals: Vec<Vec<f32>> =
+        (0..batch).map(|_| (0..n).map(|_| rng.randn() as f32).collect()).collect();
+    for threads in [1usize, 4] {
+        let mut block = SignalBlock::from_signals(&signals);
+        cp.apply_batch(&mut block, threads);
+        for (b, sig) in signals.iter().enumerate() {
+            let x: Vec<f64> = sig.iter().map(|&v| v as f64).collect();
+            let want = dense.matvec(&x);
+            for (w, g) in want.iter().zip(block.signal(b).iter()) {
+                assert!((*w as f32 - g).abs() < 1e-3, "threads={threads} b={b}: {w} vs {g}");
+            }
+        }
+    }
+}
+
+#[test]
+fn concurrent_compiled_backend_preserves_request_response_pairing() {
+    // ≥ 64 in-flight requests through the parallel compiled backend: each
+    // response must be the transform of its own request. g is sized so
+    // that stages × batch clears the executor's PARALLEL_MIN_WORK gate and
+    // batch (16) ≥ 2 × threads (4) — the column-parallel mode really runs.
+    let n = 48;
+    let ch = golden_gchain(n, 1200, 8501);
+    let plan = ch.to_plan();
+    let coord = Coordinator::start(
+        move || {
+            Ok(Box::new(NativeGftBackend::with_schedule(
+                plan,
+                TransformDirection::Forward,
+                16,
+                None,
+                true,
+                4,
+            )) as Box<dyn Backend>)
+        },
+        ServeConfig { max_batch: 16, ..Default::default() },
+    )
+    .unwrap();
+    let mut rng = Rng64::new(8502);
+    let in_flight = 96;
+    let mut pairs = Vec::with_capacity(in_flight);
+    for k in 0..in_flight {
+        // tag each signal so a pairing mix-up is loud, then fill randomly
+        let mut sig: Vec<f32> = (0..n).map(|_| rng.randn() as f32).collect();
+        sig[0] = k as f32;
+        let t = coord.submit(sig.clone()).unwrap();
+        pairs.push((sig, t));
+    }
+    for (k, (sig, t)) in pairs.into_iter().enumerate() {
+        let out = t.wait().unwrap();
+        let mut want: Vec<f64> = sig.iter().map(|&v| v as f64).collect();
+        ch.apply_vec_t(&mut want);
+        for (w, o) in want.iter().zip(out.iter()) {
+            assert!((*w as f32 - o).abs() < 1e-2, "request {k}: {w} vs {o}");
+        }
+    }
+    let m = coord.shutdown();
+    assert_eq!(m.completed, in_flight as u64);
+    assert_eq!(m.errors, 0);
+    assert!(m.max_batch_seen <= 16);
+}
+
+#[test]
+fn scheduled_and_sequential_backends_serve_identical_answers() {
+    // same plan, same requests, scheduled vs sequential coordinators —
+    // responses must agree bitwise (the schedule is a pure reordering).
+    // g × batch (8) clears PARALLEL_MIN_WORK so the threaded path runs.
+    let n = 24;
+    let ch = golden_gchain(n, 1200, 8601);
+    let plan = ch.to_plan();
+    let p1 = plan.clone();
+    let seq = Coordinator::start(
+        move || {
+            Ok(Box::new(NativeGftBackend::new(p1, TransformDirection::Forward, 8, None))
+                as Box<dyn Backend>)
+        },
+        ServeConfig { max_batch: 8, ..Default::default() },
+    )
+    .unwrap();
+    let p2 = plan.clone();
+    let sched = Coordinator::start(
+        move || {
+            Ok(Box::new(NativeGftBackend::with_schedule(
+                p2,
+                TransformDirection::Forward,
+                8,
+                None,
+                true,
+                3,
+            )) as Box<dyn Backend>)
+        },
+        ServeConfig { max_batch: 8, ..Default::default() },
+    )
+    .unwrap();
+    let mut rng = Rng64::new(8602);
+    for _ in 0..40 {
+        let sig: Vec<f32> = (0..n).map(|_| rng.randn() as f32).collect();
+        let a = seq.submit(sig.clone()).unwrap().wait().unwrap();
+        let b = sched.submit(sig).unwrap().wait().unwrap();
+        assert_eq!(a, b, "scheduled backend diverged from sequential");
+    }
+    assert_eq!(seq.shutdown().errors, 0);
+    assert_eq!(sched.shutdown().errors, 0);
+}
+
+#[test]
+fn compiled_plan_schedule_shape_is_reported() {
+    // sanity on the stats the CLI prints: depth reduction on a random
+    // chain at serving scale should be substantial
+    let n = 256;
+    let g = 2 * n * 8;
+    let ch = golden_gchain(n, g, 8701);
+    let st = ch.compile().stats();
+    assert_eq!(st.stages, g);
+    assert!(st.layers < g, "no packing happened");
+    assert!(st.max_width <= n / 2);
+    assert!(
+        st.mean_width > 4.0,
+        "expected wide layers on a random chain (got mean width {})",
+        st.mean_width
+    );
+    // T-chain path too
+    let tch = golden_tchain(64, 800, 8702);
+    let tst = tch.compile().stats();
+    assert_eq!(tst.stages, 800);
+    assert!(tst.layers < 800);
+}
+
+#[test]
+fn compiled_t_reconstruction_similarity_matches_dense() {
+    // T̄ diag(c) T̄⁻¹ x through the compiled plan vs dense reconstruct()
+    let n = 12;
+    let ch = golden_tchain(n, 70, 8801);
+    let cp = ch.compile();
+    let mut rng = Rng64::new(8802);
+    let spec: Vec<f64> = (0..n).map(|i| 1.0 + i as f64).collect();
+    let dense = ch.reconstruct(&spec);
+    let x: Vec<f64> = (0..n).map(|_| rng.randn()).collect();
+    let want = dense.matvec(&x);
+    let mut got = x.clone();
+    cp.apply_vec_rev(&mut got); // T̄⁻¹ x
+    for (v, s) in got.iter_mut().zip(spec.iter()) {
+        *v *= s;
+    }
+    cp.apply_vec(&mut got); // T̄ · …
+    let scale = 1.0 + want.iter().fold(0.0f64, |a, v| a.max(v.abs()));
+    assert!(max_dev(&want, &got) < 1e-7 * scale, "dev {}", max_dev(&want, &got));
+}
+
+#[test]
+fn mat_is_used_for_dense_checks() {
+    // keep the Mat import honest (and assert identity compile round-trip)
+    let ch = golden_gchain(8, 40, 8901);
+    let cp = ch.compile();
+    let mut m = Mat::eye(8);
+    // apply the compiled plan column-by-column to build Ū densely
+    let mut cols: Vec<Vec<f64>> = Vec::new();
+    for j in 0..8 {
+        let mut e: Vec<f64> = (0..8).map(|i| if i == j { 1.0 } else { 0.0 }).collect();
+        cp.apply_vec(&mut e);
+        cols.push(e);
+    }
+    for (j, col) in cols.iter().enumerate() {
+        for i in 0..8 {
+            m[(i, j)] = col[i];
+        }
+    }
+    assert!(m.fro_dist_sq(&ch.to_dense()) < 1e-18);
+}

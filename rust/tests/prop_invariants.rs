@@ -227,6 +227,136 @@ fn prop_coordinator_preserves_request_response_pairing() {
 }
 
 #[test]
+fn prop_schedule_layers_have_pairwise_disjoint_supports() {
+    // every emitted layer must touch each coordinate at most once, for
+    // both chain families, and no stage may be lost or duplicated
+    forall(
+        "level schedule produces conflict-free layers",
+        PropConfig { cases: 40, max_size: 24, ..Default::default() },
+        |rng, size| {
+            let n = size.max(3);
+            (random_gchain(rng, n, 4 * n), random_tchain(rng, n, 4 * n))
+        },
+        |(gch, tch)| {
+            for cp in [gch.compile(), tch.compile()] {
+                let mut total = 0usize;
+                for l in 0..cp.num_layers() {
+                    let mut seen = std::collections::HashSet::new();
+                    for slot in cp.layer_range(l) {
+                        let (i, j) = cp.stage_support(slot);
+                        if !seen.insert(i) {
+                            return Err(format!("layer {l} reuses coordinate {i}"));
+                        }
+                        if j != i && !seen.insert(j) {
+                            return Err(format!("layer {l} reuses coordinate {j}"));
+                        }
+                        total += 1;
+                    }
+                    if seen.is_empty() {
+                        return Err(format!("layer {l} is empty"));
+                    }
+                }
+                if total != cp.len() {
+                    return Err(format!("scheduler lost stages: {total} of {}", cp.len()));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_scheduled_apply_matches_sequential() {
+    // the compiled executor must agree with the naive sequential apply to
+    // 1e-12 in every direction (it is in fact bitwise identical: the
+    // schedule only permutes stages with disjoint supports)
+    forall(
+        "scheduled apply ≡ sequential apply (G and T, fwd and rev)",
+        PropConfig { cases: 30, max_size: 20, ..Default::default() },
+        |rng, size| {
+            let n = size.max(3);
+            let x: Vec<f64> = (0..n).map(|_| rng.randn()).collect();
+            (random_gchain(rng, n, 4 * n), random_tchain(rng, n, 4 * n), x)
+        },
+        |(gch, tch, x)| {
+            let max_dev = |a: &[f64], b: &[f64]| {
+                a.iter().zip(b.iter()).map(|(u, v)| (u - v).abs()).fold(0.0f64, f64::max)
+            };
+            let gcp = gch.compile();
+            let tcp = tch.compile();
+            let mut seq = x.clone();
+            let mut sched = x.clone();
+            gch.apply_vec(&mut seq);
+            gcp.apply_vec(&mut sched);
+            if max_dev(&seq, &sched) > 1e-12 {
+                return Err(format!("G forward deviates by {}", max_dev(&seq, &sched)));
+            }
+            let mut seq = x.clone();
+            let mut sched = x.clone();
+            gch.apply_vec_t(&mut seq);
+            gcp.apply_vec_rev(&mut sched);
+            if max_dev(&seq, &sched) > 1e-12 {
+                return Err(format!("G transpose deviates by {}", max_dev(&seq, &sched)));
+            }
+            let mut seq = x.clone();
+            let mut sched = x.clone();
+            tch.apply_vec(&mut seq);
+            tcp.apply_vec(&mut sched);
+            if max_dev(&seq, &sched) > 1e-12 {
+                return Err(format!("T forward deviates by {}", max_dev(&seq, &sched)));
+            }
+            let mut seq = x.clone();
+            let mut sched = x.clone();
+            tch.apply_vec_inv(&mut seq);
+            tcp.apply_vec_rev(&mut sched);
+            if max_dev(&seq, &sched) > 1e-12 {
+                return Err(format!("T inverse deviates by {}", max_dev(&seq, &sched)));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_scheduled_batch_apply_matches_sequential_batch() {
+    // the f32 batched executor must agree with the sequential f32 plan
+    // apply exactly. At these property sizes the work-size gates keep
+    // execution on the inline path; the threaded column/layer modes are
+    // covered by the fixed-size unit tests in transforms/schedule.rs and
+    // the integration_schedule.rs coordinator tests.
+    forall(
+        "scheduled batched apply ≡ sequential batched apply",
+        PropConfig { cases: 15, max_size: 16, ..Default::default() },
+        |rng, size| {
+            let n = size.max(3);
+            let batch = 1 + rng.below(12);
+            let ch = random_gchain(rng, n, 4 * n);
+            let signals: Vec<Vec<f32>> = (0..batch)
+                .map(|_| (0..n).map(|_| rng.randn() as f32).collect())
+                .collect();
+            (ch, signals)
+        },
+        |(ch, signals)| {
+            let plan = ch.to_plan();
+            let cp = fastes::transforms::CompiledPlan::from_plan(
+                &plan,
+                fastes::transforms::ChainKind::G,
+            );
+            let mut reference = fastes::transforms::SignalBlock::from_signals(signals);
+            fastes::transforms::apply_gchain_batch_f32(&plan, &mut reference);
+            for threads in [1usize, 2, 5] {
+                let mut got = fastes::transforms::SignalBlock::from_signals(signals);
+                cp.apply_batch(&mut got, threads);
+                if got.data != reference.data {
+                    return Err(format!("threads={threads} diverged from sequential"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_plan_roundtrip_preserves_apply() {
     forall(
         "plan serialization round-trip",

@@ -1,0 +1,165 @@
+//! Minimal, offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no crates.io access, so this vendored crate
+//! provides exactly the subset of the `anyhow` API the `fastes` codebase
+//! uses: the [`Error`] type (a dynamic error with a context chain), the
+//! [`Result`] alias, the [`anyhow!`] / [`bail!`] macros, and the
+//! [`Context`] extension trait. Errors are stored as a flattened chain of
+//! messages (outermost context first); no downcasting is supported.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// Dynamic error type: a chain of messages, outermost context first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+/// `Result<T, anyhow::Error>` alias, matching the real crate's signature.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Construct from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an additional layer of context (becomes the new outermost
+    /// message).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// Iterate the message chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` prints the whole chain, like the real anyhow
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut source = e.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to results.
+pub trait Context<T, E> {
+    /// Wrap the error with a context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    /// Wrap the error with a lazily-evaluated context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T, core::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a message or format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Early-return with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn display_and_alternate() {
+        let e: Error = Context::context(Err::<(), _>(io_err()), "opening config").unwrap_err();
+        assert_eq!(format!("{e}"), "opening config");
+        assert_eq!(format!("{e:#}"), "opening config: missing file");
+    }
+
+    #[test]
+    fn macros_work() {
+        let e = anyhow!("plain");
+        assert_eq!(e.to_string(), "plain");
+        let n = 3;
+        let e = anyhow!("value {n} and {}", 4);
+        assert_eq!(e.to_string(), "value 3 and 4");
+        let owned = String::from("owned message");
+        let e = anyhow!(owned);
+        assert_eq!(e.to_string(), "owned message");
+        fn fails() -> Result<()> {
+            bail!("boom {}", 7)
+        }
+        assert_eq!(fails().unwrap_err().to_string(), "boom 7");
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(inner().is_err());
+    }
+}
