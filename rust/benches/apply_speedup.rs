@@ -9,8 +9,9 @@ use fastes::cli::figures::{budget, random_gplan, random_tplan};
 use fastes::graphs::RealWorldGraph;
 use fastes::linalg::Rng64;
 use fastes::transforms::{
-    apply_compiled_batch_f32, apply_gchain_batch_f32, apply_tchain_batch_f32, default_threads,
-    ChainKind, CompiledPlan, SignalBlock,
+    apply_compiled_batch_f32, apply_compiled_batch_f32_pooled, apply_gchain_batch_f32,
+    apply_tchain_batch_f32, default_threads, global_pool, ChainKind, CompiledPlan, ExecConfig,
+    SignalBlock,
 };
 
 fn main() {
@@ -109,6 +110,45 @@ fn main() {
             println!(
                 "n={n} batch={batch}: scheduled speedup {:.2}x over sequential",
                 t_seq.min_s / t_par.min_s
+            );
+        }
+    }
+
+    // persistent-pool apply vs spawn-per-apply: the pool removes the
+    // per-call thread spawn/join that dominates serve-sized requests, and
+    // the fused cache-blocked streams cut the per-stage constant factor
+    println!("\n# pooled apply vs spawn-per-apply ({threads} threads)");
+    let pool = global_pool();
+    let cfg = ExecConfig::pooled();
+    for n in [256usize, 512] {
+        let g = budget(2, n);
+        let plan = random_gplan(n, g, &mut rng).to_plan();
+        let compiled = CompiledPlan::from_plan(&plan, ChainKind::G);
+        for batch in [8usize, 64] {
+            let signals: Vec<Vec<f32>> =
+                (0..batch).map(|_| (0..n).map(|_| rng.randn() as f32).collect()).collect();
+            let mut seq_blk = SignalBlock::from_signals(&signals);
+            let t_seq = bench(&format!("n={n} batch={batch} sequential"), 7, 0.05, || {
+                apply_gchain_batch_f32(&plan, &mut seq_blk);
+                seq_blk.data[0]
+            });
+            let mut sp_blk = SignalBlock::from_signals(&signals);
+            let t_spawn = bench(&format!("n={n} batch={batch} spawn/{threads}t"), 7, 0.05, || {
+                apply_compiled_batch_f32(&compiled, &mut sp_blk, threads);
+                sp_blk.data[0]
+            });
+            let mut pl_blk = SignalBlock::from_signals(&signals);
+            let t_pool = bench(&format!("n={n} batch={batch} pooled/{threads}t"), 7, 0.05, || {
+                apply_compiled_batch_f32_pooled(&compiled, &mut pl_blk, pool, &cfg);
+                pl_blk.data[0]
+            });
+            println!("{}", t_seq.line());
+            println!("{}", t_spawn.line());
+            println!("{}", t_pool.line());
+            println!(
+                "n={n} batch={batch}: pooled {:.2}x vs sequential, {:.2}x vs spawn",
+                t_seq.min_s / t_pool.min_s,
+                t_spawn.min_s / t_pool.min_s
             );
         }
     }

@@ -8,6 +8,7 @@ use fastes::bench_util::bench;
 use fastes::factor::{GeneralFactorizer, GeneralOptions, SymFactorizer, SymOptions};
 use fastes::graphs;
 use fastes::linalg::{eigh, Mat, Rng64};
+use fastes::transforms::{global_pool, ExecConfig, SignalBlock};
 
 fn main() {
     println!("# factor_steps — Algorithm 1 phase costs");
@@ -63,4 +64,25 @@ fn main() {
         let t = bench(&format!("eigh n={n}"), 3, 0.3, || eigh(&s).values[0]);
         println!("{}", t.line());
     }
+    // end-to-end: apply the factored GFT on the pooled serving hot path
+    // (the artifact the factorization exists to produce)
+    let n = 256;
+    let mut rng = Rng64::new(8);
+    let graph = graphs::community(n, &mut rng);
+    let l = graph.laplacian();
+    let g = 2 * n * (n as f64).log2() as usize;
+    let f =
+        SymFactorizer::new(&l, g, SymOptions { max_sweeps: 1, ..Default::default() }).run();
+    let compiled = f.chain.compile();
+    let pool = global_pool();
+    let cfg = ExecConfig::pooled();
+    let batch = 64;
+    let signals: Vec<Vec<f32>> =
+        (0..batch).map(|_| (0..n).map(|_| rng.randn() as f32).collect()).collect();
+    let mut blk = SignalBlock::from_signals(&signals);
+    let t = bench(&format!("factored pooled apply n={n} batch={batch}"), 5, 0.1, || {
+        compiled.apply_batch_pooled(&mut blk, pool, &cfg);
+        blk.data[0]
+    });
+    println!("{}  ({:.1} ns/signal)", t.line(), t.min_s * 1e9 / batch as f64);
 }

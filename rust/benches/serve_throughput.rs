@@ -13,6 +13,7 @@ use fastes::runtime::ArtifactStore;
 use fastes::serve::{
     Backend, Coordinator, NativeGftBackend, PjrtGftBackend, ServeConfig, TransformDirection,
 };
+use fastes::transforms::ExecConfig;
 
 fn drive(coord: &Coordinator, n: usize, requests: usize, seed: u64) -> f64 {
     let mut rng = Rng64::new(seed);
@@ -58,6 +59,33 @@ fn main() {
         let m = coord.shutdown();
         println!(
             "native  max_batch={max_batch:<3} {rps:>10.0} req/s  p50={:>8.1}µs p99={:>8.1}µs mean_batch={:.2}",
+            m.p50_latency_s * 1e6,
+            m.p99_latency_s * 1e6,
+            m.mean_batch
+        );
+    }
+
+    // pooled backend: same coordinator, but every batch executes on the
+    // process-wide persistent worker pool (fused, cache-blocked streams)
+    for max_batch in [8usize, 32] {
+        let p = plan.clone();
+        let coord = Coordinator::start(
+            move || {
+                Ok(Box::new(NativeGftBackend::with_pool(
+                    p,
+                    TransformDirection::Forward,
+                    max_batch,
+                    None,
+                    ExecConfig::pooled(),
+                )) as Box<dyn Backend>)
+            },
+            ServeConfig { max_batch, ..Default::default() },
+        )
+        .unwrap();
+        let rps = drive(&coord, n, 20_000, 34);
+        let m = coord.shutdown();
+        println!(
+            "pooled  max_batch={max_batch:<3} {rps:>10.0} req/s  p50={:>8.1}µs p99={:>8.1}µs mean_batch={:.2}",
             m.p50_latency_s * 1e6,
             m.p99_latency_s * 1e6,
             m.mean_batch

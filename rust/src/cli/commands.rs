@@ -1,4 +1,5 @@
-//! Non-figure CLI commands: factor / gft / serve / eigen / bench-apply.
+//! Non-figure CLI commands: factor / gft / serve / schedule / bench /
+//! eigen / bench-apply.
 
 use std::path::PathBuf;
 use std::time::Instant;
@@ -13,7 +14,24 @@ use crate::linalg::{eigh, Mat, Rng64};
 use crate::serve::{
     Backend, Coordinator, NativeGftBackend, PjrtGftBackend, ServeConfig, TransformDirection,
 };
-use crate::transforms::{default_threads, ChainKind, CompiledPlan, SignalBlock};
+use crate::transforms::{global_pool, ChainKind, CompiledPlan, ExecConfig, SignalBlock};
+
+/// Apply the common executor flags (`--threads`, `--min-work`,
+/// `--layer-min-work`, `--tile`) on top of `base` (which already honours
+/// `FASTES_*` environment overrides).
+fn exec_config_from_args_base(a: &Args, base: ExecConfig) -> crate::Result<ExecConfig> {
+    Ok(ExecConfig {
+        threads: a.get("threads", base.threads)?.max(1),
+        min_work: a.get("min-work", base.min_work)?,
+        layer_min_work: a.get("layer-min-work", base.layer_min_work)?,
+        tile_cols: a.get("tile", base.tile_cols)?.max(1),
+    })
+}
+
+/// Executor flags over the pooled defaults.
+fn exec_config_from_args(a: &Args) -> crate::Result<ExecConfig> {
+    exec_config_from_args_base(a, ExecConfig::pooled())
+}
 
 /// `fastes factor` — factor a random matrix and report accuracy/time.
 pub fn factor(a: &Args) -> crate::Result<()> {
@@ -132,7 +150,10 @@ pub fn gft(a: &Args) -> crate::Result<()> {
 }
 
 /// `fastes serve` — factor a community-graph GFT, serve batched requests
-/// through the coordinator, report latency/throughput.
+/// through the coordinator, report latency/throughput. `--exec` picks the
+/// native execution strategy: `pool` (default — fused plan on the shared
+/// persistent worker pool), `spawn` (legacy scoped threads per apply) or
+/// `seq` (sequential per-stage apply).
 pub fn serve(a: &Args) -> crate::Result<()> {
     let n: usize = a.get("n", 128)?;
     let alpha: usize = a.get("alpha", 2)?;
@@ -141,10 +162,14 @@ pub fn serve(a: &Args) -> crate::Result<()> {
     let backend_kind = a.get_str("backend", "native");
     let artifacts = PathBuf::from(a.get_str("artifacts", "artifacts"));
     let seed: u64 = a.get("seed", 1)?;
-    let scheduled = a.has("scheduled");
-    let threads: usize = a.get("threads", default_threads())?;
-    if scheduled && backend_kind != "native" {
-        bail!("--scheduled is only supported with --backend native (got {backend_kind})");
+    // legacy flag: `--scheduled` was the spawn-per-apply fast path
+    let exec = a.get_str("exec", if a.has("scheduled") { "spawn" } else { "pool" });
+    let cfg = exec_config_from_args(a)?;
+    if !matches!(exec.as_str(), "seq" | "spawn" | "pool") {
+        bail!("--exec must be seq|spawn|pool (got {exec})");
+    }
+    if backend_kind != "native" && (a.has("exec") || a.has("scheduled")) {
+        bail!("--exec/--scheduled are only supported with --backend native (got {backend_kind})");
     }
 
     let mut rng = Rng64::new(seed);
@@ -160,16 +185,35 @@ pub fn serve(a: &Args) -> crate::Result<()> {
     let coordinator = match backend_kind.as_str() {
         "native" => {
             let p = plan.clone();
+            let exec2 = exec.clone();
+            let cfg2 = cfg.clone();
             Coordinator::start(
                 move || {
-                    Ok(Box::new(NativeGftBackend::with_schedule(
-                        p,
-                        TransformDirection::Forward,
-                        batch,
-                        None,
-                        scheduled,
-                        threads,
-                    )) as Box<dyn Backend>)
+                    let b: Box<dyn Backend> = match exec2.as_str() {
+                        "seq" => Box::new(NativeGftBackend::new(
+                            p,
+                            TransformDirection::Forward,
+                            batch,
+                            None,
+                        )),
+                        "spawn" => Box::new(NativeGftBackend::with_schedule(
+                            p,
+                            TransformDirection::Forward,
+                            batch,
+                            None,
+                            true,
+                            cfg2.threads,
+                        )),
+                        "pool" => Box::new(NativeGftBackend::with_pool(
+                            p,
+                            TransformDirection::Forward,
+                            batch,
+                            None,
+                            cfg2,
+                        )),
+                        other => unreachable!("validated --exec {other}"),
+                    };
+                    Ok(b)
                 },
                 config,
             )?
@@ -195,7 +239,11 @@ pub fn serve(a: &Args) -> crate::Result<()> {
 
     println!(
         "serving {requests} requests (backend={backend_kind}{}, batch={batch})…",
-        if scheduled { format!(" scheduled/{threads}t") } else { String::new() }
+        if backend_kind == "native" {
+            format!(" exec={exec}/{}t", cfg.threads)
+        } else {
+            String::new()
+        }
     );
     let t0 = Instant::now();
     let mut pending = Vec::with_capacity(64);
@@ -245,14 +293,17 @@ pub fn eigen(a: &Args) -> crate::Result<()> {
 }
 
 /// `fastes schedule` — compile a butterfly chain into conflict-free
-/// layers, report the schedule shape (layer count / depth / width) and
-/// time sequential vs level-scheduled parallel apply.
+/// layers + fused superstages, report the schedule shape (layer count /
+/// depth / width / superstages) and time sequential vs spawn-per-apply vs
+/// pooled apply.
 pub fn schedule(a: &Args) -> crate::Result<()> {
     let n: usize = a.get("n", 512)?;
     let alpha: usize = a.get("alpha", 2)?;
     let batch: usize = a.get("batch", 32)?;
-    let threads: usize = a.get("threads", default_threads())?;
     let seed: u64 = a.get("seed", 1)?;
+    let cfg = exec_config_from_args(a)?;
+    let spawn_exec = exec_config_from_args_base(a, ExecConfig::spawn())?;
+    let threads = cfg.threads;
     let g = budget(alpha, n);
     let mut rng = Rng64::new(seed);
 
@@ -260,17 +311,19 @@ pub fn schedule(a: &Args) -> crate::Result<()> {
     let gcp = gchain.compile();
     let tchain = random_tplan(n, g, &mut rng);
     let tcp = tchain.compile();
-    for (label, stats) in [("G-chain", gcp.stats()), ("T-chain", tcp.stats())] {
+    for (label, cp) in [("G-chain", &gcp), ("T-chain", &tcp)] {
+        let stats = cp.stats();
         println!(
-            "{label}: n={n} stages={} layers={} depth-reduction={:.1}x max-width={}",
+            "{label}: n={n} stages={} layers={} depth-reduction={:.1}x max-width={} superstages={}",
             stats.stages,
             stats.layers,
             stats.mean_width,
-            stats.max_width
+            stats.max_width,
+            cp.num_superstages()
         );
     }
 
-    // timing: sequential plan apply vs compiled apply at 1 and N threads
+    // timing: sequential plan apply vs the compiled executors
     let plan = gchain.to_plan();
     let signals: Vec<Vec<f32>> = (0..batch)
         .map(|_| (0..n).map(|_| rng.randn() as f32).collect())
@@ -288,18 +341,128 @@ pub fn schedule(a: &Args) -> crate::Result<()> {
     });
     let mut par_block = SignalBlock::from_signals(&signals);
     let t_par =
-        crate::bench_util::bench(&format!("scheduled apply ({threads} threads)"), 5, 0.05, || {
-            compiled.apply_batch(&mut par_block, threads);
+        crate::bench_util::bench(&format!("spawn apply ({threads} threads)"), 5, 0.05, || {
+            compiled.apply_batch_spawn(&mut par_block, false, &spawn_exec);
             par_block.data[0]
+        });
+    let pool = global_pool();
+    let mut pool_block = SignalBlock::from_signals(&signals);
+    let t_pool =
+        crate::bench_util::bench(&format!("pooled apply ({threads} threads)"), 5, 0.05, || {
+            compiled.apply_batch_pooled(&mut pool_block, pool, &cfg);
+            pool_block.data[0]
         });
     println!("{}", t_seq.line());
     println!("{}", t_one.line());
     println!("{}", t_par.line());
+    println!("{}", t_pool.line());
     println!(
-        "batch={batch}: scheduled/1t vs sequential {:.2}x, scheduled/{threads}t vs sequential {:.2}x",
+        "batch={batch}: scheduled/1t {:.2}x, spawn/{threads}t {:.2}x, pooled/{threads}t {:.2}x vs sequential",
         t_seq.min_s / t_one.min_s,
-        t_seq.min_s / t_par.min_s
+        t_seq.min_s / t_par.min_s,
+        t_seq.min_s / t_pool.min_s
     );
+    Ok(())
+}
+
+/// `fastes bench` — machine-readable apply benchmark: ns/stage and GB/s
+/// for sequential vs spawn-per-apply vs pooled execution of
+/// level-scheduled G-plans at fixed seeds. `--json` writes the results to
+/// `BENCH_apply.json` (or `--out PATH`) so the perf trajectory of the
+/// apply hot path is tracked in a machine-readable artifact.
+pub fn bench(a: &Args) -> crate::Result<()> {
+    let sizes = a.get_list("sizes", &[256, 512, 1024])?;
+    let batch: usize = a.get("batch", 64)?;
+    let alpha: usize = a.get("alpha", 2)?;
+    let seed: u64 = a.get("seed", 1)?;
+    let cfg = exec_config_from_args(a)?;
+    // the spawn baseline gets the same flag overrides over its own
+    // (higher) default gates, so `--min-work` really reaches both modes
+    let spawn_exec = exec_config_from_args_base(a, ExecConfig::spawn())?;
+    let threads = cfg.threads;
+    let pool = global_pool();
+    let mut entries = Vec::new();
+
+    for &n in &sizes {
+        if n < 2 {
+            bail!("--sizes entries must be ≥ 2 (got {n})");
+        }
+        let g = budget(alpha, n);
+        // deterministic per-size seed so sizes can be re-run independently
+        let mut rng = Rng64::new(seed ^ ((n as u64) << 20));
+        let plan = random_gplan(n, g, &mut rng).to_plan();
+        let compiled = CompiledPlan::from_plan(&plan, ChainKind::G);
+        let st = compiled.stats();
+        let signals: Vec<Vec<f32>> = (0..batch)
+            .map(|_| (0..n).map(|_| rng.randn() as f32).collect())
+            .collect();
+        // nominal memory traffic per apply: every (paired) stage streams
+        // two batch-length f32 rows in and out → 16 B per stage-column
+        let bytes = 16.0 * g as f64 * batch as f64;
+
+        let mut seq_blk = SignalBlock::from_signals(&signals);
+        let t_seq = crate::bench_util::bench(&format!("n={n} sequential"), 5, 0.05, || {
+            crate::transforms::apply_gchain_batch_f32(&plan, &mut seq_blk);
+            seq_blk.data[0]
+        });
+        let mut sp_blk = SignalBlock::from_signals(&signals);
+        let t_spawn =
+            crate::bench_util::bench(&format!("n={n} spawn/{threads}t"), 5, 0.05, || {
+                compiled.apply_batch_spawn(&mut sp_blk, false, &spawn_exec);
+                sp_blk.data[0]
+            });
+        let mut pl_blk = SignalBlock::from_signals(&signals);
+        let t_pool =
+            crate::bench_util::bench(&format!("n={n} pooled/{threads}t"), 5, 0.05, || {
+                compiled.apply_batch_pooled(&mut pl_blk, pool, &cfg);
+                pl_blk.data[0]
+            });
+        println!("{}", t_seq.line());
+        println!("{}", t_spawn.line());
+        println!("{}", t_pool.line());
+        println!(
+            "n={n} g={g} batch={batch}: pooled {:.2}x vs sequential, {:.2}x vs spawn",
+            t_seq.min_s / t_pool.min_s,
+            t_spawn.min_s / t_pool.min_s
+        );
+        let mode = |t: &crate::bench_util::BenchResult| {
+            format!(
+                "{{\"ns_per_stage\": {:.4}, \"gb_per_s\": {:.4}, \"min_s\": {:.9}}}",
+                t.min_s * 1e9 / g as f64,
+                bytes / t.min_s / 1e9,
+                t.min_s
+            )
+        };
+        entries.push(format!(
+            "    {{\"n\": {n}, \"stages\": {g}, \"layers\": {}, \"max_width\": {}, \
+             \"superstages\": {}, \"sequential\": {}, \"spawn\": {}, \"pooled\": {}, \
+             \"pooled_speedup_vs_sequential\": {:.4}, \"pooled_speedup_vs_spawn\": {:.4}}}",
+            st.layers,
+            st.max_width,
+            compiled.num_superstages(),
+            mode(&t_seq),
+            mode(&t_spawn),
+            mode(&t_pool),
+            t_seq.min_s / t_pool.min_s,
+            t_spawn.min_s / t_pool.min_s
+        ));
+    }
+
+    if a.has("json") {
+        let out_path = a.get_str("out", "BENCH_apply.json");
+        let json = format!(
+            "{{\n  \"bench\": \"apply\",\n  \"seed\": {seed},\n  \"alpha\": {alpha},\n  \
+             \"batch\": {batch},\n  \"threads\": {threads},\n  \"tile_cols\": {},\n  \
+             \"min_work\": {},\n  \"spawn_min_work\": {},\n  \"results\": [\n{}\n  ]\n}}\n",
+            cfg.tile_cols,
+            cfg.min_work,
+            spawn_exec.min_work,
+            entries.join(",\n")
+        );
+        std::fs::write(&out_path, json)
+            .map_err(|e| anyhow::anyhow!("cannot write {out_path}: {e}"))?;
+        println!("wrote {out_path}");
+    }
     Ok(())
 }
 

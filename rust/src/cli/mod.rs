@@ -8,10 +8,13 @@
 //! * `gft` — build a graph, factor its Laplacian, report the fast-GFT
 //!   accuracy and flop counts.
 //! * `serve` — run the serving coordinator on a factored GFT and report
-//!   latency/throughput (`--scheduled` executes the level-scheduled
-//!   parallel plan).
-//! * `schedule` — compile a chain into conflict-free layers and report
-//!   layer counts/depth plus sequential-vs-parallel apply timings.
+//!   latency/throughput (`--exec pool` executes the fused plan on the
+//!   persistent worker pool; `spawn`/`seq` are the legacy strategies).
+//! * `schedule` — compile a chain into conflict-free layers + fused
+//!   superstages and report layer counts/depth plus sequential vs spawn
+//!   vs pooled apply timings.
+//! * `bench` — machine-readable apply benchmark (sequential vs spawn vs
+//!   pooled; `--json` writes `BENCH_apply.json`).
 //! * `eigen` — eigendecomposition smoke (substrate sanity).
 //! * `bench-apply` — quick butterfly-vs-dense apply timing.
 
@@ -91,6 +94,7 @@ pub fn run(args: Args) -> crate::Result<()> {
         "gft" => commands::gft(&args),
         "serve" => commands::serve(&args),
         "schedule" => commands::schedule(&args),
+        "bench" => commands::bench(&args),
         "eigen" => commands::eigen(&args),
         "bench-apply" => commands::bench_apply(&args),
         "help" | "--help" | "-h" => {
@@ -119,12 +123,21 @@ COMMANDS
                        [--n N] [--alpha A] [--directed] [--seed S]
   serve                serve batched GFT requests
                        [--backend native|pjrt] [--requests N] [--batch B]
-                       [--alpha A] [--artifacts DIR] [--scheduled]
-                       [--threads T]
-  schedule             level-schedule a chain, report layers/depth and time
-                       sequential vs parallel apply
-                       [--n N] [--alpha A] [--batch B] [--threads T]
+                       [--alpha A] [--artifacts DIR]
+                       [--exec pool|spawn|seq] [--threads T]
+                       [--min-work W] [--layer-min-work W] [--tile C]
+                       (tuning flags reach the pooled executor; the spawn
+                       backend keeps its env-tunable legacy gates;
+                       --scheduled is the legacy alias for --exec spawn)
+  schedule             level-schedule a chain, report layers/depth/
+                       superstages and time sequential vs spawn vs pooled
+                       apply [--n N] [--alpha A] [--batch B] [--threads T]
+                       [--min-work W] [--layer-min-work W] [--tile C]
                        [--seed S]
+  bench                machine-readable apply bench: sequential vs spawn
+                       vs pooled (ns/stage, GB/s)
+                       [--sizes a,b,c] [--batch B] [--alpha A] [--seed S]
+                       [--threads T] [--json] [--out PATH]
   eigen                symmetric eigensolver smoke [--n N] [--seed S]
   bench-apply          butterfly vs dense apply timing [--n N] [--alpha A]
   help                 this text

@@ -26,20 +26,24 @@
 //! rust butterfly fast-path from [`transforms`] or an AOT-compiled
 //! JAX/Pallas artifact through the PJRT runtime in [`runtime`].
 //!
-//! ## Level-scheduled parallel execution
+//! ## Level-scheduled, fused, pooled execution
 //!
 //! The `O(g)` apply is *sequential* as written (`G_1`, then `G_2`, …), but
 //! butterflies with disjoint `(i, j)` supports commute.
 //! [`transforms::schedule`] compiles any chain into **conflict-free
-//! layers** (greedy list scheduling over the coordinate-conflict DAG) and
-//! executes the compiled plan ([`transforms::CompiledPlan`]) with
-//! multi-threaded apply — across batch columns for serving workloads and
-//! across a layer's independent rotations for single large signals. The
-//! reordering only permutes commuting stages, so the scheduled apply is
-//! **bitwise identical** to the sequential one; the serving backend
-//! ([`serve::NativeGftBackend`]) exposes it as an opt-in fast path and the
-//! `fastes schedule` CLI reports layer counts, depth and measured
-//! speedups.
+//! layers** (greedy list scheduling over the coordinate-conflict DAG),
+//! **fuses** consecutive layers into flat per-direction superstage
+//! streams (contiguous structure-of-arrays coefficients in `f32` and
+//! `f64`), and executes the compiled plan ([`transforms::CompiledPlan`])
+//! **cache-blocked** on a **persistent worker pool**
+//! ([`transforms::pool`]): parked workers claim `(n, tile_cols)` column
+//! tiles from an atomic cursor and stream each tile through the whole
+//! fused plan while it is L1/L2-resident — no thread spawns on the
+//! request path. The reordering only permutes commuting stages, so every
+//! parallel apply is **bitwise identical** to the sequential one; the
+//! serving backend ([`serve::NativeGftBackend`]) runs pooled by default
+//! (`fastes serve --exec pool`), and `fastes schedule` / `fastes bench
+//! --json` report schedule shapes and measured speedups.
 //!
 //! ## Layering (three-layer AOT architecture)
 //!

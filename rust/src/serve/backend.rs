@@ -4,8 +4,8 @@ use anyhow::bail;
 
 use crate::runtime::{ArtifactKind, ArtifactStore};
 use crate::transforms::{
-    apply_gchain_batch_f32, apply_gchain_batch_f32_t, batch::SignalBlock, ChainKind, CompiledPlan,
-    PlanArrays,
+    apply_gchain_batch_f32, apply_gchain_batch_f32_t, batch::SignalBlock, global_pool, ChainKind,
+    CompiledPlan, ExecConfig, PlanArrays,
 };
 
 /// Which direction of the transform the backend serves.
@@ -36,15 +36,20 @@ pub trait Backend {
 
 /// Native rust butterfly fast path (the Fig.-6 "C implementation"
 /// analogue). Optionally executes through a level-scheduled
-/// [`CompiledPlan`] with multi-threaded apply (see
-/// [`crate::transforms::schedule`]); the compiled path is numerically
-/// identical to the sequential one.
+/// [`CompiledPlan`] — either on the legacy spawn-per-apply executor or,
+/// preferably, on the process-wide persistent worker pool with fused
+/// cache-blocked apply (see [`crate::transforms::schedule`] and
+/// [`crate::transforms::pool`]). Every compiled path is bitwise identical
+/// to the sequential one.
 pub struct NativeGftBackend {
     plan: PlanArrays,
     /// Level-scheduled execution plan (the parallel fast path).
     compiled: Option<CompiledPlan>,
-    /// Worker threads for the compiled path.
+    /// Worker threads for the compiled spawn path.
     threads: usize,
+    /// When set, compiled applies run on [`global_pool`] with these
+    /// tunables instead of spawning scoped threads.
+    exec: Option<ExecConfig>,
     direction: TransformDirection,
     max_batch: usize,
     /// Spectral filter diagonal (Filter direction only).
@@ -64,7 +69,7 @@ impl NativeGftBackend {
 
     /// New backend with an explicit execution strategy: when `scheduled`,
     /// the plan is compiled into conflict-free layers at construction time
-    /// and applied with up to `threads` workers per batch.
+    /// and applied with up to `threads` spawned workers per batch.
     pub fn with_schedule(
         plan: PlanArrays,
         direction: TransformDirection,
@@ -81,10 +86,27 @@ impl NativeGftBackend {
             plan,
             compiled,
             threads: threads.max(1),
+            exec: None,
             direction,
             max_batch,
             filter,
         }
+    }
+
+    /// New backend on the persistent worker pool: the plan is compiled
+    /// (levels + fused superstages) at construction time and every apply
+    /// runs cache-blocked on the process-wide [`global_pool`] — no thread
+    /// spawns on the request path. The serve coordinator's default.
+    pub fn with_pool(
+        plan: PlanArrays,
+        direction: TransformDirection,
+        max_batch: usize,
+        filter: Option<Vec<f32>>,
+        cfg: ExecConfig,
+    ) -> Self {
+        let mut backend = Self::with_schedule(plan, direction, max_batch, filter, true, 1);
+        backend.exec = Some(cfg);
+        backend
     }
 
     /// `X ← diag(h) X` on the live block.
@@ -112,6 +134,20 @@ impl Backend for NativeGftBackend {
             bail!("block n {} != plan n {}", block.n, self.plan.n);
         }
         if let Some(cp) = &self.compiled {
+            if let Some(cfg) = &self.exec {
+                let pool = global_pool();
+                match self.direction {
+                    TransformDirection::Forward => cp.apply_batch_pooled_rev(block, pool, cfg),
+                    TransformDirection::Inverse => cp.apply_batch_pooled(block, pool, cfg),
+                    TransformDirection::Filter => {
+                        let h = self.filter.as_ref().expect("checked in with_schedule");
+                        cp.apply_batch_pooled_rev(block, pool, cfg);
+                        Self::scale_rows(block, h);
+                        cp.apply_batch_pooled(block, pool, cfg);
+                    }
+                }
+                return Ok(());
+            }
             match self.direction {
                 TransformDirection::Forward => cp.apply_batch_rev(block, self.threads),
                 TransformDirection::Inverse => cp.apply_batch(block, self.threads),
@@ -138,7 +174,9 @@ impl Backend for NativeGftBackend {
     }
 
     fn name(&self) -> &str {
-        if self.compiled.is_some() {
+        if self.exec.is_some() {
+            "native-gft-pooled"
+        } else if self.compiled.is_some() {
             "native-gft-scheduled"
         } else {
             "native-gft"
@@ -291,6 +329,34 @@ mod tests {
             let mut b = SignalBlock::from_signals(&signals);
             seq.forward(&mut a).unwrap();
             sched.forward(&mut b).unwrap();
+            assert_eq!(a.data, b.data, "direction {direction:?} diverged");
+        }
+    }
+
+    #[test]
+    fn pooled_backend_matches_sequential_bitwise() {
+        // the pooled fast path must serve bit-identical answers to the
+        // sequential backend in every direction (fusion only reorders
+        // stages with disjoint supports)
+        let mut rng = Rng64::new(608);
+        let plan = random_plan(16, 400, 607);
+        let signals: Vec<Vec<f32>> =
+            (0..6).map(|_| (0..16).map(|_| rng.randn() as f32).collect()).collect();
+        let h: Vec<f32> = (0..16).map(|i| 1.0 / (1.0 + i as f32)).collect();
+        // tiny thresholds so the pooled parallel path really engages
+        let cfg = ExecConfig { threads: 3, min_work: 1, layer_min_work: 1.0, tile_cols: 2 };
+        for direction in
+            [TransformDirection::Forward, TransformDirection::Inverse, TransformDirection::Filter]
+        {
+            let filter = (direction == TransformDirection::Filter).then(|| h.clone());
+            let mut seq = NativeGftBackend::new(plan.clone(), direction, 6, filter.clone());
+            let mut pooled =
+                NativeGftBackend::with_pool(plan.clone(), direction, 6, filter, cfg.clone());
+            assert_eq!(pooled.name(), "native-gft-pooled");
+            let mut a = SignalBlock::from_signals(&signals);
+            let mut b = SignalBlock::from_signals(&signals);
+            seq.forward(&mut a).unwrap();
+            pooled.forward(&mut b).unwrap();
             assert_eq!(a.data, b.data, "direction {direction:?} diverged");
         }
     }

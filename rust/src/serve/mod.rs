@@ -13,8 +13,12 @@
 //! coordinator is built directly on `std::sync::mpsc` — one OS thread
 //! owns the backend (PJRT executables are not Sync), `sync_channel`
 //! provides the bounded queue, and per-request one-shot replies are
-//! `sync_channel(1)`. This mirrors the paper's setting (Fig. 6 measures
-//! single-threaded transform application).
+//! `sync_channel(1)`. Intra-batch parallelism comes from the backend: the
+//! pooled native backend ([`NativeGftBackend::with_pool`]) executes each
+//! batch on the **process-wide persistent worker pool**
+//! ([`crate::transforms::global_pool`]), so one set of parked workers is
+//! shared across every request and every coordinator in the process — no
+//! thread is spawned on the request path.
 
 mod backend;
 mod metrics;

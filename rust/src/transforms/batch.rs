@@ -9,6 +9,7 @@
 //! kernel's batch-in-lanes mapping (DESIGN.md §3).
 
 use super::chain::PlanArrays;
+use super::pool::{ExecConfig, WorkerPool};
 use super::schedule::CompiledPlan;
 
 /// An `(n, batch)` row-major block of `f32` signals: column `b` is the
@@ -179,6 +180,30 @@ pub fn apply_compiled_batch_f32(cp: &CompiledPlan, block: &mut SignalBlock, thre
 /// forward GFT) or `X ← T̄⁻¹ X` (T).
 pub fn apply_compiled_batch_f32_rev(cp: &CompiledPlan, block: &mut SignalBlock, threads: usize) {
     cp.apply_batch_rev(block, threads)
+}
+
+/// Pooled apply — the serving hot path: fused superstage streams over
+/// cache-blocked column tiles, dispatched to a persistent [`WorkerPool`]
+/// (no thread spawns per call). Bitwise identical to the sequential
+/// per-stage applies above.
+pub fn apply_compiled_batch_f32_pooled(
+    cp: &CompiledPlan,
+    block: &mut SignalBlock,
+    pool: &WorkerPool,
+    cfg: &ExecConfig,
+) {
+    cp.apply_batch_pooled(block, pool, cfg)
+}
+
+/// Reverse direction of [`apply_compiled_batch_f32_pooled`]: `X ← Ūᵀ X`
+/// (G, the forward GFT) or `X ← T̄⁻¹ X` (T).
+pub fn apply_compiled_batch_f32_pooled_rev(
+    cp: &CompiledPlan,
+    block: &mut SignalBlock,
+    pool: &WorkerPool,
+    cfg: &ExecConfig,
+) {
+    cp.apply_batch_pooled_rev(block, pool, cfg)
 }
 
 #[cfg(test)]

@@ -13,21 +13,25 @@
 //!   runtime and the AOT artifacts.
 //!
 //! The batched `f32` fast path used on the serving hot loop lives in
-//! [`batch`]; the level-scheduling compiler and its multi-threaded
-//! executor (conflict-free layers of commuting butterflies) live in
-//! [`schedule`].
+//! [`batch`]; the level-scheduling compiler, the plan-fusion /
+//! cache-blocking pass and the executors (spawn-per-apply baseline plus
+//! the pooled hot path) live in [`schedule`]; the persistent worker-pool
+//! runtime and its [`ExecConfig`] tunables live in [`pool`].
 
 pub mod batch;
 mod chain;
 mod gtransform;
+pub mod pool;
 pub mod schedule;
 mod ttransform;
 
 pub use batch::{
-    apply_compiled_batch_f32, apply_compiled_batch_f32_rev, apply_gchain_batch_f32,
-    apply_gchain_batch_f32_t, apply_tchain_batch_f32, SignalBlock,
+    apply_compiled_batch_f32, apply_compiled_batch_f32_pooled, apply_compiled_batch_f32_pooled_rev,
+    apply_compiled_batch_f32_rev, apply_gchain_batch_f32, apply_gchain_batch_f32_t,
+    apply_tchain_batch_f32, SignalBlock,
 };
 pub use chain::{GChain, PlanArrays, TChain};
 pub use gtransform::{GKind, GTransform};
+pub use pool::{global_pool, ExecConfig, WorkerPool};
 pub use schedule::{default_threads, ChainKind, CompiledPlan, ScheduleStats};
 pub use ttransform::TTransform;

@@ -1,0 +1,420 @@
+//! Persistent worker-pool execution runtime for compiled butterfly plans.
+//!
+//! The level-scheduled executor of [`super::schedule`] originally spawned
+//! scoped OS threads on **every** `apply_batch` call. For serve-sized
+//! requests (a few thousand stages × a few dozen columns) the spawn/join
+//! cost dominates the transform itself, which is why the spawn path gates
+//! itself behind a large minimum-work threshold. This module replaces the
+//! per-apply spawns with a **long-lived pool**:
+//!
+//! * workers are spawned once and **parked** on a condvar between applies;
+//! * each apply publishes one job (an epoch-stamped closure broadcast) and
+//!   the workers race to claim per-epoch slots — the calling thread always
+//!   participates as slot 0, so a pool of `w` workers yields `w + 1`-way
+//!   parallelism with zero spawns on the hot path;
+//! * jobs that need dynamic load balancing (ragged column tiles) share an
+//!   atomic cursor — claiming a tile is one `fetch_add`, which is the
+//!   work-stealing discipline for uneven batches;
+//! * a panicking job is caught on the worker, the panic is re-raised on
+//!   the caller, and the pool remains usable for subsequent applies.
+//!   Caveat: this containment applies to jobs whose participants do not
+//!   synchronize with each other; a job that waits on an internal barrier
+//!   must not unwind past a pending `wait` (the barrier-synchronized
+//!   layer-parallel executor guards this by aborting on panic — see
+//!   `AbortOnBarrierPanic` in [`super::schedule`]);
+//! * dropping the pool parks no new work, wakes every worker and joins
+//!   them all.
+//!
+//! [`ExecConfig`] carries the executor tunables that used to be hard-coded
+//! constants (`PARALLEL_MIN_WORK` / `LAYER_PARALLEL_MIN_WORK`), because the
+//! pooled dispatch has a far lower break-even point than spawn-per-apply.
+//! Every knob can be overridden from the environment
+//! (`FASTES_THREADS`, `FASTES_MIN_WORK`, `FASTES_LAYER_MIN_WORK`,
+//! `FASTES_TILE_COLS`) or from CLI flags.
+//!
+//! One pool is shared per process ([`global_pool`]); the serve coordinator
+//! and the CLI reuse it across requests.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+use super::schedule::default_threads;
+
+/// Tunables of the parallel executors (pooled and spawn-per-apply).
+///
+/// Defaults come from [`ExecConfig::pooled`] / [`ExecConfig::spawn`]; both
+/// constructors apply environment overrides so deployments can retune the
+/// break-even points without a rebuild.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ExecConfig {
+    /// Total worker parallelism for one apply (pool workers + caller).
+    pub threads: usize,
+    /// Minimum total element-operations (`stages × batch`) before any
+    /// multi-threaded mode is considered; below this the plan runs inline.
+    pub min_work: usize,
+    /// Minimum per-layer element-operations (`batch × mean layer width`)
+    /// for the barrier-synchronized layer-parallel mode to pay off.
+    pub layer_min_work: f64,
+    /// Column-tile width of the cache-blocked executor: one worker streams
+    /// an `(n, tile_cols)` tile through the whole fused plan while the
+    /// tile stays resident in L1/L2.
+    pub tile_cols: usize,
+}
+
+impl ExecConfig {
+    /// Defaults for the pooled executor. Dispatch through a parked pool
+    /// costs a couple of microseconds (condvar wake + join handshake), so
+    /// the break-even thresholds sit far below the spawn path's.
+    pub fn pooled() -> ExecConfig {
+        ExecConfig {
+            threads: default_threads(),
+            min_work: 2048,
+            layer_min_work: 512.0,
+            tile_cols: 32,
+        }
+        .with_env_overrides()
+    }
+
+    /// Defaults for the legacy spawn-per-apply executor (kept for
+    /// benchmarking against the pool). Spawning scoped threads costs tens
+    /// of microseconds, hence the much higher thresholds.
+    pub fn spawn() -> ExecConfig {
+        ExecConfig {
+            threads: default_threads(),
+            min_work: 8192,
+            layer_min_work: 1024.0,
+            tile_cols: 32,
+        }
+        .with_env_overrides()
+    }
+
+    /// Replace `threads` (builder style).
+    pub fn with_threads(mut self, threads: usize) -> ExecConfig {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// Apply `FASTES_*` environment overrides to `self`.
+    fn with_env_overrides(mut self) -> ExecConfig {
+        if let Some(v) = env_parse::<usize>("FASTES_THREADS") {
+            self.threads = v.max(1);
+        }
+        if let Some(v) = env_parse::<usize>("FASTES_MIN_WORK") {
+            self.min_work = v;
+        }
+        if let Some(v) = env_parse::<f64>("FASTES_LAYER_MIN_WORK") {
+            self.layer_min_work = v;
+        }
+        if let Some(v) = env_parse::<usize>("FASTES_TILE_COLS") {
+            self.tile_cols = v.max(1);
+        }
+        self
+    }
+}
+
+impl Default for ExecConfig {
+    fn default() -> Self {
+        ExecConfig::pooled()
+    }
+}
+
+fn env_parse<T: std::str::FromStr>(key: &str) -> Option<T> {
+    std::env::var(key).ok().and_then(|v| v.parse().ok())
+}
+
+/// A broadcast job: invoked once per participant with a distinct slot
+/// index in `0..parties` (slot 0 is always the calling thread).
+type Job = dyn Fn(usize) + Sync;
+
+struct State {
+    /// Bumped once per `run`; workers claim at most one slot per epoch.
+    epoch: u64,
+    /// The current job, lifetime-erased. `run` keeps the real closure
+    /// alive until every participant has finished, then clears this.
+    job: Option<&'static Job>,
+    /// Worker slots to claim this epoch (excludes the caller's slot 0).
+    parties: usize,
+    /// Worker slots claimed so far this epoch.
+    claimed: usize,
+    /// Worker slots claimed-or-pending that have not finished yet.
+    remaining: usize,
+    /// A worker's job invocation panicked this epoch.
+    panicked: bool,
+    /// Pool is shutting down; workers exit.
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Workers park here between jobs.
+    work: Condvar,
+    /// The caller parks here while workers drain the epoch.
+    done: Condvar,
+}
+
+/// A persistent pool of parked worker threads (see module docs).
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    /// Serializes concurrent `run` calls from different threads: the pool
+    /// broadcasts one job at a time.
+    run_lock: Mutex<()>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn a pool of `workers` helper threads. `run` additionally uses
+    /// the calling thread, so total parallelism is `workers + 1`;
+    /// `WorkerPool::new(0)` is valid and runs every job inline.
+    pub fn new(workers: usize) -> WorkerPool {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                epoch: 0,
+                job: None,
+                parties: 0,
+                claimed: 0,
+                remaining: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let handles = (0..workers)
+            .map(|k| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("fastes-pool-{k}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        WorkerPool { shared, run_lock: Mutex::new(()), handles }
+    }
+
+    /// Number of helper threads (total parallelism is `workers() + 1`).
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Broadcast `job` to `helpers` pool workers (clamped to the pool
+    /// size) and run it on the calling thread as slot 0; slots
+    /// `1..=helpers` run on distinct workers. Blocks until every
+    /// participant finishes. If any invocation panics, the panic is
+    /// re-raised here after the epoch drains — the pool itself stays
+    /// usable.
+    pub fn run(&self, helpers: usize, job: &Job) {
+        let helpers = helpers.min(self.handles.len());
+        if helpers == 0 {
+            job(0);
+            return;
+        }
+        let serial = self.run_lock.lock().unwrap();
+        // SAFETY: the 'static lifetime is a lie confined to this call —
+        // the reference is published to workers under the state lock and
+        // `run` does not return (or unwind past the wait loop below) until
+        // `remaining == 0`, i.e. until no worker can still hold it.
+        let job_static: &'static Job = unsafe { std::mem::transmute::<&Job, &'static Job>(job) };
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.epoch = st.epoch.wrapping_add(1);
+            st.job = Some(job_static);
+            st.parties = helpers;
+            st.claimed = 0;
+            st.remaining = helpers;
+            st.panicked = false;
+            self.shared.work.notify_all();
+        }
+        // The caller is participant 0 — it works instead of blocking.
+        let caller = catch_unwind(AssertUnwindSafe(|| job(0)));
+        let worker_panicked = {
+            let mut st = self.shared.state.lock().unwrap();
+            while st.remaining > 0 {
+                st = self.shared.done.wait(st).unwrap();
+            }
+            st.job = None;
+            st.panicked
+        };
+        drop(serial);
+        if let Err(payload) = caller {
+            std::panic::resume_unwind(payload);
+        }
+        if worker_panicked {
+            panic!("worker-pool job panicked on a worker thread");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.work.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    let mut my_epoch = 0u64;
+    let mut st = shared.state.lock().unwrap();
+    loop {
+        if st.shutdown {
+            return;
+        }
+        let claimable =
+            st.job.is_some() && st.epoch != my_epoch && st.claimed < st.parties;
+        if claimable {
+            my_epoch = st.epoch;
+            st.claimed += 1;
+            let slot = st.claimed; // caller is 0; workers are 1..=parties
+            let job = st.job.expect("checked claimable");
+            drop(st);
+            let result = catch_unwind(AssertUnwindSafe(|| job(slot)));
+            st = shared.state.lock().unwrap();
+            if result.is_err() {
+                st.panicked = true;
+            }
+            st.remaining -= 1;
+            if st.remaining == 0 {
+                shared.done.notify_all();
+            }
+        } else {
+            st = shared.work.wait(st).unwrap();
+        }
+    }
+}
+
+/// The process-wide shared pool: sized so that pool workers plus the
+/// calling thread match the machine's available parallelism. Used by the
+/// serve coordinator (one pool across all requests) and the CLI/benches.
+pub fn global_pool() -> &'static WorkerPool {
+    static POOL: OnceLock<WorkerPool> = OnceLock::new();
+    POOL.get_or_init(|| WorkerPool::new(default_threads().saturating_sub(1)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn all_slots_execute_exactly_once() {
+        let pool = WorkerPool::new(3);
+        let slots = Mutex::new(Vec::new());
+        pool.run(3, &|slot| slots.lock().unwrap().push(slot));
+        let mut got = slots.into_inner().unwrap();
+        got.sort_unstable();
+        assert_eq!(got, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn helpers_clamped_to_pool_size() {
+        let pool = WorkerPool::new(2);
+        let count = AtomicUsize::new(0);
+        pool.run(99, &|_slot| {
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.into_inner(), 3, "2 workers + caller");
+    }
+
+    #[test]
+    fn zero_worker_pool_runs_inline() {
+        let pool = WorkerPool::new(0);
+        let slots = Mutex::new(Vec::new());
+        pool.run(4, &|slot| slots.lock().unwrap().push(slot));
+        assert_eq!(slots.into_inner().unwrap(), vec![0]);
+    }
+
+    #[test]
+    fn thousand_applies_reuse_the_same_threads() {
+        // worker-id reuse: across 1000 back-to-back applies the pool must
+        // involve only its 2 parked workers plus the caller — no growth
+        let pool = WorkerPool::new(2);
+        let ids = Mutex::new(HashSet::new());
+        for _ in 0..1000 {
+            pool.run(2, &|_slot| {
+                ids.lock().unwrap().insert(std::thread::current().id());
+            });
+        }
+        let ids = ids.into_inner().unwrap();
+        assert!(ids.len() <= 3, "thread growth: {} distinct ids", ids.len());
+        assert_eq!(pool.workers(), 2);
+    }
+
+    #[test]
+    fn work_stealing_cursor_partitions_all_chunks() {
+        let pool = WorkerPool::new(3);
+        let cursor = AtomicUsize::new(0);
+        let hits = Mutex::new(vec![0usize; 101]);
+        pool.run(3, &|_slot| loop {
+            let k = cursor.fetch_add(1, Ordering::Relaxed);
+            if k >= 101 {
+                break;
+            }
+            hits.lock().unwrap()[k] += 1;
+        });
+        assert!(hits.into_inner().unwrap().iter().all(|&h| h == 1));
+    }
+
+    #[test]
+    fn panicked_job_does_not_deadlock_subsequent_applies() {
+        let pool = WorkerPool::new(2);
+        // panic on a worker slot
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(2, &|slot| {
+                if slot == 1 {
+                    panic!("boom (worker)");
+                }
+            })
+        }));
+        assert!(r.is_err(), "worker panic must propagate to the caller");
+        // panic on the caller slot
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(2, &|slot| {
+                if slot == 0 {
+                    panic!("boom (caller)");
+                }
+            })
+        }));
+        assert!(r.is_err(), "caller panic must propagate");
+        // the pool must still complete fresh work afterwards
+        let count = AtomicUsize::new(0);
+        pool.run(2, &|_slot| {
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.into_inner(), 3);
+    }
+
+    #[test]
+    fn drop_joins_all_workers() {
+        let pool = WorkerPool::new(3);
+        let count = AtomicUsize::new(0);
+        pool.run(3, &|_slot| {
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.into_inner(), 4);
+        drop(pool); // must not hang; workers observe shutdown and exit
+    }
+
+    #[test]
+    fn exec_config_defaults_are_ordered() {
+        let pooled = ExecConfig::pooled();
+        let spawn = ExecConfig::spawn();
+        assert!(pooled.min_work <= spawn.min_work);
+        assert!(pooled.layer_min_work <= spawn.layer_min_work);
+        assert!(pooled.threads >= 1 && pooled.tile_cols >= 1);
+        assert_eq!(ExecConfig::default(), pooled);
+    }
+
+    #[test]
+    fn global_pool_is_shared() {
+        let a = global_pool() as *const WorkerPool;
+        let b = global_pool() as *const WorkerPool;
+        assert_eq!(a, b);
+    }
+}

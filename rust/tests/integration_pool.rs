@@ -1,0 +1,172 @@
+//! Lifecycle and end-to-end tests of the persistent worker-pool runtime:
+//! thread reuse across many applies, drop/join behaviour, panic
+//! containment, and bitwise agreement of the pooled fused executor with
+//! the sequential apply through the public API and the serve coordinator.
+
+use std::collections::HashSet;
+use std::sync::Mutex;
+
+use fastes::cli::figures::{random_gplan, random_tplan};
+use fastes::linalg::Rng64;
+use fastes::serve::{Backend, Coordinator, NativeGftBackend, ServeConfig, TransformDirection};
+use fastes::transforms::{
+    apply_gchain_batch_f32, ChainKind, CompiledPlan, ExecConfig, SignalBlock, WorkerPool,
+};
+
+/// A pooled-executor config with thresholds low enough that the parallel
+/// paths really engage at test sizes.
+fn eager_cfg(threads: usize, tile_cols: usize) -> ExecConfig {
+    ExecConfig { threads, min_work: 1, layer_min_work: 1.0, tile_cols }
+}
+
+#[test]
+fn pool_survives_1000_applies_without_thread_growth() {
+    // worker-id reuse across 1000 back-to-back pooled applies: only the
+    // pool's parked workers (plus the caller) may ever touch a job
+    let pool = WorkerPool::new(2);
+    let mut rng = Rng64::new(9101);
+    let n = 24;
+    let ch = random_gplan(n, 6 * n, &mut rng);
+    let cp = ch.compile();
+    let cfg = eager_cfg(3, 2);
+    let signals: Vec<Vec<f32>> =
+        (0..8).map(|_| (0..n).map(|_| rng.randn() as f32).collect()).collect();
+    let mut reference = SignalBlock::from_signals(&signals);
+    apply_gchain_batch_f32(&ch.to_plan(), &mut reference);
+
+    let ids: Mutex<HashSet<std::thread::ThreadId>> = Mutex::new(HashSet::new());
+    for apply in 0..1000 {
+        ids.lock().unwrap().insert(std::thread::current().id());
+        // observe which threads participate by piggybacking a tiny probe
+        // job before the real apply — the pool broadcasts both to the
+        // same parked workers
+        pool.run(2, &|_slot| {
+            ids.lock().unwrap().insert(std::thread::current().id());
+        });
+        let mut blk = SignalBlock::from_signals(&signals);
+        cp.apply_batch_pooled(&mut blk, &pool, &cfg);
+        if apply % 250 == 0 {
+            assert_eq!(blk.data, reference.data, "apply {apply} diverged");
+        }
+    }
+    let ids = ids.into_inner().unwrap();
+    assert!(
+        ids.len() <= pool.workers() + 1,
+        "thread growth: {} distinct worker ids for a {}-worker pool",
+        ids.len(),
+        pool.workers()
+    );
+    assert_eq!(pool.workers(), 2, "pool size changed across applies");
+}
+
+#[test]
+fn pool_drop_joins_and_leaves_results_intact() {
+    let mut rng = Rng64::new(9102);
+    let n = 32;
+    let ch = random_gplan(n, 6 * n, &mut rng);
+    let cp = ch.compile();
+    let signals: Vec<Vec<f32>> =
+        (0..16).map(|_| (0..n).map(|_| rng.randn() as f32).collect()).collect();
+    let mut reference = SignalBlock::from_signals(&signals);
+    apply_gchain_batch_f32(&ch.to_plan(), &mut reference);
+    let mut blk = SignalBlock::from_signals(&signals);
+    {
+        let pool = WorkerPool::new(3);
+        cp.apply_batch_pooled(&mut blk, &pool, &eager_cfg(4, 3));
+        // pool dropped here: must join all workers promptly (a hang fails
+        // the test via the harness timeout)
+    }
+    assert_eq!(blk.data, reference.data);
+}
+
+#[test]
+fn panicked_job_does_not_poison_later_pooled_applies() {
+    let pool = WorkerPool::new(2);
+    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        pool.run(2, &|slot| {
+            if slot != 0 {
+                panic!("injected worker failure");
+            }
+        });
+    }));
+    assert!(r.is_err(), "worker panic must surface on the caller");
+    // the same pool must still execute real transform work correctly
+    let mut rng = Rng64::new(9103);
+    let n = 28;
+    let ch = random_tplan(n, 8 * n, &mut rng);
+    let plan = ch.to_plan();
+    let cp = CompiledPlan::from_plan(&plan, ChainKind::T);
+    let signals: Vec<Vec<f32>> =
+        (0..9).map(|_| (0..n).map(|_| rng.randn() as f32).collect()).collect();
+    let mut reference = SignalBlock::from_signals(&signals);
+    fastes::transforms::apply_tchain_batch_f32(&plan, &mut reference, false);
+    let mut blk = SignalBlock::from_signals(&signals);
+    cp.apply_batch_pooled(&mut blk, &pool, &eager_cfg(3, 2));
+    assert_eq!(blk.data, reference.data, "post-panic apply diverged");
+}
+
+#[test]
+fn pooled_coordinator_serves_identical_answers_to_sequential() {
+    // same plan, same requests, pooled vs sequential coordinators —
+    // responses must agree bitwise (fusion is a pure reordering of
+    // commuting stages)
+    let n = 48;
+    let mut rng = Rng64::new(9104);
+    let ch = random_gplan(n, 1200, &mut rng);
+    let plan = ch.to_plan();
+    let p1 = plan.clone();
+    let seq = Coordinator::start(
+        move || {
+            Ok(Box::new(NativeGftBackend::new(p1, TransformDirection::Forward, 8, None))
+                as Box<dyn Backend>)
+        },
+        ServeConfig { max_batch: 8, ..Default::default() },
+    )
+    .unwrap();
+    let p2 = plan.clone();
+    let pooled = Coordinator::start(
+        move || {
+            Ok(Box::new(NativeGftBackend::with_pool(
+                p2,
+                TransformDirection::Forward,
+                8,
+                None,
+                ExecConfig { threads: 4, min_work: 1, layer_min_work: 1.0, tile_cols: 2 },
+            )) as Box<dyn Backend>)
+        },
+        ServeConfig { max_batch: 8, ..Default::default() },
+    )
+    .unwrap();
+    for _ in 0..60 {
+        let sig: Vec<f32> = (0..n).map(|_| rng.randn() as f32).collect();
+        let a = seq.submit(sig.clone()).unwrap().wait().unwrap();
+        let b = pooled.submit(sig).unwrap().wait().unwrap();
+        assert_eq!(a, b, "pooled backend diverged from sequential");
+    }
+    assert_eq!(seq.shutdown().errors, 0);
+    assert_eq!(pooled.shutdown().errors, 0);
+}
+
+#[test]
+fn pooled_apply_handles_ragged_batches() {
+    // batch sizes that do not divide the tile width exercise the
+    // work-stealing tail tiles
+    let pool = WorkerPool::new(3);
+    let mut rng = Rng64::new(9105);
+    let n = 40;
+    let ch = random_gplan(n, 8 * n, &mut rng);
+    let plan = ch.to_plan();
+    let cp = CompiledPlan::from_plan(&plan, ChainKind::G);
+    for batch in [1usize, 2, 5, 11, 17, 33] {
+        let signals: Vec<Vec<f32>> = (0..batch)
+            .map(|_| (0..n).map(|_| rng.randn() as f32).collect())
+            .collect();
+        let mut reference = SignalBlock::from_signals(&signals);
+        apply_gchain_batch_f32(&plan, &mut reference);
+        for tile in [1usize, 4, 7] {
+            let mut blk = SignalBlock::from_signals(&signals);
+            cp.apply_batch_pooled(&mut blk, &pool, &eager_cfg(4, tile));
+            assert_eq!(reference.data, blk.data, "batch={batch} tile={tile} diverged");
+        }
+    }
+}

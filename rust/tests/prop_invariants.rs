@@ -357,6 +357,67 @@ fn prop_scheduled_batch_apply_matches_sequential_batch() {
 }
 
 #[test]
+fn prop_pooled_apply_matches_sequential_batch() {
+    // the pooled fused executor (persistent workers, cache-blocked tiles,
+    // work stealing) must agree with the sequential f32 plan apply
+    // bitwise, for both chain families and both directions. Thresholds
+    // are forced to 1 and the tile width to 2 so the parallel tile path
+    // really runs at property sizes.
+    use fastes::transforms::{ChainKind, CompiledPlan, ExecConfig, SignalBlock, WorkerPool};
+    let pool = WorkerPool::new(2);
+    let cfg = ExecConfig { threads: 3, min_work: 1, layer_min_work: 1.0, tile_cols: 2 };
+    forall(
+        "pooled apply ≡ sequential apply (G and T, fwd and rev)",
+        PropConfig { cases: 15, max_size: 16, ..Default::default() },
+        |rng, size| {
+            let n = size.max(3);
+            let batch = 1 + rng.below(12);
+            let gch = random_gchain(rng, n, 4 * n);
+            let tch = random_tchain(rng, n, 4 * n);
+            let signals: Vec<Vec<f32>> = (0..batch)
+                .map(|_| (0..n).map(|_| rng.randn() as f32).collect())
+                .collect();
+            (gch, tch, signals)
+        },
+        |(gch, tch, signals)| {
+            let gplan = gch.to_plan();
+            let gcp = CompiledPlan::from_plan(&gplan, ChainKind::G);
+            let mut want = SignalBlock::from_signals(signals);
+            fastes::transforms::apply_gchain_batch_f32(&gplan, &mut want);
+            let mut got = SignalBlock::from_signals(signals);
+            gcp.apply_batch_pooled(&mut got, &pool, &cfg);
+            if got.data != want.data {
+                return Err("G forward pooled diverged".into());
+            }
+            let mut want = SignalBlock::from_signals(signals);
+            fastes::transforms::apply_gchain_batch_f32_t(&gplan, &mut want);
+            let mut got = SignalBlock::from_signals(signals);
+            gcp.apply_batch_pooled_rev(&mut got, &pool, &cfg);
+            if got.data != want.data {
+                return Err("G transpose pooled diverged".into());
+            }
+            let tplan = tch.to_plan();
+            let tcp = CompiledPlan::from_plan(&tplan, ChainKind::T);
+            let mut want = SignalBlock::from_signals(signals);
+            fastes::transforms::apply_tchain_batch_f32(&tplan, &mut want, false);
+            let mut got = SignalBlock::from_signals(signals);
+            tcp.apply_batch_pooled(&mut got, &pool, &cfg);
+            if got.data != want.data {
+                return Err("T forward pooled diverged".into());
+            }
+            let mut want = SignalBlock::from_signals(signals);
+            fastes::transforms::apply_tchain_batch_f32(&tplan, &mut want, true);
+            let mut got = SignalBlock::from_signals(signals);
+            tcp.apply_batch_pooled_rev(&mut got, &pool, &cfg);
+            if got.data != want.data {
+                return Err("T inverse pooled diverged".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_plan_roundtrip_preserves_apply() {
     forall(
         "plan serialization round-trip",
