@@ -1,0 +1,50 @@
+#!/usr/bin/env python3
+"""Compare a fresh BENCH_apply.json against the checked-in snapshot.
+
+Usage: check_bench_regression.py BENCH_apply.json ci/bench_snapshot.json
+
+Fails (exit 1) when the pooled ns/stage of any size regresses more than
+the snapshot's `max_regression` factor — but only once the snapshot is
+calibrated (`calibrated: true`); until then the comparison is printed as
+advisory so the gate cannot fail on un-measured placeholder numbers.
+"""
+
+import json
+import sys
+
+
+def main() -> int:
+    bench_path, snap_path = sys.argv[1], sys.argv[2]
+    bench = json.load(open(bench_path))
+    snap = json.load(open(snap_path))
+    limit = float(snap.get("max_regression", 1.25))
+    calibrated = bool(snap.get("calibrated", False))
+    baseline = snap.get("pooled_ns_per_stage", {})
+
+    failures = []
+    for row in bench["results"]:
+        n = row["n"]
+        now = float(row["pooled"]["ns_per_stage"])
+        base = baseline.get(str(n))
+        if base is None:
+            print(f"n={n}: pooled {now:.3f} ns/stage (no baseline — snapshot uncalibrated)")
+            continue
+        ratio = now / float(base)
+        status = "OK" if ratio <= limit else "REGRESSION"
+        print(
+            f"n={n}: pooled {now:.3f} ns/stage vs baseline {float(base):.3f} "
+            f"({ratio:.2f}x, limit {limit:.2f}x) {status}"
+        )
+        if ratio > limit:
+            failures.append(n)
+
+    if failures and calibrated:
+        print(f"pooled ns/stage regressed beyond {limit:.2f}x for sizes {failures}")
+        return 1
+    if failures:
+        print("regressions observed but snapshot is uncalibrated — advisory only")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,6 +1,7 @@
 //! Fig.-6 bench: butterfly apply vs dense mat-vec at the paper's
-//! real-graph sizes, f32, single vector, one core. Prints measured times,
-//! the FLOP-count ratio and the measured speedup.
+//! real-graph sizes, f32, single vector, one core — plus the parallel
+//! engines, all driven through the one `FastOperator` + `ExecPolicy`
+//! surface.
 //!
 //! Run with: `cargo bench --bench apply_speedup`
 
@@ -8,21 +9,19 @@ use fastes::bench_util::bench;
 use fastes::cli::figures::{budget, random_gplan, random_tplan};
 use fastes::graphs::RealWorldGraph;
 use fastes::linalg::Rng64;
-use fastes::transforms::{
-    apply_compiled_batch_f32, apply_compiled_batch_f32_pooled, apply_gchain_batch_f32,
-    apply_tchain_batch_f32, default_threads, global_pool, ChainKind, CompiledPlan, ExecConfig,
-    SignalBlock,
-};
+use fastes::plan::{Direction, ExecPolicy, FastOperator, Plan};
+use fastes::transforms::{default_threads, ExecConfig, SignalBlock};
 
 fn main() {
     println!("# apply_speedup — butterfly vs dense mat-vec (f32, 1 vector, 1 core)");
     let alpha = 2usize;
+    let seq = ExecPolicy::Seq;
     let mut rng = Rng64::new(99);
     for w in RealWorldGraph::all() {
         let (n, _) = w.dimensions();
         let g = budget(alpha, n);
-        let gplan = random_gplan(n, g, &mut rng).to_plan();
-        let tplan = random_tplan(n, g, &mut rng).to_plan();
+        let gplan = Plan::from(random_gplan(n, g, &mut rng)).build();
+        let tplan = Plan::from(random_tplan(n, g, &mut rng)).build();
         let dense: Vec<f32> = (0..n * n).map(|_| rng.randn() as f32).collect();
         let x: Vec<f32> = (0..n).map(|_| rng.randn() as f32).collect();
 
@@ -38,14 +37,14 @@ fn main() {
             }
             y[0]
         });
-        let mut blk = SignalBlock::from_signals(&[x.clone()]);
+        let mut blk = SignalBlock::from_signals(&[x.clone()]).unwrap();
         let tg = bench(&format!("{}/G-chain g={g}", w.name()), 7, 0.05, || {
-            apply_gchain_batch_f32(&gplan, &mut blk);
+            gplan.apply(&mut blk, Direction::Forward, &seq).unwrap();
             blk.data[0]
         });
-        let mut blk2 = SignalBlock::from_signals(&[x.clone()]);
+        let mut blk2 = SignalBlock::from_signals(&[x.clone()]).unwrap();
         let tt = bench(&format!("{}/T-chain m={g}", w.name()), 7, 0.05, || {
-            apply_tchain_batch_f32(&tplan, &mut blk2, false);
+            tplan.apply(&mut blk2, Direction::Forward, &seq).unwrap();
             blk2.data[0]
         });
         println!("{}", td.line());
@@ -64,26 +63,26 @@ fn main() {
     println!("\n# batched apply (n=128, g=1792) — serving hot path");
     let n = 128;
     let g = budget(2, n);
-    let plan = random_gplan(n, g, &mut rng).to_plan();
+    let plan = Plan::from(random_gplan(n, g, &mut rng)).build();
     for batch in [1usize, 4, 8, 32, 128] {
         let signals: Vec<Vec<f32>> =
             (0..batch).map(|_| (0..n).map(|_| rng.randn() as f32).collect()).collect();
-        let mut blk = SignalBlock::from_signals(&signals);
+        let mut blk = SignalBlock::from_signals(&signals).unwrap();
         let t = bench(&format!("batch={batch}"), 7, 0.05, || {
-            apply_gchain_batch_f32(&plan, &mut blk);
+            plan.apply(&mut blk, Direction::Forward, &seq).unwrap();
             blk.data[0]
         });
         println!("{}  ({:.1} ns/signal)", t.line(), t.min_s * 1e9 / batch as f64);
     }
 
-    // level-scheduled parallel apply vs the sequential path
+    // level-scheduled parallel apply vs the sequential engine
     let threads = default_threads();
+    let spawn = ExecPolicy::spawn();
     println!("\n# level-scheduled parallel apply ({threads} threads available)");
     for n in [256usize, 1024] {
         let g = budget(2, n);
-        let plan = random_gplan(n, g, &mut rng).to_plan();
-        let compiled = CompiledPlan::from_plan(&plan, ChainKind::G);
-        let st = compiled.stats();
+        let plan = Plan::from(random_gplan(n, g, &mut rng)).build();
+        let st = plan.stats();
         println!(
             "n={n} g={g}: {} layers, depth-reduction {:.1}x, max width {}",
             st.layers, st.mean_width, st.max_width
@@ -94,15 +93,15 @@ fn main() {
         for batch in [32usize, 128] {
             let signals: Vec<Vec<f32>> =
                 (0..batch).map(|_| (0..n).map(|_| rng.randn() as f32).collect()).collect();
-            let mut seq_blk = SignalBlock::from_signals(&signals);
+            let mut seq_blk = SignalBlock::from_signals(&signals).unwrap();
             let t_seq = bench(&format!("n={n} batch={batch} sequential"), 7, 0.05, || {
-                apply_gchain_batch_f32(&plan, &mut seq_blk);
+                plan.apply(&mut seq_blk, Direction::Forward, &seq).unwrap();
                 seq_blk.data[0]
             });
-            let mut par_blk = SignalBlock::from_signals(&signals);
+            let mut par_blk = SignalBlock::from_signals(&signals).unwrap();
             let t_par =
                 bench(&format!("n={n} batch={batch} scheduled/{threads}t"), 7, 0.05, || {
-                    apply_compiled_batch_f32(&compiled, &mut par_blk, threads);
+                    plan.apply(&mut par_blk, Direction::Forward, &spawn).unwrap();
                     par_blk.data[0]
                 });
             println!("{}", t_seq.line());
@@ -118,28 +117,26 @@ fn main() {
     // per-call thread spawn/join that dominates serve-sized requests, and
     // the fused cache-blocked streams cut the per-stage constant factor
     println!("\n# pooled apply vs spawn-per-apply ({threads} threads)");
-    let pool = global_pool();
-    let cfg = ExecConfig::pooled();
+    let pool = ExecPolicy::pool();
     for n in [256usize, 512] {
         let g = budget(2, n);
-        let plan = random_gplan(n, g, &mut rng).to_plan();
-        let compiled = CompiledPlan::from_plan(&plan, ChainKind::G);
+        let plan = Plan::from(random_gplan(n, g, &mut rng)).build();
         for batch in [8usize, 64] {
             let signals: Vec<Vec<f32>> =
                 (0..batch).map(|_| (0..n).map(|_| rng.randn() as f32).collect()).collect();
-            let mut seq_blk = SignalBlock::from_signals(&signals);
+            let mut seq_blk = SignalBlock::from_signals(&signals).unwrap();
             let t_seq = bench(&format!("n={n} batch={batch} sequential"), 7, 0.05, || {
-                apply_gchain_batch_f32(&plan, &mut seq_blk);
+                plan.apply(&mut seq_blk, Direction::Forward, &seq).unwrap();
                 seq_blk.data[0]
             });
-            let mut sp_blk = SignalBlock::from_signals(&signals);
+            let mut sp_blk = SignalBlock::from_signals(&signals).unwrap();
             let t_spawn = bench(&format!("n={n} batch={batch} spawn/{threads}t"), 7, 0.05, || {
-                apply_compiled_batch_f32(&compiled, &mut sp_blk, threads);
+                plan.apply(&mut sp_blk, Direction::Forward, &spawn).unwrap();
                 sp_blk.data[0]
             });
-            let mut pl_blk = SignalBlock::from_signals(&signals);
+            let mut pl_blk = SignalBlock::from_signals(&signals).unwrap();
             let t_pool = bench(&format!("n={n} batch={batch} pooled/{threads}t"), 7, 0.05, || {
-                apply_compiled_batch_f32_pooled(&compiled, &mut pl_blk, pool, &cfg);
+                plan.apply(&mut pl_blk, Direction::Forward, &pool).unwrap();
                 pl_blk.data[0]
             });
             println!("{}", t_seq.line());
@@ -154,10 +151,10 @@ fn main() {
     }
 
     // single-signal rotation-parallel mode: engages only when mean layer
-    // width × batch ≥ 1024 — random α·n·log n chains have narrower layers
-    // (mean ≈ 515 even at n=8192) and deliberately fall back to the inline
-    // path, so the mode is measured on a synthetic wide-layer chain
-    // (rounds of n/2 disjoint butterflies)
+    // width × batch crosses the layer gate — random α·n·log n chains have
+    // narrower layers and deliberately fall back to the inline path, so
+    // the mode is measured on a synthetic wide-layer chain (rounds of n/2
+    // disjoint butterflies)
     println!("\n# single-signal layer-parallel apply (synthetic wide layers, n=8192)");
     let n = 8192;
     let rounds = 64;
@@ -175,22 +172,23 @@ fn main() {
         }
     }
     let g = wide.len();
-    let plan = wide.to_plan();
-    let compiled = CompiledPlan::from_plan(&plan, ChainKind::G);
-    let st = compiled.stats();
+    let plan = Plan::from(wide).build();
+    let st = plan.stats();
     println!(
-        "n={n} g={g}: {} layers, mean width {:.1} (layer-parallel engages above 1024)",
-        st.layers, st.mean_width
+        "n={n} g={g}: {} layers, mean width {:.1} (layer-parallel engages above {})",
+        st.layers,
+        st.mean_width,
+        ExecConfig::spawn().layer_min_work
     );
     let x: Vec<f32> = (0..n).map(|_| rng.randn() as f32).collect();
-    let mut seq_blk = SignalBlock::from_signals(&[x.clone()]);
+    let mut seq_blk = SignalBlock::from_signals(&[x.clone()]).unwrap();
     let t_seq = bench("n=8192 batch=1 sequential", 5, 0.1, || {
-        apply_gchain_batch_f32(&plan, &mut seq_blk);
+        plan.apply(&mut seq_blk, Direction::Forward, &seq).unwrap();
         seq_blk.data[0]
     });
-    let mut par_blk = SignalBlock::from_signals(&[x]);
+    let mut par_blk = SignalBlock::from_signals(&[x]).unwrap();
     let t_par = bench(&format!("n=8192 batch=1 scheduled/{threads}t"), 5, 0.1, || {
-        apply_compiled_batch_f32(&compiled, &mut par_blk, threads);
+        plan.apply(&mut par_blk, Direction::Forward, &spawn).unwrap();
         par_blk.data[0]
     });
     println!("{}", t_seq.line());

@@ -8,7 +8,8 @@ use fastes::bench_util::bench;
 use fastes::factor::{GeneralFactorizer, GeneralOptions, SymFactorizer, SymOptions};
 use fastes::graphs;
 use fastes::linalg::{eigh, Mat, Rng64};
-use fastes::transforms::{global_pool, ExecConfig, SignalBlock};
+use fastes::plan::{Direction, ExecPolicy, FastOperator};
+use fastes::transforms::SignalBlock;
 
 fn main() {
     println!("# factor_steps — Algorithm 1 phase costs");
@@ -73,15 +74,14 @@ fn main() {
     let g = 2 * n * (n as f64).log2() as usize;
     let f =
         SymFactorizer::new(&l, g, SymOptions { max_sweeps: 1, ..Default::default() }).run();
-    let compiled = f.chain.compile();
-    let pool = global_pool();
-    let cfg = ExecConfig::pooled();
+    let plan = f.plan();
+    let pool = ExecPolicy::pool();
     let batch = 64;
     let signals: Vec<Vec<f32>> =
         (0..batch).map(|_| (0..n).map(|_| rng.randn() as f32).collect()).collect();
-    let mut blk = SignalBlock::from_signals(&signals);
+    let mut blk = SignalBlock::from_signals(&signals).unwrap();
     let t = bench(&format!("factored pooled apply n={n} batch={batch}"), 5, 0.1, || {
-        compiled.apply_batch_pooled(&mut blk, pool, &cfg);
+        plan.apply(&mut blk, Direction::Forward, &pool).unwrap();
         blk.data[0]
     });
     println!("{}  ({:.1} ns/signal)", t.line(), t.min_s * 1e9 / batch as f64);

@@ -1,19 +1,20 @@
 //! Serving-coordinator bench: end-to-end request throughput and latency
-//! for the native backend across batch limits, plus the PJRT backend when
-//! artifacts are present.
+//! for the native backend across batch limits and execution policies,
+//! plus the PJRT backend when artifacts are present.
 //!
 //! Run with: `cargo bench --bench serve_throughput`
 
 use std::path::Path;
+use std::sync::Arc;
 use std::time::Instant;
 
 use fastes::cli::figures::{budget, random_gplan};
 use fastes::linalg::Rng64;
+use fastes::plan::{ExecPolicy, Plan};
 use fastes::runtime::ArtifactStore;
 use fastes::serve::{
     Backend, Coordinator, NativeGftBackend, PjrtGftBackend, ServeConfig, TransformDirection,
 };
-use fastes::transforms::ExecConfig;
 
 fn drive(coord: &Coordinator, n: usize, requests: usize, seed: u64) -> f64 {
     let mut rng = Rng64::new(seed);
@@ -39,18 +40,20 @@ fn main() {
     let n = 128;
     let g = budget(2, n);
     let mut rng = Rng64::new(31);
-    let plan = random_gplan(n, g, &mut rng).to_plan();
+    let chain = random_gplan(n, g, &mut rng);
+    let plan = Plan::from(&chain).build();
 
     for max_batch in [1usize, 4, 8, 32] {
-        let p = plan.clone();
+        let p = Arc::clone(&plan);
         let coord = Coordinator::start(
             move || {
-                Ok(Box::new(NativeGftBackend::new(
+                Ok(Box::new(NativeGftBackend::with_policy(
                     p,
                     TransformDirection::Forward,
                     max_batch,
                     None,
-                )) as Box<dyn Backend>)
+                    ExecPolicy::Seq,
+                )?) as Box<dyn Backend>)
             },
             ServeConfig { max_batch, ..Default::default() },
         )
@@ -65,19 +68,19 @@ fn main() {
         );
     }
 
-    // pooled backend: same coordinator, but every batch executes on the
-    // process-wide persistent worker pool (fused, cache-blocked streams)
+    // pooled backend: same coordinator and plan, but every batch executes
+    // on the process-wide persistent worker pool (fused, cache-blocked)
     for max_batch in [8usize, 32] {
-        let p = plan.clone();
+        let p = Arc::clone(&plan);
         let coord = Coordinator::start(
             move || {
-                Ok(Box::new(NativeGftBackend::with_pool(
+                Ok(Box::new(NativeGftBackend::with_policy(
                     p,
                     TransformDirection::Forward,
                     max_batch,
                     None,
-                    ExecConfig::pooled(),
-                )) as Box<dyn Backend>)
+                    ExecPolicy::pool(),
+                )?) as Box<dyn Backend>)
             },
             ServeConfig { max_batch, ..Default::default() },
         )
@@ -93,12 +96,19 @@ fn main() {
     }
 
     if Path::new("artifacts/manifest.txt").exists() {
-        let p = plan.clone();
+        let arrays = chain.to_plan();
         let coord = Coordinator::start(
             move || {
                 let store = ArtifactStore::open(Path::new("artifacts"))?;
-                Ok(Box::new(PjrtGftBackend::new(store, TransformDirection::Forward, p, 8, None)?)
-                    as Box<dyn Backend>)
+                Ok(
+                    Box::new(PjrtGftBackend::new(
+                        store,
+                        TransformDirection::Forward,
+                        arrays,
+                        8,
+                        None,
+                    )?) as Box<dyn Backend>,
+                )
             },
             ServeConfig { max_batch: 8, ..Default::default() },
         )

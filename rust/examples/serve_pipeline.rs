@@ -18,6 +18,7 @@ use std::time::Instant;
 use fastes::factor::{SymFactorizer, SymOptions};
 use fastes::graphs;
 use fastes::linalg::Rng64;
+use fastes::plan::ExecPolicy;
 use fastes::runtime::ArtifactStore;
 use fastes::serve::{
     Backend, Coordinator, NativeGftBackend, PjrtGftBackend, ServeConfig, TransformDirection,
@@ -72,15 +73,21 @@ fn main() {
         f.chain.flops(),
         2 * N * N
     );
-    let plan = f.chain.to_plan();
+    let plan = f.plan();
+    let arrays = f.chain.to_plan();
 
-    // --- 3+4: serve on the native backend --------------------------------
+    // --- 3+4: serve on the native backend (pooled ExecPolicy) ------------
     let cfg = ServeConfig { max_batch: BATCH, ..Default::default() };
     let p = plan.clone();
     let native = Coordinator::start(
         move || {
-            Ok(Box::new(NativeGftBackend::new(p, TransformDirection::Forward, BATCH, None))
-                as Box<dyn Backend>)
+            Ok(Box::new(NativeGftBackend::with_policy(
+                p,
+                TransformDirection::Forward,
+                BATCH,
+                None,
+                ExecPolicy::pool(),
+            )?) as Box<dyn Backend>)
         },
         cfg.clone(),
     )
@@ -94,7 +101,7 @@ fn main() {
         println!("[pjrt   ] skipped — run `make artifacts` first");
         return;
     }
-    let p = plan.clone();
+    let p = arrays.clone();
     let pjrt = Coordinator::start(
         move || {
             let store = ArtifactStore::open(Path::new("artifacts"))?;

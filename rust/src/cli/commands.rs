@@ -2,6 +2,7 @@
 //! eigen / bench-apply.
 
 use std::path::PathBuf;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::bail;
@@ -11,10 +12,11 @@ use super::Args;
 use crate::factor::{GeneralFactorizer, GeneralOptions, SymFactorizer, SymOptions};
 use crate::graphs::{self, RealWorldGraph};
 use crate::linalg::{eigh, Mat, Rng64};
+use crate::plan::{Direction, ExecPolicy, FastOperator, Plan};
 use crate::serve::{
     Backend, Coordinator, NativeGftBackend, PjrtGftBackend, ServeConfig, TransformDirection,
 };
-use crate::transforms::{global_pool, ChainKind, CompiledPlan, ExecConfig, SignalBlock};
+use crate::transforms::{ExecConfig, GChain, SignalBlock};
 
 /// Apply the common executor flags (`--threads`, `--min-work`,
 /// `--layer-min-work`, `--tile`) on top of `base` (which already honours
@@ -31,6 +33,39 @@ fn exec_config_from_args_base(a: &Args, base: ExecConfig) -> crate::Result<ExecC
 /// Executor flags over the pooled defaults.
 fn exec_config_from_args(a: &Args) -> crate::Result<ExecConfig> {
     exec_config_from_args_base(a, ExecConfig::pooled())
+}
+
+/// Build the [`ExecPolicy`] selected by `--exec seq|spawn|pool`, giving
+/// each engine its own tunable defaults under the shared flag overrides.
+fn exec_policy_from_args(a: &Args, exec: &str) -> crate::Result<ExecPolicy> {
+    Ok(match exec {
+        "seq" => ExecPolicy::Seq,
+        "spawn" => ExecPolicy::Spawn(exec_config_from_args_base(a, ExecConfig::spawn())?),
+        "pool" => ExecPolicy::Pool(exec_config_from_args(a)?),
+        other => bail!("--exec must be seq|spawn|pool (got {other})"),
+    })
+}
+
+/// Honour `--save-plan PATH`: persist a compiled plan as a versioned
+/// `.fastplan` artifact that `fastes serve --plan PATH` can load without
+/// refactorizing. Takes the plan lazily — without the flag no plan is
+/// compiled at all.
+fn maybe_save_plan(a: &Args, plan: impl FnOnce() -> Arc<Plan>) -> crate::Result<()> {
+    let path = a.get_str("save-plan", "");
+    if path.is_empty() {
+        return Ok(());
+    }
+    let plan = plan();
+    plan.save(&path)?;
+    let bytes = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+    println!(
+        "wrote {path}: kind={:?} n={} stages={} superstages={} ({bytes} bytes)",
+        plan.kind(),
+        plan.n(),
+        plan.len(),
+        plan.num_superstages()
+    );
+    Ok(())
 }
 
 /// `fastes factor` — factor a random matrix and report accuracy/time.
@@ -61,6 +96,7 @@ pub fn factor(a: &Args) -> crate::Result<()> {
                 2 * n * n,
                 t0.elapsed()
             );
+            maybe_save_plan(a, || f.plan())?;
         }
         "gen" => {
             let opts = GeneralOptions {
@@ -78,6 +114,7 @@ pub fn factor(a: &Args) -> crate::Result<()> {
                 2 * n * n,
                 t0.elapsed()
             );
+            maybe_save_plan(a, || f.plan())?;
         }
         other => bail!("--kind must be sym|psd|gen (got {other})"),
     }
@@ -129,6 +166,7 @@ pub fn gft(a: &Args) -> crate::Result<()> {
             2 * n * n,
             t0.elapsed()
         );
+        maybe_save_plan(a, || f.plan())?;
     } else {
         let l = graph.laplacian();
         let f = SymFactorizer::new(
@@ -145,88 +183,95 @@ pub fn gft(a: &Args) -> crate::Result<()> {
             2 * n * n,
             t0.elapsed()
         );
+        maybe_save_plan(a, || f.plan())?;
     }
     Ok(())
 }
 
-/// `fastes serve` — factor a community-graph GFT, serve batched requests
-/// through the coordinator, report latency/throughput. `--exec` picks the
-/// native execution strategy: `pool` (default — fused plan on the shared
-/// persistent worker pool), `spawn` (legacy scoped threads per apply) or
-/// `seq` (sequential per-stage apply).
+/// `fastes serve` — serve batched GFT requests through the coordinator
+/// and report latency/throughput. The operator comes either from an
+/// in-process factorization (default: a community-graph Laplacian) or
+/// from a saved artifact via `--plan file.fastplan` (no refactorization).
+/// `--exec` picks the native execution engine per [`ExecPolicy`]: `pool`
+/// (default — fused plan on the shared persistent worker pool), `spawn`
+/// (legacy scoped threads per apply) or `seq` (sequential apply).
 pub fn serve(a: &Args) -> crate::Result<()> {
-    let n: usize = a.get("n", 128)?;
     let alpha: usize = a.get("alpha", 2)?;
     let requests: usize = a.get("requests", 2000)?;
     let batch: usize = a.get("batch", 8)?;
     let backend_kind = a.get_str("backend", "native");
     let artifacts = PathBuf::from(a.get_str("artifacts", "artifacts"));
+    let plan_path = a.get_str("plan", "");
     let seed: u64 = a.get("seed", 1)?;
     // legacy flag: `--scheduled` was the spawn-per-apply fast path
     let exec = a.get_str("exec", if a.has("scheduled") { "spawn" } else { "pool" });
-    let cfg = exec_config_from_args(a)?;
-    if !matches!(exec.as_str(), "seq" | "spawn" | "pool") {
-        bail!("--exec must be seq|spawn|pool (got {exec})");
-    }
+    let policy = exec_policy_from_args(a, &exec)?;
     if backend_kind != "native" && (a.has("exec") || a.has("scheduled")) {
         bail!("--exec/--scheduled are only supported with --backend native (got {backend_kind})");
     }
+    if !plan_path.is_empty() && (a.has("n") || a.has("alpha")) {
+        bail!(
+            "--n/--alpha configure the in-process factorization and conflict with --plan \
+             (the artifact fixes the operator and its dimension)"
+        );
+    }
 
     let mut rng = Rng64::new(seed);
-    let graph = graphs::community(n, &mut rng);
-    let l = graph.laplacian();
-    let g = budget(alpha, n);
-    println!("factoring community graph n={n} |E|={} with g={g}…", graph.num_edges());
-    let f = SymFactorizer::new(&l, g, SymOptions { max_sweeps: 1, ..Default::default() }).run();
-    println!("factored: rel_err={:.4}", f.relative_error(&l));
-    let plan = f.chain.to_plan();
+    let plan: Arc<Plan> = if plan_path.is_empty() {
+        let n: usize = a.get("n", 128)?;
+        let graph = graphs::community(n, &mut rng);
+        let l = graph.laplacian();
+        let g = budget(alpha, n);
+        println!("factoring community graph n={n} |E|={} with g={g}…", graph.num_edges());
+        let f =
+            SymFactorizer::new(&l, g, SymOptions { max_sweeps: 1, ..Default::default() }).run();
+        println!("factored: rel_err={:.4}", f.relative_error(&l));
+        f.plan()
+    } else {
+        let plan = Plan::load(&plan_path)?;
+        println!(
+            "loaded {plan_path}: kind={:?} n={} stages={} layers={} superstages={}",
+            plan.kind(),
+            plan.n(),
+            plan.len(),
+            plan.stats().layers,
+            plan.num_superstages()
+        );
+        plan
+    };
+    let chain: GChain = plan
+        .as_gchain()
+        .ok_or_else(|| anyhow::anyhow!("serve needs a G-chain plan (got a T-chain artifact)"))?
+        .clone();
+    let n = plan.n();
 
     let config = ServeConfig { max_batch: batch, ..Default::default() };
     let coordinator = match backend_kind.as_str() {
         "native" => {
-            let p = plan.clone();
-            let exec2 = exec.clone();
-            let cfg2 = cfg.clone();
+            let p = Arc::clone(&plan);
+            let pol = policy.clone();
             Coordinator::start(
                 move || {
-                    let b: Box<dyn Backend> = match exec2.as_str() {
-                        "seq" => Box::new(NativeGftBackend::new(
-                            p,
-                            TransformDirection::Forward,
-                            batch,
-                            None,
-                        )),
-                        "spawn" => Box::new(NativeGftBackend::with_schedule(
-                            p,
-                            TransformDirection::Forward,
-                            batch,
-                            None,
-                            true,
-                            cfg2.threads,
-                        )),
-                        "pool" => Box::new(NativeGftBackend::with_pool(
-                            p,
-                            TransformDirection::Forward,
-                            batch,
-                            None,
-                            cfg2,
-                        )),
-                        other => unreachable!("validated --exec {other}"),
-                    };
-                    Ok(b)
+                    Ok(Box::new(NativeGftBackend::with_policy(
+                        p,
+                        TransformDirection::Forward,
+                        batch,
+                        None,
+                        pol,
+                    )?) as Box<dyn Backend>)
                 },
                 config,
             )?
         }
         "pjrt" => {
-            let p = plan.clone();
+            let arrays = chain.to_plan();
             Coordinator::start(
                 move || {
                     let store = crate::runtime::ArtifactStore::open(&artifacts)?;
                     Ok(Box::new(PjrtGftBackend::new(
                         store,
                         TransformDirection::Forward,
-                        p,
+                        arrays,
                         batch,
                         None,
                     )?) as Box<dyn Backend>)
@@ -240,7 +285,11 @@ pub fn serve(a: &Args) -> crate::Result<()> {
     println!(
         "serving {requests} requests (backend={backend_kind}{}, batch={batch})…",
         if backend_kind == "native" {
-            format!(" exec={exec}/{}t", cfg.threads)
+            format!(
+                " exec={}/{}t",
+                policy.engine(),
+                policy.config().map_or(1, |c| c.threads)
+            )
         } else {
             String::new()
         }
@@ -254,10 +303,10 @@ pub fn serve(a: &Args) -> crate::Result<()> {
         if pending.len() >= 64 || k + 1 == requests {
             for (sig, t) in pending.drain(..) {
                 let out = t.wait()?;
-                // spot-check against the native f64 path
+                // spot-check against the exact f64 path
                 if checked < 16 {
                     let mut want: Vec<f64> = sig.iter().map(|&v| v as f64).collect();
-                    f.chain.apply_vec_t(&mut want);
+                    chain.apply_vec_t(&mut want);
                     for (w, o) in want.iter().zip(out.iter()) {
                         assert!((*w as f32 - o).abs() < 1e-2, "serving mismatch");
                     }
@@ -294,73 +343,56 @@ pub fn eigen(a: &Args) -> crate::Result<()> {
 
 /// `fastes schedule` — compile a butterfly chain into conflict-free
 /// layers + fused superstages, report the schedule shape (layer count /
-/// depth / width / superstages) and time sequential vs spawn-per-apply vs
-/// pooled apply.
+/// depth / width / superstages) and time the sequential vs spawn vs
+/// pooled [`ExecPolicy`] engines through [`FastOperator::apply`].
 pub fn schedule(a: &Args) -> crate::Result<()> {
     let n: usize = a.get("n", 512)?;
     let alpha: usize = a.get("alpha", 2)?;
     let batch: usize = a.get("batch", 32)?;
     let seed: u64 = a.get("seed", 1)?;
-    let cfg = exec_config_from_args(a)?;
-    let spawn_exec = exec_config_from_args_base(a, ExecConfig::spawn())?;
-    let threads = cfg.threads;
+    let seq = ExecPolicy::Seq;
+    let spawn = exec_policy_from_args(a, "spawn")?;
+    let pool = exec_policy_from_args(a, "pool")?;
+    let threads = pool.config().map_or(1, |c| c.threads);
     let g = budget(alpha, n);
     let mut rng = Rng64::new(seed);
 
-    let gchain = random_gplan(n, g, &mut rng);
-    let gcp = gchain.compile();
-    let tchain = random_tplan(n, g, &mut rng);
-    let tcp = tchain.compile();
-    for (label, cp) in [("G-chain", &gcp), ("T-chain", &tcp)] {
-        let stats = cp.stats();
+    let gplan = Plan::from(random_gplan(n, g, &mut rng)).build();
+    let tplan = Plan::from(random_tplan(n, g, &mut rng)).build();
+    for (label, plan) in [("G-chain", &gplan), ("T-chain", &tplan)] {
+        let stats = plan.stats();
         println!(
             "{label}: n={n} stages={} layers={} depth-reduction={:.1}x max-width={} superstages={}",
             stats.stages,
             stats.layers,
             stats.mean_width,
             stats.max_width,
-            cp.num_superstages()
+            plan.num_superstages()
         );
     }
 
-    // timing: sequential plan apply vs the compiled executors
-    let plan = gchain.to_plan();
+    // timing: the three engines over the same plan, same direction
     let signals: Vec<Vec<f32>> = (0..batch)
         .map(|_| (0..n).map(|_| rng.randn() as f32).collect())
         .collect();
-    let mut seq_block = SignalBlock::from_signals(&signals);
-    let t_seq = crate::bench_util::bench("sequential apply", 5, 0.05, || {
-        crate::transforms::apply_gchain_batch_f32(&plan, &mut seq_block);
-        seq_block.data[0]
-    });
-    let compiled = CompiledPlan::from_plan(&plan, ChainKind::G);
-    let mut one_block = SignalBlock::from_signals(&signals);
-    let t_one = crate::bench_util::bench("scheduled apply (1 thread)", 5, 0.05, || {
-        compiled.apply_batch(&mut one_block, 1);
-        one_block.data[0]
-    });
-    let mut par_block = SignalBlock::from_signals(&signals);
-    let t_par =
-        crate::bench_util::bench(&format!("spawn apply ({threads} threads)"), 5, 0.05, || {
-            compiled.apply_batch_spawn(&mut par_block, false, &spawn_exec);
-            par_block.data[0]
+    let mut results = Vec::new();
+    for (label, policy) in [
+        ("sequential apply".to_string(), &seq),
+        (format!("spawn apply ({threads} threads)"), &spawn),
+        (format!("pooled apply ({threads} threads)"), &pool),
+    ] {
+        let mut block = SignalBlock::from_signals(&signals)?;
+        let t = crate::bench_util::bench(&label, 5, 0.05, || {
+            gplan.apply(&mut block, Direction::Forward, policy).expect("dims match");
+            block.data[0]
         });
-    let pool = global_pool();
-    let mut pool_block = SignalBlock::from_signals(&signals);
-    let t_pool =
-        crate::bench_util::bench(&format!("pooled apply ({threads} threads)"), 5, 0.05, || {
-            compiled.apply_batch_pooled(&mut pool_block, pool, &cfg);
-            pool_block.data[0]
-        });
-    println!("{}", t_seq.line());
-    println!("{}", t_one.line());
-    println!("{}", t_par.line());
-    println!("{}", t_pool.line());
+        println!("{}", t.line());
+        results.push(t);
+    }
     println!(
-        "batch={batch}: scheduled/1t {:.2}x, spawn/{threads}t {:.2}x, pooled/{threads}t {:.2}x vs sequential",
-        t_seq.min_s / t_one.min_s,
-        t_seq.min_s / t_par.min_s,
-        t_seq.min_s / t_pool.min_s
+        "batch={batch}: spawn/{threads}t {:.2}x, pooled/{threads}t {:.2}x vs sequential",
+        results[0].min_s / results[1].min_s,
+        results[0].min_s / results[2].min_s
     );
     Ok(())
 }
@@ -375,12 +407,14 @@ pub fn bench(a: &Args) -> crate::Result<()> {
     let batch: usize = a.get("batch", 64)?;
     let alpha: usize = a.get("alpha", 2)?;
     let seed: u64 = a.get("seed", 1)?;
-    let cfg = exec_config_from_args(a)?;
-    // the spawn baseline gets the same flag overrides over its own
-    // (higher) default gates, so `--min-work` really reaches both modes
-    let spawn_exec = exec_config_from_args_base(a, ExecConfig::spawn())?;
+    let seq = ExecPolicy::Seq;
+    // each engine gets its own tunable defaults under the shared flag
+    // overrides, so `--min-work` really reaches both parallel modes
+    let spawn = exec_policy_from_args(a, "spawn")?;
+    let pool = exec_policy_from_args(a, "pool")?;
+    let cfg = pool.config().expect("pool policy carries a config").clone();
+    let spawn_cfg = spawn.config().expect("spawn policy carries a config").clone();
     let threads = cfg.threads;
-    let pool = global_pool();
     let mut entries = Vec::new();
 
     for &n in &sizes {
@@ -390,9 +424,8 @@ pub fn bench(a: &Args) -> crate::Result<()> {
         let g = budget(alpha, n);
         // deterministic per-size seed so sizes can be re-run independently
         let mut rng = Rng64::new(seed ^ ((n as u64) << 20));
-        let plan = random_gplan(n, g, &mut rng).to_plan();
-        let compiled = CompiledPlan::from_plan(&plan, ChainKind::G);
-        let st = compiled.stats();
+        let plan = Plan::from(random_gplan(n, g, &mut rng)).build();
+        let st = plan.stats();
         let signals: Vec<Vec<f32>> = (0..batch)
             .map(|_| (0..n).map(|_| rng.randn() as f32).collect())
             .collect();
@@ -400,26 +433,21 @@ pub fn bench(a: &Args) -> crate::Result<()> {
         // two batch-length f32 rows in and out → 16 B per stage-column
         let bytes = 16.0 * g as f64 * batch as f64;
 
-        let mut seq_blk = SignalBlock::from_signals(&signals);
-        let t_seq = crate::bench_util::bench(&format!("n={n} sequential"), 5, 0.05, || {
-            crate::transforms::apply_gchain_batch_f32(&plan, &mut seq_blk);
-            seq_blk.data[0]
-        });
-        let mut sp_blk = SignalBlock::from_signals(&signals);
-        let t_spawn =
-            crate::bench_util::bench(&format!("n={n} spawn/{threads}t"), 5, 0.05, || {
-                compiled.apply_batch_spawn(&mut sp_blk, false, &spawn_exec);
-                sp_blk.data[0]
+        let mut timed = Vec::new();
+        for (label, policy) in [
+            (format!("n={n} sequential"), &seq),
+            (format!("n={n} spawn/{threads}t"), &spawn),
+            (format!("n={n} pooled/{threads}t"), &pool),
+        ] {
+            let mut blk = SignalBlock::from_signals(&signals)?;
+            let t = crate::bench_util::bench(&label, 5, 0.05, || {
+                plan.apply(&mut blk, Direction::Forward, policy).expect("dims match");
+                blk.data[0]
             });
-        let mut pl_blk = SignalBlock::from_signals(&signals);
-        let t_pool =
-            crate::bench_util::bench(&format!("n={n} pooled/{threads}t"), 5, 0.05, || {
-                compiled.apply_batch_pooled(&mut pl_blk, pool, &cfg);
-                pl_blk.data[0]
-            });
-        println!("{}", t_seq.line());
-        println!("{}", t_spawn.line());
-        println!("{}", t_pool.line());
+            println!("{}", t.line());
+            timed.push(t);
+        }
+        let (t_seq, t_spawn, t_pool) = (&timed[0], &timed[1], &timed[2]);
         println!(
             "n={n} g={g} batch={batch}: pooled {:.2}x vs sequential, {:.2}x vs spawn",
             t_seq.min_s / t_pool.min_s,
@@ -439,10 +467,10 @@ pub fn bench(a: &Args) -> crate::Result<()> {
              \"pooled_speedup_vs_sequential\": {:.4}, \"pooled_speedup_vs_spawn\": {:.4}}}",
             st.layers,
             st.max_width,
-            compiled.num_superstages(),
-            mode(&t_seq),
-            mode(&t_spawn),
-            mode(&t_pool),
+            plan.num_superstages(),
+            mode(t_seq),
+            mode(t_spawn),
+            mode(t_pool),
             t_seq.min_s / t_pool.min_s,
             t_spawn.min_s / t_pool.min_s
         ));
@@ -450,13 +478,18 @@ pub fn bench(a: &Args) -> crate::Result<()> {
 
     if a.has("json") {
         let out_path = a.get_str("out", "BENCH_apply.json");
+        // `sequential_engine` documents the baseline: since the
+        // FastOperator unification the "sequential" column times the
+        // fused single-pass Seq engine, not the old per-stage apply —
+        // cross-version comparisons of *_vs_sequential must check this
         let json = format!(
-            "{{\n  \"bench\": \"apply\",\n  \"seed\": {seed},\n  \"alpha\": {alpha},\n  \
+            "{{\n  \"bench\": \"apply\",\n  \"sequential_engine\": \"seq-fused\",\n  \
+             \"seed\": {seed},\n  \"alpha\": {alpha},\n  \
              \"batch\": {batch},\n  \"threads\": {threads},\n  \"tile_cols\": {},\n  \
              \"min_work\": {},\n  \"spawn_min_work\": {},\n  \"results\": [\n{}\n  ]\n}}\n",
             cfg.tile_cols,
             cfg.min_work,
-            spawn_exec.min_work,
+            spawn_cfg.min_work,
             entries.join(",\n")
         );
         std::fs::write(&out_path, json)
@@ -472,7 +505,7 @@ pub fn bench_apply(a: &Args) -> crate::Result<()> {
     let alpha: usize = a.get("alpha", 2)?;
     let g = budget(alpha, n);
     let mut rng = Rng64::new(3);
-    let plan = random_gplan(n, g, &mut rng).to_plan();
+    let plan = Plan::from(random_gplan(n, g, &mut rng)).build();
     let x: Vec<f32> = (0..n).map(|_| rng.randn() as f32).collect();
     let dense: Vec<f32> = (0..n * n).map(|_| rng.randn() as f32).collect();
     let mut y = vec![0f32; n];
@@ -487,9 +520,9 @@ pub fn bench_apply(a: &Args) -> crate::Result<()> {
         }
         y[0]
     });
-    let mut block = SignalBlock::from_signals(&[x.clone()]);
+    let mut block = SignalBlock::from_signals(&[x.clone()])?;
     let tb = crate::bench_util::bench("butterfly apply", 7, 0.05, || {
-        crate::transforms::apply_gchain_batch_f32(&plan, &mut block);
+        plan.apply(&mut block, Direction::Forward, &ExecPolicy::Seq).expect("dims match");
         block.data[0]
     });
     println!("{}", td.line());

@@ -420,12 +420,14 @@ pub fn fig6(o: &FigOptions) -> Vec<Row> {
             }
             y[0]
         });
-        let mut block = crate::transforms::SignalBlock::from_signals(&[x.clone()]);
+        let mut block =
+            crate::transforms::SignalBlock::from_signals(&[x.clone()]).expect("uniform batch");
         let t_g = crate::bench_util::bench(&format!("gchain n={n} g={g}"), 5, 0.02, || {
             crate::transforms::apply_gchain_batch_f32(&gplan, &mut block);
             block.data[0]
         });
-        let mut block2 = crate::transforms::SignalBlock::from_signals(&[x.clone()]);
+        let mut block2 =
+            crate::transforms::SignalBlock::from_signals(&[x.clone()]).expect("uniform batch");
         let t_t = crate::bench_util::bench(&format!("tchain n={n} m={g}"), 5, 0.02, || {
             crate::transforms::apply_tchain_batch_f32(&tplan, &mut block2, false);
             block2.data[0]

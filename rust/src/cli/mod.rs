@@ -118,16 +118,19 @@ COMMANDS
   factor               factor a random matrix
                        [--kind sym|psd|gen] [--n N] [--budget G] [--seed S]
                        [--sweeps K] [--full-update]
+                       [--save-plan FILE.fastplan]
   gft                  fast GFT of a graph Laplacian
                        [--graph community|er|sensor|minnesota|protein|email|facebook]
                        [--n N] [--alpha A] [--directed] [--seed S]
+                       [--save-plan FILE.fastplan]
   serve                serve batched GFT requests
                        [--backend native|pjrt] [--requests N] [--batch B]
                        [--alpha A] [--artifacts DIR]
+                       [--plan FILE.fastplan]  (serve a saved plan
+                       artifact instead of refactorizing)
                        [--exec pool|spawn|seq] [--threads T]
                        [--min-work W] [--layer-min-work W] [--tile C]
-                       (tuning flags reach the pooled executor; the spawn
-                       backend keeps its env-tunable legacy gates;
+                       (tuning flags reach the selected ExecPolicy engine;
                        --scheduled is the legacy alias for --exec spawn)
   schedule             level-schedule a chain, report layers/depth/
                        superstages and time sequential vs spawn vs pooled

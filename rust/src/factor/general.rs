@@ -75,6 +75,14 @@ impl GeneralFactorization {
         *self.objective_trace.last().unwrap_or(&self.init_objective)
     }
 
+    /// Compile the factored eigenspace into a shareable execution
+    /// [`Plan`](crate::plan::Plan) (default schedule/fusion options);
+    /// the plan's [`Direction::Adjoint`](crate::plan::Direction) is the
+    /// chain inverse `T̄⁻¹`.
+    pub fn plan(&self) -> std::sync::Arc<crate::plan::Plan> {
+        crate::plan::Plan::from(&self.chain).build()
+    }
+
     /// Relative Frobenius error `‖C − C̄‖_F / ‖C‖_F`.
     pub fn relative_error(&self, c: &Mat) -> f64 {
         (self.objective() / c.fro_norm_sq().max(1e-300)).sqrt()

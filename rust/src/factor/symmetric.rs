@@ -75,6 +75,15 @@ impl SymFactorization {
     pub fn relative_error(&self, s: &Mat) -> f64 {
         (self.objective() / s.fro_norm_sq().max(1e-300)).sqrt()
     }
+
+    /// Compile the factored eigenspace into a shareable execution
+    /// [`Plan`](crate::plan::Plan) (default schedule/fusion options) —
+    /// the object the serve/bench layers consume via
+    /// [`FastOperator`](crate::plan::FastOperator), and the payload of a
+    /// `.fastplan` artifact.
+    pub fn plan(&self) -> std::sync::Arc<crate::plan::Plan> {
+        crate::plan::Plan::from(&self.chain).build()
+    }
 }
 
 /// Algorithm 1 driver for symmetric matrices.

@@ -26,6 +26,18 @@
 //! rust butterfly fast-path from [`transforms`] or an AOT-compiled
 //! JAX/Pallas artifact through the PJRT runtime in [`runtime`].
 //!
+//! ## One execution surface: `plan::FastOperator`
+//!
+//! Every factored operator — a raw chain, a compiled plan, the native
+//! serve backend — implements [`plan::FastOperator`]: direction-
+//! polymorphic apply ([`plan::Direction::Forward`] /
+//! [`plan::Direction::Adjoint`]) with the engine chosen **per call** by a
+//! [`plan::ExecPolicy`] (`Seq` / `Spawn` / `Pool`). Plans are built with
+//! `Plan::from(&chain).schedule(opts).fuse(opts).build()` and persist as
+//! versioned `.fastplan` artifacts ([`plan::Plan::save`] /
+//! [`plan::Plan::load`]), so `fastes factor --save-plan` output feeds
+//! `fastes serve --plan` without refactorizing.
+//!
 //! ## Level-scheduled, fused, pooled execution
 //!
 //! The `O(g)` apply is *sequential* as written (`G_1`, then `G_2`, …), but
@@ -76,6 +88,7 @@ pub mod cli;
 pub mod factor;
 pub mod graphs;
 pub mod linalg;
+pub mod plan;
 pub mod prop;
 pub mod runtime;
 pub mod serve;

@@ -1,0 +1,416 @@
+//! The versioned `.fastplan` binary artifact — the export boundary that
+//! lets `fastes factor --save-plan` hand a factored operator to
+//! `fastes serve --plan` (and, per the roadmap, to the PJRT superstage
+//! offload) without refactorizing.
+//!
+//! # Format (version 1, all fields little-endian)
+//!
+//! ```text
+//! offset  size      field
+//! 0       8         magic  b"FASTPLAN"
+//! 8       4         format version (u32) = 1
+//! 12      1         chain kind: 0 = G, 1 = T
+//! 13      1         level-scheduled flag: 1 = greedy levels, 0 = original order
+//! 14      2         padding (zero)
+//! 16      8         n (u64) — problem dimension
+//! 24      8         g (u64) — number of stages
+//! 32      8         superstage fusion budget (u64)
+//! 40      8         s (u64) — number of forward superstages
+//! 48      4·g       idx_i (u32 each)
+//! …       4·g       idx_j (u32 each)
+//! …       1·g       opcode (u8): 0 rotation, 1 reflection, 2 scaling,
+//!                   3 upper shear, 4 lower shear
+//! …       4·g       p0 (f32) — the f32 coefficient stream
+//! …       4·g       p1 (f32)
+//! …       8·g       p0 (f64) — the exact coefficient stream
+//! …       8·g       p1 (f64)
+//! …       8·(s+1)   superstage table (u64 CSR offsets, forward stream)
+//! end−8   8         FNV-1a-64 checksum of every preceding byte
+//! ```
+//!
+//! Stages are stored in **application order** (chain order, `G_1` first),
+//! not layer order: the loader rebuilds the exact chain and recompiles,
+//! which is deterministic, so a reloaded plan applies **bitwise
+//! identically** to the plan that was saved. The superstage table is
+//! redundant with the recompile and is validated against it on load —
+//! a mismatch means the artifact was produced by an incompatible
+//! compiler and must be rejected rather than silently re-planned.
+
+use anyhow::bail;
+
+use super::ChainRepr;
+use crate::transforms::{GChain, GKind, GTransform, TChain, TTransform};
+
+/// Artifact magic bytes.
+pub const MAGIC: [u8; 8] = *b"FASTPLAN";
+
+/// The artifact format version this build reads and writes.
+pub const FORMAT_VERSION: u32 = 1;
+
+const HEADER_LEN: usize = 48;
+/// Per-stage payload bytes: 4 + 4 + 1 + 4 + 4 + 8 + 8.
+const STAGE_BYTES: usize = 33;
+
+/// Largest dimension a loaded artifact may declare. `n` is otherwise
+/// only an upper bound for stage coordinates, so a tiny file claiming
+/// `n = 2^60` would pass every structural check and then abort the
+/// process inside the compiler's `O(n)` allocations — reject it here as
+/// a malformed artifact instead (2^26 is ~1000× the largest graphs the
+/// roadmap contemplates).
+const MAX_PLAN_DIM: usize = 1 << 26;
+
+const OP_ROTATION: u8 = 0;
+const OP_REFLECTION: u8 = 1;
+const OP_SCALING: u8 = 2;
+const OP_UPPER_SHEAR: u8 = 3;
+const OP_LOWER_SHEAR: u8 = 4;
+
+/// A decoded artifact: the exact chain plus the build options and the
+/// recorded superstage table (to validate against the recompile).
+pub(crate) struct DecodedPlan {
+    pub repr: ChainRepr,
+    pub level: bool,
+    pub superstage_stages: usize,
+    pub superstage_table: Vec<usize>,
+}
+
+/// One stage in application order, as stored in the artifact.
+struct RawStage {
+    i: u32,
+    j: u32,
+    op: u8,
+    p0: f64,
+    p1: f64,
+}
+
+fn stages_of(repr: &ChainRepr) -> (u8, usize, Vec<RawStage>) {
+    match repr {
+        ChainRepr::G(ch) => {
+            let stages = ch
+                .transforms
+                .iter()
+                .map(|g| RawStage {
+                    i: g.i as u32,
+                    j: g.j as u32,
+                    op: if g.kind == GKind::Rotation { OP_ROTATION } else { OP_REFLECTION },
+                    p0: g.c,
+                    p1: g.s,
+                })
+                .collect();
+            (0, ch.n, stages)
+        }
+        ChainRepr::T(ch) => {
+            let stages = ch
+                .transforms
+                .iter()
+                .map(|t| match *t {
+                    TTransform::Scaling { i, a } => {
+                        RawStage { i: i as u32, j: i as u32, op: OP_SCALING, p0: a, p1: 0.0 }
+                    }
+                    TTransform::UpperShear { i, j, a } => {
+                        RawStage { i: i as u32, j: j as u32, op: OP_UPPER_SHEAR, p0: a, p1: 0.0 }
+                    }
+                    TTransform::LowerShear { i, j, a } => {
+                        RawStage { i: i as u32, j: j as u32, op: OP_LOWER_SHEAR, p0: a, p1: 0.0 }
+                    }
+                })
+                .collect();
+            (1, ch.n, stages)
+        }
+    }
+}
+
+/// FNV-1a 64-bit hash — cheap, dependency-free artifact integrity check.
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Serialize a plan (see the module docs for the layout).
+pub(crate) fn encode(
+    repr: &ChainRepr,
+    level: bool,
+    superstage_stages: usize,
+    superstage_table: &[usize],
+) -> Vec<u8> {
+    let (kind, n, stages) = stages_of(repr);
+    let g = stages.len();
+    let supers = superstage_table.len().saturating_sub(1);
+    let mut out =
+        Vec::with_capacity(HEADER_LEN + g * STAGE_BYTES + (supers + 1) * 8 + 8);
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+    out.push(kind);
+    out.push(level as u8);
+    out.extend_from_slice(&[0u8; 2]);
+    out.extend_from_slice(&(n as u64).to_le_bytes());
+    out.extend_from_slice(&(g as u64).to_le_bytes());
+    out.extend_from_slice(&(superstage_stages as u64).to_le_bytes());
+    out.extend_from_slice(&(supers as u64).to_le_bytes());
+    for st in &stages {
+        out.extend_from_slice(&st.i.to_le_bytes());
+    }
+    for st in &stages {
+        out.extend_from_slice(&st.j.to_le_bytes());
+    }
+    for st in &stages {
+        out.push(st.op);
+    }
+    for st in &stages {
+        out.extend_from_slice(&(st.p0 as f32).to_le_bytes());
+    }
+    for st in &stages {
+        out.extend_from_slice(&(st.p1 as f32).to_le_bytes());
+    }
+    for st in &stages {
+        out.extend_from_slice(&st.p0.to_le_bytes());
+    }
+    for st in &stages {
+        out.extend_from_slice(&st.p1.to_le_bytes());
+    }
+    for &p in superstage_table {
+        out.extend_from_slice(&(p as u64).to_le_bytes());
+    }
+    let checksum = fnv1a64(&out);
+    out.extend_from_slice(&checksum.to_le_bytes());
+    out
+}
+
+fn read_u32(bytes: &[u8], at: usize) -> u32 {
+    u32::from_le_bytes(bytes[at..at + 4].try_into().expect("bounds checked"))
+}
+
+fn read_u64(bytes: &[u8], at: usize) -> u64 {
+    u64::from_le_bytes(bytes[at..at + 8].try_into().expect("bounds checked"))
+}
+
+fn read_f32(bytes: &[u8], at: usize) -> f32 {
+    f32::from_le_bytes(bytes[at..at + 4].try_into().expect("bounds checked"))
+}
+
+fn read_f64(bytes: &[u8], at: usize) -> f64 {
+    f64::from_le_bytes(bytes[at..at + 8].try_into().expect("bounds checked"))
+}
+
+fn as_len(v: u64, what: &str) -> crate::Result<usize> {
+    usize::try_from(v).map_err(|_| anyhow::anyhow!("fastplan {what} {v} overflows this platform"))
+}
+
+/// Parse and validate an artifact (see the module docs for the layout and
+/// the rejection rules).
+pub(crate) fn decode(bytes: &[u8]) -> crate::Result<DecodedPlan> {
+    if bytes.len() < 12 {
+        bail!("truncated fastplan artifact ({} bytes, header needs 48)", bytes.len());
+    }
+    if bytes[..8] != MAGIC {
+        bail!("not a fastplan artifact (bad magic)");
+    }
+    let version = read_u32(bytes, 8);
+    if version != FORMAT_VERSION {
+        bail!("unsupported fastplan version {version} (this build reads version {FORMAT_VERSION})");
+    }
+    if bytes.len() < HEADER_LEN + 8 {
+        bail!("truncated fastplan artifact ({} bytes, header needs 48)", bytes.len());
+    }
+    let kind = bytes[12];
+    let level = bytes[13];
+    if kind > 1 || level > 1 || bytes[14] != 0 || bytes[15] != 0 {
+        bail!("malformed fastplan header (kind {kind}, level {level})");
+    }
+    let n = as_len(read_u64(bytes, 16), "dimension n")?;
+    if n > MAX_PLAN_DIM {
+        bail!("fastplan dimension n = {n} exceeds the supported maximum {MAX_PLAN_DIM}");
+    }
+    let g = as_len(read_u64(bytes, 24), "stage count")?;
+    let superstage_stages = as_len(read_u64(bytes, 32), "superstage budget")?;
+    let supers = as_len(read_u64(bytes, 40), "superstage count")?;
+    let expected = g
+        .checked_mul(STAGE_BYTES)
+        .and_then(|v| supers.checked_add(1).map(|s| (v, s)))
+        .and_then(|(v, s)| s.checked_mul(8).map(|t| (v, t)))
+        .and_then(|(v, t)| v.checked_add(t))
+        .and_then(|v| v.checked_add(HEADER_LEN + 8));
+    let Some(expected) = expected else {
+        bail!("fastplan payload size overflows");
+    };
+    if bytes.len() < expected {
+        bail!("truncated fastplan artifact ({} bytes, expected {expected})", bytes.len());
+    }
+    if bytes.len() > expected {
+        bail!("fastplan artifact has {} trailing bytes", bytes.len() - expected);
+    }
+    let stored = read_u64(bytes, bytes.len() - 8);
+    let actual = fnv1a64(&bytes[..bytes.len() - 8]);
+    if stored != actual {
+        bail!(
+            "fastplan checksum mismatch (corrupt artifact): \
+             stored {stored:#018x}, computed {actual:#018x}"
+        );
+    }
+    if superstage_stages == 0 {
+        bail!("malformed fastplan header (superstage budget 0)");
+    }
+
+    let at_i = HEADER_LEN;
+    let at_j = at_i + 4 * g;
+    let at_op = at_j + 4 * g;
+    let at_p0f = at_op + g;
+    let at_p1f = at_p0f + 4 * g;
+    let at_p0d = at_p1f + 4 * g;
+    let at_p1d = at_p0d + 8 * g;
+    let at_table = at_p1d + 8 * g;
+
+    let mut stages = Vec::with_capacity(g);
+    for k in 0..g {
+        let st = RawStage {
+            i: read_u32(bytes, at_i + 4 * k),
+            j: read_u32(bytes, at_j + 4 * k),
+            op: bytes[at_op + k],
+            p0: read_f64(bytes, at_p0d + 8 * k),
+            p1: read_f64(bytes, at_p1d + 8 * k),
+        };
+        // the f32 stream must be exactly the rounded f64 stream — any
+        // divergence means the producer disagrees with this build's
+        // compilation rule and bitwise reproduction is impossible
+        let p0f = read_f32(bytes, at_p0f + 4 * k);
+        let p1f = read_f32(bytes, at_p1f + 4 * k);
+        let f32_consistent = p0f.to_bits() == (st.p0 as f32).to_bits()
+            && p1f.to_bits() == (st.p1 as f32).to_bits();
+        if !f32_consistent {
+            bail!("fastplan stage {k}: inconsistent f32/f64 coefficient streams");
+        }
+        let (i, j) = (st.i as usize, st.j as usize);
+        if i >= n || j >= n {
+            bail!("fastplan stage {k}: coordinates ({i}, {j}) out of range for n = {n}");
+        }
+        match (kind, st.op) {
+            (0, OP_ROTATION | OP_REFLECTION) | (1, OP_UPPER_SHEAR | OP_LOWER_SHEAR) => {
+                if i >= j {
+                    bail!("fastplan stage {k}: paired stage requires i < j (got {i}, {j})");
+                }
+            }
+            (1, OP_SCALING) => {
+                if i != j {
+                    bail!("fastplan stage {k}: scaling must have i == j (got {i}, {j})");
+                }
+                if st.p0 == 0.0 {
+                    bail!("fastplan stage {k}: scaling coefficient must be non-zero");
+                }
+            }
+            (_, op) => bail!("fastplan stage {k}: opcode {op} invalid for kind {kind}"),
+        }
+        stages.push(st);
+    }
+
+    let mut superstage_table = Vec::with_capacity(supers + 1);
+    for s in 0..=supers {
+        superstage_table.push(as_len(read_u64(bytes, at_table + 8 * s), "superstage offset")?);
+    }
+    let monotone = superstage_table.windows(2).all(|w| w[0] <= w[1]);
+    if superstage_table.first() != Some(&0) || superstage_table.last() != Some(&g) || !monotone {
+        bail!("malformed fastplan superstage table");
+    }
+
+    let repr = if kind == 0 {
+        // struct literal, NOT GTransform::new — the constructor's defensive
+        // renormalization could perturb the stored bits and break the
+        // bitwise round-trip guarantee
+        let transforms = stages
+            .iter()
+            .map(|st| GTransform {
+                i: st.i as usize,
+                j: st.j as usize,
+                c: st.p0,
+                s: st.p1,
+                kind: if st.op == OP_ROTATION { GKind::Rotation } else { GKind::Reflection },
+            })
+            .collect();
+        ChainRepr::G(GChain { n, transforms })
+    } else {
+        let transforms = stages
+            .iter()
+            .map(|st| {
+                let (i, j, a) = (st.i as usize, st.j as usize, st.p0);
+                match st.op {
+                    OP_SCALING => TTransform::Scaling { i, a },
+                    OP_UPPER_SHEAR => TTransform::UpperShear { i, j, a },
+                    _ => TTransform::LowerShear { i, j, a },
+                }
+            })
+            .collect();
+        ChainRepr::T(TChain { n, transforms })
+    };
+    Ok(DecodedPlan { repr, level: level == 1, superstage_stages, superstage_table })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_vectors() {
+        // standard FNV-1a 64 test vectors
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn empty_plan_round_trips() {
+        let repr = ChainRepr::G(GChain::identity(5));
+        let bytes = encode(&repr, true, 2048, &[0]);
+        let d = decode(&bytes).unwrap();
+        assert!(d.level);
+        assert_eq!(d.superstage_stages, 2048);
+        assert_eq!(d.superstage_table, vec![0]);
+        match d.repr {
+            ChainRepr::G(ch) => {
+                assert_eq!(ch.n, 5);
+                assert!(ch.is_empty());
+            }
+            ChainRepr::T(_) => panic!("wrong kind"),
+        }
+    }
+
+    #[test]
+    fn rejects_oversized_dimension_before_allocating() {
+        // a checksum-valid artifact declaring a huge n must come back as
+        // Err, not abort inside the compiler's O(n) allocations
+        let repr = ChainRepr::G(GChain::identity(1 << 30));
+        let bytes = encode(&repr, true, 2048, &[0]);
+        let e = format!("{:#}", decode(&bytes).unwrap_err());
+        assert!(e.contains("exceeds the supported maximum"), "{e}");
+    }
+
+    #[test]
+    fn rejects_bad_magic_version_checksum_truncation() {
+        let repr = ChainRepr::G(GChain::identity(4));
+        let good = encode(&repr, true, 2048, &[0]);
+        assert!(decode(&good).is_ok());
+
+        let mut bad = good.clone();
+        bad[0] = b'X';
+        let e = format!("{:#}", decode(&bad).unwrap_err());
+        assert!(e.contains("bad magic"), "{e}");
+
+        let mut bad = good.clone();
+        bad[8] = 99;
+        let e = format!("{:#}", decode(&bad).unwrap_err());
+        assert!(e.contains("unsupported fastplan version 99"), "{e}");
+
+        let mut bad = good.clone();
+        let at = bad.len() - 9; // inside the superstage table
+        bad[at] ^= 0xff;
+        let e = format!("{:#}", decode(&bad).unwrap_err());
+        assert!(e.contains("checksum mismatch"), "{e}");
+
+        let e = format!("{:#}", decode(&good[..good.len() - 3]).unwrap_err());
+        assert!(e.contains("truncated"), "{e}");
+        let e = format!("{:#}", decode(&good[..10]).unwrap_err());
+        assert!(e.contains("truncated"), "{e}");
+    }
+}

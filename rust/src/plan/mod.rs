@@ -1,0 +1,747 @@
+//! One execution surface for every factored operator: the
+//! [`FastOperator`] trait, the [`Plan`] builder pipeline, call-time
+//! [`ExecPolicy`] engine selection and the versioned `.fastplan` artifact.
+//!
+//! The paper's central object is a *single* approximate eigenspace — a
+//! product of `g` fundamental components, factored once and then applied
+//! cheaply in either direction. This module makes the code match that
+//! shape:
+//!
+//! * [`Direction`] replaces the `_t` / `_inv` / `_rev` method-name zoo:
+//!   [`Direction::Forward`] applies the operator itself (`Ū` / `T̄`),
+//!   [`Direction::Adjoint`] its transpose/inverse (`Ūᵀ` / `T̄⁻¹` — the
+//!   analysis / forward-GFT direction).
+//! * [`FastOperator`] is the one interface every operator implements:
+//!   chains ([`GChain`] / [`TChain`], sequential reference execution),
+//!   compiled [`Plan`]s (the fast path) and the native serve backend.
+//! * [`Plan::from(&chain).schedule(..).fuse(..).build()`](Plan::from)
+//!   produces an [`Arc<Plan>`]: level-scheduled conflict-free layers,
+//!   fused per-direction superstage streams, shareable across threads.
+//!   It subsumes the old `to_plan` / `compile` pair.
+//! * [`ExecPolicy`] picks the engine **per call** — sequential, scoped
+//!   spawns or the persistent worker pool — instead of at construction
+//!   time. Every engine is bitwise identical to the sequential apply.
+//! * [`Plan::save`] / [`Plan::load`] persist a plan as a versioned,
+//!   checksummed `.fastplan` artifact (f32 + f64 coefficient streams plus
+//!   the superstage table), so a factorization is paid once and served
+//!   everywhere.
+//!
+//! ```
+//! use fastes::plan::{Direction, ExecPolicy, FastOperator, Plan};
+//! use fastes::transforms::{GChain, GKind, GTransform, SignalBlock};
+//!
+//! let mut chain = GChain::identity(4);
+//! chain.transforms.push(GTransform::new(0, 2, 0.6, 0.8, GKind::Rotation));
+//! chain.transforms.push(GTransform::new(1, 3, 0.8, -0.6, GKind::Reflection));
+//!
+//! let plan = Plan::from(&chain).build();
+//! let mut block = SignalBlock::from_signals(&[vec![1.0f32, 2.0, 3.0, 4.0]]).unwrap();
+//! plan.apply(&mut block, Direction::Forward, &ExecPolicy::Seq).unwrap();
+//! plan.apply(&mut block, Direction::Adjoint, &ExecPolicy::Seq).unwrap();
+//! for (orig, roundtrip) in [1.0f32, 2.0, 3.0, 4.0].iter().zip(block.signal(0)) {
+//!     assert!((orig - roundtrip).abs() < 1e-5);
+//! }
+//! ```
+
+mod artifact;
+mod policy;
+
+pub use artifact::FORMAT_VERSION;
+pub use policy::ExecPolicy;
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::bail;
+
+use crate::linalg::Mat;
+use crate::transforms::schedule::DEFAULT_SUPERSTAGE_STAGES;
+use crate::transforms::{
+    apply_gchain_batch_f32, apply_gchain_batch_f32_t, apply_tchain_batch_f32, global_pool,
+    ChainKind, CompiledPlan, GChain, ScheduleStats, SignalBlock, TChain,
+};
+
+/// Which direction of the operator an apply runs.
+///
+/// For a G-chain the adjoint is the transpose `Ūᵀ` (equal to the inverse,
+/// since `Ū` is orthonormal); for a T-chain it is the inverse `T̄⁻¹`. In
+/// GFT terms, [`Direction::Adjoint`] is the *analysis* / forward-GFT
+/// direction `x̂ = Ūᵀ x` and [`Direction::Forward`] the *synthesis*
+/// `x = Ū x̂`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Direction {
+    /// Apply the operator itself: `x ← Ū x` / `x ← T̄ x`.
+    Forward,
+    /// Apply the transpose/inverse: `x ← Ūᵀ x` / `x ← T̄⁻¹ x`.
+    Adjoint,
+}
+
+impl Direction {
+    /// Alias for [`Direction::Adjoint`] that reads better next to
+    /// T-chains, whose reverse direction is the inverse `T̄⁻¹`.
+    pub const INVERSE: Direction = Direction::Adjoint;
+
+    /// `true` for [`Direction::Forward`].
+    pub fn is_forward(self) -> bool {
+        self == Direction::Forward
+    }
+
+    /// The opposite direction.
+    pub fn flip(self) -> Direction {
+        match self {
+            Direction::Forward => Direction::Adjoint,
+            Direction::Adjoint => Direction::Forward,
+        }
+    }
+}
+
+/// A fast linear operator that applies in either [`Direction`] under a
+/// caller-chosen [`ExecPolicy`].
+///
+/// Implemented by the chains ([`GChain`], [`TChain`] — sequential
+/// reference execution regardless of policy), by [`Plan`] (the compiled
+/// fast path, where the policy selects the engine) and by the native
+/// serve backend. All implementations of the `f32` block apply are
+/// **bitwise identical** for the same operator.
+///
+/// ```
+/// use fastes::plan::{Direction, ExecPolicy, FastOperator, Plan};
+/// use fastes::transforms::TChain;
+///
+/// // generic over the operator: chains and plans serve the same calls
+/// fn roundtrip(op: &dyn FastOperator, x: &mut [f64]) {
+///     op.apply_vec(x, Direction::Forward).unwrap();
+///     op.apply_vec(x, Direction::Adjoint).unwrap(); // T̄⁻¹ here
+/// }
+///
+/// let chain = TChain::identity(8);
+/// let plan = Plan::from(&chain).build();
+/// let mut x = vec![1.0f64; 8];
+/// roundtrip(&chain, &mut x);
+/// roundtrip(plan.as_ref(), &mut x);
+/// assert_eq!(x, vec![1.0f64; 8]);
+/// # let _ = ExecPolicy::Seq;
+/// ```
+pub trait FastOperator {
+    /// Problem dimension.
+    fn n(&self) -> usize;
+
+    /// Flop count of one matrix–vector apply.
+    fn flops(&self) -> usize;
+
+    /// Batched `f32` apply in place: `X ← op(dir) X` on an `(n, batch)`
+    /// block.
+    fn apply(
+        &self,
+        block: &mut SignalBlock,
+        dir: Direction,
+        policy: &ExecPolicy,
+    ) -> crate::Result<()>;
+
+    /// Single-vector `f64` apply in place: `x ← op(dir) x`.
+    fn apply_vec(&self, x: &mut [f64], dir: Direction) -> crate::Result<()>;
+
+    /// Matrix apply in place (left-multiplication): `M ← op(dir) M`.
+    fn apply_mat(&self, m: &mut Mat, dir: Direction) -> crate::Result<()>;
+}
+
+/// Scheduling options of the plan builder.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ScheduleOptions {
+    /// Greedy level scheduling into conflict-free layers (the default).
+    /// `false` keeps the chain's sequential order — one stage per layer —
+    /// which is still executed correctly by every engine but exposes no
+    /// stage-level parallelism; useful to measure the scheduling benefit.
+    pub level: bool,
+}
+
+impl Default for ScheduleOptions {
+    fn default() -> Self {
+        ScheduleOptions { level: true }
+    }
+}
+
+/// Fusion options of the plan builder.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FuseOptions {
+    /// Stage budget of one fused superstage: consecutive layers merge
+    /// until the combined stage count would exceed this (clamped to ≥ 1).
+    pub superstage_stages: usize,
+}
+
+impl Default for FuseOptions {
+    fn default() -> Self {
+        FuseOptions { superstage_stages: DEFAULT_SUPERSTAGE_STAGES }
+    }
+}
+
+/// The exact (f64) source chain behind a plan.
+#[derive(Clone, Debug)]
+pub(crate) enum ChainRepr {
+    G(GChain),
+    T(TChain),
+}
+
+/// Staged construction of a [`Plan`]:
+/// `Plan::from(&chain).schedule(opts).fuse(opts).build()`.
+#[derive(Clone, Debug)]
+pub struct PlanBuilder {
+    repr: ChainRepr,
+    schedule: ScheduleOptions,
+    fuse: FuseOptions,
+}
+
+impl PlanBuilder {
+    fn new(repr: ChainRepr) -> PlanBuilder {
+        PlanBuilder { repr, schedule: ScheduleOptions::default(), fuse: FuseOptions::default() }
+    }
+
+    /// Override the scheduling options.
+    pub fn schedule(mut self, opts: ScheduleOptions) -> PlanBuilder {
+        self.schedule = opts;
+        self
+    }
+
+    /// Override the fusion options.
+    pub fn fuse(mut self, opts: FuseOptions) -> PlanBuilder {
+        self.fuse = opts;
+        self
+    }
+
+    /// Compile: level-schedule (unless disabled), fuse the layers into
+    /// the two per-direction superstage streams, and wrap the result in
+    /// an [`Arc`] so coordinators, benches and artifact writers can share
+    /// one plan without copying.
+    pub fn build(mut self) -> Arc<Plan> {
+        // clamp here (not just inside the compiler) so the recorded — and
+        // serialized — options always equal the effective ones
+        self.fuse.superstage_stages = self.fuse.superstage_stages.max(1);
+        let compiled = match &self.repr {
+            ChainRepr::G(ch) => CompiledPlan::from_gchain_with(
+                ch,
+                self.schedule.level,
+                self.fuse.superstage_stages,
+            ),
+            ChainRepr::T(ch) => CompiledPlan::from_tchain_with(
+                ch,
+                self.schedule.level,
+                self.fuse.superstage_stages,
+            ),
+        };
+        Arc::new(Plan { repr: self.repr, compiled, schedule: self.schedule, fuse: self.fuse })
+    }
+}
+
+impl From<&GChain> for PlanBuilder {
+    fn from(chain: &GChain) -> PlanBuilder {
+        PlanBuilder::new(ChainRepr::G(chain.clone()))
+    }
+}
+
+impl From<GChain> for PlanBuilder {
+    fn from(chain: GChain) -> PlanBuilder {
+        PlanBuilder::new(ChainRepr::G(chain))
+    }
+}
+
+impl From<&TChain> for PlanBuilder {
+    fn from(chain: &TChain) -> PlanBuilder {
+        PlanBuilder::new(ChainRepr::T(chain.clone()))
+    }
+}
+
+impl From<TChain> for PlanBuilder {
+    fn from(chain: TChain) -> PlanBuilder {
+        PlanBuilder::new(ChainRepr::T(chain))
+    }
+}
+
+/// A compiled, immutable execution plan for a butterfly chain: the exact
+/// `f64` source stages plus the level-scheduled, fused
+/// [`CompiledPlan`] the engines consume.
+///
+/// Built by [`Plan::from`], persisted by [`Plan::save`] / [`Plan::load`],
+/// executed through [`FastOperator`]. Always handled as an [`Arc<Plan>`].
+///
+/// ```no_run
+/// use fastes::plan::{Direction, ExecPolicy, FastOperator, Plan};
+/// use fastes::transforms::GChain;
+///
+/// let plan = Plan::from(GChain::identity(16)).build();
+/// plan.save("op.fastplan").unwrap();
+/// let reloaded = Plan::load("op.fastplan").unwrap();
+/// let mut x = vec![0.0f64; 16];
+/// reloaded.apply_vec(&mut x, Direction::Forward).unwrap();
+/// # let _ = ExecPolicy::Seq;
+/// ```
+#[derive(Clone, Debug)]
+pub struct Plan {
+    repr: ChainRepr,
+    compiled: CompiledPlan,
+    schedule: ScheduleOptions,
+    fuse: FuseOptions,
+}
+
+impl Plan {
+    /// Start a builder from a chain (by reference or by value):
+    /// `Plan::from(&chain).build()`.
+    // an inherent `from` (not the `From` trait) because the builder, not
+    // the plan, is what a chain converts into — the trait would make
+    // `Plan::from(x).build()` impossible to spell
+    #[allow(clippy::should_implement_trait)]
+    pub fn from<S: Into<PlanBuilder>>(source: S) -> PlanBuilder {
+        source.into()
+    }
+
+    /// Problem dimension `n`.
+    pub fn n(&self) -> usize {
+        self.compiled.n()
+    }
+
+    /// Number of stages (`g` / `m`).
+    pub fn len(&self) -> usize {
+        self.compiled.len()
+    }
+
+    /// `true` when the plan is the identity.
+    pub fn is_empty(&self) -> bool {
+        self.compiled.is_empty()
+    }
+
+    /// Chain family (G or T).
+    pub fn kind(&self) -> ChainKind {
+        self.compiled.kind()
+    }
+
+    /// Schedule summary (layers, widths).
+    pub fn stats(&self) -> ScheduleStats {
+        self.compiled.stats()
+    }
+
+    /// Number of fused superstages in the forward stream.
+    pub fn num_superstages(&self) -> usize {
+        self.compiled.num_superstages()
+    }
+
+    /// The options the plan was built with.
+    pub fn options(&self) -> (ScheduleOptions, FuseOptions) {
+        (self.schedule, self.fuse)
+    }
+
+    /// The compiled execution form — escape hatch for callers that need a
+    /// *private* worker pool ([`CompiledPlan::apply_batch_pooled`] takes
+    /// an explicit pool, whereas [`ExecPolicy::Pool`] uses the process
+    /// pool).
+    pub fn compiled(&self) -> &CompiledPlan {
+        &self.compiled
+    }
+
+    /// The exact source chain, when the plan holds a G-chain.
+    pub fn as_gchain(&self) -> Option<&GChain> {
+        match &self.repr {
+            ChainRepr::G(ch) => Some(ch),
+            ChainRepr::T(_) => None,
+        }
+    }
+
+    /// The exact source chain, when the plan holds a T-chain.
+    pub fn as_tchain(&self) -> Option<&TChain> {
+        match &self.repr {
+            ChainRepr::T(ch) => Some(ch),
+            ChainRepr::G(_) => None,
+        }
+    }
+
+    /// Serialize to the versioned `.fastplan` byte format (see
+    /// [`artifact`](self) docs: magic + version + f32/f64 coefficient
+    /// streams + superstage table + checksum).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        artifact::encode(
+            &self.repr,
+            self.schedule.level,
+            self.fuse.superstage_stages,
+            &self.compiled.superstage_table(),
+        )
+    }
+
+    /// Deserialize from [`Plan::to_bytes`] bytes. The stored chain is
+    /// recompiled with the stored options and the recorded superstage
+    /// table is validated against the recompile, so a loaded plan applies
+    /// **bitwise identically** to the saved one — or loading fails.
+    pub fn from_bytes(bytes: &[u8]) -> crate::Result<Arc<Plan>> {
+        let d = artifact::decode(bytes)?;
+        let plan = PlanBuilder {
+            repr: d.repr,
+            schedule: ScheduleOptions { level: d.level },
+            fuse: FuseOptions { superstage_stages: d.superstage_stages },
+        }
+        .build();
+        if plan.compiled.superstage_table() != d.superstage_table {
+            bail!(
+                "fastplan superstage table does not match this build's compiler \
+                 (incompatible artifact)"
+            );
+        }
+        Ok(plan)
+    }
+
+    /// Write the plan to `path` as a `.fastplan` artifact.
+    pub fn save(&self, path: impl AsRef<Path>) -> crate::Result<()> {
+        let path = path.as_ref();
+        std::fs::write(path, self.to_bytes())
+            .map_err(|e| anyhow::anyhow!("cannot write plan {}: {e}", path.display()))
+    }
+
+    /// Load a `.fastplan` artifact (see [`Plan::from_bytes`] for the
+    /// validation guarantees).
+    pub fn load(path: impl AsRef<Path>) -> crate::Result<Arc<Plan>> {
+        let path = path.as_ref();
+        let bytes = std::fs::read(path)
+            .map_err(|e| anyhow::anyhow!("cannot read plan {}: {e}", path.display()))?;
+        Plan::from_bytes(&bytes)
+            .map_err(|e| e.context(format!("loading plan {}", path.display())))
+    }
+}
+
+impl FastOperator for Plan {
+    fn n(&self) -> usize {
+        self.compiled.n()
+    }
+
+    fn flops(&self) -> usize {
+        self.compiled.flops()
+    }
+
+    fn apply(
+        &self,
+        block: &mut SignalBlock,
+        dir: Direction,
+        policy: &ExecPolicy,
+    ) -> crate::Result<()> {
+        if block.n != self.compiled.n() {
+            bail!("block n {} != plan n {}", block.n, self.compiled.n());
+        }
+        let rev = dir == Direction::Adjoint;
+        match policy {
+            ExecPolicy::Seq => self.compiled.apply_batch_inline(block, rev),
+            ExecPolicy::Spawn(cfg) => self.compiled.apply_batch_spawn(block, rev, cfg),
+            ExecPolicy::Pool(cfg) => {
+                let pool = global_pool();
+                if rev {
+                    self.compiled.apply_batch_pooled_rev(block, pool, cfg);
+                } else {
+                    self.compiled.apply_batch_pooled(block, pool, cfg);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn apply_vec(&self, x: &mut [f64], dir: Direction) -> crate::Result<()> {
+        if x.len() != self.compiled.n() {
+            bail!("vector length {} != plan n {}", x.len(), self.compiled.n());
+        }
+        match dir {
+            Direction::Forward => self.compiled.apply_vec(x),
+            Direction::Adjoint => self.compiled.apply_vec_rev(x),
+        }
+        Ok(())
+    }
+
+    fn apply_mat(&self, m: &mut Mat, dir: Direction) -> crate::Result<()> {
+        if m.rows() != self.compiled.n() {
+            bail!("matrix has {} rows, plan n {}", m.rows(), self.compiled.n());
+        }
+        // left-multiplication column by column through the exact f64
+        // stream (plans are row-major-agnostic; this is a test/metrics
+        // convenience, not a hot path)
+        let n = self.compiled.n();
+        let cols = m.cols();
+        let mut col = vec![0.0f64; n];
+        for j in 0..cols {
+            for (i, c) in col.iter_mut().enumerate() {
+                *c = m[(i, j)];
+            }
+            match dir {
+                Direction::Forward => self.compiled.apply_vec(&mut col),
+                Direction::Adjoint => self.compiled.apply_vec_rev(&mut col),
+            }
+            for (i, c) in col.iter().enumerate() {
+                m[(i, j)] = *c;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl FastOperator for GChain {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn flops(&self) -> usize {
+        GChain::flops(self)
+    }
+
+    /// Sequential reference execution — the policy is ignored and a
+    /// fresh flat plan is allocated per call (build a [`Plan`] once for
+    /// anything hot). Bitwise identical to [`Plan`]'s apply for the same
+    /// chain.
+    fn apply(
+        &self,
+        block: &mut SignalBlock,
+        dir: Direction,
+        _policy: &ExecPolicy,
+    ) -> crate::Result<()> {
+        if block.n != self.n {
+            bail!("block n {} != chain n {}", block.n, self.n);
+        }
+        let plan = self.to_plan();
+        match dir {
+            Direction::Forward => apply_gchain_batch_f32(&plan, block),
+            Direction::Adjoint => apply_gchain_batch_f32_t(&plan, block),
+        }
+        Ok(())
+    }
+
+    fn apply_vec(&self, x: &mut [f64], dir: Direction) -> crate::Result<()> {
+        if x.len() != self.n {
+            bail!("vector length {} != chain n {}", x.len(), self.n);
+        }
+        match dir {
+            Direction::Forward => GChain::apply_vec(self, x),
+            Direction::Adjoint => GChain::apply_vec_t(self, x),
+        }
+        Ok(())
+    }
+
+    fn apply_mat(&self, m: &mut Mat, dir: Direction) -> crate::Result<()> {
+        if m.rows() != self.n {
+            bail!("matrix has {} rows, chain n {}", m.rows(), self.n);
+        }
+        match dir {
+            Direction::Forward => self.apply_left(m),
+            Direction::Adjoint => self.apply_left_t(m),
+        }
+        Ok(())
+    }
+}
+
+impl FastOperator for TChain {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn flops(&self) -> usize {
+        TChain::flops(self)
+    }
+
+    /// Sequential reference execution — the policy is ignored and a
+    /// fresh flat plan is allocated per call (build a [`Plan`] once for
+    /// anything hot).
+    fn apply(
+        &self,
+        block: &mut SignalBlock,
+        dir: Direction,
+        _policy: &ExecPolicy,
+    ) -> crate::Result<()> {
+        if block.n != self.n {
+            bail!("block n {} != chain n {}", block.n, self.n);
+        }
+        let plan = self.to_plan();
+        apply_tchain_batch_f32(&plan, block, dir == Direction::Adjoint);
+        Ok(())
+    }
+
+    fn apply_vec(&self, x: &mut [f64], dir: Direction) -> crate::Result<()> {
+        if x.len() != self.n {
+            bail!("vector length {} != chain n {}", x.len(), self.n);
+        }
+        match dir {
+            Direction::Forward => TChain::apply_vec(self, x),
+            Direction::Adjoint => TChain::apply_vec_inv(self, x),
+        }
+        Ok(())
+    }
+
+    fn apply_mat(&self, m: &mut Mat, dir: Direction) -> crate::Result<()> {
+        if m.rows() != self.n {
+            bail!("matrix has {} rows, chain n {}", m.rows(), self.n);
+        }
+        match dir {
+            Direction::Forward => self.apply_left(m),
+            Direction::Adjoint => self.apply_left_inv(m),
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cli::figures::{random_gplan, random_tplan};
+    use crate::linalg::Rng64;
+    use crate::transforms::ExecConfig;
+
+    fn signals(rng: &mut Rng64, n: usize, batch: usize) -> Vec<Vec<f32>> {
+        (0..batch).map(|_| (0..n).map(|_| rng.randn() as f32).collect()).collect()
+    }
+
+    #[test]
+    fn builder_produces_working_plan() {
+        let mut rng = Rng64::new(4101);
+        let ch = random_gplan(12, 60, &mut rng);
+        let plan = Plan::from(&ch).build();
+        assert_eq!(FastOperator::n(plan.as_ref()), 12);
+        assert_eq!(plan.len(), 60);
+        assert_eq!(plan.kind(), ChainKind::G);
+        assert_eq!(FastOperator::flops(plan.as_ref()), ch.flops());
+        assert_eq!(plan.as_gchain(), Some(&ch));
+        assert!(plan.as_tchain().is_none());
+    }
+
+    #[test]
+    fn every_policy_is_bitwise_sequential() {
+        let mut rng = Rng64::new(4102);
+        let n = 24;
+        let ch = random_gplan(n, 6 * n, &mut rng);
+        let plan = Plan::from(&ch).build();
+        let sigs = signals(&mut rng, n, 13);
+        let eager = ExecConfig { threads: 3, min_work: 1, layer_min_work: 1.0, tile_cols: 3 };
+        for dir in [Direction::Forward, Direction::Adjoint] {
+            let mut want = SignalBlock::from_signals(&sigs).unwrap();
+            ch.apply(&mut want, dir, &ExecPolicy::Seq).unwrap();
+            for policy in [
+                ExecPolicy::Seq,
+                ExecPolicy::Spawn(eager.clone()),
+                ExecPolicy::Pool(eager.clone()),
+            ] {
+                let mut got = SignalBlock::from_signals(&sigs).unwrap();
+                plan.apply(&mut got, dir, &policy).unwrap();
+                assert_eq!(
+                    want.data,
+                    got.data,
+                    "policy {} dir {dir:?} diverged",
+                    policy.engine()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn t_plan_policies_match_chain() {
+        let mut rng = Rng64::new(4103);
+        let n = 20;
+        let ch = random_tplan(n, 8 * n, &mut rng);
+        let plan = Plan::from(&ch).build();
+        let sigs = signals(&mut rng, n, 7);
+        let eager = ExecConfig { threads: 3, min_work: 1, layer_min_work: 1.0, tile_cols: 2 };
+        for dir in [Direction::Forward, Direction::INVERSE] {
+            let mut want = SignalBlock::from_signals(&sigs).unwrap();
+            ch.apply(&mut want, dir, &ExecPolicy::Seq).unwrap();
+            let mut got = SignalBlock::from_signals(&sigs).unwrap();
+            plan.apply(&mut got, dir, &ExecPolicy::Pool(eager.clone())).unwrap();
+            assert_eq!(want.data, got.data, "T dir {dir:?} diverged");
+        }
+    }
+
+    #[test]
+    fn f64_and_mat_forms_match_chain_ops() {
+        let mut rng = Rng64::new(4104);
+        let n = 9;
+        let ch = random_gplan(n, 4 * n, &mut rng);
+        let plan = Plan::from(&ch).build();
+        let x: Vec<f64> = (0..n).map(|_| rng.randn()).collect();
+        for dir in [Direction::Forward, Direction::Adjoint] {
+            let mut a = x.clone();
+            let mut b = x.clone();
+            FastOperator::apply_vec(&ch, &mut a, dir).unwrap();
+            plan.apply_vec(&mut b, dir).unwrap();
+            assert_eq!(a, b, "f64 vec dir {dir:?}");
+        }
+        let m = Mat::randn(n, 5, &mut rng);
+        for dir in [Direction::Forward, Direction::Adjoint] {
+            let mut a = m.clone();
+            let mut b = m.clone();
+            FastOperator::apply_mat(&ch, &mut a, dir).unwrap();
+            plan.apply_mat(&mut b, dir).unwrap();
+            for (u, v) in a.as_slice().iter().zip(b.as_slice().iter()) {
+                assert!((u - v).abs() < 1e-12, "mat dir {dir:?}: {u} vs {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn dimension_mismatches_error_instead_of_panicking() {
+        let plan = Plan::from(GChain::identity(4)).build();
+        let mut block = SignalBlock::zeros(5, 2);
+        assert!(plan.apply(&mut block, Direction::Forward, &ExecPolicy::Seq).is_err());
+        let mut x = vec![0.0f64; 3];
+        assert!(plan.apply_vec(&mut x, Direction::Adjoint).is_err());
+        let mut m = Mat::zeros(3, 3);
+        assert!(plan.apply_mat(&mut m, Direction::Forward).is_err());
+    }
+
+    #[test]
+    fn fuse_options_control_superstage_count() {
+        let mut rng = Rng64::new(4105);
+        let ch = random_gplan(16, 400, &mut rng);
+        let coarse = Plan::from(&ch).build();
+        let fine = Plan::from(&ch).fuse(FuseOptions { superstage_stages: 16 }).build();
+        assert!(fine.num_superstages() > coarse.num_superstages());
+        // fusion granularity must not change results
+        let mut rng2 = Rng64::new(4106);
+        let sigs = signals(&mut rng2, 16, 5);
+        let mut a = SignalBlock::from_signals(&sigs).unwrap();
+        let mut b = SignalBlock::from_signals(&sigs).unwrap();
+        coarse.apply(&mut a, Direction::Adjoint, &ExecPolicy::Seq).unwrap();
+        fine.apply(&mut b, Direction::Adjoint, &ExecPolicy::Seq).unwrap();
+        assert_eq!(a.data, b.data);
+    }
+
+    #[test]
+    fn unscheduled_plan_still_correct() {
+        let mut rng = Rng64::new(4107);
+        let ch = random_gplan(10, 80, &mut rng);
+        let plain = Plan::from(&ch).schedule(ScheduleOptions { level: false }).build();
+        assert_eq!(plain.stats().layers, 80, "no scheduling → one stage per layer");
+        let sigs = signals(&mut rng, 10, 4);
+        let mut want = SignalBlock::from_signals(&sigs).unwrap();
+        ch.apply(&mut want, Direction::Forward, &ExecPolicy::Seq).unwrap();
+        let mut got = SignalBlock::from_signals(&sigs).unwrap();
+        plain.apply(&mut got, Direction::Forward, &ExecPolicy::Seq).unwrap();
+        assert_eq!(want.data, got.data);
+    }
+
+    #[test]
+    fn bytes_round_trip_is_bitwise() {
+        let mut rng = Rng64::new(4108);
+        for kind in 0..2 {
+            let n = 18;
+            let (plan, label) = if kind == 0 {
+                (Plan::from(random_gplan(n, 5 * n, &mut rng)).build(), "G")
+            } else {
+                (Plan::from(random_tplan(n, 5 * n, &mut rng)).build(), "T")
+            };
+            let bytes = plan.to_bytes();
+            let back = Plan::from_bytes(&bytes).unwrap();
+            assert_eq!(back.to_bytes(), bytes, "{label}: re-serialization drifted");
+            let sigs = signals(&mut rng, n, 6);
+            for dir in [Direction::Forward, Direction::Adjoint] {
+                let mut a = SignalBlock::from_signals(&sigs).unwrap();
+                let mut b = SignalBlock::from_signals(&sigs).unwrap();
+                plan.apply(&mut a, dir, &ExecPolicy::Seq).unwrap();
+                back.apply(&mut b, dir, &ExecPolicy::Seq).unwrap();
+                assert_eq!(a.data, b.data, "{label} {dir:?}: loaded plan diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn direction_helpers() {
+        assert!(Direction::Forward.is_forward());
+        assert!(!Direction::Adjoint.is_forward());
+        assert_eq!(Direction::Forward.flip(), Direction::Adjoint);
+        assert_eq!(Direction::INVERSE, Direction::Adjoint);
+    }
+}

@@ -1,0 +1,96 @@
+//! Execution policies: which engine runs a [`FastOperator::apply`]
+//! (`crate::plan::FastOperator::apply`) call.
+//!
+//! The engine used to be chosen at *construction* time (three backend
+//! constructors, four batch entry points); an [`ExecPolicy`] moves that
+//! choice to *call* time, so one [`Plan`](super::Plan) can serve a
+//! latency-critical pooled path and a debugging sequential path from the
+//! same object.
+
+use crate::transforms::ExecConfig;
+
+/// Which execution engine a [`super::FastOperator::apply`] call uses.
+///
+/// Every engine is **bitwise identical** to the sequential per-stage
+/// apply — the compiled plan only reorders stages with disjoint supports,
+/// so no floating-point reassociation ever happens.
+///
+/// ```
+/// use fastes::plan::{Direction, ExecPolicy, FastOperator, Plan};
+/// use fastes::transforms::{GChain, SignalBlock};
+///
+/// let plan = Plan::from(GChain::identity(4)).build();
+/// let mut block = SignalBlock::from_signals(&[vec![1.0f32, 2.0, 3.0, 4.0]]).unwrap();
+/// plan.apply(&mut block, Direction::Forward, &ExecPolicy::Seq).unwrap();
+/// assert_eq!(block.signal(0), vec![1.0, 2.0, 3.0, 4.0]);
+/// ```
+#[derive(Clone, Debug, PartialEq)]
+pub enum ExecPolicy {
+    /// Single-threaded fused execution on the calling thread.
+    Seq,
+    /// Scoped-thread spawn-per-apply executor (the benchmark baseline;
+    /// spawning costs tens of microseconds per call).
+    Spawn(ExecConfig),
+    /// The persistent process-wide worker pool
+    /// ([`crate::transforms::global_pool`]) with fused, cache-blocked,
+    /// work-stealing dispatch — the serving hot path.
+    Pool(ExecConfig),
+}
+
+impl ExecPolicy {
+    /// Pooled execution with the [`ExecConfig::pooled`] defaults (plus
+    /// `FASTES_*` environment overrides).
+    pub fn pool() -> ExecPolicy {
+        ExecPolicy::Pool(ExecConfig::pooled())
+    }
+
+    /// Spawn-per-apply execution with the [`ExecConfig::spawn`] defaults.
+    pub fn spawn() -> ExecPolicy {
+        ExecPolicy::Spawn(ExecConfig::spawn())
+    }
+
+    /// Short engine name: `"seq"`, `"spawn"` or `"pool"` (the values the
+    /// `fastes serve --exec` flag accepts).
+    pub fn engine(&self) -> &'static str {
+        match self {
+            ExecPolicy::Seq => "seq",
+            ExecPolicy::Spawn(_) => "spawn",
+            ExecPolicy::Pool(_) => "pool",
+        }
+    }
+
+    /// The tunables carried by the policy (`None` for [`ExecPolicy::Seq`]).
+    pub fn config(&self) -> Option<&ExecConfig> {
+        match self {
+            ExecPolicy::Seq => None,
+            ExecPolicy::Spawn(cfg) | ExecPolicy::Pool(cfg) => Some(cfg),
+        }
+    }
+}
+
+impl Default for ExecPolicy {
+    /// The serving default: pooled execution.
+    fn default() -> Self {
+        ExecPolicy::pool()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_names_match_cli_values() {
+        assert_eq!(ExecPolicy::Seq.engine(), "seq");
+        assert_eq!(ExecPolicy::spawn().engine(), "spawn");
+        assert_eq!(ExecPolicy::pool().engine(), "pool");
+        assert_eq!(ExecPolicy::default().engine(), "pool");
+    }
+
+    #[test]
+    fn config_accessor() {
+        assert!(ExecPolicy::Seq.config().is_none());
+        assert_eq!(ExecPolicy::pool().config(), Some(&ExecConfig::pooled()));
+        assert_eq!(ExecPolicy::spawn().config(), Some(&ExecConfig::spawn()));
+    }
+}

@@ -1,12 +1,12 @@
 //! Serving backends: native rust butterflies or a PJRT artifact.
 
+use std::sync::Arc;
+
 use anyhow::bail;
 
+use crate::plan::{Direction, ExecPolicy, FastOperator, Plan};
 use crate::runtime::{ArtifactKind, ArtifactStore};
-use crate::transforms::{
-    apply_gchain_batch_f32, apply_gchain_batch_f32_t, batch::SignalBlock, global_pool, ChainKind,
-    CompiledPlan, ExecConfig, PlanArrays,
-};
+use crate::transforms::{batch::SignalBlock, ChainKind, ExecConfig, GChain, PlanArrays};
 
 /// Which direction of the transform the backend serves.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -35,21 +35,14 @@ pub trait Backend {
 }
 
 /// Native rust butterfly fast path (the Fig.-6 "C implementation"
-/// analogue). Optionally executes through a level-scheduled
-/// [`CompiledPlan`] — either on the legacy spawn-per-apply executor or,
-/// preferably, on the process-wide persistent worker pool with fused
-/// cache-blocked apply (see [`crate::transforms::schedule`] and
-/// [`crate::transforms::pool`]). Every compiled path is bitwise identical
-/// to the sequential one.
+/// analogue): one shared [`Plan`] applied through the
+/// [`FastOperator`] trait, with the engine chosen by an [`ExecPolicy`] —
+/// sequential, spawn-per-apply, or (the serving default) the process-wide
+/// persistent worker pool with fused cache-blocked apply. Every engine is
+/// bitwise identical to the sequential one.
 pub struct NativeGftBackend {
-    plan: PlanArrays,
-    /// Level-scheduled execution plan (the parallel fast path).
-    compiled: Option<CompiledPlan>,
-    /// Worker threads for the compiled spawn path.
-    threads: usize,
-    /// When set, compiled applies run on [`global_pool`] with these
-    /// tunables instead of spawning scoped threads.
-    exec: Option<ExecConfig>,
+    plan: Arc<Plan>,
+    policy: ExecPolicy,
     direction: TransformDirection,
     max_batch: usize,
     /// Spectral filter diagonal (Filter direction only).
@@ -57,19 +50,45 @@ pub struct NativeGftBackend {
 }
 
 impl NativeGftBackend {
+    /// New backend over a shared plan with an explicit execution policy —
+    /// the one constructor behind `fastes serve --exec seq|spawn|pool`.
+    /// Fails when the plan is not a G-chain plan or the filter diagonal
+    /// is missing/mis-sized for [`TransformDirection::Filter`].
+    pub fn with_policy(
+        plan: Arc<Plan>,
+        direction: TransformDirection,
+        max_batch: usize,
+        filter: Option<Vec<f32>>,
+        policy: ExecPolicy,
+    ) -> crate::Result<Self> {
+        if plan.kind() != ChainKind::G {
+            bail!("the GFT backend serves G-chain plans (got a T-chain plan)");
+        }
+        if direction == TransformDirection::Filter
+            && !filter.as_ref().is_some_and(|h| h.len() == plan.n())
+        {
+            bail!("filter direction needs a length-{} diagonal", plan.n());
+        }
+        Ok(NativeGftBackend { plan, policy, direction, max_batch, filter })
+    }
+
     /// New backend over a G-chain plan (sequential apply).
+    #[deprecated(note = "build an `Arc<Plan>` with `Plan::from(&chain).build()` and use \
+                         `NativeGftBackend::with_policy` with `ExecPolicy::Seq`")]
     pub fn new(
         plan: PlanArrays,
         direction: TransformDirection,
         max_batch: usize,
         filter: Option<Vec<f32>>,
     ) -> Self {
-        Self::with_schedule(plan, direction, max_batch, filter, false, 1)
+        Self::from_arrays(plan, direction, max_batch, filter, ExecPolicy::Seq)
     }
 
     /// New backend with an explicit execution strategy: when `scheduled`,
     /// the plan is compiled into conflict-free layers at construction time
     /// and applied with up to `threads` spawned workers per batch.
+    #[deprecated(note = "use `NativeGftBackend::with_policy` with `ExecPolicy::Seq` or \
+                         `ExecPolicy::Spawn`")]
     pub fn with_schedule(
         plan: PlanArrays,
         direction: TransformDirection,
@@ -78,25 +97,19 @@ impl NativeGftBackend {
         scheduled: bool,
         threads: usize,
     ) -> Self {
-        if direction == TransformDirection::Filter {
-            assert!(filter.as_ref().is_some_and(|h| h.len() == plan.n), "filter length mismatch");
-        }
-        let compiled = scheduled.then(|| CompiledPlan::from_plan(&plan, ChainKind::G));
-        NativeGftBackend {
-            plan,
-            compiled,
-            threads: threads.max(1),
-            exec: None,
-            direction,
-            max_batch,
-            filter,
-        }
+        let policy = if scheduled {
+            ExecPolicy::Spawn(ExecConfig::spawn().with_threads(threads))
+        } else {
+            ExecPolicy::Seq
+        };
+        Self::from_arrays(plan, direction, max_batch, filter, policy)
     }
 
     /// New backend on the persistent worker pool: the plan is compiled
     /// (levels + fused superstages) at construction time and every apply
-    /// runs cache-blocked on the process-wide [`global_pool`] — no thread
-    /// spawns on the request path. The serve coordinator's default.
+    /// runs cache-blocked on the process-wide pool — no thread spawns on
+    /// the request path.
+    #[deprecated(note = "use `NativeGftBackend::with_policy` with `ExecPolicy::Pool`")]
     pub fn with_pool(
         plan: PlanArrays,
         direction: TransformDirection,
@@ -104,9 +117,40 @@ impl NativeGftBackend {
         filter: Option<Vec<f32>>,
         cfg: ExecConfig,
     ) -> Self {
-        let mut backend = Self::with_schedule(plan, direction, max_batch, filter, true, 1);
-        backend.exec = Some(cfg);
-        backend
+        Self::from_arrays(plan, direction, max_batch, filter, ExecPolicy::Pool(cfg))
+    }
+
+    /// Shim body of the deprecated constructors: widen the f32 arrays to
+    /// an exact G-chain (lossless) and build a plan. Panics like the old
+    /// constructors did on a bad filter.
+    fn from_arrays(
+        arrays: PlanArrays,
+        direction: TransformDirection,
+        max_batch: usize,
+        filter: Option<Vec<f32>>,
+        policy: ExecPolicy,
+    ) -> Self {
+        if direction == TransformDirection::Filter {
+            assert!(
+                filter.as_ref().is_some_and(|h| h.len() == arrays.n),
+                "filter length mismatch"
+            );
+        }
+        // exact widening (no renormalization) keeps the shims' output
+        // bitwise-identical to the old plan-arrays execution paths
+        let plan = Plan::from(GChain::from_plan_exact(&arrays)).build();
+        Self::with_policy(plan, direction, max_batch, filter, policy)
+            .expect("validated above")
+    }
+
+    /// The shared plan this backend serves.
+    pub fn plan(&self) -> &Arc<Plan> {
+        &self.plan
+    }
+
+    /// The execution policy applies run under.
+    pub fn policy(&self) -> &ExecPolicy {
+        &self.policy
     }
 
     /// `X ← diag(h) X` on the live block.
@@ -120,9 +164,41 @@ impl NativeGftBackend {
     }
 }
 
+/// The backend *is* a [`FastOperator`]: it exposes the underlying
+/// operator direction-polymorphically (the serve-time
+/// [`TransformDirection`] mapping — Forward ⇒ adjoint, Inverse ⇒ forward,
+/// Filter ⇒ adjoint·diag(h)·forward — lives only in
+/// [`Backend::forward`]).
+impl FastOperator for NativeGftBackend {
+    fn n(&self) -> usize {
+        self.plan.n()
+    }
+
+    fn flops(&self) -> usize {
+        FastOperator::flops(self.plan.as_ref())
+    }
+
+    fn apply(
+        &self,
+        block: &mut SignalBlock,
+        dir: Direction,
+        policy: &ExecPolicy,
+    ) -> crate::Result<()> {
+        self.plan.apply(block, dir, policy)
+    }
+
+    fn apply_vec(&self, x: &mut [f64], dir: Direction) -> crate::Result<()> {
+        self.plan.apply_vec(x, dir)
+    }
+
+    fn apply_mat(&self, m: &mut crate::linalg::Mat, dir: Direction) -> crate::Result<()> {
+        self.plan.apply_mat(m, dir)
+    }
+}
+
 impl Backend for NativeGftBackend {
     fn n(&self) -> usize {
-        self.plan.n
+        self.plan.n()
     }
 
     fn max_batch(&self) -> usize {
@@ -130,56 +206,30 @@ impl Backend for NativeGftBackend {
     }
 
     fn forward(&mut self, block: &mut SignalBlock) -> crate::Result<()> {
-        if block.n != self.plan.n {
-            bail!("block n {} != plan n {}", block.n, self.plan.n);
-        }
-        if let Some(cp) = &self.compiled {
-            if let Some(cfg) = &self.exec {
-                let pool = global_pool();
-                match self.direction {
-                    TransformDirection::Forward => cp.apply_batch_pooled_rev(block, pool, cfg),
-                    TransformDirection::Inverse => cp.apply_batch_pooled(block, pool, cfg),
-                    TransformDirection::Filter => {
-                        let h = self.filter.as_ref().expect("checked in with_schedule");
-                        cp.apply_batch_pooled_rev(block, pool, cfg);
-                        Self::scale_rows(block, h);
-                        cp.apply_batch_pooled(block, pool, cfg);
-                    }
-                }
-                return Ok(());
-            }
-            match self.direction {
-                TransformDirection::Forward => cp.apply_batch_rev(block, self.threads),
-                TransformDirection::Inverse => cp.apply_batch(block, self.threads),
-                TransformDirection::Filter => {
-                    let h = self.filter.as_ref().expect("checked in with_schedule");
-                    cp.apply_batch_rev(block, self.threads);
-                    Self::scale_rows(block, h);
-                    cp.apply_batch(block, self.threads);
-                }
-            }
-            return Ok(());
-        }
         match self.direction {
-            TransformDirection::Forward => apply_gchain_batch_f32_t(&self.plan, block),
-            TransformDirection::Inverse => apply_gchain_batch_f32(&self.plan, block),
+            // analysis / forward GFT: x̂ = Ūᵀ x
+            TransformDirection::Forward => {
+                self.plan.apply(block, Direction::Adjoint, &self.policy)
+            }
+            // synthesis / inverse GFT: x = Ū x̂
+            TransformDirection::Inverse => {
+                self.plan.apply(block, Direction::Forward, &self.policy)
+            }
+            // spectral filter: y = Ū diag(h) Ūᵀ x
             TransformDirection::Filter => {
-                let h = self.filter.as_ref().expect("checked in with_schedule");
-                apply_gchain_batch_f32_t(&self.plan, block);
+                let h = self.filter.as_ref().expect("checked in with_policy");
+                self.plan.apply(block, Direction::Adjoint, &self.policy)?;
                 Self::scale_rows(block, h);
-                apply_gchain_batch_f32(&self.plan, block);
+                self.plan.apply(block, Direction::Forward, &self.policy)
             }
         }
-        Ok(())
     }
 
     fn name(&self) -> &str {
-        if self.exec.is_some() {
-            "native-gft-pooled"
-        } else if self.compiled.is_some() {
-            "native-gft-scheduled"
-        } else {
-            "native-gft"
+        match self.policy {
+            ExecPolicy::Seq => "native-gft",
+            ExecPolicy::Spawn(_) => "native-gft-scheduled",
+            ExecPolicy::Pool(_) => "native-gft-pooled",
         }
     }
 }
@@ -259,10 +309,11 @@ impl Backend for PjrtGftBackend {
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // the deprecated constructor shims are under test too
 mod tests {
     use super::*;
     use crate::linalg::Rng64;
-    use crate::transforms::{GChain, GKind, GTransform};
+    use crate::transforms::{GKind, GTransform};
 
     fn random_plan(n: usize, g: usize, seed: u64) -> PlanArrays {
         let mut rng = Rng64::new(seed);
@@ -284,7 +335,7 @@ mod tests {
         let mut inv = NativeGftBackend::new(plan, TransformDirection::Inverse, 4, None);
         let mut rng = Rng64::new(602);
         let sig: Vec<f32> = (0..8).map(|_| rng.randn() as f32).collect();
-        let mut block = SignalBlock::from_signals(&vec![sig.clone(); 4]);
+        let mut block = SignalBlock::from_signals(&vec![sig.clone(); 4]).unwrap();
         fwd.forward(&mut block).unwrap();
         inv.forward(&mut block).unwrap();
         for (a, b) in sig.iter().zip(block.signal(0).iter()) {
@@ -302,7 +353,7 @@ mod tests {
             Some(vec![1.0; 6]),
         );
         let sig: Vec<f32> = (0..6).map(|i| i as f32).collect();
-        let mut block = SignalBlock::from_signals(&vec![sig.clone(); 2]);
+        let mut block = SignalBlock::from_signals(&vec![sig.clone(); 2]).unwrap();
         f.forward(&mut block).unwrap();
         for (a, b) in sig.iter().zip(block.signal(0).iter()) {
             assert!((a - b).abs() < 1e-4, "{a} vs {b}");
@@ -325,8 +376,8 @@ mod tests {
             let mut sched =
                 NativeGftBackend::with_schedule(plan.clone(), direction, 6, filter, true, 4);
             assert_eq!(sched.name(), "native-gft-scheduled");
-            let mut a = SignalBlock::from_signals(&signals);
-            let mut b = SignalBlock::from_signals(&signals);
+            let mut a = SignalBlock::from_signals(&signals).unwrap();
+            let mut b = SignalBlock::from_signals(&signals).unwrap();
             seq.forward(&mut a).unwrap();
             sched.forward(&mut b).unwrap();
             assert_eq!(a.data, b.data, "direction {direction:?} diverged");
@@ -353,12 +404,92 @@ mod tests {
             let mut pooled =
                 NativeGftBackend::with_pool(plan.clone(), direction, 6, filter, cfg.clone());
             assert_eq!(pooled.name(), "native-gft-pooled");
-            let mut a = SignalBlock::from_signals(&signals);
-            let mut b = SignalBlock::from_signals(&signals);
+            let mut a = SignalBlock::from_signals(&signals).unwrap();
+            let mut b = SignalBlock::from_signals(&signals).unwrap();
             seq.forward(&mut a).unwrap();
             pooled.forward(&mut b).unwrap();
             assert_eq!(a.data, b.data, "direction {direction:?} diverged");
         }
+    }
+
+    #[test]
+    fn with_policy_matches_deprecated_shims_bitwise() {
+        // one plan, four constructions: the new policy constructor must
+        // serve exactly what each legacy shim serves
+        let mut rng = Rng64::new(609);
+        let arrays = random_plan(12, 200, 610);
+        // widen exactly like the shims do (no renormalization)
+        let chain = GChain::from_plan_exact(&arrays);
+        let plan = crate::plan::Plan::from(&chain).build();
+        let signals: Vec<Vec<f32>> =
+            (0..5).map(|_| (0..12).map(|_| rng.randn() as f32).collect()).collect();
+        let cfg = ExecConfig { threads: 2, min_work: 1, layer_min_work: 1.0, tile_cols: 2 };
+        let cases: Vec<(Box<dyn Backend>, Box<dyn Backend>)> = vec![
+            (
+                Box::new(NativeGftBackend::new(
+                    arrays.clone(),
+                    TransformDirection::Forward,
+                    5,
+                    None,
+                )),
+                Box::new(
+                    NativeGftBackend::with_policy(
+                        plan.clone(),
+                        TransformDirection::Forward,
+                        5,
+                        None,
+                        ExecPolicy::Seq,
+                    )
+                    .unwrap(),
+                ),
+            ),
+            (
+                Box::new(NativeGftBackend::with_pool(
+                    arrays.clone(),
+                    TransformDirection::Inverse,
+                    5,
+                    None,
+                    cfg.clone(),
+                )),
+                Box::new(
+                    NativeGftBackend::with_policy(
+                        plan.clone(),
+                        TransformDirection::Inverse,
+                        5,
+                        None,
+                        ExecPolicy::Pool(cfg.clone()),
+                    )
+                    .unwrap(),
+                ),
+            ),
+        ];
+        for (mut old, mut new) in cases {
+            let mut a = SignalBlock::from_signals(&signals).unwrap();
+            let mut b = SignalBlock::from_signals(&signals).unwrap();
+            old.forward(&mut a).unwrap();
+            new.forward(&mut b).unwrap();
+            assert_eq!(a.data, b.data, "{} vs {} diverged", old.name(), new.name());
+        }
+        // T-chain plans are rejected
+        let t = crate::transforms::TChain::identity(4);
+        let tp = crate::plan::Plan::from(t).build();
+        assert!(NativeGftBackend::with_policy(
+            tp,
+            TransformDirection::Forward,
+            2,
+            None,
+            ExecPolicy::Seq
+        )
+        .is_err());
+        // filter validation errors instead of panicking
+        assert!(NativeGftBackend::with_policy(
+            plan,
+            TransformDirection::Filter,
+            2,
+            Some(vec![1.0; 3]),
+            ExecPolicy::Seq
+        )
+        .is_err());
     }
 
     #[test]
@@ -370,7 +501,7 @@ mod tests {
             1,
             Some(vec![0.0; 5]),
         );
-        let mut block = SignalBlock::from_signals(&[vec![1.0, -2.0, 3.0, 0.5, 4.0]]);
+        let mut block = SignalBlock::from_signals(&[vec![1.0, -2.0, 3.0, 0.5, 4.0]]).unwrap();
         f.forward(&mut block).unwrap();
         for v in block.signal(0) {
             assert!(v.abs() < 1e-6);

@@ -14,7 +14,8 @@
 //! owns the backend (PJRT executables are not Sync), `sync_channel`
 //! provides the bounded queue, and per-request one-shot replies are
 //! `sync_channel(1)`. Intra-batch parallelism comes from the backend: the
-//! pooled native backend ([`NativeGftBackend::with_pool`]) executes each
+//! pooled native backend ([`NativeGftBackend::with_policy`] with
+//! [`ExecPolicy::Pool`](crate::plan::ExecPolicy::Pool)) executes each
 //! batch on the **process-wide persistent worker pool**
 //! ([`crate::transforms::global_pool`]), so one set of parked workers is
 //! shared across every request and every coordinator in the process — no
@@ -155,10 +156,19 @@ impl Coordinator {
         }
     }
 
-    /// Submit and wait.
-    pub fn submit_blocking(&self, signal: Vec<f64>) -> crate::Result<Vec<f64>> {
+    /// Submit and wait. Takes the coordinator's native signal type
+    /// (`f32`, like [`Coordinator::submit`] / [`Coordinator::try_submit`]
+    /// — the dtypes used to disagree); for `f64` callers use the explicit
+    /// conversion helper [`Coordinator::submit_blocking_f64`].
+    pub fn submit_blocking(&self, signal: Vec<f32>) -> crate::Result<Vec<f32>> {
+        self.submit(signal)?.wait()
+    }
+
+    /// Explicit `f64` convenience wrapper around [`Coordinator::submit_blocking`]:
+    /// narrows the signal to the `f32` wire format, widens the response.
+    pub fn submit_blocking_f64(&self, signal: &[f64]) -> crate::Result<Vec<f64>> {
         let sig32: Vec<f32> = signal.iter().map(|&v| v as f32).collect();
-        let out = self.submit(sig32)?.wait()?;
+        let out = self.submit_blocking(sig32)?;
         Ok(out.into_iter().map(|v| v as f64).collect())
     }
 
@@ -260,19 +270,25 @@ fn worker_loop(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::transforms::PlanArrays;
+    use crate::plan::{ExecPolicy, Plan};
+    use crate::transforms::GChain;
 
-    fn identity_plan(n: usize) -> PlanArrays {
-        PlanArrays { n, ..Default::default() }
+    /// Identity backend through the modern constructor.
+    fn identity_backend(n: usize, max_batch: usize) -> crate::Result<Box<dyn Backend>> {
+        let plan = Plan::from(GChain::identity(n)).build();
+        Ok(Box::new(NativeGftBackend::with_policy(
+            plan,
+            TransformDirection::Forward,
+            max_batch,
+            None,
+            ExecPolicy::Seq,
+        )?) as Box<dyn Backend>)
     }
 
     #[test]
     fn identity_roundtrip() {
-        let coord = Coordinator::start(
-            || Ok(Box::new(NativeGftBackend::new(identity_plan(4), TransformDirection::Forward, 8, None)) as Box<dyn Backend>),
-            ServeConfig::default(),
-        )
-        .unwrap();
+        let coord =
+            Coordinator::start(|| identity_backend(4, 8), ServeConfig::default()).unwrap();
         let sig = vec![1.0f32, 2.0, 3.0, 4.0];
         let out = coord.submit(sig.clone()).unwrap().wait().unwrap();
         assert_eq!(out, sig);
@@ -281,9 +297,26 @@ mod tests {
     }
 
     #[test]
+    fn submit_blocking_agrees_with_submit_and_f64_helper() {
+        // regression: submit_blocking used to take Vec<f64> while
+        // submit/try_submit took Vec<f32> — the signal type is now f32
+        // everywhere, with an explicit f64 conversion helper
+        let coord =
+            Coordinator::start(|| identity_backend(3, 4), ServeConfig::default()).unwrap();
+        let sig = vec![0.5f32, -1.25, 3.0];
+        let a = coord.submit(sig.clone()).unwrap().wait().unwrap();
+        let b = coord.submit_blocking(sig.clone()).unwrap();
+        assert_eq!(a, b, "submit_blocking must match submit().wait()");
+        let sig64 = vec![0.5f64, -1.25, 3.0];
+        let c = coord.submit_blocking_f64(&sig64).unwrap();
+        assert_eq!(c, sig64, "identity round-trip through the f64 helper");
+        coord.shutdown();
+    }
+
+    #[test]
     fn many_requests_all_answered_in_order_of_submission() {
         let coord = Coordinator::start(
-            || Ok(Box::new(NativeGftBackend::new(identity_plan(3), TransformDirection::Forward, 4, None)) as Box<dyn Backend>),
+            || identity_backend(3, 4),
             ServeConfig { max_batch: 4, ..Default::default() },
         )
         .unwrap();
@@ -302,12 +335,10 @@ mod tests {
 
     #[test]
     fn rejects_wrong_length() {
-        let coord = Coordinator::start(
-            || Ok(Box::new(NativeGftBackend::new(identity_plan(4), TransformDirection::Forward, 8, None)) as Box<dyn Backend>),
-            ServeConfig::default(),
-        )
-        .unwrap();
+        let coord =
+            Coordinator::start(|| identity_backend(4, 8), ServeConfig::default()).unwrap();
         assert!(coord.submit(vec![0.0; 3]).is_err());
+        assert!(coord.submit_blocking(vec![0.0; 5]).is_err());
     }
 
     #[test]
@@ -352,7 +383,7 @@ mod tests {
     #[test]
     fn shutdown_drains() {
         let coord = Coordinator::start(
-            || Ok(Box::new(NativeGftBackend::new(identity_plan(2), TransformDirection::Forward, 4, None)) as Box<dyn Backend>),
+            || identity_backend(2, 4),
             ServeConfig { max_batch: 4, ..Default::default() },
         )
         .unwrap();

@@ -8,6 +8,8 @@
 //! for its C implementation (Fig. 6), and the rust analogue of the Pallas
 //! kernel's batch-in-lanes mapping (DESIGN.md §3).
 
+use anyhow::bail;
+
 use super::chain::PlanArrays;
 use super::pool::{ExecConfig, WorkerPool};
 use super::schedule::CompiledPlan;
@@ -31,19 +33,25 @@ impl SignalBlock {
     }
 
     /// Build from `batch` signals, each of length `n` (signal-major input,
-    /// transposed into the internal layout).
-    pub fn from_signals(signals: &[Vec<f32>]) -> Self {
+    /// transposed into the internal layout). Errors on an empty batch or
+    /// ragged signal lengths — request paths (`serve::Coordinator::submit`)
+    /// surface this to the caller instead of panicking the process.
+    pub fn from_signals(signals: &[Vec<f32>]) -> crate::Result<Self> {
         let batch = signals.len();
-        assert!(batch > 0);
+        if batch == 0 {
+            bail!("empty signal batch");
+        }
         let n = signals[0].len();
         let mut block = SignalBlock::zeros(n, batch);
         for (b, sig) in signals.iter().enumerate() {
-            assert_eq!(sig.len(), n, "ragged batch");
+            if sig.len() != n {
+                bail!("ragged batch: signal {b} has length {} (expected {n})", sig.len());
+            }
             for (i, &v) in sig.iter().enumerate() {
                 block.data[i * batch + b] = v;
             }
         }
-        block
+        Ok(block)
     }
 
     /// Extract signal `b` (length-`n` vector).
@@ -172,12 +180,20 @@ pub fn apply_tchain_batch_f32(plan: &PlanArrays, block: &mut SignalBlock, invers
 /// `X ← Ū X` (G) or `X ← T̄ X` (T), on up to `threads` worker threads.
 /// Numerically identical to the sequential per-stage applies above — the
 /// schedule only reorders stages with disjoint supports.
+#[deprecated(
+    note = "use `plan::FastOperator::apply` with `Direction::Forward` and \
+            `ExecPolicy::Spawn` on a built `Plan`"
+)]
 pub fn apply_compiled_batch_f32(cp: &CompiledPlan, block: &mut SignalBlock, threads: usize) {
     cp.apply_batch(block, threads)
 }
 
 /// Reverse direction of [`apply_compiled_batch_f32`]: `X ← Ūᵀ X` (G, the
 /// forward GFT) or `X ← T̄⁻¹ X` (T).
+#[deprecated(
+    note = "use `plan::FastOperator::apply` with `Direction::Adjoint` and \
+            `ExecPolicy::Spawn` on a built `Plan`"
+)]
 pub fn apply_compiled_batch_f32_rev(cp: &CompiledPlan, block: &mut SignalBlock, threads: usize) {
     cp.apply_batch_rev(block, threads)
 }
@@ -186,6 +202,11 @@ pub fn apply_compiled_batch_f32_rev(cp: &CompiledPlan, block: &mut SignalBlock, 
 /// cache-blocked column tiles, dispatched to a persistent [`WorkerPool`]
 /// (no thread spawns per call). Bitwise identical to the sequential
 /// per-stage applies above.
+#[deprecated(
+    note = "use `plan::FastOperator::apply` with `Direction::Forward` and \
+            `ExecPolicy::Pool` on a built `Plan` (or \
+            `CompiledPlan::apply_batch_pooled` for a private pool)"
+)]
 pub fn apply_compiled_batch_f32_pooled(
     cp: &CompiledPlan,
     block: &mut SignalBlock,
@@ -197,6 +218,11 @@ pub fn apply_compiled_batch_f32_pooled(
 
 /// Reverse direction of [`apply_compiled_batch_f32_pooled`]: `X ← Ūᵀ X`
 /// (G, the forward GFT) or `X ← T̄⁻¹ X` (T).
+#[deprecated(
+    note = "use `plan::FastOperator::apply` with `Direction::Adjoint` and \
+            `ExecPolicy::Pool` on a built `Plan` (or \
+            `CompiledPlan::apply_batch_pooled_rev` for a private pool)"
+)]
 pub fn apply_compiled_batch_f32_pooled_rev(
     cp: &CompiledPlan,
     block: &mut SignalBlock,
@@ -241,12 +267,21 @@ mod tests {
     #[test]
     fn block_layout_roundtrip() {
         let signals = vec![vec![1.0f32, 2.0, 3.0], vec![4.0, 5.0, 6.0]];
-        let block = SignalBlock::from_signals(&signals);
+        let block = SignalBlock::from_signals(&signals).unwrap();
         assert_eq!(block.n, 3);
         assert_eq!(block.batch, 2);
         assert_eq!(block.signal(0), signals[0]);
         assert_eq!(block.signal(1), signals[1]);
         assert_eq!(block.row(1), &[2.0, 5.0]);
+    }
+
+    #[test]
+    fn from_signals_rejects_ragged_and_empty_input() {
+        let e = SignalBlock::from_signals(&[]).unwrap_err();
+        assert!(format!("{e:#}").contains("empty"), "{e:#}");
+        let ragged = vec![vec![1.0f32, 2.0], vec![3.0f32]];
+        let e = SignalBlock::from_signals(&ragged).unwrap_err();
+        assert!(format!("{e:#}").contains("ragged"), "{e:#}");
     }
 
     #[test]
@@ -259,7 +294,7 @@ mod tests {
         let signals: Vec<Vec<f32>> = (0..batch)
             .map(|_| (0..n).map(|_| rng.randn() as f32).collect())
             .collect();
-        let mut block = SignalBlock::from_signals(&signals);
+        let mut block = SignalBlock::from_signals(&signals).unwrap();
         apply_gchain_batch_f32(&plan, &mut block);
         for (b, sig) in signals.iter().enumerate() {
             let mut x: Vec<f64> = sig.iter().map(|&v| v as f64).collect();
@@ -279,7 +314,7 @@ mod tests {
         let plan = ch.to_plan();
         let signals: Vec<Vec<f32>> =
             (0..3).map(|_| (0..n).map(|_| rng.randn() as f32).collect()).collect();
-        let mut block = SignalBlock::from_signals(&signals);
+        let mut block = SignalBlock::from_signals(&signals).unwrap();
         apply_gchain_batch_f32(&plan, &mut block);
         apply_gchain_batch_f32_t(&plan, &mut block);
         for (b, sig) in signals.iter().enumerate() {
@@ -290,6 +325,7 @@ mod tests {
     }
 
     #[test]
+    #[allow(deprecated)] // the deprecated shims must keep working
     fn compiled_wrappers_roundtrip() {
         let mut rng = Rng64::new(85);
         let n = 12;
@@ -297,7 +333,7 @@ mod tests {
         let cp = ch.compile();
         let signals: Vec<Vec<f32>> =
             (0..3).map(|_| (0..n).map(|_| rng.randn() as f32).collect()).collect();
-        let mut block = SignalBlock::from_signals(&signals);
+        let mut block = SignalBlock::from_signals(&signals).unwrap();
         apply_compiled_batch_f32(&cp, &mut block, 2);
         apply_compiled_batch_f32_rev(&cp, &mut block, 2);
         for (b, sig) in signals.iter().enumerate() {
@@ -315,7 +351,7 @@ mod tests {
         let plan = ch.to_plan();
         let signals: Vec<Vec<f32>> =
             (0..4).map(|_| (0..n).map(|_| rng.randn() as f32).collect()).collect();
-        let mut block = SignalBlock::from_signals(&signals);
+        let mut block = SignalBlock::from_signals(&signals).unwrap();
         apply_tchain_batch_f32(&plan, &mut block, false);
         for (b, sig) in signals.iter().enumerate() {
             let mut x: Vec<f64> = sig.iter().map(|&v| v as f64).collect();
@@ -334,7 +370,7 @@ mod tests {
         let plan = ch.to_plan();
         let signals: Vec<Vec<f32>> =
             (0..3).map(|_| (0..n).map(|_| rng.randn() as f32).collect()).collect();
-        let mut block = SignalBlock::from_signals(&signals);
+        let mut block = SignalBlock::from_signals(&signals).unwrap();
         apply_tchain_batch_f32(&plan, &mut block, false);
         apply_tchain_batch_f32(&plan, &mut block, true);
         for (b, sig) in signals.iter().enumerate() {

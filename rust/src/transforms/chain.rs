@@ -159,6 +159,8 @@ impl GChain {
     /// Compile into a level-scheduled [`super::CompiledPlan`]: conflict-free
     /// layers of commuting butterflies with a multi-threaded executor. The
     /// compiled apply is bitwise identical to the sequential apply.
+    #[deprecated(note = "use `plan::Plan::from(&chain).build()` — the builder owns \
+                         scheduling and fusion options and yields a shareable `Arc<Plan>`")]
     pub fn compile(&self) -> super::schedule::CompiledPlan {
         super::schedule::CompiledPlan::from_gchain(self)
     }
@@ -175,6 +177,25 @@ impl GChain {
                     p.p1[k] as f64,
                     if p.kind[k] >= 0 { GKind::Rotation } else { GKind::Reflection },
                 )
+            })
+            .collect();
+        GChain { n: p.n, transforms }
+    }
+
+    /// Rebuild from a flat plan **without** [`GTransform::new`]'s
+    /// defensive renormalization: the f32 parameters widen to f64
+    /// bit-exactly, so re-narrowing yields the original plan bitwise.
+    /// This is the blessed conversion for the deprecated backend shims
+    /// (and any decoder), whose outputs must stay bit-identical to the
+    /// plan-arrays execution paths.
+    pub fn from_plan_exact(p: &PlanArrays) -> Self {
+        let transforms = (0..p.len())
+            .map(|k| GTransform {
+                i: p.idx_i[k] as usize,
+                j: p.idx_j[k] as usize,
+                c: p.p0[k] as f64,
+                s: p.p1[k] as f64,
+                kind: if p.kind[k] >= 0 { GKind::Rotation } else { GKind::Reflection },
             })
             .collect();
         GChain { n: p.n, transforms }
@@ -305,6 +326,8 @@ impl TChain {
     /// Compile into a level-scheduled [`super::CompiledPlan`] (see
     /// [`GChain::compile`]); the reverse direction of the compiled plan is
     /// the chain inverse `T̄⁻¹`.
+    #[deprecated(note = "use `plan::Plan::from(&chain).build()` — the builder owns \
+                         scheduling and fusion options and yields a shareable `Arc<Plan>`")]
     pub fn compile(&self) -> super::schedule::CompiledPlan {
         super::schedule::CompiledPlan::from_tchain(self)
     }
@@ -480,6 +503,17 @@ mod tests {
         for (u, v) in a.iter().zip(b.iter()) {
             assert!((u - v).abs() < 1e-5);
         }
+    }
+
+    #[test]
+    fn gchain_from_plan_exact_renarrows_bitwise() {
+        // plan -> from_plan_exact -> to_plan must reproduce the original
+        // f32 arrays exactly (no renormalization anywhere in the loop)
+        let mut rng = Rng64::new(73);
+        let ch = random_gchain(&mut rng, 10, 40);
+        let p = ch.to_plan();
+        let back = GChain::from_plan_exact(&p).to_plan();
+        assert_eq!(p, back, "exact widening must round-trip the f32 plan bitwise");
     }
 
     #[test]

@@ -17,6 +17,13 @@
 //! cache-blocking pass and the executors (spawn-per-apply baseline plus
 //! the pooled hot path) live in [`schedule`]; the persistent worker-pool
 //! runtime and its [`ExecConfig`] tunables live in [`pool`].
+//!
+//! The preferred execution surface over all of this is
+//! [`crate::plan`]: `Plan::from(&chain).build()` plus
+//! [`FastOperator::apply`](crate::plan::FastOperator::apply) with a
+//! [`Direction`](crate::plan::Direction) and an
+//! [`ExecPolicy`](crate::plan::ExecPolicy). The free
+//! `apply_compiled_batch_f32*` functions remain as deprecated shims.
 
 pub mod batch;
 mod chain;
@@ -25,10 +32,13 @@ pub mod pool;
 pub mod schedule;
 mod ttransform;
 
+#[allow(deprecated)] // deliberate: the deprecated shims stay re-exported
 pub use batch::{
     apply_compiled_batch_f32, apply_compiled_batch_f32_pooled, apply_compiled_batch_f32_pooled_rev,
-    apply_compiled_batch_f32_rev, apply_gchain_batch_f32, apply_gchain_batch_f32_t,
-    apply_tchain_batch_f32, SignalBlock,
+    apply_compiled_batch_f32_rev,
+};
+pub use batch::{
+    apply_gchain_batch_f32, apply_gchain_batch_f32_t, apply_tchain_batch_f32, SignalBlock,
 };
 pub use chain::{GChain, PlanArrays, TChain};
 pub use gtransform::{GKind, GTransform};

@@ -91,11 +91,12 @@ const F_SHEAR_SUB_I: i8 = 6;
 const F_SHEAR_ADD_J: i8 = 7;
 const F_SHEAR_SUB_J: i8 = 8;
 
-/// Stage budget of one fused superstage: consecutive layers are merged
-/// until their combined stage count would exceed this, keeping one
+/// Default stage budget of one fused superstage: consecutive layers are
+/// merged until their combined stage count would exceed this, keeping one
 /// superstage's coefficient slice (~17 B/stage on the f32 side) within
-/// L1-ish footprint while a column tile streams through it.
-const SUPERSTAGE_STAGES: usize = 2048;
+/// L1-ish footprint while a column tile streams through it. Overridable
+/// per plan via [`crate::plan::FuseOptions`].
+pub const DEFAULT_SUPERSTAGE_STAGES: usize = 2048;
 
 /// Narrowest column tile the pooled executor will split a batch into
 /// (unless the configured `tile_cols` is itself narrower): an 8-wide f32
@@ -164,6 +165,7 @@ impl FusedStream {
         p0f: &[f32],
         p1f: &[f32],
         rev: bool,
+        superstage_stages: usize,
     ) -> FusedStream {
         let g = op.len();
         let layers = layer_ptr.len().saturating_sub(1);
@@ -181,7 +183,7 @@ impl FusedStream {
         for lk in 0..layers {
             let l = if rev { layers - 1 - lk } else { lk };
             let width = layer_ptr[l + 1] - layer_ptr[l];
-            if in_super > 0 && in_super + width > SUPERSTAGE_STAGES {
+            if in_super > 0 && in_super + width > superstage_stages {
                 out.super_ptr.push(out.op.len());
                 in_super = 0;
             }
@@ -382,6 +384,18 @@ pub struct CompiledPlan {
 impl CompiledPlan {
     /// Compile a G-chain (exact `f64` coefficients).
     pub fn from_gchain(chain: &GChain) -> CompiledPlan {
+        Self::from_gchain_with(chain, true, DEFAULT_SUPERSTAGE_STAGES)
+    }
+
+    /// Compile a G-chain with explicit scheduling/fusion options: `level`
+    /// selects greedy level scheduling (`false` keeps the sequential
+    /// order, one stage per layer) and `superstage_stages` is the fusion
+    /// budget. The entry point behind [`crate::plan::PlanBuilder`].
+    pub fn from_gchain_with(
+        chain: &GChain,
+        level: bool,
+        superstage_stages: usize,
+    ) -> CompiledPlan {
         let stages: Vec<Stage> = chain
             .transforms
             .iter()
@@ -393,11 +407,21 @@ impl CompiledPlan {
                 p1: g.s,
             })
             .collect();
-        Self::build(chain.n, ChainKind::G, stages)
+        Self::build(chain.n, ChainKind::G, stages, level, superstage_stages)
     }
 
     /// Compile a T-chain (exact `f64` coefficients).
     pub fn from_tchain(chain: &TChain) -> CompiledPlan {
+        Self::from_tchain_with(chain, true, DEFAULT_SUPERSTAGE_STAGES)
+    }
+
+    /// Compile a T-chain with explicit scheduling/fusion options (see
+    /// [`CompiledPlan::from_gchain_with`]).
+    pub fn from_tchain_with(
+        chain: &TChain,
+        level: bool,
+        superstage_stages: usize,
+    ) -> CompiledPlan {
         let stages: Vec<Stage> = chain
             .transforms
             .iter()
@@ -411,7 +435,7 @@ impl CompiledPlan {
                 }
             })
             .collect();
-        Self::build(chain.n, ChainKind::T, stages)
+        Self::build(chain.n, ChainKind::T, stages, level, superstage_stages)
     }
 
     /// Compile a flat [`PlanArrays`] (the serving/AOT interchange format).
@@ -440,12 +464,22 @@ impl CompiledPlan {
                 Stage { i, j, op, p0: plan.p0[k] as f64, p1: plan.p1[k] as f64 }
             })
             .collect();
-        Self::build(plan.n, kind, stages)
+        Self::build(plan.n, kind, stages, true, DEFAULT_SUPERSTAGE_STAGES)
     }
 
     /// Greedy level scheduling + counting-sort into contiguous layers,
-    /// then fusion of the layers into the two direction streams.
-    fn build(n: usize, kind: ChainKind, stages: Vec<Stage>) -> CompiledPlan {
+    /// then fusion of the layers into the two direction streams. With
+    /// `level == false` the sequential order is kept (stage `k` in layer
+    /// `k`), which is still executed correctly by every engine — the
+    /// layered modes just find no parallelism.
+    fn build(
+        n: usize,
+        kind: ChainKind,
+        stages: Vec<Stage>,
+        level: bool,
+        superstage_stages: usize,
+    ) -> CompiledPlan {
+        let superstage_stages = superstage_stages.max(1);
         let g = stages.len();
         let mut earliest = vec![0usize; n.max(1)];
         let mut layer_of = vec![0usize; g];
@@ -461,7 +495,7 @@ impl CompiledPlan {
                 "paired stage with i == j == {} (only scalings may touch one coordinate)",
                 st.i
             );
-            let l = earliest[st.i].max(earliest[st.j]);
+            let l = if level { earliest[st.i].max(earliest[st.j]) } else { k };
             layer_of[k] = l;
             earliest[st.i] = l + 1;
             earliest[st.j] = l + 1;
@@ -499,8 +533,30 @@ impl CompiledPlan {
             max_width,
             mean_width: if layers == 0 { 0.0 } else { g as f64 / layers as f64 },
         };
-        let fwd = FusedStream::build(&layer_ptr, &idx_i, &idx_j, &op, &p0, &p1, &p0f, &p1f, false);
-        let rev = FusedStream::build(&layer_ptr, &idx_i, &idx_j, &op, &p0, &p1, &p0f, &p1f, true);
+        let fwd = FusedStream::build(
+            &layer_ptr,
+            &idx_i,
+            &idx_j,
+            &op,
+            &p0,
+            &p1,
+            &p0f,
+            &p1f,
+            false,
+            superstage_stages,
+        );
+        let rev = FusedStream::build(
+            &layer_ptr,
+            &idx_i,
+            &idx_j,
+            &op,
+            &p0,
+            &p1,
+            &p0f,
+            &p1f,
+            true,
+            superstage_stages,
+        );
         CompiledPlan { n, kind, stats, layer_ptr, idx_i, idx_j, op, p0f, p1f, fwd, rev }
     }
 
@@ -534,6 +590,27 @@ impl CompiledPlan {
         self.fwd.num_superstages()
     }
 
+    /// CSR offsets of the forward fused stream's superstages (superstage
+    /// `s` owns fused-stream slots `table[s]..table[s+1]`). Recorded in
+    /// the versioned plan artifact so external executors (the PJRT
+    /// superstage-offload path) can launch one kernel per superstage.
+    pub fn superstage_table(&self) -> Vec<usize> {
+        self.fwd.super_ptr.clone()
+    }
+
+    /// Flop count of one matrix–vector apply (6 per butterfly, 1 per
+    /// scaling, 2 per shear — paper §3.2).
+    pub fn flops(&self) -> usize {
+        self.op
+            .iter()
+            .map(|&op| match op {
+                OP_ROTATION | OP_REFLECTION => 6,
+                OP_SCALING => 1,
+                _ => 2,
+            })
+            .sum()
+    }
+
     /// Stage-slot range of layer `l`.
     pub fn layer_range(&self, l: usize) -> Range<usize> {
         self.layer_ptr[l]..self.layer_ptr[l + 1]
@@ -563,6 +640,24 @@ impl CompiledPlan {
     pub fn apply_vec_rev(&self, x: &mut [f64]) {
         assert_eq!(x.len(), self.n, "vector length mismatch");
         self.rev.apply_vec_f64(x);
+    }
+
+    // ---------------- f32 batched execution: sequential -----------------
+
+    /// Single-threaded batched apply on the calling thread: the fused
+    /// stream sweeps the whole block in one pass. This is the
+    /// [`ExecPolicy::Seq`](crate::plan::ExecPolicy) engine — bitwise
+    /// identical to the per-stage sequential apply (fusion only reorders
+    /// stages with disjoint supports).
+    pub fn apply_batch_inline(&self, block: &mut SignalBlock, rev: bool) {
+        assert_eq!(block.n, self.n, "plan/block dimension mismatch");
+        if self.is_empty() || block.batch == 0 {
+            return;
+        }
+        let batch = block.batch;
+        let stream = if rev { &self.rev } else { &self.fwd };
+        // SAFETY: exclusive &mut borrow of the block; single thread.
+        unsafe { stream.run_cols_f32(block.data.as_mut_ptr(), batch, 0, batch) };
     }
 
     // ---------------- f32 batched execution: pooled hot path ------------
@@ -944,6 +1039,7 @@ pub fn default_threads() -> usize {
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // unit tests drive the deprecated `compile` shim too
 mod tests {
     use super::*;
     use crate::cli::figures::{random_gplan, random_tplan};
@@ -1078,10 +1174,10 @@ mod tests {
             let signals: Vec<Vec<f32>> = (0..batch)
                 .map(|_| (0..n).map(|_| rng.randn() as f32).collect())
                 .collect();
-            let mut reference = SignalBlock::from_signals(&signals);
+            let mut reference = SignalBlock::from_signals(&signals).unwrap();
             apply_gchain_batch_f32(&plan, &mut reference);
             for threads in [1usize, 2, 4, 7] {
-                let mut got = SignalBlock::from_signals(&signals);
+                let mut got = SignalBlock::from_signals(&signals).unwrap();
                 cp.apply_batch(&mut got, threads);
                 assert_eq!(
                     reference.data, got.data,
@@ -1103,18 +1199,18 @@ mod tests {
             let signals: Vec<Vec<f32>> = (0..batch)
                 .map(|_| (0..n).map(|_| rng.randn() as f32).collect())
                 .collect();
-            let mut fwd_ref = SignalBlock::from_signals(&signals);
+            let mut fwd_ref = SignalBlock::from_signals(&signals).unwrap();
             apply_tchain_batch_f32(&plan, &mut fwd_ref, false);
-            let mut inv_ref = SignalBlock::from_signals(&signals);
+            let mut inv_ref = SignalBlock::from_signals(&signals).unwrap();
             apply_tchain_batch_f32(&plan, &mut inv_ref, true);
             for threads in [1usize, 4] {
-                let mut fwd = SignalBlock::from_signals(&signals);
+                let mut fwd = SignalBlock::from_signals(&signals).unwrap();
                 cp.apply_batch(&mut fwd, threads);
                 assert_eq!(
                     fwd_ref.data, fwd.data,
                     "T forward batch={batch} threads={threads} diverged"
                 );
-                let mut inv = SignalBlock::from_signals(&signals);
+                let mut inv = SignalBlock::from_signals(&signals).unwrap();
                 cp.apply_batch_rev(&mut inv, threads);
                 assert_eq!(
                     inv_ref.data, inv.data,
@@ -1139,15 +1235,15 @@ mod tests {
         let mut rng = Rng64::new(7107);
         let signals: Vec<Vec<f32>> =
             (0..2).map(|_| (0..n).map(|_| rng.randn() as f32).collect()).collect();
-        let mut inline = SignalBlock::from_signals(&signals);
+        let mut inline = SignalBlock::from_signals(&signals).unwrap();
         cp.apply_batch(&mut inline, 1);
         // batch 2 < 2·4 threads and 2 × 2048 ≥ the layer gate → layer mode
-        let mut par = SignalBlock::from_signals(&signals);
+        let mut par = SignalBlock::from_signals(&signals).unwrap();
         cp.apply_batch(&mut par, 4);
         assert_eq!(inline.data, par.data, "layer-parallel diverged (forward)");
-        let mut inline_rev = SignalBlock::from_signals(&signals);
+        let mut inline_rev = SignalBlock::from_signals(&signals).unwrap();
         cp.apply_batch_rev(&mut inline_rev, 1);
-        let mut par_rev = SignalBlock::from_signals(&signals);
+        let mut par_rev = SignalBlock::from_signals(&signals).unwrap();
         cp.apply_batch_rev(&mut par_rev, 4);
         assert_eq!(inline_rev.data, par_rev.data, "layer-parallel diverged (reverse)");
     }
@@ -1163,9 +1259,9 @@ mod tests {
         let cp = ch.compile();
         let mut rng = Rng64::new(7109);
         let sig: Vec<f32> = (0..4096).map(|_| rng.randn() as f32).collect();
-        let mut inline = SignalBlock::from_signals(&[sig.clone()]);
+        let mut inline = SignalBlock::from_signals(&[sig.clone()]).unwrap();
         cp.apply_batch(&mut inline, 1);
-        let mut two = SignalBlock::from_signals(&[sig.clone()]);
+        let mut two = SignalBlock::from_signals(&[sig.clone()]).unwrap();
         cp.apply_batch(&mut two, 2);
         assert_eq!(inline.data, two.data, "threads=2 batch=1 diverged");
         // a serial chain (max_width = 1) must clamp any thread request to
@@ -1178,9 +1274,9 @@ mod tests {
         let scp = serial.compile();
         assert_eq!(scp.stats().max_width, 1);
         let sig: Vec<f32> = (0..n).map(|_| rng.randn() as f32).collect();
-        let mut a = SignalBlock::from_signals(&[sig.clone()]);
+        let mut a = SignalBlock::from_signals(&[sig.clone()]).unwrap();
         scp.apply_batch(&mut a, 1);
-        let mut b = SignalBlock::from_signals(&[sig]);
+        let mut b = SignalBlock::from_signals(&[sig]).unwrap();
         scp.apply_batch(&mut b, 8);
         assert_eq!(a.data, b.data, "serial chain with threads=8 diverged");
     }
@@ -1201,15 +1297,15 @@ mod tests {
             let signals: Vec<Vec<f32>> = (0..batch)
                 .map(|_| (0..n).map(|_| rng.randn() as f32).collect())
                 .collect();
-            let mut fwd_ref = SignalBlock::from_signals(&signals);
+            let mut fwd_ref = SignalBlock::from_signals(&signals).unwrap();
             apply_gchain_batch_f32(&plan, &mut fwd_ref);
-            let mut fwd = SignalBlock::from_signals(&signals);
+            let mut fwd = SignalBlock::from_signals(&signals).unwrap();
             cp.apply_batch_pooled(&mut fwd, &pool, &cfg);
             assert_eq!(fwd_ref.data, fwd.data, "pooled fwd batch={batch} diverged");
             // reverse: compare against the spawn path's inline reverse
-            let mut rev_ref = SignalBlock::from_signals(&signals);
+            let mut rev_ref = SignalBlock::from_signals(&signals).unwrap();
             cp.apply_batch_rev(&mut rev_ref, 1);
-            let mut rev = SignalBlock::from_signals(&signals);
+            let mut rev = SignalBlock::from_signals(&signals).unwrap();
             cp.apply_batch_pooled_rev(&mut rev, &pool, &cfg);
             assert_eq!(rev_ref.data, rev.data, "pooled rev batch={batch} diverged");
         }
@@ -1229,14 +1325,14 @@ mod tests {
             let signals: Vec<Vec<f32>> = (0..batch)
                 .map(|_| (0..n).map(|_| rng.randn() as f32).collect())
                 .collect();
-            let mut fwd_ref = SignalBlock::from_signals(&signals);
+            let mut fwd_ref = SignalBlock::from_signals(&signals).unwrap();
             apply_tchain_batch_f32(&plan, &mut fwd_ref, false);
-            let mut fwd = SignalBlock::from_signals(&signals);
+            let mut fwd = SignalBlock::from_signals(&signals).unwrap();
             cp.apply_batch_pooled(&mut fwd, &pool, &cfg);
             assert_eq!(fwd_ref.data, fwd.data, "pooled T fwd batch={batch} diverged");
-            let mut inv_ref = SignalBlock::from_signals(&signals);
+            let mut inv_ref = SignalBlock::from_signals(&signals).unwrap();
             apply_tchain_batch_f32(&plan, &mut inv_ref, true);
-            let mut inv = SignalBlock::from_signals(&signals);
+            let mut inv = SignalBlock::from_signals(&signals).unwrap();
             cp.apply_batch_pooled_rev(&mut inv, &pool, &cfg);
             assert_eq!(inv_ref.data, inv.data, "pooled T inv batch={batch} diverged");
         }
@@ -1255,11 +1351,11 @@ mod tests {
         let cp = CompiledPlan::from_plan(&plan, ChainKind::G);
         let signals: Vec<Vec<f32>> =
             (0..7).map(|_| (0..n).map(|_| rng.randn() as f32).collect()).collect();
-        let mut reference = SignalBlock::from_signals(&signals);
+        let mut reference = SignalBlock::from_signals(&signals).unwrap();
         apply_gchain_batch_f32(&plan, &mut reference);
         for tile in [1usize, 3, 5, 64] {
             let cfg = ExecConfig { threads: 1, min_work: 1, layer_min_work: 1.0, tile_cols: tile };
-            let mut got = SignalBlock::from_signals(&signals);
+            let mut got = SignalBlock::from_signals(&signals).unwrap();
             cp.apply_batch_pooled(&mut got, &pool, &cfg);
             assert_eq!(reference.data, got.data, "tile={tile} diverged");
         }
@@ -1274,14 +1370,14 @@ mod tests {
         let cfg = ExecConfig { threads: 4, min_work: 1, layer_min_work: 1.0, tile_cols: 32 };
         let mut rng = Rng64::new(7113);
         let sig: Vec<f32> = (0..512).map(|_| rng.randn() as f32).collect();
-        let mut inline = SignalBlock::from_signals(&[sig.clone()]);
+        let mut inline = SignalBlock::from_signals(&[sig.clone()]).unwrap();
         cp.apply_batch(&mut inline, 1);
-        let mut pooled = SignalBlock::from_signals(&[sig.clone()]);
+        let mut pooled = SignalBlock::from_signals(&[sig.clone()]).unwrap();
         cp.apply_batch_pooled(&mut pooled, &pool, &cfg);
         assert_eq!(inline.data, pooled.data, "pooled layer mode diverged (forward)");
-        let mut inline_rev = SignalBlock::from_signals(&[sig.clone()]);
+        let mut inline_rev = SignalBlock::from_signals(&[sig.clone()]).unwrap();
         cp.apply_batch_rev(&mut inline_rev, 1);
-        let mut pooled_rev = SignalBlock::from_signals(&[sig]);
+        let mut pooled_rev = SignalBlock::from_signals(&[sig]).unwrap();
         cp.apply_batch_pooled_rev(&mut pooled_rev, &pool, &cfg);
         assert_eq!(inline_rev.data, pooled_rev.data, "pooled layer mode diverged (reverse)");
     }
@@ -1299,7 +1395,7 @@ mod tests {
                 assert!(sp[s] < sp[s + 1], "empty or non-monotone superstage {s}");
                 let size = sp[s + 1] - sp[s];
                 assert!(
-                    size <= SUPERSTAGE_STAGES.max(cp.stats().max_width),
+                    size <= DEFAULT_SUPERSTAGE_STAGES.max(cp.stats().max_width),
                     "superstage {s} over budget: {size}"
                 );
             }
@@ -1318,7 +1414,7 @@ mod tests {
         let cp = ch.compile();
         let signals: Vec<Vec<f32>> =
             (0..5).map(|_| (0..n).map(|_| rng.randn() as f32).collect()).collect();
-        let mut block = SignalBlock::from_signals(&signals);
+        let mut block = SignalBlock::from_signals(&signals).unwrap();
         cp.apply_batch(&mut block, 3);
         cp.apply_batch_rev(&mut block, 3);
         for (b, sig) in signals.iter().enumerate() {
@@ -1337,11 +1433,11 @@ mod tests {
         let mut x = vec![1.0, 2.0, 3.0, 4.0, 5.0];
         cp.apply_vec(&mut x);
         assert_eq!(x, vec![1.0, 2.0, 3.0, 4.0, 5.0]);
-        let mut block = SignalBlock::from_signals(&[vec![1.0f32; 5]]);
+        let mut block = SignalBlock::from_signals(&[vec![1.0f32; 5]]).unwrap();
         cp.apply_batch(&mut block, 4);
         assert_eq!(block.signal(0), vec![1.0f32; 5]);
         let pool = WorkerPool::new(1);
-        let mut block = SignalBlock::from_signals(&[vec![1.0f32; 5]]);
+        let mut block = SignalBlock::from_signals(&[vec![1.0f32; 5]]).unwrap();
         cp.apply_batch_pooled(&mut block, &pool, &ExecConfig::pooled());
         assert_eq!(block.signal(0), vec![1.0f32; 5]);
     }

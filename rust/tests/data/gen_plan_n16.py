@@ -1,0 +1,93 @@
+#!/usr/bin/env python3
+"""Generate the golden `.fastplan` fixture `plan_n16.fastplan`.
+
+Mirrors the version-1 artifact layout of `rust/src/plan/artifact.rs`
+byte-for-byte, for the fixed G-chain hard-coded in
+`rust/tests/integration_plan.rs::golden_fastplan_fixture_*` (n = 16,
+24 stages, three conflict-free layers, one fused superstage). The test
+asserts both that today's loader reads this exact file and that today's
+writer re-produces these exact bytes — pinning the format against
+accidental drift. Any intentional format change must bump
+`FORMAT_VERSION` and regenerate the fixture with this script.
+"""
+
+import struct
+from pathlib import Path
+
+MAGIC = b"FASTPLAN"
+VERSION = 1
+KIND_G = 0
+LEVEL = 1
+SUPERSTAGE_BUDGET = 2048
+
+OP_ROTATION = 0
+OP_REFLECTION = 1
+
+
+def golden_stages():
+    """(i, j, op, p0, p1) in application order — keep in sync with the
+    `golden_chain()` helper in integration_plan.rs."""
+    stages = []
+    for k in range(8):  # layer 0: disjoint neighbour rotations
+        stages.append((2 * k, 2 * k + 1, OP_ROTATION, 0.6, 0.8))
+    for k in range(8):  # layer 1: cross-half reflections
+        stages.append((k, k + 8, OP_REFLECTION, 0.8, -0.6))
+    for k in range(4):  # layer 2a: even-stride rotations
+        stages.append((4 * k, 4 * k + 2, OP_ROTATION, 0.28, 0.96))
+    for k in range(4):  # layer 2b: odd-stride rotations
+        stages.append((4 * k + 1, 4 * k + 3, OP_ROTATION, -0.6, 0.8))
+    return stages
+
+
+def fnv1a64(data: bytes) -> int:
+    h = 0xCBF29CE484222325
+    for b in data:
+        h ^= b
+        h = (h * 0x100000001B3) % (1 << 64)
+    return h
+
+
+def as_f32(v: float) -> bytes:
+    return struct.pack("<f", v)  # C double->float cast: round-to-nearest, like Rust `as f32`
+
+
+def main() -> None:
+    n = 16
+    stages = golden_stages()
+    g = len(stages)
+    # all three layers fit one superstage under the default budget
+    table = [0, g]
+
+    out = bytearray()
+    out += MAGIC
+    out += struct.pack("<I", VERSION)
+    out += bytes([KIND_G, LEVEL, 0, 0])
+    out += struct.pack("<Q", n)
+    out += struct.pack("<Q", g)
+    out += struct.pack("<Q", SUPERSTAGE_BUDGET)
+    out += struct.pack("<Q", len(table) - 1)
+    for i, _, _, _, _ in stages:
+        out += struct.pack("<I", i)
+    for _, j, _, _, _ in stages:
+        out += struct.pack("<I", j)
+    for _, _, op, _, _ in stages:
+        out += bytes([op])
+    for _, _, _, p0, _ in stages:
+        out += as_f32(p0)
+    for _, _, _, _, p1 in stages:
+        out += as_f32(p1)
+    for _, _, _, p0, _ in stages:
+        out += struct.pack("<d", p0)
+    for _, _, _, _, p1 in stages:
+        out += struct.pack("<d", p1)
+    for p in table:
+        out += struct.pack("<Q", p)
+    out += struct.pack("<Q", fnv1a64(bytes(out)))
+
+    path = Path(__file__).parent / "plan_n16.fastplan"
+    path.write_bytes(bytes(out))
+    print(f"wrote {path} ({len(out)} bytes, checksum over {len(out) - 8})")
+
+
+if __name__ == "__main__":
+    main()

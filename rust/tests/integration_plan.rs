@@ -1,0 +1,277 @@
+//! Integration tests of the unified `FastOperator` execution surface:
+//! `.fastplan` artifact round-trips (bitwise, both chain families, both
+//! directions, f32 and f64), load-error handling, the committed golden
+//! fixture pinning the on-disk format, and end-to-end serving from a
+//! reloaded artifact.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use fastes::cli::figures::{random_gplan, random_tplan};
+use fastes::linalg::Rng64;
+use fastes::plan::{Direction, ExecPolicy, FastOperator, Plan};
+use fastes::prop::{forall, PropConfig};
+use fastes::serve::{Backend, Coordinator, NativeGftBackend, ServeConfig, TransformDirection};
+use fastes::transforms::{ExecConfig, GChain, GKind, GTransform, SignalBlock};
+
+/// Unique scratch path for artifact round-trip tests.
+fn temp_plan_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("fastes-test-{}-{tag}.fastplan", std::process::id()))
+}
+
+/// The fixed chain behind `tests/data/plan_n16.fastplan` — keep in sync
+/// with `golden_stages()` in `tests/data/gen_plan_n16.py`. Built with
+/// struct literals (no renormalization) so the coefficient bits are
+/// exactly the literals the generator packs.
+fn golden_chain() -> GChain {
+    let mut ch = GChain::identity(16);
+    let rot = |i: usize, j: usize, c: f64, s: f64| GTransform {
+        i,
+        j,
+        c,
+        s,
+        kind: GKind::Rotation,
+    };
+    for k in 0..8 {
+        ch.transforms.push(rot(2 * k, 2 * k + 1, 0.6, 0.8));
+    }
+    for k in 0..8 {
+        ch.transforms.push(GTransform {
+            i: k,
+            j: k + 8,
+            c: 0.8,
+            s: -0.6,
+            kind: GKind::Reflection,
+        });
+    }
+    for k in 0..4 {
+        ch.transforms.push(rot(4 * k, 4 * k + 2, 0.28, 0.96));
+    }
+    for k in 0..4 {
+        ch.transforms.push(rot(4 * k + 1, 4 * k + 3, -0.6, 0.8));
+    }
+    ch
+}
+
+fn golden_fixture_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/data/plan_n16.fastplan")
+}
+
+#[test]
+fn golden_fastplan_fixture_loads_and_matches_writer() {
+    // 1. today's loader must read the committed artifact…
+    let loaded = Plan::load(golden_fixture_path()).expect("golden fixture must load");
+    assert_eq!(loaded.n(), 16);
+    assert_eq!(loaded.len(), 24);
+    assert_eq!(loaded.stats().layers, 3, "golden schedule shape drifted");
+    assert_eq!(loaded.num_superstages(), 1);
+    // 2. …recovering the exact chain…
+    let chain = golden_chain();
+    assert_eq!(loaded.as_gchain(), Some(&chain), "golden chain bits drifted");
+    // 3. …and today's writer must re-produce the exact committed bytes
+    let written = Plan::from(&chain).build().to_bytes();
+    let committed = std::fs::read(golden_fixture_path()).unwrap();
+    assert_eq!(
+        written, committed,
+        "Plan::to_bytes no longer matches the committed v1 fixture — \
+         if the format changed intentionally, bump FORMAT_VERSION and \
+         regenerate with tests/data/gen_plan_n16.py"
+    );
+    // 4. the loaded plan applies bitwise like the in-memory chain
+    let mut rng = Rng64::new(516);
+    let signals: Vec<Vec<f32>> =
+        (0..5).map(|_| (0..16).map(|_| rng.randn() as f32).collect()).collect();
+    for dir in [Direction::Forward, Direction::Adjoint] {
+        let mut want = SignalBlock::from_signals(&signals).unwrap();
+        chain.apply(&mut want, dir, &ExecPolicy::Seq).unwrap();
+        let mut got = SignalBlock::from_signals(&signals).unwrap();
+        loaded.apply(&mut got, dir, &ExecPolicy::Seq).unwrap();
+        assert_eq!(want.data, got.data, "golden plan apply diverged ({dir:?})");
+    }
+}
+
+#[test]
+fn prop_fastplan_roundtrip_is_bitwise_g_and_t() {
+    // chain -> Plan -> save -> load -> apply must match the original
+    // chain bitwise: both families, both directions, f32 blocks and f64
+    // vectors, across random shapes
+    let path = temp_plan_path("prop");
+    forall(
+        "fastplan save/load round-trip ≡ original chain",
+        PropConfig { cases: 12, max_size: 20, ..Default::default() },
+        |rng, size| {
+            let n = size.max(4);
+            let batch = 1 + rng.below(9);
+            let gch = random_gplan(n, 4 * n, rng);
+            let tch = random_tplan(n, 4 * n, rng);
+            let signals: Vec<Vec<f32>> = (0..batch)
+                .map(|_| (0..n).map(|_| rng.randn() as f32).collect())
+                .collect();
+            let x: Vec<f64> = (0..n).map(|_| rng.randn()).collect();
+            (gch, tch, signals, x)
+        },
+        |(gch, tch, signals, x)| {
+            let gplan = Plan::from(gch).build();
+            let tplan = Plan::from(tch).build();
+            for (label, plan) in [("G", &gplan), ("T", &tplan)] {
+                plan.save(&path).map_err(|e| format!("save: {e:#}"))?;
+                let back = Plan::load(&path).map_err(|e| format!("load: {e:#}"))?;
+                for dir in [Direction::Forward, Direction::Adjoint] {
+                    let mut a = SignalBlock::from_signals(signals).unwrap();
+                    let mut b = SignalBlock::from_signals(signals).unwrap();
+                    plan.apply(&mut a, dir, &ExecPolicy::Seq).unwrap();
+                    back.apply(&mut b, dir, &ExecPolicy::Seq).unwrap();
+                    if a.data != b.data {
+                        return Err(format!("{label} {dir:?}: f32 apply diverged"));
+                    }
+                    let mut u = x.clone();
+                    let mut v = x.clone();
+                    plan.apply_vec(&mut u, dir).unwrap();
+                    back.apply_vec(&mut v, dir).unwrap();
+                    if u != v {
+                        return Err(format!("{label} {dir:?}: f64 apply diverged"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn load_rejects_corrupted_and_mismatched_artifacts() {
+    let mut rng = Rng64::new(517);
+    let plan = Plan::from(random_gplan(12, 60, &mut rng)).build();
+    let good = plan.to_bytes();
+    let path = temp_plan_path("corrupt");
+
+    // corrupted header (magic)
+    let mut bad = good.clone();
+    bad[3] = b'?';
+    std::fs::write(&path, &bad).unwrap();
+    let e = format!("{:#}", Plan::load(&path).unwrap_err());
+    assert!(e.contains("bad magic"), "{e}");
+
+    // version mismatch
+    let mut bad = good.clone();
+    bad[8] = 7;
+    std::fs::write(&path, &bad).unwrap();
+    let e = format!("{:#}", Plan::load(&path).unwrap_err());
+    assert!(e.contains("unsupported fastplan version 7"), "{e}");
+
+    // short read / truncation (mid-payload and mid-header)
+    for cut in [good.len() - 5, 20] {
+        std::fs::write(&path, &good[..cut]).unwrap();
+        let e = format!("{:#}", Plan::load(&path).unwrap_err());
+        assert!(e.contains("truncated"), "cut at {cut}: {e}");
+    }
+
+    // flipped payload byte → checksum mismatch
+    let mut bad = good.clone();
+    bad[64] ^= 0x40;
+    std::fs::write(&path, &bad).unwrap();
+    let e = format!("{:#}", Plan::load(&path).unwrap_err());
+    assert!(e.contains("checksum mismatch"), "{e}");
+
+    // missing file
+    let _ = std::fs::remove_file(&path);
+    let e = format!("{:#}", Plan::load(&path).unwrap_err());
+    assert!(e.contains("cannot read plan"), "{e}");
+}
+
+#[test]
+fn saved_plan_serves_bitwise_identically_to_in_memory_plan() {
+    // the acceptance contract: a factored plan, saved and reloaded, must
+    // serve exactly the bytes the in-memory plan serves — pooled engine,
+    // real coordinator, interleaved requests
+    let n = 32;
+    let mut rng = Rng64::new(518);
+    let chain = random_gplan(n, 8 * n, &mut rng);
+    let mem_plan = Plan::from(&chain).build();
+    let path = temp_plan_path("serve");
+    mem_plan.save(&path).unwrap();
+    let disk_plan = Plan::load(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+
+    let eager = ExecConfig { threads: 3, min_work: 1, layer_min_work: 1.0, tile_cols: 2 };
+    let start = |plan: Arc<Plan>, cfg: ExecConfig| {
+        Coordinator::start(
+            move || {
+                Ok(Box::new(NativeGftBackend::with_policy(
+                    plan,
+                    TransformDirection::Forward,
+                    8,
+                    None,
+                    ExecPolicy::Pool(cfg),
+                )?) as Box<dyn Backend>)
+            },
+            ServeConfig { max_batch: 8, ..Default::default() },
+        )
+        .unwrap()
+    };
+    let mem = start(mem_plan, eager.clone());
+    let disk = start(disk_plan, eager);
+    for _ in 0..50 {
+        let sig: Vec<f32> = (0..n).map(|_| rng.randn() as f32).collect();
+        let a = mem.submit(sig.clone()).unwrap().wait().unwrap();
+        let b = disk.submit(sig).unwrap().wait().unwrap();
+        assert_eq!(a, b, "reloaded plan served different bytes");
+    }
+    assert_eq!(mem.shutdown().errors, 0);
+    assert_eq!(disk.shutdown().errors, 0);
+}
+
+#[test]
+fn factorization_plan_feeds_the_operator_surface() {
+    // factor -> .plan() -> FastOperator: the factored operator must
+    // round-trip a signal through Forward then Adjoint (Ū is orthonormal)
+    use fastes::factor::{SymFactorizer, SymOptions};
+    use fastes::graphs;
+    let n = 24;
+    let mut rng = Rng64::new(519);
+    let graph = graphs::community(n, &mut rng);
+    let l = graph.laplacian();
+    let f = SymFactorizer::new(&l, 160, SymOptions { max_sweeps: 1, ..Default::default() })
+        .run();
+    let plan = f.plan();
+    assert_eq!(plan.n(), n);
+    assert_eq!(FastOperator::flops(plan.as_ref()), f.chain.flops());
+    let x: Vec<f64> = (0..n).map(|_| rng.randn()).collect();
+    let mut y = x.clone();
+    plan.apply_vec(&mut y, Direction::Adjoint).unwrap();
+    plan.apply_vec(&mut y, Direction::Forward).unwrap();
+    for (a, b) in x.iter().zip(y.iter()) {
+        assert!((a - b).abs() < 1e-10, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn ragged_batches_error_through_the_public_surface() {
+    // SignalBlock::from_signals returns Err on ragged input…
+    let ragged = vec![vec![1.0f32, 2.0, 3.0], vec![4.0f32, 5.0]];
+    let e = SignalBlock::from_signals(&ragged).unwrap_err();
+    assert!(format!("{e:#}").contains("ragged"), "{e:#}");
+    // …and the serve request path rejects mis-sized signals as an error
+    // response instead of panicking the worker
+    let plan = Plan::from(GChain::identity(4)).build();
+    let coord = Coordinator::start(
+        move || {
+            Ok(Box::new(NativeGftBackend::with_policy(
+                plan,
+                TransformDirection::Forward,
+                4,
+                None,
+                ExecPolicy::Seq,
+            )?) as Box<dyn Backend>)
+        },
+        ServeConfig::default(),
+    )
+    .unwrap();
+    assert!(coord.submit(vec![0.0; 3]).is_err());
+    assert!(coord.submit_blocking(vec![0.0; 17]).is_err());
+    // well-formed requests still succeed afterwards
+    let ok = coord.submit(vec![1.0, 2.0, 3.0, 4.0]).unwrap().wait().unwrap();
+    assert_eq!(ok, vec![1.0, 2.0, 3.0, 4.0]);
+    coord.shutdown();
+}

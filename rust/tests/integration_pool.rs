@@ -3,6 +3,10 @@
 //! containment, and bitwise agreement of the pooled fused executor with
 //! the sequential apply through the public API and the serve coordinator.
 
+// the coordinator test deliberately drives the deprecated constructor
+// shims; the modern `with_policy` path is covered by integration_plan.rs
+#![allow(deprecated)]
+
 use std::collections::HashSet;
 use std::sync::Mutex;
 
@@ -31,7 +35,7 @@ fn pool_survives_1000_applies_without_thread_growth() {
     let cfg = eager_cfg(3, 2);
     let signals: Vec<Vec<f32>> =
         (0..8).map(|_| (0..n).map(|_| rng.randn() as f32).collect()).collect();
-    let mut reference = SignalBlock::from_signals(&signals);
+    let mut reference = SignalBlock::from_signals(&signals).unwrap();
     apply_gchain_batch_f32(&ch.to_plan(), &mut reference);
 
     let ids: Mutex<HashSet<std::thread::ThreadId>> = Mutex::new(HashSet::new());
@@ -43,7 +47,7 @@ fn pool_survives_1000_applies_without_thread_growth() {
         pool.run(2, &|_slot| {
             ids.lock().unwrap().insert(std::thread::current().id());
         });
-        let mut blk = SignalBlock::from_signals(&signals);
+        let mut blk = SignalBlock::from_signals(&signals).unwrap();
         cp.apply_batch_pooled(&mut blk, &pool, &cfg);
         if apply % 250 == 0 {
             assert_eq!(blk.data, reference.data, "apply {apply} diverged");
@@ -67,9 +71,9 @@ fn pool_drop_joins_and_leaves_results_intact() {
     let cp = ch.compile();
     let signals: Vec<Vec<f32>> =
         (0..16).map(|_| (0..n).map(|_| rng.randn() as f32).collect()).collect();
-    let mut reference = SignalBlock::from_signals(&signals);
+    let mut reference = SignalBlock::from_signals(&signals).unwrap();
     apply_gchain_batch_f32(&ch.to_plan(), &mut reference);
-    let mut blk = SignalBlock::from_signals(&signals);
+    let mut blk = SignalBlock::from_signals(&signals).unwrap();
     {
         let pool = WorkerPool::new(3);
         cp.apply_batch_pooled(&mut blk, &pool, &eager_cfg(4, 3));
@@ -98,9 +102,9 @@ fn panicked_job_does_not_poison_later_pooled_applies() {
     let cp = CompiledPlan::from_plan(&plan, ChainKind::T);
     let signals: Vec<Vec<f32>> =
         (0..9).map(|_| (0..n).map(|_| rng.randn() as f32).collect()).collect();
-    let mut reference = SignalBlock::from_signals(&signals);
+    let mut reference = SignalBlock::from_signals(&signals).unwrap();
     fastes::transforms::apply_tchain_batch_f32(&plan, &mut reference, false);
-    let mut blk = SignalBlock::from_signals(&signals);
+    let mut blk = SignalBlock::from_signals(&signals).unwrap();
     cp.apply_batch_pooled(&mut blk, &pool, &eager_cfg(3, 2));
     assert_eq!(blk.data, reference.data, "post-panic apply diverged");
 }
@@ -161,10 +165,10 @@ fn pooled_apply_handles_ragged_batches() {
         let signals: Vec<Vec<f32>> = (0..batch)
             .map(|_| (0..n).map(|_| rng.randn() as f32).collect())
             .collect();
-        let mut reference = SignalBlock::from_signals(&signals);
+        let mut reference = SignalBlock::from_signals(&signals).unwrap();
         apply_gchain_batch_f32(&plan, &mut reference);
         for tile in [1usize, 4, 7] {
-            let mut blk = SignalBlock::from_signals(&signals);
+            let mut blk = SignalBlock::from_signals(&signals).unwrap();
             cp.apply_batch_pooled(&mut blk, &pool, &eager_cfg(4, tile));
             assert_eq!(reference.data, blk.data, "batch={batch} tile={tile} diverged");
         }

@@ -33,7 +33,7 @@ fn random_block(rng: &mut Rng64, n: usize, batch: usize) -> SignalBlock {
     let signals: Vec<Vec<f32>> = (0..batch)
         .map(|_| (0..n).map(|_| rng.randn() as f32).collect())
         .collect();
-    SignalBlock::from_signals(&signals)
+    SignalBlock::from_signals(&signals).unwrap()
 }
 
 #[test]

@@ -3,6 +3,10 @@
 //! fixed-seed chains mixing rotations, reflections, scalings and shears —
 //! plus a coordinator concurrency test over the parallel compiled backend.
 
+// this suite intentionally exercises the deprecated constructor shims —
+// they must keep serving bitwise-identical answers until removal
+#![allow(deprecated)]
+
 use fastes::cli::figures::{random_gplan, random_tplan};
 use fastes::linalg::{Mat, Rng64};
 use fastes::serve::{Backend, Coordinator, NativeGftBackend, ServeConfig, TransformDirection};
@@ -117,7 +121,7 @@ fn golden_f32_batched_compiled_matches_dense() {
     let signals: Vec<Vec<f32>> =
         (0..batch).map(|_| (0..n).map(|_| rng.randn() as f32).collect()).collect();
     for threads in [1usize, 4] {
-        let mut block = SignalBlock::from_signals(&signals);
+        let mut block = SignalBlock::from_signals(&signals).unwrap();
         cp.apply_batch(&mut block, threads);
         for (b, sig) in signals.iter().enumerate() {
             let x: Vec<f64> = sig.iter().map(|&v| v as f64).collect();

@@ -1,6 +1,11 @@
 //! End-to-end serving integration: factored GFT plans through the
 //! coordinator, native and PJRT backends, correctness under load.
 
+// this suite intentionally exercises the deprecated constructor shims —
+// they must keep serving correct answers until removal (the modern
+// `with_policy` path is covered by integration_plan.rs)
+#![allow(deprecated)]
+
 use std::path::Path;
 
 use fastes::factor::{SymFactorizer, SymOptions};
