@@ -7,19 +7,70 @@ Fails (exit 1) when the pooled ns/stage of any size regresses more than
 the snapshot's `max_regression` factor — but only once the snapshot is
 calibrated (`calibrated: true`); until then the comparison is printed as
 advisory so the gate cannot fail on un-measured placeholder numbers.
+
+Once calibrated, the gate also refuses to pass silently on a broken
+input: a missing BENCH_apply.json or a bench artifact without the
+`kernel_isa` field (perf numbers are only comparable when we know which
+SIMD kernel produced them) is a hard failure with an actionable message.
 """
 
 import json
+import os
 import sys
 
 
 def main() -> int:
     bench_path, snap_path = sys.argv[1], sys.argv[2]
-    bench = json.load(open(bench_path))
     snap = json.load(open(snap_path))
     limit = float(snap.get("max_regression", 1.25))
     calibrated = bool(snap.get("calibrated", False))
     baseline = snap.get("pooled_ns_per_stage", {})
+
+    if not os.path.exists(bench_path):
+        msg = (
+            f"{bench_path} is missing — the bench smoke did not produce an artifact. "
+            "Run `fastes bench --json --sizes 64 --batch 8 --min-work 1 "
+            f"--out {bench_path}` (or check the 'Bench smoke' CI step logs)."
+        )
+        if calibrated:
+            print(f"ERROR: {msg}")
+            return 1
+        print(f"advisory (snapshot uncalibrated): {msg}")
+        return 0
+
+    bench = json.load(open(bench_path))
+
+    kernel = bench.get("kernel_isa")
+    if not kernel:
+        msg = (
+            f"{bench_path} lacks the 'kernel_isa' field — pooled ns/stage numbers are "
+            "only comparable against the snapshot when the dispatched SIMD kernel is "
+            "recorded. Re-run the bench with a fastes binary that includes the SIMD "
+            "dispatch layer (any build after the kernel_isa field landed)."
+        )
+        if calibrated:
+            print(f"ERROR: {msg}")
+            return 1
+        print(f"advisory (snapshot uncalibrated): {msg}")
+    kernel_comparable = True
+    if kernel:
+        print(f"kernel_isa: {kernel}")
+        snap_kernel = snap.get("kernel_isa")
+        if calibrated and not snap_kernel:
+            kernel_comparable = False
+            print(
+                "note: snapshot is calibrated but records no kernel_isa — cannot tell "
+                "whether this run's kernel matches the calibration, so the gate is "
+                "advisory (add kernel_isa to the snapshot when recalibrating)"
+            )
+        elif snap_kernel and snap_kernel != kernel:
+            kernel_comparable = False
+            print(
+                f"note: snapshot was calibrated on kernel_isa={snap_kernel}; "
+                f"this run dispatched {kernel} — ns/stage deltas reflect the kernel, "
+                "not a regression, so the gate is advisory for this run "
+                "(recalibrate the snapshot to re-arm it for this runner class)"
+            )
 
     failures = []
     for row in bench["results"]:
@@ -38,10 +89,13 @@ def main() -> int:
         if ratio > limit:
             failures.append(n)
 
-    if failures and calibrated:
+    if failures and calibrated and kernel_comparable:
         print(f"pooled ns/stage regressed beyond {limit:.2f}x for sizes {failures}")
         return 1
-    if failures:
+    if failures and not kernel_comparable:
+        print("regressions observed but the dispatched kernel differs from the "
+              "snapshot's — advisory only (recalibrate to re-arm)")
+    elif failures:
         print("regressions observed but snapshot is uncalibrated — advisory only")
     return 0
 

@@ -16,17 +16,42 @@ use crate::plan::{Direction, ExecPolicy, FastOperator, Plan};
 use crate::serve::{
     Backend, Coordinator, NativeGftBackend, PjrtGftBackend, ServeConfig, TransformDirection,
 };
-use crate::transforms::{ExecConfig, GChain, SignalBlock};
+use crate::transforms::{simd, ExecConfig, GChain, KernelIsa, SignalBlock};
+
+/// Parse the `--kernel auto|scalar|avx2|avx512|neon` flag: `auto` (the
+/// default) keeps the process default ([`simd::default_kernel`] —
+/// `FASTES_KERNEL`, else runtime detection); an explicit ISA must be
+/// supported on this host. A non-auto choice is also pinned as the
+/// process default so the config-less `Seq` engine honours it.
+fn kernel_from_args(a: &Args) -> crate::Result<Option<KernelIsa>> {
+    let name = a.get_str("kernel", "auto");
+    if name == "auto" {
+        return Ok(None);
+    }
+    match KernelIsa::from_name(&name) {
+        Some(isa) if isa.is_supported() => {
+            simd::set_default_kernel(isa);
+            Ok(Some(isa))
+        }
+        Some(isa) => bail!(
+            "--kernel {name}: the {} kernel is not supported on this host (available: {})",
+            isa.as_str(),
+            KernelIsa::available().iter().map(|k| k.as_str()).collect::<Vec<_>>().join("|")
+        ),
+        None => bail!("--kernel must be auto|scalar|avx2|avx512|neon (got {name})"),
+    }
+}
 
 /// Apply the common executor flags (`--threads`, `--min-work`,
-/// `--layer-min-work`, `--tile`) on top of `base` (which already honours
-/// `FASTES_*` environment overrides).
+/// `--layer-min-work`, `--tile`, `--kernel`) on top of `base` (which
+/// already honours `FASTES_*` environment overrides).
 fn exec_config_from_args_base(a: &Args, base: ExecConfig) -> crate::Result<ExecConfig> {
     Ok(ExecConfig {
         threads: a.get("threads", base.threads)?.max(1),
         min_work: a.get("min-work", base.min_work)?,
         layer_min_work: a.get("layer-min-work", base.layer_min_work)?,
         tile_cols: a.get("tile", base.tile_cols)?.max(1),
+        kernel: kernel_from_args(a)?.or(base.kernel),
     })
 }
 
@@ -39,7 +64,12 @@ fn exec_config_from_args(a: &Args) -> crate::Result<ExecConfig> {
 /// each engine its own tunable defaults under the shared flag overrides.
 fn exec_policy_from_args(a: &Args, exec: &str) -> crate::Result<ExecPolicy> {
     Ok(match exec {
-        "seq" => ExecPolicy::Seq,
+        "seq" => {
+            // Seq carries no config, but --kernel must still validate and
+            // pin the process default the config-less engine dispatches on
+            kernel_from_args(a)?;
+            ExecPolicy::Seq
+        }
         "spawn" => ExecPolicy::Spawn(exec_config_from_args_base(a, ExecConfig::spawn())?),
         "pool" => ExecPolicy::Pool(exec_config_from_args(a)?),
         other => bail!("--exec must be seq|spawn|pool (got {other})"),
@@ -286,9 +316,10 @@ pub fn serve(a: &Args) -> crate::Result<()> {
         "serving {requests} requests (backend={backend_kind}{}, batch={batch})…",
         if backend_kind == "native" {
             format!(
-                " exec={}/{}t",
+                " exec={}/{}t kernel={}",
                 policy.engine(),
-                policy.config().map_or(1, |c| c.threads)
+                policy.config().map_or(1, |c| c.threads),
+                policy.kernel_isa().as_str()
             )
         } else {
             String::new()
@@ -319,6 +350,31 @@ pub fn serve(a: &Args) -> crate::Result<()> {
     let m = coordinator.shutdown();
     println!("throughput: {:.0} req/s over {:.2}s", requests as f64 / elapsed, elapsed);
     println!("metrics: {}", m.line());
+    Ok(())
+}
+
+/// `fastes kernels` — report the SIMD kernel dispatch of this host:
+/// detected best ISA, resolved process default (env/CLI overrides
+/// applied) and every available kernel. CI asserts the native-runner
+/// default is non-scalar on x86_64 through this command.
+pub fn kernels(a: &Args) -> crate::Result<()> {
+    // honour --kernel so `fastes kernels --kernel scalar` previews a pin
+    let _ = kernel_from_args(a)?;
+    println!("arch: {}", std::env::consts::ARCH);
+    println!("detected: {}", KernelIsa::detect().as_str());
+    println!("default: {}", simd::default_kernel().as_str());
+    println!(
+        "available: {}",
+        KernelIsa::available().iter().map(|k| k.as_str()).collect::<Vec<_>>().join(" ")
+    );
+    println!(
+        "override: FASTES_KERNEL={}",
+        std::env::var("FASTES_KERNEL").unwrap_or_else(|_| "(unset)".into())
+    );
+    println!("lane widths: scalar=1 neon=4 avx2=8 avx512=16 (f32 lanes)");
+    println!(
+        "bitwise guarantee: every kernel is bit-identical to scalar (no FMA, no reassociation)"
+    );
     Ok(())
 }
 
@@ -415,6 +471,8 @@ pub fn bench(a: &Args) -> crate::Result<()> {
     let cfg = pool.config().expect("pool policy carries a config").clone();
     let spawn_cfg = spawn.config().expect("spawn policy carries a config").clone();
     let threads = cfg.threads;
+    let kernel_isa = cfg.kernel_isa();
+    println!("kernel ISA: {} (detected: {})", kernel_isa.as_str(), KernelIsa::detect().as_str());
     let mut entries = Vec::new();
 
     for &n in &sizes {
@@ -482,11 +540,16 @@ pub fn bench(a: &Args) -> crate::Result<()> {
         // FastOperator unification the "sequential" column times the
         // fused single-pass Seq engine, not the old per-stage apply —
         // cross-version comparisons of *_vs_sequential must check this
+        // `kernel_isa` records which SIMD kernel the run dispatched to —
+        // numbers from different kernels are comparable in correctness
+        // (bitwise-identical results) but not in speed
         let json = format!(
             "{{\n  \"bench\": \"apply\",\n  \"sequential_engine\": \"seq-fused\",\n  \
+             \"kernel_isa\": \"{}\",\n  \
              \"seed\": {seed},\n  \"alpha\": {alpha},\n  \
              \"batch\": {batch},\n  \"threads\": {threads},\n  \"tile_cols\": {},\n  \
              \"min_work\": {},\n  \"spawn_min_work\": {},\n  \"results\": [\n{}\n  ]\n}}\n",
+            kernel_isa.as_str(),
             cfg.tile_cols,
             cfg.min_work,
             spawn_cfg.min_work,

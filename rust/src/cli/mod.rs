@@ -14,7 +14,10 @@
 //!   superstages and report layer counts/depth plus sequential vs spawn
 //!   vs pooled apply timings.
 //! * `bench` — machine-readable apply benchmark (sequential vs spawn vs
-//!   pooled; `--json` writes `BENCH_apply.json`).
+//!   pooled; `--json` writes `BENCH_apply.json` incl. the dispatched
+//!   `kernel_isa`).
+//! * `kernels` — report the SIMD kernel dispatch of this host (detected
+//!   / default / available ISAs).
 //! * `eigen` — eigendecomposition smoke (substrate sanity).
 //! * `bench-apply` — quick butterfly-vs-dense apply timing.
 
@@ -95,6 +98,7 @@ pub fn run(args: Args) -> crate::Result<()> {
         "serve" => commands::serve(&args),
         "schedule" => commands::schedule(&args),
         "bench" => commands::bench(&args),
+        "kernels" => commands::kernels(&args),
         "eigen" => commands::eigen(&args),
         "bench-apply" => commands::bench_apply(&args),
         "help" | "--help" | "-h" => {
@@ -130,17 +134,20 @@ COMMANDS
                        artifact instead of refactorizing)
                        [--exec pool|spawn|seq] [--threads T]
                        [--min-work W] [--layer-min-work W] [--tile C]
+                       [--kernel auto|scalar|avx2|avx512|neon]
                        (tuning flags reach the selected ExecPolicy engine;
                        --scheduled is the legacy alias for --exec spawn)
   schedule             level-schedule a chain, report layers/depth/
                        superstages and time sequential vs spawn vs pooled
                        apply [--n N] [--alpha A] [--batch B] [--threads T]
                        [--min-work W] [--layer-min-work W] [--tile C]
-                       [--seed S]
+                       [--kernel K] [--seed S]
   bench                machine-readable apply bench: sequential vs spawn
-                       vs pooled (ns/stage, GB/s)
+                       vs pooled (ns/stage, GB/s; records kernel_isa)
                        [--sizes a,b,c] [--batch B] [--alpha A] [--seed S]
-                       [--threads T] [--json] [--out PATH]
+                       [--threads T] [--kernel K] [--json] [--out PATH]
+  kernels              report SIMD kernel dispatch: detected / default /
+                       available ISAs (FASTES_KERNEL and --kernel pin it)
   eigen                symmetric eigensolver smoke [--n N] [--seed S]
   bench-apply          butterfly vs dense apply timing [--n N] [--alpha A]
   help                 this text

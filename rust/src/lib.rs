@@ -51,11 +51,18 @@
 //! ([`transforms::pool`]): parked workers claim `(n, tile_cols)` column
 //! tiles from an atomic cursor and stream each tile through the whole
 //! fused plan while it is L1/L2-resident — no thread spawns on the
-//! request path. The reordering only permutes commuting stages, so every
-//! parallel apply is **bitwise identical** to the sequential one; the
-//! serving backend ([`serve::NativeGftBackend`]) runs pooled by default
-//! (`fastes serve --exec pool`), and `fastes schedule` / `fastes bench
-//! --json` report schedule shapes and measured speedups.
+//! request path. The per-stage inner loops run on hand-vectorized
+//! AVX-512/AVX2/NEON kernels with runtime ISA dispatch and a scalar
+//! fallback ([`transforms::simd`]; `FASTES_KERNEL` / `--kernel`
+//! override), over tiles packed into contiguous per-thread scratch. The
+//! reordering only permutes commuting stages and every SIMD lane
+//! performs the exact scalar operation sequence (no FMA), so every
+//! engine × kernel combination is **bitwise identical** to the
+//! sequential scalar apply — enforced by the cross-engine conformance
+//! suite (`rust/tests/conformance.rs`). The serving backend
+//! ([`serve::NativeGftBackend`]) runs pooled by default (`fastes serve
+//! --exec pool`), and `fastes schedule` / `fastes bench --json` report
+//! schedule shapes, measured speedups and the dispatched `kernel_isa`.
 //!
 //! ## Layering (three-layer AOT architecture)
 //!

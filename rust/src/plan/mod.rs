@@ -587,6 +587,11 @@ mod tests {
         (0..batch).map(|_| (0..n).map(|_| rng.randn() as f32).collect()).collect()
     }
 
+    /// Eager thresholds so the parallel engines engage at test sizes.
+    fn eager_cfg(tile_cols: usize) -> ExecConfig {
+        ExecConfig { threads: 3, min_work: 1, layer_min_work: 1.0, tile_cols, kernel: None }
+    }
+
     #[test]
     fn builder_produces_working_plan() {
         let mut rng = Rng64::new(4101);
@@ -607,7 +612,7 @@ mod tests {
         let ch = random_gplan(n, 6 * n, &mut rng);
         let plan = Plan::from(&ch).build();
         let sigs = signals(&mut rng, n, 13);
-        let eager = ExecConfig { threads: 3, min_work: 1, layer_min_work: 1.0, tile_cols: 3 };
+        let eager = eager_cfg(3);
         for dir in [Direction::Forward, Direction::Adjoint] {
             let mut want = SignalBlock::from_signals(&sigs).unwrap();
             ch.apply(&mut want, dir, &ExecPolicy::Seq).unwrap();
@@ -635,7 +640,7 @@ mod tests {
         let ch = random_tplan(n, 8 * n, &mut rng);
         let plan = Plan::from(&ch).build();
         let sigs = signals(&mut rng, n, 7);
-        let eager = ExecConfig { threads: 3, min_work: 1, layer_min_work: 1.0, tile_cols: 2 };
+        let eager = eager_cfg(2);
         for dir in [Direction::Forward, Direction::INVERSE] {
             let mut want = SignalBlock::from_signals(&sigs).unwrap();
             ch.apply(&mut want, dir, &ExecPolicy::Seq).unwrap();

@@ -7,7 +7,7 @@
 //! latency-critical pooled path and a debugging sequential path from the
 //! same object.
 
-use crate::transforms::ExecConfig;
+use crate::transforms::{ExecConfig, KernelIsa};
 
 /// Which execution engine a [`super::FastOperator::apply`] call uses.
 ///
@@ -66,6 +66,20 @@ impl ExecPolicy {
             ExecPolicy::Spawn(cfg) | ExecPolicy::Pool(cfg) => Some(cfg),
         }
     }
+
+    /// The SIMD kernel ISA applies run with under this policy:
+    /// [`ExecPolicy::Seq`] uses the process default
+    /// ([`crate::transforms::simd::default_kernel`] — `FASTES_KERNEL` /
+    /// `--kernel`, else runtime detection), the config-carrying engines
+    /// resolve their own [`ExecConfig::kernel`] pin. Reported by serve
+    /// metrics and `fastes bench --json` as `kernel_isa`; every kernel is
+    /// bitwise identical, so this never affects results.
+    pub fn kernel_isa(&self) -> KernelIsa {
+        match self {
+            ExecPolicy::Seq => crate::transforms::simd::default_kernel(),
+            ExecPolicy::Spawn(cfg) | ExecPolicy::Pool(cfg) => cfg.kernel_isa(),
+        }
+    }
 }
 
 impl Default for ExecPolicy {
@@ -92,5 +106,15 @@ mod tests {
         assert!(ExecPolicy::Seq.config().is_none());
         assert_eq!(ExecPolicy::pool().config(), Some(&ExecConfig::pooled()));
         assert_eq!(ExecPolicy::spawn().config(), Some(&ExecConfig::spawn()));
+    }
+
+    #[test]
+    fn kernel_isa_is_resolved_for_every_policy() {
+        // Seq follows the process default; config-carrying engines honour
+        // an explicit pin and never resolve to an unsupported ISA
+        assert!(ExecPolicy::Seq.kernel_isa().is_supported());
+        assert!(ExecPolicy::pool().kernel_isa().is_supported());
+        let pinned = ExecPolicy::Pool(ExecConfig::pooled().with_kernel(Some(KernelIsa::Scalar)));
+        assert_eq!(pinned.kernel_isa(), KernelIsa::Scalar);
     }
 }

@@ -6,7 +6,7 @@ use anyhow::bail;
 
 use crate::plan::{Direction, ExecPolicy, FastOperator, Plan};
 use crate::runtime::{ArtifactKind, ArtifactStore};
-use crate::transforms::{batch::SignalBlock, ChainKind, ExecConfig, GChain, PlanArrays};
+use crate::transforms::{batch::SignalBlock, ChainKind, PlanArrays};
 
 /// Which direction of the transform the backend serves.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -32,6 +32,12 @@ pub trait Backend {
     fn forward(&mut self, block: &mut SignalBlock) -> crate::Result<()>;
     /// Diagnostic name.
     fn name(&self) -> &str;
+    /// SIMD kernel ISA the backend's applies dispatch to (`"n/a"` for
+    /// backends that do not run the native kernels). Recorded in serve
+    /// metrics so deployments can see which kernel actually serves.
+    fn kernel_isa(&self) -> &'static str {
+        "n/a"
+    }
 }
 
 /// Native rust butterfly fast path (the Fig.-6 "C implementation"
@@ -70,77 +76,6 @@ impl NativeGftBackend {
             bail!("filter direction needs a length-{} diagonal", plan.n());
         }
         Ok(NativeGftBackend { plan, policy, direction, max_batch, filter })
-    }
-
-    /// New backend over a G-chain plan (sequential apply).
-    #[deprecated(note = "build an `Arc<Plan>` with `Plan::from(&chain).build()` and use \
-                         `NativeGftBackend::with_policy` with `ExecPolicy::Seq`")]
-    pub fn new(
-        plan: PlanArrays,
-        direction: TransformDirection,
-        max_batch: usize,
-        filter: Option<Vec<f32>>,
-    ) -> Self {
-        Self::from_arrays(plan, direction, max_batch, filter, ExecPolicy::Seq)
-    }
-
-    /// New backend with an explicit execution strategy: when `scheduled`,
-    /// the plan is compiled into conflict-free layers at construction time
-    /// and applied with up to `threads` spawned workers per batch.
-    #[deprecated(note = "use `NativeGftBackend::with_policy` with `ExecPolicy::Seq` or \
-                         `ExecPolicy::Spawn`")]
-    pub fn with_schedule(
-        plan: PlanArrays,
-        direction: TransformDirection,
-        max_batch: usize,
-        filter: Option<Vec<f32>>,
-        scheduled: bool,
-        threads: usize,
-    ) -> Self {
-        let policy = if scheduled {
-            ExecPolicy::Spawn(ExecConfig::spawn().with_threads(threads))
-        } else {
-            ExecPolicy::Seq
-        };
-        Self::from_arrays(plan, direction, max_batch, filter, policy)
-    }
-
-    /// New backend on the persistent worker pool: the plan is compiled
-    /// (levels + fused superstages) at construction time and every apply
-    /// runs cache-blocked on the process-wide pool — no thread spawns on
-    /// the request path.
-    #[deprecated(note = "use `NativeGftBackend::with_policy` with `ExecPolicy::Pool`")]
-    pub fn with_pool(
-        plan: PlanArrays,
-        direction: TransformDirection,
-        max_batch: usize,
-        filter: Option<Vec<f32>>,
-        cfg: ExecConfig,
-    ) -> Self {
-        Self::from_arrays(plan, direction, max_batch, filter, ExecPolicy::Pool(cfg))
-    }
-
-    /// Shim body of the deprecated constructors: widen the f32 arrays to
-    /// an exact G-chain (lossless) and build a plan. Panics like the old
-    /// constructors did on a bad filter.
-    fn from_arrays(
-        arrays: PlanArrays,
-        direction: TransformDirection,
-        max_batch: usize,
-        filter: Option<Vec<f32>>,
-        policy: ExecPolicy,
-    ) -> Self {
-        if direction == TransformDirection::Filter {
-            assert!(
-                filter.as_ref().is_some_and(|h| h.len() == arrays.n),
-                "filter length mismatch"
-            );
-        }
-        // exact widening (no renormalization) keeps the shims' output
-        // bitwise-identical to the old plan-arrays execution paths
-        let plan = Plan::from(GChain::from_plan_exact(&arrays)).build();
-        Self::with_policy(plan, direction, max_batch, filter, policy)
-            .expect("validated above")
     }
 
     /// The shared plan this backend serves.
@@ -232,6 +167,10 @@ impl Backend for NativeGftBackend {
             ExecPolicy::Pool(_) => "native-gft-pooled",
         }
     }
+
+    fn kernel_isa(&self) -> &'static str {
+        self.policy.kernel_isa().as_str()
+    }
 }
 
 /// PJRT-artifact backend: executes the AOT-compiled JAX/Pallas program.
@@ -309,13 +248,12 @@ impl Backend for PjrtGftBackend {
 }
 
 #[cfg(test)]
-#[allow(deprecated)] // the deprecated constructor shims are under test too
 mod tests {
     use super::*;
     use crate::linalg::Rng64;
-    use crate::transforms::{GKind, GTransform};
+    use crate::transforms::{ExecConfig, GChain, GKind, GTransform};
 
-    fn random_plan(n: usize, g: usize, seed: u64) -> PlanArrays {
+    fn random_plan(n: usize, g: usize, seed: u64) -> Arc<Plan> {
         let mut rng = Rng64::new(seed);
         let mut ch = GChain::identity(n);
         for _ in 0..g {
@@ -325,14 +263,24 @@ mod tests {
             let kind = if rng.bernoulli(0.5) { GKind::Rotation } else { GKind::Reflection };
             ch.transforms.push(GTransform::new(i, j, th.cos(), th.sin(), kind));
         }
-        ch.to_plan()
+        Plan::from(ch).build()
+    }
+
+    fn seq_backend(
+        plan: &Arc<Plan>,
+        direction: TransformDirection,
+        max_batch: usize,
+        filter: Option<Vec<f32>>,
+    ) -> NativeGftBackend {
+        let plan = Arc::clone(plan);
+        NativeGftBackend::with_policy(plan, direction, max_batch, filter, ExecPolicy::Seq).unwrap()
     }
 
     #[test]
     fn native_forward_then_inverse_is_identity() {
         let plan = random_plan(8, 20, 601);
-        let mut fwd = NativeGftBackend::new(plan.clone(), TransformDirection::Forward, 4, None);
-        let mut inv = NativeGftBackend::new(plan, TransformDirection::Inverse, 4, None);
+        let mut fwd = seq_backend(&plan, TransformDirection::Forward, 4, None);
+        let mut inv = seq_backend(&plan, TransformDirection::Inverse, 4, None);
         let mut rng = Rng64::new(602);
         let sig: Vec<f32> = (0..8).map(|_| rng.randn() as f32).collect();
         let mut block = SignalBlock::from_signals(&vec![sig.clone(); 4]).unwrap();
@@ -346,12 +294,7 @@ mod tests {
     #[test]
     fn filter_all_ones_is_identity() {
         let plan = random_plan(6, 15, 603);
-        let mut f = NativeGftBackend::new(
-            plan,
-            TransformDirection::Filter,
-            2,
-            Some(vec![1.0; 6]),
-        );
+        let mut f = seq_backend(&plan, TransformDirection::Filter, 2, Some(vec![1.0; 6]));
         let sig: Vec<f32> = (0..6).map(|i| i as f32).collect();
         let mut block = SignalBlock::from_signals(&vec![sig.clone(); 2]).unwrap();
         f.forward(&mut block).unwrap();
@@ -361,118 +304,50 @@ mod tests {
     }
 
     #[test]
-    fn scheduled_backend_matches_sequential() {
+    fn every_policy_serves_identical_answers() {
+        // same plan, every engine, every direction: the served responses
+        // must agree bitwise (scheduling/fusion only reorder commuting
+        // stages; SIMD kernels are bitwise-identical per element)
         let mut rng = Rng64::new(606);
-        let plan = random_plan(16, 120, 605);
+        let plan = random_plan(16, 400, 605);
         let signals: Vec<Vec<f32>> =
             (0..6).map(|_| (0..16).map(|_| rng.randn() as f32).collect()).collect();
         let h: Vec<f32> = (0..16).map(|i| 1.0 / (1.0 + i as f32)).collect();
-        for direction in
-            [TransformDirection::Forward, TransformDirection::Inverse, TransformDirection::Filter]
-        {
-            let filter =
-                (direction == TransformDirection::Filter).then(|| h.clone());
-            let mut seq = NativeGftBackend::new(plan.clone(), direction, 6, filter.clone());
-            let mut sched =
-                NativeGftBackend::with_schedule(plan.clone(), direction, 6, filter, true, 4);
-            assert_eq!(sched.name(), "native-gft-scheduled");
-            let mut a = SignalBlock::from_signals(&signals).unwrap();
-            let mut b = SignalBlock::from_signals(&signals).unwrap();
-            seq.forward(&mut a).unwrap();
-            sched.forward(&mut b).unwrap();
-            assert_eq!(a.data, b.data, "direction {direction:?} diverged");
-        }
-    }
-
-    #[test]
-    fn pooled_backend_matches_sequential_bitwise() {
-        // the pooled fast path must serve bit-identical answers to the
-        // sequential backend in every direction (fusion only reorders
-        // stages with disjoint supports)
-        let mut rng = Rng64::new(608);
-        let plan = random_plan(16, 400, 607);
-        let signals: Vec<Vec<f32>> =
-            (0..6).map(|_| (0..16).map(|_| rng.randn() as f32).collect()).collect();
-        let h: Vec<f32> = (0..16).map(|i| 1.0 / (1.0 + i as f32)).collect();
-        // tiny thresholds so the pooled parallel path really engages
-        let cfg = ExecConfig { threads: 3, min_work: 1, layer_min_work: 1.0, tile_cols: 2 };
+        // tiny thresholds so the parallel paths really engage
+        let cfg =
+            ExecConfig { threads: 3, min_work: 1, layer_min_work: 1.0, tile_cols: 2, kernel: None };
         for direction in
             [TransformDirection::Forward, TransformDirection::Inverse, TransformDirection::Filter]
         {
             let filter = (direction == TransformDirection::Filter).then(|| h.clone());
-            let mut seq = NativeGftBackend::new(plan.clone(), direction, 6, filter.clone());
-            let mut pooled =
-                NativeGftBackend::with_pool(plan.clone(), direction, 6, filter, cfg.clone());
-            assert_eq!(pooled.name(), "native-gft-pooled");
+            let mut seq = seq_backend(&plan, direction, 6, filter.clone());
             let mut a = SignalBlock::from_signals(&signals).unwrap();
-            let mut b = SignalBlock::from_signals(&signals).unwrap();
             seq.forward(&mut a).unwrap();
-            pooled.forward(&mut b).unwrap();
-            assert_eq!(a.data, b.data, "direction {direction:?} diverged");
+            for (policy, name) in [
+                (ExecPolicy::Spawn(cfg.clone().with_threads(4)), "native-gft-scheduled"),
+                (ExecPolicy::Pool(cfg.clone()), "native-gft-pooled"),
+            ] {
+                let mut engine = NativeGftBackend::with_policy(
+                    Arc::clone(&plan),
+                    direction,
+                    6,
+                    filter.clone(),
+                    policy,
+                )
+                .unwrap();
+                assert_eq!(engine.name(), name);
+                let mut b = SignalBlock::from_signals(&signals).unwrap();
+                engine.forward(&mut b).unwrap();
+                assert_eq!(a.data, b.data, "{name} direction {direction:?} diverged");
+            }
         }
     }
 
     #[test]
-    fn with_policy_matches_deprecated_shims_bitwise() {
-        // one plan, four constructions: the new policy constructor must
-        // serve exactly what each legacy shim serves
-        let mut rng = Rng64::new(609);
-        let arrays = random_plan(12, 200, 610);
-        // widen exactly like the shims do (no renormalization)
-        let chain = GChain::from_plan_exact(&arrays);
-        let plan = crate::plan::Plan::from(&chain).build();
-        let signals: Vec<Vec<f32>> =
-            (0..5).map(|_| (0..12).map(|_| rng.randn() as f32).collect()).collect();
-        let cfg = ExecConfig { threads: 2, min_work: 1, layer_min_work: 1.0, tile_cols: 2 };
-        let cases: Vec<(Box<dyn Backend>, Box<dyn Backend>)> = vec![
-            (
-                Box::new(NativeGftBackend::new(
-                    arrays.clone(),
-                    TransformDirection::Forward,
-                    5,
-                    None,
-                )),
-                Box::new(
-                    NativeGftBackend::with_policy(
-                        plan.clone(),
-                        TransformDirection::Forward,
-                        5,
-                        None,
-                        ExecPolicy::Seq,
-                    )
-                    .unwrap(),
-                ),
-            ),
-            (
-                Box::new(NativeGftBackend::with_pool(
-                    arrays.clone(),
-                    TransformDirection::Inverse,
-                    5,
-                    None,
-                    cfg.clone(),
-                )),
-                Box::new(
-                    NativeGftBackend::with_policy(
-                        plan.clone(),
-                        TransformDirection::Inverse,
-                        5,
-                        None,
-                        ExecPolicy::Pool(cfg.clone()),
-                    )
-                    .unwrap(),
-                ),
-            ),
-        ];
-        for (mut old, mut new) in cases {
-            let mut a = SignalBlock::from_signals(&signals).unwrap();
-            let mut b = SignalBlock::from_signals(&signals).unwrap();
-            old.forward(&mut a).unwrap();
-            new.forward(&mut b).unwrap();
-            assert_eq!(a.data, b.data, "{} vs {} diverged", old.name(), new.name());
-        }
+    fn with_policy_validates_inputs() {
         // T-chain plans are rejected
         let t = crate::transforms::TChain::identity(4);
-        let tp = crate::plan::Plan::from(t).build();
+        let tp = Plan::from(t).build();
         assert!(NativeGftBackend::with_policy(
             tp,
             TransformDirection::Forward,
@@ -482,6 +357,7 @@ mod tests {
         )
         .is_err());
         // filter validation errors instead of panicking
+        let plan = random_plan(12, 40, 610);
         assert!(NativeGftBackend::with_policy(
             plan,
             TransformDirection::Filter,
@@ -493,14 +369,17 @@ mod tests {
     }
 
     #[test]
+    fn backend_reports_kernel_isa() {
+        let plan = random_plan(8, 20, 611);
+        let b = seq_backend(&plan, TransformDirection::Forward, 2, None);
+        let isa = crate::transforms::simd::default_kernel().as_str();
+        assert_eq!(b.kernel_isa(), isa, "backend must report the dispatched kernel");
+    }
+
+    #[test]
     fn filter_zero_annihilates() {
         let plan = random_plan(5, 10, 604);
-        let mut f = NativeGftBackend::new(
-            plan,
-            TransformDirection::Filter,
-            1,
-            Some(vec![0.0; 5]),
-        );
+        let mut f = seq_backend(&plan, TransformDirection::Filter, 1, Some(vec![0.0; 5]));
         let mut block = SignalBlock::from_signals(&[vec![1.0, -2.0, 3.0, 0.5, 4.0]]).unwrap();
         f.forward(&mut block).unwrap();
         for v in block.signal(0) {

@@ -14,6 +14,9 @@ struct Inner {
     batch_sizes: Vec<usize>,
     completed: u64,
     errors: u64,
+    /// SIMD kernel ISA the serving backend dispatches to (set once by the
+    /// worker at startup; `None` until a backend reports in).
+    kernel_isa: Option<&'static str>,
 }
 
 /// Point-in-time metrics summary.
@@ -35,6 +38,9 @@ pub struct MetricsSnapshot {
     pub mean_batch: f64,
     /// Largest batch executed.
     pub max_batch_seen: usize,
+    /// SIMD kernel ISA the backend dispatches to (`"unknown"` until the
+    /// worker reports, `"n/a"` for non-native backends).
+    pub kernel_isa: &'static str,
 }
 
 impl ServeMetrics {
@@ -55,6 +61,12 @@ impl ServeMetrics {
     /// Record one failed request.
     pub fn record_error(&self) {
         self.inner.lock().unwrap().errors += 1;
+    }
+
+    /// Record the SIMD kernel ISA the backend dispatches to (reported by
+    /// the serve worker once at startup).
+    pub fn set_kernel_isa(&self, isa: &'static str) {
+        self.inner.lock().unwrap().kernel_isa = Some(isa);
     }
 
     /// Snapshot the current statistics.
@@ -80,6 +92,7 @@ impl ServeMetrics {
                 g.batch_sizes.iter().sum::<usize>() as f64 / g.batch_sizes.len() as f64
             },
             max_batch_seen: g.batch_sizes.iter().copied().max().unwrap_or(0),
+            kernel_isa: g.kernel_isa.unwrap_or("unknown"),
         }
     }
 }
@@ -94,14 +107,15 @@ impl MetricsSnapshot {
     /// One-line human summary.
     pub fn line(&self) -> String {
         format!(
-            "completed={} errors={} p50={:.1}µs p99={:.1}µs mean_exec={:.1}µs mean_batch={:.2} max_batch={}",
+            "completed={} errors={} p50={:.1}µs p99={:.1}µs mean_exec={:.1}µs mean_batch={:.2} max_batch={} kernel={}",
             self.completed,
             self.errors,
             self.p50_latency_s * 1e6,
             self.p99_latency_s * 1e6,
             self.mean_exec_s * 1e6,
             self.mean_batch,
-            self.max_batch_seen
+            self.max_batch_seen,
+            self.kernel_isa
         )
     }
 }
@@ -122,6 +136,10 @@ mod tests {
         assert!((s.mean_latency_s - 0.002).abs() < 1e-12);
         assert_eq!(s.max_batch_seen, 5);
         assert!((s.mean_batch - 4.0).abs() < 1e-12);
+        assert_eq!(s.kernel_isa, "unknown", "no backend reported a kernel yet");
+        m.set_kernel_isa("avx2");
+        assert_eq!(m.snapshot().kernel_isa, "avx2");
+        assert!(m.snapshot().line().contains("kernel=avx2"));
     }
 
     #[test]

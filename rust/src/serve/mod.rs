@@ -204,6 +204,7 @@ fn worker_loop(
     metrics: &ServeMetrics,
 ) {
     let n = backend.n();
+    metrics.set_kernel_isa(backend.kernel_isa());
     loop {
         // wait for the first request of the batch
         let first = match rx.recv() {

@@ -11,8 +11,6 @@
 use anyhow::bail;
 
 use super::chain::PlanArrays;
-use super::pool::{ExecConfig, WorkerPool};
-use super::schedule::CompiledPlan;
 
 /// An `(n, batch)` row-major block of `f32` signals: column `b` is the
 /// `b`-th signal. Rows are contiguous.
@@ -176,62 +174,6 @@ pub fn apply_tchain_batch_f32(plan: &PlanArrays, block: &mut SignalBlock, invers
     }
 }
 
-/// Apply a level-scheduled compiled plan to a signal block in place:
-/// `X ← Ū X` (G) or `X ← T̄ X` (T), on up to `threads` worker threads.
-/// Numerically identical to the sequential per-stage applies above — the
-/// schedule only reorders stages with disjoint supports.
-#[deprecated(
-    note = "use `plan::FastOperator::apply` with `Direction::Forward` and \
-            `ExecPolicy::Spawn` on a built `Plan`"
-)]
-pub fn apply_compiled_batch_f32(cp: &CompiledPlan, block: &mut SignalBlock, threads: usize) {
-    cp.apply_batch(block, threads)
-}
-
-/// Reverse direction of [`apply_compiled_batch_f32`]: `X ← Ūᵀ X` (G, the
-/// forward GFT) or `X ← T̄⁻¹ X` (T).
-#[deprecated(
-    note = "use `plan::FastOperator::apply` with `Direction::Adjoint` and \
-            `ExecPolicy::Spawn` on a built `Plan`"
-)]
-pub fn apply_compiled_batch_f32_rev(cp: &CompiledPlan, block: &mut SignalBlock, threads: usize) {
-    cp.apply_batch_rev(block, threads)
-}
-
-/// Pooled apply — the serving hot path: fused superstage streams over
-/// cache-blocked column tiles, dispatched to a persistent [`WorkerPool`]
-/// (no thread spawns per call). Bitwise identical to the sequential
-/// per-stage applies above.
-#[deprecated(
-    note = "use `plan::FastOperator::apply` with `Direction::Forward` and \
-            `ExecPolicy::Pool` on a built `Plan` (or \
-            `CompiledPlan::apply_batch_pooled` for a private pool)"
-)]
-pub fn apply_compiled_batch_f32_pooled(
-    cp: &CompiledPlan,
-    block: &mut SignalBlock,
-    pool: &WorkerPool,
-    cfg: &ExecConfig,
-) {
-    cp.apply_batch_pooled(block, pool, cfg)
-}
-
-/// Reverse direction of [`apply_compiled_batch_f32_pooled`]: `X ← Ūᵀ X`
-/// (G, the forward GFT) or `X ← T̄⁻¹ X` (T).
-#[deprecated(
-    note = "use `plan::FastOperator::apply` with `Direction::Adjoint` and \
-            `ExecPolicy::Pool` on a built `Plan` (or \
-            `CompiledPlan::apply_batch_pooled_rev` for a private pool)"
-)]
-pub fn apply_compiled_batch_f32_pooled_rev(
-    cp: &CompiledPlan,
-    block: &mut SignalBlock,
-    pool: &WorkerPool,
-    cfg: &ExecConfig,
-) {
-    cp.apply_batch_pooled_rev(block, pool, cfg)
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -320,25 +262,6 @@ mod tests {
         for (b, sig) in signals.iter().enumerate() {
             for (w, g) in sig.iter().zip(block.signal(b).iter()) {
                 assert!((w - g).abs() < 1e-4);
-            }
-        }
-    }
-
-    #[test]
-    #[allow(deprecated)] // the deprecated shims must keep working
-    fn compiled_wrappers_roundtrip() {
-        let mut rng = Rng64::new(85);
-        let n = 12;
-        let ch = random_gchain(&mut rng, n, 30);
-        let cp = ch.compile();
-        let signals: Vec<Vec<f32>> =
-            (0..3).map(|_| (0..n).map(|_| rng.randn() as f32).collect()).collect();
-        let mut block = SignalBlock::from_signals(&signals).unwrap();
-        apply_compiled_batch_f32(&cp, &mut block, 2);
-        apply_compiled_batch_f32_rev(&cp, &mut block, 2);
-        for (b, sig) in signals.iter().enumerate() {
-            for (w, g) in sig.iter().zip(block.signal(b).iter()) {
-                assert!((w - g).abs() < 1e-4, "{w} vs {g}");
             }
         }
     }

@@ -156,15 +156,6 @@ impl GChain {
         p
     }
 
-    /// Compile into a level-scheduled [`super::CompiledPlan`]: conflict-free
-    /// layers of commuting butterflies with a multi-threaded executor. The
-    /// compiled apply is bitwise identical to the sequential apply.
-    #[deprecated(note = "use `plan::Plan::from(&chain).build()` — the builder owns \
-                         scheduling and fusion options and yields a shareable `Arc<Plan>`")]
-    pub fn compile(&self) -> super::schedule::CompiledPlan {
-        super::schedule::CompiledPlan::from_gchain(self)
-    }
-
     /// Rebuild from a flat plan (inverse of [`GChain::to_plan`], up to f32
     /// rounding of the parameters).
     pub fn from_plan(p: &PlanArrays) -> Self {
@@ -185,9 +176,9 @@ impl GChain {
     /// Rebuild from a flat plan **without** [`GTransform::new`]'s
     /// defensive renormalization: the f32 parameters widen to f64
     /// bit-exactly, so re-narrowing yields the original plan bitwise.
-    /// This is the blessed conversion for the deprecated backend shims
-    /// (and any decoder), whose outputs must stay bit-identical to the
-    /// plan-arrays execution paths.
+    /// This is the blessed conversion for decoders (and anyone lifting
+    /// `PlanArrays` into a `Plan`), whose outputs must stay bit-identical
+    /// to the plan-arrays execution paths.
     pub fn from_plan_exact(p: &PlanArrays) -> Self {
         let transforms = (0..p.len())
             .map(|k| GTransform {
@@ -321,15 +312,6 @@ impl TChain {
             });
         }
         p
-    }
-
-    /// Compile into a level-scheduled [`super::CompiledPlan`] (see
-    /// [`GChain::compile`]); the reverse direction of the compiled plan is
-    /// the chain inverse `T̄⁻¹`.
-    #[deprecated(note = "use `plan::Plan::from(&chain).build()` — the builder owns \
-                         scheduling and fusion options and yields a shareable `Arc<Plan>`")]
-    pub fn compile(&self) -> super::schedule::CompiledPlan {
-        super::schedule::CompiledPlan::from_tchain(self)
     }
 
     /// Rebuild from a flat plan.

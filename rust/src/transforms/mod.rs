@@ -15,28 +15,29 @@
 //! The batched `f32` fast path used on the serving hot loop lives in
 //! [`batch`]; the level-scheduling compiler, the plan-fusion /
 //! cache-blocking pass and the executors (spawn-per-apply baseline plus
-//! the pooled hot path) live in [`schedule`]; the persistent worker-pool
-//! runtime and its [`ExecConfig`] tunables live in [`pool`].
+//! the pooled hot path) live in [`schedule`]; the hand-vectorized
+//! AVX-512/AVX2/NEON/scalar stage kernels with runtime ISA dispatch live
+//! in [`simd`]; the persistent worker-pool runtime and its [`ExecConfig`]
+//! tunables live in [`pool`].
 //!
 //! The preferred execution surface over all of this is
 //! [`crate::plan`]: `Plan::from(&chain).build()` plus
 //! [`FastOperator::apply`](crate::plan::FastOperator::apply) with a
 //! [`Direction`](crate::plan::Direction) and an
-//! [`ExecPolicy`](crate::plan::ExecPolicy). The free
-//! `apply_compiled_batch_f32*` functions remain as deprecated shims.
+//! [`ExecPolicy`](crate::plan::ExecPolicy). (The pre-`FastOperator`
+//! surface — the free `apply_compiled_batch_f32*` functions, the
+//! `GChain::compile`/`TChain::compile` pair and the legacy backend
+//! constructors — was removed after its one-PR deprecation window; see
+//! the README migration table.)
 
 pub mod batch;
 mod chain;
 mod gtransform;
 pub mod pool;
 pub mod schedule;
+pub mod simd;
 mod ttransform;
 
-#[allow(deprecated)] // deliberate: the deprecated shims stay re-exported
-pub use batch::{
-    apply_compiled_batch_f32, apply_compiled_batch_f32_pooled, apply_compiled_batch_f32_pooled_rev,
-    apply_compiled_batch_f32_rev,
-};
 pub use batch::{
     apply_gchain_batch_f32, apply_gchain_batch_f32_t, apply_tchain_batch_f32, SignalBlock,
 };
@@ -44,4 +45,5 @@ pub use chain::{GChain, PlanArrays, TChain};
 pub use gtransform::{GKind, GTransform};
 pub use pool::{global_pool, ExecConfig, WorkerPool};
 pub use schedule::{default_threads, ChainKind, CompiledPlan, ScheduleStats};
+pub use simd::KernelIsa;
 pub use ttransform::TTransform;

@@ -30,7 +30,8 @@
 //! pooled dispatch has a far lower break-even point than spawn-per-apply.
 //! Every knob can be overridden from the environment
 //! (`FASTES_THREADS`, `FASTES_MIN_WORK`, `FASTES_LAYER_MIN_WORK`,
-//! `FASTES_TILE_COLS`) or from CLI flags.
+//! `FASTES_TILE_COLS`; the SIMD kernel via `FASTES_KERNEL`, resolved by
+//! [`super::simd::default_kernel`]) or from CLI flags.
 //!
 //! One pool is shared per process ([`global_pool`]); the serve coordinator
 //! and the CLI reuse it across requests.
@@ -40,6 +41,7 @@ use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
 
 use super::schedule::default_threads;
+use super::simd::{self, KernelIsa};
 
 /// Tunables of the parallel executors (pooled and spawn-per-apply).
 ///
@@ -60,6 +62,12 @@ pub struct ExecConfig {
     /// an `(n, tile_cols)` tile through the whole fused plan while the
     /// tile stays resident in L1/L2.
     pub tile_cols: usize,
+    /// SIMD kernel the batched `f32` inner loops run on: `None` uses the
+    /// process default ([`simd::default_kernel`] — `FASTES_KERNEL` env
+    /// override, else runtime detection), `Some(isa)` pins this config to
+    /// one kernel (the `--kernel` CLI flag and the conformance suite).
+    /// Every kernel is bitwise identical, so this is a pure perf knob.
+    pub kernel: Option<KernelIsa>,
 }
 
 impl ExecConfig {
@@ -72,6 +80,7 @@ impl ExecConfig {
             min_work: 2048,
             layer_min_work: 512.0,
             tile_cols: 32,
+            kernel: None,
         }
         .with_env_overrides()
     }
@@ -85,6 +94,7 @@ impl ExecConfig {
             min_work: 8192,
             layer_min_work: 1024.0,
             tile_cols: 32,
+            kernel: None,
         }
         .with_env_overrides()
     }
@@ -93,6 +103,25 @@ impl ExecConfig {
     pub fn with_threads(mut self, threads: usize) -> ExecConfig {
         self.threads = threads.max(1);
         self
+    }
+
+    /// Replace `kernel` (builder style); `None` restores the process
+    /// default.
+    pub fn with_kernel(mut self, kernel: Option<KernelIsa>) -> ExecConfig {
+        self.kernel = kernel;
+        self
+    }
+
+    /// The kernel ISA applies run with under this config: the explicit
+    /// [`ExecConfig::kernel`] pin when the host supports it (clamped to
+    /// scalar otherwise — never an illegal instruction), else the process
+    /// default.
+    pub fn kernel_isa(&self) -> KernelIsa {
+        match self.kernel {
+            Some(isa) if isa.is_supported() => isa,
+            Some(_) => KernelIsa::Scalar,
+            None => simd::default_kernel(),
+        }
     }
 
     /// Apply `FASTES_*` environment overrides to `self`.
@@ -409,6 +438,27 @@ mod tests {
         assert!(pooled.layer_min_work <= spawn.layer_min_work);
         assert!(pooled.threads >= 1 && pooled.tile_cols >= 1);
         assert_eq!(ExecConfig::default(), pooled);
+    }
+
+    #[test]
+    fn kernel_isa_resolution_is_always_supported() {
+        // default config resolves to the process default; an explicit pin
+        // sticks when supported and clamps to scalar when it is not
+        let cfg = ExecConfig::pooled();
+        assert!(cfg.kernel_isa().is_supported());
+        let scalar = cfg.clone().with_kernel(Some(KernelIsa::Scalar));
+        assert_eq!(scalar.kernel_isa(), KernelIsa::Scalar);
+        for isa in KernelIsa::available() {
+            let pinned = ExecConfig::pooled().with_kernel(Some(isa));
+            assert_eq!(pinned.kernel_isa(), isa);
+        }
+        // an unsupported pin must clamp, never fault
+        for isa in [KernelIsa::Neon, KernelIsa::Avx2, KernelIsa::Avx512] {
+            if !isa.is_supported() {
+                let pinned = ExecConfig::pooled().with_kernel(Some(isa));
+                assert_eq!(pinned.kernel_isa(), KernelIsa::Scalar);
+            }
+        }
     }
 
     #[test]

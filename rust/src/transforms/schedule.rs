@@ -33,6 +33,19 @@
 //! layered executor, so it stays bitwise-identical to the sequential
 //! apply.
 //!
+//! # SIMD kernels + packed tiles
+//!
+//! The per-stage inner loops run on the hand-vectorized kernels of
+//! [`super::simd`] (AVX-512 / AVX2 / NEON, runtime-dispatched, scalar
+//! fallback) — each lane performs exactly the scalar operation sequence
+//! with no FMA, so kernel choice never changes a single output bit. When
+//! a column tile is narrower than the full batch, the executor first
+//! **packs** it into a contiguous `(n, tile_cols)` scratch buffer (row
+//! stride `tile_cols` instead of `batch`): a superstage then streams its
+//! row pairs as adjacent compact rows of one L1/L2-resident block instead
+//! of strided slices scattered across the whole `(n, batch)` buffer. The
+//! pack/unpack is a pure copy — results stay bitwise identical.
+//!
 //! # Execution
 //!
 //! Three executors share the compiled form ([`CompiledPlan`]):
@@ -51,6 +64,7 @@
 //! * **single-vector `f64`** ([`CompiledPlan::apply_vec`]) — runs the
 //!   fused `f64` stream inline.
 
+use std::cell::RefCell;
 use std::ops::Range;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Barrier, OnceLock};
@@ -59,6 +73,10 @@ use super::batch::SignalBlock;
 use super::chain::{GChain, PlanArrays, TChain};
 use super::gtransform::GKind;
 use super::pool::{ExecConfig, WorkerPool};
+use super::simd::{
+    self, KernelIsa, F_REFL_FWD, F_REFL_REV, F_ROT_FWD, F_ROT_REV, F_SCALE, F_SHEAR_ADD_I,
+    F_SHEAR_ADD_J, F_SHEAR_SUB_I, F_SHEAR_SUB_J,
+};
 use super::ttransform::TTransform;
 
 /// Which chain family a [`CompiledPlan`] executes. Determines the meaning
@@ -79,17 +97,8 @@ const OP_SCALING: i8 = 2;
 const OP_UPPER_SHEAR: i8 = 3;
 const OP_LOWER_SHEAR: i8 = 4;
 
-// Direction-resolved opcodes of the fused streams: the executor never
-// branches on direction, it was baked in at compile time.
-const F_ROT_FWD: i8 = 0;
-const F_ROT_REV: i8 = 1;
-const F_REFL_FWD: i8 = 2;
-const F_REFL_REV: i8 = 3;
-const F_SCALE: i8 = 4;
-const F_SHEAR_ADD_I: i8 = 5;
-const F_SHEAR_SUB_I: i8 = 6;
-const F_SHEAR_ADD_J: i8 = 7;
-const F_SHEAR_SUB_J: i8 = 8;
+// The direction-resolved fused opcodes (F_*) live in `super::simd` —
+// shared between this compiler and the per-ISA stage kernels.
 
 /// Default stage budget of one fused superstage: consecutive layers are
 /// merged until their combined stage count would exceed this, keeping one
@@ -103,6 +112,25 @@ pub const DEFAULT_SUPERSTAGE_STAGES: usize = 2048;
 /// tile is one vector register on AVX2, so shrinking below this would
 /// trade SIMD width for thread count at a loss.
 const MIN_TILE_COLS: usize = 8;
+
+/// Largest tile (in `f32` elements, `n × tile_cols`) the executor will
+/// pack into the contiguous per-thread scratch buffer before streaming
+/// the fused plan over it. 1 Mi floats = 4 MiB — beyond L2 the packed
+/// layout buys nothing, so larger tiles run strided in place.
+const PACK_TILE_MAX_ELEMS: usize = 1 << 20;
+
+/// Minimum fused-stream depth (stages per row, `stages / n`) before the
+/// packed-tile path pays for its `2·n·w` copy traffic: each row must be
+/// revisited a few times for the compact layout to win. Shallow plans
+/// (e.g. single-stage) execute strided in place instead.
+const PACK_MIN_STAGES_PER_ROW: usize = 4;
+
+thread_local! {
+    /// Per-thread packed-tile scratch, reused across applies so the hot
+    /// path never allocates. Each pool worker (and the caller) owns its
+    /// own buffer; tiles are claimed exclusively, so no sharing occurs.
+    static TILE_SCRATCH: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+}
 
 /// One stage as fed to the scheduling pass.
 struct Stage {
@@ -275,84 +303,84 @@ impl FusedStream {
 
     /// `f32` batched execution of the whole stream over columns
     /// `[c0, c1)` — one cache tile. Superstage boundaries keep the
-    /// coefficient slice the inner loops walk contiguous and small.
+    /// coefficient slice the inner loops walk contiguous and small; the
+    /// per-stage inner loop runs on the selected [`KernelIsa`] kernel
+    /// (bitwise identical across kernels by construction).
     ///
     /// # Safety
     /// The caller must guarantee exclusive access to columns `[c0, c1)` of
-    /// the `(n, batch)` buffer behind `ptr` for the duration of the call.
-    unsafe fn run_cols_f32(&self, ptr: *mut f32, batch: usize, c0: usize, c1: usize) {
+    /// the `(n, batch)` buffer behind `ptr` for the duration of the call,
+    /// and that `isa` is supported on the running host.
+    unsafe fn run_cols_f32(
+        &self,
+        ptr: *mut f32,
+        batch: usize,
+        c0: usize,
+        c1: usize,
+        isa: KernelIsa,
+    ) {
         let w = c1 - c0;
         for ss in 0..self.num_superstages() {
             for k in self.super_ptr[ss]..self.super_ptr[ss + 1] {
                 let i = self.idx_i[k] as usize;
                 let op = self.op[k];
-                let ri = std::slice::from_raw_parts_mut(ptr.add(i * batch + c0), w);
+                let ri = ptr.add(i * batch + c0);
                 if op == F_SCALE {
-                    let a = self.a0f[k];
-                    for v in ri {
-                        *v *= a;
-                    }
+                    simd::apply_stage(isa, F_SCALE, ri, ri, w, self.a0f[k], 0.0);
                     continue;
                 }
                 let j = self.idx_j[k] as usize;
                 debug_assert_ne!(i, j);
-                let rj = std::slice::from_raw_parts_mut(ptr.add(j * batch + c0), w);
-                let (c, s) = (self.a0f[k], self.a1f[k]);
-                match op {
-                    F_ROT_FWD => {
-                        for (vi, vj) in ri.iter_mut().zip(rj.iter_mut()) {
-                            let (a, b) = (*vi, *vj);
-                            *vi = c * a + s * b;
-                            *vj = c * b - s * a;
-                        }
-                    }
-                    F_ROT_REV => {
-                        for (vi, vj) in ri.iter_mut().zip(rj.iter_mut()) {
-                            let (a, b) = (*vi, *vj);
-                            *vi = c * a - s * b;
-                            *vj = s * a + c * b;
-                        }
-                    }
-                    F_REFL_FWD => {
-                        // `-(c·b − s·a)` rather than `s·a − c·b`: matches
-                        // the sequential forward path's `σ·(c·b − s·a)`
-                        // bit-for-bit on signed zeros too
-                        for (vi, vj) in ri.iter_mut().zip(rj.iter_mut()) {
-                            let (a, b) = (*vi, *vj);
-                            *vi = c * a + s * b;
-                            *vj = -(c * b - s * a);
-                        }
-                    }
-                    F_REFL_REV => {
-                        for (vi, vj) in ri.iter_mut().zip(rj.iter_mut()) {
-                            let (a, b) = (*vi, *vj);
-                            *vi = c * a + s * b;
-                            *vj = s * a - c * b;
-                        }
-                    }
-                    F_SHEAR_ADD_I => {
-                        for (vi, vj) in ri.iter_mut().zip(rj.iter()) {
-                            *vi += c * *vj;
-                        }
-                    }
-                    F_SHEAR_SUB_I => {
-                        for (vi, vj) in ri.iter_mut().zip(rj.iter()) {
-                            *vi -= c * *vj;
-                        }
-                    }
-                    F_SHEAR_ADD_J => {
-                        for (vj, vi) in rj.iter_mut().zip(ri.iter()) {
-                            *vj += c * *vi;
-                        }
-                    }
-                    F_SHEAR_SUB_J => {
-                        for (vj, vi) in rj.iter_mut().zip(ri.iter()) {
-                            *vj -= c * *vi;
-                        }
-                    }
-                    other => unreachable!("bad fused opcode {other}"),
-                }
+                let rj = ptr.add(j * batch + c0);
+                simd::apply_stage(isa, op, ri, rj, w, self.a0f[k], self.a1f[k]);
             }
+        }
+    }
+
+    /// Execute one cache tile, packing it into the contiguous per-thread
+    /// scratch first when that shrinks the row stride: with a tile
+    /// narrower than the batch, rows of the `(n, batch)` buffer are
+    /// `batch`-strided slices, while the packed `(n, w)` scratch keeps
+    /// every row pair a superstage touches in one compact L1/L2-resident
+    /// block. Pack and unpack are pure copies — bitwise identical. The
+    /// copy costs `2·n·w` element moves, so packing is gated on the
+    /// stream being deep enough ([`PACK_MIN_STAGES_PER_ROW`] stages per
+    /// row) to amortize it — shallow plans run strided in place.
+    ///
+    /// # Safety
+    /// Same contract as [`FusedStream::run_cols_f32`]; additionally `n`
+    /// must be the plan dimension (rows `0..n` all belong to the buffer).
+    unsafe fn run_tile(
+        &self,
+        n: usize,
+        ptr: *mut f32,
+        batch: usize,
+        c0: usize,
+        c1: usize,
+        isa: KernelIsa,
+    ) {
+        let w = c1 - c0;
+        let deep_enough = self.op.len() >= PACK_MIN_STAGES_PER_ROW * n;
+        if w < batch && deep_enough && n * w <= PACK_TILE_MAX_ELEMS {
+            TILE_SCRATCH.with(|cell| {
+                let mut scratch = cell.borrow_mut();
+                if scratch.len() < n * w {
+                    scratch.resize(n * w, 0.0);
+                }
+                let sp = scratch.as_mut_ptr();
+                for i in 0..n {
+                    std::ptr::copy_nonoverlapping(ptr.add(i * batch + c0), sp.add(i * w), w);
+                }
+                // SAFETY: scratch is this thread's exclusive buffer; the
+                // packed tile is an (n, w) block with stride w
+                self.run_cols_f32(sp, w, 0, w, isa);
+                for i in 0..n {
+                    let src = sp.add(i * w) as *const f32;
+                    std::ptr::copy_nonoverlapping(src, ptr.add(i * batch + c0), w);
+                }
+            });
+        } else {
+            self.run_cols_f32(ptr, batch, c0, c1, isa);
         }
     }
 }
@@ -648,16 +676,26 @@ impl CompiledPlan {
     /// stream sweeps the whole block in one pass. This is the
     /// [`ExecPolicy::Seq`](crate::plan::ExecPolicy) engine — bitwise
     /// identical to the per-stage sequential apply (fusion only reorders
-    /// stages with disjoint supports).
+    /// stages with disjoint supports), running on the process-default
+    /// SIMD kernel.
     pub fn apply_batch_inline(&self, block: &mut SignalBlock, rev: bool) {
+        self.apply_batch_inline_isa(block, rev, simd::default_kernel())
+    }
+
+    /// [`CompiledPlan::apply_batch_inline`] with an explicit SIMD kernel
+    /// (clamped to scalar when `isa` is unsupported on this host). The
+    /// conformance suite drives every available kernel through this —
+    /// results are bitwise identical across kernels by construction.
+    pub fn apply_batch_inline_isa(&self, block: &mut SignalBlock, rev: bool, isa: KernelIsa) {
         assert_eq!(block.n, self.n, "plan/block dimension mismatch");
         if self.is_empty() || block.batch == 0 {
             return;
         }
+        let isa = if isa.is_supported() { isa } else { KernelIsa::Scalar };
         let batch = block.batch;
         let stream = if rev { &self.rev } else { &self.fwd };
         // SAFETY: exclusive &mut borrow of the block; single thread.
-        unsafe { stream.run_cols_f32(block.data.as_mut_ptr(), batch, 0, batch) };
+        unsafe { stream.run_cols_f32(block.data.as_mut_ptr(), batch, 0, batch, isa) };
     }
 
     // ---------------- f32 batched execution: pooled hot path ------------
@@ -691,6 +729,7 @@ impl CompiledPlan {
         if self.is_empty() || block.batch == 0 {
             return;
         }
+        let isa = cfg.kernel_isa();
         let batch = block.batch;
         let stream = if rev { &self.rev } else { &self.fwd };
         let threads = cfg.threads.max(1).min(pool.workers() + 1);
@@ -711,6 +750,7 @@ impl CompiledPlan {
         let tile_threads = threads.min(tiles);
         let layer_threads = threads.min(self.stats.max_width);
         if worth && tile_threads > 1 {
+            let n = self.n;
             let shared = SendPtr(block.data.as_mut_ptr());
             let cursor = AtomicUsize::new(0);
             let job = |_slot: usize| loop {
@@ -724,22 +764,22 @@ impl CompiledPlan {
                 // participant; tiles are pairwise-disjoint column ranges,
                 // and the pool joins every participant before `run`
                 // returns (i.e. before the &mut borrow of the block ends).
-                unsafe { stream.run_cols_f32(shared.0, batch, c0, c1) };
+                unsafe { stream.run_tile(n, shared.0, batch, c0, c1, isa) };
             };
             pool.run(tile_threads - 1, &job);
         } else if worth
             && layer_threads > 1
             && self.stats.mean_width * batch as f64 >= cfg.layer_min_work
         {
-            self.run_layer_parallel_pooled(block, rev, pool, layer_threads);
+            self.run_layer_parallel_pooled(block, rev, pool, layer_threads, isa);
         } else {
-            // inline, but still fused and cache-blocked
+            // inline, but still fused, cache-blocked and tile-packed
             let ptr = block.data.as_mut_ptr();
             for t in 0..tiles {
                 let c0 = t * tile;
                 let c1 = (c0 + tile).min(batch);
                 // SAFETY: exclusive &mut borrow of the block; one thread.
-                unsafe { stream.run_cols_f32(ptr, batch, c0, c1) };
+                unsafe { stream.run_tile(self.n, ptr, batch, c0, c1, isa) };
             }
         }
     }
@@ -754,6 +794,7 @@ impl CompiledPlan {
         rev: bool,
         pool: &WorkerPool,
         threads: usize,
+        isa: KernelIsa,
     ) {
         let batch = block.batch;
         let layers = self.num_layers();
@@ -777,7 +818,7 @@ impl CompiledPlan {
                     // SAFETY: stages within a layer have disjoint supports
                     // and distinct slots deal distinct stages; the barrier
                     // orders layers.
-                    unsafe { self.run_stage(shared.0, batch, 0, batch, s, rev) };
+                    unsafe { self.run_stage(shared.0, batch, 0, batch, s, rev, isa) };
                     s += parties;
                 }
                 barrier.wait();
@@ -821,6 +862,7 @@ impl CompiledPlan {
         if self.is_empty() || block.batch == 0 {
             return;
         }
+        let isa = cfg.kernel_isa();
         let batch = block.batch;
         let threads = threads.max(1);
         // clamp the two modes independently: column-parallel by the batch
@@ -830,25 +872,31 @@ impl CompiledPlan {
         let layer_threads = threads.min(self.stats.max_width);
         let worth = self.len() * batch >= cfg.min_work;
         if worth && col_threads > 1 && batch >= 2 * col_threads {
-            self.run_column_parallel(block, rev, col_threads);
+            self.run_column_parallel(block, rev, col_threads, isa);
         } else if worth
             && layer_threads > 1
             && self.stats.mean_width * batch as f64 >= cfg.layer_min_work
         {
-            self.run_layer_parallel(block, rev, layer_threads);
+            self.run_layer_parallel(block, rev, layer_threads, isa);
         } else {
             // single worker, too little total work to amortize thread
             // spawns, or per-layer work too small for barriers
             let ptr = block.data.as_mut_ptr();
             // SAFETY: exclusive &mut borrow of the block; single thread.
-            unsafe { self.run_range(ptr, batch, 0, batch, rev) };
+            unsafe { self.run_range(ptr, batch, 0, batch, rev, isa) };
         }
     }
 
     /// Batch-parallel mode: each worker owns a contiguous column range and
     /// streams every layer over it; columns never interact, so no
     /// synchronization is needed.
-    fn run_column_parallel(&self, block: &mut SignalBlock, rev: bool, threads: usize) {
+    fn run_column_parallel(
+        &self,
+        block: &mut SignalBlock,
+        rev: bool,
+        threads: usize,
+        isa: KernelIsa,
+    ) {
         let batch = block.batch;
         let shared = SendPtr(block.data.as_mut_ptr());
         std::thread::scope(|scope| {
@@ -863,7 +911,7 @@ impl CompiledPlan {
                     // SAFETY: workers touch pairwise-disjoint column ranges
                     // [c0, c1) of every row; the scope joins before the
                     // &mut borrow of the block ends.
-                    unsafe { self.run_range(shared.0, batch, c0, c1, rev) };
+                    unsafe { self.run_range(shared.0, batch, c0, c1, rev, isa) };
                 });
             }
         });
@@ -873,7 +921,13 @@ impl CompiledPlan {
     /// layer the stages are dealt round-robin to the workers — supports
     /// inside a layer are pairwise disjoint, so the workers write disjoint
     /// rows — and a barrier separates layers.
-    fn run_layer_parallel(&self, block: &mut SignalBlock, rev: bool, threads: usize) {
+    fn run_layer_parallel(
+        &self,
+        block: &mut SignalBlock,
+        rev: bool,
+        threads: usize,
+        isa: KernelIsa,
+    ) {
         let batch = block.batch;
         let layers = self.num_layers();
         let shared = SendPtr(block.data.as_mut_ptr());
@@ -891,7 +945,7 @@ impl CompiledPlan {
                             // SAFETY: stages within a layer have disjoint
                             // supports, so each worker writes rows no other
                             // worker touches; the barrier orders layers.
-                            unsafe { self.run_stage(shared.0, batch, 0, batch, slot, rev) };
+                            unsafe { self.run_stage(shared.0, batch, 0, batch, slot, rev, isa) };
                             slot += threads;
                         }
                         barrier.wait();
@@ -906,23 +960,36 @@ impl CompiledPlan {
     /// # Safety
     /// The caller must guarantee exclusive access to columns `[c0, c1)` of
     /// the `(n, batch)` buffer behind `ptr` for the duration of the call.
-    unsafe fn run_range(&self, ptr: *mut f32, batch: usize, c0: usize, c1: usize, rev: bool) {
+    unsafe fn run_range(
+        &self,
+        ptr: *mut f32,
+        batch: usize,
+        c0: usize,
+        c1: usize,
+        rev: bool,
+        isa: KernelIsa,
+    ) {
         let layers = self.num_layers();
         for lk in 0..layers {
             let l = if rev { layers - 1 - lk } else { lk };
             for slot in self.layer_range(l) {
-                self.run_stage(ptr, batch, c0, c1, slot, rev);
+                self.run_stage(ptr, batch, c0, c1, slot, rev, isa);
             }
         }
     }
 
-    /// Execute one stage over columns `[c0, c1)`.
+    /// Execute one stage over columns `[c0, c1)`: resolve the layered
+    /// `(op, rev)` pair to the direction-resolved fused opcode and hand
+    /// the row pair to the selected SIMD kernel (the reverse scaling's
+    /// reciprocal is the same single division the fused compiler bakes
+    /// in, so both executors stay bitwise-identical).
     ///
     /// # Safety
     /// The caller must guarantee exclusive access to rows
     /// `idx_i[slot]`/`idx_j[slot]`, columns `[c0, c1)`, of the `(n, batch)`
-    /// buffer behind `ptr`.
+    /// buffer behind `ptr`, and that `isa` is supported on this host.
     #[inline]
+    #[allow(clippy::too_many_arguments)]
     unsafe fn run_stage(
         &self,
         ptr: *mut f32,
@@ -931,76 +998,33 @@ impl CompiledPlan {
         c1: usize,
         slot: usize,
         rev: bool,
+        isa: KernelIsa,
     ) {
         let i = self.idx_i[slot] as usize;
-        let j = self.idx_j[slot] as usize;
         let (c, s) = (self.p0f[slot], self.p1f[slot]);
         let w = c1 - c0;
-        let ri = std::slice::from_raw_parts_mut(ptr.add(i * batch + c0), w);
+        let ri = ptr.add(i * batch + c0);
         let op = self.op[slot];
         if op == OP_SCALING {
             let a = if rev { 1.0 / c } else { c };
-            for v in ri {
-                *v *= a;
-            }
+            simd::apply_stage(isa, F_SCALE, ri, ri, w, a, 0.0);
             return;
         }
+        let j = self.idx_j[slot] as usize;
         debug_assert_ne!(i, j);
-        let rj = std::slice::from_raw_parts_mut(ptr.add(j * batch + c0), w);
-        match (op, rev) {
-            (OP_ROTATION, false) => {
-                for (vi, vj) in ri.iter_mut().zip(rj.iter_mut()) {
-                    let (a, b) = (*vi, *vj);
-                    *vi = c * a + s * b;
-                    *vj = c * b - s * a;
-                }
-            }
-            (OP_ROTATION, true) => {
-                for (vi, vj) in ri.iter_mut().zip(rj.iter_mut()) {
-                    let (a, b) = (*vi, *vj);
-                    *vi = c * a - s * b;
-                    *vj = s * a + c * b;
-                }
-            }
-            (OP_REFLECTION, false) => {
-                // `-(c·b − s·a)` rather than `s·a − c·b`: equal for every
-                // nonzero result, but matches the sequential forward path's
-                // `sigma·(c·b − s·a)` bit-for-bit on signed zeros too
-                for (vi, vj) in ri.iter_mut().zip(rj.iter_mut()) {
-                    let (a, b) = (*vi, *vj);
-                    *vi = c * a + s * b;
-                    *vj = -(c * b - s * a);
-                }
-            }
-            (OP_REFLECTION, true) => {
-                for (vi, vj) in ri.iter_mut().zip(rj.iter_mut()) {
-                    let (a, b) = (*vi, *vj);
-                    *vi = c * a + s * b;
-                    *vj = s * a - c * b;
-                }
-            }
-            (OP_UPPER_SHEAR, false) => {
-                for (vi, vj) in ri.iter_mut().zip(rj.iter()) {
-                    *vi += c * *vj;
-                }
-            }
-            (OP_UPPER_SHEAR, true) => {
-                for (vi, vj) in ri.iter_mut().zip(rj.iter()) {
-                    *vi -= c * *vj;
-                }
-            }
-            (OP_LOWER_SHEAR, false) => {
-                for (vj, vi) in rj.iter_mut().zip(ri.iter()) {
-                    *vj += c * *vi;
-                }
-            }
-            (OP_LOWER_SHEAR, true) => {
-                for (vj, vi) in rj.iter_mut().zip(ri.iter()) {
-                    *vj -= c * *vi;
-                }
-            }
+        let rj = ptr.add(j * batch + c0);
+        let fop = match (op, rev) {
+            (OP_ROTATION, false) => F_ROT_FWD,
+            (OP_ROTATION, true) => F_ROT_REV,
+            (OP_REFLECTION, false) => F_REFL_FWD,
+            (OP_REFLECTION, true) => F_REFL_REV,
+            (OP_UPPER_SHEAR, false) => F_SHEAR_ADD_I,
+            (OP_UPPER_SHEAR, true) => F_SHEAR_SUB_I,
+            (OP_LOWER_SHEAR, false) => F_SHEAR_ADD_J,
+            (OP_LOWER_SHEAR, true) => F_SHEAR_SUB_J,
             (other, _) => unreachable!("bad opcode {other}"),
-        }
+        };
+        simd::apply_stage(isa, fop, ri, rj, w, c, s);
     }
 }
 
@@ -1039,12 +1063,17 @@ pub fn default_threads() -> usize {
 }
 
 #[cfg(test)]
-#[allow(deprecated)] // unit tests drive the deprecated `compile` shim too
 mod tests {
     use super::*;
     use crate::cli::figures::{random_gplan, random_tplan};
     use crate::linalg::Rng64;
     use crate::transforms::GTransform;
+
+    /// Pooled-executor config with thresholds low enough that the
+    /// parallel paths really engage at test sizes (process-default kernel).
+    fn eager_cfg(threads: usize, tile_cols: usize) -> ExecConfig {
+        ExecConfig { threads, min_work: 1, layer_min_work: 1.0, tile_cols, kernel: None }
+    }
 
     /// Disjointness within each layer + order preservation across layers.
     fn check_schedule_invariants(cp: &CompiledPlan) {
@@ -1102,7 +1131,7 @@ mod tests {
         for k in 0..n / 2 {
             ch.transforms.push(GTransform::new(2 * k, 2 * k + 1, 0.6, 0.8, GKind::Rotation));
         }
-        let cp = ch.compile();
+        let cp = CompiledPlan::from_gchain(&ch);
         assert_eq!(cp.num_layers(), 1);
         assert_eq!(cp.stats().max_width, n / 2);
     }
@@ -1115,7 +1144,7 @@ mod tests {
         for j in 1..n {
             ch.transforms.push(GTransform::new(0, j, 0.6, 0.8, GKind::Rotation));
         }
-        let cp = ch.compile();
+        let cp = CompiledPlan::from_gchain(&ch);
         assert_eq!(cp.num_layers(), n - 1);
         assert_eq!(cp.stats().max_width, 1);
     }
@@ -1126,7 +1155,7 @@ mod tests {
         for trial in 0..10 {
             let n = 6 + trial;
             let ch = random_gplan(n, 5 * n, &mut rng);
-            let cp = ch.compile();
+            let cp = CompiledPlan::from_gchain(&ch);
             let x: Vec<f64> = (0..n).map(|_| rng.randn()).collect();
             let mut seq = x.clone();
             ch.apply_vec(&mut seq);
@@ -1147,7 +1176,7 @@ mod tests {
         for trial in 0..10 {
             let n = 6 + trial;
             let ch = random_tplan(n, 5 * n, &mut rng);
-            let cp = ch.compile();
+            let cp = CompiledPlan::from_tchain(&ch);
             let x: Vec<f64> = (0..n).map(|_| rng.randn()).collect();
             let mut seq = x.clone();
             ch.apply_vec(&mut seq);
@@ -1229,7 +1258,7 @@ mod tests {
         let n = 4096;
         let rounds = 4;
         let ch = wide_chain(n, rounds);
-        let cp = ch.compile();
+        let cp = CompiledPlan::from_gchain(&ch);
         assert_eq!(cp.num_layers(), rounds);
         assert_eq!(cp.stats().max_width, n / 2);
         let mut rng = Rng64::new(7107);
@@ -1256,7 +1285,7 @@ mod tests {
         // clamps, the shared `batch.max(max_width)` bound let the layer
         // mode inherit a batch-sized thread count (and vice versa).
         let ch = wide_chain(4096, 4);
-        let cp = ch.compile();
+        let cp = CompiledPlan::from_gchain(&ch);
         let mut rng = Rng64::new(7109);
         let sig: Vec<f32> = (0..4096).map(|_| rng.randn() as f32).collect();
         let mut inline = SignalBlock::from_signals(&[sig.clone()]).unwrap();
@@ -1271,7 +1300,7 @@ mod tests {
         for r in 0..200 {
             serial.transforms.push(GTransform::new(0, 1 + r % (n - 1), 0.6, 0.8, GKind::Rotation));
         }
-        let scp = serial.compile();
+        let scp = CompiledPlan::from_gchain(&serial);
         assert_eq!(scp.stats().max_width, 1);
         let sig: Vec<f32> = (0..n).map(|_| rng.randn() as f32).collect();
         let mut a = SignalBlock::from_signals(&[sig.clone()]).unwrap();
@@ -1287,7 +1316,7 @@ mod tests {
         let pool = WorkerPool::new(2);
         // tiny thresholds + a 3-column tile force the pooled tile mode
         // (with ragged work-stealing) even at test sizes
-        let cfg = ExecConfig { threads: 3, min_work: 1, layer_min_work: 1.0, tile_cols: 3 };
+        let cfg = eager_cfg(3, 3);
         let mut rng = Rng64::new(7110);
         let n = 32;
         let ch = random_gplan(n, 6 * n, &mut rng);
@@ -1315,7 +1344,7 @@ mod tests {
     fn pooled_t_apply_matches_sequential_bitwise() {
         use crate::transforms::apply_tchain_batch_f32;
         let pool = WorkerPool::new(2);
-        let cfg = ExecConfig { threads: 3, min_work: 1, layer_min_work: 1.0, tile_cols: 5 };
+        let cfg = eager_cfg(3, 5);
         let mut rng = Rng64::new(7111);
         let n = 24;
         let ch = random_tplan(n, 8 * n, &mut rng);
@@ -1354,7 +1383,7 @@ mod tests {
         let mut reference = SignalBlock::from_signals(&signals).unwrap();
         apply_gchain_batch_f32(&plan, &mut reference);
         for tile in [1usize, 3, 5, 64] {
-            let cfg = ExecConfig { threads: 1, min_work: 1, layer_min_work: 1.0, tile_cols: tile };
+            let cfg = eager_cfg(1, tile);
             let mut got = SignalBlock::from_signals(&signals).unwrap();
             cp.apply_batch_pooled(&mut got, &pool, &cfg);
             assert_eq!(reference.data, got.data, "tile={tile} diverged");
@@ -1362,12 +1391,42 @@ mod tests {
     }
 
     #[test]
+    fn every_kernel_isa_matches_sequential_bitwise() {
+        use crate::transforms::apply_gchain_batch_f32;
+        // odd n → remainder rows; batches straddle every lane width so the
+        // masked/tail loops of each kernel run; tile 5 forces ragged,
+        // packed tiles through the pooled path
+        let pool = WorkerPool::new(2);
+        let mut rng = Rng64::new(7115);
+        let n = 29;
+        let ch = random_gplan(n, 6 * n, &mut rng);
+        let plan = ch.to_plan();
+        let cp = CompiledPlan::from_plan(&plan, ChainKind::G);
+        for batch in [1usize, 7, 9, 17, 33] {
+            let signals: Vec<Vec<f32>> = (0..batch)
+                .map(|_| (0..n).map(|_| rng.randn() as f32).collect())
+                .collect();
+            let mut reference = SignalBlock::from_signals(&signals).unwrap();
+            apply_gchain_batch_f32(&plan, &mut reference);
+            for isa in KernelIsa::available() {
+                let mut inline = SignalBlock::from_signals(&signals).unwrap();
+                cp.apply_batch_inline_isa(&mut inline, false, isa);
+                assert_eq!(reference.data, inline.data, "inline {isa:?} batch={batch}");
+                let cfg = eager_cfg(3, 5).with_kernel(Some(isa));
+                let mut pooled = SignalBlock::from_signals(&signals).unwrap();
+                cp.apply_batch_pooled(&mut pooled, &pool, &cfg);
+                assert_eq!(reference.data, pooled.data, "pooled {isa:?} batch={batch}");
+            }
+        }
+    }
+
+    #[test]
     fn pooled_layer_mode_matches_inline() {
         // batch=1 (one tile) with wide layers → pooled layer-parallel mode
         let ch = wide_chain(512, 4);
-        let cp = ch.compile();
+        let cp = CompiledPlan::from_gchain(&ch);
         let pool = WorkerPool::new(3);
-        let cfg = ExecConfig { threads: 4, min_work: 1, layer_min_work: 1.0, tile_cols: 32 };
+        let cfg = eager_cfg(4, 32);
         let mut rng = Rng64::new(7113);
         let sig: Vec<f32> = (0..512).map(|_| rng.randn() as f32).collect();
         let mut inline = SignalBlock::from_signals(&[sig.clone()]).unwrap();
@@ -1386,7 +1445,7 @@ mod tests {
     fn fused_superstages_respect_budget_and_order() {
         let mut rng = Rng64::new(7114);
         let ch = random_gplan(33, 6000, &mut rng);
-        let cp = ch.compile();
+        let cp = CompiledPlan::from_gchain(&ch);
         for stream in [&cp.fwd, &cp.rev] {
             let sp = &stream.super_ptr;
             assert_eq!(sp[0], 0);
@@ -1411,7 +1470,7 @@ mod tests {
         let mut rng = Rng64::new(7105);
         let n = 24;
         let ch = random_gplan(n, 4 * n, &mut rng);
-        let cp = ch.compile();
+        let cp = CompiledPlan::from_gchain(&ch);
         let signals: Vec<Vec<f32>> =
             (0..5).map(|_| (0..n).map(|_| rng.randn() as f32).collect()).collect();
         let mut block = SignalBlock::from_signals(&signals).unwrap();
@@ -1446,7 +1505,7 @@ mod tests {
     fn stats_are_consistent() {
         let mut rng = Rng64::new(7106);
         let ch = random_gplan(20, 120, &mut rng);
-        let cp = ch.compile();
+        let cp = CompiledPlan::from_gchain(&ch);
         let st = cp.stats();
         assert_eq!(st.stages, 120);
         assert!(st.layers >= 120 / (20 / 2), "layers {} too few", st.layers);

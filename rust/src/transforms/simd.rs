@@ -1,0 +1,671 @@
+//! Hand-vectorized SIMD kernels for the fused-stream inner loops, with
+//! runtime ISA dispatch.
+//!
+//! # Why hand-written kernels
+//!
+//! The batched `f32` hot loop applies one 2×2 butterfly (or shear /
+//! scaling) across the columns of a cache tile. Auto-vectorization gets
+//! most of the way there, but it cannot be *relied on*: a stray bounds
+//! check or an unlucky inlining decision silently drops the loop back to
+//! scalar code. This module pins the vector shape down with explicit
+//! intrinsics — AVX-512 (16 lanes), AVX2 (8 lanes) and NEON (4 lanes) —
+//! selected **once per process at runtime** via CPU feature detection,
+//! with a portable scalar kernel as the universal fallback.
+//!
+//! # The bitwise guarantee
+//!
+//! Every engine in this repository is bitwise identical to the sequential
+//! scalar reference, and the SIMD kernels preserve that invariant by
+//! construction:
+//!
+//! * each lane performs **exactly the per-element operation sequence of
+//!   the scalar kernel** — multiply, multiply, add/sub, each individually
+//!   rounded. No FMA instruction is ever emitted (`mul`+`add` intrinsics
+//!   only; rustc does not contract them), so no intermediate keeps extra
+//!   precision;
+//! * negation (`F_REFL_FWD`) is a **sign-bit flip** (`xor` with `-0.0` /
+//!   `vnegq_f32`), matching scalar `-x` bitwise even on signed zeros;
+//! * the `w % LANES` remainder columns run the scalar code verbatim;
+//! * lanes are data-independent (a stage's two rows are disjoint), so
+//!   vector evaluation order cannot reassociate anything.
+//!
+//! The cross-engine conformance suite (`rust/tests/conformance.rs`) and
+//! the kernel-level unit tests below assert this equality over every
+//! available ISA, opcode and remainder shape.
+//!
+//! # Dispatch order and overrides
+//!
+//! Detection prefers the widest supported ISA: `avx512` → `avx2` →
+//! `neon` → `scalar`. The process default can be pinned with the
+//! `FASTES_KERNEL` environment variable or the `--kernel` CLI flag
+//! (`auto|scalar|avx2|avx512|neon`); per-call engines can override it via
+//! [`ExecConfig::kernel`](super::pool::ExecConfig). Requesting an ISA the
+//! host does not support falls back (loudly) rather than faulting.
+
+use std::sync::OnceLock;
+
+// Direction-resolved opcodes of the fused streams (shared with the
+// schedule compiler): the executor never branches on direction, it was
+// baked in at compile time.
+pub(crate) const F_ROT_FWD: i8 = 0;
+pub(crate) const F_ROT_REV: i8 = 1;
+pub(crate) const F_REFL_FWD: i8 = 2;
+pub(crate) const F_REFL_REV: i8 = 3;
+pub(crate) const F_SCALE: i8 = 4;
+pub(crate) const F_SHEAR_ADD_I: i8 = 5;
+pub(crate) const F_SHEAR_SUB_I: i8 = 6;
+pub(crate) const F_SHEAR_ADD_J: i8 = 7;
+pub(crate) const F_SHEAR_SUB_J: i8 = 8;
+
+/// Which instruction-set kernel executes the batched `f32` inner loops.
+///
+/// All variants exist on every build target so CLI parsing and
+/// diagnostics are uniform; [`KernelIsa::is_supported`] reports whether
+/// the *running host* can execute a variant (compile target **and**
+/// runtime CPU feature detection).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum KernelIsa {
+    /// Portable scalar kernel (always supported; the bitwise reference).
+    Scalar,
+    /// 128-bit NEON, 4 `f32` lanes (aarch64).
+    Neon,
+    /// 256-bit AVX2, 8 `f32` lanes (x86_64).
+    Avx2,
+    /// 512-bit AVX-512F, 16 `f32` lanes (x86_64).
+    Avx512,
+}
+
+impl KernelIsa {
+    /// Kernel name as accepted by `--kernel` / `FASTES_KERNEL` and
+    /// reported by serve metrics and `fastes bench --json`.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            KernelIsa::Scalar => "scalar",
+            KernelIsa::Neon => "neon",
+            KernelIsa::Avx2 => "avx2",
+            KernelIsa::Avx512 => "avx512",
+        }
+    }
+
+    /// Parse a kernel name (`"auto"` is handled by the callers — it means
+    /// "no explicit kernel", i.e. use [`default_kernel`]).
+    pub fn from_name(name: &str) -> Option<KernelIsa> {
+        match name {
+            "scalar" => Some(KernelIsa::Scalar),
+            "neon" => Some(KernelIsa::Neon),
+            "avx2" => Some(KernelIsa::Avx2),
+            "avx512" | "avx512f" => Some(KernelIsa::Avx512),
+            _ => None,
+        }
+    }
+
+    /// `f32` lanes per vector register of this kernel.
+    pub fn lanes(self) -> usize {
+        match self {
+            KernelIsa::Scalar => 1,
+            KernelIsa::Neon => 4,
+            KernelIsa::Avx2 => 8,
+            KernelIsa::Avx512 => 16,
+        }
+    }
+
+    /// `true` when the running host can execute this kernel (compile
+    /// target and runtime CPU features).
+    pub fn is_supported(self) -> bool {
+        match self {
+            KernelIsa::Scalar => true,
+            KernelIsa::Avx2 => {
+                #[cfg(target_arch = "x86_64")]
+                {
+                    is_x86_feature_detected!("avx2")
+                }
+                #[cfg(not(target_arch = "x86_64"))]
+                {
+                    false
+                }
+            }
+            KernelIsa::Avx512 => {
+                #[cfg(target_arch = "x86_64")]
+                {
+                    is_x86_feature_detected!("avx512f")
+                }
+                #[cfg(not(target_arch = "x86_64"))]
+                {
+                    false
+                }
+            }
+            KernelIsa::Neon => {
+                #[cfg(target_arch = "aarch64")]
+                {
+                    std::arch::is_aarch64_feature_detected!("neon")
+                }
+                #[cfg(not(target_arch = "aarch64"))]
+                {
+                    false
+                }
+            }
+        }
+    }
+
+    /// Best supported kernel of the running host:
+    /// `avx512` → `avx2` → `neon` → `scalar`.
+    pub fn detect() -> KernelIsa {
+        for isa in [KernelIsa::Avx512, KernelIsa::Avx2, KernelIsa::Neon] {
+            if isa.is_supported() {
+                return isa;
+            }
+        }
+        KernelIsa::Scalar
+    }
+
+    /// Every kernel the running host supports (always includes
+    /// [`KernelIsa::Scalar`]). The conformance suite iterates this.
+    pub fn available() -> Vec<KernelIsa> {
+        [KernelIsa::Scalar, KernelIsa::Neon, KernelIsa::Avx2, KernelIsa::Avx512]
+            .into_iter()
+            .filter(|isa| isa.is_supported())
+            .collect()
+    }
+}
+
+static KERNEL_OVERRIDE: OnceLock<KernelIsa> = OnceLock::new();
+static KERNEL_RESOLVED: OnceLock<KernelIsa> = OnceLock::new();
+
+/// Pin the process-default kernel (the `--kernel` CLI flag). Returns
+/// `false` when the ISA is unsupported on this host or a *different*
+/// default was already pinned; engines carrying an explicit
+/// [`ExecConfig::kernel`](super::pool::ExecConfig) are unaffected either
+/// way.
+pub fn set_default_kernel(isa: KernelIsa) -> bool {
+    if !isa.is_supported() {
+        return false;
+    }
+    KERNEL_OVERRIDE.set(isa).is_ok() || KERNEL_OVERRIDE.get() == Some(&isa)
+}
+
+/// The process-default kernel, resolved once: an explicit
+/// [`set_default_kernel`] pin wins, then the `FASTES_KERNEL` environment
+/// override (unsupported/unknown values fall back to detection with a
+/// warning), then [`KernelIsa::detect`].
+pub fn default_kernel() -> KernelIsa {
+    if let Some(&isa) = KERNEL_OVERRIDE.get() {
+        return isa;
+    }
+    *KERNEL_RESOLVED.get_or_init(|| match std::env::var("FASTES_KERNEL") {
+        Ok(name) if !name.is_empty() && name != "auto" => match KernelIsa::from_name(&name) {
+            Some(isa) if isa.is_supported() => isa,
+            Some(isa) => {
+                let fallback = KernelIsa::detect();
+                eprintln!(
+                    "fastes: FASTES_KERNEL={name} requests the {} kernel, which this host \
+                     does not support; falling back to {}",
+                    isa.as_str(),
+                    fallback.as_str()
+                );
+                fallback
+            }
+            None => {
+                let fallback = KernelIsa::detect();
+                eprintln!(
+                    "fastes: unknown FASTES_KERNEL={name} (expected \
+                     auto|scalar|avx2|avx512|neon); falling back to {}",
+                    fallback.as_str()
+                );
+                fallback
+            }
+        },
+        _ => KernelIsa::detect(),
+    })
+}
+
+/// Apply one fused stage over `w` columns of rows `ri`/`rj` with the
+/// selected kernel. The per-element arithmetic is identical across every
+/// kernel (see module docs), so the choice of `isa` never changes a
+/// single output bit.
+///
+/// # Safety
+/// `isa` must be supported on the running host ([`KernelIsa::is_supported`]).
+/// The caller must guarantee exclusive access to `ri[0..w]` and
+/// `rj[0..w]`, which must not overlap — except for [`F_SCALE`], which
+/// ignores `rj` entirely (pass `ri` again).
+#[inline]
+pub(crate) unsafe fn apply_stage(
+    isa: KernelIsa,
+    op: i8,
+    ri: *mut f32,
+    rj: *mut f32,
+    w: usize,
+    c: f32,
+    s: f32,
+) {
+    match isa {
+        KernelIsa::Scalar => scalar::apply_stage(op, ri, rj, w, c, s),
+        #[cfg(target_arch = "x86_64")]
+        KernelIsa::Avx2 => avx2::apply_stage(op, ri, rj, w, c, s),
+        #[cfg(target_arch = "x86_64")]
+        KernelIsa::Avx512 => avx512::apply_stage(op, ri, rj, w, c, s),
+        #[cfg(target_arch = "aarch64")]
+        KernelIsa::Neon => neon::apply_stage(op, ri, rj, w, c, s),
+        // unsupported-on-this-target variants cannot be constructed on the
+        // resolved paths (is_supported gates them); run scalar regardless
+        #[allow(unreachable_patterns)]
+        _ => scalar::apply_stage(op, ri, rj, w, c, s),
+    }
+}
+
+/// The portable scalar kernel — the bitwise reference every vector kernel
+/// is held to. One match per stage, then a tight per-element loop; the
+/// arithmetic below is the single source of truth for what "one stage"
+/// computes per element.
+pub(crate) mod scalar {
+    use super::{
+        F_REFL_FWD, F_REFL_REV, F_ROT_FWD, F_ROT_REV, F_SCALE, F_SHEAR_ADD_I, F_SHEAR_ADD_J,
+        F_SHEAR_SUB_I, F_SHEAR_SUB_J,
+    };
+
+    /// Apply one fused stage over `w` columns, element at a time.
+    ///
+    /// # Safety
+    /// Exclusive access to `ri[0..w]` and `rj[0..w]`, non-overlapping
+    /// (except [`F_SCALE`], which ignores `rj`).
+    #[inline]
+    pub(crate) unsafe fn apply_stage(
+        op: i8,
+        ri: *mut f32,
+        rj: *mut f32,
+        w: usize,
+        c: f32,
+        s: f32,
+    ) {
+        match op {
+            F_SCALE => {
+                for k in 0..w {
+                    *ri.add(k) *= c;
+                }
+            }
+            F_ROT_FWD => {
+                for k in 0..w {
+                    let (a, b) = (*ri.add(k), *rj.add(k));
+                    *ri.add(k) = c * a + s * b;
+                    *rj.add(k) = c * b - s * a;
+                }
+            }
+            F_ROT_REV => {
+                for k in 0..w {
+                    let (a, b) = (*ri.add(k), *rj.add(k));
+                    *ri.add(k) = c * a - s * b;
+                    *rj.add(k) = s * a + c * b;
+                }
+            }
+            F_REFL_FWD => {
+                // `-(c·b − s·a)` rather than `s·a − c·b`: matches the
+                // sequential forward path's `σ·(c·b − s·a)` bit-for-bit on
+                // signed zeros too
+                for k in 0..w {
+                    let (a, b) = (*ri.add(k), *rj.add(k));
+                    *ri.add(k) = c * a + s * b;
+                    *rj.add(k) = -(c * b - s * a);
+                }
+            }
+            F_REFL_REV => {
+                for k in 0..w {
+                    let (a, b) = (*ri.add(k), *rj.add(k));
+                    *ri.add(k) = c * a + s * b;
+                    *rj.add(k) = s * a - c * b;
+                }
+            }
+            F_SHEAR_ADD_I => {
+                for k in 0..w {
+                    *ri.add(k) += c * *rj.add(k);
+                }
+            }
+            F_SHEAR_SUB_I => {
+                for k in 0..w {
+                    *ri.add(k) -= c * *rj.add(k);
+                }
+            }
+            F_SHEAR_ADD_J => {
+                for k in 0..w {
+                    *rj.add(k) += c * *ri.add(k);
+                }
+            }
+            F_SHEAR_SUB_J => {
+                for k in 0..w {
+                    *rj.add(k) -= c * *ri.add(k);
+                }
+            }
+            other => unreachable!("bad fused opcode {other}"),
+        }
+    }
+}
+
+/// Sign-bit flip matching scalar `-x` bitwise (incl. ±0.0): AVX2.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+#[inline]
+unsafe fn neg_avx2(v: core::arch::x86_64::__m256) -> core::arch::x86_64::__m256 {
+    use core::arch::x86_64::*;
+    _mm256_xor_ps(v, _mm256_set1_ps(-0.0))
+}
+
+/// Sign-bit flip matching scalar `-x` bitwise (incl. ±0.0): AVX-512F.
+/// (`_mm512_xor_ps` needs AVX-512DQ, so xor the raw bits instead.)
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f")]
+#[inline]
+unsafe fn neg_avx512(v: core::arch::x86_64::__m512) -> core::arch::x86_64::__m512 {
+    use core::arch::x86_64::*;
+    _mm512_castsi512_ps(_mm512_xor_si512(_mm512_castps_si512(v), _mm512_set1_epi32(i32::MIN)))
+}
+
+/// Stamp out one vector kernel module from per-ISA primitives. Every
+/// instantiation implements the exact scalar arithmetic lane-wise
+/// (mul, mul, add/sub — no FMA) and runs the scalar code on the
+/// `w % LANES` tail, so the generated kernels are bitwise identical to
+/// [`scalar::apply_stage`] per element.
+macro_rules! stage_kernels {
+    ($modname:ident, $arch:ident, $feat:literal, $lanes:expr,
+     $load:ident, $store:ident, $splat:ident, $add:ident, $sub:ident, $mul:ident,
+     $neg:path) => {
+        pub(crate) mod $modname {
+            use core::arch::$arch::*;
+
+            use super::{
+                F_REFL_FWD, F_REFL_REV, F_ROT_FWD, F_ROT_REV, F_SCALE, F_SHEAR_ADD_I,
+                F_SHEAR_ADD_J, F_SHEAR_SUB_I, F_SHEAR_SUB_J,
+            };
+
+            /// `f32` lanes per vector register of this kernel.
+            #[allow(dead_code)]
+            pub(crate) const LANES: usize = $lanes;
+
+            /// Apply one fused stage over `w` columns, `LANES` at a time
+            /// (scalar tail for the remainder). Bitwise identical to
+            /// [`super::scalar::apply_stage`].
+            ///
+            /// # Safety
+            /// The `$feat` target feature must be available on the
+            /// running CPU. Exclusive access to `ri[0..w]` and
+            /// `rj[0..w]`, non-overlapping (except [`F_SCALE`], which
+            /// ignores `rj`).
+            #[target_feature(enable = $feat)]
+            pub(crate) unsafe fn apply_stage(
+                op: i8,
+                ri: *mut f32,
+                rj: *mut f32,
+                w: usize,
+                c: f32,
+                s: f32,
+            ) {
+                let mut k = 0usize;
+                match op {
+                    F_SCALE => {
+                        let cv = $splat(c);
+                        while k + LANES <= w {
+                            $store(ri.add(k), $mul($load(ri.add(k)), cv));
+                            k += LANES;
+                        }
+                        while k < w {
+                            *ri.add(k) *= c;
+                            k += 1;
+                        }
+                    }
+                    F_ROT_FWD => {
+                        let (cv, sv) = ($splat(c), $splat(s));
+                        while k + LANES <= w {
+                            let a = $load(ri.add(k));
+                            let b = $load(rj.add(k));
+                            $store(ri.add(k), $add($mul(cv, a), $mul(sv, b)));
+                            $store(rj.add(k), $sub($mul(cv, b), $mul(sv, a)));
+                            k += LANES;
+                        }
+                        while k < w {
+                            let (a, b) = (*ri.add(k), *rj.add(k));
+                            *ri.add(k) = c * a + s * b;
+                            *rj.add(k) = c * b - s * a;
+                            k += 1;
+                        }
+                    }
+                    F_ROT_REV => {
+                        let (cv, sv) = ($splat(c), $splat(s));
+                        while k + LANES <= w {
+                            let a = $load(ri.add(k));
+                            let b = $load(rj.add(k));
+                            $store(ri.add(k), $sub($mul(cv, a), $mul(sv, b)));
+                            $store(rj.add(k), $add($mul(sv, a), $mul(cv, b)));
+                            k += LANES;
+                        }
+                        while k < w {
+                            let (a, b) = (*ri.add(k), *rj.add(k));
+                            *ri.add(k) = c * a - s * b;
+                            *rj.add(k) = s * a + c * b;
+                            k += 1;
+                        }
+                    }
+                    F_REFL_FWD => {
+                        let (cv, sv) = ($splat(c), $splat(s));
+                        while k + LANES <= w {
+                            let a = $load(ri.add(k));
+                            let b = $load(rj.add(k));
+                            $store(ri.add(k), $add($mul(cv, a), $mul(sv, b)));
+                            $store(rj.add(k), $neg($sub($mul(cv, b), $mul(sv, a))));
+                            k += LANES;
+                        }
+                        while k < w {
+                            let (a, b) = (*ri.add(k), *rj.add(k));
+                            *ri.add(k) = c * a + s * b;
+                            *rj.add(k) = -(c * b - s * a);
+                            k += 1;
+                        }
+                    }
+                    F_REFL_REV => {
+                        let (cv, sv) = ($splat(c), $splat(s));
+                        while k + LANES <= w {
+                            let a = $load(ri.add(k));
+                            let b = $load(rj.add(k));
+                            $store(ri.add(k), $add($mul(cv, a), $mul(sv, b)));
+                            $store(rj.add(k), $sub($mul(sv, a), $mul(cv, b)));
+                            k += LANES;
+                        }
+                        while k < w {
+                            let (a, b) = (*ri.add(k), *rj.add(k));
+                            *ri.add(k) = c * a + s * b;
+                            *rj.add(k) = s * a - c * b;
+                            k += 1;
+                        }
+                    }
+                    F_SHEAR_ADD_I => {
+                        let cv = $splat(c);
+                        while k + LANES <= w {
+                            let a = $load(ri.add(k));
+                            let b = $load(rj.add(k));
+                            $store(ri.add(k), $add(a, $mul(cv, b)));
+                            k += LANES;
+                        }
+                        while k < w {
+                            *ri.add(k) += c * *rj.add(k);
+                            k += 1;
+                        }
+                    }
+                    F_SHEAR_SUB_I => {
+                        let cv = $splat(c);
+                        while k + LANES <= w {
+                            let a = $load(ri.add(k));
+                            let b = $load(rj.add(k));
+                            $store(ri.add(k), $sub(a, $mul(cv, b)));
+                            k += LANES;
+                        }
+                        while k < w {
+                            *ri.add(k) -= c * *rj.add(k);
+                            k += 1;
+                        }
+                    }
+                    F_SHEAR_ADD_J => {
+                        let cv = $splat(c);
+                        while k + LANES <= w {
+                            let a = $load(ri.add(k));
+                            let b = $load(rj.add(k));
+                            $store(rj.add(k), $add(b, $mul(cv, a)));
+                            k += LANES;
+                        }
+                        while k < w {
+                            *rj.add(k) += c * *ri.add(k);
+                            k += 1;
+                        }
+                    }
+                    F_SHEAR_SUB_J => {
+                        let cv = $splat(c);
+                        while k + LANES <= w {
+                            let a = $load(ri.add(k));
+                            let b = $load(rj.add(k));
+                            $store(rj.add(k), $sub(b, $mul(cv, a)));
+                            k += LANES;
+                        }
+                        while k < w {
+                            *rj.add(k) -= c * *ri.add(k);
+                            k += 1;
+                        }
+                    }
+                    other => unreachable!("bad fused opcode {other}"),
+                }
+            }
+        }
+    };
+}
+
+#[cfg(target_arch = "x86_64")]
+stage_kernels!(
+    avx2,
+    x86_64,
+    "avx2",
+    8,
+    _mm256_loadu_ps,
+    _mm256_storeu_ps,
+    _mm256_set1_ps,
+    _mm256_add_ps,
+    _mm256_sub_ps,
+    _mm256_mul_ps,
+    super::neg_avx2
+);
+
+#[cfg(target_arch = "x86_64")]
+stage_kernels!(
+    avx512,
+    x86_64,
+    "avx512f",
+    16,
+    _mm512_loadu_ps,
+    _mm512_storeu_ps,
+    _mm512_set1_ps,
+    _mm512_add_ps,
+    _mm512_sub_ps,
+    _mm512_mul_ps,
+    super::neg_avx512
+);
+
+#[cfg(target_arch = "aarch64")]
+stage_kernels!(
+    neon,
+    aarch64,
+    "neon",
+    4,
+    vld1q_f32,
+    vst1q_f32,
+    vdupq_n_f32,
+    vaddq_f32,
+    vsubq_f32,
+    vmulq_f32,
+    vnegq_f32
+);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Rng64;
+
+    const ALL_OPS: [i8; 9] = [
+        F_ROT_FWD,
+        F_ROT_REV,
+        F_REFL_FWD,
+        F_REFL_REV,
+        F_SCALE,
+        F_SHEAR_ADD_I,
+        F_SHEAR_SUB_I,
+        F_SHEAR_ADD_J,
+        F_SHEAR_SUB_J,
+    ];
+
+    #[test]
+    fn detection_is_sane() {
+        let best = KernelIsa::detect();
+        assert!(best.is_supported(), "detect() returned an unsupported ISA");
+        let avail = KernelIsa::available();
+        assert!(avail.contains(&KernelIsa::Scalar), "scalar must always be available");
+        assert!(avail.contains(&best), "detected ISA missing from available()");
+        assert!(KernelIsa::Scalar.is_supported());
+        assert!(default_kernel().is_supported());
+        // widest-first preference: if avx512 is available it must win
+        if KernelIsa::Avx512.is_supported() {
+            assert_eq!(best, KernelIsa::Avx512);
+        }
+    }
+
+    #[test]
+    fn names_round_trip() {
+        for isa in [KernelIsa::Scalar, KernelIsa::Neon, KernelIsa::Avx2, KernelIsa::Avx512] {
+            assert_eq!(KernelIsa::from_name(isa.as_str()), Some(isa));
+            assert!(isa.lanes().is_power_of_two());
+        }
+        assert_eq!(KernelIsa::from_name("auto"), None);
+        assert_eq!(KernelIsa::from_name("sse9"), None);
+    }
+
+    #[test]
+    fn every_available_kernel_matches_scalar_bitwise() {
+        // per-op, per-width kernel conformance: each available vector
+        // kernel must reproduce the scalar kernel bit-for-bit, including
+        // the masked/tail widths around every lane boundary
+        let mut rng = Rng64::new(4201);
+        let widths = [0usize, 1, 2, 3, 4, 5, 7, 8, 9, 15, 16, 17, 31, 32, 33, 47, 64];
+        for isa in KernelIsa::available() {
+            for &op in &ALL_OPS {
+                for &w in &widths {
+                    let base_i: Vec<f32> = (0..w).map(|_| rng.randn() as f32).collect();
+                    let base_j: Vec<f32> = (0..w).map(|_| rng.randn() as f32).collect();
+                    let (c, s) = (rng.randn() as f32, rng.randn() as f32);
+                    let (mut si, mut sj) = (base_i.clone(), base_j.clone());
+                    // SAFETY: disjoint buffers, exclusive access, w in range
+                    unsafe { scalar::apply_stage(op, si.as_mut_ptr(), sj.as_mut_ptr(), w, c, s) };
+                    let (mut vi, mut vj) = (base_i.clone(), base_j.clone());
+                    // SAFETY: isa comes from available(); buffers as above
+                    unsafe { apply_stage(isa, op, vi.as_mut_ptr(), vj.as_mut_ptr(), w, c, s) };
+                    assert_eq!(si, vi, "{isa:?} op={op} w={w}: row i diverged");
+                    assert_eq!(sj, vj, "{isa:?} op={op} w={w}: row j diverged");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn signed_zero_negation_matches_scalar() {
+        // the reflection kernel's negation must flip the sign bit exactly:
+        // c·b − s·a can be ±0.0 and the scalar path produces ∓0.0
+        for isa in KernelIsa::available() {
+            let w = 19usize; // vector body + tail on every ISA
+            let base_i = vec![0.0f32; w];
+            let base_j = vec![0.0f32; w];
+            let (mut si, mut sj) = (base_i.clone(), base_j.clone());
+            unsafe {
+                scalar::apply_stage(F_REFL_FWD, si.as_mut_ptr(), sj.as_mut_ptr(), w, 1.0, 0.0)
+            };
+            let (mut vi, mut vj) = (base_i.clone(), base_j.clone());
+            unsafe { apply_stage(isa, F_REFL_FWD, vi.as_mut_ptr(), vj.as_mut_ptr(), w, 1.0, 0.0) };
+            for k in 0..w {
+                assert_eq!(si[k].to_bits(), vi[k].to_bits(), "{isa:?} k={k} row i bits");
+                assert_eq!(sj[k].to_bits(), vj[k].to_bits(), "{isa:?} k={k} row j bits");
+                // and the scalar reference itself must have produced -0.0
+                assert_eq!(sj[k].to_bits(), (-0.0f32).to_bits(), "expected -0.0 at {k}");
+            }
+        }
+    }
+}

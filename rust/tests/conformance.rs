@@ -1,0 +1,224 @@
+//! Cross-engine conformance suite: every execution engine × every
+//! available SIMD kernel × both precisions × both directions × both chain
+//! families must be **bitwise equal** to the sequential scalar reference
+//! on randomized plans.
+//!
+//! This makes the repo's standing bitwise-identity guarantee systematic
+//! instead of ad-hoc: the reference is the per-stage sequential scalar
+//! apply (`GChain`/`TChain` through `FastOperator::apply`, which runs the
+//! plain `PlanArrays` loops), and the matrix under test is
+//!
+//! * engines: `Seq` (fused inline), `Spawn` (scoped threads),
+//!   `Pool` (persistent worker pool, packed cache tiles);
+//! * kernels: scalar plus every SIMD ISA the host supports
+//!   (`KernelIsa::available()` — AVX-512 / AVX2 / NEON where present);
+//! * precisions: the batched `f32` path and the fused `f64` vector path;
+//! * directions: `Forward` and `Adjoint` (`Ūᵀ` / `T̄⁻¹`);
+//! * operators: G-chains (rotations + reflections) and T-chains
+//!   (scalings + both shear kinds).
+//!
+//! A second family of tests pins the remainder-lane shapes where masked /
+//! tail loops break first: odd `n`, batch widths of 1 and `lanes ± 1`,
+//! tile widths that do not divide the vector width, and single-stage
+//! plans.
+
+use fastes::cli::figures::{random_gplan, random_tplan};
+use fastes::linalg::Rng64;
+use fastes::plan::{Direction, ExecPolicy, FastOperator, Plan};
+use fastes::transforms::{
+    ExecConfig, GChain, GKind, GTransform, KernelIsa, SignalBlock, TChain, TTransform,
+};
+
+/// Eager thresholds so every parallel path engages at test sizes, pinned
+/// to one SIMD kernel.
+fn eager_cfg(threads: usize, tile_cols: usize, isa: KernelIsa) -> ExecConfig {
+    ExecConfig { threads, min_work: 1, layer_min_work: 1.0, tile_cols, kernel: Some(isa) }
+}
+
+fn signals(rng: &mut Rng64, n: usize, batch: usize) -> Vec<Vec<f32>> {
+    (0..batch).map(|_| (0..n).map(|_| rng.randn() as f32).collect()).collect()
+}
+
+/// Assert {Seq, Spawn, Pool} × every available kernel × both directions
+/// agree bitwise with the sequential scalar reference for one operator.
+fn check_engine_matrix(
+    label: &str,
+    reference: &dyn FastOperator,
+    plan: &Plan,
+    sigs: &[Vec<f32>],
+    tile_cols: usize,
+) {
+    for dir in [Direction::Forward, Direction::Adjoint] {
+        let mut want = SignalBlock::from_signals(sigs).unwrap();
+        reference.apply(&mut want, dir, &ExecPolicy::Seq).unwrap();
+        for isa in KernelIsa::available() {
+            // Seq engine, explicit kernel (the fused single-pass sweep)
+            let mut got = SignalBlock::from_signals(sigs).unwrap();
+            plan.compiled().apply_batch_inline_isa(&mut got, dir == Direction::Adjoint, isa);
+            assert_eq!(
+                want.data,
+                got.data,
+                "{label}: seq/{} {dir:?} diverged from scalar reference",
+                isa.as_str()
+            );
+            // Spawn and Pool engines under the same kernel pin
+            for policy in [
+                ExecPolicy::Spawn(eager_cfg(3, tile_cols, isa)),
+                ExecPolicy::Pool(eager_cfg(3, tile_cols, isa)),
+            ] {
+                let mut got = SignalBlock::from_signals(sigs).unwrap();
+                plan.apply(&mut got, dir, &policy).unwrap();
+                assert_eq!(
+                    want.data,
+                    got.data,
+                    "{label}: {}/{} {dir:?} diverged from scalar reference",
+                    policy.engine(),
+                    isa.as_str()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn engine_matrix_g_chains_bitwise_equal_scalar_reference() {
+    let mut rng = Rng64::new(20_001);
+    // (n, stages, batch, tile): mixed even/odd n, batches around the
+    // 4/8/16 lane widths, tiles that do not divide any vector width
+    for (n, g, batch, tile) in
+        [(24usize, 144usize, 13usize, 3usize), (33, 200, 8, 5), (17, 120, 16, 7), (40, 320, 31, 6)]
+    {
+        let ch = random_gplan(n, g, &mut rng);
+        let plan = Plan::from(&ch).build();
+        let sigs = signals(&mut rng, n, batch);
+        check_engine_matrix(&format!("G n={n} g={g} batch={batch}"), &ch, &plan, &sigs, tile);
+    }
+}
+
+#[test]
+fn engine_matrix_t_chains_bitwise_equal_scalar_reference() {
+    let mut rng = Rng64::new(20_002);
+    for (n, m, batch, tile) in
+        [(20usize, 160usize, 13usize, 3usize), (27, 216, 9, 5), (16, 96, 17, 6)]
+    {
+        let ch = random_tplan(n, m, &mut rng);
+        let plan = Plan::from(&ch).build();
+        let sigs = signals(&mut rng, n, batch);
+        check_engine_matrix(&format!("T n={n} m={m} batch={batch}"), &ch, &plan, &sigs, tile);
+    }
+}
+
+#[test]
+fn f64_vector_path_bitwise_equal_sequential_chain() {
+    // the fused f64 stream (Seq engine of apply_vec) vs the per-stage
+    // sequential chain apply, both chain families, both directions
+    let mut rng = Rng64::new(20_003);
+    for trial in 0..6 {
+        let n = 15 + 2 * trial; // odd n throughout
+        let gch = random_gplan(n, 8 * n, &mut rng);
+        let tch = random_tplan(n, 8 * n, &mut rng);
+        let gplan = Plan::from(&gch).build();
+        let tplan = Plan::from(&tch).build();
+        let x: Vec<f64> = (0..n).map(|_| rng.randn()).collect();
+        for dir in [Direction::Forward, Direction::Adjoint] {
+            let mut want = x.clone();
+            FastOperator::apply_vec(&gch, &mut want, dir).unwrap();
+            let mut got = x.clone();
+            gplan.apply_vec(&mut got, dir).unwrap();
+            assert_eq!(want, got, "G f64 n={n} {dir:?} diverged");
+            let mut want = x.clone();
+            FastOperator::apply_vec(&tch, &mut want, dir).unwrap();
+            let mut got = x.clone();
+            tplan.apply_vec(&mut got, dir).unwrap();
+            assert_eq!(want, got, "T f64 n={n} {dir:?} diverged");
+        }
+    }
+}
+
+#[test]
+fn remainder_lane_batches_around_every_lane_width() {
+    // batch widths of exactly 1 and lanes ± 1 for every available kernel:
+    // the shapes where a masked/tail loop that is off by one element
+    // breaks first. n is odd so row remainders cannot hide it either.
+    let mut rng = Rng64::new(20_004);
+    let n = 19;
+    let gch = random_gplan(n, 6 * n, &mut rng);
+    let tch = random_tplan(n, 6 * n, &mut rng);
+    let gplan = Plan::from(&gch).build();
+    let tplan = Plan::from(&tch).build();
+    let mut batches = vec![1usize];
+    for isa in KernelIsa::available() {
+        let l = isa.lanes();
+        for b in [l.saturating_sub(1), l, l + 1] {
+            if b >= 1 && !batches.contains(&b) {
+                batches.push(b);
+            }
+        }
+    }
+    for &batch in &batches {
+        let sigs = signals(&mut rng, n, batch);
+        check_engine_matrix(&format!("G remainder batch={batch}"), &gch, &gplan, &sigs, 3);
+        check_engine_matrix(&format!("T remainder batch={batch}"), &tch, &tplan, &sigs, 3);
+    }
+}
+
+#[test]
+fn tile_widths_that_do_not_divide_the_vector_width() {
+    // tile_cols ∤ lane width forces every pooled tile through the vector
+    // body *and* the scalar tail, plus the ragged last tile of the batch
+    let mut rng = Rng64::new(20_005);
+    let n = 21;
+    let ch = random_gplan(n, 8 * n, &mut rng);
+    let plan = Plan::from(&ch).build();
+    let sigs = signals(&mut rng, n, 29); // 29 columns: ragged vs any tile
+    for tile in [1usize, 3, 5, 7, 9, 13] {
+        check_engine_matrix(&format!("G tile={tile}"), &ch, &plan, &sigs, tile);
+    }
+}
+
+#[test]
+fn single_stage_plans_conform() {
+    // a one-stage plan has one layer, one superstage and no fusion slack —
+    // the smallest possible stream must still run every engine correctly
+    let mut rng = Rng64::new(20_006);
+    let n = 9;
+    let mut gch = GChain::identity(n);
+    gch.transforms.push(GTransform::new(2, 7, 0.6, 0.8, GKind::Reflection));
+    let gplan = Plan::from(&gch).build();
+    assert_eq!(gplan.len(), 1);
+    assert_eq!(gplan.num_superstages(), 1);
+    for tch in [
+        TChain { n, transforms: vec![TTransform::UpperShear { i: 1, j: 6, a: 0.37 }] },
+        TChain { n, transforms: vec![TTransform::Scaling { i: 4, a: 1.618 }] },
+    ] {
+        let tplan = Plan::from(&tch).build();
+        assert_eq!(tplan.len(), 1);
+        for batch in [1usize, 5, 17] {
+            let sigs = signals(&mut rng, n, batch);
+            check_engine_matrix(&format!("T single-stage batch={batch}"), &tch, &tplan, &sigs, 3);
+        }
+    }
+    for batch in [1usize, 5, 17] {
+        let sigs = signals(&mut rng, n, batch);
+        check_engine_matrix(&format!("G single-stage batch={batch}"), &gch, &gplan, &sigs, 3);
+    }
+}
+
+#[test]
+fn scalar_pin_matches_default_kernel_results() {
+    // whatever kernel the process default resolves to, pinning scalar must
+    // give byte-identical blocks — the bitwise guarantee end to end
+    let mut rng = Rng64::new(20_007);
+    let n = 31;
+    let ch = random_gplan(n, 6 * n, &mut rng);
+    let plan = Plan::from(&ch).build();
+    let sigs = signals(&mut rng, n, 23);
+    for dir in [Direction::Forward, Direction::Adjoint] {
+        let mut default_run = SignalBlock::from_signals(&sigs).unwrap();
+        plan.apply(&mut default_run, dir, &ExecPolicy::pool()).unwrap();
+        let mut scalar_run = SignalBlock::from_signals(&sigs).unwrap();
+        plan.apply(&mut scalar_run, dir, &ExecPolicy::Pool(eager_cfg(3, 4, KernelIsa::Scalar)))
+            .unwrap();
+        assert_eq!(default_run.data, scalar_run.data, "{dir:?}: default kernel != scalar");
+    }
+}

@@ -194,7 +194,8 @@ fn saved_plan_serves_bitwise_identically_to_in_memory_plan() {
     let disk_plan = Plan::load(&path).unwrap();
     let _ = std::fs::remove_file(&path);
 
-    let eager = ExecConfig { threads: 3, min_work: 1, layer_min_work: 1.0, tile_cols: 2 };
+    let eager =
+        ExecConfig { threads: 3, min_work: 1, layer_min_work: 1.0, tile_cols: 2, kernel: None };
     let start = |plan: Arc<Plan>, cfg: ExecConfig| {
         Coordinator::start(
             move || {

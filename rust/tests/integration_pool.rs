@@ -3,24 +3,21 @@
 //! containment, and bitwise agreement of the pooled fused executor with
 //! the sequential apply through the public API and the serve coordinator.
 
-// the coordinator test deliberately drives the deprecated constructor
-// shims; the modern `with_policy` path is covered by integration_plan.rs
-#![allow(deprecated)]
-
 use std::collections::HashSet;
 use std::sync::Mutex;
 
 use fastes::cli::figures::{random_gplan, random_tplan};
 use fastes::linalg::Rng64;
+use fastes::plan::{ExecPolicy, Plan};
 use fastes::serve::{Backend, Coordinator, NativeGftBackend, ServeConfig, TransformDirection};
 use fastes::transforms::{
     apply_gchain_batch_f32, ChainKind, CompiledPlan, ExecConfig, SignalBlock, WorkerPool,
 };
 
 /// A pooled-executor config with thresholds low enough that the parallel
-/// paths really engage at test sizes.
+/// paths really engage at test sizes (process-default SIMD kernel).
 fn eager_cfg(threads: usize, tile_cols: usize) -> ExecConfig {
-    ExecConfig { threads, min_work: 1, layer_min_work: 1.0, tile_cols }
+    ExecConfig { threads, min_work: 1, layer_min_work: 1.0, tile_cols, kernel: None }
 }
 
 #[test]
@@ -31,7 +28,7 @@ fn pool_survives_1000_applies_without_thread_growth() {
     let mut rng = Rng64::new(9101);
     let n = 24;
     let ch = random_gplan(n, 6 * n, &mut rng);
-    let cp = ch.compile();
+    let cp = CompiledPlan::from_gchain(&ch);
     let cfg = eager_cfg(3, 2);
     let signals: Vec<Vec<f32>> =
         (0..8).map(|_| (0..n).map(|_| rng.randn() as f32).collect()).collect();
@@ -68,7 +65,7 @@ fn pool_drop_joins_and_leaves_results_intact() {
     let mut rng = Rng64::new(9102);
     let n = 32;
     let ch = random_gplan(n, 6 * n, &mut rng);
-    let cp = ch.compile();
+    let cp = CompiledPlan::from_gchain(&ch);
     let signals: Vec<Vec<f32>> =
         (0..16).map(|_| (0..n).map(|_| rng.randn() as f32).collect()).collect();
     let mut reference = SignalBlock::from_signals(&signals).unwrap();
@@ -117,12 +114,17 @@ fn pooled_coordinator_serves_identical_answers_to_sequential() {
     let n = 48;
     let mut rng = Rng64::new(9104);
     let ch = random_gplan(n, 1200, &mut rng);
-    let plan = ch.to_plan();
+    let plan = Plan::from(&ch).build();
     let p1 = plan.clone();
     let seq = Coordinator::start(
         move || {
-            Ok(Box::new(NativeGftBackend::new(p1, TransformDirection::Forward, 8, None))
-                as Box<dyn Backend>)
+            Ok(Box::new(NativeGftBackend::with_policy(
+                p1,
+                TransformDirection::Forward,
+                8,
+                None,
+                ExecPolicy::Seq,
+            )?) as Box<dyn Backend>)
         },
         ServeConfig { max_batch: 8, ..Default::default() },
     )
@@ -130,13 +132,13 @@ fn pooled_coordinator_serves_identical_answers_to_sequential() {
     let p2 = plan.clone();
     let pooled = Coordinator::start(
         move || {
-            Ok(Box::new(NativeGftBackend::with_pool(
+            Ok(Box::new(NativeGftBackend::with_policy(
                 p2,
                 TransformDirection::Forward,
                 8,
                 None,
-                ExecConfig { threads: 4, min_work: 1, layer_min_work: 1.0, tile_cols: 2 },
-            )) as Box<dyn Backend>)
+                ExecPolicy::Pool(eager_cfg(4, 2)),
+            )?) as Box<dyn Backend>)
         },
         ServeConfig { max_batch: 8, ..Default::default() },
     )

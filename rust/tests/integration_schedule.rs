@@ -3,14 +3,11 @@
 //! fixed-seed chains mixing rotations, reflections, scalings and shears —
 //! plus a coordinator concurrency test over the parallel compiled backend.
 
-// this suite intentionally exercises the deprecated constructor shims —
-// they must keep serving bitwise-identical answers until removal
-#![allow(deprecated)]
-
 use fastes::cli::figures::{random_gplan, random_tplan};
 use fastes::linalg::{Mat, Rng64};
+use fastes::plan::{ExecPolicy, Plan};
 use fastes::serve::{Backend, Coordinator, NativeGftBackend, ServeConfig, TransformDirection};
-use fastes::transforms::{ChainKind, CompiledPlan, GChain, SignalBlock, TChain};
+use fastes::transforms::{ChainKind, CompiledPlan, ExecConfig, GChain, SignalBlock, TChain};
 
 /// Fixed-seed G-chain (rotations + reflections) from the canonical
 /// generator the CLI and benches use.
@@ -33,7 +30,7 @@ fn max_dev(a: &[f64], b: &[f64]) -> f64 {
 fn golden_g_compiled_matches_dense_matmul() {
     for (seed, n, g) in [(8101u64, 12usize, 80usize), (8102, 24, 300), (8103, 40, 700)] {
         let ch = golden_gchain(n, g, seed);
-        let cp = ch.compile();
+        let cp = CompiledPlan::from_gchain(&ch);
         assert_eq!(cp.len(), g);
         let dense = ch.to_dense();
         let mut rng = Rng64::new(seed ^ 0xDEAD);
@@ -59,7 +56,7 @@ fn golden_g_compiled_matches_dense_matmul() {
 fn golden_t_compiled_matches_dense_matmul() {
     for (seed, n, m) in [(8201u64, 10usize, 60usize), (8202, 20, 200)] {
         let ch = golden_tchain(n, m, seed);
-        let cp = ch.compile();
+        let cp = CompiledPlan::from_tchain(&ch);
         assert_eq!(cp.len(), m);
         let dense = ch.to_dense();
         let dense_inv = ch.to_dense_inv();
@@ -93,7 +90,7 @@ fn golden_g_compiled_reconstruction_matches_dense() {
     // full reconstruction through the compiled plan: Ū diag(s) Ūᵀ x
     let n = 16;
     let ch = golden_gchain(n, 120, 8301);
-    let cp = ch.compile();
+    let cp = CompiledPlan::from_gchain(&ch);
     let mut rng = Rng64::new(8302);
     let spec: Vec<f64> = (0..n).map(|_| rng.randn()).collect();
     let dense = ch.reconstruct(&spec);
@@ -141,17 +138,16 @@ fn concurrent_compiled_backend_preserves_request_response_pairing() {
     // batch (16) ≥ 2 × threads (4) — the column-parallel mode really runs.
     let n = 48;
     let ch = golden_gchain(n, 1200, 8501);
-    let plan = ch.to_plan();
+    let plan = Plan::from(&ch).build();
     let coord = Coordinator::start(
         move || {
-            Ok(Box::new(NativeGftBackend::with_schedule(
+            Ok(Box::new(NativeGftBackend::with_policy(
                 plan,
                 TransformDirection::Forward,
                 16,
                 None,
-                true,
-                4,
-            )) as Box<dyn Backend>)
+                ExecPolicy::Spawn(ExecConfig::spawn().with_threads(4)),
+            )?) as Box<dyn Backend>)
         },
         ServeConfig { max_batch: 16, ..Default::default() },
     )
@@ -187,12 +183,17 @@ fn scheduled_and_sequential_backends_serve_identical_answers() {
     // g × batch (8) clears PARALLEL_MIN_WORK so the threaded path runs.
     let n = 24;
     let ch = golden_gchain(n, 1200, 8601);
-    let plan = ch.to_plan();
+    let plan = Plan::from(&ch).build();
     let p1 = plan.clone();
     let seq = Coordinator::start(
         move || {
-            Ok(Box::new(NativeGftBackend::new(p1, TransformDirection::Forward, 8, None))
-                as Box<dyn Backend>)
+            Ok(Box::new(NativeGftBackend::with_policy(
+                p1,
+                TransformDirection::Forward,
+                8,
+                None,
+                ExecPolicy::Seq,
+            )?) as Box<dyn Backend>)
         },
         ServeConfig { max_batch: 8, ..Default::default() },
     )
@@ -200,14 +201,13 @@ fn scheduled_and_sequential_backends_serve_identical_answers() {
     let p2 = plan.clone();
     let sched = Coordinator::start(
         move || {
-            Ok(Box::new(NativeGftBackend::with_schedule(
+            Ok(Box::new(NativeGftBackend::with_policy(
                 p2,
                 TransformDirection::Forward,
                 8,
                 None,
-                true,
-                3,
-            )) as Box<dyn Backend>)
+                ExecPolicy::Spawn(ExecConfig::spawn().with_threads(3)),
+            )?) as Box<dyn Backend>)
         },
         ServeConfig { max_batch: 8, ..Default::default() },
     )
@@ -230,7 +230,7 @@ fn compiled_plan_schedule_shape_is_reported() {
     let n = 256;
     let g = 2 * n * 8;
     let ch = golden_gchain(n, g, 8701);
-    let st = ch.compile().stats();
+    let st = CompiledPlan::from_gchain(&ch).stats();
     assert_eq!(st.stages, g);
     assert!(st.layers < g, "no packing happened");
     assert!(st.max_width <= n / 2);
@@ -241,7 +241,7 @@ fn compiled_plan_schedule_shape_is_reported() {
     );
     // T-chain path too
     let tch = golden_tchain(64, 800, 8702);
-    let tst = tch.compile().stats();
+    let tst = CompiledPlan::from_tchain(&tch).stats();
     assert_eq!(tst.stages, 800);
     assert!(tst.layers < 800);
 }
@@ -251,7 +251,7 @@ fn compiled_t_reconstruction_similarity_matches_dense() {
     // T̄ diag(c) T̄⁻¹ x through the compiled plan vs dense reconstruct()
     let n = 12;
     let ch = golden_tchain(n, 70, 8801);
-    let cp = ch.compile();
+    let cp = CompiledPlan::from_tchain(&ch);
     let mut rng = Rng64::new(8802);
     let spec: Vec<f64> = (0..n).map(|i| 1.0 + i as f64).collect();
     let dense = ch.reconstruct(&spec);
@@ -271,7 +271,7 @@ fn compiled_t_reconstruction_similarity_matches_dense() {
 fn mat_is_used_for_dense_checks() {
     // keep the Mat import honest (and assert identity compile round-trip)
     let ch = golden_gchain(8, 40, 8901);
-    let cp = ch.compile();
+    let cp = CompiledPlan::from_gchain(&ch);
     let mut m = Mat::eye(8);
     // apply the compiled plan column-by-column to build Ū densely
     let mut cols: Vec<Vec<f64>> = Vec::new();

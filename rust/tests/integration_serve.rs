@@ -1,20 +1,29 @@
 //! End-to-end serving integration: factored GFT plans through the
 //! coordinator, native and PJRT backends, correctness under load.
 
-// this suite intentionally exercises the deprecated constructor shims —
-// they must keep serving correct answers until removal (the modern
-// `with_policy` path is covered by integration_plan.rs)
-#![allow(deprecated)]
-
 use std::path::Path;
 
 use fastes::factor::{SymFactorizer, SymOptions};
 use fastes::graphs;
 use fastes::linalg::Rng64;
+use fastes::plan::{ExecPolicy, Plan};
 use fastes::runtime::ArtifactStore;
 use fastes::serve::{
     Backend, Coordinator, NativeGftBackend, PjrtGftBackend, ServeConfig, TransformDirection,
 };
+
+/// Native backend over a plan with the given policy, boxed for the
+/// coordinator factory.
+fn native(
+    plan: std::sync::Arc<Plan>,
+    direction: TransformDirection,
+    batch: usize,
+    filter: Option<Vec<f32>>,
+    policy: ExecPolicy,
+) -> fastes::Result<Box<dyn Backend>> {
+    Ok(Box::new(NativeGftBackend::with_policy(plan, direction, batch, filter, policy)?)
+        as Box<dyn Backend>)
+}
 
 fn factored_plan(n: usize, g: usize, seed: u64) -> (fastes::transforms::GChain, fastes::transforms::PlanArrays) {
     let mut rng = Rng64::new(seed);
@@ -28,12 +37,10 @@ fn factored_plan(n: usize, g: usize, seed: u64) -> (fastes::transforms::GChain, 
 #[test]
 fn native_serving_matches_reference_under_load() {
     let n = 32;
-    let (chain, plan) = factored_plan(n, 200, 1001);
+    let (chain, arrays) = factored_plan(n, 200, 1001);
+    let plan = Plan::from(fastes::transforms::GChain::from_plan_exact(&arrays)).build();
     let coord = Coordinator::start(
-        move || {
-            Ok(Box::new(NativeGftBackend::new(plan, TransformDirection::Forward, 8, None))
-                as Box<dyn Backend>)
-        },
+        move || native(plan, TransformDirection::Forward, 8, None, ExecPolicy::Seq),
         ServeConfig { max_batch: 8, ..Default::default() },
     )
     .unwrap();
@@ -67,12 +74,9 @@ fn pjrt_serving_matches_native_serving() {
     let (_, plan) = factored_plan(n, 48, 1003);
     let batch = 4;
 
-    let p1 = plan.clone();
-    let native = Coordinator::start(
-        move || {
-            Ok(Box::new(NativeGftBackend::new(p1, TransformDirection::Forward, batch, None))
-                as Box<dyn Backend>)
-        },
+    let p1 = Plan::from(fastes::transforms::GChain::from_plan_exact(&plan)).build();
+    let native_coord = Coordinator::start(
+        move || native(p1, TransformDirection::Forward, batch, None, ExecPolicy::Seq),
         ServeConfig { max_batch: batch, ..Default::default() },
     )
     .unwrap();
@@ -90,13 +94,13 @@ fn pjrt_serving_matches_native_serving() {
     let mut rng = Rng64::new(1004);
     for _ in 0..20 {
         let sig: Vec<f32> = (0..n).map(|_| rng.randn() as f32).collect();
-        let a = native.submit(sig.clone()).unwrap().wait().unwrap();
+        let a = native_coord.submit(sig.clone()).unwrap().wait().unwrap();
         let b = pjrt.submit(sig).unwrap().wait().unwrap();
         for (x, y) in a.iter().zip(b.iter()) {
             assert!((x - y).abs() < 1e-4, "{x} vs {y}");
         }
     }
-    assert_eq!(native.shutdown().errors, 0);
+    assert_eq!(native_coord.shutdown().errors, 0);
     assert_eq!(pjrt.shutdown().errors, 0);
 }
 
@@ -122,18 +126,12 @@ fn pjrt_backend_reports_missing_artifact() {
 #[test]
 fn filter_serving_is_consistent_with_manual_composition() {
     let n = 24;
-    let (chain, plan) = factored_plan(n, 150, 1005);
+    let (chain, arrays) = factored_plan(n, 150, 1005);
+    let plan = Plan::from(fastes::transforms::GChain::from_plan_exact(&arrays)).build();
     let h: Vec<f32> = (0..n).map(|i| 1.0 / (1.0 + i as f32)).collect();
     let h2 = h.clone();
     let coord = Coordinator::start(
-        move || {
-            Ok(Box::new(NativeGftBackend::new(
-                plan,
-                TransformDirection::Filter,
-                4,
-                Some(h2),
-            )) as Box<dyn Backend>)
-        },
+        move || native(plan, TransformDirection::Filter, 4, Some(h2), ExecPolicy::pool()),
         ServeConfig { max_batch: 4, ..Default::default() },
     )
     .unwrap();

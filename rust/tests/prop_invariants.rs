@@ -1,12 +1,9 @@
 //! Property-based tests (crate-local harness — `fastes::prop`) over the
 //! coordinator, the chains and Algorithm 1.
 
-// the coordinator pairing property drives the deprecated constructor
-// shim; the modern `with_policy` path is covered by integration_plan.rs
-#![allow(deprecated)]
-
 use fastes::factor::{GeneralFactorizer, GeneralOptions, SymFactorizer, SymOptions};
 use fastes::linalg::{Mat, Rng64};
+use fastes::plan::{ExecPolicy, Plan};
 use fastes::prop::{forall, PropConfig};
 use fastes::serve::{
     Backend, Coordinator, NativeGftBackend, ServeConfig, TransformDirection,
@@ -195,15 +192,16 @@ fn prop_coordinator_preserves_request_response_pairing() {
         },
         |(n, signals)| {
             let n = *n;
-            let plan = fastes::transforms::PlanArrays { n, ..Default::default() };
+            let plan = Plan::from(GChain::identity(n)).build();
             let coord = Coordinator::start(
                 move || {
-                    Ok(Box::new(NativeGftBackend::new(
+                    Ok(Box::new(NativeGftBackend::with_policy(
                         plan,
                         TransformDirection::Forward,
                         4,
                         None,
-                    )) as Box<dyn Backend>)
+                        ExecPolicy::pool(),
+                    )?) as Box<dyn Backend>)
                 },
                 ServeConfig { max_batch: 4, ..Default::default() },
             )
@@ -242,7 +240,11 @@ fn prop_schedule_layers_have_pairwise_disjoint_supports() {
             (random_gchain(rng, n, 4 * n), random_tchain(rng, n, 4 * n))
         },
         |(gch, tch)| {
-            for cp in [gch.compile(), tch.compile()] {
+            let compiled = [
+                fastes::transforms::CompiledPlan::from_gchain(gch),
+                fastes::transforms::CompiledPlan::from_tchain(tch),
+            ];
+            for cp in compiled {
                 let mut total = 0usize;
                 for l in 0..cp.num_layers() {
                     let mut seen = std::collections::HashSet::new();
@@ -286,8 +288,8 @@ fn prop_scheduled_apply_matches_sequential() {
             let max_dev = |a: &[f64], b: &[f64]| {
                 a.iter().zip(b.iter()).map(|(u, v)| (u - v).abs()).fold(0.0f64, f64::max)
             };
-            let gcp = gch.compile();
-            let tcp = tch.compile();
+            let gcp = fastes::transforms::CompiledPlan::from_gchain(gch);
+            let tcp = fastes::transforms::CompiledPlan::from_tchain(tch);
             let mut seq = x.clone();
             let mut sched = x.clone();
             gch.apply_vec(&mut seq);
@@ -369,7 +371,8 @@ fn prop_pooled_apply_matches_sequential_batch() {
     // really runs at property sizes.
     use fastes::transforms::{ChainKind, CompiledPlan, ExecConfig, SignalBlock, WorkerPool};
     let pool = WorkerPool::new(2);
-    let cfg = ExecConfig { threads: 3, min_work: 1, layer_min_work: 1.0, tile_cols: 2 };
+    let cfg =
+        ExecConfig { threads: 3, min_work: 1, layer_min_work: 1.0, tile_cols: 2, kernel: None };
     forall(
         "pooled apply ≡ sequential apply (G and T, fwd and rev)",
         PropConfig { cases: 15, max_size: 16, ..Default::default() },
