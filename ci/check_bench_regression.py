@@ -72,6 +72,21 @@ def main() -> int:
                 "(recalibrate the snapshot to re-arm it for this runner class)"
             )
 
+    # informational: surface the auto-tuned config the bench ran with
+    # (never affects the gate — the compared column stays pooled ns/stage)
+    autotune = bench.get("autotune")
+    if autotune and autotune != "off":
+        for row in bench.get("results", []):
+            tuned = row.get("tuned")
+            if tuned:
+                print(
+                    f"n={row['n']}: autotune({autotune}) chose {tuned['engine']}"
+                    f"({tuned['threads']}t, tile {tuned['tile_cols']}, "
+                    f"min_work {tuned['min_work']}, kernel {tuned['kernel']}) "
+                    f"at {float(tuned['ns_per_stage']):.3f} ns/stage "
+                    f"[{tuned.get('sweeps', '?')} startup sweeps]"
+                )
+
     failures = []
     for row in bench["results"]:
         n = row["n"]

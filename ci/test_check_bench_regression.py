@@ -1,0 +1,149 @@
+#!/usr/bin/env python3
+"""Unit checks for check_bench_regression.py, invoked from CI.
+
+The bench-trajectory gate is now armed (ci/bench_snapshot.json ships
+calibrated: true), so its decision logic is load-bearing: this script
+pins the exit-code contract against synthetic inputs —
+
+  * calibrated + matching kernel + regression beyond the limit -> fail
+  * calibrated + matching kernel + within the limit            -> pass
+  * calibrated + kernel mismatch + regression   -> advisory (pass)
+  * calibrated + missing BENCH_apply.json       -> fail
+  * calibrated + artifact without kernel_isa    -> fail
+  * uncalibrated + regression                   -> advisory (pass)
+
+Run: python3 ci/test_check_bench_regression.py
+"""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+SCRIPT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "check_bench_regression.py")
+
+
+def snapshot(calibrated=True, kernel="avx2", baseline=10.0, limit=1.25):
+    return {
+        "calibrated": calibrated,
+        "kernel_isa": kernel,
+        "max_regression": limit,
+        "pooled_ns_per_stage": {"64": baseline},
+    }
+
+
+def bench(pooled=10.0, kernel="avx2", tuned=True):
+    row = {
+        "n": 64,
+        "pooled": {"ns_per_stage": pooled},
+    }
+    doc = {"bench": "apply", "results": [row]}
+    if kernel is not None:
+        doc["kernel_isa"] = kernel
+    if tuned:
+        doc["autotune"] = "quick"
+        row["tuned"] = {
+            "engine": "pool",
+            "threads": 4,
+            "tile_cols": 8,
+            "min_work": 2048,
+            "kernel": "auto",
+            "sweeps": 5,
+            "ns_per_stage": pooled,
+        }
+    return doc
+
+
+def run_case(name, bench_doc, snap_doc, want_exit, want_in_stdout=None):
+    with tempfile.TemporaryDirectory() as tmp:
+        snap_path = os.path.join(tmp, "snapshot.json")
+        with open(snap_path, "w") as f:
+            json.dump(snap_doc, f)
+        bench_path = os.path.join(tmp, "BENCH_apply.json")
+        if bench_doc is not None:
+            with open(bench_path, "w") as f:
+                json.dump(bench_doc, f)
+        r = subprocess.run(
+            [sys.executable, SCRIPT, bench_path, snap_path],
+            capture_output=True,
+            text=True,
+        )
+        ok = r.returncode == want_exit
+        if ok and want_in_stdout is not None:
+            ok = want_in_stdout in r.stdout
+        status = "ok" if ok else "FAIL"
+        print(f"[{status}] {name}: exit {r.returncode} (want {want_exit})")
+        if not ok:
+            print("---- stdout ----")
+            print(r.stdout)
+            print("---- stderr ----")
+            print(r.stderr)
+        return ok
+
+
+def main() -> int:
+    cases = [
+        (
+            "calibrated + matching kernel + regression fails",
+            bench(pooled=20.0),
+            snapshot(baseline=10.0),
+            1,
+            "REGRESSION",
+        ),
+        (
+            "calibrated + matching kernel + within limit passes",
+            bench(pooled=11.0),
+            snapshot(baseline=10.0),
+            0,
+            "OK",
+        ),
+        (
+            "cross-kernel regression downgrades to advisory",
+            bench(pooled=20.0, kernel="avx512"),
+            snapshot(baseline=10.0, kernel="avx2"),
+            0,
+            "advisory",
+        ),
+        (
+            "calibrated + missing artifact fails",
+            None,
+            snapshot(),
+            1,
+            "missing",
+        ),
+        (
+            "calibrated + artifact without kernel_isa fails",
+            bench(pooled=10.0, kernel=None),
+            snapshot(),
+            1,
+            "kernel_isa",
+        ),
+        (
+            "uncalibrated regression stays advisory",
+            bench(pooled=20.0),
+            snapshot(calibrated=False, baseline=10.0),
+            0,
+            "advisory",
+        ),
+        (
+            "tuned config is surfaced in the log",
+            bench(pooled=11.0),
+            snapshot(baseline=10.0),
+            0,
+            "autotune(quick) chose pool",
+        ),
+    ]
+    failed = 0
+    for name, bench_doc, snap_doc, want_exit, want_out in cases:
+        if not run_case(name, bench_doc, snap_doc, want_exit, want_out):
+            failed += 1
+    if failed:
+        print(f"{failed}/{len(cases)} cases failed")
+        return 1
+    print(f"all {len(cases)} cases passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

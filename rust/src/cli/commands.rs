@@ -13,6 +13,7 @@ use crate::factor::{GeneralFactorizer, GeneralOptions, SymFactorizer, SymOptions
 use crate::graphs::{self, RealWorldGraph};
 use crate::linalg::{eigh, Mat, Rng64};
 use crate::plan::{Direction, ExecPolicy, FastOperator, Plan};
+use crate::runtime::autotune::{self, TuneEffort, TuneProfile, TunedConfig, WallTimer};
 use crate::serve::{
     Backend, Coordinator, NativeGftBackend, PjrtGftBackend, ServeConfig, TransformDirection,
 };
@@ -72,7 +73,13 @@ fn exec_policy_from_args(a: &Args, exec: &str) -> crate::Result<ExecPolicy> {
         }
         "spawn" => ExecPolicy::Spawn(exec_config_from_args_base(a, ExecConfig::spawn())?),
         "pool" => ExecPolicy::Pool(exec_config_from_args(a)?),
-        other => bail!("--exec must be seq|spawn|pool (got {other})"),
+        "auto" => {
+            // resolved by the startup micro-calibration on first apply;
+            // --kernel still validates and pins the process default
+            kernel_from_args(a)?;
+            ExecPolicy::Auto
+        }
+        other => bail!("--exec must be seq|spawn|pool|auto (got {other})"),
     })
 }
 
@@ -239,6 +246,36 @@ pub fn serve(a: &Args) -> crate::Result<()> {
     if backend_kind != "native" && (a.has("exec") || a.has("scheduled")) {
         bail!("--exec/--scheduled are only supported with --backend native (got {backend_kind})");
     }
+    // startup micro-calibration flags (native backend only)
+    let autotune_flag = a.get_str("autotune", "");
+    let autotune_effort = if autotune_flag.is_empty() {
+        None
+    } else {
+        Some(TuneEffort::parse(&autotune_flag)?)
+    };
+    let tune_profile_path = a.get_str("tune-profile", "");
+    if backend_kind != "native" && (autotune_effort.is_some() || !tune_profile_path.is_empty()) {
+        bail!("--autotune/--tune-profile are only supported with --backend native");
+    }
+    if autotune_effort.is_some() && !tune_profile_path.is_empty() {
+        bail!("--tune-profile already fixes the execution config; drop --autotune");
+    }
+    if matches!(autotune_effort, Some(e) if e != TuneEffort::Off) && a.has("exec") {
+        bail!("--autotune supersedes --exec; pass only one");
+    }
+    if !tune_profile_path.is_empty() && a.has("exec") {
+        bail!("--tune-profile supersedes --exec; pass only one");
+    }
+    // an explicit `--autotune off` must really disable calibration, even
+    // for `--exec auto` (which would otherwise resolve at the
+    // FASTES_AUTOTUNE effort inside the backend)
+    let policy = if matches!(autotune_effort, Some(TuneEffort::Off))
+        && matches!(policy, ExecPolicy::Auto)
+    {
+        ExecPolicy::default()
+    } else {
+        policy
+    };
     if !plan_path.is_empty() && (a.has("n") || a.has("alpha")) {
         bail!(
             "--n/--alpha configure the in-process factorization and conflict with --plan \
@@ -275,20 +312,62 @@ pub fn serve(a: &Args) -> crate::Result<()> {
         .clone();
     let n = plan.n();
 
+    // resolve the tuned config up front (worker startup then pays zero
+    // sweeps) so the chosen config and score table print before serving
+    let tuned_for_backend: Option<(TunedConfig, u64)> = if !tune_profile_path.is_empty() {
+        let profile = TuneProfile::load(&tune_profile_path)?;
+        profile.ensure_matches(&plan, batch)?;
+        println!(
+            "tune profile {tune_profile_path}: {} (effort {}, no startup sweep)",
+            profile.summary(),
+            profile.effort.as_str()
+        );
+        Some((profile.tuned_config(), 0))
+    } else if let Some(effort) = autotune_effort.filter(|&e| e != TuneEffort::Off) {
+        let t0 = Instant::now();
+        let resolved = autotune::resolve_with(&plan, batch, effort);
+        println!(
+            "autotune({}): measured {} candidates in {:.2?}",
+            effort.as_str(),
+            resolved.swept,
+            t0.elapsed()
+        );
+        print!("{}", resolved.tuned.table_text());
+        Some(((*resolved.tuned).clone(), resolved.swept as u64))
+    } else {
+        None
+    };
+    let policy = match &tuned_for_backend {
+        Some((tuned, _)) => tuned.policy.clone(),
+        None => policy,
+    };
+
     let config = ServeConfig { max_batch: batch, ..Default::default() };
     let coordinator = match backend_kind.as_str() {
         "native" => {
             let p = Arc::clone(&plan);
             let pol = policy.clone();
+            let tuned = tuned_for_backend;
             Coordinator::start(
                 move || {
-                    Ok(Box::new(NativeGftBackend::with_policy(
-                        p,
-                        TransformDirection::Forward,
-                        batch,
-                        None,
-                        pol,
-                    )?) as Box<dyn Backend>)
+                    let backend = match tuned {
+                        Some((tc, swept)) => NativeGftBackend::with_tuned(
+                            p,
+                            TransformDirection::Forward,
+                            batch,
+                            None,
+                            &tc,
+                            swept,
+                        )?,
+                        None => NativeGftBackend::with_policy(
+                            p,
+                            TransformDirection::Forward,
+                            batch,
+                            None,
+                            pol,
+                        )?,
+                    };
+                    Ok(Box::new(backend) as Box<dyn Backend>)
                 },
                 config,
             )?
@@ -350,6 +429,68 @@ pub fn serve(a: &Args) -> crate::Result<()> {
     let m = coordinator.shutdown();
     println!("throughput: {:.0} req/s over {:.2}s", requests as f64 / elapsed, elapsed);
     println!("metrics: {}", m.line());
+    Ok(())
+}
+
+/// `fastes tune` — run the execution-engine micro-calibration sweep for
+/// an operator (a saved `--plan FILE.fastplan`, or a random G-plan of
+/// `--n`/`--alpha`) and print the score table. `--out FILE.fasttune`
+/// persists the sweep as a versioned, checksummed JSON profile that
+/// `fastes serve --tune-profile` reloads with zero startup sweeps;
+/// `--json` prints the same document to stdout.
+pub fn tune(a: &Args) -> crate::Result<()> {
+    let batch: usize = a.get("batch", 8)?;
+    let effort_name = a.get_str("effort", TuneEffort::from_env(TuneEffort::Quick).as_str());
+    let effort = TuneEffort::parse(&effort_name)?;
+    if effort == TuneEffort::Off {
+        bail!("fastes tune needs --effort quick|full (off would measure nothing)");
+    }
+    let plan_path = a.get_str("plan", "");
+    let plan: Arc<Plan> = if plan_path.is_empty() {
+        let n: usize = a.get("n", 64)?;
+        let alpha: usize = a.get("alpha", 2)?;
+        let seed: u64 = a.get("seed", 1)?;
+        let g = budget(alpha, n);
+        let mut rng = Rng64::new(seed);
+        println!(
+            "tuning a random G-plan n={n} g={g} seed={seed} \
+             (pass --plan FILE.fastplan to tune a saved operator)"
+        );
+        Plan::from(random_gplan(n, g, &mut rng)).build()
+    } else {
+        let plan = Plan::load(&plan_path)?;
+        println!(
+            "tuning {plan_path}: kind={:?} n={} stages={} layers={}",
+            plan.kind(),
+            plan.n(),
+            plan.len(),
+            plan.stats().layers
+        );
+        plan
+    };
+    let t0 = Instant::now();
+    let tuned = autotune::tune_plan(&plan, batch, effort, &mut WallTimer);
+    println!(
+        "sweep: {} candidates, effort={}, batch={batch}, elapsed={:.2?}",
+        tuned.score_table.len(),
+        effort.as_str(),
+        t0.elapsed()
+    );
+    print!("{}", tuned.table_text());
+    println!("chosen: {}", tuned.summary());
+    let profile = TuneProfile::new(&plan, batch, &tuned);
+    if a.has("json") {
+        print!("{}", profile.to_json());
+    }
+    let out = a.get_str("out", "");
+    if !out.is_empty() {
+        profile.save(&out)?;
+        println!(
+            "wrote {out} (plan checksum {:016x}, batch bucket {}) — reload with \
+             `fastes serve --tune-profile {out}`",
+            profile.plan_checksum, profile.batch_bucket
+        );
+    }
     Ok(())
 }
 
@@ -463,6 +604,9 @@ pub fn bench(a: &Args) -> crate::Result<()> {
     let batch: usize = a.get("batch", 64)?;
     let alpha: usize = a.get("alpha", 2)?;
     let seed: u64 = a.get("seed", 1)?;
+    // --autotune off|quick|full: also run the auto-tuned config per size
+    // and stamp it into BENCH_apply.json (the calibrated-snapshot flow)
+    let tune_effort = TuneEffort::parse(&a.get_str("autotune", "off"))?;
     let seq = ExecPolicy::Seq;
     // each engine gets its own tunable defaults under the shared flag
     // overrides, so `--min-work` really reaches both parallel modes
@@ -511,6 +655,42 @@ pub fn bench(a: &Args) -> crate::Result<()> {
             t_seq.min_s / t_pool.min_s,
             t_spawn.min_s / t_pool.min_s
         );
+        // auto-tuned mode: resolve (cached per plan/batch bucket), time
+        // the winner, and stamp its config + measurement into the JSON
+        let tuned_json = if tune_effort == TuneEffort::Off {
+            String::new()
+        } else {
+            let resolved = autotune::resolve_with(&plan, batch, tune_effort);
+            let tuned_policy = resolved.tuned.policy.clone();
+            let mut blk = SignalBlock::from_signals(&signals)?;
+            let t = crate::bench_util::bench(
+                &format!("n={n} tuned[{}]", resolved.tuned.summary()),
+                5,
+                0.05,
+                || {
+                    plan.apply(&mut blk, Direction::Forward, &tuned_policy).expect("dims match");
+                    blk.data[0]
+                },
+            );
+            println!("{}", t.line());
+            let (t_threads, t_tile, t_min_work, t_kernel) = match tuned_policy.config() {
+                Some(c) => (
+                    c.threads,
+                    c.tile_cols,
+                    c.min_work,
+                    c.kernel.map_or("auto", |k| k.as_str()).to_string(),
+                ),
+                None => (1, 0, 0, "auto".to_string()),
+            };
+            format!(
+                ", \"tuned\": {{\"engine\": \"{}\", \"threads\": {t_threads}, \
+                 \"tile_cols\": {t_tile}, \"min_work\": {t_min_work}, \
+                 \"kernel\": \"{t_kernel}\", \"sweeps\": {}, \"ns_per_stage\": {:.4}}}",
+                tuned_policy.engine(),
+                resolved.swept,
+                t.min_s * 1e9 / g as f64
+            )
+        };
         let mode = |t: &crate::bench_util::BenchResult| {
             format!(
                 "{{\"ns_per_stage\": {:.4}, \"gb_per_s\": {:.4}, \"min_s\": {:.9}}}",
@@ -522,7 +702,7 @@ pub fn bench(a: &Args) -> crate::Result<()> {
         entries.push(format!(
             "    {{\"n\": {n}, \"stages\": {g}, \"layers\": {}, \"max_width\": {}, \
              \"superstages\": {}, \"sequential\": {}, \"spawn\": {}, \"pooled\": {}, \
-             \"pooled_speedup_vs_sequential\": {:.4}, \"pooled_speedup_vs_spawn\": {:.4}}}",
+             \"pooled_speedup_vs_sequential\": {:.4}, \"pooled_speedup_vs_spawn\": {:.4}{}}}",
             st.layers,
             st.max_width,
             plan.num_superstages(),
@@ -530,7 +710,8 @@ pub fn bench(a: &Args) -> crate::Result<()> {
             mode(t_spawn),
             mode(t_pool),
             t_seq.min_s / t_pool.min_s,
-            t_spawn.min_s / t_pool.min_s
+            t_spawn.min_s / t_pool.min_s,
+            tuned_json
         ));
     }
 
@@ -543,13 +724,17 @@ pub fn bench(a: &Args) -> crate::Result<()> {
         // `kernel_isa` records which SIMD kernel the run dispatched to —
         // numbers from different kernels are comparable in correctness
         // (bitwise-identical results) but not in speed
+        // `autotune` records whether (and at what effort) the per-size
+        // `tuned` objects below were calibrated — "off" means no tuned
+        // mode was run and the rows carry no tuned field
         let json = format!(
             "{{\n  \"bench\": \"apply\",\n  \"sequential_engine\": \"seq-fused\",\n  \
-             \"kernel_isa\": \"{}\",\n  \
+             \"kernel_isa\": \"{}\",\n  \"autotune\": \"{}\",\n  \
              \"seed\": {seed},\n  \"alpha\": {alpha},\n  \
              \"batch\": {batch},\n  \"threads\": {threads},\n  \"tile_cols\": {},\n  \
              \"min_work\": {},\n  \"spawn_min_work\": {},\n  \"results\": [\n{}\n  ]\n}}\n",
             kernel_isa.as_str(),
+            tune_effort.as_str(),
             cfg.tile_cols,
             cfg.min_work,
             spawn_cfg.min_work,

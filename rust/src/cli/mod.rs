@@ -9,13 +9,20 @@
 //!   accuracy and flop counts.
 //! * `serve` — run the serving coordinator on a factored GFT and report
 //!   latency/throughput (`--exec pool` executes the fused plan on the
-//!   persistent worker pool; `spawn`/`seq` are the legacy strategies).
+//!   persistent worker pool; `spawn`/`seq` are the legacy strategies;
+//!   `auto` / `--autotune` resolve the engine by startup
+//!   micro-calibration, `--tune-profile` reloads a saved `.fasttune`
+//!   sweep with zero startup cost).
 //! * `schedule` — compile a chain into conflict-free layers + fused
 //!   superstages and report layer counts/depth plus sequential vs spawn
 //!   vs pooled apply timings.
+//! * `tune` — run the execution-engine micro-calibration sweep for an
+//!   operator, print the score table, optionally persist it as a
+//!   `.fasttune` profile.
 //! * `bench` — machine-readable apply benchmark (sequential vs spawn vs
 //!   pooled; `--json` writes `BENCH_apply.json` incl. the dispatched
-//!   `kernel_isa`).
+//!   `kernel_isa`; `--autotune` adds the auto-tuned mode and stamps the
+//!   tuned config).
 //! * `kernels` — report the SIMD kernel dispatch of this host (detected
 //!   / default / available ISAs).
 //! * `eigen` — eigendecomposition smoke (substrate sanity).
@@ -97,6 +104,7 @@ pub fn run(args: Args) -> crate::Result<()> {
         "gft" => commands::gft(&args),
         "serve" => commands::serve(&args),
         "schedule" => commands::schedule(&args),
+        "tune" => commands::tune(&args),
         "bench" => commands::bench(&args),
         "kernels" => commands::kernels(&args),
         "eigen" => commands::eigen(&args),
@@ -132,9 +140,13 @@ COMMANDS
                        [--alpha A] [--artifacts DIR]
                        [--plan FILE.fastplan]  (serve a saved plan
                        artifact instead of refactorizing)
-                       [--exec pool|spawn|seq] [--threads T]
+                       [--exec pool|spawn|seq|auto] [--threads T]
                        [--min-work W] [--layer-min-work W] [--tile C]
                        [--kernel auto|scalar|avx2|avx512|neon]
+                       [--autotune off|quick|full]  (startup
+                       micro-calibration picks the engine config)
+                       [--tune-profile FILE.fasttune]  (reload a saved
+                       sweep — zero startup sweeps)
                        (tuning flags reach the selected ExecPolicy engine;
                        --scheduled is the legacy alias for --exec spawn)
   schedule             level-schedule a chain, report layers/depth/
@@ -142,10 +154,18 @@ COMMANDS
                        apply [--n N] [--alpha A] [--batch B] [--threads T]
                        [--min-work W] [--layer-min-work W] [--tile C]
                        [--kernel K] [--seed S]
+  tune                 micro-calibration sweep: score tile_cols x
+                       min_work x engine x kernel candidates for a plan
+                       and print the table [--plan FILE.fastplan | --n N
+                       --alpha A --seed S] [--batch B]
+                       [--effort quick|full] [--out FILE.fasttune]
+                       [--json]
   bench                machine-readable apply bench: sequential vs spawn
                        vs pooled (ns/stage, GB/s; records kernel_isa)
                        [--sizes a,b,c] [--batch B] [--alpha A] [--seed S]
                        [--threads T] [--kernel K] [--json] [--out PATH]
+                       [--autotune off|quick|full]  (adds the auto-tuned
+                       mode and stamps its config into the JSON)
   kernels              report SIMD kernel dispatch: detected / default /
                        available ISAs (FASTES_KERNEL and --kernel pin it)
   eigen                symmetric eigensolver smoke [--n N] [--seed S]

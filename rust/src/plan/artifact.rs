@@ -121,7 +121,9 @@ fn stages_of(repr: &ChainRepr) -> (u8, usize, Vec<RawStage>) {
 }
 
 /// FNV-1a 64-bit hash — cheap, dependency-free artifact integrity check.
-fn fnv1a64(bytes: &[u8]) -> u64 {
+/// Also re-exported crate-wide (as `crate::plan::fnv1a64`) for the plan
+/// content checksum and the `.fasttune` profile format.
+pub(crate) fn fnv1a64(bytes: &[u8]) -> u64 {
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
     for &b in bytes {
         h ^= b as u64;

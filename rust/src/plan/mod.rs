@@ -47,6 +47,7 @@ mod artifact;
 mod policy;
 
 pub use artifact::FORMAT_VERSION;
+pub(crate) use artifact::fnv1a64;
 pub use policy::ExecPolicy;
 
 use std::path::Path;
@@ -228,7 +229,13 @@ impl PlanBuilder {
                 self.fuse.superstage_stages,
             ),
         };
-        Arc::new(Plan { repr: self.repr, compiled, schedule: self.schedule, fuse: self.fuse })
+        Arc::new(Plan {
+            repr: self.repr,
+            compiled,
+            schedule: self.schedule,
+            fuse: self.fuse,
+            checksum: std::sync::OnceLock::new(),
+        })
     }
 }
 
@@ -280,6 +287,10 @@ pub struct Plan {
     compiled: CompiledPlan,
     schedule: ScheduleOptions,
     fuse: FuseOptions,
+    /// Lazily computed [`Plan::content_checksum`] (an apply under
+    /// [`ExecPolicy::Auto`] consults it on every call, and serializing
+    /// the coefficient streams each time would dwarf the apply itself).
+    checksum: std::sync::OnceLock<u64>,
 }
 
 impl Plan {
@@ -326,6 +337,15 @@ impl Plan {
     /// The options the plan was built with.
     pub fn options(&self) -> (ScheduleOptions, FuseOptions) {
         (self.schedule, self.fuse)
+    }
+
+    /// FNV-1a-64 checksum of the plan's serialized `.fastplan` bytes —
+    /// the plan's content identity. Used as the cache/profile key by the
+    /// execution autotuner ([`crate::runtime::autotune`]): two plans with
+    /// identical chains and build options share a checksum, so one
+    /// calibration serves every copy. Computed once per plan and cached.
+    pub fn content_checksum(&self) -> u64 {
+        *self.checksum.get_or_init(|| artifact::fnv1a64(&self.to_bytes()))
     }
 
     /// The compiled execution form — escape hatch for callers that need a
@@ -421,8 +441,16 @@ impl FastOperator for Plan {
         if block.n != self.compiled.n() {
             bail!("block n {} != plan n {}", block.n, self.compiled.n());
         }
+        if let ExecPolicy::Auto = policy {
+            // startup micro-calibration: resolve (cached per plan
+            // checksum / n / batch bucket) and run under the concrete
+            // winner — which is never `Auto`, so this recurses once
+            let resolved = crate::runtime::autotune::resolve(self, block.batch);
+            return self.apply(block, dir, &resolved.tuned.policy);
+        }
         let rev = dir == Direction::Adjoint;
         match policy {
+            ExecPolicy::Auto => unreachable!("Auto is resolved above"),
             ExecPolicy::Seq => self.compiled.apply_batch_inline(block, rev),
             ExecPolicy::Spawn(cfg) => self.compiled.apply_batch_spawn(block, rev, cfg),
             ExecPolicy::Pool(cfg) => {
@@ -739,6 +767,35 @@ mod tests {
                 back.apply(&mut b, dir, &ExecPolicy::Seq).unwrap();
                 assert_eq!(a.data, b.data, "{label} {dir:?}: loaded plan diverged");
             }
+        }
+    }
+
+    #[test]
+    fn content_checksum_is_stable_and_content_keyed() {
+        let mut rng = Rng64::new(4109);
+        let ch = random_gplan(10, 40, &mut rng);
+        let a = Plan::from(&ch).build();
+        let b = Plan::from(&ch).build();
+        assert_eq!(a.content_checksum(), b.content_checksum(), "same chain, same checksum");
+        let other = Plan::from(random_gplan(10, 40, &mut rng)).build();
+        assert_ne!(a.content_checksum(), other.content_checksum(), "different chain");
+    }
+
+    #[test]
+    fn auto_policy_is_bitwise_identical_to_seq() {
+        // Auto resolves through the autotuner (or to the pooled default
+        // under FASTES_AUTOTUNE=off); either way every engine is bitwise
+        // identical, so the served bytes cannot depend on the resolution
+        let mut rng = Rng64::new(4110);
+        let ch = random_gplan(14, 70, &mut rng);
+        let plan = Plan::from(&ch).build();
+        let sigs = signals(&mut rng, 14, 5);
+        for dir in [Direction::Forward, Direction::Adjoint] {
+            let mut want = SignalBlock::from_signals(&sigs).unwrap();
+            plan.apply(&mut want, dir, &ExecPolicy::Seq).unwrap();
+            let mut got = SignalBlock::from_signals(&sigs).unwrap();
+            plan.apply(&mut got, dir, &ExecPolicy::Auto).unwrap();
+            assert_eq!(want.data, got.data, "Auto diverged from Seq ({dir:?})");
         }
     }
 

@@ -35,6 +35,25 @@ pub enum ExecPolicy {
     /// ([`crate::transforms::global_pool`]) with fused, cache-blocked,
     /// work-stealing dispatch — the serving hot path.
     Pool(ExecConfig),
+    /// Resolve the engine by **startup micro-calibration**
+    /// ([`crate::runtime::autotune`]): the first apply runs a short
+    /// deterministic sweep over `tile_cols × min_work × engine × kernel
+    /// ISA` candidates for this plan and batch, then executes — and
+    /// keeps executing — under the argmin policy. Resolution is cached
+    /// process-wide per `(plan checksum, n, batch bucket, effort)`; the
+    /// effort comes from `FASTES_AUTOTUNE=off|quick|full` (default
+    /// `quick`; `off` resolves straight to the pooled defaults). Because
+    /// every engine × kernel is bitwise identical, `Auto` is bitwise
+    /// identical to whatever concrete policy it resolves to.
+    ///
+    /// Cost note: after the first call the sweep is cached, but every
+    /// `Auto` apply still pays a lookup in the process-wide cache (a
+    /// global mutex + hash). Hot loops should resolve once — the serve
+    /// backend does this at construction
+    /// ([`crate::serve::NativeGftBackend::with_policy`]), and library
+    /// callers can use [`crate::runtime::autotune::resolve`] directly and
+    /// apply under the returned concrete policy.
+    Auto,
 }
 
 impl ExecPolicy {
@@ -49,20 +68,22 @@ impl ExecPolicy {
         ExecPolicy::Spawn(ExecConfig::spawn())
     }
 
-    /// Short engine name: `"seq"`, `"spawn"` or `"pool"` (the values the
-    /// `fastes serve --exec` flag accepts).
+    /// Short engine name: `"seq"`, `"spawn"`, `"pool"` or `"auto"` (the
+    /// values the `fastes serve --exec` flag accepts).
     pub fn engine(&self) -> &'static str {
         match self {
             ExecPolicy::Seq => "seq",
             ExecPolicy::Spawn(_) => "spawn",
             ExecPolicy::Pool(_) => "pool",
+            ExecPolicy::Auto => "auto",
         }
     }
 
-    /// The tunables carried by the policy (`None` for [`ExecPolicy::Seq`]).
+    /// The tunables carried by the policy (`None` for [`ExecPolicy::Seq`]
+    /// and for the not-yet-resolved [`ExecPolicy::Auto`]).
     pub fn config(&self) -> Option<&ExecConfig> {
         match self {
-            ExecPolicy::Seq => None,
+            ExecPolicy::Seq | ExecPolicy::Auto => None,
             ExecPolicy::Spawn(cfg) | ExecPolicy::Pool(cfg) => Some(cfg),
         }
     }
@@ -76,7 +97,9 @@ impl ExecPolicy {
     /// bitwise identical, so this never affects results.
     pub fn kernel_isa(&self) -> KernelIsa {
         match self {
-            ExecPolicy::Seq => crate::transforms::simd::default_kernel(),
+            // Auto reports the process default until it is resolved; the
+            // resolved concrete policy then reports its own pin
+            ExecPolicy::Seq | ExecPolicy::Auto => crate::transforms::simd::default_kernel(),
             ExecPolicy::Spawn(cfg) | ExecPolicy::Pool(cfg) => cfg.kernel_isa(),
         }
     }
@@ -98,12 +121,14 @@ mod tests {
         assert_eq!(ExecPolicy::Seq.engine(), "seq");
         assert_eq!(ExecPolicy::spawn().engine(), "spawn");
         assert_eq!(ExecPolicy::pool().engine(), "pool");
+        assert_eq!(ExecPolicy::Auto.engine(), "auto");
         assert_eq!(ExecPolicy::default().engine(), "pool");
     }
 
     #[test]
     fn config_accessor() {
         assert!(ExecPolicy::Seq.config().is_none());
+        assert!(ExecPolicy::Auto.config().is_none());
         assert_eq!(ExecPolicy::pool().config(), Some(&ExecConfig::pooled()));
         assert_eq!(ExecPolicy::spawn().config(), Some(&ExecConfig::spawn()));
     }

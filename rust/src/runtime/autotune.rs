@@ -1,0 +1,952 @@
+//! Adaptive `ExecConfig`: startup micro-calibration of the execution
+//! engine.
+//!
+//! The paper's central trade-off — number of fundamental components vs.
+//! cost of projecting on the approximate eigenspace — only pays off when
+//! the runtime's knobs (`tile_cols`, `min_work`, engine, SIMD kernel) fit
+//! the hardware the plan is served from. This module replaces the static
+//! [`ExecConfig`] defaults with a **short deterministic sweep**: given a
+//! built [`Plan`], it times a fixed candidate grid over
+//! `tile_cols × min_work × engine {Seq, Spawn, Pool} × kernel ISAs` on
+//! seeded [`Rng64`] inputs, scores each candidate by the **median** of
+//! repeated per-apply timings normalized to ns/stage (medians are robust
+//! against the one preempted repeat that would wreck a mean), and returns
+//! the argmin as a [`TunedConfig`].
+//!
+//! Determinism is a first-class requirement, because the tuner sits on
+//! the serving startup path and is locked down by tests:
+//!
+//! * the candidate grid is a pure function of the [`TuneEffort`], the
+//!   batch width and host capabilities (threads are clamped to the
+//!   machine's parallelism, tiles to the batch, unsupported ISAs to
+//!   scalar — see [`clamp_config`]);
+//! * the sweep inputs come from a fixed-seed [`Rng64`];
+//! * **time itself is injected** through the [`StageTimer`] trait, so
+//!   tests supply fake ns readings and assert the argmin/median logic
+//!   exactly; production uses the monotonic-clock [`WallTimer`];
+//! * ties break toward the earlier candidate in grid order.
+//!
+//! Because every engine × kernel combination is bitwise identical (the
+//! repo-wide guarantee enforced by `rust/tests/conformance.rs`), tuning
+//! can **never change results** — only speed. That is what makes
+//! [`ExecPolicy::Auto`] safe to default into serving paths.
+//!
+//! Resolution is cached process-wide per
+//! `(plan checksum, n, batch bucket, effort)` — see [`resolve`] — and a
+//! sweep can be persisted as a versioned, checksummed `.fasttune` JSON
+//! profile ([`TuneProfile`]) that `fastes serve --tune-profile` reloads
+//! to skip recalibration entirely. The effort is picked by the
+//! `FASTES_AUTOTUNE=off|quick|full` environment variable and the
+//! `--autotune` CLI flags.
+
+use std::collections::{HashMap, HashSet};
+use std::path::Path;
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use anyhow::bail;
+
+use crate::linalg::Rng64;
+use crate::plan::{fnv1a64, Direction, ExecPolicy, FastOperator, Plan};
+use crate::transforms::{default_threads, ExecConfig, KernelIsa, SignalBlock};
+
+/// The `.fasttune` profile format version this build reads and writes.
+pub const TUNE_FORMAT_VERSION: u64 = 1;
+
+/// Fixed seed of the sweep's input signals (any constant works; the value
+/// spells "FASTEST" loosely).
+pub const TUNE_SEED: u64 = 0xFA57_E516;
+
+/// How much calibration work the tuner may spend.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TuneEffort {
+    /// No sweep: [`resolve`] returns the static pooled defaults.
+    Off,
+    /// Startup-friendly sweep: a handful of candidates, 3 repeats each —
+    /// bounded well under a second at serve sizes.
+    Quick,
+    /// Exhaustive grid: every tile/min-work/engine/ISA combination,
+    /// 5 repeats each. For `fastes tune` offline profiling.
+    Full,
+}
+
+impl TuneEffort {
+    /// Name as accepted by `FASTES_AUTOTUNE` / `--autotune`.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            TuneEffort::Off => "off",
+            TuneEffort::Quick => "quick",
+            TuneEffort::Full => "full",
+        }
+    }
+
+    /// Parse an effort name.
+    pub fn parse(name: &str) -> crate::Result<TuneEffort> {
+        match name {
+            "off" => Ok(TuneEffort::Off),
+            "quick" => Ok(TuneEffort::Quick),
+            "full" => Ok(TuneEffort::Full),
+            other => bail!("autotune effort must be off|quick|full (got {other})"),
+        }
+    }
+
+    /// The `FASTES_AUTOTUNE` environment override, else `default`.
+    /// Unparseable values warn once per call and fall back to `default`.
+    pub fn from_env(default: TuneEffort) -> TuneEffort {
+        match std::env::var("FASTES_AUTOTUNE") {
+            Ok(v) if !v.is_empty() => match TuneEffort::parse(&v) {
+                Ok(e) => e,
+                Err(_) => {
+                    eprintln!(
+                        "fastes: FASTES_AUTOTUNE={v} is not off|quick|full; using {}",
+                        default.as_str()
+                    );
+                    default
+                }
+            },
+            _ => default,
+        }
+    }
+
+    /// Timed repetitions per candidate (the median of these is the score).
+    pub fn repeats(self) -> usize {
+        match self {
+            TuneEffort::Off => 0,
+            TuneEffort::Quick => 3,
+            TuneEffort::Full => 5,
+        }
+    }
+}
+
+/// A timer the tuner uses for one apply invocation. Production uses
+/// [`WallTimer`]; tests inject fake readings to make the sweep fully
+/// deterministic.
+pub trait StageTimer {
+    /// Invoke `run` once (a fake timer may skip it) and return the
+    /// elapsed wall time in nanoseconds.
+    fn time_once(&mut self, candidate: &Candidate, run: &mut dyn FnMut()) -> u64;
+}
+
+/// Monotonic-clock [`StageTimer`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WallTimer;
+
+impl StageTimer for WallTimer {
+    fn time_once(&mut self, _candidate: &Candidate, run: &mut dyn FnMut()) -> u64 {
+        let t0 = Instant::now();
+        run();
+        u64::try_from(t0.elapsed().as_nanos()).unwrap_or(u64::MAX)
+    }
+}
+
+/// One point of the sweep grid: a concrete (never
+/// [`ExecPolicy::Auto`]) execution policy.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Candidate {
+    /// The policy this candidate times.
+    pub policy: ExecPolicy,
+}
+
+impl Candidate {
+    /// Stable human/machine label, e.g. `seq` or
+    /// `pool/8t/tile32/mw2048/auto`. Fake timers key their scripted
+    /// readings on this.
+    pub fn label(&self) -> String {
+        policy_label(&self.policy)
+    }
+
+    fn score_row(&self, median_ns: u64, ns_per_stage: f64) -> ScoreRow {
+        let (engine, threads, min_work, layer_min_work, tile_cols, kernel) =
+            policy_fields(&self.policy);
+        ScoreRow {
+            engine,
+            threads,
+            min_work,
+            layer_min_work,
+            tile_cols,
+            kernel,
+            median_ns,
+            ns_per_stage,
+        }
+    }
+}
+
+/// The one label formatter: every rendering (candidates, score rows,
+/// tuned summaries, serve metrics) goes through here so they can never
+/// drift apart.
+fn label_parts(
+    engine: &str,
+    threads: usize,
+    tile_cols: usize,
+    min_work: usize,
+    kernel: &str,
+) -> String {
+    if engine == "seq" {
+        engine.to_string()
+    } else {
+        format!("{engine}/{threads}t/tile{tile_cols}/mw{min_work}/{kernel}")
+    }
+}
+
+/// Stable label of a concrete policy (see [`Candidate::label`]).
+fn policy_label(policy: &ExecPolicy) -> String {
+    match policy.config() {
+        None => policy.engine().to_string(),
+        Some(cfg) => label_parts(
+            policy.engine(),
+            cfg.threads,
+            cfg.tile_cols,
+            cfg.min_work,
+            cfg.kernel.map_or("auto", |k| k.as_str()),
+        ),
+    }
+}
+
+/// Flatten a policy into the fields the score table and the `.fasttune`
+/// profile store. Config-less engines use canonical placeholder values.
+fn policy_fields(policy: &ExecPolicy) -> (String, usize, usize, f64, usize, String) {
+    match policy.config() {
+        None => (policy.engine().to_string(), 1, 0, 0.0, 0, "auto".to_string()),
+        Some(cfg) => (
+            policy.engine().to_string(),
+            cfg.threads,
+            cfg.min_work,
+            cfg.layer_min_work,
+            cfg.tile_cols,
+            cfg.kernel.map_or_else(|| "auto".to_string(), |k| k.as_str().to_string()),
+        ),
+    }
+}
+
+/// One measured candidate of a sweep.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScoreRow {
+    /// Engine name (`seq` / `spawn` / `pool`).
+    pub engine: String,
+    /// Worker parallelism (1 for `seq`).
+    pub threads: usize,
+    /// `min_work` gate of the candidate config (0 for `seq`).
+    pub min_work: usize,
+    /// `layer_min_work` gate of the candidate config (0 for `seq`).
+    pub layer_min_work: f64,
+    /// Column-tile width of the candidate config (0 for `seq`).
+    pub tile_cols: usize,
+    /// Pinned kernel ISA name, or `auto` for the process default.
+    pub kernel: String,
+    /// Median of the repeated per-apply timings, nanoseconds.
+    pub median_ns: u64,
+    /// `median_ns / stages` — the pooled score the argmin minimizes.
+    pub ns_per_stage: f64,
+}
+
+impl ScoreRow {
+    /// The same stable label [`Candidate::label`] produces (both go
+    /// through the shared formatter).
+    pub fn label(&self) -> String {
+        label_parts(&self.engine, self.threads, self.tile_cols, self.min_work, &self.kernel)
+    }
+}
+
+/// The result of a sweep: the winning policy plus the full score table.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TunedConfig {
+    /// The argmin policy — always concrete, never [`ExecPolicy::Auto`].
+    pub policy: ExecPolicy,
+    /// The effort the sweep ran at.
+    pub effort: TuneEffort,
+    /// Every candidate's measurement, in grid order (empty when the
+    /// sweep was skipped: effort `off` or an empty plan).
+    pub score_table: Vec<ScoreRow>,
+}
+
+impl TunedConfig {
+    /// The tunables of the winning policy (`None` for the `seq` engine).
+    pub fn exec_config(&self) -> Option<&ExecConfig> {
+        self.policy.config()
+    }
+
+    /// Stable one-token summary of the winner (the `tuned=` value in
+    /// serve metrics), e.g. `pool/8t/tile32/mw2048/auto`.
+    pub fn summary(&self) -> String {
+        policy_label(&self.policy)
+    }
+
+    /// Render the score table for humans (`fastes tune` / `serve
+    /// --autotune` output).
+    pub fn table_text(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<7} {:>7} {:>6} {:>9} {:>8} {:>12} {:>12}\n",
+            "engine", "threads", "tile", "min_work", "kernel", "median_ns", "ns/stage"
+        ));
+        let chosen = self.summary();
+        for row in &self.score_table {
+            let mark = if row.label() == chosen { "  <- chosen" } else { "" };
+            out.push_str(&format!(
+                "{:<7} {:>7} {:>6} {:>9} {:>8} {:>12} {:>12.3}{}\n",
+                row.engine,
+                row.threads,
+                row.tile_cols,
+                row.min_work,
+                row.kernel,
+                row.median_ns,
+                row.ns_per_stage,
+                mark
+            ));
+        }
+        out
+    }
+}
+
+/// Clamp a candidate config to legal values for this host and batch:
+/// threads to `[1, available cores]`, `tile_cols` to `[1, batch]`, an
+/// unsupported ISA pin to scalar. The grid applies this to every
+/// candidate, so the tuner can never select an illegal configuration.
+pub fn clamp_config(mut cfg: ExecConfig, batch: usize) -> ExecConfig {
+    cfg.threads = cfg.threads.clamp(1, default_threads().max(1));
+    cfg.tile_cols = cfg.tile_cols.clamp(1, batch.max(1));
+    if let Some(isa) = cfg.kernel {
+        if !isa.is_supported() {
+            cfg.kernel = Some(KernelIsa::Scalar);
+        }
+    }
+    cfg
+}
+
+/// The deterministic candidate grid for one effort level and batch
+/// width: the `Seq` reference plus `{Spawn, Pool} × tile_cols ×
+/// min_work × kernel` combinations, clamped ([`clamp_config`]) and
+/// deduplicated by label (clamping can collapse grid points). `quick`
+/// keeps the grid small enough for serve startup; `full` sweeps every
+/// available ISA.
+pub fn candidate_grid(effort: TuneEffort, batch: usize) -> Vec<Candidate> {
+    let mut out = vec![Candidate { policy: ExecPolicy::Seq }];
+    if effort == TuneEffort::Off {
+        return out;
+    }
+    let full = effort == TuneEffort::Full;
+    let tiles: &[usize] = if full { &[8, 16, 32, 64] } else { &[16, 32] };
+    let min_works: &[usize] = if full { &[512, 2048, 8192] } else { &[2048] };
+    let kernels: Vec<Option<KernelIsa>> = if full {
+        KernelIsa::available().into_iter().map(Some).collect()
+    } else {
+        vec![None]
+    };
+    let bases = [("spawn", ExecConfig::spawn()), ("pool", ExecConfig::pooled())];
+    let mut seen: HashSet<String> = HashSet::new();
+    seen.insert("seq".to_string());
+    for (engine, base) in &bases {
+        for &tile in tiles {
+            for &mw in min_works {
+                for &kernel in &kernels {
+                    let cfg = clamp_config(
+                        ExecConfig { tile_cols: tile, min_work: mw, kernel, ..base.clone() },
+                        batch,
+                    );
+                    let policy = if *engine == "spawn" {
+                        ExecPolicy::Spawn(cfg)
+                    } else {
+                        ExecPolicy::Pool(cfg)
+                    };
+                    let cand = Candidate { policy };
+                    if seen.insert(cand.label()) {
+                        out.push(cand);
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Bucket a batch width for the resolution cache: `ceil(log2(batch))`,
+/// so all batches in `(2^(k-1), 2^k]` share one tuned config.
+pub fn batch_bucket(batch: usize) -> u8 {
+    batch.max(1).next_power_of_two().trailing_zeros() as u8
+}
+
+/// The representative batch width of a bucket (`2^bucket`) — the width
+/// [`resolve`] actually sweeps at.
+pub fn bucket_batch(bucket: u8) -> usize {
+    1usize << bucket.min(62)
+}
+
+/// Run the calibration sweep for `plan` at `batch` columns and return the
+/// argmin. Fully deterministic given the injected `timer`: fixed-seed
+/// inputs, fixed grid order, median-of-repeats scoring, ties broken
+/// toward the earlier candidate. `Off` effort and empty plans skip the
+/// sweep and return the static pooled default.
+pub fn tune_plan(
+    plan: &Plan,
+    batch: usize,
+    effort: TuneEffort,
+    timer: &mut dyn StageTimer,
+) -> TunedConfig {
+    let batch = batch.max(1);
+    if effort == TuneEffort::Off || plan.is_empty() {
+        return TunedConfig { policy: ExecPolicy::default(), effort, score_table: Vec::new() };
+    }
+    let candidates = candidate_grid(effort, batch);
+    let n = FastOperator::n(plan);
+    let mut rng = Rng64::new(TUNE_SEED);
+    let base: Vec<f32> = (0..n * batch).map(|_| rng.randn() as f32).collect();
+    let mut block = SignalBlock { n, batch, data: base.clone() };
+    let repeats = effort.repeats().max(1);
+    let stages = plan.len() as f64;
+    let mut table = Vec::with_capacity(candidates.len());
+    let mut best: Option<(f64, usize)> = None;
+    for (idx, cand) in candidates.iter().enumerate() {
+        // one untimed warm-up apply per candidate (pool wake-up, lazy
+        // kernel dispatch), then the timed repeats; the block is reset to
+        // the seeded signals outside every timed region so T-chains
+        // cannot drift toward inf/denormals across repeats
+        block.data.copy_from_slice(&base);
+        plan.apply(&mut block, Direction::Forward, &cand.policy)
+            .expect("tuner block matches plan dimensions");
+        let mut samples = Vec::with_capacity(repeats);
+        for _ in 0..repeats {
+            block.data.copy_from_slice(&base);
+            let policy = &cand.policy;
+            let block_ref = &mut block;
+            let mut run = || {
+                plan.apply(block_ref, Direction::Forward, policy)
+                    .expect("tuner block matches plan dimensions");
+            };
+            samples.push(timer.time_once(cand, &mut run));
+        }
+        samples.sort_unstable();
+        let median_ns = samples[samples.len() / 2];
+        let ns_per_stage = median_ns as f64 / stages;
+        table.push(cand.score_row(median_ns, ns_per_stage));
+        match best {
+            Some((score, _)) if score <= ns_per_stage => {}
+            _ => best = Some((ns_per_stage, idx)),
+        }
+    }
+    let winner = best.map_or(0, |(_, idx)| idx);
+    TunedConfig { policy: candidates[winner].policy.clone(), effort, score_table: table }
+}
+
+/// What [`resolve`] hands back: the (possibly cached) tuned config plus
+/// how many candidates **this** call actually measured — 0 on a cache
+/// hit, a preloaded profile, or `off` effort. Serve metrics report this
+/// as `sweeps=`.
+#[derive(Clone, Debug)]
+pub struct Resolved {
+    /// The tuned configuration (shared with the process-wide cache).
+    pub tuned: Arc<TunedConfig>,
+    /// Candidates measured by this resolution (0 when no sweep ran).
+    pub swept: usize,
+}
+
+type CacheKey = (u64, usize, u8, u8);
+
+fn cache() -> &'static Mutex<HashMap<CacheKey, Arc<TunedConfig>>> {
+    static CACHE: OnceLock<Mutex<HashMap<CacheKey, Arc<TunedConfig>>>> = OnceLock::new();
+    CACHE.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Resolve the tuned config for `(plan, batch)` at the environment's
+/// effort (`FASTES_AUTOTUNE`, default `quick`). This is what
+/// [`ExecPolicy::Auto`] calls on first apply.
+pub fn resolve(plan: &Plan, batch: usize) -> Resolved {
+    resolve_with(plan, batch, TuneEffort::from_env(TuneEffort::Quick))
+}
+
+/// [`resolve`] at an explicit effort. Results are cached process-wide per
+/// `(plan checksum, n, batch bucket, effort)`; the sweep itself runs at
+/// the bucket's representative batch width so every batch in the bucket
+/// shares one answer. `Off` never sweeps and is not cached.
+pub fn resolve_with(plan: &Plan, batch: usize, effort: TuneEffort) -> Resolved {
+    if effort == TuneEffort::Off {
+        return Resolved {
+            tuned: Arc::new(TunedConfig {
+                policy: ExecPolicy::default(),
+                effort,
+                score_table: Vec::new(),
+            }),
+            swept: 0,
+        };
+    }
+    let bucket = batch_bucket(batch);
+    let key = (plan.content_checksum(), FastOperator::n(plan), bucket, effort as u8);
+    if let Some(hit) = cache().lock().unwrap().get(&key) {
+        return Resolved { tuned: Arc::clone(hit), swept: 0 };
+    }
+    // sweep outside the lock (a sweep applies the plan many times);
+    // concurrent resolvers may race — the first insert wins and later
+    // racers adopt it, keeping every caller on one shared answer
+    let tuned = Arc::new(tune_plan(plan, bucket_batch(bucket), effort, &mut WallTimer));
+    let swept = tuned.score_table.len();
+    let mut guard = cache().lock().unwrap();
+    let entry = guard.entry(key).or_insert_with(|| Arc::clone(&tuned));
+    Resolved { tuned: Arc::clone(entry), swept }
+}
+
+// ---------------------------------------------------------------------
+// The `.fasttune` profile: a versioned, checksummed JSON artifact that
+// persists one sweep so serve startups can skip recalibration.
+// ---------------------------------------------------------------------
+
+const CHECKSUM_PLACEHOLDER: &str = "0000000000000000";
+const CHECKSUM_FIELD: &str = "\n  \"checksum\": \"";
+
+/// A persisted sweep: the tuned policy, its score table, and the identity
+/// of the plan/batch it was calibrated for. Stored as deterministic JSON
+/// with an FNV-1a-64 integrity checksum (computed over the document with
+/// the checksum value zeroed), mirroring the `.fastplan` guarantees:
+/// version mismatches, truncation and corruption are load errors, and a
+/// profile only applies to the exact plan it was tuned on
+/// ([`TuneProfile::ensure_matches`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TuneProfile {
+    /// [`Plan::content_checksum`] of the plan the sweep ran on.
+    pub plan_checksum: u64,
+    /// Problem dimension of that plan.
+    pub n: usize,
+    /// [`batch_bucket`] the sweep was calibrated for.
+    pub batch_bucket: u8,
+    /// Effort of the recorded sweep.
+    pub effort: TuneEffort,
+    /// The winning policy (always concrete).
+    pub policy: ExecPolicy,
+    /// The full sweep measurement.
+    pub score_table: Vec<ScoreRow>,
+}
+
+impl TuneProfile {
+    /// Capture a sweep result as a profile for `(plan, batch)`.
+    pub fn new(plan: &Plan, batch: usize, tuned: &TunedConfig) -> TuneProfile {
+        TuneProfile {
+            plan_checksum: plan.content_checksum(),
+            n: FastOperator::n(plan),
+            batch_bucket: batch_bucket(batch),
+            effort: tuned.effort,
+            policy: tuned.policy.clone(),
+            score_table: tuned.score_table.clone(),
+        }
+    }
+
+    /// The profile's payload as a [`TunedConfig`] (what the serve backend
+    /// consumes).
+    pub fn tuned_config(&self) -> TunedConfig {
+        TunedConfig {
+            policy: self.policy.clone(),
+            effort: self.effort,
+            score_table: self.score_table.clone(),
+        }
+    }
+
+    /// Stable one-token summary of the stored winner.
+    pub fn summary(&self) -> String {
+        policy_label(&self.policy)
+    }
+
+    /// `true` when this profile was calibrated for exactly this plan and
+    /// batch bucket.
+    pub fn matches(&self, plan: &Plan, batch: usize) -> bool {
+        self.ensure_matches(plan, batch).is_ok()
+    }
+
+    /// Error (with an actionable message) unless the profile matches
+    /// `(plan, batch)` — a profile must never retune a different operator.
+    pub fn ensure_matches(&self, plan: &Plan, batch: usize) -> crate::Result<()> {
+        if self.n != FastOperator::n(plan) {
+            bail!(
+                "tune profile was calibrated for n={}, this plan has n={}",
+                self.n,
+                FastOperator::n(plan)
+            );
+        }
+        let checksum = plan.content_checksum();
+        if self.plan_checksum != checksum {
+            bail!(
+                "tune profile plan checksum {:016x} does not match this plan ({:016x}) — \
+                 the profile was tuned on a different operator; re-run `fastes tune`",
+                self.plan_checksum,
+                checksum
+            );
+        }
+        let bucket = batch_bucket(batch);
+        if self.batch_bucket != bucket {
+            bail!(
+                "tune profile was calibrated for batch bucket {} (batch ≈ {}), but this \
+                 deployment serves batch {} (bucket {}) — re-run `fastes tune --batch {batch}`",
+                self.batch_bucket,
+                bucket_batch(self.batch_bucket),
+                batch,
+                bucket
+            );
+        }
+        Ok(())
+    }
+
+    /// Serialize to the deterministic `.fasttune` JSON document (see the
+    /// type docs; the layout is pinned by the golden fixture
+    /// `rust/tests/data/tune_n64.fasttune`).
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        out.push_str("{\n");
+        out.push_str(&format!("  \"fasttune\": {TUNE_FORMAT_VERSION},\n"));
+        out.push_str(&format!("  \"plan_checksum\": \"{:016x}\",\n", self.plan_checksum));
+        out.push_str(&format!("  \"n\": {},\n", self.n));
+        out.push_str(&format!("  \"batch_bucket\": {},\n", self.batch_bucket));
+        out.push_str(&format!("  \"effort\": \"{}\",\n", self.effort.as_str()));
+        let (engine, threads, min_work, layer_min_work, tile_cols, kernel) =
+            policy_fields(&self.policy);
+        out.push_str(&format!(
+            "  \"policy\": {},\n",
+            object_json(&engine, threads, min_work, layer_min_work, tile_cols, &kernel, None)
+        ));
+        if self.score_table.is_empty() {
+            out.push_str("  \"score_table\": [],\n");
+        } else {
+            out.push_str("  \"score_table\": [\n");
+            for (k, row) in self.score_table.iter().enumerate() {
+                let sep = if k + 1 < self.score_table.len() { "," } else { "" };
+                out.push_str(&format!(
+                    "    {}{sep}\n",
+                    object_json(
+                        &row.engine,
+                        row.threads,
+                        row.min_work,
+                        row.layer_min_work,
+                        row.tile_cols,
+                        &row.kernel,
+                        Some((row.median_ns, row.ns_per_stage))
+                    )
+                ));
+            }
+            out.push_str("  ],\n");
+        }
+        out.push_str(&format!("  \"checksum\": \"{CHECKSUM_PLACEHOLDER}\"\n}}\n"));
+        // stamp the FNV of the placeholder form into the checksum slot
+        // (same length, so every other byte is untouched)
+        let sum = format!("{:016x}", fnv1a64(out.as_bytes()));
+        let at = out.rfind(CHECKSUM_FIELD).expect("writer emits the checksum field")
+            + CHECKSUM_FIELD.len();
+        out.replace_range(at..at + 16, &sum);
+        out
+    }
+
+    /// Parse and validate a `.fasttune` document: version first, then the
+    /// integrity checksum, then the fields.
+    pub fn from_json(text: &str) -> crate::Result<TuneProfile> {
+        let version = field_u64(text, "fasttune").map_err(|_| {
+            anyhow::anyhow!(
+                "not a fasttune profile (missing \"fasttune\" version field; truncated?)"
+            )
+        })?;
+        if version != TUNE_FORMAT_VERSION {
+            bail!(
+                "unsupported fasttune version {version} \
+                 (this build reads version {TUNE_FORMAT_VERSION})"
+            );
+        }
+        let Some(field_at) = text.rfind(CHECKSUM_FIELD) else {
+            bail!("truncated fasttune profile (no checksum field)");
+        };
+        let val_at = field_at + CHECKSUM_FIELD.len();
+        let Some(hex) = text.get(val_at..val_at + 16) else {
+            bail!("truncated fasttune profile (checksum cut short)");
+        };
+        let stored = u64::from_str_radix(hex, 16)
+            .map_err(|_| anyhow::anyhow!("malformed fasttune checksum '{hex}'"))?;
+        let mut body = String::with_capacity(text.len());
+        body.push_str(&text[..val_at]);
+        body.push_str(CHECKSUM_PLACEHOLDER);
+        body.push_str(&text[val_at + 16..]);
+        let actual = fnv1a64(body.as_bytes());
+        if stored != actual {
+            bail!(
+                "fasttune checksum mismatch (corrupt profile): \
+                 stored {stored:#018x}, computed {actual:#018x}"
+            );
+        }
+
+        let checksum_hex = field_str(text, "plan_checksum")?;
+        let plan_checksum = u64::from_str_radix(&checksum_hex, 16)
+            .map_err(|_| anyhow::anyhow!("malformed plan_checksum '{checksum_hex}'"))?;
+        let n = field_u64(text, "n")? as usize;
+        let bucket = field_u64(text, "batch_bucket")?;
+        let batch_bucket = u8::try_from(bucket)
+            .map_err(|_| anyhow::anyhow!("batch_bucket {bucket} out of range"))?;
+        let effort = TuneEffort::parse(&field_str(text, "effort")?)?;
+
+        let policy_text = object_slice(text, "\"policy\": {")?;
+        let policy = policy_from_fields(
+            &field_str(policy_text, "engine")?,
+            field_u64(policy_text, "threads")? as usize,
+            field_u64(policy_text, "min_work")? as usize,
+            field_f64(policy_text, "layer_min_work")?,
+            field_u64(policy_text, "tile_cols")? as usize,
+            &field_str(policy_text, "kernel")?,
+        )?;
+
+        let table_text = array_slice(text, "\"score_table\": [")?;
+        let mut score_table = Vec::new();
+        for line in table_text.lines() {
+            let line = line.trim().trim_end_matches(',');
+            if !line.starts_with('{') {
+                continue;
+            }
+            score_table.push(ScoreRow {
+                engine: field_str(line, "engine")?,
+                threads: field_u64(line, "threads")? as usize,
+                min_work: field_u64(line, "min_work")? as usize,
+                layer_min_work: field_f64(line, "layer_min_work")?,
+                tile_cols: field_u64(line, "tile_cols")? as usize,
+                kernel: field_str(line, "kernel")?,
+                median_ns: field_u64(line, "median_ns")?,
+                ns_per_stage: field_f64(line, "ns_per_stage")?,
+            });
+        }
+        Ok(TuneProfile { plan_checksum, n, batch_bucket, effort, policy, score_table })
+    }
+
+    /// Write the profile to `path`.
+    pub fn save(&self, path: impl AsRef<Path>) -> crate::Result<()> {
+        let path = path.as_ref();
+        std::fs::write(path, self.to_json())
+            .map_err(|e| anyhow::anyhow!("cannot write tune profile {}: {e}", path.display()))
+    }
+
+    /// Load a `.fasttune` profile from `path`.
+    pub fn load(path: impl AsRef<Path>) -> crate::Result<TuneProfile> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("cannot read tune profile {}: {e}", path.display()))?;
+        TuneProfile::from_json(&text)
+            .map_err(|e| e.context(format!("loading tune profile {}", path.display())))
+    }
+}
+
+/// One flat `{...}` object of the profile: a policy or a score row
+/// (`measured` adds the two measurement fields).
+fn object_json(
+    engine: &str,
+    threads: usize,
+    min_work: usize,
+    layer_min_work: f64,
+    tile_cols: usize,
+    kernel: &str,
+    measured: Option<(u64, f64)>,
+) -> String {
+    let tail = match measured {
+        Some((median_ns, ns_per_stage)) => {
+            format!(", \"median_ns\": {median_ns}, \"ns_per_stage\": {ns_per_stage}")
+        }
+        None => String::new(),
+    };
+    format!(
+        "{{\"engine\": \"{engine}\", \"threads\": {threads}, \"min_work\": {min_work}, \
+         \"layer_min_work\": {layer_min_work}, \"tile_cols\": {tile_cols}, \
+         \"kernel\": \"{kernel}\"{tail}}}"
+    )
+}
+
+fn policy_from_fields(
+    engine: &str,
+    threads: usize,
+    min_work: usize,
+    layer_min_work: f64,
+    tile_cols: usize,
+    kernel: &str,
+) -> crate::Result<ExecPolicy> {
+    let kernel = match kernel {
+        "auto" => None,
+        name => Some(
+            KernelIsa::from_name(name)
+                .ok_or_else(|| anyhow::anyhow!("fasttune profile: unknown kernel '{name}'"))?,
+        ),
+    };
+    let cfg = ExecConfig {
+        threads: threads.max(1),
+        min_work,
+        layer_min_work,
+        tile_cols: tile_cols.max(1),
+        kernel,
+    };
+    match engine {
+        "seq" => Ok(ExecPolicy::Seq),
+        "spawn" => Ok(ExecPolicy::Spawn(cfg)),
+        "pool" => Ok(ExecPolicy::Pool(cfg)),
+        other => bail!("fasttune profile: unknown engine '{other}'"),
+    }
+}
+
+/// The raw text of a scalar field value (number or quoted string).
+fn field_raw<'a>(text: &'a str, key: &str) -> crate::Result<&'a str> {
+    let pat = format!("\"{key}\":");
+    let at = text.find(&pat).ok_or_else(|| {
+        anyhow::anyhow!("fasttune profile missing \"{key}\" (truncated or malformed)")
+    })?;
+    let rest = text[at + pat.len()..].trim_start();
+    let end = rest
+        .char_indices()
+        .scan(false, |in_str, (i, c)| {
+            match c {
+                '"' => *in_str = !*in_str,
+                ',' | '\n' | '}' | ']' if !*in_str => return Some(Some(i)),
+                _ => {}
+            }
+            Some(None)
+        })
+        .flatten()
+        .next()
+        .unwrap_or(rest.len());
+    Ok(rest[..end].trim())
+}
+
+fn field_str(text: &str, key: &str) -> crate::Result<String> {
+    let raw = field_raw(text, key)?;
+    raw.strip_prefix('"')
+        .and_then(|s| s.strip_suffix('"'))
+        .map(str::to_string)
+        .ok_or_else(|| anyhow::anyhow!("fasttune field \"{key}\": expected a string, got {raw}"))
+}
+
+fn field_u64(text: &str, key: &str) -> crate::Result<u64> {
+    let raw = field_raw(text, key)?;
+    raw.parse()
+        .map_err(|_| anyhow::anyhow!("fasttune field \"{key}\": expected an integer, got {raw}"))
+}
+
+fn field_f64(text: &str, key: &str) -> crate::Result<f64> {
+    let raw = field_raw(text, key)?;
+    raw.parse()
+        .map_err(|_| anyhow::anyhow!("fasttune field \"{key}\": expected a number, got {raw}"))
+}
+
+/// The `{...}` slice following `open` (single-line, no nested braces).
+fn object_slice<'a>(text: &'a str, open: &str) -> crate::Result<&'a str> {
+    let at = text
+        .find(open)
+        .ok_or_else(|| anyhow::anyhow!("fasttune profile missing {open}… (truncated?)"))?;
+    let start = at + open.len() - 1; // include the '{'
+    let end = text[start..]
+        .find('}')
+        .ok_or_else(|| anyhow::anyhow!("fasttune profile: unterminated {open}…"))?;
+    Ok(&text[start..=start + end])
+}
+
+/// The `[...]` slice following `open` (rows are single-line objects, so
+/// the first `]` terminates the array).
+fn array_slice<'a>(text: &'a str, open: &str) -> crate::Result<&'a str> {
+    let at = text
+        .find(open)
+        .ok_or_else(|| anyhow::anyhow!("fasttune profile missing {open}… (truncated?)"))?;
+    let start = at + open.len();
+    let end = text[start..]
+        .find(']')
+        .ok_or_else(|| anyhow::anyhow!("fasttune profile: unterminated {open}…"))?;
+    Ok(&text[start..start + end])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cli::figures::random_gplan;
+
+    #[test]
+    fn effort_names_round_trip_and_reject_garbage() {
+        for e in [TuneEffort::Off, TuneEffort::Quick, TuneEffort::Full] {
+            assert_eq!(TuneEffort::parse(e.as_str()).unwrap(), e);
+        }
+        assert!(TuneEffort::parse("fast").is_err());
+        assert!(TuneEffort::parse("").is_err());
+    }
+
+    #[test]
+    fn batch_buckets_are_log2_ceilings() {
+        assert_eq!(batch_bucket(1), 0);
+        assert_eq!(batch_bucket(2), 1);
+        assert_eq!(batch_bucket(3), 2);
+        assert_eq!(batch_bucket(4), 2);
+        assert_eq!(batch_bucket(8), 3);
+        assert_eq!(batch_bucket(9), 4);
+        assert_eq!(batch_bucket(0), 0, "zero batches share the 1-column bucket");
+        for bucket in 0u8..8 {
+            assert_eq!(batch_bucket(bucket_batch(bucket)), bucket);
+        }
+    }
+
+    #[test]
+    fn grids_are_deterministic_clamped_and_led_by_seq() {
+        for effort in [TuneEffort::Quick, TuneEffort::Full] {
+            let a = candidate_grid(effort, 8);
+            let b = candidate_grid(effort, 8);
+            assert_eq!(a, b, "{effort:?} grid must be a pure function of its inputs");
+            assert_eq!(a[0].policy, ExecPolicy::Seq);
+            assert!(a.len() > 1);
+            for cand in &a {
+                if let Some(cfg) = cand.policy.config() {
+                    assert!(cfg.threads >= 1 && cfg.threads <= default_threads().max(1));
+                    assert!(cfg.tile_cols >= 1 && cfg.tile_cols <= 8, "tile > batch leaked");
+                    if let Some(isa) = cfg.kernel {
+                        assert!(isa.is_supported(), "unsupported ISA {isa:?} leaked");
+                    }
+                }
+            }
+            // labels are unique (the grid is deduplicated after clamping)
+            let labels: HashSet<String> = a.iter().map(Candidate::label).collect();
+            assert_eq!(labels.len(), a.len());
+        }
+    }
+
+    #[test]
+    fn wall_timer_times_the_closure() {
+        let mut timer = WallTimer;
+        let cand = Candidate { policy: ExecPolicy::Seq };
+        let mut ran = false;
+        let ns = timer.time_once(&cand, &mut || {
+            ran = true;
+            std::hint::black_box(());
+        });
+        assert!(ran, "WallTimer must invoke the workload");
+        assert!(ns < 60_000_000_000, "implausible reading: {ns} ns");
+    }
+
+    #[test]
+    fn resolve_off_skips_sweep_and_resolve_quick_caches() {
+        let mut rng = Rng64::new(7201);
+        let plan = Plan::from(random_gplan(12, 60, &mut rng)).build();
+        let off = resolve_with(&plan, 4, TuneEffort::Off);
+        assert_eq!(off.swept, 0);
+        assert_eq!(off.tuned.policy, ExecPolicy::default());
+        assert!(off.tuned.score_table.is_empty());
+
+        let first = resolve_with(&plan, 4, TuneEffort::Quick);
+        assert_eq!(first.swept, first.tuned.score_table.len());
+        assert!(first.swept > 0, "a quick resolve must measure candidates");
+        assert!(!matches!(first.tuned.policy, ExecPolicy::Auto));
+        let second = resolve_with(&plan, 4, TuneEffort::Quick);
+        assert_eq!(second.swept, 0, "second resolve must be a cache hit");
+        assert_eq!(second.tuned.policy, first.tuned.policy);
+        // a different batch bucket re-tunes independently
+        let other = resolve_with(&plan, 64, TuneEffort::Quick);
+        assert_eq!(other.swept, other.tuned.score_table.len());
+    }
+
+    #[test]
+    fn empty_plans_resolve_to_the_static_default() {
+        let plan = Plan::from(crate::transforms::GChain::identity(6)).build();
+        let mut timer = WallTimer;
+        let tuned = tune_plan(&plan, 8, TuneEffort::Quick, &mut timer);
+        assert_eq!(tuned.policy, ExecPolicy::default());
+        assert!(tuned.score_table.is_empty());
+    }
+
+    #[test]
+    fn summary_and_table_mark_the_winner() {
+        let mut rng = Rng64::new(7202);
+        let plan = Plan::from(random_gplan(16, 96, &mut rng)).build();
+        let tuned = tune_plan(&plan, 8, TuneEffort::Quick, &mut WallTimer);
+        let text = tuned.table_text();
+        assert!(text.contains("<- chosen"), "{text}");
+        assert!(
+            tuned.score_table.iter().any(|r| r.label() == tuned.summary()),
+            "summary must name a swept candidate"
+        );
+    }
+}

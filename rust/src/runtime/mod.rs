@@ -12,6 +12,13 @@
 //! so a single compiled executable serves every factorization with the
 //! same `(n, g, batch)` shape; shorter plans are padded with identity
 //! stages.
+//!
+//! The runtime layer also hosts the execution-engine micro-calibration
+//! ([`autotune`]): the startup sweep behind
+//! [`ExecPolicy::Auto`](crate::plan::ExecPolicy) and the `.fasttune`
+//! profile artifact.
+
+pub mod autotune;
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};

@@ -5,6 +5,7 @@ use std::sync::Arc;
 use anyhow::bail;
 
 use crate::plan::{Direction, ExecPolicy, FastOperator, Plan};
+use crate::runtime::autotune::{self, TuneProfile, TunedConfig};
 use crate::runtime::{ArtifactKind, ArtifactStore};
 use crate::transforms::{batch::SignalBlock, ChainKind, PlanArrays};
 
@@ -38,6 +39,15 @@ pub trait Backend {
     fn kernel_isa(&self) -> &'static str {
         "n/a"
     }
+    /// Auto-tuning report: `(summary, sweeps)` when the backend's policy
+    /// came from the execution autotuner — `summary` is the stable label
+    /// of the chosen config and `sweeps` the number of candidates this
+    /// startup actually measured (0 when the answer came from a cache or
+    /// a preloaded `.fasttune` profile). `None` for untuned backends.
+    /// Recorded in serve metrics as `tuned=` / `sweeps=`.
+    fn tuned(&self) -> Option<(String, u64)> {
+        None
+    }
 }
 
 /// Native rust butterfly fast path (the Fig.-6 "C implementation"
@@ -53,11 +63,16 @@ pub struct NativeGftBackend {
     max_batch: usize,
     /// Spectral filter diagonal (Filter direction only).
     filter: Option<Vec<f32>>,
+    /// `(summary, sweeps)` when the policy came from the autotuner.
+    tuned: Option<(String, u64)>,
 }
 
 impl NativeGftBackend {
     /// New backend over a shared plan with an explicit execution policy —
-    /// the one constructor behind `fastes serve --exec seq|spawn|pool`.
+    /// the one constructor behind `fastes serve --exec seq|spawn|pool|auto`.
+    /// [`ExecPolicy::Auto`] is resolved here, once, through the
+    /// execution autotuner (`FASTES_AUTOTUNE` effort, cached process-wide),
+    /// so the request path always runs a concrete engine.
     /// Fails when the plan is not a G-chain plan or the filter diagonal
     /// is missing/mis-sized for [`TransformDirection::Filter`].
     pub fn with_policy(
@@ -75,7 +90,46 @@ impl NativeGftBackend {
         {
             bail!("filter direction needs a length-{} diagonal", plan.n());
         }
-        Ok(NativeGftBackend { plan, policy, direction, max_batch, filter })
+        let (policy, tuned) = match policy {
+            ExecPolicy::Auto => {
+                let resolved = autotune::resolve(&plan, max_batch);
+                let summary = resolved.tuned.summary();
+                (resolved.tuned.policy.clone(), Some((summary, resolved.swept as u64)))
+            }
+            concrete => (concrete, None),
+        };
+        Ok(NativeGftBackend { plan, policy, direction, max_batch, filter, tuned })
+    }
+
+    /// Backend over a sweep result (`fastes serve --autotune`): runs the
+    /// tuned policy and reports `(summary, swept)` in serve metrics.
+    pub fn with_tuned(
+        plan: Arc<Plan>,
+        direction: TransformDirection,
+        max_batch: usize,
+        filter: Option<Vec<f32>>,
+        tuned: &TunedConfig,
+        swept: u64,
+    ) -> crate::Result<Self> {
+        let mut backend =
+            Self::with_policy(plan, direction, max_batch, filter, tuned.policy.clone())?;
+        backend.tuned = Some((tuned.summary(), swept));
+        Ok(backend)
+    }
+
+    /// Backend over a preloaded `.fasttune` profile (`fastes serve
+    /// --tune-profile`): validates that the profile was calibrated for
+    /// exactly this plan and batch bucket, then serves under its policy
+    /// with **zero** startup sweeps (metrics report `sweeps=0`).
+    pub fn with_tune_profile(
+        plan: Arc<Plan>,
+        direction: TransformDirection,
+        max_batch: usize,
+        filter: Option<Vec<f32>>,
+        profile: &TuneProfile,
+    ) -> crate::Result<Self> {
+        profile.ensure_matches(&plan, max_batch)?;
+        Self::with_tuned(plan, direction, max_batch, filter, &profile.tuned_config(), 0)
     }
 
     /// The shared plan this backend serves.
@@ -165,11 +219,18 @@ impl Backend for NativeGftBackend {
             ExecPolicy::Seq => "native-gft",
             ExecPolicy::Spawn(_) => "native-gft-scheduled",
             ExecPolicy::Pool(_) => "native-gft-pooled",
+            // with_policy resolves Auto at construction; this arm only
+            // keeps the match exhaustive
+            ExecPolicy::Auto => "native-gft-auto",
         }
     }
 
     fn kernel_isa(&self) -> &'static str {
         self.policy.kernel_isa().as_str()
+    }
+
+    fn tuned(&self) -> Option<(String, u64)> {
+        self.tuned.clone()
     }
 }
 
@@ -374,6 +435,60 @@ mod tests {
         let b = seq_backend(&plan, TransformDirection::Forward, 2, None);
         let isa = crate::transforms::simd::default_kernel().as_str();
         assert_eq!(b.kernel_isa(), isa, "backend must report the dispatched kernel");
+    }
+
+    #[test]
+    fn auto_policy_resolves_to_a_concrete_engine_and_reports_tuned() {
+        let plan = random_plan(12, 120, 612);
+        let b = NativeGftBackend::with_policy(
+            Arc::clone(&plan),
+            TransformDirection::Forward,
+            8,
+            None,
+            ExecPolicy::Auto,
+        )
+        .unwrap();
+        assert!(
+            !matches!(b.policy(), ExecPolicy::Auto),
+            "Auto must resolve to a concrete engine at construction"
+        );
+        let (summary, _sweeps) = b.tuned().expect("auto backend reports tuned info");
+        assert!(summary.starts_with(b.policy().engine()), "{summary}");
+    }
+
+    #[test]
+    fn tune_profile_backend_requires_a_matching_profile() {
+        use crate::runtime::autotune::{resolve_with, TuneEffort, TuneProfile};
+        let plan = random_plan(10, 80, 613);
+        let r = resolve_with(&plan, 4, TuneEffort::Quick);
+        let profile = TuneProfile::new(&plan, 4, &r.tuned);
+        let b = NativeGftBackend::with_tune_profile(
+            Arc::clone(&plan),
+            TransformDirection::Forward,
+            4,
+            None,
+            &profile,
+        )
+        .unwrap();
+        assert_eq!(b.tuned(), Some((profile.summary(), 0)), "profile serves with zero sweeps");
+        // a different plan and a different batch bucket are both rejected
+        let other = random_plan(10, 80, 614);
+        assert!(NativeGftBackend::with_tune_profile(
+            other,
+            TransformDirection::Forward,
+            4,
+            None,
+            &profile
+        )
+        .is_err());
+        assert!(NativeGftBackend::with_tune_profile(
+            Arc::clone(&plan),
+            TransformDirection::Forward,
+            64,
+            None,
+            &profile
+        )
+        .is_err());
     }
 
     #[test]

@@ -17,6 +17,9 @@ struct Inner {
     /// SIMD kernel ISA the serving backend dispatches to (set once by the
     /// worker at startup; `None` until a backend reports in).
     kernel_isa: Option<&'static str>,
+    /// Auto-tuning report: `(chosen-config summary, startup sweep count)`
+    /// when the backend's policy came from the execution autotuner.
+    tuned: Option<(String, u64)>,
 }
 
 /// Point-in-time metrics summary.
@@ -41,6 +44,14 @@ pub struct MetricsSnapshot {
     /// SIMD kernel ISA the backend dispatches to (`"unknown"` until the
     /// worker reports, `"n/a"` for non-native backends).
     pub kernel_isa: &'static str,
+    /// Summary of the auto-tuned execution config (e.g.
+    /// `pool/8t/tile32/mw2048/auto`), or `"off"` when the backend was not
+    /// auto-tuned.
+    pub tuned: String,
+    /// Number of calibration candidates the startup sweep measured — 0
+    /// when the config came from a cache or a preloaded `.fasttune`
+    /// profile, and when tuning is off.
+    pub tune_sweeps: u64,
 }
 
 impl ServeMetrics {
@@ -69,6 +80,13 @@ impl ServeMetrics {
         self.inner.lock().unwrap().kernel_isa = Some(isa);
     }
 
+    /// Record the auto-tuning report (chosen-config summary + startup
+    /// sweep count), reported by the serve worker once at startup for
+    /// auto-tuned backends.
+    pub fn set_tuned(&self, summary: String, sweeps: u64) {
+        self.inner.lock().unwrap().tuned = Some((summary, sweeps));
+    }
+
     /// Snapshot the current statistics.
     pub fn snapshot(&self) -> MetricsSnapshot {
         let g = self.inner.lock().unwrap();
@@ -93,6 +111,8 @@ impl ServeMetrics {
             },
             max_batch_seen: g.batch_sizes.iter().copied().max().unwrap_or(0),
             kernel_isa: g.kernel_isa.unwrap_or("unknown"),
+            tuned: g.tuned.as_ref().map_or_else(|| "off".to_string(), |(s, _)| s.clone()),
+            tune_sweeps: g.tuned.as_ref().map_or(0, |&(_, n)| n),
         }
     }
 }
@@ -107,7 +127,7 @@ impl MetricsSnapshot {
     /// One-line human summary.
     pub fn line(&self) -> String {
         format!(
-            "completed={} errors={} p50={:.1}µs p99={:.1}µs mean_exec={:.1}µs mean_batch={:.2} max_batch={} kernel={}",
+            "completed={} errors={} p50={:.1}µs p99={:.1}µs mean_exec={:.1}µs mean_batch={:.2} max_batch={} kernel={} tuned={} sweeps={}",
             self.completed,
             self.errors,
             self.p50_latency_s * 1e6,
@@ -115,7 +135,9 @@ impl MetricsSnapshot {
             self.mean_exec_s * 1e6,
             self.mean_batch,
             self.max_batch_seen,
-            self.kernel_isa
+            self.kernel_isa,
+            self.tuned,
+            self.tune_sweeps
         )
     }
 }
@@ -137,9 +159,17 @@ mod tests {
         assert_eq!(s.max_batch_seen, 5);
         assert!((s.mean_batch - 4.0).abs() < 1e-12);
         assert_eq!(s.kernel_isa, "unknown", "no backend reported a kernel yet");
+        assert_eq!(s.tuned, "off", "no backend reported auto-tuning yet");
+        assert_eq!(s.tune_sweeps, 0);
         m.set_kernel_isa("avx2");
         assert_eq!(m.snapshot().kernel_isa, "avx2");
         assert!(m.snapshot().line().contains("kernel=avx2"));
+        m.set_tuned("pool/4t/tile16/mw2048/auto".to_string(), 5);
+        let s = m.snapshot();
+        assert_eq!(s.tuned, "pool/4t/tile16/mw2048/auto");
+        assert_eq!(s.tune_sweeps, 5);
+        assert!(s.line().contains("tuned=pool/4t/tile16/mw2048/auto"));
+        assert!(s.line().contains("sweeps=5"));
     }
 
     #[test]

@@ -205,6 +205,9 @@ fn worker_loop(
 ) {
     let n = backend.n();
     metrics.set_kernel_isa(backend.kernel_isa());
+    if let Some((summary, sweeps)) = backend.tuned() {
+        metrics.set_tuned(summary, sweeps);
+    }
     loop {
         // wait for the first request of the batch
         let first = match rx.recv() {

@@ -25,6 +25,7 @@
 use fastes::cli::figures::{random_gplan, random_tplan};
 use fastes::linalg::Rng64;
 use fastes::plan::{Direction, ExecPolicy, FastOperator, Plan};
+use fastes::runtime::autotune;
 use fastes::transforms::{
     ExecConfig, GChain, GKind, GTransform, KernelIsa, SignalBlock, TChain, TTransform,
 };
@@ -201,6 +202,55 @@ fn single_stage_plans_conform() {
     for batch in [1usize, 5, 17] {
         let sigs = signals(&mut rng, n, batch);
         check_engine_matrix(&format!("G single-stage batch={batch}"), &gch, &gplan, &sigs, 3);
+    }
+}
+
+#[test]
+fn auto_policy_bitwise_equals_its_resolved_policy_on_randomized_plans() {
+    // ExecPolicy::Auto resolves through the startup micro-calibration
+    // (honouring FASTES_AUTOTUNE; `off` resolves to the pooled default).
+    // Whatever it resolves to, the Auto apply, the resolved concrete
+    // apply and the sequential scalar reference must agree bitwise —
+    // tuning may only ever change speed, never bytes.
+    let mut rng = Rng64::new(20_008);
+    let batch = 9;
+    for trial in 0..2 {
+        let n = 22 + 3 * trial;
+        let gch = random_gplan(n, 6 * n, &mut rng);
+        let tch = random_tplan(n, 6 * n, &mut rng);
+        let gplan = Plan::from(&gch).build();
+        let tplan = Plan::from(&tch).build();
+        for (label, reference, plan) in [
+            ("G", &gch as &dyn FastOperator, &gplan),
+            ("T", &tch as &dyn FastOperator, &tplan),
+        ] {
+            let resolved = autotune::resolve(plan, batch);
+            assert!(
+                !matches!(resolved.tuned.policy, ExecPolicy::Auto),
+                "{label}: resolution must be concrete"
+            );
+            let sigs = signals(&mut rng, n, batch);
+            for dir in [Direction::Forward, Direction::Adjoint] {
+                let mut want = SignalBlock::from_signals(&sigs).unwrap();
+                reference.apply(&mut want, dir, &ExecPolicy::Seq).unwrap();
+                let mut via_auto = SignalBlock::from_signals(&sigs).unwrap();
+                plan.apply(&mut via_auto, dir, &ExecPolicy::Auto).unwrap();
+                let mut via_resolved = SignalBlock::from_signals(&sigs).unwrap();
+                plan.apply(&mut via_resolved, dir, &resolved.tuned.policy).unwrap();
+                assert_eq!(
+                    via_auto.data, via_resolved.data,
+                    "{label} {dir:?}: Auto diverged from its resolved policy"
+                );
+                assert_eq!(
+                    want.data, via_auto.data,
+                    "{label} {dir:?}: Auto diverged from the scalar reference"
+                );
+            }
+            // the second resolution must come from the process-wide cache
+            let again = autotune::resolve(plan, batch);
+            assert_eq!(again.swept, 0, "{label}: repeat resolution must not re-sweep");
+            assert_eq!(again.tuned.policy, resolved.tuned.policy);
+        }
     }
 }
 

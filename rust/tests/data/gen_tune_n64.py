@@ -1,0 +1,56 @@
+#!/usr/bin/env python3
+"""Generate the golden `.fasttune` fixture `tune_n64.fasttune`.
+
+Mirrors the version-1 profile layout of
+`rust/src/runtime/autotune.rs::TuneProfile::to_json` byte-for-byte, for
+the fixed profile hard-coded in `rust/tests/autotune.rs::golden_profile`.
+The test asserts both that today's loader reads this exact file and that
+today's writer re-produces these exact bytes — pinning the format against
+accidental drift. Any intentional format change must bump
+`TUNE_FORMAT_VERSION` and regenerate the fixture with this script.
+
+Field values are emitted as literal strings (not via float formatting)
+because the byte-exact contract is with Rust's `{}` Display output, not
+with Python's repr.
+"""
+
+from pathlib import Path
+
+PLACEHOLDER = "0" * 16
+
+# Keep in sync with golden_profile() in rust/tests/autotune.rs.
+BODY = """{
+  "fasttune": 1,
+  "plan_checksum": "00f1e2d3c4b5a697",
+  "n": 64,
+  "batch_bucket": 3,
+  "effort": "quick",
+  "policy": {"engine": "pool", "threads": 4, "min_work": 2048, "layer_min_work": 512, "tile_cols": 8, "kernel": "scalar"},
+  "score_table": [
+    {"engine": "seq", "threads": 1, "min_work": 0, "layer_min_work": 0, "tile_cols": 0, "kernel": "auto", "median_ns": 9600, "ns_per_stage": 12.5},
+    {"engine": "pool", "threads": 4, "min_work": 2048, "layer_min_work": 512, "tile_cols": 8, "kernel": "scalar", "median_ns": 2880, "ns_per_stage": 3.75},
+    {"engine": "spawn", "threads": 4, "min_work": 8192, "layer_min_work": 1024, "tile_cols": 16, "kernel": "avx2", "median_ns": 30912, "ns_per_stage": 40.25}
+  ],
+  "checksum": "%s"
+}
+""" % PLACEHOLDER
+
+
+def fnv1a64(data: bytes) -> int:
+    h = 0xCBF29CE484222325
+    for b in data:
+        h ^= b
+        h = (h * 0x100000001B3) % (1 << 64)
+    return h
+
+
+def main() -> None:
+    checksum = "%016x" % fnv1a64(BODY.encode("utf-8"))
+    text = BODY.replace('"checksum": "%s"' % PLACEHOLDER, '"checksum": "%s"' % checksum)
+    path = Path(__file__).parent / "tune_n64.fasttune"
+    path.write_text(text)
+    print(f"wrote {path} ({len(text)} bytes, checksum {checksum})")
+
+
+if __name__ == "__main__":
+    main()

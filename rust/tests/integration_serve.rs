@@ -2,11 +2,14 @@
 //! coordinator, native and PJRT backends, correctness under load.
 
 use std::path::Path;
+use std::sync::Arc;
 
+use fastes::cli::figures::random_gplan;
 use fastes::factor::{SymFactorizer, SymOptions};
 use fastes::graphs;
 use fastes::linalg::Rng64;
 use fastes::plan::{ExecPolicy, Plan};
+use fastes::runtime::autotune::{self, TuneEffort, TuneProfile};
 use fastes::runtime::ArtifactStore;
 use fastes::serve::{
     Backend, Coordinator, NativeGftBackend, PjrtGftBackend, ServeConfig, TransformDirection,
@@ -121,6 +124,124 @@ fn pjrt_backend_reports_missing_artifact() {
         ServeConfig::default(),
     );
     assert!(r.is_err(), "expected startup failure for missing artifact");
+}
+
+#[test]
+fn autotuned_serving_is_bitwise_identical_to_seq_and_reports_tuned_metrics() {
+    // the serve-layer autotune contract: an auto-tuned coordinator must
+    // answer exactly the bytes a sequential coordinator answers, and its
+    // metrics line must carry the tuned= field
+    let n = 32;
+    let mut rng = Rng64::new(1101);
+    let plan = Plan::from(random_gplan(n, 6 * n, &mut rng)).build();
+    let batch = 8;
+
+    let seq_plan = Arc::clone(&plan);
+    let seq_coord = Coordinator::start(
+        move || native(seq_plan, TransformDirection::Forward, batch, None, ExecPolicy::Seq),
+        ServeConfig { max_batch: batch, ..Default::default() },
+    )
+    .unwrap();
+
+    let resolved = autotune::resolve_with(&plan, batch, TuneEffort::Quick);
+    let tuned = (*resolved.tuned).clone();
+    let swept = resolved.swept as u64;
+    let auto_plan = Arc::clone(&plan);
+    let auto_coord = Coordinator::start(
+        move || {
+            Ok(Box::new(NativeGftBackend::with_tuned(
+                auto_plan,
+                TransformDirection::Forward,
+                batch,
+                None,
+                &tuned,
+                swept,
+            )?) as Box<dyn Backend>)
+        },
+        ServeConfig { max_batch: batch, ..Default::default() },
+    )
+    .unwrap();
+
+    // 64 in-flight requests against each coordinator, identical signals
+    let signals: Vec<Vec<f32>> = (0..64)
+        .map(|_| (0..n).map(|_| rng.randn() as f32).collect())
+        .collect();
+    let seq_tickets: Vec<_> =
+        signals.iter().map(|s| seq_coord.submit(s.clone()).unwrap()).collect();
+    let auto_tickets: Vec<_> =
+        signals.iter().map(|s| auto_coord.submit(s.clone()).unwrap()).collect();
+    for (k, (a, b)) in seq_tickets.into_iter().zip(auto_tickets).enumerate() {
+        let want = a.wait().unwrap();
+        let got = b.wait().unwrap();
+        assert_eq!(want, got, "request {k}: auto-tuned serving diverged from Seq");
+    }
+
+    let m = auto_coord.shutdown();
+    assert_eq!(m.completed, 64);
+    assert_eq!(m.errors, 0);
+    assert_ne!(m.tuned, "off", "auto-tuned backend must report its config");
+    assert!(m.line().contains("tuned="), "metrics line must carry tuned=: {}", m.line());
+    assert!(m.line().contains("sweeps="), "metrics line must carry sweeps=: {}", m.line());
+    let ms = seq_coord.shutdown();
+    assert_eq!(ms.tuned, "off", "an untuned backend reports tuned=off");
+}
+
+#[test]
+fn preloaded_tune_profile_serves_without_resweeping() {
+    let n = 24;
+    let mut rng = Rng64::new(1102);
+    let plan = Plan::from(random_gplan(n, 5 * n, &mut rng)).build();
+    let batch = 4;
+
+    // produce and persist a profile, then reload it from disk
+    let resolved = autotune::resolve_with(&plan, batch, TuneEffort::Quick);
+    let profile = TuneProfile::new(&plan, batch, &resolved.tuned);
+    let path = std::env::temp_dir()
+        .join(format!("fastes-serve-profile-{}.fasttune", std::process::id()));
+    profile.save(&path).unwrap();
+    let reloaded = TuneProfile::load(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+
+    let prof_plan = Arc::clone(&plan);
+    let coord = Coordinator::start(
+        move || {
+            Ok(Box::new(NativeGftBackend::with_tune_profile(
+                prof_plan,
+                TransformDirection::Forward,
+                batch,
+                None,
+                &reloaded,
+            )?) as Box<dyn Backend>)
+        },
+        ServeConfig { max_batch: batch, ..Default::default() },
+    )
+    .unwrap();
+    for _ in 0..16 {
+        let sig: Vec<f32> = (0..n).map(|_| rng.randn() as f32).collect();
+        coord.submit(sig).unwrap().wait().unwrap();
+    }
+    let m = coord.shutdown();
+    assert_eq!(m.completed, 16);
+    assert_ne!(m.tuned, "off", "profile-backed backend must report its config");
+    assert_eq!(m.tune_sweeps, 0, "a preloaded profile must serve with zero startup sweeps");
+    assert!(m.line().contains("sweeps=0"), "{}", m.line());
+
+    // a profile for a different operator must be rejected at startup
+    let other = Plan::from(random_gplan(n, 5 * n, &mut rng)).build();
+    let bad_profile = profile.clone();
+    let r = Coordinator::start(
+        move || {
+            Ok(Box::new(NativeGftBackend::with_tune_profile(
+                other,
+                TransformDirection::Forward,
+                batch,
+                None,
+                &bad_profile,
+            )?) as Box<dyn Backend>)
+        },
+        ServeConfig { max_batch: batch, ..Default::default() },
+    );
+    assert!(r.is_err(), "mismatched tune profile must fail coordinator startup");
 }
 
 #[test]
