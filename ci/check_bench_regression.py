@@ -1,22 +1,56 @@
 #!/usr/bin/env python3
-"""Compare a fresh BENCH_apply.json against the checked-in snapshot.
+"""Compare a fresh bench artifact against the checked-in snapshot.
 
 Usage: check_bench_regression.py BENCH_apply.json ci/bench_snapshot.json
+       check_bench_regression.py BENCH_factor.json ci/factor_snapshot.json
 
-Fails (exit 1) when the pooled ns/stage of any size regresses more than
-the snapshot's `max_regression` factor — but only once the snapshot is
+The artifact's top-level `bench` field ("apply" — the default when the
+field is absent — or "factor") selects the comparison: apply artifacts
+gate pooled ns/stage per size, factor artifacts gate ns/step per
+(kind, n, threads) row. The snapshot must be of the same kind.
+
+Fails (exit 1) when any compared number regresses more than the
+snapshot's `max_regression` factor — but only once the snapshot is
 calibrated (`calibrated: true`); until then the comparison is printed as
 advisory so the gate cannot fail on un-measured placeholder numbers.
 
 Once calibrated, the gate also refuses to pass silently on a broken
-input: a missing BENCH_apply.json or a bench artifact without the
-`kernel_isa` field (perf numbers are only comparable when we know which
-SIMD kernel produced them) is a hard failure with an actionable message.
+input: a missing artifact, a kind mismatch, or an apply artifact without
+the `kernel_isa` field (perf numbers are only comparable when we know
+which SIMD kernel produced them) is a hard failure with an actionable
+message.
 """
 
 import json
 import os
 import sys
+
+
+def check_factor(bench, snap, calibrated, limit):
+    """Gate a BENCH_factor.json: ns/step per (kind, n, threads) row."""
+    baseline = snap.get("factor_ns_per_step", {})
+    failures = []
+    for row in bench["results"]:
+        key = f"{row['kind']}/{row['n']}/{row['threads']}"
+        now = float(row["ns_per_step"])
+        base = baseline.get(key)
+        if base is None:
+            print(f"{key}: {now:.1f} ns/step (no baseline — snapshot uncalibrated)")
+            continue
+        ratio = now / float(base)
+        status = "OK" if ratio <= limit else "REGRESSION"
+        print(
+            f"{key}: {now:.1f} ns/step vs baseline {float(base):.1f} "
+            f"({ratio:.2f}x, limit {limit:.2f}x) {status}"
+        )
+        if ratio > limit:
+            failures.append(key)
+    if failures and calibrated:
+        print(f"factor ns/step regressed beyond {limit:.2f}x for {failures}")
+        return 1
+    if failures:
+        print("regressions observed but snapshot is uncalibrated — advisory only")
+    return 0
 
 
 def main() -> int:
@@ -39,6 +73,17 @@ def main() -> int:
         return 0
 
     bench = json.load(open(bench_path))
+
+    bench_kind = bench.get("bench", "apply")
+    snap_kind = snap.get("bench", "apply")
+    if bench_kind != snap_kind:
+        print(
+            f"ERROR: {bench_path} is a '{bench_kind}' bench but {snap_path} is a "
+            f"'{snap_kind}' snapshot — the artifact and snapshot kinds do not match"
+        )
+        return 1
+    if bench_kind == "factor":
+        return check_factor(bench, snap, calibrated, limit)
 
     kernel = bench.get("kernel_isa")
     if not kernel:

@@ -12,6 +12,14 @@ pins the exit-code contract against synthetic inputs —
   * calibrated + artifact without kernel_isa    -> fail
   * uncalibrated + regression                   -> advisory (pass)
 
+and the factor-artifact path (BENCH_factor.json vs factor_snapshot.json,
+dispatched on the documents' top-level `bench` field) —
+
+  * uncalibrated factor snapshot                -> advisory (pass)
+  * calibrated + ns/step regression             -> fail
+  * calibrated + within the limit               -> pass
+  * artifact/snapshot kind mismatch             -> fail
+
 Run: python3 ci/test_check_bench_regression.py
 """
 
@@ -53,6 +61,34 @@ def bench(pooled=10.0, kernel="avx2", tuned=True):
             "ns_per_stage": pooled,
         }
     return doc
+
+
+def factor_snapshot(calibrated=False, baseline=None, limit=1.5):
+    return {
+        "bench": "factor",
+        "calibrated": calibrated,
+        "max_regression": limit,
+        "factor_ns_per_step": baseline or {},
+    }
+
+
+def factor_bench(ns=100.0):
+    return {
+        "bench": "factor",
+        "results": [
+            {
+                "kind": "sym",
+                "n": 64,
+                "budget": 128,
+                "threads": 1,
+                "steps": 130,
+                "total_s": 0.01,
+                "ns_per_step": ns,
+                "steps_per_sec": 1e9 / ns,
+                "rel_err": 0.3,
+            }
+        ],
+    }
 
 
 def run_case(name, bench_doc, snap_doc, want_exit, want_in_stdout=None):
@@ -132,6 +168,34 @@ def main() -> int:
             snapshot(baseline=10.0),
             0,
             "autotune(quick) chose pool",
+        ),
+        (
+            "factor: uncalibrated snapshot stays advisory",
+            factor_bench(ns=100.0),
+            factor_snapshot(),
+            0,
+            "no baseline",
+        ),
+        (
+            "factor: calibrated ns/step regression fails",
+            factor_bench(ns=200.0),
+            factor_snapshot(calibrated=True, baseline={"sym/64/1": 100.0}),
+            1,
+            "REGRESSION",
+        ),
+        (
+            "factor: calibrated within limit passes",
+            factor_bench(ns=110.0),
+            factor_snapshot(calibrated=True, baseline={"sym/64/1": 100.0}),
+            0,
+            "OK",
+        ),
+        (
+            "factor artifact against apply snapshot fails",
+            factor_bench(ns=100.0),
+            snapshot(),
+            1,
+            "do not match",
         ),
     ]
     failed = 0

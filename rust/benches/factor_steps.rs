@@ -1,11 +1,12 @@
 //! Factorization-engine benches: per-phase cost of Algorithm 1 —
 //! Theorem-1 init throughput (factors/s), polish sweep cost, and the
-//! general-case (T) init cost; plus the symmetric eigensolver substrate.
+//! general-case (T) init cost; plus thread scaling of the deterministic
+//! parallel factorizer and the symmetric eigensolver substrate.
 //!
 //! Run with: `cargo bench --bench factor_steps`
 
 use fastes::bench_util::bench;
-use fastes::factor::{GeneralFactorizer, GeneralOptions, SymFactorizer, SymOptions};
+use fastes::factor::{FactorExec, GeneralFactorizer, GeneralOptions, SymFactorizer, SymOptions};
 use fastes::graphs;
 use fastes::linalg::{eigh, Mat, Rng64};
 use fastes::plan::{Direction, ExecPolicy, FastOperator};
@@ -54,6 +55,43 @@ fn main() {
             )
             .run();
             f.objective()
+        });
+        println!("{}  ({:.0} factors/s)", t.line(), m as f64 / t.min_s);
+    }
+    // thread scaling: the deterministic parallel factorizer vs serial.
+    // min_work 0 forces the pool paths even at bench sizes; the chain is
+    // bitwise-identical across rows, so only the timing moves.
+    for n in [128usize, 256] {
+        let mut rng = Rng64::new(9);
+        let graph = graphs::community(n, &mut rng);
+        let l = graph.laplacian();
+        let g = 2 * n * (n as f64).log2() as usize;
+        for threads in [1usize, 2, 4, 8] {
+            let exec = if threads == 1 {
+                FactorExec::serial()
+            } else {
+                FactorExec { threads, min_work: 0 }
+            };
+            let opts = SymOptions { max_sweeps: 0, exec, ..Default::default() };
+            let t = bench(&format!("sym init n={n} g={g} threads={threads}"), 3, 0.2, || {
+                SymFactorizer::new(&l, g, opts.clone()).run().init_objective
+            });
+            println!("{}  ({:.0} factors/s)", t.line(), g as f64 / t.min_s);
+        }
+    }
+    let n = 64usize;
+    let mut rng = Rng64::new(10);
+    let c = Mat::randn(n, n, &mut rng);
+    let m = n * (n as f64).log2() as usize;
+    for threads in [1usize, 4] {
+        let exec = if threads == 1 {
+            FactorExec::serial()
+        } else {
+            FactorExec { threads, min_work: 0 }
+        };
+        let opts = GeneralOptions { max_sweeps: 0, exec, ..Default::default() };
+        let t = bench(&format!("gen init n={n} m={m} threads={threads}"), 3, 0.3, || {
+            GeneralFactorizer::new(&c, m, opts.clone()).run().objective()
         });
         println!("{}  ({:.0} factors/s)", t.line(), m as f64 / t.min_s);
     }

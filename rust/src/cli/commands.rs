@@ -9,7 +9,11 @@ use anyhow::bail;
 
 use super::figures::{budget, random_gplan, random_tplan};
 use super::Args;
-use crate::factor::{GeneralFactorizer, GeneralOptions, SymFactorizer, SymOptions};
+use crate::factor::{
+    load_checkpoint, mat_checksum, save_gen_checkpoint, save_sym_checkpoint, CheckpointMeta,
+    FactorExec, GenCheckpoint, GenRunControl, GeneralFactorizer, GeneralOptions, LoadedState,
+    SymCheckpoint, SymFactorizer, SymOptions, SymRunControl,
+};
 use crate::graphs::{self, RealWorldGraph};
 use crate::linalg::{eigh, Mat, Rng64};
 use crate::plan::{Direction, ExecPolicy, FastOperator, Plan};
@@ -105,13 +109,49 @@ fn maybe_save_plan(a: &Args, plan: impl FnOnce() -> Arc<Plan>) -> crate::Result<
     Ok(())
 }
 
+/// Execution knobs of the factorizer itself: `--threads` /
+/// `--factor-min-work` over the `FASTES_FACTOR_*` environment defaults.
+/// The thread count never changes the resulting chain — the parallel
+/// factorizer is bitwise-identical to the sequential one.
+fn factor_exec_from_args(a: &Args) -> crate::Result<FactorExec> {
+    let base = FactorExec::default();
+    Ok(FactorExec {
+        threads: a.get("threads", base.threads)?.max(1),
+        min_work: a.get("factor-min-work", base.min_work)?,
+    })
+}
+
 /// `fastes factor` — factor a random matrix and report accuracy/time.
+/// `--checkpoint BASE` periodically persists `BASE.fastplan` +
+/// `BASE.fastckpt` (every `--checkpoint-every` progress steps) so a
+/// killed or `--halt-after`-stopped run can be continued with
+/// `--resume BASE`, reproducing the uninterrupted result bitwise.
 pub fn factor(a: &Args) -> crate::Result<()> {
+    let resume = a.get_str("resume", "");
+    if !resume.is_empty() {
+        return factor_resume(a, &resume);
+    }
     let n: usize = a.get("n", 128)?;
     let g: usize = a.get("budget", budget(2, n))?;
     let seed: u64 = a.get("seed", 1)?;
     let sweeps: usize = a.get("sweeps", 2)?;
     let kind = a.get_str("kind", "sym");
+    let exec = factor_exec_from_args(a)?;
+    let ck_base = a.get_str("checkpoint", "");
+    let mut every: usize = a.get("checkpoint-every", 0)?;
+    if !ck_base.is_empty() && every == 0 {
+        every = 100;
+    }
+    if ck_base.is_empty() && every != 0 {
+        bail!("--checkpoint-every needs --checkpoint BASE");
+    }
+    let halt_after = match a.has("halt-after") {
+        true => Some(a.get("halt-after", 0usize)?),
+        false => None,
+    };
+    if halt_after.is_some() && ck_base.is_empty() {
+        bail!("--halt-after without --checkpoint BASE would discard the partial run");
+    }
     let mut rng = Rng64::new(seed);
     let x = Mat::randn(n, n, &mut rng);
     let t0 = Instant::now();
@@ -120,10 +160,38 @@ pub fn factor(a: &Args) -> crate::Result<()> {
             let s = if kind == "psd" { x.matmul(&x.transpose()) } else { &x + &x.transpose() };
             let opts = SymOptions {
                 max_sweeps: sweeps,
+                eps: a.get("eps", SymOptions::default().eps)?,
                 full_update: a.has("full-update"),
+                exec,
                 ..Default::default()
             };
-            let f = SymFactorizer::new(&s, g, opts).run();
+            let meta = CheckpointMeta {
+                kind: "sym".to_string(),
+                budget: g,
+                max_sweeps: opts.max_sweeps,
+                eps: opts.eps,
+                full_update: opts.full_update,
+                checkpoint_every: every,
+                problem_n: n,
+                problem_seed: seed,
+                problem_kind: kind.clone(),
+                matrix_checksum: mat_checksum(&s),
+            };
+            let f = if ck_base.is_empty() {
+                SymFactorizer::new(&s, g, opts).run()
+            } else {
+                let base = PathBuf::from(&ck_base);
+                let mut ctrl = SymRunControl {
+                    checkpoint_every: every,
+                    halt_after,
+                    on_checkpoint: Some(Box::new(|ck: &SymCheckpoint| {
+                        if let Err(e) = save_sym_checkpoint(&base, &meta, ck) {
+                            eprintln!("checkpoint write failed: {e:#}");
+                        }
+                    })),
+                };
+                SymFactorizer::new(&s, g, opts).run_controlled(&mut ctrl)
+            };
             println!(
                 "sym n={n} g={g} init_rel={:.4} final_rel={:.4} sweeps={} flops/apply={} dense={} elapsed={:.2?}",
                 (f.init_objective / s.fro_norm_sq()).sqrt(),
@@ -133,15 +201,51 @@ pub fn factor(a: &Args) -> crate::Result<()> {
                 2 * n * n,
                 t0.elapsed()
             );
+            if f.halted {
+                println!(
+                    "halted early (--halt-after): {} factors, {} sweeps so far — \
+                     resume with: fastes factor --resume {ck_base}",
+                    f.chain.len(),
+                    f.sweeps_run
+                );
+            }
             maybe_save_plan(a, || f.plan())?;
         }
         "gen" => {
             let opts = GeneralOptions {
                 max_sweeps: sweeps,
+                eps: a.get("eps", GeneralOptions::default().eps)?,
                 full_update: a.has("full-update"),
+                exec,
                 ..Default::default()
             };
-            let f = GeneralFactorizer::new(&x, g, opts).run();
+            let meta = CheckpointMeta {
+                kind: "gen".to_string(),
+                budget: g,
+                max_sweeps: opts.max_sweeps,
+                eps: opts.eps,
+                full_update: opts.full_update,
+                checkpoint_every: every,
+                problem_n: n,
+                problem_seed: seed,
+                problem_kind: kind.clone(),
+                matrix_checksum: mat_checksum(&x),
+            };
+            let f = if ck_base.is_empty() {
+                GeneralFactorizer::new(&x, g, opts).run()
+            } else {
+                let base = PathBuf::from(&ck_base);
+                let mut ctrl = GenRunControl {
+                    checkpoint_every: every,
+                    halt_after,
+                    on_checkpoint: Some(Box::new(|ck: &GenCheckpoint| {
+                        if let Err(e) = save_gen_checkpoint(&base, &meta, ck) {
+                            eprintln!("checkpoint write failed: {e:#}");
+                        }
+                    })),
+                };
+                GeneralFactorizer::new(&x, g, opts).run_controlled(&mut ctrl)
+            };
             println!(
                 "gen n={n} m={g} init_rel={:.4} final_rel={:.4} sweeps={} flops/apply={} dense={} elapsed={:.2?}",
                 (f.init_objective / x.fro_norm_sq()).sqrt(),
@@ -151,9 +255,128 @@ pub fn factor(a: &Args) -> crate::Result<()> {
                 2 * n * n,
                 t0.elapsed()
             );
+            if f.halted {
+                println!(
+                    "halted early (--halt-after): {} factors, {} sweeps so far — \
+                     resume with: fastes factor --resume {ck_base}",
+                    f.chain.len(),
+                    f.sweeps_run
+                );
+            }
             maybe_save_plan(a, || f.plan())?;
         }
         other => bail!("--kind must be sym|psd|gen (got {other})"),
+    }
+    Ok(())
+}
+
+/// `fastes factor --resume BASE` — load `BASE.fastplan` +
+/// `BASE.fastckpt`, regenerate and verify the seeded input matrix, then
+/// continue the run exactly where it stopped. The problem and options
+/// are pinned by the checkpoint; only execution knobs (`--threads`) and
+/// the checkpoint cadence/destination may be overridden.
+fn factor_resume(a: &Args, base: &str) -> crate::Result<()> {
+    for k in ["n", "budget", "seed", "kind", "sweeps", "eps", "full-update"] {
+        if a.has(k) {
+            bail!("--{k} conflicts with --resume (the checkpoint pins the problem and options)");
+        }
+    }
+    let (mut meta, state) = load_checkpoint(&PathBuf::from(base))?;
+    meta.checkpoint_every = a.get("checkpoint-every", meta.checkpoint_every)?;
+    let write_base = PathBuf::from(a.get_str("checkpoint", base));
+    let every = meta.checkpoint_every;
+    let halt_after = match a.has("halt-after") {
+        true => Some(a.get("halt-after", 0usize)?),
+        false => None,
+    };
+    let exec = factor_exec_from_args(a)?;
+    let n = meta.problem_n;
+    let g = meta.budget;
+    let mut rng = Rng64::new(meta.problem_seed);
+    let x = Mat::randn(n, n, &mut rng);
+    let t0 = Instant::now();
+    match state {
+        LoadedState::Sym(ck) => {
+            let s = if meta.problem_kind == "psd" {
+                x.matmul(&x.transpose())
+            } else {
+                &x + &x.transpose()
+            };
+            if mat_checksum(&s) != meta.matrix_checksum {
+                bail!("--resume {base}: the regenerated matrix does not match the checkpoint");
+            }
+            let opts = SymOptions {
+                max_sweeps: meta.max_sweeps,
+                eps: meta.eps,
+                full_update: meta.full_update,
+                exec,
+                ..Default::default()
+            };
+            println!(
+                "resuming {base}: sym n={n} g={g} steps_done={} in_init={}",
+                ck.steps_done, ck.in_init
+            );
+            let mut ctrl = SymRunControl {
+                checkpoint_every: every,
+                halt_after,
+                on_checkpoint: Some(Box::new(|c: &SymCheckpoint| {
+                    if let Err(e) = save_sym_checkpoint(&write_base, &meta, c) {
+                        eprintln!("checkpoint write failed: {e:#}");
+                    }
+                })),
+            };
+            let f = SymFactorizer::new(&s, g, opts).resume(ck, &mut ctrl);
+            drop(ctrl);
+            println!(
+                "sym n={n} g={g} final_rel={:.4} sweeps={} flops/apply={} elapsed={:.2?}",
+                f.relative_error(&s),
+                f.sweeps_run,
+                f.chain.flops(),
+                t0.elapsed()
+            );
+            if f.halted {
+                println!("halted again — resume with: fastes factor --resume {base}");
+            }
+            maybe_save_plan(a, || f.plan())?;
+        }
+        LoadedState::Gen(ck) => {
+            if mat_checksum(&x) != meta.matrix_checksum {
+                bail!("--resume {base}: the regenerated matrix does not match the checkpoint");
+            }
+            let opts = GeneralOptions {
+                max_sweeps: meta.max_sweeps,
+                eps: meta.eps,
+                full_update: meta.full_update,
+                exec,
+                ..Default::default()
+            };
+            println!(
+                "resuming {base}: gen n={n} m={g} steps_done={} in_init={}",
+                ck.steps_done, ck.in_init
+            );
+            let mut ctrl = GenRunControl {
+                checkpoint_every: every,
+                halt_after,
+                on_checkpoint: Some(Box::new(|c: &GenCheckpoint| {
+                    if let Err(e) = save_gen_checkpoint(&write_base, &meta, c) {
+                        eprintln!("checkpoint write failed: {e:#}");
+                    }
+                })),
+            };
+            let f = GeneralFactorizer::new(&x, g, opts).resume(ck, &mut ctrl);
+            drop(ctrl);
+            println!(
+                "gen n={n} m={g} final_rel={:.4} sweeps={} flops/apply={} elapsed={:.2?}",
+                f.relative_error(&x),
+                f.sweeps_run,
+                f.chain.flops(),
+                t0.elapsed()
+            );
+            if f.halted {
+                println!("halted again — resume with: fastes factor --resume {base}");
+            }
+            maybe_save_plan(a, || f.plan())?;
+        }
     }
     Ok(())
 }
@@ -600,6 +823,9 @@ pub fn schedule(a: &Args) -> crate::Result<()> {
 /// `BENCH_apply.json` (or `--out PATH`) so the perf trajectory of the
 /// apply hot path is tracked in a machine-readable artifact.
 pub fn bench(a: &Args) -> crate::Result<()> {
+    if a.has("factor") {
+        return bench_factor(a);
+    }
     let sizes = a.get_list("sizes", &[256, 512, 1024])?;
     let batch: usize = a.get("batch", 64)?;
     let alpha: usize = a.get("alpha", 2)?;
@@ -738,6 +964,106 @@ pub fn bench(a: &Args) -> crate::Result<()> {
             cfg.tile_cols,
             cfg.min_work,
             spawn_cfg.min_work,
+            entries.join(",\n")
+        );
+        std::fs::write(&out_path, json)
+            .map_err(|e| anyhow::anyhow!("cannot write {out_path}: {e}"))?;
+        println!("wrote {out_path}");
+    }
+    Ok(())
+}
+
+/// One `BENCH_factor.json` result row (also printed to stdout).
+fn bench_factor_row(
+    kind: &str,
+    n: usize,
+    g: usize,
+    threads: usize,
+    steps: usize,
+    secs: f64,
+    rel: f64,
+) -> String {
+    let steps = steps.max(1);
+    let ns = secs * 1e9 / steps as f64;
+    let sps = steps as f64 / secs.max(1e-12);
+    println!(
+        "{kind} n={n} g={g} threads={threads}: {steps} steps, {ns:.0} ns/step, \
+         {sps:.0} steps/s, rel_err={rel:.4}"
+    );
+    format!(
+        "    {{\"kind\": \"{kind}\", \"n\": {n}, \"budget\": {g}, \"threads\": {threads}, \
+         \"steps\": {steps}, \"total_s\": {secs:.6}, \"ns_per_step\": {ns:.1}, \
+         \"steps_per_sec\": {sps:.1}, \"rel_err\": {rel:.6}}}"
+    )
+}
+
+/// `fastes bench --factor` — machine-readable factorization benchmark:
+/// per-(kind, n, threads) step timings for the sym and gen factorizers
+/// at fixed seeds, serial vs pooled. A progress step is one greedy init
+/// factor placed or one polishing sweep completed; the thread count
+/// never changes the produced chain, only wall-clock. `--json` writes
+/// `BENCH_factor.json` (or `--out PATH`) so the perf trajectory of plan
+/// *construction* is tracked like `BENCH_apply.json` tracks apply.
+fn bench_factor(a: &Args) -> crate::Result<()> {
+    let sizes = a.get_list("sizes", &[48, 64])?;
+    let alpha: usize = a.get("alpha", 2)?;
+    let seed: u64 = a.get("seed", 1)?;
+    let sweeps: usize = a.get("sweeps", 1)?;
+    let exec = factor_exec_from_args(a)?;
+    let mut thread_counts = vec![1usize];
+    if exec.threads > 1 {
+        thread_counts.push(exec.threads);
+    }
+    let mut entries = Vec::new();
+    for &n in &sizes {
+        if n < 2 {
+            bail!("--sizes entries must be ≥ 2 (got {n})");
+        }
+        let g = budget(alpha, n);
+        // deterministic per-size seed so sizes can be re-run independently
+        let mut rng = Rng64::new(seed ^ ((n as u64) << 20));
+        let x = Mat::randn(n, n, &mut rng);
+        let s = &x + &x.transpose();
+        for &threads in &thread_counts {
+            // min_work 0 forces the parallel paths even at bench sizes;
+            // threads == 1 is the true sequential reference
+            let run_exec = match threads {
+                1 => FactorExec::serial(),
+                t => FactorExec { threads: t, min_work: 0 },
+            };
+            let t0 = Instant::now();
+            let f = SymFactorizer::new(
+                &s,
+                g,
+                SymOptions { max_sweeps: sweeps, exec: run_exec, ..Default::default() },
+            )
+            .run();
+            let el = t0.elapsed().as_secs_f64();
+            let steps = f.chain.len() + f.sweeps_run;
+            entries.push(bench_factor_row("sym", n, g, threads, steps, el, f.relative_error(&s)));
+            let t0 = Instant::now();
+            let f = GeneralFactorizer::new(
+                &x,
+                g,
+                GeneralOptions { max_sweeps: sweeps, exec: run_exec, ..Default::default() },
+            )
+            .run();
+            let el = t0.elapsed().as_secs_f64();
+            let steps = f.chain.len() + f.sweeps_run;
+            entries.push(bench_factor_row("gen", n, g, threads, steps, el, f.relative_error(&x)));
+        }
+    }
+    if a.has("json") {
+        let out_path = a.get_str("out", "BENCH_factor.json");
+        let threads_json = thread_counts
+            .iter()
+            .map(ToString::to_string)
+            .collect::<Vec<_>>()
+            .join(", ");
+        let json = format!(
+            "{{\n  \"bench\": \"factor\",\n  \"seed\": {seed},\n  \"alpha\": {alpha},\n  \
+             \"sweeps\": {sweeps},\n  \"threads\": [{threads_json}],\n  \
+             \"results\": [\n{}\n  ]\n}}\n",
             entries.join(",\n")
         );
         std::fs::write(&out_path, json)

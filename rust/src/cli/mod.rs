@@ -4,7 +4,11 @@
 //! `fastes <command> [--flag value]...`. Commands:
 //!
 //! * `repro --fig N` — regenerate a paper figure (see [`figures`]).
-//! * `factor` — factor a random matrix and report accuracy.
+//! * `factor` — factor a random matrix and report accuracy
+//!   (`--threads` runs the deterministic parallel factorizer;
+//!   `--checkpoint BASE` persists resumable `.fastplan`/`.fastckpt`
+//!   pairs and `--resume BASE` continues a halted/killed run,
+//!   reproducing the uninterrupted result bitwise).
 //! * `gft` — build a graph, factor its Laplacian, report the fast-GFT
 //!   accuracy and flop counts.
 //! * `serve` — run the serving coordinator on a factored GFT and report
@@ -22,7 +26,8 @@
 //! * `bench` — machine-readable apply benchmark (sequential vs spawn vs
 //!   pooled; `--json` writes `BENCH_apply.json` incl. the dispatched
 //!   `kernel_isa`; `--autotune` adds the auto-tuned mode and stamps the
-//!   tuned config).
+//!   tuned config). `bench --factor` benchmarks plan *construction*
+//!   instead (ns/step per kind/n/threads, `BENCH_factor.json`).
 //! * `kernels` — report the SIMD kernel dispatch of this host (detected
 //!   / default / available ISAs).
 //! * `eigen` — eigendecomposition smoke (substrate sanity).
@@ -129,7 +134,16 @@ COMMANDS
                        [--seed S] [--full]
   factor               factor a random matrix
                        [--kind sym|psd|gen] [--n N] [--budget G] [--seed S]
-                       [--sweeps K] [--full-update]
+                       [--sweeps K] [--eps E] [--full-update]
+                       [--threads T] [--factor-min-work W]  (parallel
+                       factorizer — same chain at any thread count)
+                       [--checkpoint BASE] [--checkpoint-every N]
+                       (persist BASE.fastplan + BASE.fastckpt every N
+                       progress steps; default N=100)
+                       [--halt-after K]  (stop after K progress steps,
+                       checkpointing the partial run)
+                       [--resume BASE]  (continue a checkpointed run —
+                       bitwise-identical to the uninterrupted result)
                        [--save-plan FILE.fastplan]
   gft                  fast GFT of a graph Laplacian
                        [--graph community|er|sensor|minnesota|protein|email|facebook]
@@ -166,6 +180,9 @@ COMMANDS
                        [--threads T] [--kernel K] [--json] [--out PATH]
                        [--autotune off|quick|full]  (adds the auto-tuned
                        mode and stamps its config into the JSON)
+                       [--factor]  (benchmark plan construction instead:
+                       sym/gen ns-per-step at 1 vs T threads, writes
+                       BENCH_factor.json; [--sweeps K])
   kernels              report SIMD kernel dispatch: detected / default /
                        available ISAs (FASTES_KERNEL and --kernel pin it)
   eigen                symmetric eigensolver smoke [--n N] [--seed S]
@@ -189,6 +206,20 @@ mod tests {
         assert!(!a.has("absent"));
         assert_eq!(a.get_list("sizes", &[]).unwrap(), vec![128, 256]);
         assert_eq!(a.get("reals", 7usize).unwrap(), 7);
+    }
+
+    #[test]
+    fn parses_checkpoint_flags() {
+        let a = Args::parse(
+            ["factor", "--checkpoint", "ck/run", "--checkpoint-every", "50", "--halt-after", "80"]
+                .map(String::from),
+        )
+        .unwrap();
+        assert_eq!(a.get_str("checkpoint", ""), "ck/run");
+        assert_eq!(a.get("checkpoint-every", 0usize).unwrap(), 50);
+        assert!(a.has("halt-after"));
+        assert_eq!(a.get("halt-after", 0usize).unwrap(), 80);
+        assert_eq!(a.get_str("resume", ""), "");
     }
 
     #[test]

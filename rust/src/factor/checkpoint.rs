@@ -1,0 +1,505 @@
+//! Durable factorization checkpoints: the `.fastckpt` sidecar format.
+//!
+//! A checkpoint on disk is a **pair** of files sharing one base path:
+//!
+//! * `{base}.fastplan` — the chain built so far, stored through the
+//!   standard plan artifact (bit-exact transform parameters, versioned,
+//!   checksummed); any fastes tool can already load, apply or inspect it.
+//! * `{base}.fastckpt` — a small versioned JSON sidecar with everything
+//!   else a resume needs: phase (init vs. sweeps), step/sweep counters,
+//!   the spectrum and objective trace (as f64 **bit patterns**, so resume
+//!   is bitwise-exact), and the identity of the problem that produced it
+//!   (dimension, generator seed/kind, matrix checksum, budget, options).
+//!
+//! The sidecar mirrors the `.fasttune` profile's integrity scheme: a
+//! deterministic JSON layout whose FNV-1a-64 checksum is computed over
+//! the document with the checksum value zeroed, then stamped in place.
+//! Version mismatches, truncation and corruption are load errors.
+//!
+//! Everything stored is RNG-free: together with the deterministic
+//! factorizers (see [`super::parallel`]), resuming from any checkpoint
+//! reproduces the uninterrupted run's chain bitwise — `fastes factor
+//! --resume` asserts the matrix checksum before trusting a sidecar.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::bail;
+
+use crate::plan::{fnv1a64, Plan};
+
+use super::general::GenCheckpoint;
+use super::symmetric::SymCheckpoint;
+
+/// The `.fastckpt` format version this build reads and writes.
+pub const CKPT_FORMAT_VERSION: u64 = 1;
+
+const CHECKSUM_PLACEHOLDER: &str = "0000000000000000";
+const CHECKSUM_FIELD: &str = "\n  \"checksum\": \"";
+
+/// Identity of the run a checkpoint belongs to: enough to regenerate the
+/// input matrix (for the CLI's seeded problems), re-validate it, and
+/// restart the factorizer with the exact options of the original run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CheckpointMeta {
+    /// Factorizer family: `"sym"` (G-transforms) or `"gen"`
+    /// (T-transforms).
+    pub kind: String,
+    /// Transform budget (`g` for sym, `m` for gen).
+    pub budget: usize,
+    /// `max_sweeps` of the original options.
+    pub max_sweeps: usize,
+    /// Relative stopping threshold of the original options.
+    pub eps: f64,
+    /// `full_update` of the original options.
+    pub full_update: bool,
+    /// Checkpoint cadence of the original run (progress steps).
+    pub checkpoint_every: usize,
+    /// Problem dimension `n`.
+    pub problem_n: usize,
+    /// Generator seed of the CLI's seeded problem (0 when the matrix did
+    /// not come from the CLI generator).
+    pub problem_seed: u64,
+    /// Generator kind: `"sym"`, `"psd"` or `"gen"`.
+    pub problem_kind: String,
+    /// FNV-1a-64 over the input matrix entries' little-endian bit
+    /// patterns ([`mat_checksum`]) — resume refuses a mismatched matrix.
+    pub matrix_checksum: u64,
+}
+
+/// The factorizer-state half of a loaded checkpoint.
+#[derive(Clone, Debug)]
+pub enum LoadedState {
+    /// A symmetric (G-transform) run.
+    Sym(SymCheckpoint),
+    /// A general (T-transform) run.
+    Gen(GenCheckpoint),
+}
+
+/// FNV-1a-64 over the little-endian byte patterns of `values` — the
+/// matrix fingerprint stored in [`CheckpointMeta::matrix_checksum`].
+pub fn fnv_f64s(values: &[f64]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for v in values {
+        for b in v.to_le_bytes() {
+            h ^= u64::from(b);
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// [`fnv_f64s`] over a matrix (row-major entries).
+pub fn mat_checksum(m: &crate::linalg::Mat) -> u64 {
+    fnv_f64s(m.as_slice())
+}
+
+/// `{base}.fastplan` path for a checkpoint base.
+pub fn plan_path(base: &Path) -> PathBuf {
+    with_ext(base, "fastplan")
+}
+
+/// `{base}.fastckpt` path for a checkpoint base.
+pub fn sidecar_path(base: &Path) -> PathBuf {
+    with_ext(base, "fastckpt")
+}
+
+fn with_ext(base: &Path, ext: &str) -> PathBuf {
+    let mut name = base
+        .file_name()
+        .map_or_else(String::new, |s| s.to_string_lossy().into_owned());
+    name.push('.');
+    name.push_str(ext);
+    base.with_file_name(name)
+}
+
+/// Write a symmetric checkpoint pair (`{base}.fastplan` +
+/// `{base}.fastckpt`). The write is atomic per file (temp + rename), so
+/// a kill mid-checkpoint leaves the previous pair intact.
+pub fn save_sym_checkpoint(
+    base: &Path,
+    meta: &CheckpointMeta,
+    ck: &SymCheckpoint,
+) -> crate::Result<()> {
+    let plan = Plan::from(&ck.chain).build();
+    plan.save(plan_path(base))?;
+    let doc = sidecar_json(
+        meta,
+        ck.in_init,
+        ck.steps_done,
+        ck.sweeps_run,
+        ck.init_objective,
+        &ck.spectrum,
+        &ck.objective_trace,
+    );
+    write_atomic(&sidecar_path(base), &doc)
+}
+
+/// Write a general checkpoint pair; see [`save_sym_checkpoint`].
+pub fn save_gen_checkpoint(
+    base: &Path,
+    meta: &CheckpointMeta,
+    ck: &GenCheckpoint,
+) -> crate::Result<()> {
+    let plan = Plan::from(&ck.chain).build();
+    plan.save(plan_path(base))?;
+    let doc = sidecar_json(
+        meta,
+        ck.in_init,
+        ck.steps_done,
+        ck.sweeps_run,
+        ck.init_objective,
+        &ck.spectrum,
+        &ck.objective_trace,
+    );
+    write_atomic(&sidecar_path(base), &doc)
+}
+
+/// Load a checkpoint pair back: the run identity plus the factorizer
+/// state (chain from the `.fastplan`, the rest from the sidecar).
+pub fn load_checkpoint(base: &Path) -> crate::Result<(CheckpointMeta, LoadedState)> {
+    let sidecar = sidecar_path(base);
+    let text = std::fs::read_to_string(&sidecar)
+        .map_err(|e| anyhow::anyhow!("cannot read checkpoint {}: {e}", sidecar.display()))?;
+    let (meta, fields) = parse_sidecar(&text)
+        .map_err(|e| e.context(format!("loading checkpoint {}", sidecar.display())))?;
+    let pp = plan_path(base);
+    let plan = Plan::load(&pp)?;
+    let state = match meta.kind.as_str() {
+        "sym" => {
+            let chain = plan.as_gchain().cloned().ok_or_else(|| {
+                anyhow::anyhow!("sym checkpoint, but {} holds a T-chain", pp.display())
+            })?;
+            LoadedState::Sym(SymCheckpoint {
+                chain,
+                spectrum: fields.spectrum,
+                init_objective: fields.init_objective,
+                objective_trace: fields.trace,
+                sweeps_run: fields.sweeps_run,
+                steps_done: fields.steps_done,
+                in_init: fields.in_init,
+            })
+        }
+        "gen" => {
+            let chain = plan.as_tchain().cloned().ok_or_else(|| {
+                anyhow::anyhow!("gen checkpoint, but {} holds a G-chain", pp.display())
+            })?;
+            LoadedState::Gen(GenCheckpoint {
+                chain,
+                spectrum: fields.spectrum,
+                init_objective: fields.init_objective,
+                objective_trace: fields.trace,
+                sweeps_run: fields.sweeps_run,
+                steps_done: fields.steps_done,
+                in_init: fields.in_init,
+            })
+        }
+        other => bail!("unknown checkpoint kind '{other}' (expected sym|gen)"),
+    };
+    Ok((meta, state))
+}
+
+struct SidecarFields {
+    in_init: bool,
+    steps_done: usize,
+    sweeps_run: usize,
+    init_objective: Option<f64>,
+    spectrum: Vec<f64>,
+    trace: Vec<f64>,
+}
+
+fn sidecar_json(
+    meta: &CheckpointMeta,
+    in_init: bool,
+    steps_done: usize,
+    sweeps_run: usize,
+    init_objective: Option<f64>,
+    spectrum: &[f64],
+    trace: &[f64],
+) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str(&format!("  \"fastckpt\": {CKPT_FORMAT_VERSION},\n"));
+    out.push_str(&format!("  \"kind\": \"{}\",\n", meta.kind));
+    out.push_str(&format!("  \"budget\": {},\n", meta.budget));
+    out.push_str(&format!("  \"max_sweeps\": {},\n", meta.max_sweeps));
+    out.push_str(&format!("  \"eps_bits\": \"{:016x}\",\n", meta.eps.to_bits()));
+    out.push_str(&format!("  \"full_update\": {},\n", meta.full_update));
+    out.push_str(&format!("  \"checkpoint_every\": {},\n", meta.checkpoint_every));
+    out.push_str(&format!("  \"problem_n\": {},\n", meta.problem_n));
+    out.push_str(&format!("  \"problem_seed\": {},\n", meta.problem_seed));
+    out.push_str(&format!("  \"problem_kind\": \"{}\",\n", meta.problem_kind));
+    out.push_str(&format!("  \"matrix_checksum\": \"{:016x}\",\n", meta.matrix_checksum));
+    out.push_str(&format!("  \"in_init\": {in_init},\n"));
+    out.push_str(&format!("  \"steps_done\": {steps_done},\n"));
+    out.push_str(&format!("  \"sweeps_run\": {sweeps_run},\n"));
+    let init_bits = match init_objective {
+        Some(o) => format!("\"{:016x}\"", o.to_bits()),
+        None => "\"none\"".to_string(),
+    };
+    out.push_str(&format!("  \"init_objective_bits\": {init_bits},\n"));
+    out.push_str(&format!("  \"spectrum_bits\": [{}],\n", bits_array(spectrum)));
+    out.push_str(&format!("  \"trace_bits\": [{}],\n", bits_array(trace)));
+    out.push_str(&format!("  \"checksum\": \"{CHECKSUM_PLACEHOLDER}\"\n}}\n"));
+    let sum = format!("{:016x}", fnv1a64(out.as_bytes()));
+    let at = out.rfind(CHECKSUM_FIELD).expect("writer emits the checksum field");
+    let val_at = at + CHECKSUM_FIELD.len();
+    out.replace_range(val_at..val_at + 16, &sum);
+    out
+}
+
+fn bits_array(values: &[f64]) -> String {
+    let hex: Vec<String> = values.iter().map(|v| format!("\"{:016x}\"", v.to_bits())).collect();
+    hex.join(", ")
+}
+
+fn parse_sidecar(text: &str) -> crate::Result<(CheckpointMeta, SidecarFields)> {
+    let version = field_u64(text, "fastckpt").map_err(|_| {
+        anyhow::anyhow!("not a fastckpt sidecar (missing \"fastckpt\" version field; truncated?)")
+    })?;
+    if version != CKPT_FORMAT_VERSION {
+        bail!(
+            "unsupported fastckpt version {version} \
+             (this build reads version {CKPT_FORMAT_VERSION})"
+        );
+    }
+    let Some(field_at) = text.rfind(CHECKSUM_FIELD) else {
+        bail!("truncated fastckpt sidecar (no checksum field)");
+    };
+    let val_at = field_at + CHECKSUM_FIELD.len();
+    let Some(hex) = text.get(val_at..val_at + 16) else {
+        bail!("truncated fastckpt sidecar (checksum cut short)");
+    };
+    let stored = u64::from_str_radix(hex, 16)
+        .map_err(|_| anyhow::anyhow!("malformed fastckpt checksum '{hex}'"))?;
+    let mut body = String::with_capacity(text.len());
+    body.push_str(&text[..val_at]);
+    body.push_str(CHECKSUM_PLACEHOLDER);
+    body.push_str(&text[val_at + 16..]);
+    let actual = fnv1a64(body.as_bytes());
+    if stored != actual {
+        bail!(
+            "fastckpt checksum mismatch (corrupt sidecar): \
+             stored {stored:#018x}, computed {actual:#018x}"
+        );
+    }
+
+    let meta = CheckpointMeta {
+        kind: field_str(text, "kind")?,
+        budget: field_u64(text, "budget")? as usize,
+        max_sweeps: field_u64(text, "max_sweeps")? as usize,
+        eps: f64::from_bits(field_bits(text, "eps_bits")?),
+        full_update: field_bool(text, "full_update")?,
+        checkpoint_every: field_u64(text, "checkpoint_every")? as usize,
+        problem_n: field_u64(text, "problem_n")? as usize,
+        problem_seed: field_u64(text, "problem_seed")?,
+        problem_kind: field_str(text, "problem_kind")?,
+        matrix_checksum: field_bits(text, "matrix_checksum")?,
+    };
+    let init_objective = match field_raw(text, "init_objective_bits")? {
+        "\"none\"" => None,
+        _ => Some(f64::from_bits(field_bits(text, "init_objective_bits")?)),
+    };
+    let fields = SidecarFields {
+        in_init: field_bool(text, "in_init")?,
+        steps_done: field_u64(text, "steps_done")? as usize,
+        sweeps_run: field_u64(text, "sweeps_run")? as usize,
+        init_objective,
+        spectrum: bits_field(text, "spectrum_bits")?,
+        trace: bits_field(text, "trace_bits")?,
+    };
+    Ok((meta, fields))
+}
+
+fn write_atomic(path: &Path, contents: &str) -> crate::Result<()> {
+    let tmp = path.with_extension("fastckpt.tmp");
+    std::fs::write(&tmp, contents)
+        .map_err(|e| anyhow::anyhow!("cannot write checkpoint {}: {e}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .map_err(|e| anyhow::anyhow!("cannot finalize checkpoint {}: {e}", path.display()))
+}
+
+/// The raw text of a scalar field value (number, bool or quoted string).
+fn field_raw<'a>(text: &'a str, key: &str) -> crate::Result<&'a str> {
+    let pat = format!("\"{key}\":");
+    let at = text.find(&pat).ok_or_else(|| {
+        anyhow::anyhow!("fastckpt sidecar missing \"{key}\" (truncated or malformed)")
+    })?;
+    let rest = text[at + pat.len()..].trim_start();
+    let end = rest
+        .char_indices()
+        .scan(false, |in_str, (i, c)| {
+            match c {
+                '"' => *in_str = !*in_str,
+                ',' | '\n' | '}' | ']' if !*in_str => return Some(Some(i)),
+                _ => {}
+            }
+            Some(None)
+        })
+        .flatten()
+        .next()
+        .unwrap_or(rest.len());
+    Ok(rest[..end].trim())
+}
+
+fn field_str(text: &str, key: &str) -> crate::Result<String> {
+    let raw = field_raw(text, key)?;
+    raw.strip_prefix('"')
+        .and_then(|s| s.strip_suffix('"'))
+        .map(str::to_string)
+        .ok_or_else(|| anyhow::anyhow!("fastckpt field \"{key}\": expected a string, got {raw}"))
+}
+
+fn field_u64(text: &str, key: &str) -> crate::Result<u64> {
+    let raw = field_raw(text, key)?;
+    raw.parse()
+        .map_err(|_| anyhow::anyhow!("fastckpt field \"{key}\": expected an integer, got {raw}"))
+}
+
+fn field_bool(text: &str, key: &str) -> crate::Result<bool> {
+    match field_raw(text, key)? {
+        "true" => Ok(true),
+        "false" => Ok(false),
+        raw => bail!("fastckpt field \"{key}\": expected a bool, got {raw}"),
+    }
+}
+
+/// A 16-hex-digit field (f64 bit pattern or checksum).
+fn field_bits(text: &str, key: &str) -> crate::Result<u64> {
+    let raw = field_str(text, key)?;
+    u64::from_str_radix(&raw, 16)
+        .map_err(|_| anyhow::anyhow!("fastckpt field \"{key}\": expected hex bits, got {raw}"))
+}
+
+/// A single-line `[...]` array of quoted f64 bit patterns.
+fn bits_field(text: &str, key: &str) -> crate::Result<Vec<f64>> {
+    let pat = format!("\"{key}\": [");
+    let at = text
+        .find(&pat)
+        .ok_or_else(|| anyhow::anyhow!("fastckpt sidecar missing \"{key}\" array"))?;
+    let start = at + pat.len();
+    let end = text[start..]
+        .find(']')
+        .ok_or_else(|| anyhow::anyhow!("fastckpt sidecar: unterminated \"{key}\" array"))?;
+    let mut out = Vec::new();
+    for item in text[start..start + end].split(',') {
+        let item = item.trim();
+        if item.is_empty() {
+            continue;
+        }
+        let hex = item
+            .strip_prefix('"')
+            .and_then(|s| s.strip_suffix('"'))
+            .ok_or_else(|| anyhow::anyhow!("fastckpt \"{key}\": malformed entry {item}"))?;
+        let bits = u64::from_str_radix(hex, 16)
+            .map_err(|_| anyhow::anyhow!("fastckpt \"{key}\": bad bit pattern {hex}"))?;
+        out.push(f64::from_bits(bits));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::factor::{SymFactorizer, SymOptions, SymRunControl};
+    use crate::linalg::{Mat, Rng64};
+
+    fn tmp_base(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("fastes-ckpt-{}-{tag}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join("run")
+    }
+
+    fn sample_meta() -> CheckpointMeta {
+        CheckpointMeta {
+            kind: "sym".to_string(),
+            budget: 40,
+            max_sweeps: 3,
+            eps: 1e-6,
+            full_update: false,
+            checkpoint_every: 10,
+            problem_n: 12,
+            problem_seed: 77,
+            problem_kind: "sym".to_string(),
+            matrix_checksum: 0xdead_beef_0123_4567,
+        }
+    }
+
+    fn capture_sym_checkpoint() -> SymCheckpoint {
+        let mut rng = Rng64::new(7301);
+        let x = Mat::randn(12, 12, &mut rng);
+        let s = &x + &x.transpose();
+        let mut cap: Option<SymCheckpoint> = None;
+        let mut ctrl = SymRunControl {
+            checkpoint_every: 10,
+            on_checkpoint: Some(Box::new(|ck: &SymCheckpoint| cap = Some(ck.clone()))),
+            ..Default::default()
+        };
+        SymFactorizer::new(&s, 40, SymOptions::default()).run_controlled(&mut ctrl);
+        drop(ctrl);
+        cap.expect("run emits checkpoints")
+    }
+
+    #[test]
+    fn sym_checkpoint_round_trips_bitwise() {
+        let base = tmp_base("sym-roundtrip");
+        let ck = capture_sym_checkpoint();
+        let meta = sample_meta();
+        save_sym_checkpoint(&base, &meta, &ck).unwrap();
+        let (meta2, state) = load_checkpoint(&base).unwrap();
+        assert_eq!(meta2, meta);
+        let LoadedState::Sym(got) = state else {
+            panic!("expected a sym state")
+        };
+        assert_eq!(got.chain, ck.chain);
+        assert_eq!(got.spectrum, ck.spectrum);
+        assert_eq!(got.objective_trace, ck.objective_trace);
+        assert_eq!(got.init_objective, ck.init_objective);
+        assert_eq!(got.sweeps_run, ck.sweeps_run);
+        assert_eq!(got.steps_done, ck.steps_done);
+        assert_eq!(got.in_init, ck.in_init);
+    }
+
+    #[test]
+    fn corrupt_sidecars_are_rejected() {
+        let base = tmp_base("sym-corrupt");
+        let ck = capture_sym_checkpoint();
+        save_sym_checkpoint(&base, &sample_meta(), &ck).unwrap();
+        let p = sidecar_path(&base);
+        let mut text = std::fs::read_to_string(&p).unwrap();
+        // flip one spectrum bit character (not the checksum itself)
+        let pat = "\"spectrum_bits\": [\"";
+        let at = text.find(pat).unwrap() + pat.len();
+        let repl = if &text[at..at + 1] == "0" { "1" } else { "0" };
+        text.replace_range(at..at + 1, repl);
+        std::fs::write(&p, &text).unwrap();
+        let err = load_checkpoint(&base).unwrap_err();
+        assert!(format!("{err:#}").contains("checksum mismatch"), "{err:#}");
+    }
+
+    #[test]
+    fn special_f64s_survive_the_bit_encoding() {
+        let values = [0.0, -0.0, 1.5e-308, f64::MIN_POSITIVE, 1e300, -7.25];
+        let round: Vec<f64> = {
+            let enc = bits_array(&values);
+            let doc = format!("  \"x_bits\": [{enc}],\n");
+            bits_field(&doc, "x_bits").unwrap()
+        };
+        for (a, b) in values.iter().zip(round.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn fnv_f64s_matches_reference_vectors() {
+        // empty input is the FNV offset basis; order matters
+        assert_eq!(fnv_f64s(&[]), 0xcbf2_9ce4_8422_2325);
+        assert_ne!(fnv_f64s(&[1.0, 2.0]), fnv_f64s(&[2.0, 1.0]));
+        // matches byte-level fnv1a64 over the concatenated LE bytes
+        let vals = [3.25, -1e-9, 0.0];
+        let mut bytes = Vec::new();
+        for v in &vals {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        assert_eq!(fnv_f64s(&vals), fnv1a64(&bytes));
+    }
+}

@@ -26,6 +26,9 @@
 use crate::linalg::{cubic_roots, polyfit_exact, quartic_roots, solve_linear, Mat};
 use crate::transforms::{TChain, TTransform};
 
+use super::parallel::{
+    fill_slots, matmul_par, matvec_par, rank1_update_par, tmatvec_par, FactorExec,
+};
 use super::SpectrumRule;
 
 /// Options for [`GeneralFactorizer`] (paper Algorithm 1 inputs).
@@ -36,11 +39,16 @@ pub struct GeneralOptions {
     pub spectrum: SpectrumRule,
     /// Maximum iterative sweeps after initialization.
     pub max_sweeps: usize,
-    /// Stopping criterion `|ε_{i−1} − ε_i| < eps`.
+    /// Relative stopping criterion: sweeps stop when
+    /// `|ε_{i−1} − ε_i| < eps · ‖C‖²_F`, so the rule is invariant under
+    /// rescaling of the input matrix.
     pub eps: f64,
     /// `true` → Theorem 4 with full index re-search (`O(n⁴)` per sweep;
     /// small `n` only); `false` → the paper's polishing step.
     pub full_update: bool,
+    /// Execution knobs for the parallel score scans / candidate sweeps.
+    /// Never affects the factorization result, only wall-clock.
+    pub exec: FactorExec,
 }
 
 impl Default for GeneralOptions {
@@ -48,8 +56,9 @@ impl Default for GeneralOptions {
         GeneralOptions {
             spectrum: SpectrumRule::Update,
             max_sweeps: 6,
-            eps: 1e-2,
+            eps: 1e-6,
             full_update: false,
+            exec: FactorExec::default(),
         }
     }
 }
@@ -67,6 +76,10 @@ pub struct GeneralFactorization {
     pub objective_trace: Vec<f64>,
     /// Number of sweeps actually run.
     pub sweeps_run: usize,
+    /// `true` when the run stopped early because
+    /// [`GenRunControl::halt_after`] was reached; resume from the last
+    /// emitted checkpoint to continue.
+    pub halted: bool,
 }
 
 impl GeneralFactorization {
@@ -89,6 +102,58 @@ impl GeneralFactorization {
     }
 }
 
+/// A resumable snapshot of a general factorization in progress.
+///
+/// RNG-free and exact: with the same input matrix, budget and options,
+/// resuming reproduces the uninterrupted run's chain **bitwise** — the
+/// completed init prefix is *replayed* through [`InitState`] (its
+/// incremental rank-2 state is path-dependent, so replay rather than
+/// recomputation is what preserves exactness). The chain is stored in
+/// application order (`T_1` first), the same convention as [`TChain`]
+/// and the `.fastplan` artifact.
+#[derive(Clone, Debug)]
+pub struct GenCheckpoint {
+    /// Factors picked so far, in application order.
+    pub chain: TChain,
+    /// Current spectrum estimate (unchanged during init; post-Lemma-2
+    /// during the sweep phase).
+    pub spectrum: Vec<f64>,
+    /// Objective after initialization; `None` while still initializing.
+    pub init_objective: Option<f64>,
+    /// Objective after each completed sweep.
+    pub objective_trace: Vec<f64>,
+    /// Completed sweeps.
+    pub sweeps_run: usize,
+    /// Greedy init factors placed so far (`== chain.len()` during init).
+    pub steps_done: usize,
+    /// `true` while Theorem-3 initialization is still in progress.
+    pub in_init: bool,
+}
+
+/// Checkpoint/halt controls for [`GeneralFactorizer::run_controlled`] /
+/// [`GeneralFactorizer::resume`].
+#[derive(Default)]
+pub struct GenRunControl<'cb> {
+    /// Emit a checkpoint every this many progress steps during
+    /// initialization (and after every sweep). `0` disables periodic
+    /// checkpoints; a checkpoint is still emitted at the init/sweep
+    /// boundary and on halt when a sink is installed.
+    pub checkpoint_every: usize,
+    /// Stop after this many total progress steps (init factors placed +
+    /// sweeps completed, counted from the start of the *original* run).
+    /// The result is returned with `halted = true` after emitting a
+    /// final checkpoint.
+    pub halt_after: Option<usize>,
+    /// Checkpoint sink. Called with each emitted snapshot.
+    pub on_checkpoint: Option<Box<dyn FnMut(&GenCheckpoint) + 'cb>>,
+}
+
+fn emit_gen(ctrl: &mut GenRunControl, ck: GenCheckpoint) {
+    if let Some(cb) = ctrl.on_checkpoint.as_mut() {
+        cb(&ck);
+    }
+}
+
 /// Algorithm 1 driver for general (unsymmetric) matrices.
 pub struct GeneralFactorizer<'a> {
     c: &'a Mat,
@@ -105,10 +170,20 @@ impl<'a> GeneralFactorizer<'a> {
 
     /// Run initialization + iterative sweeps (Algorithm 1).
     pub fn run(self) -> GeneralFactorization {
-        let spectrum = self.initial_spectrum();
-        // ---- Initialization (Theorem 3) ----
-        let chain = init_tchain(self.c, &spectrum, self.m);
-        self.iterate(chain, spectrum)
+        self.drive(None, None, &mut GenRunControl::default())
+    }
+
+    /// [`run`](Self::run) with checkpoint emission / early halt.
+    pub fn run_controlled(self, ctrl: &mut GenRunControl) -> GeneralFactorization {
+        self.drive(None, None, ctrl)
+    }
+
+    /// Resume a run from a checkpoint. The factorizer must be
+    /// constructed over the same matrix, budget and options as the run
+    /// that emitted the checkpoint; the completed portion is then
+    /// replayed exactly and the result equals the uninterrupted run's.
+    pub fn resume(self, ck: GenCheckpoint, ctrl: &mut GenRunControl) -> GeneralFactorization {
+        self.drive(Some(ck), None, ctrl)
     }
 
     /// Skip Theorem-3 initialization and polish a *given* chain (paper
@@ -116,8 +191,7 @@ impl<'a> GeneralFactorizer<'a> {
     /// [`TChain::from_gchain`], refined with the T machinery).
     pub fn run_with_chain(self, chain: TChain) -> GeneralFactorization {
         assert_eq!(chain.n, self.c.rows(), "chain dimension mismatch");
-        let spectrum = self.initial_spectrum();
-        self.iterate(chain, spectrum)
+        self.drive(None, Some(chain), &mut GenRunControl::default())
     }
 
     fn initial_spectrum(&self) -> Vec<f64> {
@@ -134,21 +208,128 @@ impl<'a> GeneralFactorizer<'a> {
         }
     }
 
-    fn iterate(self, chain: TChain, mut spectrum: Vec<f64>) -> GeneralFactorization {
-        let init_objective = chain.objective(self.c, &spectrum);
+    fn drive(
+        self,
+        resume: Option<GenCheckpoint>,
+        given: Option<TChain>,
+        ctrl: &mut GenRunControl,
+    ) -> GeneralFactorization {
+        let n = self.c.rows();
+        let exec = self.opts.exec;
+        let stop_scale = self.c.fro_norm_sq().max(1e-300);
+
+        // ---- restore or initialize driver state ----
+        let (spectrum, mut chain, mut trace, mut sweeps_run, init_objective, in_init) =
+            match resume {
+                None => {
+                    let spectrum = self.initial_spectrum();
+                    match given {
+                        Some(chain0) => (spectrum, chain0, Vec::new(), 0, None, false),
+                        None => (spectrum, TChain::identity(n), Vec::new(), 0, None, true),
+                    }
+                }
+                Some(ck) => {
+                    assert_eq!(ck.chain.n, n, "checkpoint dimension mismatch");
+                    (
+                        ck.spectrum,
+                        ck.chain,
+                        ck.objective_trace,
+                        ck.sweeps_run,
+                        ck.init_objective,
+                        ck.in_init,
+                    )
+                }
+            };
+
+        // ---- Initialization (Theorem 3), possibly resumed mid-way ----
+        if in_init {
+            // Replaying the checkpointed prefix onto a fresh InitState
+            // reproduces the original run's incremental rank-2 state
+            // exactly (the spectrum never changes during this phase).
+            let mut st = InitState::new(self.c, &spectrum, &exec);
+            for t in chain.transforms.iter() {
+                st.apply(*t);
+            }
+            let tiny = 1e-12 * (1.0 + self.c.fro_norm_sq());
+            while n >= 2 && chain.len() < self.m {
+                let (best_delta, best_t) = best_init_candidate(&st, &exec);
+                match best_t {
+                    Some(t) if best_delta < -tiny => {
+                        st.apply(t);
+                        chain.transforms.push(t);
+                    }
+                    _ => break, // no strictly improving factor
+                }
+                let steps = chain.len();
+                let due = ctrl.on_checkpoint.is_some()
+                    && ctrl.checkpoint_every > 0
+                    && steps % ctrl.checkpoint_every == 0;
+                let halt = ctrl.halt_after.is_some_and(|h| steps >= h);
+                if due || (halt && ctrl.on_checkpoint.is_some()) {
+                    let ck = GenCheckpoint {
+                        chain: chain.clone(),
+                        spectrum: spectrum.clone(),
+                        init_objective: None,
+                        objective_trace: Vec::new(),
+                        sweeps_run: 0,
+                        steps_done: steps,
+                        in_init: true,
+                    };
+                    emit_gen(ctrl, ck);
+                }
+                if halt {
+                    let init_objective = chain.objective(self.c, &spectrum);
+                    return GeneralFactorization {
+                        chain,
+                        spectrum,
+                        init_objective,
+                        objective_trace: trace,
+                        sweeps_run,
+                        halted: true,
+                    };
+                }
+            }
+        }
+        let init_objective = match init_objective {
+            Some(o) => o,
+            None => chain.objective(self.c, &spectrum),
+        };
+        if in_init && ctrl.on_checkpoint.is_some() && ctrl.checkpoint_every > 0 {
+            let ck = GenCheckpoint {
+                chain: chain.clone(),
+                spectrum: spectrum.clone(),
+                init_objective: Some(init_objective),
+                objective_trace: trace.clone(),
+                sweeps_run,
+                steps_done: chain.len(),
+                in_init: false,
+            };
+            emit_gen(ctrl, ck);
+        }
 
         // ---- Iterations (Theorem 4 polish + Lemma 2) ----
-        let mut state = PolishState::new(self.c, chain, spectrum.clone());
-        let mut trace = Vec::new();
-        let mut prev = init_objective;
-        let mut sweeps_run = 0;
-        for _ in 0..self.opts.max_sweeps {
+        // The stopping rule is evaluated at loop top from the trace so a
+        // resumed run re-applies the exact decision the uninterrupted
+        // run would have made after its last completed sweep.
+        let mut state = PolishState::new(self.c, chain, spectrum);
+        let mut spectrum = state.spectrum.clone();
+        while sweeps_run < self.opts.max_sweeps {
             if state.chain.is_empty() {
                 break;
             }
-            state.sweep(self.opts.full_update);
+            if let Some(&last) = trace.last() {
+                let before = if trace.len() >= 2 {
+                    trace[trace.len() - 2]
+                } else {
+                    init_objective
+                };
+                if (before - last).abs() < self.opts.eps * stop_scale {
+                    break;
+                }
+            }
+            state.sweep(self.opts.full_update, &exec);
             if matches!(self.opts.spectrum, SpectrumRule::Update) {
-                if let Some(new_spec) = lemma2_spectrum(self.c, &state.chain) {
+                if let Some(new_spec) = lemma2_spectrum_exec(self.c, &state.chain, &exec) {
                     state.reset_spectrum(new_spec);
                 }
             }
@@ -156,10 +337,30 @@ impl<'a> GeneralFactorizer<'a> {
             let obj = state.objective();
             trace.push(obj);
             sweeps_run += 1;
-            if (prev - obj).abs() < self.opts.eps {
-                break;
+            let steps = state.chain.len() + sweeps_run;
+            let halt = ctrl.halt_after.is_some_and(|h| steps >= h);
+            if ctrl.on_checkpoint.is_some() && (ctrl.checkpoint_every > 0 || halt) {
+                let ck = GenCheckpoint {
+                    chain: state.chain.clone(),
+                    spectrum: spectrum.clone(),
+                    init_objective: Some(init_objective),
+                    objective_trace: trace.clone(),
+                    sweeps_run,
+                    steps_done: state.chain.len(),
+                    in_init: false,
+                };
+                emit_gen(ctrl, ck);
             }
-            prev = obj;
+            if halt {
+                return GeneralFactorization {
+                    chain: state.chain,
+                    spectrum,
+                    init_objective,
+                    objective_trace: trace,
+                    sweeps_run,
+                    halted: true,
+                };
+            }
         }
 
         GeneralFactorization {
@@ -168,6 +369,7 @@ impl<'a> GeneralFactorizer<'a> {
             init_objective,
             objective_trace: trace,
             sweeps_run,
+            halted: false,
         }
     }
 }
@@ -193,10 +395,12 @@ struct InitState<'a> {
     rs: Vec<f64>,
     /// `cs[i] = Σ_t C_ti·B_ti`.
     cs: Vec<f64>,
+    /// Execution knobs for the rank-2 refresh; never affects values.
+    exec: FactorExec,
 }
 
 impl<'a> InitState<'a> {
-    fn new(c: &'a Mat, spectrum: &[f64]) -> Self {
+    fn new(c: &'a Mat, spectrum: &[f64], exec: &FactorExec) -> Self {
         let b = Mat::from_diag(spectrum);
         let mut st = InitState {
             c,
@@ -207,6 +411,7 @@ impl<'a> InitState<'a> {
             colsq: vec![],
             rs: vec![],
             cs: vec![],
+            exec: *exec,
         };
         st.recompute_all();
         st
@@ -292,9 +497,15 @@ impl<'a> InitState<'a> {
         // V' = V + M0·ΔBᵀ − ΔB·Bᵀ − ΔB·ΔBᵀ, with M0 = C − B never
         // materialized: M0·x = C·x − B·x (perf: saves an O(n²) clone +
         // axpy per applied factor — see EXPERIMENTS.md §Perf)
-        let b_delta = self.b.matvec(&delta);
+        //
+        // Parallel routing below is perf-only: each output slot is
+        // computed by the exact sequential expression, so the values are
+        // bitwise-identical at any thread count. Rank-1 updates whose
+        // left vector is a unit basis vector touch a single row and stay
+        // sequential; the dense-left ones fan out across rows.
+        let b_delta = matvec_par(&self.exec, &self.b, &delta);
         let b_ec = self.b.col(c);
-        let mut m0_delta = self.c.matvec(&delta);
+        let mut m0_delta = matvec_par(&self.exec, self.c, &delta);
         for (v, bv) in m0_delta.iter_mut().zip(b_delta.iter()) {
             *v -= bv;
         }
@@ -304,17 +515,17 @@ impl<'a> InitState<'a> {
         }
         let er: Vec<f64> = (0..n).map(|k| if k == r { 1.0 } else { 0.0 }).collect();
         // M0·ΔBᵀ = (M0 δ) e_rᵀ + (M0 e_c) γᵀ
-        self.v.rank1_update(1.0, &m0_delta, &er);
-        self.v.rank1_update(1.0, &m0_ec, &gamma);
+        rank1_update_par(&self.exec, &mut self.v, 1.0, &m0_delta, &er);
+        rank1_update_par(&self.exec, &mut self.v, 1.0, &m0_ec, &gamma);
         // ΔB·Bᵀ = e_r (B δ)ᵀ + γ (B e_c)ᵀ
         self.v.rank1_update(-1.0, &er, &b_delta);
-        self.v.rank1_update(-1.0, &gamma, &b_ec);
+        rank1_update_par(&self.exec, &mut self.v, -1.0, &gamma, &b_ec);
         // ΔB·ΔBᵀ = |δ|² e_r e_rᵀ + δ_c e_r γᵀ + δ_c γ e_rᵀ + (γᵀγ… wait γγᵀ)
         let dd: f64 = delta.iter().map(|x| x * x).sum();
         self.v.rank1_update(-dd, &er, &er);
         self.v.rank1_update(-delta[c], &er, &gamma);
-        self.v.rank1_update(-delta[c], &gamma, &er);
-        self.v.rank1_update(-1.0, &gamma, &gamma);
+        rank1_update_par(&self.exec, &mut self.v, -delta[c], &gamma, &er);
+        rank1_update_par(&self.exec, &mut self.v, -1.0, &gamma, &gamma);
 
         // H' = H + ΔBᵀ·M0 − Bᵀ·ΔB − ΔBᵀ·ΔB
         // ΔBᵀ·M0 = δ (M0ᵀ e_r)ᵀ + e_c (M0ᵀ γ)ᵀ
@@ -325,22 +536,22 @@ impl<'a> InitState<'a> {
             .zip(self.b.row(r).iter())
             .map(|(cv, bv)| cv - bv)
             .collect();
-        let bt_gamma_tmp = self.b.tmatvec(&gamma);
-        let mut m0t_gamma = self.c.tmatvec(&gamma);
+        let bt_gamma_tmp = tmatvec_par(&self.exec, &self.b, &gamma);
+        let mut m0t_gamma = tmatvec_par(&self.exec, self.c, &gamma);
         for (v, bv) in m0t_gamma.iter_mut().zip(bt_gamma_tmp.iter()) {
             *v -= bv;
         }
         let ec: Vec<f64> = (0..n).map(|k| if k == c { 1.0 } else { 0.0 }).collect();
-        self.h.rank1_update(1.0, &delta, &m0t_er);
+        rank1_update_par(&self.exec, &mut self.h, 1.0, &delta, &m0t_er);
         self.h.rank1_update(1.0, &ec, &m0t_gamma);
         // Bᵀ·ΔB = (Bᵀ e_r) δᵀ + (Bᵀ γ) e_cᵀ  (Bᵀγ already computed above)
         let bt_er: Vec<f64> = self.b.row(r).to_vec();
-        self.h.rank1_update(-1.0, &bt_er, &delta);
-        self.h.rank1_update(-1.0, &bt_gamma_tmp, &ec);
+        rank1_update_par(&self.exec, &mut self.h, -1.0, &bt_er, &delta);
+        rank1_update_par(&self.exec, &mut self.h, -1.0, &bt_gamma_tmp, &ec);
         // ΔBᵀ·ΔB = δδᵀ + γ_r δ e_cᵀ + γ_r e_c δᵀ + |γ|² e_c e_cᵀ
         let gg: f64 = gamma.iter().map(|x| x * x).sum();
-        self.h.rank1_update(-1.0, &delta, &delta);
-        self.h.rank1_update(-gamma[r], &delta, &ec);
+        rank1_update_par(&self.exec, &mut self.h, -1.0, &delta, &delta);
+        rank1_update_par(&self.exec, &mut self.h, -gamma[r], &delta, &ec);
         self.h.rank1_update(-gamma[r], &ec, &delta);
         self.h.rank1_update(-gg, &ec, &ec);
 
@@ -381,7 +592,7 @@ impl<'a> InitState<'a> {
     /// from-scratch recomputation.
     #[cfg(test)]
     fn audit(&self) -> f64 {
-        let mut fresh = InitState::new(self.c, &vec![0.0; self.c.rows()]);
+        let mut fresh = InitState::new(self.c, &vec![0.0; self.c.rows()], &FactorExec::serial());
         fresh.b = self.b.clone();
         fresh.recompute_all();
         let scale = 1.0 + self.v.max_abs().max(self.h.max_abs());
@@ -446,42 +657,76 @@ fn minimize_quartic_delta(p1: f64, p2: f64, p3: f64, p4: f64) -> (f64, f64) {
     best
 }
 
+/// One full Theorem-3 candidate scan: best strictly-improving Δ over all
+/// scalings and ordered-pair shears.
+///
+/// The scan is staged — scaling scores fill one slot per index, shear
+/// scores fill one slot per row `r` holding that row's first strict
+/// minimizer in ascending `c2` order — then reduced sequentially in
+/// ascending order with strict `<`. Every slot is computed by the exact
+/// sequential expression, so the winner (including its lowest-index
+/// tie-break) is bitwise-identical to the serial flat scan at any
+/// thread count.
+fn best_init_candidate(st: &InitState, exec: &FactorExec) -> (f64, Option<TTransform>) {
+    let n = st.c.rows();
+    let mut best_delta = f64::INFINITY;
+    let mut best_t: Option<TTransform> = None;
+    // scalings on i
+    let mut scal = vec![(0.0f64, 1.0f64); n];
+    fill_slots(exec, 64, &mut scal, |i| st.scaling_score(i));
+    for (i, &(d, a)) in scal.iter().enumerate() {
+        if d < best_delta && a.abs() > 1e-8 {
+            best_delta = d;
+            best_t = Some(TTransform::Scaling { i, a });
+        }
+    }
+    // shears on ordered pairs (r, c2), one staged slot per row r
+    let mut rows: Vec<Option<(f64, f64, usize)>> = vec![None; n];
+    fill_slots(exec, n * 32, &mut rows, |r| {
+        let mut row_best: Option<(f64, f64, usize)> = None;
+        for c2 in 0..n {
+            if r == c2 {
+                continue;
+            }
+            let (d, a) = st.shear_score(r, c2);
+            if row_best.map_or(true, |(bd, _, _)| d < bd) && a != 0.0 {
+                row_best = Some((d, a, c2));
+            }
+        }
+        row_best
+    });
+    for (r, slot) in rows.iter().enumerate() {
+        if let Some((d, a, c2)) = *slot {
+            if d < best_delta {
+                best_delta = d;
+                best_t = Some(if r < c2 {
+                    TTransform::UpperShear { i: r, j: c2, a }
+                } else {
+                    TTransform::LowerShear { i: c2, j: r, a }
+                });
+            }
+        }
+    }
+    (best_delta, best_t)
+}
+
 /// Theorem 3 initialization: greedily pick `m` T-transforms.
+///
+/// Serial reference kept for unit tests; the production path is the
+/// same loop inlined in [`GeneralFactorizer::drive`] with checkpoint
+/// and halt hooks.
+#[cfg_attr(not(test), allow(dead_code))]
 fn init_tchain(c: &Mat, spectrum: &[f64], m: usize) -> TChain {
     let n = c.rows();
     let mut chain = TChain::identity(n);
     if n < 2 || m == 0 {
         return chain;
     }
-    let mut st = InitState::new(c, spectrum);
+    let exec = FactorExec::serial();
+    let mut st = InitState::new(c, spectrum, &exec);
     let tiny = 1e-12 * (1.0 + c.fro_norm_sq());
     for _ in 0..m {
-        // sweep all candidates: shears on ordered pairs, scalings on i
-        let mut best_delta = f64::INFINITY;
-        let mut best_t: Option<TTransform> = None;
-        for i in 0..n {
-            let (d, a) = st.scaling_score(i);
-            if d < best_delta && a.abs() > 1e-8 {
-                best_delta = d;
-                best_t = Some(TTransform::Scaling { i, a });
-            }
-        }
-        for r in 0..n {
-            for c2 in 0..n {
-                if r == c2 {
-                    continue;
-                }
-                let (d, a) = st.shear_score(r, c2);
-                if d < best_delta && a != 0.0 {
-                    best_delta = d;
-                    best_t = Some(if r < c2 {
-                        TTransform::UpperShear { i: r, j: c2, a }
-                    } else {
-                        TTransform::LowerShear { i: c2, j: r, a }
-                    });
-                }
-            }
-        }
+        let (best_delta, best_t) = best_init_candidate(&st, &exec);
         match best_t {
             Some(t) if best_delta < -tiny => {
                 st.apply(t);
@@ -531,7 +776,7 @@ impl<'a> PolishState<'a> {
     }
 
     /// One sweep of Theorem-4 updates over `k = 1..m`.
-    fn sweep(&mut self, full_update: bool) {
+    fn sweep(&mut self, full_update: bool, exec: &FactorExec) {
         let m = self.chain.len();
         let n = self.c.rows();
         // B = product of factors before k applied to diag(c̄)
@@ -541,10 +786,10 @@ impl<'a> PolishState<'a> {
             let suffix: Vec<TTransform> = self.chain.transforms[k + 1..].to_vec();
             // M0 = C − A·B·A⁻¹ = E + A·(T_k B T_k⁻¹ − B)·A⁻¹
             let mut m0 = self.e.clone();
-            add_conjugated_local(&mut m0, &b, &suffix, old, 1.0);
+            add_conjugated_local(&mut m0, &b, &suffix, old, 1.0, exec);
 
             let new_t = if full_update {
-                best_t_update_all(&m0, &b, &suffix, old, n)
+                best_t_update_all(&m0, &b, &suffix, old, n, exec)
             } else {
                 best_t_update_fixed(&m0, &b, &suffix, old)
             };
@@ -552,8 +797,8 @@ impl<'a> PolishState<'a> {
             // update E for the change old → new_t:
             // E ← E − A·(L_new − L_old)·A⁻¹
             if new_t != old {
-                add_conjugated_local(&mut self.e, &b, &suffix, old, 1.0);
-                add_conjugated_local(&mut self.e, &b, &suffix, new_t, -1.0);
+                add_conjugated_local(&mut self.e, &b, &suffix, old, 1.0, exec);
+                add_conjugated_local(&mut self.e, &b, &suffix, new_t, -1.0, exec);
                 self.chain.transforms[k] = new_t;
             }
             if std::env::var_os("FASTES_DEBUG_SWEEP").is_some() {
@@ -578,7 +823,14 @@ impl<'a> PolishState<'a> {
 
 /// `dst += sign · A·(T B T⁻¹ − B)·A⁻¹` where `T` is a single T-transform
 /// and `A` is the (butterfly) suffix chain — two conjugated rank-1 updates.
-fn add_conjugated_local(dst: &mut Mat, b: &Mat, suffix: &[TTransform], t: TTransform, sign: f64) {
+fn add_conjugated_local(
+    dst: &mut Mat,
+    b: &Mat,
+    suffix: &[TTransform],
+    t: TTransform,
+    sign: f64,
+    exec: &FactorExec,
+) {
     let n = b.rows();
     let (r, c, delta, gamma) = match t {
         TTransform::UpperShear { i, j, a } => shear_delta(b, i, j, a),
@@ -597,8 +849,8 @@ fn add_conjugated_local(dst: &mut Mat, b: &Mat, suffix: &[TTransform], t: TTrans
     let mut atec = vec![0.0; n];
     atec[c] = 1.0;
     apply_suffix_inv_t(suffix, &mut atec);
-    dst.rank1_update(sign, &aer, &atd);
-    dst.rank1_update(sign, &agamma, &atec);
+    rank1_update_par(exec, dst, sign, &aer, &atd);
+    rank1_update_par(exec, dst, sign, &agamma, &atec);
 }
 
 /// `x ← A x` for the suffix chain `A = T_m … T_{k+1}` (ascending order).
@@ -803,12 +1055,18 @@ fn best_t_update_fixed(m0: &Mat, b: &Mat, suffix: &[TTransform], old: TTransform
 
 /// Full Theorem-4 update: search all structures and indices (`O(n⁴)` per
 /// sweep — validation and small-n use only).
+///
+/// The candidate scores are staged per slot (scalings) / per row
+/// (shears) and reduced sequentially in ascending order with strict
+/// `<`, so the winner matches the serial flat scan bitwise at any
+/// thread count (same argument as [`best_init_candidate`]).
 fn best_t_update_all(
     m0: &Mat,
     b: &Mat,
     suffix: &[TTransform],
     old: TTransform,
     n: usize,
+    exec: &FactorExec,
 ) -> TTransform {
     // baseline: keeping the old factor
     let old_delta = match old {
@@ -818,20 +1076,29 @@ fn best_t_update_all(
     };
     let margin = accept_margin(m0);
     let mut best = (old_delta - margin, old);
-    for i in 0..n {
-        let sc = ScalingScalars::build(m0, b, suffix, i);
-        let (d, a) = sc.minimize();
+    let mut scal = vec![(0.0f64, 1.0f64); n];
+    fill_slots(exec, n * n, &mut scal, |i| ScalingScalars::build(m0, b, suffix, i).minimize());
+    for (i, &(d, a)) in scal.iter().enumerate() {
         if d < best.0 && a.abs() > A_MIN_SCALING {
             best = (d, TTransform::Scaling { i, a });
         }
     }
-    for r in 0..n {
+    let mut rows: Vec<Option<(f64, f64, usize)>> = vec![None; n];
+    fill_slots(exec, n * n * n, &mut rows, |r| {
+        let mut row_best: Option<(f64, f64, usize)> = None;
         for c in 0..n {
             if r == c {
                 continue;
             }
-            let sc = ShearScalars::build(m0, b, suffix, r, c);
-            let (d, a) = sc.minimize();
+            let (d, a) = ShearScalars::build(m0, b, suffix, r, c).minimize();
+            if row_best.map_or(true, |(bd, _, _)| d < bd) {
+                row_best = Some((d, a, c));
+            }
+        }
+        row_best
+    });
+    for (r, slot) in rows.iter().enumerate() {
+        if let Some((d, a, c)) = *slot {
             if d < best.0 {
                 let t = if r < c {
                     TTransform::UpperShear { i: r, j: c, a }
@@ -853,11 +1120,18 @@ fn best_t_update_all(
 /// `[(UᵀU) ⊙ (VᵀV)] c̄ = diag(Uᵀ C V)` with `U = T̄`, `V = T̄⁻ᵀ`.
 /// Returns `None` when the normal equations are numerically singular.
 pub fn lemma2_spectrum(c: &Mat, chain: &TChain) -> Option<Vec<f64>> {
+    lemma2_spectrum_exec(c, chain, &FactorExec::serial())
+}
+
+/// [`lemma2_spectrum`] with explicit execution knobs: the `O(n³)` normal
+/// equation assembly fans out across the pool; the assembled system (and
+/// hence the solution) is bitwise-identical at any thread count.
+fn lemma2_spectrum_exec(c: &Mat, chain: &TChain, exec: &FactorExec) -> Option<Vec<f64>> {
     let n = c.rows();
     let u = chain.to_dense();
     let v = chain.to_dense_inv().transpose();
-    let utu = u.transpose().matmul(&u);
-    let vtv = v.transpose().matmul(&v);
+    let utu = matmul_par(exec, &u.transpose(), &u);
+    let vtv = matmul_par(exec, &v.transpose(), &v);
     let mut gram = Mat::zeros(n, n);
     for i in 0..n {
         for j in 0..n {
@@ -865,10 +1139,9 @@ pub fn lemma2_spectrum(c: &Mat, chain: &TChain) -> Option<Vec<f64>> {
         }
     }
     // rhs_k = u_kᵀ C v_k
-    let cv = c.matmul(&v);
-    let rhs: Vec<f64> = (0..n)
-        .map(|k| (0..n).map(|t| u[(t, k)] * cv[(t, k)]).sum())
-        .collect();
+    let cv = matmul_par(exec, c, &v);
+    let mut rhs = vec![0.0; n];
+    fill_slots(exec, n, &mut rhs, |k| (0..n).map(|t| u[(t, k)] * cv[(t, k)]).sum());
     solve_linear(&gram, &rhs)
 }
 
@@ -895,7 +1168,7 @@ mod tests {
         let n = 8;
         let c = random_mat(n, 301);
         let spec: Vec<f64> = (0..n).map(|i| i as f64 - 3.0).collect();
-        let mut st = InitState::new(&c, &spec);
+        let mut st = InitState::new(&c, &spec, &FactorExec::serial());
         // advance the state a few transforms to make B non-diagonal
         for (k, t) in [
             TTransform::UpperShear { i: 1, j: 5, a: 0.7 },
@@ -933,7 +1206,7 @@ mod tests {
         let n = 7;
         let c = random_mat(n, 302);
         let spec: Vec<f64> = (0..n).map(|i| 1.0 + i as f64).collect();
-        let mut st = InitState::new(&c, &spec);
+        let mut st = InitState::new(&c, &spec, &FactorExec::serial());
         st.apply(TTransform::UpperShear { i: 0, j: 4, a: 1.1 });
         st.apply(TTransform::LowerShear { i: 2, j: 6, a: -0.6 });
         for i in 0..n {
@@ -953,7 +1226,7 @@ mod tests {
         let n = 6;
         let c = random_mat(n, 303);
         let spec: Vec<f64> = (0..n).map(|i| 0.5 + i as f64).collect();
-        let st = InitState::new(&c, &spec);
+        let st = InitState::new(&c, &spec, &FactorExec::serial());
         for i in 0..n {
             let (d, _) = st.scaling_score(i);
             for k in 1..400 {
@@ -984,7 +1257,7 @@ mod tests {
         let n = 9;
         let c = random_mat(n, 305);
         let spec: Vec<f64> = (0..n).map(|i| i as f64 * 0.7 - 2.0).collect();
-        let mut st = InitState::new(&c, &spec);
+        let mut st = InitState::new(&c, &spec, &FactorExec::serial());
         let mut rng = Rng64::new(306);
         for step in 0..25 {
             let i = rng.below(n - 1);
@@ -1252,5 +1525,111 @@ mod tests {
             f.objective(),
             c.fro_norm_sq()
         );
+    }
+
+    #[test]
+    fn stopping_rule_is_scale_invariant() {
+        // the relative criterion |ε_{i−1} − ε_i| < eps·‖C‖²_F must make
+        // the same stop decision for C and 1e6·C
+        let n = 10;
+        let c = random_mat(n, 320);
+        let big = c.scale(1e6);
+        let opts = GeneralOptions { max_sweeps: 6, eps: 1e-4, ..Default::default() };
+        let f1 = GeneralFactorizer::new(&c, 30, opts.clone()).run();
+        let f2 = GeneralFactorizer::new(&big, 30, opts).run();
+        assert_eq!(f1.sweeps_run, f2.sweeps_run, "sweep count must not depend on scale");
+        let r1 = f1.relative_error(&c);
+        let r2 = f2.relative_error(&big);
+        assert!((r1 - r2).abs() < 1e-5, "relative errors diverged: {r1} vs {r2}");
+    }
+
+    #[test]
+    fn parallel_scans_match_serial_bitwise() {
+        let n = 10;
+        let c = random_mat(n, 317);
+        let spec: Vec<f64> = c.diag();
+        let serial = FactorExec::serial();
+        let execs = [
+            FactorExec { threads: 2, min_work: 0 },
+            FactorExec { threads: 4, min_work: 0 },
+            FactorExec { threads: 16, min_work: 0 },
+        ];
+        // unit level: the staged candidate scan picks the same transform
+        let st = InitState::new(&c, &spec, &serial);
+        let want = best_init_candidate(&st, &serial);
+        for exec in execs {
+            let st_p = InitState::new(&c, &spec, &exec);
+            assert_eq!(best_init_candidate(&st_p, &exec), want, "{exec:?}");
+        }
+        // end to end: chain, spectrum and trace are bitwise-identical
+        let base = GeneralOptions {
+            max_sweeps: 2,
+            eps: 0.0,
+            full_update: true,
+            ..Default::default()
+        };
+        let want_f =
+            GeneralFactorizer::new(&c, 20, GeneralOptions { exec: serial, ..base.clone() }).run();
+        for exec in execs {
+            let got =
+                GeneralFactorizer::new(&c, 20, GeneralOptions { exec, ..base.clone() }).run();
+            assert_eq!(got.chain, want_f.chain, "{exec:?}");
+            assert_eq!(got.spectrum, want_f.spectrum, "{exec:?}");
+            assert_eq!(got.objective_trace, want_f.objective_trace, "{exec:?}");
+        }
+    }
+
+    #[test]
+    fn resume_from_any_checkpoint_matches_uninterrupted() {
+        let n = 9;
+        let c = random_mat(n, 318);
+        let opts = GeneralOptions { max_sweeps: 2, eps: 0.0, ..Default::default() };
+        let full = GeneralFactorizer::new(&c, 16, opts.clone()).run();
+
+        let mut caps: Vec<GenCheckpoint> = Vec::new();
+        let mut ctrl = GenRunControl {
+            checkpoint_every: 4,
+            on_checkpoint: Some(Box::new(|ck: &GenCheckpoint| caps.push(ck.clone()))),
+            ..Default::default()
+        };
+        let watched = GeneralFactorizer::new(&c, 16, opts.clone()).run_controlled(&mut ctrl);
+        drop(ctrl);
+        assert_eq!(watched.chain, full.chain);
+        assert!(caps.iter().any(|ck| ck.in_init), "expected an init-phase checkpoint");
+        assert!(caps.iter().any(|ck| !ck.in_init), "expected a sweep-phase checkpoint");
+        for ck in caps {
+            let resumed = GeneralFactorizer::new(&c, 16, opts.clone())
+                .resume(ck, &mut GenRunControl::default());
+            assert_eq!(resumed.chain, full.chain);
+            assert_eq!(resumed.spectrum, full.spectrum);
+            assert_eq!(resumed.objective_trace, full.objective_trace);
+            assert_eq!(resumed.sweeps_run, full.sweeps_run);
+        }
+    }
+
+    #[test]
+    fn halt_after_emits_resumable_checkpoint() {
+        let n = 9;
+        let c = random_mat(n, 319);
+        let opts = GeneralOptions { max_sweeps: 2, eps: 0.0, ..Default::default() };
+        let full = GeneralFactorizer::new(&c, 14, opts.clone()).run();
+
+        let mut last: Option<GenCheckpoint> = None;
+        let mut ctrl = GenRunControl {
+            checkpoint_every: 2,
+            halt_after: Some(3),
+            on_checkpoint: Some(Box::new(|ck: &GenCheckpoint| last = Some(ck.clone()))),
+        };
+        let halted = GeneralFactorizer::new(&c, 14, opts.clone()).run_controlled(&mut ctrl);
+        drop(ctrl);
+        assert!(halted.halted, "run must report the halt");
+        let ck = last.expect("halt must emit a checkpoint");
+        assert_eq!(ck.steps_done, 3);
+        let resumed =
+            GeneralFactorizer::new(&c, 14, opts).resume(ck, &mut GenRunControl::default());
+        assert_eq!(resumed.chain, full.chain);
+        assert_eq!(resumed.spectrum, full.spectrum);
+        assert_eq!(resumed.objective_trace, full.objective_trace);
+        assert!(!resumed.halted);
     }
 }

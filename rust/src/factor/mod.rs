@@ -24,13 +24,31 @@
 //! Every step is locally optimal and can only decrease the objective, so
 //! convergence to a stationary point is guaranteed; the test-suite asserts
 //! the monotone decrease property on random inputs.
+//!
+//! Two cross-cutting concerns live in their own submodules:
+//!
+//! * [`parallel`] — deterministic pool-parallel primitives ([`FactorExec`]):
+//!   score scans, candidate sweeps and the Lemma-2 assembly run across the
+//!   worker pool yet produce chains bitwise-identical to the sequential
+//!   factorizer at any thread count.
+//! * [`checkpoint`] — durable `.fastplan` + `.fastckpt` checkpoint pairs so
+//!   long factorizations can be halted and resumed bitwise-exactly.
 
+pub mod checkpoint;
 pub mod general;
 pub mod oracle;
+pub mod parallel;
 pub mod symmetric;
 
-pub use general::{GeneralFactorization, GeneralFactorizer, GeneralOptions};
-pub use symmetric::{SymFactorization, SymFactorizer, SymOptions};
+pub use checkpoint::{
+    load_checkpoint, mat_checksum, save_gen_checkpoint, save_sym_checkpoint, CheckpointMeta,
+    LoadedState,
+};
+pub use general::{
+    GenCheckpoint, GenRunControl, GeneralFactorization, GeneralFactorizer, GeneralOptions,
+};
+pub use parallel::FactorExec;
+pub use symmetric::{SymCheckpoint, SymFactorization, SymFactorizer, SymOptions, SymRunControl};
 
 /// How the spectrum estimate is produced and maintained (paper Algorithm 1
 /// input "update rule").

@@ -1,0 +1,328 @@
+//! Deterministic pool-parallel primitives for the factorization engine.
+//!
+//! Plan *application* went parallel in earlier PRs; this module brings the
+//! same worker pool to plan *construction*. The contract that makes that
+//! safe is strict bitwise determinism: every helper here produces output
+//! bitwise-identical to the sequential factorizer loops in
+//! [`super::symmetric`] / [`super::general`], at **any** thread count.
+//! That holds because work is only ever split *across* independent output
+//! slots (rows, candidate indices) while each slot is computed by the
+//! exact same sequential expression the single-threaded code uses — no
+//! floating-point reduction is ever reassociated. Selection among
+//! parallel-scored candidates is then done by a sequential
+//! ascending-index pass in the caller, so ties resolve to the lowest
+//! index exactly as the sequential scan would.
+//!
+//! Determinism is what makes checkpoint/resume exact (a resumed run
+//! replays onto bitwise-identical state) and is enforced end-to-end by
+//! the conformance tests in `tests/integration_factor.rs`.
+//!
+//! # No nested parallel regions
+//!
+//! [`crate::transforms::WorkerPool::run`] serializes jobs with an
+//! internal lock, so a closure passed to [`fill_slots`] /
+//! [`for_each_row`] must never call back into these helpers (it would
+//! deadlock waiting for the lock its own region holds). Closures here do
+//! plain sequential math only.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::linalg::Mat;
+use crate::transforms::{default_threads, global_pool};
+
+/// Work-size floor (in "inner flop" units as reported by callers) below
+/// which a region runs inline: pool hand-off costs on the order of
+/// microseconds, so tiny scans are faster sequential.
+const DEFAULT_MIN_WORK: usize = 8192;
+
+/// Execution knobs for the factorizers (threading of score scans,
+/// candidate sweeps and normal-equations assembly).
+///
+/// `Default` sizes `threads` to the machine (or the
+/// `FASTES_FACTOR_THREADS` override) and is what
+/// `SymOptions::default()` / `GeneralOptions::default()` embed. The
+/// factorized chain does **not** depend on these knobs — only wall-clock
+/// does.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FactorExec {
+    /// Total threads to use (callers clamp to the global pool size + 1).
+    /// `1` means fully sequential.
+    pub threads: usize,
+    /// Minimum estimated work per region before the pool is engaged.
+    pub min_work: usize,
+}
+
+impl FactorExec {
+    /// Fully sequential execution — the reference semantics.
+    pub fn serial() -> FactorExec {
+        FactorExec { threads: 1, min_work: usize::MAX }
+    }
+
+    /// Builder: set the thread count (floored at 1).
+    pub fn with_threads(mut self, threads: usize) -> FactorExec {
+        self.threads = threads.max(1);
+        self
+    }
+
+    fn env_usize(name: &str) -> Option<usize> {
+        std::env::var(name).ok()?.trim().parse().ok()
+    }
+}
+
+impl Default for FactorExec {
+    fn default() -> FactorExec {
+        let threads =
+            Self::env_usize("FASTES_FACTOR_THREADS").unwrap_or_else(default_threads).max(1);
+        let min_work = Self::env_usize("FASTES_FACTOR_MIN_WORK").unwrap_or(DEFAULT_MIN_WORK);
+        FactorExec { threads, min_work }
+    }
+}
+
+/// Raw-pointer wrapper so disjoint-slot writes can cross the pool
+/// boundary (same idiom as the batched apply in `transforms::schedule`).
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+/// Number of pool helper threads a region may use under `exec`.
+fn helpers_for(exec: &FactorExec) -> usize {
+    exec.threads.saturating_sub(1).min(global_pool().workers())
+}
+
+/// Work-stealing chunk size: coarse enough to amortize the atomic
+/// cursor, fine enough to balance (≈8 chunks per participant).
+fn chunk_for(n: usize, helpers: usize) -> usize {
+    (n / ((helpers + 1) * 8)).max(1)
+}
+
+/// Fill `out[i] = f(i)` for every slot, splitting slots across the pool.
+///
+/// `work_per_item` is the caller's estimate of the inner work per slot
+/// (used only for the inline/pool decision). Each slot is claimed
+/// exactly once and written exactly once, so the result is
+/// bitwise-identical to the sequential loop for any `exec`.
+pub fn fill_slots<T, F>(exec: &FactorExec, work_per_item: usize, out: &mut [T], f: F)
+where
+    T: Copy + Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let n = out.len();
+    let helpers = helpers_for(exec);
+    let total_work = n.saturating_mul(work_per_item.max(1));
+    if helpers == 0 || n < 2 || total_work < exec.min_work {
+        for (i, slot) in out.iter_mut().enumerate() {
+            *slot = f(i);
+        }
+        return;
+    }
+    let chunk = chunk_for(n, helpers);
+    let cursor = AtomicUsize::new(0);
+    let cursor = &cursor;
+    let base = SendPtr(out.as_mut_ptr());
+    let base = &base;
+    let f = &f;
+    global_pool().run(helpers, &move |_slot| loop {
+        let start = cursor.fetch_add(chunk, Ordering::Relaxed);
+        if start >= n {
+            break;
+        }
+        for i in start..(start + chunk).min(n) {
+            // SAFETY: `i` is claimed by exactly one participant (the
+            // atomic cursor hands out disjoint ranges), slots are
+            // disjoint `T: Copy` cells inside `out`, and `run` joins all
+            // participants before `fill_slots` returns.
+            unsafe { *base.0.add(i) = f(i) };
+        }
+    });
+}
+
+/// Run `f(i, row_i)` over the disjoint rows of a row-major buffer
+/// (`rows × cols`), splitting rows across the pool. Each row is visited
+/// exactly once by exactly one participant.
+pub fn for_each_row<F>(
+    exec: &FactorExec,
+    rows: usize,
+    cols: usize,
+    work_per_row: usize,
+    data: &mut [f64],
+    f: F,
+) where
+    F: Fn(usize, &mut [f64]) + Sync,
+{
+    assert_eq!(data.len(), rows * cols, "for_each_row shape mismatch");
+    let helpers = helpers_for(exec);
+    let total_work = rows.saturating_mul(work_per_row.max(1));
+    if helpers == 0 || rows < 2 || cols == 0 || total_work < exec.min_work {
+        for (i, row) in data.chunks_exact_mut(cols).enumerate() {
+            f(i, row);
+        }
+        return;
+    }
+    let chunk = chunk_for(rows, helpers);
+    let cursor = AtomicUsize::new(0);
+    let cursor = &cursor;
+    let base = SendPtr(data.as_mut_ptr());
+    let base = &base;
+    let f = &f;
+    global_pool().run(helpers, &move |_slot| loop {
+        let start = cursor.fetch_add(chunk, Ordering::Relaxed);
+        if start >= rows {
+            break;
+        }
+        for i in start..(start + chunk).min(rows) {
+            // SAFETY: row `i` is claimed by exactly one participant and
+            // rows are disjoint `cols`-wide slices of `data`; `run`
+            // joins all participants before `for_each_row` returns.
+            let row = unsafe { std::slice::from_raw_parts_mut(base.0.add(i * cols), cols) };
+            f(i, row);
+        }
+    });
+}
+
+/// Row-parallel `a * b`, bitwise-identical to [`Mat::matmul`]: each
+/// output row is produced by the exact sequential k-ascending
+/// accumulation (including the `aik == 0` skip) of the scalar code.
+pub fn matmul_par(exec: &FactorExec, a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols(), b.rows(), "matmul dimension mismatch");
+    let mut out = Mat::zeros(a.rows(), b.cols());
+    let cols = b.cols();
+    for_each_row(exec, a.rows(), cols, a.cols() * cols, out.as_mut_slice(), |i, oi| {
+        for (k, &aik) in a.row(i).iter().enumerate() {
+            if aik == 0.0 {
+                continue;
+            }
+            for (o, &bv) in oi.iter_mut().zip(b.row(k).iter()) {
+                *o += aik * bv;
+            }
+        }
+    });
+    out
+}
+
+/// Row-parallel `a * x`, bitwise-identical to [`Mat::matvec`].
+pub fn matvec_par(exec: &FactorExec, a: &Mat, x: &[f64]) -> Vec<f64> {
+    assert_eq!(a.cols(), x.len(), "matvec dimension mismatch");
+    let mut out = vec![0.0; a.rows()];
+    fill_slots(exec, a.cols(), &mut out, |i| {
+        a.row(i).iter().zip(x.iter()).map(|(a, b)| a * b).sum()
+    });
+    out
+}
+
+/// Column-parallel `aᵀ * x`, bitwise-identical to [`Mat::tmatvec`]: the
+/// sequential code accumulates each output element in i-ascending order
+/// (skipping `x[i] == 0`), and so does each per-column closure here.
+pub fn tmatvec_par(exec: &FactorExec, a: &Mat, x: &[f64]) -> Vec<f64> {
+    assert_eq!(a.rows(), x.len(), "tmatvec dimension mismatch");
+    let cols = a.cols();
+    let data = a.as_slice();
+    let mut out = vec![0.0; cols];
+    fill_slots(exec, a.rows(), &mut out, |j| {
+        let mut o = 0.0;
+        for (i, &xi) in x.iter().enumerate() {
+            if xi == 0.0 {
+                continue;
+            }
+            o += xi * data[i * cols + j];
+        }
+        o
+    });
+    out
+}
+
+/// Row-parallel `m += a · u vᵀ`, bitwise-identical to
+/// [`Mat::rank1_update`] (including the `a·u[i] == 0` row skip).
+pub fn rank1_update_par(exec: &FactorExec, m: &mut Mat, a: f64, u: &[f64], v: &[f64]) {
+    assert_eq!(u.len(), m.rows());
+    assert_eq!(v.len(), m.cols());
+    let cols = m.cols();
+    for_each_row(exec, u.len(), cols, cols, m.as_mut_slice(), |i, row| {
+        let c = a * u[i];
+        if c == 0.0 {
+            return;
+        }
+        for (s, &vj) in row.iter_mut().zip(v.iter()) {
+            *s += c * vj;
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Rng64;
+
+    fn execs() -> Vec<FactorExec> {
+        vec![
+            FactorExec::serial(),
+            FactorExec { threads: 2, min_work: 0 },
+            FactorExec { threads: 4, min_work: 0 },
+            FactorExec { threads: 16, min_work: 0 },
+            FactorExec { threads: 4, min_work: usize::MAX },
+        ]
+    }
+
+    #[test]
+    fn fill_slots_matches_sequential_at_any_thread_count() {
+        let n = 257;
+        let mut want = vec![0.0f64; n];
+        for (i, w) in want.iter_mut().enumerate() {
+            *w = (i as f64).sin() * (i as f64 + 0.5);
+        }
+        for exec in execs() {
+            let mut got = vec![-1.0f64; n];
+            fill_slots(&exec, 1, &mut got, |i| (i as f64).sin() * (i as f64 + 0.5));
+            assert_eq!(got, want, "{exec:?}");
+        }
+    }
+
+    #[test]
+    fn matmul_par_is_bitwise_equal() {
+        let mut rng = Rng64::new(41);
+        let mut a = Mat::randn(23, 17, &mut rng);
+        let b = Mat::randn(17, 29, &mut rng);
+        // exercise the zero-skip branch
+        for j in 0..17 {
+            a[(5, j)] = 0.0;
+        }
+        a[(7, 3)] = 0.0;
+        let want = a.matmul(&b);
+        for exec in execs() {
+            let got = matmul_par(&exec, &a, &b);
+            assert_eq!(got.as_slice(), want.as_slice(), "{exec:?}");
+        }
+    }
+
+    #[test]
+    fn matvec_and_tmatvec_par_are_bitwise_equal() {
+        let mut rng = Rng64::new(42);
+        let a = Mat::randn(31, 19, &mut rng);
+        let mut x: Vec<f64> = (0..19).map(|_| rng.randn()).collect();
+        x[3] = 0.0;
+        let mut y: Vec<f64> = (0..31).map(|_| rng.randn()).collect();
+        y[0] = 0.0;
+        y[17] = 0.0;
+        let want_mv = a.matvec(&x);
+        let want_tmv = a.tmatvec(&y);
+        for exec in execs() {
+            assert_eq!(matvec_par(&exec, &a, &x), want_mv, "{exec:?}");
+            assert_eq!(tmatvec_par(&exec, &a, &y), want_tmv, "{exec:?}");
+        }
+    }
+
+    #[test]
+    fn rank1_update_par_is_bitwise_equal() {
+        let mut rng = Rng64::new(43);
+        let base = Mat::randn(21, 27, &mut rng);
+        let mut u: Vec<f64> = (0..21).map(|_| rng.randn()).collect();
+        u[4] = 0.0;
+        let v: Vec<f64> = (0..27).map(|_| rng.randn()).collect();
+        let mut want = base.clone();
+        want.rank1_update(-0.75, &u, &v);
+        for exec in execs() {
+            let mut got = base.clone();
+            rank1_update_par(&exec, &mut got, -0.75, &u, &v);
+            assert_eq!(got.as_slice(), want.as_slice(), "{exec:?}");
+        }
+    }
+}

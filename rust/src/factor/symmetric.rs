@@ -18,10 +18,23 @@
 //!   solver. Both the rotation and the reflection branch are solved and
 //!   the better one is kept.
 //! * **Lemma 1** (spectrum): `s̄* = diag(Ūᵀ S Ū)`.
+//!
+//! # Parallelism and determinism
+//!
+//! The per-row score scans (`ScoreTable`), the post-conjugation rescans
+//! and the Theorem-2 full-update candidate sweep run on the global
+//! worker pool via [`FactorExec`]. Every parallel region computes
+//! per-row results with the exact sequential inner loops and reduces
+//! them by a sequential lowest-index pass, so the emitted chain is
+//! **bitwise identical** to the single-threaded factorizer at any
+//! thread count (see `factor::parallel`). That determinism is also what
+//! makes [`SymCheckpoint`] resume exact: replaying a checkpointed
+//! prefix reproduces the uninterrupted run's state bit for bit.
 
 use crate::linalg::{min_quadratic_on_circle, two_sided_procrustes2, Mat};
 use crate::transforms::{GChain, GKind, GTransform};
 
+use super::parallel::{fill_slots, FactorExec};
 use super::SpectrumRule;
 
 /// Options for [`SymFactorizer`] (paper Algorithm 1 inputs).
@@ -31,11 +44,17 @@ pub struct SymOptions {
     pub spectrum: SpectrumRule,
     /// Maximum number of iterative sweeps after initialization.
     pub max_sweeps: usize,
-    /// Stopping criterion `|ε_{i−1} − ε_i| < eps` (paper default `1e-2`).
+    /// Relative stopping criterion: sweeps stop when
+    /// `|ε_{i−1} − ε_i| < eps · ‖S‖²_F` (the paper's relative-error
+    /// trace). Normalizing by `‖S‖²_F` makes the rule scale-invariant —
+    /// factorizing `S` and `10⁶·S` stops after the same sweep.
     pub eps: f64,
     /// `true` → Theorem 2 with full index re-search (`O(n³)` per factor);
     /// `false` → the paper's "polishing" (fixed indices, values only).
     pub full_update: bool,
+    /// Execution knobs for the parallel score scans / candidate sweeps.
+    /// Never affects the factorization result, only wall-clock.
+    pub exec: FactorExec,
 }
 
 impl Default for SymOptions {
@@ -43,8 +62,9 @@ impl Default for SymOptions {
         SymOptions {
             spectrum: SpectrumRule::Update,
             max_sweeps: 10,
-            eps: 1e-2,
+            eps: 1e-6,
             full_update: false,
+            exec: FactorExec::default(),
         }
     }
 }
@@ -62,6 +82,10 @@ pub struct SymFactorization {
     pub objective_trace: Vec<f64>,
     /// Number of sweeps actually run.
     pub sweeps_run: usize,
+    /// `true` when the run stopped early because
+    /// [`SymRunControl::halt_after`] was reached; resume from the last
+    /// emitted checkpoint to continue.
+    pub halted: bool,
 }
 
 impl SymFactorization {
@@ -86,6 +110,58 @@ impl SymFactorization {
     }
 }
 
+/// A resumable snapshot of a symmetric factorization in progress.
+///
+/// RNG-free and exact: together with the same input matrix, budget and
+/// options, resuming from a checkpoint reproduces the uninterrupted
+/// run's chain **bitwise** (the greedy selection and the sweeps are
+/// deterministic at any thread count). The chain is stored in
+/// application order (`G_1` first) — the same convention as
+/// [`GChain`] and the `.fastplan` artifact.
+#[derive(Clone, Debug)]
+pub struct SymCheckpoint {
+    /// Factors picked so far, in application order.
+    pub chain: GChain,
+    /// Current spectrum estimate (raw incremental state — for the
+    /// `'update'` rule during init this is the tracked diagonal, not yet
+    /// the Lemma-1 refresh).
+    pub spectrum: Vec<f64>,
+    /// Objective after initialization; `None` while still initializing.
+    pub init_objective: Option<f64>,
+    /// Objective after each completed sweep.
+    pub objective_trace: Vec<f64>,
+    /// Completed sweeps.
+    pub sweeps_run: usize,
+    /// Greedy init factors placed so far (`== chain.len()` during init).
+    pub steps_done: usize,
+    /// `true` while Theorem-1 initialization is still in progress.
+    pub in_init: bool,
+}
+
+/// Checkpoint/halt controls for [`SymFactorizer::run_controlled`] /
+/// [`SymFactorizer::resume`].
+#[derive(Default)]
+pub struct SymRunControl<'cb> {
+    /// Emit a checkpoint every this many progress steps during
+    /// initialization (and after every sweep). `0` disables periodic
+    /// checkpoints; a checkpoint is still emitted at the init/sweep
+    /// boundary and on halt when a sink is installed.
+    pub checkpoint_every: usize,
+    /// Stop after this many total progress steps (init factors placed +
+    /// sweeps completed, counted from the start of the *original* run —
+    /// resumed runs continue the same count). The result is returned
+    /// with `halted = true` after emitting a final checkpoint.
+    pub halt_after: Option<usize>,
+    /// Checkpoint sink. Called with each emitted snapshot.
+    pub on_checkpoint: Option<Box<dyn FnMut(&SymCheckpoint) + 'cb>>,
+}
+
+fn emit_sym(ctrl: &mut SymRunControl, ck: SymCheckpoint) {
+    if let Some(cb) = ctrl.on_checkpoint.as_mut() {
+        cb(&ck);
+    }
+}
+
 /// Algorithm 1 driver for symmetric matrices.
 pub struct SymFactorizer<'a> {
     s: &'a Mat,
@@ -107,39 +183,189 @@ impl<'a> SymFactorizer<'a> {
 
     /// Run initialization + iterative sweeps (Algorithm 1).
     pub fn run(self) -> SymFactorization {
-        let mut spectrum = initial_spectrum(self.s, &self.opts.spectrum);
+        self.drive(None, &mut SymRunControl::default())
+    }
 
-        // ---- Initialization (Theorem 1) ----
+    /// [`run`](Self::run) with checkpoint emission / early halt.
+    pub fn run_controlled(self, ctrl: &mut SymRunControl) -> SymFactorization {
+        self.drive(None, ctrl)
+    }
+
+    /// Resume a run from a checkpoint. The factorizer must be
+    /// constructed over the same matrix, budget and options as the run
+    /// that emitted the checkpoint; the completed portion is then
+    /// replayed exactly and the result equals the uninterrupted run's.
+    pub fn resume(self, ck: SymCheckpoint, ctrl: &mut SymRunControl) -> SymFactorization {
+        self.drive(Some(ck), ctrl)
+    }
+
+    fn drive(self, resume: Option<SymCheckpoint>, ctrl: &mut SymRunControl) -> SymFactorization {
+        let n = self.s.rows();
         let dynamic = matches!(self.opts.spectrum, SpectrumRule::Update);
-        let (mut chain, mut working) = init_gchain(self.s, &mut spectrum, self.g, dynamic);
-        // Lemma 1 refresh for the 'update' rule: the working matrix *is*
-        // Ūᵀ S Ū, so the optimal spectrum is its diagonal.
-        if matches!(self.opts.spectrum, SpectrumRule::Update) {
-            spectrum = working.diag();
+        let exec = self.opts.exec;
+        let stop_scale = self.s.fro_norm_sq().max(1e-300);
+
+        // ---- restore or initialize driver state ----
+        // `picked` is in pick order (G_g chosen first) during init and in
+        // application order once init is done.
+        let (mut spectrum, mut picked, mut trace, mut sweeps_run, mut init_objective, in_init) =
+            match resume {
+                None => {
+                    let spectrum = initial_spectrum(self.s, &self.opts.spectrum);
+                    (spectrum, Vec::new(), Vec::new(), 0, None, true)
+                }
+                Some(ck) => {
+                    assert_eq!(ck.chain.n, n, "checkpoint dimension mismatch");
+                    let mut transforms = ck.chain.transforms;
+                    if ck.in_init {
+                        transforms.reverse(); // application order → pick order
+                    }
+                    (
+                        ck.spectrum,
+                        transforms,
+                        ck.objective_trace,
+                        ck.sweeps_run,
+                        ck.init_objective,
+                        ck.in_init,
+                    )
+                }
+            };
+
+        // ---- Initialization (Theorem 1), possibly resumed mid-way ----
+        let mut chain;
+        if in_init {
+            // Rebuild the working matrix by replaying the picked prefix:
+            // bitwise-identical to the incremental conjugations of the
+            // original run.
+            let mut working = self.s.clone();
+            for t in picked.iter() {
+                t.conjugate_t(&mut working);
+            }
+            let halted = greedy_init(
+                self.s,
+                &mut spectrum,
+                self.g,
+                dynamic,
+                &exec,
+                &mut picked,
+                &mut working,
+                |picked, spectrum| {
+                    let steps = picked.len();
+                    let due = ctrl.on_checkpoint.is_some()
+                        && ctrl.checkpoint_every > 0
+                        && steps % ctrl.checkpoint_every == 0;
+                    let halt = ctrl.halt_after.is_some_and(|h| steps >= h);
+                    if due || (halt && ctrl.on_checkpoint.is_some()) {
+                        let ck = SymCheckpoint {
+                            chain: GChain {
+                                n,
+                                transforms: picked.iter().rev().copied().collect(),
+                            },
+                            spectrum: spectrum.to_vec(),
+                            init_objective: None,
+                            objective_trace: Vec::new(),
+                            sweeps_run: 0,
+                            steps_done: steps,
+                            in_init: true,
+                        };
+                        emit_sym(ctrl, ck);
+                    }
+                    halt
+                },
+            );
+            picked.reverse();
+            if halted {
+                let chain = GChain { n, transforms: picked };
+                if dynamic {
+                    spectrum = working.diag();
+                }
+                let init_objective = objective_from_working(&working, &spectrum);
+                return SymFactorization {
+                    chain,
+                    spectrum,
+                    init_objective,
+                    objective_trace: trace,
+                    sweeps_run,
+                    halted: true,
+                };
+            }
+            chain = GChain { n, transforms: picked };
+            // Lemma 1 refresh for the 'update' rule: the working matrix
+            // *is* Ūᵀ S Ū, so the optimal spectrum is its diagonal.
+            if dynamic {
+                spectrum = working.diag();
+            }
+            init_objective = Some(objective_from_working(&working, &spectrum));
+            if ctrl.on_checkpoint.is_some() && ctrl.checkpoint_every > 0 {
+                let ck = SymCheckpoint {
+                    chain: chain.clone(),
+                    spectrum: spectrum.clone(),
+                    init_objective,
+                    objective_trace: trace.clone(),
+                    sweeps_run,
+                    steps_done: chain.len(),
+                    in_init: false,
+                };
+                emit_sym(ctrl, ck);
+            }
+        } else {
+            chain = GChain { n, transforms: picked };
         }
-        let init_objective = objective_from_working(&working, &spectrum);
+        let init_objective =
+            init_objective.expect("sweep-phase checkpoint must carry init_objective");
 
         // ---- Iterations (Theorem 2 / polish + Lemma 1) ----
-        let mut trace = Vec::new();
-        let mut prev = init_objective;
-        let mut sweeps_run = 0;
-        for _ in 0..self.opts.max_sweeps {
+        // The stopping rule is evaluated at loop top from the trace so a
+        // resumed run re-applies the exact decision the uninterrupted run
+        // would have made after its last completed sweep.
+        while sweeps_run < self.opts.max_sweeps {
             if chain.is_empty() {
                 break;
             }
-            sweep_update(self.s, &mut chain, &spectrum, self.opts.full_update);
+            if let Some(&last) = trace.last() {
+                let before = if trace.len() >= 2 {
+                    trace[trace.len() - 2]
+                } else {
+                    init_objective
+                };
+                if (before - last).abs() < self.opts.eps * stop_scale {
+                    break;
+                }
+            }
+            sweep_update(self.s, &mut chain, &spectrum, self.opts.full_update, &exec);
             // refresh working matrix W = Ūᵀ S Ū (O(gn))
-            working = conjugated(self.s, &chain);
-            if matches!(self.opts.spectrum, SpectrumRule::Update) {
+            let working = conjugated(self.s, &chain);
+            if dynamic {
                 spectrum = working.diag();
             }
             let obj = objective_from_working(&working, &spectrum);
             trace.push(obj);
             sweeps_run += 1;
-            if (prev - obj).abs() < self.opts.eps {
-                break;
+            let steps = chain.len() + sweeps_run;
+            if ctrl.on_checkpoint.is_some()
+                && (ctrl.checkpoint_every > 0 || ctrl.halt_after.is_some_and(|h| steps >= h))
+            {
+                let ck = SymCheckpoint {
+                    chain: chain.clone(),
+                    spectrum: spectrum.clone(),
+                    init_objective: Some(init_objective),
+                    objective_trace: trace.clone(),
+                    sweeps_run,
+                    steps_done: chain.len(),
+                    in_init: false,
+                };
+                emit_sym(ctrl, ck);
             }
-            prev = obj;
+            if ctrl.halt_after.is_some_and(|h| steps >= h) {
+                return SymFactorization {
+                    chain,
+                    spectrum,
+                    init_objective,
+                    objective_trace: trace,
+                    sweeps_run,
+                    halted: true,
+                };
+            }
         }
 
         SymFactorization {
@@ -148,6 +374,7 @@ impl<'a> SymFactorizer<'a> {
             init_objective,
             objective_trace: trace,
             sweeps_run,
+            halted: false,
         }
     }
 }
@@ -176,20 +403,49 @@ pub(crate) fn make_distinct_pub(d: &mut [f64]) {
     make_distinct(d)
 }
 
-/// Add a deterministic infinitesimal tilt when duplicate values exist.
+/// Make all entries pairwise distinct with a deterministic infinitesimal
+/// tilt, *enforcing* the post-condition: the linear tilt
+/// `scale·τ·(i+1)` can itself collide with other entries (e.g. spectra
+/// already spaced at `~1e-9·scale`), so the tilt is retried with a
+/// doubled `τ` a bounded number of times and then falls back to a
+/// sorted minimum-gap repair that is distinct by construction.
 fn make_distinct(d: &mut [f64]) {
     let n = d.len();
     if n < 2 {
         return;
     }
     let scale = d.iter().fold(0.0f64, |m, v| m.max(v.abs())).max(1.0);
-    let mut sorted = d.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let has_dup = sorted.windows(2).any(|w| w[0] == w[1]);
-    if has_dup {
-        for (i, v) in d.iter_mut().enumerate() {
-            *v += scale * 1e-9 * (i as f64 + 1.0);
+    let distinct = |d: &[f64]| {
+        let mut sorted = d.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.windows(2).all(|w| w[0] != w[1])
+    };
+    if distinct(d) {
+        return;
+    }
+    let mut tilt = 1e-9;
+    for _ in 0..8 {
+        let tilted: Vec<f64> =
+            d.iter().enumerate().map(|(i, v)| v + scale * tilt * (i as f64 + 1.0)).collect();
+        if distinct(&tilted) {
+            d.copy_from_slice(&tilted);
+            return;
         }
+        tilt *= 2.0;
+    }
+    // Guaranteed fallback: walk the entries in sorted order (ties broken
+    // by index, so the repair is deterministic) and push each duplicate
+    // strictly above its predecessor. The gap dwarfs the ulp at `scale`,
+    // so every bump strictly increases the value.
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| d[a].partial_cmp(&d[b]).unwrap().then(a.cmp(&b)));
+    let gap = scale * 1e-9;
+    let mut prev = d[idx[0]];
+    for &k in idx.iter().skip(1) {
+        if d[k] <= prev {
+            d[k] = prev + gap;
+        }
+        prev = d[k];
     }
 }
 
@@ -244,9 +500,30 @@ fn pair_gain(w: &Mat, spectrum: &[f64], i: usize, j: usize, dynamic: bool) -> f6
     }
 }
 
+/// Sequential scan of row `i`: the lowest-index argmax over `j > i`.
+/// The per-row unit of work of both the parallel table build and the
+/// parallel rescans — identical at any thread count.
+fn scan_row(w: &Mat, spectrum: &[f64], dynamic: bool, i: usize) -> (usize, f64) {
+    let n = w.rows();
+    let mut bj = usize::MAX;
+    let mut bg = f64::NEG_INFINITY;
+    for j in (i + 1)..n {
+        let g = pair_gain(w, spectrum, i, j, dynamic);
+        if g > bg {
+            bg = g;
+            bj = j;
+        }
+    }
+    (bj, bg)
+}
+
 /// Incremental score table: per-row best pair (classical Jacobi row-maxima
-/// bookkeeping). `best_j[i]` is the argmax over `j > i` of `gain(i, j)`;
-/// a conjugation at `(p, q)` re-scores only pairs touching `p` or `q`.
+/// bookkeeping). `best_j[i]` is the **lowest** argmax over `j > i` of
+/// `gain(i, j)` — the tie normalization makes the incremental table equal
+/// a fresh rescan bitwise (`score_table_incremental_matches_full_rescan`),
+/// which is what lets a resumed run rebuild the table from scratch and
+/// continue exactly. A conjugation at `(p, q)` re-scores only pairs
+/// touching `p` or `q`; rows are scanned in parallel (`FactorExec`).
 struct ScoreTable {
     best_j: Vec<usize>,
     best_gain: Vec<f64>,
@@ -254,32 +531,20 @@ struct ScoreTable {
 }
 
 impl ScoreTable {
-    fn new(w: &Mat, spectrum: &[f64], dynamic: bool) -> Self {
+    fn new(w: &Mat, spectrum: &[f64], dynamic: bool, exec: &FactorExec) -> Self {
         let n = w.rows();
         let mut t = ScoreTable {
             best_j: vec![usize::MAX; n],
             best_gain: vec![f64::NEG_INFINITY; n],
             dynamic,
         };
-        for i in 0..n.saturating_sub(1) {
-            t.rescan_row(w, spectrum, i);
+        let mut staged = vec![(usize::MAX, f64::NEG_INFINITY); n.saturating_sub(1)];
+        fill_slots(exec, n, &mut staged, |i| scan_row(w, spectrum, dynamic, i));
+        for (i, (bj, bg)) in staged.into_iter().enumerate() {
+            t.best_j[i] = bj;
+            t.best_gain[i] = bg;
         }
         t
-    }
-
-    fn rescan_row(&mut self, w: &Mat, spectrum: &[f64], i: usize) {
-        let n = w.rows();
-        let mut bj = usize::MAX;
-        let mut bg = f64::NEG_INFINITY;
-        for j in (i + 1)..n {
-            let g = pair_gain(w, spectrum, i, j, self.dynamic);
-            if g > bg {
-                bg = g;
-                bj = j;
-            }
-        }
-        self.best_j[i] = bj;
-        self.best_gain[i] = bg;
     }
 
     /// Global best pair.
@@ -295,56 +560,78 @@ impl ScoreTable {
         (bi, self.best_j[bi], bg)
     }
 
-    /// Re-score after a conjugation touching rows/cols `p`, `q`.
-    fn update_after(&mut self, w: &Mat, spectrum: &[f64], p: usize, q: usize) {
+    /// Re-score after a conjugation touching rows/cols `p`, `q`
+    /// (`p < q`). Each row's refresh depends only on its own previous
+    /// entry, so rows are processed in parallel and staged before being
+    /// written back — bitwise identical to the sequential in-place loop.
+    fn update_after(&mut self, w: &Mat, spectrum: &[f64], p: usize, q: usize, exec: &FactorExec) {
         let n = w.rows();
-        // rows p and q changed entirely
-        if p < n.saturating_sub(1) {
-            self.rescan_row(w, spectrum, p);
-        }
-        if q < n.saturating_sub(1) {
-            self.rescan_row(w, spectrum, q);
-        }
-        // for other rows, only the pairs (i, p) and (i, q) changed
-        for i in 0..n.saturating_sub(1) {
+        let dynamic = self.dynamic;
+        let best_j = &self.best_j;
+        let best_gain = &self.best_gain;
+        let mut staged = vec![(usize::MAX, f64::NEG_INFINITY); n.saturating_sub(1)];
+        fill_slots(exec, 16, &mut staged, |i| {
+            // rows p and q changed entirely
             if i == p || i == q {
-                continue;
+                return scan_row(w, spectrum, dynamic, i);
             }
+            // for other rows, only the pairs (i, p) and (i, q) changed
+            let (mut bj, mut bg) = (best_j[i], best_gain[i]);
             let mut need_rescan = false;
             for &t in &[p, q] {
                 if t > i {
-                    let g = pair_gain(w, spectrum, i, t, self.dynamic);
-                    if g > self.best_gain[i] {
-                        self.best_gain[i] = g;
-                        self.best_j[i] = t;
-                    } else if self.best_j[i] == t {
+                    let g = pair_gain(w, spectrum, i, t, dynamic);
+                    if g > bg {
+                        bg = g;
+                        bj = t;
+                    } else if g == bg && t < bj {
+                        // tie normalization: a fresh rescan keeps the
+                        // lowest argmax, so the incremental table must too
+                        bj = t;
+                    } else if bj == t {
                         // the previous best involved t and may have dropped
                         need_rescan = true;
                     }
                 }
             }
             if need_rescan {
-                self.rescan_row(w, spectrum, i);
+                scan_row(w, spectrum, dynamic, i)
+            } else {
+                (bj, bg)
             }
+        });
+        for (i, (bj, bg)) in staged.into_iter().enumerate() {
+            self.best_j[i] = bj;
+            self.best_gain[i] = bg;
         }
     }
 }
 
-/// Theorem 1 initialization: greedily pick `g` G-transforms. Returns the
-/// chain (in application order, `G_1` first) and the final working matrix
-/// `W = Ūᵀ S Ū`. Under `dynamic` (the `'update'` rule), the spectrum
-/// estimate is refreshed to the working diagonal after every step —
-/// see [`pair_gain`].
-fn init_gchain(s: &Mat, spectrum: &mut Vec<f64>, g: usize, dynamic: bool) -> (GChain, Mat) {
+/// The shared Theorem-1 greedy core: extend `picked` (pick order, `G_g`
+/// first) up to the budget `g`, keeping `working`/`spectrum` in sync.
+/// `on_step` observes the state after every placed factor and returns
+/// `true` to halt; the function then returns `true` with all state
+/// mutably borrowed by the caller still valid for checkpointing.
+#[allow(clippy::too_many_arguments)]
+fn greedy_init(
+    s: &Mat,
+    spectrum: &mut [f64],
+    g: usize,
+    dynamic: bool,
+    exec: &FactorExec,
+    picked: &mut Vec<GTransform>,
+    working: &mut Mat,
+    mut on_step: impl FnMut(&[GTransform], &[f64]) -> bool,
+) -> bool {
     let n = s.rows();
-    let mut working = s.clone();
-    let mut picked: Vec<GTransform> = Vec::with_capacity(g);
-    if n < 2 || g == 0 {
-        return (GChain { n, transforms: picked }, working);
+    if n < 2 || picked.len() >= g {
+        return false;
     }
-    let mut scores = ScoreTable::new(&working, spectrum, dynamic);
-    let tiny = 1e-14 * (1.0 + working.fro_norm_sq());
-    for _ in 0..g {
+    let mut scores = ScoreTable::new(working, spectrum, dynamic, exec);
+    // computed from S (== the fresh working matrix) so a resumed run uses
+    // the exact same threshold as the original
+    let tiny = 1e-14 * (1.0 + s.fro_norm_sq());
+    while picked.len() < g {
         let (i, j, gain) = scores.argmax();
         if !(gain > tiny) || j == usize::MAX {
             break; // no strictly-improving transform exists
@@ -367,15 +654,42 @@ fn init_gchain(s: &Mat, spectrum: &mut Vec<f64>, g: usize, dynamic: bool) -> (GC
             [[block[0][0], block[1][0]], [block[0][1], block[1][1]]],
         );
         // S^(k−1) = G_kᵀ S^(k) G_k
-        t.conjugate_t(&mut working);
+        t.conjugate_t(working);
         picked.push(t);
         if dynamic {
             // continuous Lemma-1 refresh: track the new diagonal
             spectrum[i] = working[(i, i)];
             spectrum[j] = working[(j, j)];
         }
-        scores.update_after(&working, spectrum, i, j);
+        scores.update_after(working, spectrum, i, j, exec);
+        if on_step(picked, spectrum) {
+            return true;
+        }
     }
+    false
+}
+
+/// Theorem 1 initialization: greedily pick `g` G-transforms. Returns the
+/// chain (in application order, `G_1` first) and the final working matrix
+/// `W = Ūᵀ S Ū`. Under `dynamic` (the `'update'` rule), the spectrum
+/// estimate is refreshed to the working diagonal after every step —
+/// see [`pair_gain`]. Reference entry point used by the unit tests; the
+/// driver goes through [`greedy_init`] directly for checkpoint hooks.
+#[cfg_attr(not(test), allow(dead_code))]
+fn init_gchain(s: &Mat, spectrum: &mut Vec<f64>, g: usize, dynamic: bool) -> (GChain, Mat) {
+    let n = s.rows();
+    let mut working = s.clone();
+    let mut picked: Vec<GTransform> = Vec::with_capacity(g);
+    greedy_init(
+        s,
+        spectrum,
+        g,
+        dynamic,
+        &FactorExec::serial(),
+        &mut picked,
+        &mut working,
+        |_, _| false,
+    );
     // picked[0] = G_g (chosen first); application order wants G_1 first
     picked.reverse();
     (GChain { n, transforms: picked }, working)
@@ -573,7 +887,13 @@ fn excluded_base(a: &Mat, b: &Mat, i: usize, j: usize) -> f64 {
 /// One Theorem-2 sweep over all factors (polish by default; full index
 /// re-search when `full_update`). Maintains `A⁽ᵏ⁾` and `B⁽ᵏ⁾` across `k`
 /// with `O(n)` conjugations.
-fn sweep_update(s: &Mat, chain: &mut GChain, spectrum: &[f64], full_update: bool) {
+fn sweep_update(
+    s: &Mat,
+    chain: &mut GChain,
+    spectrum: &[f64],
+    full_update: bool,
+    exec: &FactorExec,
+) {
     let g = chain.len();
     if g == 0 {
         return;
@@ -588,14 +908,17 @@ fn sweep_update(s: &Mat, chain: &mut GChain, spectrum: &[f64], full_update: bool
     for k in 0..g {
         let old = chain.transforms[k];
         let accepted = if full_update {
-            let new_t = best_update_all_pairs(&a, &b);
+            let new_t = best_update_all_pairs(&a, &b, exec);
             // cross-pair acceptance needs the excluded-base corrections
             // (the shared ‖A−B‖² constant cancels)
             let h_old = eval_h_var(&a, &b, old.i, old.j, old.kind, old.c, old.s)
                 - excluded_base(&a, &b, old.i, old.j);
             let h_new = eval_h_var(&a, &b, new_t.i, new_t.j, new_t.kind, new_t.c, new_t.s)
                 - excluded_base(&a, &b, new_t.i, new_t.j);
-            if h_new <= h_old {
+            // strict: an exactly-tied candidate must not displace the
+            // incumbent (a tie swaps factors without decreasing the
+            // objective — a cycling hazard for the sweep loop)
+            if h_new < h_old {
                 new_t
             } else {
                 old
@@ -647,24 +970,42 @@ fn best_update_fixed_pair(a: &Mat, b: &Mat, old: GTransform) -> GTransform {
     }
 }
 
-/// Full Theorem-2 update: search all pairs `(i, j)` and both kinds
-/// (`O(n³)` per factor — the paper's stated complexity).
-fn best_update_all_pairs(a: &Mat, b: &Mat) -> GTransform {
+/// Best candidate within row `i` (columns `j > i`, both kinds): the
+/// sequential inner loop of the full Theorem-2 search, used as the
+/// per-row unit of the parallel sweep. First strict minimum wins, same
+/// as the sequential row-major scan.
+fn best_update_row(a: &Mat, b: &Mat, i: usize) -> Option<(f64, GTransform)> {
     let n = a.rows();
     let mut best: Option<(f64, GTransform)> = None;
-    for i in 0..n.saturating_sub(1) {
-        for j in (i + 1)..n {
-            // cross-pair comparison needs the absolute objective up to the
-            // shared ‖A−B‖² constant
-            let excl = excluded_base(a, b, i, j);
-            for kind in [GKind::Rotation, GKind::Reflection] {
-                let (r00, r01, r11, gv, w) = quad_fit(a, b, i, j, kind);
-                let m = min_quadratic_on_circle(r00, r01, r11, gv);
-                let val = m.value + w - excl;
-                if best.as_ref().map_or(true, |(bv, _)| val < *bv) {
-                    best = Some((val, GTransform::new(i, j, m.x[0], m.x[1], kind)));
-                }
+    for j in (i + 1)..n {
+        // cross-pair comparison needs the absolute objective up to the
+        // shared ‖A−B‖² constant
+        let excl = excluded_base(a, b, i, j);
+        for kind in [GKind::Rotation, GKind::Reflection] {
+            let (r00, r01, r11, gv, w) = quad_fit(a, b, i, j, kind);
+            let m = min_quadratic_on_circle(r00, r01, r11, gv);
+            let val = m.value + w - excl;
+            if best.as_ref().map_or(true, |(bv, _)| val < *bv) {
+                best = Some((val, GTransform::new(i, j, m.x[0], m.x[1], kind)));
             }
+        }
+    }
+    best
+}
+
+/// Full Theorem-2 update: search all pairs `(i, j)` and both kinds
+/// (`O(n³)` per factor — the paper's stated complexity). Rows are scored
+/// in parallel; the sequential ascending reduction with a strict `<`
+/// keeps the lowest-index winner on ties, exactly like the sequential
+/// row-major scan.
+fn best_update_all_pairs(a: &Mat, b: &Mat, exec: &FactorExec) -> GTransform {
+    let n = a.rows();
+    let mut per_row: Vec<Option<(f64, GTransform)>> = vec![None; n.saturating_sub(1)];
+    fill_slots(exec, n * n, &mut per_row, |i| best_update_row(a, b, i));
+    let mut best: Option<(f64, GTransform)> = None;
+    for cand in per_row.into_iter().flatten() {
+        if best.as_ref().map_or(true, |(bv, _)| cand.0 < *bv) {
+            best = Some(cand);
         }
     }
     best.unwrap().1
@@ -828,7 +1169,7 @@ mod tests {
             let opts = SymOptions {
                 spectrum: SpectrumRule::Original(e.values.clone()),
                 max_sweeps: 30,
-                eps: 1e-14,
+                eps: 0.0,
                 ..Default::default()
             };
             SymFactorizer::new(&s, g, opts).run().relative_error(&s)
@@ -901,5 +1242,241 @@ mod tests {
         .run();
         // with a huge eps the loop must stop after the first sweep
         assert_eq!(f.sweeps_run, 1);
+    }
+
+    #[test]
+    fn stopping_rule_is_scale_invariant() {
+        // the criterion is normalized by ‖S‖²_F: factorizing S and 1e6·S
+        // must stop after the same number of sweeps with the same
+        // relative error
+        let s = random_sym(12, 216);
+        let big = {
+            let mut b = s.clone();
+            b.scale(1e6);
+            b
+        };
+        let opts = SymOptions { max_sweeps: 12, eps: 1e-4, ..Default::default() };
+        let f1 = SymFactorizer::new(&s, 30, opts.clone()).run();
+        let f2 = SymFactorizer::new(&big, 30, opts).run();
+        assert_eq!(f1.sweeps_run, f2.sweeps_run, "sweep counts diverged under scaling");
+        assert!(
+            (f1.relative_error(&s) - f2.relative_error(&big)).abs() < 1e-6,
+            "relative errors diverged: {} vs {}",
+            f1.relative_error(&s),
+            f2.relative_error(&big)
+        );
+    }
+
+    #[test]
+    fn make_distinct_enforces_postcondition() {
+        let distinct = |d: &[f64]| {
+            let mut sorted = d.to_vec();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            sorted.windows(2).all(|w| w[0] != w[1])
+        };
+        let cases: Vec<Vec<f64>> = vec![
+            // constant diagonal (Remark-1 worst case)
+            vec![3.0; 16],
+            // Laplacian-style spectra with repeated degrees
+            vec![2.0, 2.0, 2.0, 3.0, 3.0, 1.0, 1.0, 4.0, 2.0, 3.0],
+            // entries already spaced near the tilt quantum: the linear
+            // tilt scale·1e-9·(i+1) collides with other entries
+            // ([2e-9, 0, 0] + tilt → [3e-9, 2e-9, 3e-9], still tied)
+            vec![2e-9, 0.0, 0.0],
+            vec![0.0, 1e-9, 2e-9, 0.0, 1e-9, 3e-9],
+            // large scale with exact duplicates
+            vec![1e12, 1e12, -1e12, 0.0, 0.0],
+            // mix of near-1e-9·scale spacing and duplicates
+            (0..12).map(|i| 1.0 + ((i / 2) as f64) * 1e-9).collect(),
+        ];
+        for (k, case) in cases.into_iter().enumerate() {
+            let mut d = case.clone();
+            make_distinct(&mut d);
+            assert!(distinct(&d), "case {k}: duplicates survive: {d:?}");
+            let scale = case.iter().fold(0.0f64, |m, v| m.max(v.abs())).max(1.0);
+            for (a, b) in d.iter().zip(case.iter()) {
+                assert!(
+                    (a - b).abs() <= 1e-4 * scale,
+                    "case {k}: tilt too large ({b} → {a})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn score_table_incremental_matches_full_rescan() {
+        // the invariant the parallel port preserves (and resume relies
+        // on): after any sequence of conjugations — including repeated
+        // touches of the same (p, q) — the incrementally-maintained
+        // table equals a from-scratch rescan *bitwise*, lowest-index
+        // ties included.
+        let exec = FactorExec::serial();
+        for &dynamic in &[true, false] {
+            let n = 12;
+            let mut w = random_sym(n, 217);
+            let mut spectrum = initial_spectrum(&w, &SpectrumRule::Update);
+            let mut rng = Rng64::new(218);
+            let mut table = ScoreTable::new(&w, &spectrum, dynamic, &exec);
+            let mut last = (0usize, 1usize);
+            for step in 0..300 {
+                let (p, q) = if step % 7 == 3 {
+                    last // repeated touch of the same pair
+                } else {
+                    let p = rng.below(n - 1);
+                    (p, p + 1 + rng.below(n - 1 - p))
+                };
+                last = (p, q);
+                let th = rng.uniform_in(0.0, std::f64::consts::TAU);
+                let t = GTransform::new(p, q, th.cos(), th.sin(), GKind::Rotation);
+                t.conjugate_t(&mut w);
+                if dynamic {
+                    spectrum[p] = w[(p, p)];
+                    spectrum[q] = w[(q, q)];
+                }
+                table.update_after(&w, &spectrum, p, q, &exec);
+                let fresh = ScoreTable::new(&w, &spectrum, dynamic, &exec);
+                assert_eq!(
+                    table.best_gain, fresh.best_gain,
+                    "gains diverged at step {step} (dynamic={dynamic})"
+                );
+                assert_eq!(
+                    table.best_j, fresh.best_j,
+                    "argmax diverged at step {step} (dynamic={dynamic})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn score_table_ties_resolve_to_lowest_index() {
+        // adversarial exact ties: repeated diagonal + spectrum equal to
+        // it makes every pair gain exactly 0 in dynamic mode
+        let exec = FactorExec::serial();
+        let w0 = Mat::from_diag(&[1.0, 1.0, 1.0, 2.0, 2.0, 3.0]);
+        let spectrum = w0.diag();
+        let mut w = w0.clone();
+        let mut table = ScoreTable::new(&w, &spectrum, true, &exec);
+        for &(p, q) in &[(0usize, 3usize), (1, 4), (0, 3), (2, 5), (1, 2)] {
+            let t = GTransform::new(p, q, 0.8, 0.6, GKind::Rotation);
+            t.conjugate_t(&mut w);
+            table.update_after(&w, &spectrum, p, q, &exec);
+            let fresh = ScoreTable::new(&w, &spectrum, true, &exec);
+            assert_eq!(table.best_gain, fresh.best_gain);
+            assert_eq!(table.best_j, fresh.best_j, "tie broke to a higher index");
+        }
+    }
+
+    #[test]
+    fn tied_full_update_candidate_keeps_incumbent() {
+        // S diagonal with a repeated leading block and spectrum == diag:
+        // every candidate (and the incumbent) reaches objective change
+        // exactly 0, so only non-strict acceptance would swap the factor
+        let s = Mat::from_diag(&[2.0, 2.0, 5.0, 7.0]);
+        let spectrum = vec![2.0, 2.0, 5.0, 7.0];
+        let old = GTransform::new(0, 1, 0.6, 0.8, GKind::Rotation);
+        let mut chain = GChain { n: 4, transforms: vec![old] };
+        sweep_update(&s, &mut chain, &spectrum, true, &FactorExec::serial());
+        assert_eq!(
+            chain.transforms[0], old,
+            "a tied candidate must not displace the incumbent"
+        );
+    }
+
+    #[test]
+    fn parallel_scans_match_serial_bitwise() {
+        // conformance at the unit level: table build, incremental
+        // rescans and the full-update candidate sweep agree bitwise with
+        // the serial scan at every thread count (integration tests cover
+        // the end-to-end chain equality)
+        let execs = [
+            FactorExec { threads: 2, min_work: 0 },
+            FactorExec { threads: 4, min_work: 0 },
+            FactorExec { threads: 16, min_work: 0 },
+        ];
+        let serial = FactorExec::serial();
+        let s = random_sym(16, 221);
+        let spectrum = initial_spectrum(&s, &SpectrumRule::Update);
+        for exec in &execs {
+            let a = ScoreTable::new(&s, &spectrum, true, &serial);
+            let b = ScoreTable::new(&s, &spectrum, true, exec);
+            assert_eq!(a.best_gain, b.best_gain);
+            assert_eq!(a.best_j, b.best_j);
+        }
+        // a/b pair from a short factorization for the candidate sweep
+        let mut spec = spectrum.clone();
+        let (chain, _) = init_gchain(&s, &mut spec, 10, true);
+        let mut a = s.clone();
+        for t in chain.transforms.iter().skip(1).rev() {
+            t.conjugate_t(&mut a);
+        }
+        let b = Mat::from_diag(&spec);
+        let want = best_update_all_pairs(&a, &b, &serial);
+        for exec in &execs {
+            assert_eq!(best_update_all_pairs(&a, &b, exec), want);
+        }
+        // end-to-end: full runs emit identical chains
+        let mk = |exec: FactorExec| {
+            let opts = SymOptions { max_sweeps: 3, eps: 0.0, exec, ..Default::default() };
+            SymFactorizer::new(&s, 24, opts).run()
+        };
+        let want_run = mk(serial);
+        for exec in execs {
+            let got = mk(exec);
+            assert_eq!(got.chain, want_run.chain, "{exec:?}");
+            assert_eq!(got.spectrum, want_run.spectrum, "{exec:?}");
+            assert_eq!(got.objective_trace, want_run.objective_trace, "{exec:?}");
+        }
+    }
+
+    #[test]
+    fn resume_from_any_checkpoint_matches_uninterrupted() {
+        let s = random_sym(10, 220);
+        let opts = SymOptions { max_sweeps: 3, eps: 0.0, ..Default::default() };
+        let full = SymFactorizer::new(&s, 18, opts.clone()).run();
+        let mut caps: Vec<SymCheckpoint> = Vec::new();
+        {
+            let mut ctrl = SymRunControl {
+                checkpoint_every: 4,
+                halt_after: None,
+                on_checkpoint: Some(Box::new(|ck: &SymCheckpoint| caps.push(ck.clone()))),
+            };
+            let replay = SymFactorizer::new(&s, 18, opts.clone()).run_controlled(&mut ctrl);
+            assert_eq!(replay.chain, full.chain);
+        }
+        assert!(caps.len() >= 3, "expected several checkpoints, got {}", caps.len());
+        assert!(caps.iter().any(|c| c.in_init), "want an init-phase checkpoint");
+        assert!(caps.iter().any(|c| !c.in_init), "want a sweep-phase checkpoint");
+        for ck in caps {
+            let resumed =
+                SymFactorizer::new(&s, 18, opts.clone()).resume(ck, &mut SymRunControl::default());
+            assert_eq!(resumed.chain, full.chain);
+            assert_eq!(resumed.spectrum, full.spectrum);
+            assert_eq!(resumed.objective_trace, full.objective_trace);
+            assert_eq!(resumed.sweeps_run, full.sweeps_run);
+            assert!(!resumed.halted);
+        }
+    }
+
+    #[test]
+    fn halt_after_emits_resumable_checkpoint() {
+        let s = random_sym(10, 222);
+        let opts = SymOptions { max_sweeps: 2, eps: 0.0, ..Default::default() };
+        let full = SymFactorizer::new(&s, 16, opts.clone()).run();
+        let mut last: Option<SymCheckpoint> = None;
+        let halted = {
+            let mut ctrl = SymRunControl {
+                checkpoint_every: 6,
+                halt_after: Some(9), // off-cadence: exercises the emit-on-halt path
+                on_checkpoint: Some(Box::new(|ck: &SymCheckpoint| last = Some(ck.clone()))),
+            };
+            SymFactorizer::new(&s, 16, opts.clone()).run_controlled(&mut ctrl)
+        };
+        assert!(halted.halted);
+        let ck = last.expect("halt must emit a checkpoint");
+        assert_eq!(ck.steps_done, 9);
+        let resumed =
+            SymFactorizer::new(&s, 16, opts).resume(ck, &mut SymRunControl::default());
+        assert_eq!(resumed.chain, full.chain);
+        assert_eq!(resumed.objective_trace, full.objective_trace);
     }
 }

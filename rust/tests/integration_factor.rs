@@ -5,7 +5,8 @@
 
 use fastes::baselines;
 use fastes::factor::{
-    oracle, GeneralFactorizer, GeneralOptions, SpectrumRule, SymFactorizer, SymOptions,
+    oracle, FactorExec, GeneralFactorizer, GeneralOptions, SpectrumRule, SymCheckpoint,
+    SymFactorizer, SymOptions, SymRunControl,
 };
 use fastes::graphs;
 use fastes::linalg::{eigh, Mat, Rng64};
@@ -151,6 +152,72 @@ fn gchain_apply_agrees_with_reconstruction_at_scale() {
     for (a, b) in dense.iter().zip(fast.iter()) {
         assert!((a - b).abs() < 1e-8);
     }
+}
+
+#[test]
+fn parallel_factorization_matches_serial_bitwise_on_graphs() {
+    // the tentpole determinism guarantee at integration scale: the
+    // parallel factorizer must emit a chain (and plan artifact)
+    // bitwise-identical to the sequential one at any thread count
+    let mut rng = Rng64::new(912);
+    let graph = graphs::community(48, &mut rng);
+    let l = graph.laplacian();
+    let g = 48 * 4;
+    let sopts = SymOptions { exec: FactorExec::serial(), ..Default::default() };
+    let f0 = SymFactorizer::new(&l, g, sopts).run();
+    for threads in [2, 8] {
+        let exec = FactorExec { threads, min_work: 0 };
+        let f = SymFactorizer::new(&l, g, SymOptions { exec, ..Default::default() }).run();
+        assert_eq!(f.chain, f0.chain, "sym chain must not depend on thread count");
+        assert_eq!(f.spectrum, f0.spectrum);
+        assert_eq!(f.objective_trace, f0.objective_trace);
+        assert_eq!(
+            f.plan().content_checksum(),
+            f0.plan().content_checksum(),
+            "plan artifact checksum must be thread-count invariant"
+        );
+    }
+    let d = graphs::erdos_renyi(32, 0.3, &mut rng).randomly_directed(&mut rng);
+    let c = d.laplacian();
+    let m = 32 * 4;
+    let gopts = GeneralOptions { exec: FactorExec::serial(), ..Default::default() };
+    let g0 = GeneralFactorizer::new(&c, m, gopts).run();
+    for threads in [2, 8] {
+        let exec = FactorExec { threads, min_work: 0 };
+        let f = GeneralFactorizer::new(&c, m, GeneralOptions { exec, ..Default::default() }).run();
+        assert_eq!(f.chain, g0.chain, "gen chain must not depend on thread count");
+        assert_eq!(f.spectrum, g0.spectrum);
+        assert_eq!(f.objective_trace, g0.objective_trace);
+        assert_eq!(f.plan().content_checksum(), g0.plan().content_checksum());
+    }
+}
+
+#[test]
+fn resume_reproduces_the_uninterrupted_plan_checksum() {
+    let mut rng = Rng64::new(913);
+    let graph = graphs::sensor(24, &mut rng);
+    let l = graph.laplacian();
+    let g = 24 * 4;
+    let opts = SymOptions { max_sweeps: 2, eps: 0.0, ..Default::default() };
+    let full = SymFactorizer::new(&l, g, opts.clone()).run();
+
+    // halt mid-init, then resume from the last emitted checkpoint
+    let mut last: Option<SymCheckpoint> = None;
+    let mut ctrl = SymRunControl {
+        checkpoint_every: 10,
+        halt_after: Some(30),
+        on_checkpoint: Some(Box::new(|ck: &SymCheckpoint| last = Some(ck.clone()))),
+    };
+    let halted = SymFactorizer::new(&l, g, opts.clone()).run_controlled(&mut ctrl);
+    drop(ctrl);
+    assert!(halted.halted, "halt_after must stop the run early");
+    let ck = last.expect("halt emits a checkpoint");
+    let resumed = SymFactorizer::new(&l, g, opts).resume(ck, &mut SymRunControl::default());
+    assert!(!resumed.halted);
+    assert_eq!(resumed.chain, full.chain);
+    assert_eq!(resumed.spectrum, full.spectrum);
+    assert_eq!(resumed.objective_trace, full.objective_trace);
+    assert_eq!(resumed.plan().content_checksum(), full.plan().content_checksum());
 }
 
 #[test]
