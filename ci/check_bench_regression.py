@@ -27,7 +27,12 @@ import sys
 
 
 def check_factor(bench, snap, calibrated, limit):
-    """Gate a BENCH_factor.json: ns/step per (kind, n, threads) row."""
+    """Gate a BENCH_factor.json: ns/step per (kind, n, threads) row.
+
+    Prints the envelope actually enforced per row (baseline x limit) so
+    a CI log shows how much headroom each measurement had, not just the
+    pass/fail verdict.
+    """
     baseline = snap.get("factor_ns_per_step", {})
     failures = []
     for row in bench["results"]:
@@ -35,13 +40,15 @@ def check_factor(bench, snap, calibrated, limit):
         now = float(row["ns_per_step"])
         base = baseline.get(key)
         if base is None:
-            print(f"{key}: {now:.1f} ns/step (no baseline — snapshot uncalibrated)")
+            print(f"{key}: {now:.1f} ns/step (no baseline for this key — advisory)")
             continue
+        envelope = float(base) * limit
         ratio = now / float(base)
         status = "OK" if ratio <= limit else "REGRESSION"
         print(
             f"{key}: {now:.1f} ns/step vs baseline {float(base):.1f} "
-            f"({ratio:.2f}x, limit {limit:.2f}x) {status}"
+            f"— envelope <= {envelope:.1f} ns/step ({limit:.2f}x), "
+            f"measured {ratio:.2f}x, headroom {envelope / now:.1f}x {status}"
         )
         if ratio > limit:
             failures.append(key)

@@ -1,0 +1,156 @@
+#!/usr/bin/env python3
+"""Loopback smoke test for the hardened serving edge (`fastes serve --listen`).
+
+Usage: serve_smoke.py --n N -- <fastes-binary> serve --plan X.fastplan \
+           --listen 127.0.0.1:0 [more serve flags]
+
+Launches the server command (the fastes binary directly — not through
+`cargo run`, so the SIGTERM below reaches the server and the exit code
+is the server's), parses the bound port from its "listening on" line,
+then exercises the wire protocol end to end:
+
+  1. `metrics` answers on a fresh connection
+  2. `forward` on a deterministic signal returns an n-vector
+  3. `adjoint` of that reply round-trips back to the input (the G-chain
+     is orthonormal, so synthesis(analysis(x)) ~= x)
+  4. `metrics` now reports both transforms completed and zero errors
+  5. SIGTERM drains gracefully: the process prints "drained:" and
+     exits 0 with every in-flight reply already delivered
+
+Any hang is bounded by socket/process timeouts; any protocol or
+drain failure exits non-zero with a diagnostic.
+"""
+
+import json
+import os
+import signal
+import socket
+import struct
+import subprocess
+import sys
+import threading
+import time
+
+TIMEOUT = 120.0  # generous: debug builds on loaded CI runners
+
+
+def send_frame(sock, obj):
+    payload = json.dumps(obj).encode()
+    sock.sendall(struct.pack("<I", len(payload)) + payload)
+
+
+def recv_exact(sock, count):
+    buf = b""
+    while len(buf) < count:
+        chunk = sock.recv(count - len(buf))
+        if not chunk:
+            raise ConnectionError(f"server closed mid-frame ({len(buf)}/{count} bytes)")
+        buf += chunk
+    return buf
+
+
+def recv_frame(sock):
+    (length,) = struct.unpack("<I", recv_exact(sock, 4))
+    return json.loads(recv_exact(sock, length))
+
+
+def request(sock, obj):
+    send_frame(sock, obj)
+    return recv_frame(sock)
+
+
+def fail(msg):
+    print(f"FAIL: {msg}")
+    sys.exit(1)
+
+
+def main():
+    args = sys.argv[1:]
+    if len(args) < 3 or args[0] != "--n" or "--" not in args:
+        print(__doc__)
+        return 2
+    n = int(args[1])
+    cmd = args[args.index("--") + 1 :]
+
+    proc = subprocess.Popen(
+        cmd, stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True
+    )
+    lines = []
+
+    def drain_stdout():
+        for line in proc.stdout:
+            print(f"  server| {line}", end="")
+            lines.append(line)
+
+    reader = threading.Thread(target=drain_stdout, daemon=True)
+    reader.start()
+
+    try:
+        # wait for the bound-address line
+        deadline = time.monotonic() + TIMEOUT
+        addr = None
+        while time.monotonic() < deadline and addr is None:
+            for line in list(lines):
+                if line.startswith("listening on "):
+                    addr = line.split()[2]
+                    break
+            if proc.poll() is not None:
+                fail(f"server exited early with {proc.returncode}")
+            time.sleep(0.05)
+        if addr is None:
+            fail("server never printed its 'listening on' line")
+        host, port = addr.rsplit(":", 1)
+        print(f"serve smoke: connected to {host}:{port}, n={n}")
+
+        sock = socket.create_connection((host, int(port)), timeout=TIMEOUT)
+        sock.settimeout(TIMEOUT)
+
+        m = request(sock, {"op": "metrics"})
+        if not m.get("ok"):
+            fail(f"metrics refused: {m}")
+
+        x = [((7 * i + 3) % 17 - 8) / 8.0 for i in range(n)]
+        fwd = request(sock, {"op": "forward", "signal": x})
+        if not fwd.get("ok"):
+            fail(f"forward refused: {fwd}")
+        y = fwd["signal"]
+        if len(y) != n:
+            fail(f"forward returned {len(y)} coefficients, want {n}")
+
+        adj = request(sock, {"op": "adjoint", "signal": y})
+        if not adj.get("ok"):
+            fail(f"adjoint refused: {adj}")
+        z = adj["signal"]
+        err = max(abs(a - b) for a, b in zip(x, z))
+        if err > 1e-3:
+            fail(f"adjoint(forward(x)) diverged from x: max |diff| = {err}")
+        print(f"serve smoke: round trip max |diff| = {err:.2e}")
+
+        m = request(sock, {"op": "metrics"})["metrics"]
+        if m["completed"] < 2:
+            fail(f"metrics report {m['completed']} completed, want >= 2")
+        if m["errors"] != 0:
+            fail(f"metrics report {m['errors']} errors")
+        sock.close()
+
+        # graceful drain: SIGTERM, clean exit, "drained:" in the log
+        proc.send_signal(signal.SIGTERM)
+        try:
+            code = proc.wait(timeout=TIMEOUT)
+        except subprocess.TimeoutExpired:
+            proc.kill()
+            fail("server did not drain within the timeout after SIGTERM")
+        reader.join(timeout=10)
+        if code != 0:
+            fail(f"server exited {code} after SIGTERM, want 0")
+        if not any(line.startswith("drained:") for line in lines):
+            fail("server never printed its 'drained:' summary")
+        print("serve smoke: SIGTERM drained cleanly, exit 0")
+        return 0
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+
+
+if __name__ == "__main__":
+    sys.exit(main())

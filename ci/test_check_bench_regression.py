@@ -18,7 +18,9 @@ dispatched on the documents' top-level `bench` field) —
   * uncalibrated factor snapshot                -> advisory (pass)
   * calibrated + ns/step regression             -> fail
   * calibrated + within the limit               -> pass
+  * calibrated + key absent from the snapshot   -> advisory (pass)
   * artifact/snapshot kind mismatch             -> fail
+  * every gated row prints its enforced envelope (baseline x limit)
 
 Run: python3 ci/test_check_bench_regression.py
 """
@@ -196,6 +198,20 @@ def main() -> int:
             snapshot(),
             1,
             "do not match",
+        ),
+        (
+            "factor: the enforced envelope is printed per gated row",
+            factor_bench(ns=110.0),
+            factor_snapshot(calibrated=True, baseline={"sym/64/1": 100.0}),
+            0,
+            "envelope <= 150.0 ns/step",
+        ),
+        (
+            "factor: calibrated snapshot missing a key stays advisory",
+            factor_bench(ns=9e9),
+            factor_snapshot(calibrated=True, baseline={"gen/32/4": 100.0}),
+            0,
+            "no baseline for this key",
         ),
     ]
     failed = 0

@@ -19,7 +19,8 @@ use crate::linalg::{eigh, Mat, Rng64};
 use crate::plan::{Direction, ExecPolicy, FastOperator, Plan};
 use crate::runtime::autotune::{self, TuneEffort, TuneProfile, TunedConfig, WallTimer};
 use crate::serve::{
-    Backend, Coordinator, NativeGftBackend, PjrtGftBackend, ServeConfig, TransformDirection,
+    net, Backend, Coordinator, NativeGftBackend, PjrtGftBackend, PlanRegistry, ServeConfig,
+    TransformDirection,
 };
 use crate::transforms::{simd, ExecConfig, GChain, KernelIsa, SignalBlock};
 
@@ -566,6 +567,64 @@ pub fn serve(a: &Args) -> crate::Result<()> {
     };
 
     let config = ServeConfig { max_batch: batch, ..Default::default() };
+
+    // `--listen ADDR`: run the hardened TCP front-end (serve/net.rs)
+    // instead of the in-process self-driving load loop
+    let listen_addr = a.get_str("listen", "");
+    if !listen_addr.is_empty() {
+        if backend_kind != "native" {
+            bail!("--listen currently serves --backend native only");
+        }
+        let registry_cap: usize = a.get("registry-cap", 64)?;
+        let plan_dir = a.get_str("plan-dir", "");
+        let search_dirs =
+            if plan_dir.is_empty() { Vec::new() } else { vec![PathBuf::from(&plan_dir)] };
+        let registry = Arc::new(PlanRegistry::with_search_dirs(registry_cap, search_dirs));
+        let default_key = registry.install_default(Arc::clone(&plan));
+        let p = Arc::clone(&plan);
+        let pol = policy.clone();
+        let tuned = tuned_for_backend;
+        let coordinator = Coordinator::start_with_registry(
+            move || {
+                let backend = match tuned {
+                    Some((tc, swept)) => NativeGftBackend::with_tuned(
+                        p,
+                        TransformDirection::Forward,
+                        batch,
+                        None,
+                        &tc,
+                        swept,
+                    )?,
+                    None => NativeGftBackend::with_policy(
+                        p,
+                        TransformDirection::Forward,
+                        batch,
+                        None,
+                        pol,
+                    )?,
+                };
+                Ok(Box::new(backend) as Box<dyn Backend>)
+            },
+            config,
+            Some(Arc::clone(&registry)),
+        )?;
+        let listener = std::net::TcpListener::bind(&listen_addr)
+            .map_err(|e| anyhow::anyhow!("binding {listen_addr}: {e}"))?;
+        let local = listener.local_addr()?;
+        // the smoke harness parses this line for the bound port, so it
+        // must hit the pipe before the first request arrives
+        println!(
+            "listening on {local} (default plan {default_key:016x}, registry capacity {registry_cap})"
+        );
+        use std::io::Write as _;
+        std::io::stdout().flush().ok();
+        net::install_termination_handler();
+        let shutdown = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let m = net::serve(listener, coordinator, net::NetServerOptions::default(), shutdown)?;
+        println!("drained: {}", m.line());
+        return Ok(());
+    }
+
     let coordinator = match backend_kind.as_str() {
         "native" => {
             let p = Arc::clone(&plan);

@@ -163,6 +163,14 @@ COMMANDS
                        sweep — zero startup sweeps)
                        (tuning flags reach the selected ExecPolicy engine;
                        --scheduled is the legacy alias for --exec spawn)
+                       [--listen ADDR]  (hardened TCP front-end speaking
+                       the length-prefixed JSON protocol — forward/
+                       adjoint/metrics/upload_plan — with deadlines,
+                       priorities, typed rejections and graceful drain
+                       on SIGTERM; native backend only)
+                       [--registry-cap N]  (resident-plan LRU capacity,
+                       default 64) [--plan-dir DIR]  (load
+                       {checksum:016x}.fastplan artifacts on demand)
   schedule             level-schedule a chain, report layers/depth/
                        superstages and time sequential vs spawn vs pooled
                        apply [--n N] [--alpha A] [--batch B] [--threads T]

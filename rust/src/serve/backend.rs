@@ -31,6 +31,27 @@ pub trait Backend {
     /// Transform the block in place (columns beyond the live batch are
     /// padding and may hold anything).
     fn forward(&mut self, block: &mut SignalBlock) -> crate::Result<()>;
+    /// Apply the adjoint of [`Backend::forward`] in place (the synthesis
+    /// direction when `forward` is the analysis GFT). Backends that only
+    /// compile one direction keep the default, which answers with a typed
+    /// error instead of wrong numbers.
+    fn adjoint(&mut self, block: &mut SignalBlock) -> crate::Result<()> {
+        let _ = block;
+        bail!("backend {} does not serve the adjoint direction", self.name())
+    }
+    /// Execute a registry-routed plan (resolved per request by the
+    /// coordinator) instead of the backend's own fixed route. The default
+    /// rejects routing — only backends that can execute an arbitrary
+    /// [`Plan`] (the native one) override it.
+    fn apply_routed(
+        &mut self,
+        plan: &Arc<Plan>,
+        op: super::JobOp,
+        block: &mut SignalBlock,
+    ) -> crate::Result<()> {
+        let _ = (plan, op, block);
+        bail!("backend {} cannot serve registry-routed plans", self.name())
+    }
     /// Diagnostic name.
     fn name(&self) -> &str;
     /// SIMD kernel ISA the backend's applies dispatch to (`"n/a"` for
@@ -212,6 +233,41 @@ impl Backend for NativeGftBackend {
                 self.plan.apply(block, Direction::Forward, &self.policy)
             }
         }
+    }
+
+    fn adjoint(&mut self, block: &mut SignalBlock) -> crate::Result<()> {
+        match self.direction {
+            // forward() is the analysis GFT, so the adjoint is synthesis
+            TransformDirection::Forward => {
+                self.plan.apply(block, Direction::Forward, &self.policy)
+            }
+            TransformDirection::Inverse => {
+                self.plan.apply(block, Direction::Adjoint, &self.policy)
+            }
+            // Ū diag(h) Ūᵀ is symmetric: the filter is its own adjoint
+            TransformDirection::Filter => self.forward(block),
+        }
+    }
+
+    fn apply_routed(
+        &mut self,
+        plan: &Arc<Plan>,
+        op: super::JobOp,
+        block: &mut SignalBlock,
+    ) -> crate::Result<()> {
+        if plan.kind() != ChainKind::G {
+            bail!("the GFT backend serves G-chain plans (got a T-chain plan)");
+        }
+        if plan.n() != block.n {
+            bail!("routed plan n {} != block n {}", plan.n(), block.n);
+        }
+        let dir = match op {
+            // analysis x̂ = Ūᵀ x
+            super::JobOp::Forward => Direction::Adjoint,
+            // synthesis x = Ū x̂
+            super::JobOp::Adjoint => Direction::Forward,
+        };
+        plan.apply(block, dir, &self.policy)
     }
 
     fn name(&self) -> &str {

@@ -1,0 +1,289 @@
+//! Deterministic fault injection for the serving tier.
+//!
+//! A **failpoint** is a named site in the serving code (the backend
+//! execute step, the registry's artifact read, …) that asks this module
+//! whether to misbehave before doing its real work. Faults are inert by
+//! default: until something arms the layer, [`fire`] is a single relaxed
+//! atomic load. Tests arm it programmatically ([`install`]); CI and
+//! operators arm it through the `FASTES_FAULTS` environment variable,
+//! parsed once on first use.
+//!
+//! Determinism: each site keeps an exact hit counter, and a
+//! [`FaultPlan`] names the hits it fires on (`from`, then every
+//! `every`-th hit, at most `limit` times). There is no randomness — a
+//! chaos test that installs `panic@1` always panics the second batch and
+//! only that batch, so its assertions are exact, not probabilistic.
+//!
+//! `FASTES_FAULTS` syntax: `;`-separated `site=action` clauses, where
+//! `action` is `sleep:MS`, `panic`, `error:MSG`, or `trunc:BYTES`,
+//! optionally followed by `@FROM` (first firing hit, default 0),
+//! `+EVERY` (repeat period, default: fire once), and `xLIMIT` (max
+//! fires). Example:
+//!
+//! ```text
+//! FASTES_FAULTS="serve.backend=sleep:20@0+1;registry.load=trunc:40@0"
+//! ```
+//!
+//! Sites currently wired: `serve.backend` (fires before every batch
+//! execute — sleep/panic/error), `registry.load` (fires on every
+//! registry artifact read — trunc cuts the bytes before decoding).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, Once, OnceLock};
+
+use anyhow::bail;
+
+/// What a firing failpoint does to its site.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Stall the site for this many milliseconds (slow backend).
+    SleepMs(u64),
+    /// Panic at the site (worker panic containment path).
+    Panic,
+    /// Fail the site with this error message.
+    Error(String),
+    /// Truncate the site's byte buffer to this length (artifact
+    /// corruption path; ignored by sites that carry no bytes).
+    Truncate(usize),
+}
+
+/// When a failpoint fires: hit `from`, then every `every`-th hit after
+/// it (`every == 0` means fire once), at most `limit` times.
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    /// The action taken on firing hits.
+    pub action: FaultAction,
+    /// First (0-based) hit that fires.
+    pub from: u64,
+    /// Repeat period after `from`; 0 = fire only at `from`.
+    pub every: u64,
+    /// Maximum number of firings (`u64::MAX` = unlimited).
+    pub limit: u64,
+}
+
+impl FaultPlan {
+    /// Fire on every hit, unlimited.
+    pub fn always(action: FaultAction) -> Self {
+        FaultPlan { action, from: 0, every: 1, limit: u64::MAX }
+    }
+
+    /// Fire exactly once, on 0-based hit `at`.
+    pub fn once_at(action: FaultAction, at: u64) -> Self {
+        FaultPlan { action, from: at, every: 0, limit: 1 }
+    }
+
+    fn fires_on(&self, hit: u64) -> bool {
+        if hit < self.from {
+            return false;
+        }
+        let k = hit - self.from;
+        if self.every == 0 {
+            k == 0
+        } else {
+            k % self.every == 0
+        }
+    }
+}
+
+struct SiteState {
+    plan: FaultPlan,
+    hits: u64,
+    fired: u64,
+}
+
+static ARMED: AtomicBool = AtomicBool::new(false);
+static ENV_INIT: Once = Once::new();
+
+fn sites() -> &'static Mutex<HashMap<String, SiteState>> {
+    static SITES: OnceLock<Mutex<HashMap<String, SiteState>>> = OnceLock::new();
+    SITES.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+fn lock_sites() -> std::sync::MutexGuard<'static, HashMap<String, SiteState>> {
+    // a panic while holding the lock (impossible today, but this is the
+    // chaos layer) must not wedge every later failpoint check
+    sites().lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Install (or replace) the fault plan for a site and arm the layer.
+pub fn install(site: &str, plan: FaultPlan) {
+    lock_sites().insert(site.to_string(), SiteState { plan, hits: 0, fired: 0 });
+    ARMED.store(true, Ordering::SeqCst);
+}
+
+/// Remove every installed fault and disarm the layer (hit counters are
+/// dropped too). Chaos tests call this on entry and exit so faults never
+/// leak across tests.
+pub fn clear() {
+    lock_sites().clear();
+    ARMED.store(false, Ordering::SeqCst);
+}
+
+/// Number of times `site`'s fault actually fired (0 when not installed).
+pub fn fired_count(site: &str) -> u64 {
+    lock_sites().get(site).map_or(0, |s| s.fired)
+}
+
+/// Ask whether the named failpoint fires on this hit. Counts the hit
+/// either way. The near-universal disarmed case is one atomic load.
+pub fn fire(site: &str) -> Option<FaultAction> {
+    ENV_INIT.call_once(|| {
+        if let Ok(spec) = std::env::var("FASTES_FAULTS") {
+            if !spec.trim().is_empty() {
+                match install_spec(&spec) {
+                    Ok(n) => eprintln!("fastes: FASTES_FAULTS armed {n} failpoint(s)"),
+                    Err(e) => eprintln!("fastes: ignoring malformed FASTES_FAULTS: {e:#}"),
+                }
+            }
+        }
+    });
+    if !ARMED.load(Ordering::Relaxed) {
+        return None;
+    }
+    let mut g = lock_sites();
+    let st = g.get_mut(site)?;
+    let hit = st.hits;
+    st.hits += 1;
+    if st.fired < st.plan.limit && st.plan.fires_on(hit) {
+        st.fired += 1;
+        return Some(st.plan.action.clone());
+    }
+    None
+}
+
+/// Parse a `FASTES_FAULTS` spec and install every clause; returns how
+/// many failpoints were installed.
+pub fn install_spec(spec: &str) -> crate::Result<usize> {
+    let mut installed = 0;
+    for clause in spec.split(';') {
+        let clause = clause.trim();
+        if clause.is_empty() {
+            continue;
+        }
+        let (site, rhs) = clause
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("fault clause {clause:?} has no '='"))?;
+        install(site.trim(), parse_plan(rhs.trim())?);
+        installed += 1;
+    }
+    Ok(installed)
+}
+
+fn parse_plan(rhs: &str) -> crate::Result<FaultPlan> {
+    // action[:arg][@FROM][+EVERY][xLIMIT] — schedule suffixes may come in
+    // any order after the action
+    let mut action_part = rhs;
+    let mut from = 0u64;
+    let mut every = 0u64;
+    let mut limit = 1u64;
+    let mut explicit_limit = false;
+    while let Some(at) = action_part.rfind(['@', '+', 'x']) {
+        let (head, tail) = action_part.split_at(at);
+        let num = &tail[1..];
+        let Ok(v) = num.parse::<u64>() else {
+            break; // not a schedule suffix (e.g. the 'x' inside a message)
+        };
+        match tail.as_bytes()[0] {
+            b'@' => from = v,
+            b'+' => every = v,
+            _ => {
+                limit = v;
+                explicit_limit = true;
+            }
+        }
+        action_part = head;
+    }
+    if every > 0 && !explicit_limit {
+        limit = u64::MAX; // periodic faults default to unlimited firings
+    }
+    let (name, arg) = match action_part.split_once(':') {
+        Some((n, a)) => (n, Some(a)),
+        None => (action_part, None),
+    };
+    let action = match (name, arg) {
+        ("sleep", Some(ms)) => FaultAction::SleepMs(ms.parse()?),
+        ("panic", None) => FaultAction::Panic,
+        ("error", Some(msg)) => FaultAction::Error(msg.to_string()),
+        ("error", None) => FaultAction::Error("injected fault".to_string()),
+        ("trunc", Some(len)) => FaultAction::Truncate(len.parse()?),
+        _ => bail!("unknown fault action {action_part:?}"),
+    };
+    Ok(FaultPlan { action, from, every, limit })
+}
+
+/// Apply a fired action at a site that executes work: sleeps sleep,
+/// errors return `Err`, panics panic. `Truncate` is a no-op here (it
+/// only means something to byte-reading sites).
+pub fn apply_exec_action(action: FaultAction) -> crate::Result<()> {
+    match action {
+        FaultAction::SleepMs(ms) => {
+            std::thread::sleep(std::time::Duration::from_millis(ms));
+            Ok(())
+        }
+        FaultAction::Panic => panic!("injected fault: backend panic"),
+        FaultAction::Error(msg) => bail!("injected fault: {msg}"),
+        FaultAction::Truncate(_) => Ok(()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // NOTE: faults are process-global; these tests use unique site names
+    // so they cannot interfere with each other or with the chaos suite.
+
+    #[test]
+    fn disarmed_site_never_fires() {
+        assert_eq!(fire("faults.test.unused"), None);
+        assert_eq!(fired_count("faults.test.unused"), 0);
+    }
+
+    #[test]
+    fn schedule_from_every_limit() {
+        install(
+            "faults.test.sched",
+            FaultPlan { action: FaultAction::SleepMs(1), from: 1, every: 2, limit: 2 },
+        );
+        let fired: Vec<bool> =
+            (0..8).map(|_| fire("faults.test.sched").is_some()).collect();
+        // hits 1 and 3 fire (from=1, every=2), then the limit of 2 stops 5 and 7
+        assert_eq!(fired, vec![false, true, false, true, false, false, false, false]);
+        assert_eq!(fired_count("faults.test.sched"), 2);
+        lock_sites().remove("faults.test.sched");
+    }
+
+    #[test]
+    fn once_at_fires_exactly_once() {
+        install("faults.test.once", FaultPlan::once_at(FaultAction::Panic, 2));
+        assert_eq!(fire("faults.test.once"), None);
+        assert_eq!(fire("faults.test.once"), None);
+        assert_eq!(fire("faults.test.once"), Some(FaultAction::Panic));
+        assert_eq!(fire("faults.test.once"), None);
+        lock_sites().remove("faults.test.once");
+    }
+
+    #[test]
+    fn spec_parsing_round_trips() {
+        let p = parse_plan("sleep:25@3+4x5").unwrap();
+        assert_eq!(p.action, FaultAction::SleepMs(25));
+        assert_eq!((p.from, p.every, p.limit), (3, 4, 5));
+
+        let p = parse_plan("panic@1").unwrap();
+        assert_eq!(p.action, FaultAction::Panic);
+        assert_eq!((p.from, p.every, p.limit), (1, 0, 1));
+
+        let p = parse_plan("trunc:100").unwrap();
+        assert_eq!(p.action, FaultAction::Truncate(100));
+        assert_eq!((p.from, p.every, p.limit), (0, 0, 1));
+
+        // periodic with no explicit limit = unlimited
+        let p = parse_plan("error:boom+1").unwrap();
+        assert_eq!(p.action, FaultAction::Error("boom".to_string()));
+        assert_eq!((p.from, p.every, p.limit), (0, 1, u64::MAX));
+
+        assert!(parse_plan("explode").is_err());
+        assert!(install_spec("site-without-equals").is_err());
+    }
+}

@@ -1,25 +1,125 @@
 //! Serving metrics: latency samples, batch occupancy, error counts.
+//!
+//! Memory is **bounded**: latency samples feed a fixed-size reservoir
+//! (Algorithm R with a deterministic LCG, so a given record sequence
+//! always keeps the same sample set), while means, counts and maxima are
+//! exact running aggregates. A coordinator that serves for months holds
+//! [`RESERVOIR_CAP`] `f64`s, not one per request — the seed version kept
+//! three unbounded `Vec`s and grew without limit under sustained traffic.
 
 use std::sync::Mutex;
+
+use super::Rejected;
+
+/// Latency samples kept for the percentile estimates. Up to this many
+/// requests the percentiles are exact; beyond it they are uniform
+/// reservoir estimates (standard error ≈ 0.8% at p50).
+pub const RESERVOIR_CAP: usize = 4096;
+
+/// Fixed-capacity uniform sample of an unbounded stream (Algorithm R).
+/// Deterministic: replacement slots come from a fixed-seed LCG, not a
+/// global RNG, so metrics snapshots are reproducible in tests.
+struct Reservoir {
+    samples: Vec<f64>,
+    /// Samples offered so far (not just kept).
+    seen: u64,
+    lcg: u64,
+}
+
+impl Reservoir {
+    fn new() -> Self {
+        Reservoir { samples: Vec::new(), seen: 0, lcg: 0x9e37_79b9_7f4a_7c15 }
+    }
+
+    fn next_below(&mut self, bound: u64) -> u64 {
+        // MMIX LCG; the high bits are well mixed
+        self.lcg = self.lcg.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        (self.lcg >> 16) % bound.max(1)
+    }
+
+    fn offer(&mut self, x: f64) {
+        self.seen += 1;
+        if self.samples.len() < RESERVOIR_CAP {
+            self.samples.push(x);
+            return;
+        }
+        let j = self.next_below(self.seen);
+        if (j as usize) < RESERVOIR_CAP {
+            self.samples[j as usize] = x;
+        }
+    }
+}
+
+#[derive(Default)]
+struct Sum {
+    total: f64,
+    count: u64,
+}
+
+impl Sum {
+    fn add(&mut self, x: f64) {
+        self.total += x;
+        self.count += 1;
+    }
+
+    fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.total / self.count as f64
+        }
+    }
+}
 
 /// Shared metrics sink updated by the worker thread.
 pub struct ServeMetrics {
     inner: Mutex<Inner>,
 }
 
-#[derive(Default)]
 struct Inner {
-    latencies: Vec<f64>,
-    exec_times: Vec<f64>,
-    batch_sizes: Vec<usize>,
+    latency: Sum,
+    latency_samples: Reservoir,
+    exec: Sum,
+    batch_sum: u64,
+    batch_count: u64,
+    max_batch_seen: usize,
     completed: u64,
     errors: u64,
+    /// Backend panics contained by the worker (each fails one batch).
+    panics: u64,
+    /// Typed load-shedding rejections, by [`Rejected`] class.
+    rejected_queue_full: u64,
+    rejected_deadline: u64,
+    rejected_shutdown: u64,
+    rejected_plan_unavailable: u64,
     /// SIMD kernel ISA the serving backend dispatches to (set once by the
     /// worker at startup; `None` until a backend reports in).
     kernel_isa: Option<&'static str>,
     /// Auto-tuning report: `(chosen-config summary, startup sweep count)`
     /// when the backend's policy came from the execution autotuner.
     tuned: Option<(String, u64)>,
+}
+
+impl Inner {
+    fn new() -> Self {
+        Inner {
+            latency: Sum::default(),
+            latency_samples: Reservoir::new(),
+            exec: Sum::default(),
+            batch_sum: 0,
+            batch_count: 0,
+            max_batch_seen: 0,
+            completed: 0,
+            errors: 0,
+            panics: 0,
+            rejected_queue_full: 0,
+            rejected_deadline: 0,
+            rejected_shutdown: 0,
+            rejected_plan_unavailable: 0,
+            kernel_isa: None,
+            tuned: None,
+        }
+    }
 }
 
 /// Point-in-time metrics summary.
@@ -29,11 +129,25 @@ pub struct MetricsSnapshot {
     pub completed: u64,
     /// Requests answered with an error.
     pub errors: u64,
+    /// Requests answered with a typed [`Rejected`] (load shedding).
+    pub rejected: u64,
+    /// [`Rejected::QueueFull`] answers.
+    pub rejected_queue_full: u64,
+    /// [`Rejected::DeadlineExceeded`] answers.
+    pub rejected_deadline: u64,
+    /// [`Rejected::ShuttingDown`] answers.
+    pub rejected_shutdown: u64,
+    /// [`Rejected::PlanUnavailable`] answers.
+    pub rejected_plan_unavailable: u64,
+    /// Backend panics the worker contained (each failed one batch but
+    /// kept the coordinator serving).
+    pub panics_contained: u64,
     /// Mean end-to-end latency (s).
     pub mean_latency_s: f64,
-    /// Median latency (s).
+    /// Median latency (s) — exact up to [`RESERVOIR_CAP`] requests,
+    /// reservoir-estimated beyond.
     pub p50_latency_s: f64,
-    /// 99th-percentile latency (s).
+    /// 99th-percentile latency (s) — same estimator as `p50_latency_s`.
     pub p99_latency_s: f64,
     /// Mean backend execution time per batch (s).
     pub mean_exec_s: f64,
@@ -57,21 +171,48 @@ pub struct MetricsSnapshot {
 impl ServeMetrics {
     /// Fresh sink.
     pub fn new() -> Self {
-        ServeMetrics { inner: Mutex::new(Inner::default()) }
+        ServeMetrics { inner: Mutex::new(Inner::new()) }
     }
 
     /// Record one successful request.
     pub fn record(&self, latency_s: f64, exec_s: f64, batch: usize) {
         let mut g = self.inner.lock().unwrap();
-        g.latencies.push(latency_s);
-        g.exec_times.push(exec_s);
-        g.batch_sizes.push(batch);
+        g.latency.add(latency_s);
+        g.latency_samples.offer(latency_s);
+        g.exec.add(exec_s);
+        g.batch_sum += batch as u64;
+        g.batch_count += 1;
+        g.max_batch_seen = g.max_batch_seen.max(batch);
         g.completed += 1;
     }
 
     /// Record one failed request.
     pub fn record_error(&self) {
         self.inner.lock().unwrap().errors += 1;
+    }
+
+    /// Record one request answered with a typed rejection.
+    pub fn record_rejected(&self, r: &Rejected) {
+        let mut g = self.inner.lock().unwrap();
+        match r {
+            Rejected::QueueFull { .. } => g.rejected_queue_full += 1,
+            Rejected::DeadlineExceeded => g.rejected_deadline += 1,
+            Rejected::ShuttingDown => g.rejected_shutdown += 1,
+            Rejected::PlanUnavailable { .. } => g.rejected_plan_unavailable += 1,
+        }
+    }
+
+    /// Record one contained backend panic (the affected batch failed but
+    /// the worker kept serving).
+    pub fn record_panic(&self) {
+        self.inner.lock().unwrap().panics += 1;
+    }
+
+    /// Number of latency samples currently held for the percentile
+    /// estimates — bounded by [`RESERVOIR_CAP`] no matter how many
+    /// requests were recorded.
+    pub fn samples_held(&self) -> usize {
+        self.inner.lock().unwrap().latency_samples.samples.len()
     }
 
     /// Record the SIMD kernel ISA the backend dispatches to (reported by
@@ -90,26 +231,28 @@ impl ServeMetrics {
     /// Snapshot the current statistics.
     pub fn snapshot(&self) -> MetricsSnapshot {
         let g = self.inner.lock().unwrap();
-        let mean = |xs: &[f64]| {
-            if xs.is_empty() {
-                0.0
-            } else {
-                xs.iter().sum::<f64>() / xs.len() as f64
-            }
-        };
         MetricsSnapshot {
             completed: g.completed,
             errors: g.errors,
-            mean_latency_s: mean(&g.latencies),
-            p50_latency_s: crate::linalg::percentile(&g.latencies, 50.0),
-            p99_latency_s: crate::linalg::percentile(&g.latencies, 99.0),
-            mean_exec_s: mean(&g.exec_times),
-            mean_batch: if g.batch_sizes.is_empty() {
+            rejected: g.rejected_queue_full
+                + g.rejected_deadline
+                + g.rejected_shutdown
+                + g.rejected_plan_unavailable,
+            rejected_queue_full: g.rejected_queue_full,
+            rejected_deadline: g.rejected_deadline,
+            rejected_shutdown: g.rejected_shutdown,
+            rejected_plan_unavailable: g.rejected_plan_unavailable,
+            panics_contained: g.panics,
+            mean_latency_s: g.latency.mean(),
+            p50_latency_s: crate::linalg::percentile(&g.latency_samples.samples, 50.0),
+            p99_latency_s: crate::linalg::percentile(&g.latency_samples.samples, 99.0),
+            mean_exec_s: g.exec.mean(),
+            mean_batch: if g.batch_count == 0 {
                 0.0
             } else {
-                g.batch_sizes.iter().sum::<usize>() as f64 / g.batch_sizes.len() as f64
+                g.batch_sum as f64 / g.batch_count as f64
             },
-            max_batch_seen: g.batch_sizes.iter().copied().max().unwrap_or(0),
+            max_batch_seen: g.max_batch_seen,
             kernel_isa: g.kernel_isa.unwrap_or("unknown"),
             tuned: g.tuned.as_ref().map_or_else(|| "off".to_string(), |(s, _)| s.clone()),
             tune_sweeps: g.tuned.as_ref().map_or(0, |&(_, n)| n),
@@ -127,7 +270,7 @@ impl MetricsSnapshot {
     /// One-line human summary.
     pub fn line(&self) -> String {
         format!(
-            "completed={} errors={} p50={:.1}µs p99={:.1}µs mean_exec={:.1}µs mean_batch={:.2} max_batch={} kernel={} tuned={} sweeps={}",
+            "completed={} errors={} p50={:.1}µs p99={:.1}µs mean_exec={:.1}µs mean_batch={:.2} max_batch={} kernel={} tuned={} sweeps={} rejected={} panics={}",
             self.completed,
             self.errors,
             self.p50_latency_s * 1e6,
@@ -137,7 +280,9 @@ impl MetricsSnapshot {
             self.max_batch_seen,
             self.kernel_isa,
             self.tuned,
-            self.tune_sweeps
+            self.tune_sweeps,
+            self.rejected,
+            self.panics_contained
         )
     }
 }
@@ -178,5 +323,75 @@ mod tests {
         assert_eq!(s.completed, 0);
         assert_eq!(s.mean_latency_s, 0.0);
         assert_eq!(s.max_batch_seen, 0);
+        assert_eq!(s.rejected, 0);
+        assert_eq!(s.panics_contained, 0);
+    }
+
+    #[test]
+    fn rejection_classes_are_counted() {
+        let m = ServeMetrics::new();
+        m.record_rejected(&Rejected::QueueFull { retry_after_ms: 5 });
+        m.record_rejected(&Rejected::QueueFull { retry_after_ms: 7 });
+        m.record_rejected(&Rejected::DeadlineExceeded);
+        m.record_rejected(&Rejected::ShuttingDown);
+        m.record_rejected(&Rejected::PlanUnavailable { reason: "x".into() });
+        m.record_panic();
+        let s = m.snapshot();
+        assert_eq!(s.rejected_queue_full, 2);
+        assert_eq!(s.rejected_deadline, 1);
+        assert_eq!(s.rejected_shutdown, 1);
+        assert_eq!(s.rejected_plan_unavailable, 1);
+        assert_eq!(s.rejected, 5);
+        assert_eq!(s.panics_contained, 1);
+        assert!(s.line().contains("rejected=5"));
+        assert!(s.line().contains("panics=1"));
+    }
+
+    #[test]
+    fn million_sample_run_stays_bounded_and_percentiles_hold() {
+        // regression for the unbounded seed metrics: latencies/exec/batch
+        // grew one entry per request forever. One million records must
+        // leave the sink holding at most RESERVOIR_CAP samples while the
+        // exact aggregates and the percentile estimates stay usable.
+        let m = ServeMetrics::new();
+        let total = 1_000_000u64;
+        for k in 0..total {
+            // latencies sweep 0..1 ms uniformly (deterministic order)
+            let latency = (k % 1000) as f64 * 1e-6;
+            m.record(latency, 1e-6, (k % 8 + 1) as usize);
+        }
+        assert!(m.samples_held() <= RESERVOIR_CAP, "reservoir overflowed: {}", m.samples_held());
+        let s = m.snapshot();
+        assert_eq!(s.completed, total);
+        // exact aggregates are unaffected by the sampling
+        assert!((s.mean_latency_s - 0.4995e-3).abs() < 1e-9, "{}", s.mean_latency_s);
+        assert_eq!(s.max_batch_seen, 8);
+        assert!((s.mean_batch - 4.5).abs() < 1e-9);
+        // reservoir estimates: p50 ≈ 0.5 ms, p99 ≈ 0.99 ms (loose bands —
+        // the reservoir is a deterministic-LCG uniform sample)
+        assert!(
+            (0.40e-3..=0.60e-3).contains(&s.p50_latency_s),
+            "p50 estimate off: {}",
+            s.p50_latency_s
+        );
+        assert!(
+            (0.90e-3..=1.00e-3).contains(&s.p99_latency_s),
+            "p99 estimate off: {}",
+            s.p99_latency_s
+        );
+    }
+
+    #[test]
+    fn small_counts_keep_exact_percentiles() {
+        // below RESERVOIR_CAP the reservoir holds every sample, so the
+        // percentiles must equal the exact ones
+        let m = ServeMetrics::new();
+        for k in 0..100 {
+            m.record(k as f64, 0.0, 1);
+        }
+        let xs: Vec<f64> = (0..100).map(|k| k as f64).collect();
+        let s = m.snapshot();
+        assert_eq!(s.p50_latency_s, crate::linalg::percentile(&xs, 50.0));
+        assert_eq!(s.p99_latency_s, crate::linalg::percentile(&xs, 99.0));
     }
 }

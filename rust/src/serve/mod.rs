@@ -9,6 +9,30 @@
 //! answers each request on its own one-shot channel. Latency and batch
 //! occupancy metrics are recorded for every request.
 //!
+//! # QoS / robustness (the hardened serving edge)
+//!
+//! * **Typed load shedding** — [`Coordinator::submit_with`] answers
+//!   overload with a typed [`Rejected`] (`QueueFull` carries a
+//!   retry-after hint) instead of blocking; expired per-request
+//!   deadlines come back as `Rejected::DeadlineExceeded` *without
+//!   executing*; submits racing a shutdown get `Rejected::ShuttingDown`.
+//! * **Priority classes** — [`Priority::Interactive`] requests preempt
+//!   [`Priority::Batch`] ones at batch-formation time (FIFO within each
+//!   class), so latency-critical traffic overtakes queued analytics.
+//! * **Multi-plan routing** — with a [`PlanRegistry`] attached
+//!   ([`Coordinator::start_with_registry`]), requests resolve their
+//!   `Arc<Plan>` **at submit time** (by checksum, or the registry's
+//!   default). A hot swap ([`PlanRegistry::install_default`]) therefore
+//!   never touches in-flight or queued work: those jobs hold the old
+//!   `Arc` and drain on it, while every later submit runs the new plan.
+//! * **Panic containment** — a backend panic fails only its own batch
+//!   (each job answered with a typed backend error); the worker keeps
+//!   serving. Every accepted job is answered on every code path — reply
+//!   channels are never dropped silently.
+//! * **Fault injection** — the worker consults the [`faults`] failpoint
+//!   `serve.backend` before each batch, so the chaos suite can inject
+//!   slow/panicking/erroring backends deterministically.
+//!
 //! Design notes: the environment's crate snapshot has no tokio, so the
 //! coordinator is built directly on `std::sync::mpsc` — one OS thread
 //! owns the backend (PJRT executables are not Sync), `sync_channel`
@@ -22,17 +46,24 @@
 //! thread is spawned on the request path.
 
 mod backend;
+pub mod faults;
 mod metrics;
+pub mod net;
+mod registry;
 
 pub use backend::{Backend, NativeGftBackend, PjrtGftBackend, TransformDirection};
-pub use metrics::{MetricsSnapshot, ServeMetrics};
+pub use metrics::{MetricsSnapshot, ServeMetrics, RESERVOIR_CAP};
+pub use registry::{PlanRegistry, RegistryStats};
 
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail};
 
+use crate::plan::Plan;
 use crate::transforms::SignalBlock;
 
 /// Coordinator configuration.
@@ -56,10 +87,151 @@ impl Default for ServeConfig {
     }
 }
 
+/// Request priority class: interactive traffic preempts batch traffic at
+/// batch-formation time (FIFO within each class).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Priority {
+    /// Latency-critical traffic (the default).
+    #[default]
+    Interactive,
+    /// Throughput traffic; only runs when no interactive work is queued.
+    Batch,
+}
+
+/// Which transform a request asks for, relative to the serving
+/// convention: `Forward` is the analysis GFT `x̂ = Ūᵀ x`, `Adjoint` the
+/// synthesis `x = Ū x̂`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum JobOp {
+    /// Analysis / forward GFT (the default).
+    #[default]
+    Forward,
+    /// Synthesis / inverse GFT.
+    Adjoint,
+}
+
+/// Typed load-shedding answer: why a request was refused without (fully)
+/// executing. Carried through [`ServeError::Rejected`] and mapped onto
+/// wire rejection codes by the network front-end.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Rejected {
+    /// The bounded queue is full. `retry_after_ms` estimates when the
+    /// queue will have drained — clients should back off at least this
+    /// long before retrying.
+    QueueFull {
+        /// Suggested client backoff in milliseconds.
+        retry_after_ms: u64,
+    },
+    /// The request's deadline expired before execution started; the
+    /// backend never ran for it.
+    DeadlineExceeded,
+    /// The coordinator is draining for shutdown; retry against another
+    /// replica.
+    ShuttingDown,
+    /// The requested plan could not be resolved (unknown checksum,
+    /// corrupt/truncated artifact, no registry attached). Per-request:
+    /// other plans keep serving.
+    PlanUnavailable {
+        /// Human-readable resolution failure.
+        reason: String,
+    },
+}
+
+impl Rejected {
+    /// Stable machine-readable code (the wire protocol's `code` field).
+    pub fn code(&self) -> &'static str {
+        match self {
+            Rejected::QueueFull { .. } => "queue_full",
+            Rejected::DeadlineExceeded => "deadline_exceeded",
+            Rejected::ShuttingDown => "shutting_down",
+            Rejected::PlanUnavailable { .. } => "plan_unavailable",
+        }
+    }
+
+    /// Backoff hint, when the rejection carries one.
+    pub fn retry_after_ms(&self) -> Option<u64> {
+        match self {
+            Rejected::QueueFull { retry_after_ms } => Some(*retry_after_ms),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for Rejected {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Rejected::QueueFull { retry_after_ms } => {
+                write!(f, "queue full (backpressure); retry after ~{retry_after_ms} ms")
+            }
+            Rejected::DeadlineExceeded => write!(f, "deadline exceeded before execution"),
+            Rejected::ShuttingDown => write!(f, "coordinator is shutting down"),
+            Rejected::PlanUnavailable { reason } => write!(f, "plan unavailable: {reason}"),
+        }
+    }
+}
+
+impl std::error::Error for Rejected {}
+
+/// Everything that can come back instead of a transformed signal.
+#[derive(Clone, Debug)]
+pub enum ServeError {
+    /// Typed load shedding — see [`Rejected`].
+    Rejected(Rejected),
+    /// Malformed request (wrong signal length, …) — a client error.
+    Invalid(String),
+    /// The backend failed (or panicked) while executing the batch.
+    Backend(String),
+}
+
+impl ServeError {
+    /// Stable machine-readable code (the wire protocol's `code` field).
+    pub fn code(&self) -> &'static str {
+        match self {
+            ServeError::Rejected(r) => r.code(),
+            ServeError::Invalid(_) => "bad_request",
+            ServeError::Backend(_) => "backend_error",
+        }
+    }
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Rejected(r) => write!(f, "rejected: {r}"),
+            ServeError::Invalid(msg) => write!(f, "invalid request: {msg}"),
+            ServeError::Backend(msg) => write!(f, "backend error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// Per-request submit options for [`Coordinator::submit_with`].
+#[derive(Clone, Debug, Default)]
+pub struct SubmitOptions {
+    /// Priority class (default [`Priority::Interactive`]).
+    pub priority: Priority,
+    /// Absolute deadline; a request still queued past it is answered
+    /// [`Rejected::DeadlineExceeded`] without executing.
+    pub deadline: Option<Instant>,
+    /// Route to a registry plan by content checksum (`None` = the
+    /// registry default, or the backend's own plan without a registry).
+    pub plan: Option<u64>,
+    /// Which transform to apply (default [`JobOp::Forward`]).
+    pub op: JobOp,
+}
+
 struct Job {
     signal: Vec<f32>,
     enqueued: Instant,
-    reply: SyncSender<crate::Result<Vec<f32>>>,
+    deadline: Option<Instant>,
+    priority: Priority,
+    /// Registry-routed plan, resolved at submit time (`None` = the
+    /// backend's own fixed route). In-flight work owns its `Arc`, which
+    /// is what makes registry hot swaps drain-safe.
+    plan: Option<Arc<Plan>>,
+    op: JobOp,
+    reply: SyncSender<Result<Vec<f32>, ServeError>>,
 }
 
 enum Msg {
@@ -69,13 +241,40 @@ enum Msg {
 
 /// Handle for an in-flight request.
 pub struct Ticket {
-    rx: Receiver<crate::Result<Vec<f32>>>,
+    rx: Receiver<Result<Vec<f32>, ServeError>>,
 }
 
 impl Ticket {
     /// Block until the transformed signal is ready.
     pub fn wait(self) -> crate::Result<Vec<f32>> {
-        self.rx.recv().map_err(|_| anyhow!("coordinator dropped the request"))?
+        match self.rx.recv() {
+            Ok(Ok(signal)) => Ok(signal),
+            Ok(Err(e)) => Err(anyhow::Error::from(e)),
+            Err(_) => Err(anyhow!("coordinator dropped the request")),
+        }
+    }
+
+    /// Block until the reply, keeping the typed [`ServeError`] (the
+    /// network front-end maps it onto wire rejection codes).
+    pub fn wait_detailed(self) -> Result<Vec<f32>, ServeError> {
+        match self.rx.recv() {
+            Ok(r) => r,
+            Err(_) => Err(ServeError::Backend("coordinator dropped the request".into())),
+        }
+    }
+
+    /// Wait at most `timeout` for the reply, so callers can't block
+    /// forever on a wedged coordinator. Returns `None` on timeout — the
+    /// request is still in flight and the ticket can be waited on again;
+    /// a dropped coordinator comes back as `Some(Err(..))`.
+    pub fn wait_timeout(&self, timeout: Duration) -> Option<Result<Vec<f32>, ServeError>> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(r) => Some(r),
+            Err(RecvTimeoutError::Timeout) => None,
+            Err(RecvTimeoutError::Disconnected) => {
+                Some(Err(ServeError::Backend("coordinator dropped the request".into())))
+            }
+        }
     }
 }
 
@@ -84,6 +283,8 @@ pub struct Coordinator {
     tx: SyncSender<Msg>,
     worker: Option<std::thread::JoinHandle<()>>,
     metrics: Arc<ServeMetrics>,
+    registry: Option<Arc<PlanRegistry>>,
+    config: ServeConfig,
     n: usize,
 }
 
@@ -92,6 +293,21 @@ impl Coordinator {
     /// thread by `factory` — PJRT clients/executables are not `Send`, so
     /// they must never cross threads. Fails if the factory fails.
     pub fn start<F>(factory: F, config: ServeConfig) -> crate::Result<Coordinator>
+    where
+        F: FnOnce() -> crate::Result<Box<dyn Backend>> + Send + 'static,
+    {
+        Self::start_with_registry(factory, config, None)
+    }
+
+    /// Start a coordinator with an attached [`PlanRegistry`]: requests
+    /// resolve their plan from the registry at submit time (explicit
+    /// checksum via [`SubmitOptions::plan`], else the registry default,
+    /// else the backend's own route).
+    pub fn start_with_registry<F>(
+        factory: F,
+        config: ServeConfig,
+        registry: Option<Arc<PlanRegistry>>,
+    ) -> crate::Result<Coordinator>
     where
         F: FnOnce() -> crate::Result<Box<dyn Backend>> + Send + 'static,
     {
@@ -128,32 +344,119 @@ impl Coordinator {
         if config.max_batch > backend_batch {
             bail!("max_batch {} exceeds backend capacity {backend_batch}", config.max_batch);
         }
-        Ok(Coordinator { tx, worker: Some(worker), metrics, n })
+        Ok(Coordinator { tx, worker: Some(worker), metrics, registry, config, n })
+    }
+
+    /// The default route's signal dimension.
+    pub fn n(&self) -> usize {
+        self.registry
+            .as_ref()
+            .and_then(|r| r.default_plan())
+            .map_or(self.n, |p| p.n())
+    }
+
+    /// The attached plan registry, if any.
+    pub fn registry(&self) -> Option<&Arc<PlanRegistry>> {
+        self.registry.as_ref()
+    }
+
+    /// Resolve the route a request with `opts` would execute on.
+    fn resolve_route(&self, opts: &SubmitOptions) -> Result<Option<Arc<Plan>>, Rejected> {
+        match (opts.plan, &self.registry) {
+            (Some(key), Some(reg)) => reg
+                .get(key)
+                .map(Some)
+                .map_err(|e| Rejected::PlanUnavailable { reason: format!("{e:#}") }),
+            (Some(key), None) => Err(Rejected::PlanUnavailable {
+                reason: format!(
+                    "request names plan {key:016x} but this coordinator has no plan registry"
+                ),
+            }),
+            (None, Some(reg)) => Ok(reg.default_plan()),
+            (None, None) => Ok(None),
+        }
+    }
+
+    fn rejected(&self, r: Rejected) -> ServeError {
+        self.metrics.record_rejected(&r);
+        ServeError::Rejected(r)
+    }
+
+    /// Estimated milliseconds until a full queue has drained — the
+    /// `QueueFull` retry-after hint (queued batches × (batch window +
+    /// mean backend execution time), minimum 1 ms).
+    fn retry_after_hint_ms(&self) -> u64 {
+        let mean_exec_s = self.metrics.snapshot().mean_exec_s;
+        let batches = self.config.queue_capacity.div_ceil(self.config.max_batch).max(1);
+        let per_batch_s = self.config.batch_window.as_secs_f64() + mean_exec_s;
+        ((batches as f64 * per_batch_s) * 1e3).ceil().max(1.0) as u64
+    }
+
+    /// Full-control submit: priority class, deadline, plan routing, and
+    /// transform op, with **typed** load shedding — never blocks. Errors
+    /// are [`ServeError`]: `Rejected` for overload/unavailability (with
+    /// retry hints), `Invalid` for malformed requests.
+    pub fn submit_with(
+        &self,
+        signal: Vec<f32>,
+        opts: SubmitOptions,
+    ) -> Result<Ticket, ServeError> {
+        let plan = self.resolve_route(&opts).map_err(|r| self.rejected(r))?;
+        let want = plan.as_ref().map_or(self.n, |p| p.n());
+        if signal.len() != want {
+            return Err(ServeError::Invalid(format!(
+                "signal length {} != n {want}",
+                signal.len()
+            )));
+        }
+        if opts.deadline.is_some_and(|d| Instant::now() >= d) {
+            return Err(self.rejected(Rejected::DeadlineExceeded));
+        }
+        let (rtx, rrx) = sync_channel(1);
+        let job = Job {
+            signal,
+            enqueued: Instant::now(),
+            deadline: opts.deadline,
+            priority: opts.priority,
+            plan,
+            op: opts.op,
+            reply: rtx,
+        };
+        match self.tx.try_send(Msg::Job(job)) {
+            Ok(()) => Ok(Ticket { rx: rrx }),
+            Err(TrySendError::Full(_)) => {
+                let hint = self.retry_after_hint_ms();
+                Err(self.rejected(Rejected::QueueFull { retry_after_ms: hint }))
+            }
+            Err(TrySendError::Disconnected(_)) => Err(self.rejected(Rejected::ShuttingDown)),
+        }
     }
 
     /// Submit a signal; blocks while the queue is full (backpressure).
     pub fn submit(&self, signal: Vec<f32>) -> crate::Result<Ticket> {
-        if signal.len() != self.n {
-            bail!("signal length {} != n {}", signal.len(), self.n);
+        let opts = SubmitOptions::default();
+        let plan = self.resolve_route(&opts).map_err(anyhow::Error::from)?;
+        let want = plan.as_ref().map_or(self.n, |p| p.n());
+        if signal.len() != want {
+            bail!("signal length {} != n {}", signal.len(), want);
         }
         let (rtx, rrx) = sync_channel(1);
-        self.tx
-            .send(Msg::Job(Job { signal, enqueued: Instant::now(), reply: rtx }))
-            .map_err(|_| anyhow!("coordinator is shut down"))?;
+        let job = Job {
+            signal,
+            enqueued: Instant::now(),
+            deadline: None,
+            priority: Priority::Interactive,
+            plan,
+            op: JobOp::Forward,
+            reply: rtx,
+        };
+        self.tx.send(Msg::Job(job)).map_err(|_| anyhow!("coordinator is shut down"))?;
         Ok(Ticket { rx: rrx })
     }
 
     /// Non-blocking submit; `Err` when the queue is full or closed.
     pub fn try_submit(&self, signal: Vec<f32>) -> crate::Result<Ticket> {
-        if signal.len() != self.n {
-            bail!("signal length {} != n {}", signal.len(), self.n);
-        }
-        let (rtx, rrx) = sync_channel(1);
-        match self.tx.try_send(Msg::Job(Job { signal, enqueued: Instant::now(), reply: rtx })) {
-            Ok(()) => Ok(Ticket { rx: rrx }),
-            Err(TrySendError::Full(_)) => bail!("queue full (backpressure)"),
-            Err(TrySendError::Disconnected(_)) => bail!("coordinator is shut down"),
-        }
+        self.submit_with(signal, SubmitOptions::default()).map_err(anyhow::Error::from)
     }
 
     /// Submit and wait. Takes the coordinator's native signal type
@@ -197,46 +500,148 @@ impl Drop for Coordinator {
     }
 }
 
+/// Batch-formation route: jobs are co-batchable only when they share the
+/// resolved plan (by pointer) and the transform op.
+type RouteKey = (usize, JobOp);
+
+fn route_key(j: &Job) -> RouteKey {
+    (j.plan.as_ref().map_or(0, |p| Arc::as_ptr(p) as usize), j.op)
+}
+
+fn expired(j: &Job) -> bool {
+    j.deadline.is_some_and(|d| Instant::now() >= d)
+}
+
+fn reject(metrics: &ServeMetrics, j: Job, r: Rejected) {
+    metrics.record_rejected(&r);
+    let _ = j.reply.send(Err(ServeError::Rejected(r)));
+}
+
+fn stage(qi: &mut VecDeque<Job>, qb: &mut VecDeque<Job>, j: Job) {
+    match j.priority {
+        Priority::Interactive => qi.push_back(j),
+        Priority::Batch => qb.push_back(j),
+    }
+}
+
+fn same_route_count(qi: &VecDeque<Job>, qb: &VecDeque<Job>, key: RouteKey) -> usize {
+    qi.iter().chain(qb.iter()).filter(|j| route_key(j) == key).count()
+}
+
+/// Move up to `max - jobs.len()` same-route jobs out of `q` (preserving
+/// order); expired ones are answered `DeadlineExceeded` instead.
+fn collect_route(
+    q: &mut VecDeque<Job>,
+    key: RouteKey,
+    max: usize,
+    jobs: &mut Vec<Job>,
+    metrics: &ServeMetrics,
+) {
+    let mut rest = VecDeque::with_capacity(q.len());
+    while let Some(j) = q.pop_front() {
+        if route_key(&j) != key {
+            rest.push_back(j);
+        } else if expired(&j) {
+            reject(metrics, j, Rejected::DeadlineExceeded);
+        } else if jobs.len() < max {
+            jobs.push(j);
+        } else {
+            rest.push_back(j);
+        }
+    }
+    *q = rest;
+}
+
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
 fn worker_loop(
     backend: &mut dyn Backend,
     rx: &Receiver<Msg>,
     config: &ServeConfig,
     metrics: &ServeMetrics,
 ) {
-    let n = backend.n();
+    let default_n = backend.n();
     metrics.set_kernel_isa(backend.kernel_isa());
     if let Some((summary, sweeps)) = backend.tuned() {
         metrics.set_tuned(summary, sweeps);
     }
-    loop {
-        // wait for the first request of the batch
-        let first = match rx.recv() {
-            Ok(Msg::Job(j)) => j,
-            Ok(Msg::Shutdown) | Err(_) => return,
-        };
-        let mut jobs = vec![first];
-        let deadline = Instant::now() + config.batch_window;
-        let mut shutdown_after = false;
-        while jobs.len() < config.max_batch {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
+    // staged jobs by priority class: the channel is drained into these so
+    // interactive work can overtake queued batch work
+    let mut qi: VecDeque<Job> = VecDeque::new();
+    let mut qb: VecDeque<Job> = VecDeque::new();
+    let mut draining = false;
+    'serve: loop {
+        // stage at least one job (or finish the drain)
+        while qi.is_empty() && qb.is_empty() {
+            if draining {
+                // staged work is done; anything still in the channel
+                // arrived after the shutdown marker and is answered with
+                // a typed rejection rather than a dropped channel
+                while let Ok(msg) = rx.try_recv() {
+                    if let Msg::Job(j) = msg {
+                        reject(metrics, j, Rejected::ShuttingDown);
+                    }
+                }
+                return;
             }
-            match rx.recv_timeout(deadline - now) {
-                Ok(Msg::Job(j)) => jobs.push(j),
-                Ok(Msg::Shutdown) => {
-                    shutdown_after = true;
+            match rx.recv() {
+                Ok(Msg::Job(j)) => stage(&mut qi, &mut qb, j),
+                Ok(Msg::Shutdown) => draining = true,
+                Err(_) => return,
+            }
+        }
+
+        // head job: interactive preempts batch; expired heads are
+        // answered DeadlineExceeded without executing
+        let head = loop {
+            match qi.pop_front().or_else(|| qb.pop_front()) {
+                Some(j) if expired(&j) => reject(metrics, j, Rejected::DeadlineExceeded),
+                Some(j) => break j,
+                None => continue 'serve,
+            }
+        };
+        let key = route_key(&head);
+
+        // soak the batch window for more co-batchable arrivals
+        if !draining {
+            let window_end = Instant::now() + config.batch_window;
+            while same_route_count(&qi, &qb, key) + 1 < config.max_batch {
+                let now = Instant::now();
+                if now >= window_end {
                     break;
                 }
-                Err(RecvTimeoutError::Timeout) => break,
-                Err(RecvTimeoutError::Disconnected) => {
-                    shutdown_after = true;
-                    break;
+                match rx.recv_timeout(window_end - now) {
+                    Ok(Msg::Job(j)) => stage(&mut qi, &mut qb, j),
+                    Ok(Msg::Shutdown) => {
+                        draining = true;
+                        break;
+                    }
+                    Err(RecvTimeoutError::Timeout) => break,
+                    Err(RecvTimeoutError::Disconnected) => {
+                        draining = true;
+                        break;
+                    }
                 }
             }
         }
 
+        // form the batch: head + same-route staged jobs, interactive first
+        let mut jobs = vec![head];
+        collect_route(&mut qi, key, config.max_batch, &mut jobs, metrics);
+        collect_route(&mut qb, key, config.max_batch, &mut jobs, metrics);
+
         // assemble the (n, backend_batch) block, padding unused columns
+        let route_plan = jobs[0].plan.clone();
+        let op = jobs[0].op;
+        let n = route_plan.as_ref().map_or(default_n, |p| p.n());
         let batch = jobs.len();
         let mut block = SignalBlock::zeros(n, backend.max_batch());
         for (b, j) in jobs.iter().enumerate() {
@@ -245,11 +650,24 @@ fn worker_loop(
             }
         }
         let t0 = Instant::now();
-        let result = backend.forward(&mut block);
+        // contain backend panics: a panicking batch fails its own jobs
+        // with a typed error and the worker keeps serving
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            if let Some(action) = faults::fire("serve.backend") {
+                faults::apply_exec_action(action)?;
+            }
+            match &route_plan {
+                Some(p) => backend.apply_routed(p, op, &mut block),
+                None => match op {
+                    JobOp::Forward => backend.forward(&mut block),
+                    JobOp::Adjoint => backend.adjoint(&mut block),
+                },
+            }
+        }));
         let exec_s = t0.elapsed().as_secs_f64();
 
-        match result {
-            Ok(()) => {
+        match outcome {
+            Ok(Ok(())) => {
                 for (b, j) in jobs.into_iter().enumerate() {
                     let out = block.signal(b);
                     let latency = j.enqueued.elapsed().as_secs_f64();
@@ -257,16 +675,21 @@ fn worker_loop(
                     let _ = j.reply.send(Ok(out));
                 }
             }
-            Err(e) => {
-                let msg = format!("backend error: {e:#}");
+            Ok(Err(e)) => {
+                let msg = format!("{e:#}");
                 for j in jobs.into_iter() {
                     metrics.record_error();
-                    let _ = j.reply.send(Err(anyhow!(msg.clone())));
+                    let _ = j.reply.send(Err(ServeError::Backend(msg.clone())));
                 }
             }
-        }
-        if shutdown_after {
-            return;
+            Err(payload) => {
+                metrics.record_panic();
+                let msg = format!("backend panicked: {}", panic_message(payload));
+                for j in jobs.into_iter() {
+                    metrics.record_error();
+                    let _ = j.reply.send(Err(ServeError::Backend(msg.clone())));
+                }
+            }
         }
     }
 }
@@ -287,6 +710,27 @@ mod tests {
             None,
             ExecPolicy::Seq,
         )?) as Box<dyn Backend>)
+    }
+
+    /// Backend that sleeps `ms` per batch (queue-pressure tests).
+    struct Slow {
+        n: usize,
+        ms: u64,
+    }
+    impl Backend for Slow {
+        fn n(&self) -> usize {
+            self.n
+        }
+        fn max_batch(&self) -> usize {
+            1
+        }
+        fn forward(&mut self, _b: &mut SignalBlock) -> crate::Result<()> {
+            std::thread::sleep(Duration::from_millis(self.ms));
+            Ok(())
+        }
+        fn name(&self) -> &str {
+            "slow"
+        }
     }
 
     #[test]
@@ -343,29 +787,17 @@ mod tests {
             Coordinator::start(|| identity_backend(4, 8), ServeConfig::default()).unwrap();
         assert!(coord.submit(vec![0.0; 3]).is_err());
         assert!(coord.submit_blocking(vec![0.0; 5]).is_err());
+        match coord.submit_with(vec![0.0; 3], SubmitOptions::default()) {
+            Err(ServeError::Invalid(msg)) => assert!(msg.contains("signal length"), "{msg}"),
+            other => panic!("want Invalid, got {:?}", other.map(|_| ())),
+        }
     }
 
     #[test]
     fn try_submit_backpressure() {
         // a slow backend + capacity-1 queue must trigger Full
-        struct Slow;
-        impl Backend for Slow {
-            fn n(&self) -> usize {
-                2
-            }
-            fn max_batch(&self) -> usize {
-                1
-            }
-            fn forward(&mut self, _b: &mut SignalBlock) -> crate::Result<()> {
-                std::thread::sleep(Duration::from_millis(30));
-                Ok(())
-            }
-            fn name(&self) -> &str {
-                "slow"
-            }
-        }
         let coord = Coordinator::start(
-            || Ok(Box::new(Slow) as Box<dyn Backend>),
+            || Ok(Box::new(Slow { n: 2, ms: 30 }) as Box<dyn Backend>),
             ServeConfig { max_batch: 1, queue_capacity: 1, ..Default::default() },
         )
         .unwrap();
@@ -385,6 +817,83 @@ mod tests {
     }
 
     #[test]
+    fn queue_full_rejection_is_typed_with_retry_hint() {
+        let coord = Coordinator::start(
+            || Ok(Box::new(Slow { n: 2, ms: 30 }) as Box<dyn Backend>),
+            ServeConfig { max_batch: 1, queue_capacity: 1, ..Default::default() },
+        )
+        .unwrap();
+        let mut tickets = Vec::new();
+        let mut rejection = None;
+        for _ in 0..20 {
+            match coord.submit_with(vec![0.0, 0.0], SubmitOptions::default()) {
+                Ok(t) => tickets.push(t),
+                Err(ServeError::Rejected(r)) => {
+                    rejection = Some(r);
+                    break;
+                }
+                Err(other) => panic!("unexpected error class: {other}"),
+            }
+        }
+        let r = rejection.expect("capacity-1 queue must shed load");
+        assert_eq!(r.code(), "queue_full");
+        assert!(r.retry_after_ms().unwrap() >= 1, "hint must be actionable");
+        for t in tickets {
+            t.wait().unwrap();
+        }
+        let m = coord.shutdown();
+        assert!(m.rejected_queue_full >= 1);
+        assert_eq!(m.rejected, m.rejected_queue_full);
+    }
+
+    #[test]
+    fn already_expired_deadline_is_rejected_at_submit() {
+        let coord =
+            Coordinator::start(|| identity_backend(2, 4), ServeConfig::default()).unwrap();
+        let opts = SubmitOptions {
+            deadline: Some(Instant::now() - Duration::from_millis(1)),
+            ..Default::default()
+        };
+        match coord.submit_with(vec![1.0, 2.0], opts) {
+            Err(ServeError::Rejected(Rejected::DeadlineExceeded)) => {}
+            other => panic!("want DeadlineExceeded, got {:?}", other.map(|_| ())),
+        }
+        let m = coord.shutdown();
+        assert_eq!(m.rejected_deadline, 1);
+        assert_eq!(m.completed, 0, "expired request must never execute");
+    }
+
+    #[test]
+    fn interactive_preempts_queued_batch_traffic() {
+        // hold the worker busy, queue batch-class work, then an
+        // interactive request: the interactive one must be answered
+        // before the earlier-submitted batch job
+        let coord = Coordinator::start(
+            || Ok(Box::new(Slow { n: 2, ms: 60 }) as Box<dyn Backend>),
+            ServeConfig { max_batch: 1, ..Default::default() },
+        )
+        .unwrap();
+        let head = coord.submit(vec![0.0, 0.0]).unwrap(); // occupies the worker
+        let batch = coord
+            .submit_with(
+                vec![1.0, 1.0],
+                SubmitOptions { priority: Priority::Batch, ..Default::default() },
+            )
+            .unwrap();
+        let interactive = coord.submit_with(vec![2.0, 2.0], SubmitOptions::default()).unwrap();
+        head.wait().unwrap();
+        interactive.wait().unwrap();
+        // the batch job runs one 60 ms service slot after the
+        // interactive one, so it cannot have been answered yet
+        assert!(
+            batch.wait_timeout(Duration::ZERO).is_none(),
+            "batch-class job must not be answered before interactive traffic"
+        );
+        assert!(batch.wait_timeout(Duration::from_secs(10)).unwrap().is_ok());
+        coord.shutdown();
+    }
+
+    #[test]
     fn shutdown_drains() {
         let coord = Coordinator::start(
             || identity_backend(2, 4),
@@ -395,5 +904,33 @@ mod tests {
         let m = coord.shutdown();
         assert!(m.completed >= 1);
         assert_eq!(t1.wait().unwrap(), vec![5.0, 6.0]);
+    }
+
+    #[test]
+    fn wait_timeout_covers_timeout_late_reply_and_dropped_sender() {
+        // timeout + late reply against a real (slow) coordinator
+        let coord = Coordinator::start(
+            || Ok(Box::new(Slow { n: 2, ms: 50 }) as Box<dyn Backend>),
+            ServeConfig { max_batch: 1, ..Default::default() },
+        )
+        .unwrap();
+        let t = coord.submit(vec![1.0, 2.0]).unwrap();
+        assert!(
+            t.wait_timeout(Duration::from_millis(1)).is_none(),
+            "50 ms batch cannot be done after 1 ms"
+        );
+        // the reply arrives late — a second wait on the same ticket gets it
+        let late = t.wait_timeout(Duration::from_secs(10)).expect("must complete");
+        assert_eq!(late.unwrap(), vec![1.0, 2.0]);
+        coord.shutdown();
+
+        // dropped sender: the reply channel dies without an answer
+        let (tx, rx) = sync_channel::<Result<Vec<f32>, ServeError>>(1);
+        let ticket = Ticket { rx };
+        drop(tx);
+        match ticket.wait_timeout(Duration::from_millis(1)) {
+            Some(Err(ServeError::Backend(msg))) => assert!(msg.contains("dropped"), "{msg}"),
+            other => panic!("want dropped-sender error, got {:?}", other.map(|r| r.map(|_| ()))),
+        }
     }
 }

@@ -1,0 +1,986 @@
+//! Blocking TCP front-end for the serving coordinator.
+//!
+//! # Wire protocol
+//!
+//! Length-prefixed JSON: every frame is a little-endian `u32` byte count
+//! followed by exactly that many bytes of UTF-8 JSON (one object per
+//! frame, requests and replies alike). Connections are persistent — a
+//! client sends any number of request frames and reads one reply frame
+//! per request, in order.
+//!
+//! Requests (`op` selects the verb):
+//!
+//! ```text
+//! {"op":"forward","signal":[..],            // analysis GFT (aka "submit")
+//!  "plan":"<16-hex checksum>",              // optional registry route
+//!  "priority":"interactive"|"batch",        // optional, default interactive
+//!  "deadline_ms":N}                         // optional relative deadline
+//! {"op":"adjoint","signal":[..], ...}       // synthesis GFT
+//! {"op":"metrics"}                          // serving + registry counters
+//! {"op":"upload_plan","bytes":"<hex>",      // .fastplan bytes, hex-encoded
+//!  "default":true|false}                    // true = atomic hot swap
+//! ```
+//!
+//! Replies: `{"ok":true,"signal":[..]}` for transforms,
+//! `{"ok":true,"metrics":{..}}`, `{"ok":true,"checksum":"<16-hex>",
+//! "n":N,"stages":G}` for uploads — or `{"ok":false,"code":C,
+//! "error":MSG}` where `code` is one of `queue_full` (plus
+//! `"retry_after_ms":N` — back off at least that long), `deadline_exceeded`,
+//! `shutting_down`, `plan_unavailable`, `backend_error`, or `bad_request`.
+//!
+//! Signals travel as JSON numbers printed with Rust's shortest-round-trip
+//! `f32` formatting and are re-parsed **directly as `f32`** (never through
+//! `f64`), so a transform response is bitwise-identical to the in-process
+//! answer.
+//!
+//! # Robustness
+//!
+//! * Malformed JSON in a well-framed request gets a `bad_request` reply
+//!   and the connection stays usable (framing stays in sync).
+//! * An oversized or short-read frame, a mid-frame client stall longer
+//!   than `stall_timeout`, or a write failure (client vanished mid-reply)
+//!   closes only that connection.
+//! * Graceful drain: on shutdown (flag or SIGTERM via
+//!   [`install_termination_handler`]) the listener stops accepting,
+//!   connection threads finish the request they are on, answer
+//!   `shutting_down` to anything further, and the coordinator drains its
+//!   queue before the final metrics are returned.
+
+use std::io::{self, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context};
+
+use super::{Coordinator, JobOp, MetricsSnapshot, Priority, ServeError, SubmitOptions};
+use crate::plan::Plan;
+
+/// Hard cap on request/reply payload size (64 MiB — a full batch of
+/// million-point signals fits with room to spare).
+pub const MAX_FRAME: usize = 64 << 20;
+
+/// Front-end tunables.
+#[derive(Clone, Debug)]
+pub struct NetServerOptions {
+    /// Socket read-timeout granularity: how often an idle connection
+    /// re-checks the drain flag.
+    pub read_poll: Duration,
+    /// Budget for a client stalled *mid-frame* before its connection is
+    /// closed (a stall between frames is just an idle connection).
+    pub stall_timeout: Duration,
+    /// Socket write timeout (slow-reading clients are disconnected).
+    pub write_timeout: Duration,
+    /// How long a connection waits for the coordinator's reply before
+    /// answering `backend_error` (bounds connection-thread blocking even
+    /// if the worker wedges).
+    pub reply_timeout: Duration,
+    /// Per-frame payload cap.
+    pub max_frame: usize,
+}
+
+impl Default for NetServerOptions {
+    fn default() -> Self {
+        NetServerOptions {
+            read_poll: Duration::from_millis(50),
+            stall_timeout: Duration::from_secs(5),
+            write_timeout: Duration::from_secs(5),
+            reply_timeout: Duration::from_secs(60),
+            max_frame: MAX_FRAME,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// minimal JSON (the crate snapshot has no serde)
+// ---------------------------------------------------------------------------
+
+/// A JSON value. Numbers keep their **raw text**: `f32` payloads are
+/// re-parsed from it directly, never widened through `f64`, so signal
+/// values round-trip bitwise.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    /// `null`
+    Null,
+    /// `true` / `false`
+    Bool(bool),
+    /// A number, as its raw wire text.
+    Num(String),
+    /// A string.
+    Str(String),
+    /// An array.
+    Arr(Vec<Json>),
+    /// An object (insertion-ordered).
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Number from an `f32` using Rust's shortest-round-trip formatting
+    /// (non-finite values have no JSON spelling and become `null`).
+    pub fn f32(x: f32) -> Json {
+        if x.is_finite() {
+            Json::Num(format!("{x}"))
+        } else {
+            Json::Null
+        }
+    }
+
+    /// Number from an `f64` (same non-finite rule).
+    pub fn f64(x: f64) -> Json {
+        if x.is_finite() {
+            Json::Num(format!("{x}"))
+        } else {
+            Json::Null
+        }
+    }
+
+    /// Number from a `u64`.
+    pub fn u64(x: u64) -> Json {
+        Json::Num(x.to_string())
+    }
+
+    /// Object field lookup (first match).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// String payload, if this is a string.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Bool payload, if this is a bool.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// Parse a number **directly** as `f32` (bitwise round trip with
+    /// [`Json::f32`]).
+    pub fn as_f32(&self) -> Option<f32> {
+        match self {
+            Json::Num(raw) => raw.parse().ok(),
+            _ => None,
+        }
+    }
+
+    /// Parse a number as `f64`.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(raw) => raw.parse().ok(),
+            _ => None,
+        }
+    }
+
+    /// Parse a number as `u64` (rejects fractions/negatives).
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(raw) => raw.parse().ok(),
+            _ => None,
+        }
+    }
+
+    /// Array payload, if this is an array.
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(items) => Some(items),
+            _ => None,
+        }
+    }
+
+    /// Serialize to compact JSON text.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.render_into(&mut out);
+        out
+    }
+
+    fn render_into(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(true) => out.push_str("true"),
+            Json::Bool(false) => out.push_str("false"),
+            Json::Num(raw) => out.push_str(raw),
+            Json::Str(s) => render_string(s, out),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.render_into(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(fields) => {
+                out.push('{');
+                for (i, (k, v)) in fields.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    render_string(k, out);
+                    out.push(':');
+                    v.render_into(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
+    /// Parse JSON text (strict: one value, nothing but whitespace after).
+    pub fn parse(text: &str) -> crate::Result<Json> {
+        let bytes = text.as_bytes();
+        let mut pos = 0;
+        let v = parse_value(bytes, &mut pos, 0)?;
+        skip_ws(bytes, &mut pos);
+        if pos != bytes.len() {
+            bail!("trailing bytes after JSON value at offset {pos}");
+        }
+        Ok(v)
+    }
+}
+
+fn render_string(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+const MAX_DEPTH: usize = 64;
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn parse_value(b: &[u8], pos: &mut usize, depth: usize) -> crate::Result<Json> {
+    if depth > MAX_DEPTH {
+        bail!("JSON nesting deeper than {MAX_DEPTH}");
+    }
+    skip_ws(b, pos);
+    match b.get(*pos) {
+        None => bail!("unexpected end of JSON"),
+        Some(b'{') => {
+            *pos += 1;
+            let mut fields = Vec::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b'}') {
+                *pos += 1;
+                return Ok(Json::Obj(fields));
+            }
+            loop {
+                skip_ws(b, pos);
+                let key = match parse_value(b, pos, depth + 1)? {
+                    Json::Str(s) => s,
+                    _ => bail!("object key must be a string at offset {pos}"),
+                };
+                skip_ws(b, pos);
+                if b.get(*pos) != Some(&b':') {
+                    bail!("expected ':' at offset {pos}");
+                }
+                *pos += 1;
+                let val = parse_value(b, pos, depth + 1)?;
+                fields.push((key, val));
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b'}') => {
+                        *pos += 1;
+                        return Ok(Json::Obj(fields));
+                    }
+                    _ => bail!("expected ',' or '}}' at offset {pos}"),
+                }
+            }
+        }
+        Some(b'[') => {
+            *pos += 1;
+            let mut items = Vec::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b']') {
+                *pos += 1;
+                return Ok(Json::Arr(items));
+            }
+            loop {
+                items.push(parse_value(b, pos, depth + 1)?);
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b']') => {
+                        *pos += 1;
+                        return Ok(Json::Arr(items));
+                    }
+                    _ => bail!("expected ',' or ']' at offset {pos}"),
+                }
+            }
+        }
+        Some(b'"') => parse_string(b, pos).map(Json::Str),
+        Some(b't') => parse_lit(b, pos, "true").map(|_| Json::Bool(true)),
+        Some(b'f') => parse_lit(b, pos, "false").map(|_| Json::Bool(false)),
+        Some(b'n') => parse_lit(b, pos, "null").map(|_| Json::Null),
+        Some(_) => parse_number(b, pos),
+    }
+}
+
+fn parse_lit(b: &[u8], pos: &mut usize, lit: &str) -> crate::Result<()> {
+    if b[*pos..].starts_with(lit.as_bytes()) {
+        *pos += lit.len();
+        Ok(())
+    } else {
+        bail!("invalid JSON literal at offset {pos}")
+    }
+}
+
+fn parse_number(b: &[u8], pos: &mut usize) -> crate::Result<Json> {
+    let start = *pos;
+    if b.get(*pos) == Some(&b'-') {
+        *pos += 1;
+    }
+    let digits_from = *pos;
+    while matches!(b.get(*pos), Some(b'0'..=b'9')) {
+        *pos += 1;
+    }
+    if *pos == digits_from {
+        bail!("invalid JSON number at offset {start}");
+    }
+    if b.get(*pos) == Some(&b'.') {
+        *pos += 1;
+        let frac_from = *pos;
+        while matches!(b.get(*pos), Some(b'0'..=b'9')) {
+            *pos += 1;
+        }
+        if *pos == frac_from {
+            bail!("invalid JSON number at offset {start}");
+        }
+    }
+    if matches!(b.get(*pos), Some(b'e' | b'E')) {
+        *pos += 1;
+        if matches!(b.get(*pos), Some(b'+' | b'-')) {
+            *pos += 1;
+        }
+        let exp_from = *pos;
+        while matches!(b.get(*pos), Some(b'0'..=b'9')) {
+            *pos += 1;
+        }
+        if *pos == exp_from {
+            bail!("invalid JSON number at offset {start}");
+        }
+    }
+    // the slice is ASCII by construction
+    Ok(Json::Num(String::from_utf8_lossy(&b[start..*pos]).into_owned()))
+}
+
+fn parse_string(b: &[u8], pos: &mut usize) -> crate::Result<String> {
+    *pos += 1; // opening quote
+    let mut out = String::new();
+    loop {
+        match b.get(*pos) {
+            None => bail!("unterminated JSON string"),
+            Some(b'"') => {
+                *pos += 1;
+                return Ok(out);
+            }
+            Some(b'\\') => {
+                *pos += 1;
+                match b.get(*pos) {
+                    Some(b'"') => out.push('"'),
+                    Some(b'\\') => out.push('\\'),
+                    Some(b'/') => out.push('/'),
+                    Some(b'b') => out.push('\u{8}'),
+                    Some(b'f') => out.push('\u{c}'),
+                    Some(b'n') => out.push('\n'),
+                    Some(b'r') => out.push('\r'),
+                    Some(b't') => out.push('\t'),
+                    Some(b'u') => {
+                        let hi = parse_hex4(b, *pos + 1)?;
+                        *pos += 4;
+                        let cp = if (0xd800..0xdc00).contains(&hi)
+                            && b.get(*pos + 1) == Some(&b'\\')
+                            && b.get(*pos + 2) == Some(&b'u')
+                        {
+                            let lo = parse_hex4(b, *pos + 3)?;
+                            *pos += 6;
+                            0x10000 + ((hi - 0xd800) << 10) + (lo.wrapping_sub(0xdc00) & 0x3ff)
+                        } else {
+                            hi
+                        };
+                        out.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                    }
+                    _ => bail!("invalid JSON escape at offset {pos}"),
+                }
+                *pos += 1;
+            }
+            Some(&c) if c < 0x20 => bail!("raw control byte in JSON string at offset {pos}"),
+            Some(_) => {
+                // copy one UTF-8 scalar
+                let s = std::str::from_utf8(&b[*pos..])
+                    .map_err(|_| anyhow!("invalid UTF-8 in JSON string at offset {pos}"))?;
+                let c = s.chars().next().unwrap();
+                out.push(c);
+                *pos += c.len_utf8();
+            }
+        }
+    }
+}
+
+fn parse_hex4(b: &[u8], at: usize) -> crate::Result<u32> {
+    let slice = b.get(at..at + 4).ok_or_else(|| anyhow!("truncated \\u escape"))?;
+    let s = std::str::from_utf8(slice).map_err(|_| anyhow!("invalid \\u escape"))?;
+    u32::from_str_radix(s, 16).map_err(|_| anyhow!("invalid \\u escape"))
+}
+
+// ---------------------------------------------------------------------------
+// hex (plan checksums and upload payloads)
+// ---------------------------------------------------------------------------
+
+/// Lowercase hex encoding.
+pub fn hex_encode(bytes: &[u8]) -> String {
+    let mut out = String::with_capacity(bytes.len() * 2);
+    for b in bytes {
+        out.push_str(&format!("{b:02x}"));
+    }
+    out
+}
+
+/// Strict hex decoding (even length, hex digits only).
+pub fn hex_decode(s: &str) -> crate::Result<Vec<u8>> {
+    let s = s.as_bytes();
+    if s.len() % 2 != 0 {
+        bail!("hex string has odd length {}", s.len());
+    }
+    let mut out = Vec::with_capacity(s.len() / 2);
+    for pair in s.chunks_exact(2) {
+        let txt = std::str::from_utf8(pair).map_err(|_| anyhow!("non-ASCII hex"))?;
+        out.push(u8::from_str_radix(txt, 16).with_context(|| format!("bad hex pair {txt:?}"))?);
+    }
+    Ok(out)
+}
+
+/// Parse a 16-hex-digit plan content checksum.
+pub fn parse_checksum(s: &str) -> crate::Result<u64> {
+    if s.len() != 16 {
+        bail!("plan checksum must be 16 hex digits, got {:?}", s);
+    }
+    u64::from_str_radix(s, 16).with_context(|| format!("bad plan checksum {s:?}"))
+}
+
+// ---------------------------------------------------------------------------
+// framing
+// ---------------------------------------------------------------------------
+
+/// Write one length-prefixed frame.
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> io::Result<()> {
+    let len = u32::try_from(payload.len())
+        .map_err(|_| io::Error::new(io::ErrorKind::InvalidInput, "frame too large"))?;
+    w.write_all(&len.to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()
+}
+
+/// Blocking read of one frame (for clients: no poll/drain machinery).
+pub fn read_frame(r: &mut impl Read) -> io::Result<Vec<u8>> {
+    let mut header = [0u8; 4];
+    r.read_exact(&mut header)?;
+    let len = u32::from_le_bytes(header) as usize;
+    if len > MAX_FRAME {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "frame exceeds MAX_FRAME"));
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    Ok(payload)
+}
+
+/// One round trip on a client connection: send `request`, read the reply.
+pub fn request(stream: &mut TcpStream, request: &Json) -> crate::Result<Json> {
+    write_frame(stream, request.render().as_bytes()).context("sending request frame")?;
+    let payload = read_frame(stream).context("reading reply frame")?;
+    let text = std::str::from_utf8(&payload).context("reply frame is not UTF-8")?;
+    Json::parse(text)
+}
+
+fn is_timeout(e: &io::Error) -> bool {
+    matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut)
+}
+
+/// Server-side frame read over a socket whose read timeout is
+/// `opts.read_poll`. Distinguishes an *idle* connection (no frame started
+/// — waits forever, re-checking `draining` each poll) from a *mid-frame
+/// stall* (budgeted by `opts.stall_timeout`). `Ok(None)` means the
+/// connection should close quietly (EOF or drain).
+fn read_frame_polled(
+    stream: &mut TcpStream,
+    opts: &NetServerOptions,
+    draining: &AtomicBool,
+) -> io::Result<Option<Vec<u8>>> {
+    let mut header = [0u8; 4];
+    let mut got = 0usize;
+    // frame boundary: idle is fine, but leave when draining
+    while got < header.len() {
+        match stream.read(&mut header[got..]) {
+            Ok(0) => return Ok(None), // EOF
+            Ok(k) => {
+                got += k;
+                break;
+            }
+            Err(e) if is_timeout(&e) => {
+                if draining.load(Ordering::SeqCst) {
+                    return Ok(None);
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    // a frame has started: the client gets stall_timeout to finish it
+    let stall_budget = opts.stall_timeout;
+    let mut stalled_since = Instant::now();
+    while got < header.len() {
+        match stream.read(&mut header[got..]) {
+            Ok(0) => return Ok(None),
+            Ok(k) => {
+                got += k;
+                stalled_since = Instant::now();
+            }
+            Err(e) if is_timeout(&e) => {
+                if stalled_since.elapsed() > stall_budget {
+                    return Err(io::Error::new(
+                        io::ErrorKind::TimedOut,
+                        "client stalled mid-frame",
+                    ));
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    let len = u32::from_le_bytes(header) as usize;
+    if len > opts.max_frame {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("frame of {len} bytes exceeds the {} byte cap", opts.max_frame),
+        ));
+    }
+    let mut payload = vec![0u8; len];
+    let mut have = 0usize;
+    let mut stalled_since = Instant::now();
+    while have < len {
+        match stream.read(&mut payload[have..]) {
+            Ok(0) => return Ok(None), // truncated frame: peer went away
+            Ok(k) => {
+                have += k;
+                stalled_since = Instant::now();
+            }
+            Err(e) if is_timeout(&e) => {
+                if stalled_since.elapsed() > stall_budget {
+                    return Err(io::Error::new(
+                        io::ErrorKind::TimedOut,
+                        "client stalled mid-frame",
+                    ));
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(Some(payload))
+}
+
+// ---------------------------------------------------------------------------
+// request handling
+// ---------------------------------------------------------------------------
+
+fn err_reply(code: &str, msg: &str, retry_after_ms: Option<u64>) -> Json {
+    let mut fields = vec![
+        ("ok".to_string(), Json::Bool(false)),
+        ("code".to_string(), Json::Str(code.to_string())),
+        ("error".to_string(), Json::Str(msg.to_string())),
+    ];
+    if let Some(ms) = retry_after_ms {
+        fields.push(("retry_after_ms".to_string(), Json::u64(ms)));
+    }
+    Json::Obj(fields)
+}
+
+fn serve_error_reply(e: &ServeError) -> Json {
+    let retry = match e {
+        ServeError::Rejected(r) => r.retry_after_ms(),
+        _ => None,
+    };
+    err_reply(e.code(), &e.to_string(), retry)
+}
+
+fn metrics_json(m: &MetricsSnapshot, coord: &Coordinator) -> Json {
+    let mut fields = vec![
+        ("completed".to_string(), Json::u64(m.completed)),
+        ("errors".to_string(), Json::u64(m.errors)),
+        ("rejected".to_string(), Json::u64(m.rejected)),
+        ("rejected_queue_full".to_string(), Json::u64(m.rejected_queue_full)),
+        ("rejected_deadline".to_string(), Json::u64(m.rejected_deadline)),
+        ("rejected_shutdown".to_string(), Json::u64(m.rejected_shutdown)),
+        ("rejected_plan_unavailable".to_string(), Json::u64(m.rejected_plan_unavailable)),
+        ("panics_contained".to_string(), Json::u64(m.panics_contained)),
+        ("p50_latency_s".to_string(), Json::f64(m.p50_latency_s)),
+        ("p99_latency_s".to_string(), Json::f64(m.p99_latency_s)),
+        ("mean_exec_s".to_string(), Json::f64(m.mean_exec_s)),
+        ("mean_batch".to_string(), Json::f64(m.mean_batch)),
+        ("max_batch_seen".to_string(), Json::u64(m.max_batch_seen as u64)),
+        ("kernel_isa".to_string(), Json::Str(m.kernel_isa.to_string())),
+        ("tuned".to_string(), Json::Str(m.tuned.clone())),
+    ];
+    if let Some(reg) = coord.registry() {
+        let s = reg.stats();
+        fields.push((
+            "registry".to_string(),
+            Json::Obj(vec![
+                ("resident".to_string(), Json::u64(s.resident as u64)),
+                ("capacity".to_string(), Json::u64(s.capacity as u64)),
+                ("hits".to_string(), Json::u64(s.hits)),
+                ("misses".to_string(), Json::u64(s.misses)),
+                ("loads".to_string(), Json::u64(s.loads)),
+                ("load_errors".to_string(), Json::u64(s.load_errors)),
+                ("evictions".to_string(), Json::u64(s.evictions)),
+                (
+                    "default_checksum".to_string(),
+                    s.default_checksum
+                        .map_or(Json::Null, |k| Json::Str(format!("{k:016x}"))),
+                ),
+            ]),
+        ));
+    }
+    Json::Obj(vec![
+        ("ok".to_string(), Json::Bool(true)),
+        ("metrics".to_string(), Json::Obj(fields)),
+    ])
+}
+
+fn handle_transform(coord: &Coordinator, req: &Json, op: JobOp, opts: &NetServerOptions) -> Json {
+    let Some(items) = req.get("signal").and_then(|v| v.as_arr()) else {
+        return err_reply("bad_request", "transform request needs a \"signal\" array", None);
+    };
+    let mut signal = Vec::with_capacity(items.len());
+    for v in items {
+        match v.as_f32() {
+            Some(x) => signal.push(x),
+            None => {
+                return err_reply("bad_request", "\"signal\" must hold finite numbers", None)
+            }
+        }
+    }
+    let mut submit = SubmitOptions { op, ..Default::default() };
+    if let Some(p) = req.get("priority") {
+        match p.as_str() {
+            Some("interactive") => submit.priority = Priority::Interactive,
+            Some("batch") => submit.priority = Priority::Batch,
+            _ => return err_reply("bad_request", "\"priority\" must be interactive|batch", None),
+        }
+    }
+    if let Some(d) = req.get("deadline_ms") {
+        match d.as_u64() {
+            Some(ms) => submit.deadline = Some(Instant::now() + Duration::from_millis(ms)),
+            None => {
+                return err_reply("bad_request", "\"deadline_ms\" must be a non-negative int", None)
+            }
+        }
+    }
+    if let Some(p) = req.get("plan") {
+        match p.as_str().map(parse_checksum) {
+            Some(Ok(key)) => submit.plan = Some(key),
+            _ => return err_reply("bad_request", "\"plan\" must be a 16-hex checksum", None),
+        }
+    }
+    let ticket = match coord.submit_with(signal, submit) {
+        Ok(t) => t,
+        Err(e) => return serve_error_reply(&e),
+    };
+    match ticket.wait_timeout(opts.reply_timeout) {
+        Some(Ok(out)) => Json::Obj(vec![
+            ("ok".to_string(), Json::Bool(true)),
+            ("signal".to_string(), Json::Arr(out.into_iter().map(Json::f32).collect())),
+        ]),
+        Some(Err(e)) => serve_error_reply(&e),
+        None => err_reply(
+            "backend_error",
+            &format!("no reply within {:?}", opts.reply_timeout),
+            None,
+        ),
+    }
+}
+
+fn handle_upload(coord: &Coordinator, req: &Json) -> Json {
+    let Some(reg) = coord.registry() else {
+        return err_reply("bad_request", "this server has no plan registry", None);
+    };
+    let Some(hex) = req.get("bytes").and_then(|v| v.as_str()) else {
+        return err_reply("bad_request", "upload_plan needs hex \"bytes\"", None);
+    };
+    let bytes = match hex_decode(hex) {
+        Ok(b) => b,
+        Err(e) => return err_reply("bad_request", &format!("{e:#}"), None),
+    };
+    let plan: Arc<Plan> = match Plan::from_bytes(&bytes) {
+        Ok(p) => p,
+        Err(e) => return err_reply("bad_request", &format!("rejected plan bytes: {e:#}"), None),
+    };
+    let n = plan.n();
+    let stages = plan.len();
+    let make_default = req.get("default").and_then(|v| v.as_bool()).unwrap_or(false);
+    let key = if make_default { reg.install_default(plan) } else { reg.insert(plan) };
+    Json::Obj(vec![
+        ("ok".to_string(), Json::Bool(true)),
+        ("checksum".to_string(), Json::Str(format!("{key:016x}"))),
+        ("n".to_string(), Json::u64(n as u64)),
+        ("stages".to_string(), Json::u64(stages as u64)),
+        ("default".to_string(), Json::Bool(make_default)),
+    ])
+}
+
+/// Answer one request frame (exposed for tests).
+pub fn handle_request(
+    coord: &Coordinator,
+    payload: &[u8],
+    opts: &NetServerOptions,
+    draining: &AtomicBool,
+) -> Json {
+    let req = match std::str::from_utf8(payload).map_err(anyhow::Error::from).and_then(Json::parse)
+    {
+        Ok(v) => v,
+        Err(e) => return err_reply("bad_request", &format!("malformed JSON frame: {e:#}"), None),
+    };
+    let op = req.get("op").and_then(|v| v.as_str()).unwrap_or("");
+    match op {
+        "metrics" => metrics_json(&coord.metrics(), coord),
+        "upload_plan" => {
+            if draining.load(Ordering::SeqCst) {
+                return err_reply("shutting_down", "coordinator is shutting down", None);
+            }
+            handle_upload(coord, &req)
+        }
+        "submit" | "forward" | "adjoint" => {
+            if draining.load(Ordering::SeqCst) {
+                return err_reply("shutting_down", "coordinator is shutting down", None);
+            }
+            let job_op = if op == "adjoint" { JobOp::Adjoint } else { JobOp::Forward };
+            handle_transform(coord, &req, job_op, opts)
+        }
+        other => err_reply(
+            "bad_request",
+            &format!(
+                "unknown op {other:?} (want submit|forward|adjoint|metrics|upload_plan)"
+            ),
+            None,
+        ),
+    }
+}
+
+fn handle_conn(
+    mut stream: TcpStream,
+    coord: &Coordinator,
+    opts: &NetServerOptions,
+    draining: &AtomicBool,
+) {
+    let _ = stream.set_nodelay(true);
+    if stream.set_read_timeout(Some(opts.read_poll)).is_err()
+        || stream.set_write_timeout(Some(opts.write_timeout)).is_err()
+    {
+        return;
+    }
+    loop {
+        match read_frame_polled(&mut stream, opts, draining) {
+            Ok(Some(payload)) => {
+                let reply = handle_request(coord, &payload, opts, draining);
+                if write_frame(&mut stream, reply.render().as_bytes()).is_err() {
+                    // client vanished mid-reply: their loss, not ours
+                    return;
+                }
+            }
+            // EOF / drain: quiet close
+            Ok(None) => return,
+            // oversized frame, mid-frame stall, hard socket error: the
+            // framing is no longer trustworthy, so close rather than
+            // risk replying into the middle of a stream
+            Err(_) => return,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// termination + server loop
+// ---------------------------------------------------------------------------
+
+static TERM: AtomicBool = AtomicBool::new(false);
+
+extern "C" fn on_term(_signum: i32) {
+    // only async-signal-safe work here: one atomic store
+    TERM.store(true, Ordering::SeqCst);
+}
+
+/// Route SIGTERM/SIGINT into the graceful-drain flag checked by
+/// [`serve`]. (The libc `signal` symbol is already linked by std; the
+/// crate snapshot has no libc crate to declare it for us.)
+pub fn install_termination_handler() {
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    unsafe {
+        signal(SIGTERM, on_term as extern "C" fn(i32) as usize);
+        signal(SIGINT, on_term as extern "C" fn(i32) as usize);
+    }
+}
+
+/// Whether a termination signal has been delivered.
+pub fn termination_requested() -> bool {
+    TERM.load(Ordering::SeqCst)
+}
+
+/// Run the front-end until `shutdown` is set or a termination signal
+/// arrives, then drain gracefully: stop accepting, let every connection
+/// finish its in-flight request, shut the coordinator down (draining its
+/// queue), and return the final metrics.
+pub fn serve(
+    listener: TcpListener,
+    coordinator: Coordinator,
+    opts: NetServerOptions,
+    shutdown: Arc<AtomicBool>,
+) -> crate::Result<MetricsSnapshot> {
+    listener.set_nonblocking(true).context("listener nonblocking")?;
+    let coord = Arc::new(coordinator);
+    let draining = Arc::new(AtomicBool::new(false));
+    let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    loop {
+        if shutdown.load(Ordering::SeqCst) || termination_requested() {
+            break;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                // accepted sockets must not inherit the listener's
+                // non-blocking mode
+                let _ = stream.set_nonblocking(false);
+                let coord = Arc::clone(&coord);
+                let opts = opts.clone();
+                let draining = Arc::clone(&draining);
+                let h = std::thread::Builder::new()
+                    .name("fastes-conn".into())
+                    .spawn(move || handle_conn(stream, &coord, &opts, &draining))
+                    .context("spawning connection thread")?;
+                conns.push(h);
+                conns.retain(|h| !h.is_finished());
+            }
+            Err(e) if is_timeout(&e) => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(anyhow::Error::from(e).context("accepting connections")),
+        }
+    }
+    // graceful drain: stop accepting, finish in-flight requests, then
+    // drain the coordinator queue
+    drop(listener);
+    draining.store(true, Ordering::SeqCst);
+    for h in conns {
+        let _ = h.join();
+    }
+    // every connection thread is gone, so ours is the last Arc
+    match Arc::try_unwrap(coord) {
+        Ok(c) => Ok(c.shutdown()),
+        Err(c) => Ok(c.metrics()), // unreachable, but never panic on drain
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_round_trips_structures() {
+        let text = r#"{"op":"forward","signal":[1,-0.5,3.25e2],"deep":{"a":[true,false,null],"s":"q\"\\\né"}}"#;
+        let v = Json::parse(text).unwrap();
+        assert_eq!(v.get("op").unwrap().as_str(), Some("forward"));
+        let sig = v.get("signal").unwrap().as_arr().unwrap();
+        assert_eq!(sig[0].as_f32(), Some(1.0));
+        assert_eq!(sig[1].as_f32(), Some(-0.5));
+        assert_eq!(sig[2].as_f32(), Some(325.0));
+        assert_eq!(
+            v.get("deep").unwrap().get("s").unwrap().as_str(),
+            Some("q\"\\\né")
+        );
+        // render → parse is the identity on the value
+        let again = Json::parse(&v.render()).unwrap();
+        assert_eq!(again, v);
+    }
+
+    #[test]
+    fn json_rejects_malformed_input() {
+        for bad in [
+            "", "{", "[1,]", "{\"a\":}", "{'a':1}", "{\"a\":1}x", "nul", "+5", "1.", "--3",
+            "\"unterminated", "{\"a\" 1}",
+        ] {
+            assert!(Json::parse(bad).is_err(), "accepted malformed JSON {bad:?}");
+        }
+        // depth bomb
+        let deep = "[".repeat(100) + &"]".repeat(100);
+        assert!(Json::parse(&deep).is_err(), "accepted 100-deep nesting");
+    }
+
+    #[test]
+    fn f32_payloads_round_trip_bitwise() {
+        // shortest-repr f32 text re-parsed as f32 must be bit-identical,
+        // including values that differ if widened through f64 first
+        let mut rng = crate::linalg::Rng64::new(99);
+        for _ in 0..2000 {
+            let x = (rng.randn() * 1e3) as f32;
+            let j = Json::f32(x);
+            assert_eq!(j.as_f32().unwrap().to_bits(), x.to_bits(), "{j:?}");
+        }
+        for x in [0.0f32, -0.0, f32::MIN_POSITIVE, f32::MAX, 1e-40 /* subnormal */] {
+            assert_eq!(Json::f32(x).as_f32().unwrap().to_bits(), x.to_bits());
+        }
+        assert_eq!(Json::f32(f32::NAN), Json::Null, "non-finite becomes null");
+    }
+
+    #[test]
+    fn hex_and_checksum_helpers() {
+        assert_eq!(hex_encode(&[0x00, 0xff, 0x1a]), "00ff1a");
+        assert_eq!(hex_decode("00ff1a").unwrap(), vec![0x00, 0xff, 0x1a]);
+        assert!(hex_decode("abc").is_err(), "odd length");
+        assert!(hex_decode("zz").is_err(), "non-hex");
+        assert_eq!(parse_checksum("00000000000000ff").unwrap(), 0xff);
+        assert!(parse_checksum("ff").is_err(), "checksums are exactly 16 digits");
+    }
+
+    #[test]
+    fn frames_round_trip_over_a_buffer() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, br#"{"op":"metrics"}"#).unwrap();
+        write_frame(&mut buf, b"").unwrap();
+        let mut r = &buf[..];
+        assert_eq!(read_frame(&mut r).unwrap(), br#"{"op":"metrics"}"#.to_vec());
+        assert_eq!(read_frame(&mut r).unwrap(), b"".to_vec());
+        // a length prefix beyond the cap is rejected before allocation
+        let mut huge = Vec::new();
+        huge.extend_from_slice(&(u32::MAX).to_le_bytes());
+        assert!(read_frame(&mut &huge[..]).is_err());
+    }
+}

@@ -1,0 +1,333 @@
+//! Multi-plan registry: many graphs' operators resident in one process.
+//!
+//! A [`PlanRegistry`] keys `Arc<Plan>`s by their **content checksum**
+//! (`Plan::content_checksum` — the FNV-1a-64 of the canonical `.fastplan`
+//! bytes), holds at most `capacity` of them under LRU eviction, and loads
+//! `.fastplan` artifacts on demand from its search directories (file name
+//! `{checksum:016x}.fastplan`). A corrupt, truncated, or missing artifact
+//! is a **per-request error** — the registry stays up and every other
+//! plan keeps serving.
+//!
+//! Hot swap: [`install_default`](PlanRegistry::install_default) /
+//! [`set_default`](PlanRegistry::set_default) atomically repoint the
+//! *default route* (the plan used by requests that don't name a
+//! checksum). In-flight batches hold their own `Arc<Plan>` clone,
+//! resolved at submit time, so they drain on the old plan while every
+//! request submitted after the swap serves on the new one; the old plan's
+//! memory is freed when the last in-flight reference drops. Eviction has
+//! the same property — it only drops the registry's reference.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+use anyhow::Context;
+
+use super::faults::{self, FaultAction};
+use crate::plan::Plan;
+
+struct Entry {
+    plan: Arc<Plan>,
+    last_used: u64,
+}
+
+#[derive(Default)]
+struct Inner {
+    plans: HashMap<u64, Entry>,
+    default_key: Option<u64>,
+    tick: u64,
+    hits: u64,
+    misses: u64,
+    loads: u64,
+    load_errors: u64,
+    evictions: u64,
+}
+
+/// Point-in-time registry counters (reported by the serve metrics
+/// endpoint).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RegistryStats {
+    /// Plans currently resident.
+    pub resident: usize,
+    /// LRU capacity.
+    pub capacity: usize,
+    /// Lookups answered from a resident plan.
+    pub hits: u64,
+    /// Lookups that had to go to disk (successful or not).
+    pub misses: u64,
+    /// Artifacts loaded from disk.
+    pub loads: u64,
+    /// Artifact loads that failed (missing/corrupt/truncated files).
+    pub load_errors: u64,
+    /// Plans evicted by the LRU.
+    pub evictions: u64,
+    /// Content checksum of the current default plan.
+    pub default_checksum: Option<u64>,
+}
+
+/// Capacity-bounded LRU of `Arc<Plan>`s keyed by content checksum (see
+/// the module docs).
+pub struct PlanRegistry {
+    inner: Mutex<Inner>,
+    capacity: usize,
+    search_dirs: Vec<PathBuf>,
+}
+
+impl PlanRegistry {
+    /// Registry holding at most `capacity` plans (minimum 1), with no
+    /// on-demand loading.
+    pub fn new(capacity: usize) -> Self {
+        Self::with_search_dirs(capacity, Vec::new())
+    }
+
+    /// Registry that also loads `{checksum:016x}.fastplan` artifacts on
+    /// demand from `search_dirs`, first match wins.
+    pub fn with_search_dirs(capacity: usize, search_dirs: Vec<PathBuf>) -> Self {
+        PlanRegistry { inner: Mutex::new(Inner::default()), capacity: capacity.max(1), search_dirs }
+    }
+
+    /// Insert a plan (keyed by its content checksum) and return the key.
+    /// Re-inserting an identical plan just refreshes its LRU slot.
+    pub fn insert(&self, plan: Arc<Plan>) -> u64 {
+        let key = plan.content_checksum();
+        let mut g = self.inner.lock().unwrap();
+        Self::touch(&mut g, key, plan);
+        self.evict_excess(&mut g);
+        key
+    }
+
+    /// Insert a plan and atomically make it the default route. Returns
+    /// the key. This is the hot-swap primitive: requests submitted after
+    /// this call resolve the new plan; batches already in flight hold
+    /// their `Arc` to the old one and drain unaffected.
+    pub fn install_default(&self, plan: Arc<Plan>) -> u64 {
+        let key = plan.content_checksum();
+        let mut g = self.inner.lock().unwrap();
+        Self::touch(&mut g, key, plan);
+        g.default_key = Some(key);
+        self.evict_excess(&mut g);
+        key
+    }
+
+    /// Repoint the default route at an already-known (or loadable) plan.
+    pub fn set_default(&self, key: u64) -> crate::Result<Arc<Plan>> {
+        let plan = self.get(key)?;
+        self.inner.lock().unwrap().default_key = Some(key);
+        Ok(plan)
+    }
+
+    /// The current default plan (`None` until one is installed).
+    pub fn default_plan(&self) -> Option<Arc<Plan>> {
+        let mut g = self.inner.lock().unwrap();
+        let key = g.default_key?;
+        g.tick += 1;
+        let tick = g.tick;
+        let e = g.plans.get_mut(&key)?;
+        e.last_used = tick;
+        Some(Arc::clone(&e.plan))
+    }
+
+    /// Look up a plan by content checksum, loading it from the search
+    /// directories on a miss. Every failure (unknown key, unreadable or
+    /// corrupt artifact, checksum mismatch) is a per-request `Err`.
+    pub fn get(&self, key: u64) -> crate::Result<Arc<Plan>> {
+        {
+            let mut g = self.inner.lock().unwrap();
+            g.tick += 1;
+            let tick = g.tick;
+            if let Some(e) = g.plans.get_mut(&key) {
+                e.last_used = tick;
+                let plan = Arc::clone(&e.plan);
+                g.hits += 1;
+                return Ok(plan);
+            }
+            g.misses += 1;
+        }
+        // load outside the map lookup above; the lock is re-taken to
+        // publish (a racing double-load of the same artifact is benign —
+        // both decode to the identical plan)
+        match self.load_from_disk(key) {
+            Ok(plan) => {
+                let mut g = self.inner.lock().unwrap();
+                g.loads += 1;
+                Self::touch(&mut g, key, Arc::clone(&plan));
+                self.evict_excess(&mut g);
+                Ok(plan)
+            }
+            Err(e) => {
+                self.inner.lock().unwrap().load_errors += 1;
+                Err(e)
+            }
+        }
+    }
+
+    /// Current counters.
+    pub fn stats(&self) -> RegistryStats {
+        let g = self.inner.lock().unwrap();
+        RegistryStats {
+            resident: g.plans.len(),
+            capacity: self.capacity,
+            hits: g.hits,
+            misses: g.misses,
+            loads: g.loads,
+            load_errors: g.load_errors,
+            evictions: g.evictions,
+            default_checksum: g.default_key,
+        }
+    }
+
+    fn touch(g: &mut Inner, key: u64, plan: Arc<Plan>) {
+        g.tick += 1;
+        let tick = g.tick;
+        g.plans.entry(key).or_insert(Entry { plan, last_used: 0 }).last_used = tick;
+    }
+
+    fn evict_excess(&self, g: &mut Inner) {
+        while g.plans.len() > self.capacity {
+            // least-recently-used non-default entry; the default is
+            // pinned (it backs every un-routed request)
+            let victim = g
+                .plans
+                .iter()
+                .filter(|(k, _)| Some(**k) != g.default_key)
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| *k);
+            match victim {
+                Some(k) => {
+                    g.plans.remove(&k);
+                    g.evictions += 1;
+                }
+                None => return, // only the pinned default remains
+            }
+        }
+    }
+
+    fn load_from_disk(&self, key: u64) -> crate::Result<Arc<Plan>> {
+        let file = format!("{key:016x}.fastplan");
+        for dir in &self.search_dirs {
+            let path = dir.join(&file);
+            if !path.exists() {
+                continue;
+            }
+            let mut bytes = std::fs::read(&path)
+                .with_context(|| format!("reading plan artifact {}", path.display()))?;
+            if let Some(FaultAction::Truncate(keep)) = faults::fire("registry.load") {
+                bytes.truncate(keep.min(bytes.len()));
+            }
+            let plan = Plan::from_bytes(&bytes)
+                .with_context(|| format!("loading plan artifact {}", path.display()))?;
+            if plan.content_checksum() != key {
+                anyhow::bail!(
+                    "plan artifact {} decodes to checksum {:016x}, expected {key:016x}",
+                    path.display(),
+                    plan.content_checksum()
+                );
+            }
+            return Ok(plan);
+        }
+        anyhow::bail!(
+            "plan {key:016x} is not resident and no search directory holds {file} \
+             (searched {} directories)",
+            self.search_dirs.len()
+        )
+    }
+}
+
+impl std::fmt::Debug for PlanRegistry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = self.stats();
+        write!(
+            f,
+            "PlanRegistry(resident={}/{}, hits={}, misses={}, evictions={})",
+            s.resident, s.capacity, s.hits, s.misses, s.evictions
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::Plan;
+    use crate::transforms::{GChain, GKind, GTransform};
+
+    fn plan_with(n: usize, g: usize, seed: u64) -> Arc<Plan> {
+        let mut rng = crate::linalg::Rng64::new(seed);
+        let mut ch = GChain::identity(n);
+        for _ in 0..g {
+            let i = rng.below(n - 1);
+            let j = i + 1 + rng.below(n - 1 - i);
+            let th = rng.uniform_in(0.0, std::f64::consts::TAU);
+            ch.transforms.push(GTransform::new(i, j, th.cos(), th.sin(), GKind::Rotation));
+        }
+        Plan::from(ch).build()
+    }
+
+    #[test]
+    fn insert_get_and_default_routing() {
+        let reg = PlanRegistry::new(4);
+        let a = plan_with(8, 10, 1);
+        let b = plan_with(8, 10, 2);
+        let ka = reg.install_default(Arc::clone(&a));
+        let kb = reg.insert(Arc::clone(&b));
+        assert_ne!(ka, kb, "distinct plans must key differently");
+        assert!(Arc::ptr_eq(&reg.get(ka).unwrap(), &a));
+        assert!(Arc::ptr_eq(&reg.get(kb).unwrap(), &b));
+        assert!(Arc::ptr_eq(&reg.default_plan().unwrap(), &a));
+        assert_eq!(reg.stats().default_checksum, Some(ka));
+        // hot swap: default moves to b, a stays resident
+        reg.set_default(kb).unwrap();
+        assert!(Arc::ptr_eq(&reg.default_plan().unwrap(), &b));
+        assert!(reg.get(ka).is_ok());
+    }
+
+    #[test]
+    fn unknown_key_is_a_per_request_error() {
+        let reg = PlanRegistry::new(2);
+        let e = format!("{:#}", reg.get(0xdead_beef).unwrap_err());
+        assert!(e.contains("not resident"), "{e}");
+        assert_eq!(reg.stats().load_errors, 1);
+        assert_eq!(reg.stats().misses, 1);
+    }
+
+    #[test]
+    fn lru_evicts_oldest_but_pins_default() {
+        let reg = PlanRegistry::new(2);
+        let d = reg.install_default(plan_with(8, 6, 10));
+        let k1 = reg.insert(plan_with(8, 6, 11));
+        // touch the default so k1 is the LRU entry, then overflow
+        assert!(reg.default_plan().is_some());
+        let k2 = reg.insert(plan_with(8, 6, 12));
+        let s = reg.stats();
+        assert_eq!(s.resident, 2);
+        assert_eq!(s.evictions, 1);
+        assert!(reg.get(d).is_ok(), "default must never be evicted");
+        assert!(reg.get(k2).is_ok(), "most recent insert survives");
+        assert!(reg.get(k1).is_err(), "LRU entry was evicted");
+    }
+
+    #[test]
+    fn loads_artifacts_on_demand_and_rejects_mismatched_names() {
+        let dir = std::env::temp_dir().join(format!("fastes-registry-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let plan = plan_with(10, 14, 20);
+        let key = plan.content_checksum();
+        std::fs::write(dir.join(format!("{key:016x}.fastplan")), plan.to_bytes()).unwrap();
+        // a file whose name lies about its content must be rejected
+        let other = plan_with(10, 14, 21);
+        let lie = key ^ 1;
+        std::fs::write(dir.join(format!("{lie:016x}.fastplan")), other.to_bytes()).unwrap();
+
+        let reg = PlanRegistry::with_search_dirs(4, vec![dir.clone()]);
+        let got = reg.get(key).unwrap();
+        assert_eq!(got.content_checksum(), key);
+        assert_eq!(reg.stats().loads, 1);
+        // second hit is resident
+        reg.get(key).unwrap();
+        assert_eq!(reg.stats().hits, 1);
+
+        let e = format!("{:#}", reg.get(lie).unwrap_err());
+        assert!(e.contains("expected"), "{e}");
+
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,338 @@
+//! Chaos suite for the hardened serving edge: deterministic fault
+//! injection (`fastes::serve::faults`) driving the coordinator through
+//! slow backends, backend panics, corrupt artifacts, expired deadlines
+//! and registry hot swaps. The invariants under test:
+//!
+//! * the coordinator never deadlocks (every wait below is bounded);
+//! * every accepted request is answered — successes bitwise-identical to
+//!   `ExecPolicy::Seq` on the same plan, failures as a typed
+//!   [`Rejected`]/backend error — reply channels are never dropped
+//!   silently;
+//! * faults are per-request/per-batch, never process-fatal.
+//!
+//! Faults are process-global, so every test here serializes on one mutex
+//! and clears the fault table on entry and exit.
+
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use fastes::cli::figures::random_gplan;
+use fastes::linalg::Rng64;
+use fastes::plan::{Direction, ExecPolicy, Plan};
+use fastes::serve::faults::{self, FaultAction, FaultPlan};
+use fastes::serve::{
+    Backend, Coordinator, NativeGftBackend, PlanRegistry, Priority, Rejected, ServeConfig,
+    ServeError, SubmitOptions, TransformDirection,
+};
+use fastes::transforms::SignalBlock;
+
+static SERIAL: Mutex<()> = Mutex::new(());
+
+/// Serialize the test and guarantee a clean fault table on entry/exit
+/// (even when an earlier holder panicked).
+struct Chaos(std::sync::MutexGuard<'static, ()>);
+
+impl Chaos {
+    fn begin() -> Chaos {
+        let g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+        faults::clear();
+        Chaos(g)
+    }
+}
+
+impl Drop for Chaos {
+    fn drop(&mut self) {
+        faults::clear();
+    }
+}
+
+const WAIT: Duration = Duration::from_secs(30);
+
+fn plan_of(n: usize, seed: u64) -> Arc<Plan> {
+    let mut rng = Rng64::new(seed);
+    Plan::from(random_gplan(n, 8 * n, &mut rng)).build()
+}
+
+fn signal_of(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng64::new(seed);
+    (0..n).map(|_| rng.randn() as f32).collect()
+}
+
+/// The ground truth every accepted success must match **bitwise**: the
+/// sequential engine applied to a batch-1 block (per-column butterfly
+/// arithmetic is independent of batch width, so padding doesn't matter).
+fn seq_reference(plan: &Arc<Plan>, sig: &[f32]) -> Vec<f32> {
+    let mut block = SignalBlock::from_signals(&[sig.to_vec()]).unwrap();
+    plan.apply(&mut block, Direction::Adjoint, &ExecPolicy::Seq).unwrap();
+    block.signal(0)
+}
+
+fn seq_coordinator(
+    plan: &Arc<Plan>,
+    config: ServeConfig,
+    registry: Option<Arc<PlanRegistry>>,
+) -> Coordinator {
+    let p = Arc::clone(plan);
+    let batch = config.max_batch;
+    Coordinator::start_with_registry(
+        move || {
+            Ok(Box::new(NativeGftBackend::with_policy(
+                p,
+                TransformDirection::Forward,
+                batch,
+                None,
+                ExecPolicy::Seq,
+            )?) as Box<dyn Backend>)
+        },
+        config,
+        registry,
+    )
+    .unwrap()
+}
+
+/// Bounded wait: a hang here is the deadlock the suite exists to catch.
+fn bounded(t: &fastes::serve::Ticket) -> Result<Vec<f32>, ServeError> {
+    t.wait_timeout(WAIT).expect("coordinator wedged: no reply within the deadlock bound")
+}
+
+#[test]
+fn slow_backend_sheds_load_typed_and_accepted_requests_stay_bitwise_correct() {
+    let _chaos = Chaos::begin();
+    faults::install("serve.backend", FaultPlan::always(FaultAction::SleepMs(15)));
+
+    let n = 16;
+    let plan = plan_of(n, 70);
+    let coord = seq_coordinator(
+        &plan,
+        ServeConfig { max_batch: 1, queue_capacity: 2, ..Default::default() },
+        None,
+    );
+
+    let mut accepted = Vec::new();
+    let mut rejections = 0u64;
+    for k in 0..30u64 {
+        let sig = signal_of(n, 1000 + k);
+        match coord.submit_with(sig.clone(), SubmitOptions::default()) {
+            Ok(t) => accepted.push((sig, t)),
+            Err(ServeError::Rejected(r)) => {
+                assert_eq!(r.code(), "queue_full", "slow backend must shed as QueueFull: {r}");
+                assert!(
+                    r.retry_after_ms().unwrap() >= 1,
+                    "retry-after hint must be actionable"
+                );
+                rejections += 1;
+            }
+            Err(other) => panic!("unexpected error class: {other}"),
+        }
+    }
+    assert!(rejections > 0, "a 15 ms/batch backend with a 2-deep queue must shed load");
+    assert!(!accepted.is_empty(), "some requests must be accepted");
+
+    // every accepted request is answered, bitwise equal to Seq
+    for (sig, t) in &accepted {
+        let out = bounded(t).expect("accepted request must succeed");
+        assert_eq!(out, seq_reference(&plan, sig), "accepted reply diverged from Seq");
+    }
+    let m = coord.shutdown();
+    assert_eq!(m.completed, accepted.len() as u64);
+    assert_eq!(m.rejected_queue_full, rejections);
+    assert_eq!(m.errors, 0);
+}
+
+#[test]
+fn backend_panic_fails_one_batch_and_serving_continues() {
+    let _chaos = Chaos::begin();
+    // second batch panics; everything else is healthy
+    faults::install("serve.backend", FaultPlan::once_at(FaultAction::Panic, 1));
+
+    let n = 12;
+    let plan = plan_of(n, 71);
+    let coord =
+        seq_coordinator(&plan, ServeConfig { max_batch: 1, ..Default::default() }, None);
+
+    // sequential submits so each request is its own batch (max_batch=1)
+    let s0 = signal_of(n, 2000);
+    let t0 = coord.submit_with(s0.clone(), SubmitOptions::default()).unwrap();
+    assert_eq!(bounded(&t0).unwrap(), seq_reference(&plan, &s0));
+
+    let s1 = signal_of(n, 2001);
+    let t1 = coord.submit_with(s1, SubmitOptions::default()).unwrap();
+    match bounded(&t1) {
+        Err(ServeError::Backend(msg)) => {
+            assert!(msg.contains("panic"), "typed panic error expected, got {msg:?}");
+        }
+        other => panic!("panicking batch must fail typed, got {:?}", other.map(|_| ())),
+    }
+
+    // the worker survived: later requests serve normally and bitwise
+    let s2 = signal_of(n, 2002);
+    let t2 = coord.submit_with(s2.clone(), SubmitOptions::default()).unwrap();
+    assert_eq!(bounded(&t2).unwrap(), seq_reference(&plan, &s2));
+
+    assert_eq!(faults::fired_count("serve.backend"), 1);
+    let m = coord.shutdown();
+    assert_eq!(m.panics_contained, 1, "exactly one contained panic");
+    assert_eq!(m.errors, 1, "the panicking batch failed exactly its own job");
+    assert_eq!(m.completed, 2);
+}
+
+#[test]
+fn corrupt_artifact_is_a_per_request_error_never_process_fatal() {
+    let _chaos = Chaos::begin();
+    // the first registry disk read is truncated to 10 bytes
+    faults::install("registry.load", FaultPlan::once_at(FaultAction::Truncate(10), 0));
+
+    let n = 10;
+    let plan_a = plan_of(n, 72); // resident default
+    let plan_b = plan_of(n, 73); // only on disk
+    let key_b = plan_b.content_checksum();
+    let dir = std::env::temp_dir().join(format!("fastes-chaos-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join(format!("{key_b:016x}.fastplan")), plan_b.to_bytes()).unwrap();
+
+    let registry = Arc::new(PlanRegistry::with_search_dirs(8, vec![dir.clone()]));
+    registry.install_default(Arc::clone(&plan_a));
+    let coord = seq_coordinator(
+        &plan_a,
+        ServeConfig { max_batch: 1, ..Default::default() },
+        Some(Arc::clone(&registry)),
+    );
+
+    let sig = signal_of(n, 3000);
+    let route_b = SubmitOptions { plan: Some(key_b), ..Default::default() };
+
+    // request 1: the truncated read is a typed per-request rejection
+    match coord.submit_with(sig.clone(), route_b.clone()) {
+        Err(ServeError::Rejected(Rejected::PlanUnavailable { reason })) => {
+            assert!(reason.contains(&format!("{key_b:016x}")), "{reason}");
+        }
+        other => panic!("corrupt artifact must reject typed, got {:?}", other.map(|_| ())),
+    }
+    assert_eq!(registry.stats().load_errors, 1);
+
+    // request 2: the fault is exhausted — the same artifact now loads and
+    // serves bitwise-correctly
+    let t = coord.submit_with(sig.clone(), route_b).unwrap();
+    assert_eq!(bounded(&t).unwrap(), seq_reference(&plan_b, &sig));
+
+    // the default route was never disturbed
+    let t = coord.submit_with(sig.clone(), SubmitOptions::default()).unwrap();
+    assert_eq!(bounded(&t).unwrap(), seq_reference(&plan_a, &sig));
+
+    let m = coord.shutdown();
+    assert_eq!(m.rejected_plan_unavailable, 1);
+    assert_eq!(m.completed, 2);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn expired_deadline_is_answered_without_executing() {
+    let _chaos = Chaos::begin();
+    // every batch takes ≥ 40 ms, so a queued 5 ms deadline must expire
+    faults::install("serve.backend", FaultPlan::always(FaultAction::SleepMs(40)));
+
+    let n = 8;
+    let plan = plan_of(n, 74);
+    let coord =
+        seq_coordinator(&plan, ServeConfig { max_batch: 1, ..Default::default() }, None);
+
+    let head = coord.submit_with(signal_of(n, 4000), SubmitOptions::default()).unwrap();
+    let doomed = coord
+        .submit_with(
+            signal_of(n, 4001),
+            SubmitOptions {
+                deadline: Some(Instant::now() + Duration::from_millis(5)),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    match bounded(&doomed) {
+        Err(ServeError::Rejected(Rejected::DeadlineExceeded)) => {}
+        other => panic!("queued-past-deadline job must reject typed, got {:?}", other.map(|_| ())),
+    }
+    assert!(bounded(&head).is_ok());
+
+    let m = coord.shutdown();
+    assert_eq!(m.rejected_deadline, 1);
+    assert_eq!(m.completed, 1, "the expired job must never reach the backend");
+}
+
+#[test]
+fn hot_swap_drains_inflight_on_old_plan_while_new_requests_use_new_checksum() {
+    let _chaos = Chaos::begin();
+    // slow batches so r1 is genuinely in flight when the swap happens
+    faults::install("serve.backend", FaultPlan::always(FaultAction::SleepMs(25)));
+
+    let n = 14;
+    let plan_a = plan_of(n, 75);
+    let plan_b = plan_of(n, 76);
+    assert_ne!(plan_a.content_checksum(), plan_b.content_checksum());
+
+    let registry = Arc::new(PlanRegistry::new(8));
+    let key_a = registry.install_default(Arc::clone(&plan_a));
+    let coord = seq_coordinator(
+        &plan_a,
+        ServeConfig { max_batch: 1, ..Default::default() },
+        Some(Arc::clone(&registry)),
+    );
+
+    // r1 resolves plan A at submit time and starts draining on it
+    let s1 = signal_of(n, 5000);
+    let r1 = coord.submit_with(s1.clone(), SubmitOptions::default()).unwrap();
+
+    // atomic hot swap while r1 is in flight
+    let key_b = registry.install_default(Arc::clone(&plan_b));
+    assert_eq!(registry.stats().default_checksum, Some(key_b));
+
+    // r2 submitted after the swap resolves plan B
+    let s2 = signal_of(n, 5001);
+    let r2 = coord.submit_with(s2.clone(), SubmitOptions::default()).unwrap();
+
+    assert_eq!(
+        bounded(&r1).unwrap(),
+        seq_reference(&plan_a, &s1),
+        "in-flight request must complete on the OLD plan"
+    );
+    assert_eq!(
+        bounded(&r2).unwrap(),
+        seq_reference(&plan_b, &s2),
+        "post-swap request must serve on the NEW plan"
+    );
+    // the old plan stays resident (and addressable) until evicted
+    assert!(registry.get(key_a).is_ok());
+    let m = coord.shutdown();
+    assert_eq!(m.completed, 2);
+    assert_eq!(m.errors, 0);
+}
+
+#[test]
+fn interactive_class_preempts_batch_class_under_injected_slowness() {
+    let _chaos = Chaos::begin();
+    faults::install("serve.backend", FaultPlan::always(FaultAction::SleepMs(50)));
+
+    let n = 8;
+    let plan = plan_of(n, 77);
+    let coord =
+        seq_coordinator(&plan, ServeConfig { max_batch: 1, ..Default::default() }, None);
+
+    // occupy the worker, then queue batch before interactive
+    let head = coord.submit_with(signal_of(n, 6000), SubmitOptions::default()).unwrap();
+    let batch_job = coord
+        .submit_with(
+            signal_of(n, 6001),
+            SubmitOptions { priority: Priority::Batch, ..Default::default() },
+        )
+        .unwrap();
+    let interactive = coord.submit_with(signal_of(n, 6002), SubmitOptions::default()).unwrap();
+
+    assert!(bounded(&head).is_ok());
+    assert!(bounded(&interactive).is_ok());
+    // the batch-class job runs a full 50 ms service slot after the
+    // interactive one, so it cannot have been answered yet
+    assert!(
+        batch_job.wait_timeout(Duration::ZERO).is_none(),
+        "batch job answered before interactive under contention"
+    );
+    assert!(bounded(&batch_job).is_ok());
+    coord.shutdown();
+}

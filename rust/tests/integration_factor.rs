@@ -4,9 +4,11 @@
 //! integration scale.
 
 use fastes::baselines;
+use fastes::factor::checkpoint::{plan_path, sidecar_path};
 use fastes::factor::{
-    oracle, FactorExec, GeneralFactorizer, GeneralOptions, SpectrumRule, SymCheckpoint,
-    SymFactorizer, SymOptions, SymRunControl,
+    load_checkpoint, mat_checksum, oracle, save_sym_checkpoint, CheckpointMeta, FactorExec,
+    GeneralFactorizer, GeneralOptions, SpectrumRule, SymCheckpoint, SymFactorizer, SymOptions,
+    SymRunControl,
 };
 use fastes::graphs;
 use fastes::linalg::{eigh, Mat, Rng64};
@@ -218,6 +220,114 @@ fn resume_reproduces_the_uninterrupted_plan_checksum() {
     assert_eq!(resumed.spectrum, full.spectrum);
     assert_eq!(resumed.objective_trace, full.objective_trace);
     assert_eq!(resumed.plan().content_checksum(), full.plan().content_checksum());
+}
+
+#[test]
+fn fuzz_checkpoint_resume_survives_truncation_bitflips_and_garbage() {
+    // robustness contract for `--resume`: `load_checkpoint` on a damaged
+    // pair must always return a typed Err — never panic, never accept a
+    // mutated sidecar or plan. The sidecar's FNV-1a-64 is computed over
+    // the document with the checksum field zeroed, so any byte change
+    // outside the stamped hex changes the computed sum, and any change
+    // inside it changes the stored one; the `.fastplan` half carries its
+    // own trailing checksum with the same property.
+    let mut rng = Rng64::new(914);
+    let x = Mat::randn(16, 16, &mut rng);
+    let s = &x + &x.transpose();
+
+    // capture a real mid-run checkpoint and persist the pair
+    let mut cap: Option<SymCheckpoint> = None;
+    let mut ctrl = SymRunControl {
+        checkpoint_every: 8,
+        halt_after: Some(24),
+        on_checkpoint: Some(Box::new(|ck: &SymCheckpoint| cap = Some(ck.clone()))),
+    };
+    SymFactorizer::new(&s, 64, SymOptions::default()).run_controlled(&mut ctrl);
+    drop(ctrl);
+    let ck = cap.expect("halted run emits a checkpoint");
+    let meta = CheckpointMeta {
+        kind: "sym".to_string(),
+        budget: 64,
+        max_sweeps: SymOptions::default().max_sweeps,
+        eps: SymOptions::default().eps,
+        full_update: false,
+        checkpoint_every: 8,
+        problem_n: 16,
+        problem_seed: 914,
+        problem_kind: "sym".to_string(),
+        matrix_checksum: mat_checksum(&s),
+    };
+    let dir = std::env::temp_dir().join(format!("fastes-fuzz-ckpt-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let base = dir.join("run");
+    save_sym_checkpoint(&base, &meta, &ck).unwrap();
+    assert!(load_checkpoint(&base).is_ok(), "pristine pair must load");
+
+    let sc = sidecar_path(&base);
+    let pp = plan_path(&base);
+    let good_sidecar = std::fs::read(&sc).unwrap();
+    let good_plan = std::fs::read(&pp).unwrap();
+    let restore = |path: &std::path::Path, bytes: &[u8]| std::fs::write(path, bytes).unwrap();
+
+    // zero-length sidecar
+    restore(&sc, &[]);
+    assert!(load_checkpoint(&base).is_err(), "accepted an empty sidecar");
+
+    // prefix truncations of the sidecar (sampled stride + the full tail
+    // where the checksum field lives)
+    let n = good_sidecar.len();
+    let stride = (n / 192).max(1);
+    let cuts = (0..n)
+        .step_by(stride)
+        .chain(n.saturating_sub(48)..n);
+    for cut in cuts {
+        restore(&sc, &good_sidecar[..cut]);
+        assert!(
+            load_checkpoint(&base).is_err(),
+            "accepted a {cut}-byte prefix of the {n}-byte sidecar"
+        );
+    }
+
+    // single-bit flips across the whole sidecar (one bit per byte,
+    // cycling the bit index so every bit position is exercised); a flip
+    // may also break UTF-8 — that is an Err too, never a panic
+    for byte in 0..n {
+        let mut bad = good_sidecar.clone();
+        bad[byte] ^= 1 << (byte % 8);
+        restore(&sc, &bad);
+        assert!(
+            load_checkpoint(&base).is_err(),
+            "accepted a sidecar with bit {} of byte {byte} flipped",
+            byte % 8
+        );
+    }
+
+    // unstructured garbage sidecar (including non-UTF-8 bytes)
+    for len in [1usize, 64, 700] {
+        let blob: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+        restore(&sc, &blob);
+        assert!(load_checkpoint(&base).is_err(), "accepted {len}-byte garbage sidecar");
+    }
+
+    // intact sidecar, damaged `.fastplan` half: truncated, bit-flipped,
+    // zero-length, missing
+    restore(&sc, &good_sidecar);
+    restore(&pp, &good_plan[..good_plan.len() / 2]);
+    assert!(load_checkpoint(&base).is_err(), "accepted a truncated plan half");
+    let mut bad_plan = good_plan.clone();
+    bad_plan[good_plan.len() / 3] ^= 0x10;
+    restore(&pp, &bad_plan);
+    assert!(load_checkpoint(&base).is_err(), "accepted a bit-flipped plan half");
+    restore(&pp, &[]);
+    assert!(load_checkpoint(&base).is_err(), "accepted an empty plan half");
+    std::fs::remove_file(&pp).unwrap();
+    assert!(load_checkpoint(&base).is_err(), "accepted a missing plan half");
+
+    // restored pair loads (and resumes) again — the fuzzing left no trace
+    restore(&pp, &good_plan);
+    let (meta2, _) = load_checkpoint(&base).unwrap();
+    assert_eq!(meta2, meta);
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 #[test]

@@ -276,3 +276,51 @@ fn ragged_batches_error_through_the_public_surface() {
     assert_eq!(ok, vec![1.0, 2.0, 3.0, 4.0]);
     coord.shutdown();
 }
+
+#[test]
+fn fuzz_from_bytes_survives_truncation_bitflips_and_garbage() {
+    // robustness contract for the serving edge: `Plan::from_bytes` on a
+    // hostile buffer must always return a typed Err — never panic, never
+    // accept a mutated artifact. The trailing FNV-1a-64 makes the last
+    // property provable for single-bit flips: the per-byte step
+    // h ← (h ⊕ b)·prime is bijective mod 2^64, so a flip before the
+    // trailer always changes the computed checksum, and a flip inside the
+    // trailer changes the stored one.
+    let mut rng = Rng64::new(519);
+    let gplan = Plan::from(random_gplan(10, 40, &mut rng)).build();
+    let tplan = Plan::from(random_tplan(10, 40, &mut rng)).build();
+    for (label, plan) in [("G", &gplan), ("T", &tplan)] {
+        let good = plan.to_bytes();
+        assert!(Plan::from_bytes(&good).is_ok(), "{label}: pristine bytes must load");
+
+        // zero-length and every prefix truncation
+        assert!(Plan::from_bytes(&[]).is_err(), "accepted the empty artifact");
+        for cut in 0..good.len() {
+            assert!(
+                Plan::from_bytes(&good[..cut]).is_err(),
+                "{label}: accepted a {cut}-byte prefix of {} bytes",
+                good.len()
+            );
+        }
+
+        // every single-bit flip of every byte
+        for byte in 0..good.len() {
+            for bit in 0..8 {
+                let mut bad = good.clone();
+                bad[byte] ^= 1 << bit;
+                assert!(
+                    Plan::from_bytes(&bad).is_err(),
+                    "{label}: accepted artifact with bit {bit} of byte {byte} flipped"
+                );
+            }
+        }
+    }
+
+    // random garbage blobs of assorted sizes (no structure at all)
+    for len in [1usize, 7, 47, 48, 129, 1024] {
+        for _ in 0..25 {
+            let blob: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+            assert!(Plan::from_bytes(&blob).is_err(), "accepted {len}-byte garbage");
+        }
+    }
+}

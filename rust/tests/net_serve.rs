@@ -1,0 +1,363 @@
+//! Loopback integration for the TCP front-end (`fastes::serve::net`):
+//! round trips, malformed frames, oversized frames, client stalls,
+//! mid-reply disconnects, upload hot swaps, and graceful drain.
+
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use fastes::cli::figures::random_gplan;
+use fastes::linalg::Rng64;
+use fastes::plan::{Direction, ExecPolicy, Plan};
+use fastes::serve::net::{
+    self, hex_encode, read_frame, request, write_frame, Json, NetServerOptions,
+};
+use fastes::serve::{
+    Backend, Coordinator, NativeGftBackend, PlanRegistry, ServeConfig, TransformDirection,
+};
+use fastes::transforms::SignalBlock;
+
+fn plan_of(n: usize, seed: u64) -> Arc<Plan> {
+    let mut rng = Rng64::new(seed);
+    Plan::from(random_gplan(n, 8 * n, &mut rng)).build()
+}
+
+fn seq_reference(plan: &Arc<Plan>, sig: &[f32], dir: Direction) -> Vec<f32> {
+    let mut block = SignalBlock::from_signals(&[sig.to_vec()]).unwrap();
+    plan.apply(&mut block, dir, &ExecPolicy::Seq).unwrap();
+    block.signal(0)
+}
+
+/// A running loopback server + the handles to talk to and stop it.
+struct Server {
+    addr: std::net::SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    registry: Arc<PlanRegistry>,
+    thread: Option<std::thread::JoinHandle<fastes::Result<fastes::serve::MetricsSnapshot>>>,
+}
+
+impl Server {
+    fn start(plan: &Arc<Plan>, opts: NetServerOptions) -> Server {
+        let registry = Arc::new(PlanRegistry::new(8));
+        registry.install_default(Arc::clone(plan));
+        let p = Arc::clone(plan);
+        let coordinator = Coordinator::start_with_registry(
+            move || {
+                Ok(Box::new(NativeGftBackend::with_policy(
+                    p,
+                    TransformDirection::Forward,
+                    4,
+                    None,
+                    ExecPolicy::Seq,
+                )?) as Box<dyn Backend>)
+            },
+            ServeConfig { max_batch: 4, ..Default::default() },
+            Some(Arc::clone(&registry)),
+        )
+        .unwrap();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let flag = Arc::clone(&shutdown);
+        let thread = std::thread::spawn(move || net::serve(listener, coordinator, opts, flag));
+        Server { addr, shutdown, registry, thread: Some(thread) }
+    }
+
+    fn connect(&self) -> TcpStream {
+        let s = TcpStream::connect(self.addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        s
+    }
+
+    fn stop(mut self) -> fastes::serve::MetricsSnapshot {
+        self.shutdown.store(true, Ordering::SeqCst);
+        self.thread.take().unwrap().join().unwrap().unwrap()
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn obj(fields: Vec<(&str, Json)>) -> Json {
+    Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn signal_json(sig: &[f32]) -> Json {
+    Json::Arr(sig.iter().map(|&x| Json::f32(x)).collect())
+}
+
+fn reply_signal(reply: &Json) -> Vec<f32> {
+    assert_eq!(reply.get("ok").and_then(|v| v.as_bool()), Some(true), "{reply:?}");
+    reply
+        .get("signal")
+        .and_then(|v| v.as_arr())
+        .expect("reply carries a signal")
+        .iter()
+        .map(|v| v.as_f32().expect("finite number"))
+        .collect()
+}
+
+#[test]
+fn loopback_forward_adjoint_metrics_round_trip_then_clean_drain() {
+    let n = 16;
+    let plan = plan_of(n, 80);
+    let server = Server::start(&plan, NetServerOptions::default());
+    let mut conn = server.connect();
+
+    let mut rng = Rng64::new(81);
+    let sig: Vec<f32> = (0..n).map(|_| rng.randn() as f32).collect();
+
+    // forward (analysis) must be bitwise the in-process Seq answer
+    let reply = request(
+        &mut conn,
+        &obj(vec![("op", Json::Str("forward".into())), ("signal", signal_json(&sig))]),
+    )
+    .unwrap();
+    let fwd = reply_signal(&reply);
+    assert_eq!(fwd, seq_reference(&plan, &sig, Direction::Adjoint), "wire round trip not bitwise");
+
+    // adjoint (synthesis) of the forward answer recovers the signal
+    // (orthonormal chain), and is bitwise the in-process synthesis
+    let reply = request(
+        &mut conn,
+        &obj(vec![("op", Json::Str("adjoint".into())), ("signal", signal_json(&fwd))]),
+    )
+    .unwrap();
+    let back = reply_signal(&reply);
+    assert_eq!(back, seq_reference(&plan, &fwd, Direction::Forward));
+    for (a, b) in sig.iter().zip(back.iter()) {
+        assert!((a - b).abs() < 1e-3, "adjoint∘forward should be ≈ identity: {a} vs {b}");
+    }
+
+    // metrics endpoint sees both requests and the registry
+    let reply = request(&mut conn, &obj(vec![("op", Json::Str("metrics".into()))])).unwrap();
+    let m = reply.get("metrics").expect("metrics object");
+    assert_eq!(m.get("completed").and_then(|v| v.as_u64()), Some(2));
+    let reg = m.get("registry").expect("registry stats present");
+    assert_eq!(reg.get("resident").and_then(|v| v.as_u64()), Some(1));
+
+    // graceful drain: the server returns the final snapshot, every reply
+    // already received
+    let final_m = server.stop();
+    assert_eq!(final_m.completed, 2);
+    assert_eq!(final_m.errors, 0);
+}
+
+#[test]
+fn malformed_json_gets_bad_request_and_the_connection_stays_usable() {
+    let n = 8;
+    let plan = plan_of(n, 82);
+    let server = Server::start(&plan, NetServerOptions::default());
+    let mut conn = server.connect();
+
+    write_frame(&mut conn, b"this is not json {").unwrap();
+    let reply = Json::parse(std::str::from_utf8(&read_frame(&mut conn).unwrap()).unwrap()).unwrap();
+    assert_eq!(reply.get("ok").and_then(|v| v.as_bool()), Some(false));
+    assert_eq!(reply.get("code").and_then(|v| v.as_str()), Some("bad_request"));
+
+    // an unknown op and a missing signal are also per-request errors
+    let reply = request(&mut conn, &obj(vec![("op", Json::Str("explode".into()))])).unwrap();
+    assert_eq!(reply.get("code").and_then(|v| v.as_str()), Some("bad_request"));
+    let reply = request(&mut conn, &obj(vec![("op", Json::Str("forward".into()))])).unwrap();
+    assert_eq!(reply.get("code").and_then(|v| v.as_str()), Some("bad_request"));
+
+    // same connection still serves real work
+    let sig = vec![1.0f32; n];
+    let reply = request(
+        &mut conn,
+        &obj(vec![("op", Json::Str("forward".into())), ("signal", signal_json(&sig))]),
+    )
+    .unwrap();
+    assert_eq!(reply_signal(&reply), seq_reference(&plan, &sig, Direction::Adjoint));
+    server.stop();
+}
+
+#[test]
+fn oversized_frame_closes_only_that_connection() {
+    let n = 8;
+    let plan = plan_of(n, 83);
+    let server = Server::start(
+        &plan,
+        NetServerOptions { max_frame: 1024, ..Default::default() },
+    );
+
+    let mut bad = server.connect();
+    // a length prefix far beyond the cap: the server must drop the
+    // connection without reading (or allocating) the body
+    bad.write_all(&(10_000_000u32).to_le_bytes()).unwrap();
+    bad.flush().unwrap();
+    let mut buf = [0u8; 1];
+    // read returns 0 (EOF) once the server closes
+    let closed = matches!(std::io::Read::read(&mut bad, &mut buf), Ok(0));
+    assert!(closed, "server must close the oversized-frame connection");
+
+    // the server itself is unharmed
+    let mut good = server.connect();
+    let sig = vec![0.5f32; n];
+    let reply = request(
+        &mut good,
+        &obj(vec![("op", Json::Str("forward".into())), ("signal", signal_json(&sig))]),
+    )
+    .unwrap();
+    assert_eq!(reply_signal(&reply), seq_reference(&plan, &sig, Direction::Adjoint));
+    server.stop();
+}
+
+#[test]
+fn stalled_client_is_disconnected_but_the_server_keeps_serving() {
+    let n = 8;
+    let plan = plan_of(n, 84);
+    let server = Server::start(
+        &plan,
+        NetServerOptions {
+            read_poll: Duration::from_millis(10),
+            stall_timeout: Duration::from_millis(100),
+            ..Default::default()
+        },
+    );
+
+    let mut staller = server.connect();
+    // two bytes of a frame header, then silence: a mid-frame stall
+    staller.write_all(&[7, 0]).unwrap();
+    staller.flush().unwrap();
+    std::thread::sleep(Duration::from_millis(400));
+    let mut buf = [0u8; 1];
+    let closed = matches!(std::io::Read::read(&mut staller, &mut buf), Ok(0));
+    assert!(closed, "server must disconnect a client stalled mid-frame");
+
+    let mut good = server.connect();
+    let sig = vec![-1.5f32; n];
+    let reply = request(
+        &mut good,
+        &obj(vec![("op", Json::Str("forward".into())), ("signal", signal_json(&sig))]),
+    )
+    .unwrap();
+    assert_eq!(reply_signal(&reply), seq_reference(&plan, &sig, Direction::Adjoint));
+    server.stop();
+}
+
+#[test]
+fn client_disconnecting_mid_reply_is_tolerated() {
+    let n = 8;
+    let plan = plan_of(n, 85);
+    let server = Server::start(&plan, NetServerOptions::default());
+
+    // fire a request and vanish without reading the reply
+    for k in 0..3 {
+        let mut conn = server.connect();
+        let sig = vec![k as f32; n];
+        write_frame(
+            &mut conn,
+            obj(vec![("op", Json::Str("forward".into())), ("signal", signal_json(&sig))])
+                .render()
+                .as_bytes(),
+        )
+        .unwrap();
+        drop(conn);
+    }
+
+    // the server still answers well-behaved clients afterwards
+    let mut good = server.connect();
+    let sig = vec![2.5f32; n];
+    let reply = request(
+        &mut good,
+        &obj(vec![("op", Json::Str("forward".into())), ("signal", signal_json(&sig))]),
+    )
+    .unwrap();
+    assert_eq!(reply_signal(&reply), seq_reference(&plan, &sig, Direction::Adjoint));
+    server.stop();
+}
+
+#[test]
+fn upload_plan_hot_swaps_the_default_route_over_the_wire() {
+    let n = 12;
+    let plan_a = plan_of(n, 86);
+    let plan_b = plan_of(n, 87);
+    let key_b = plan_b.content_checksum();
+    let server = Server::start(&plan_a, NetServerOptions::default());
+    let mut conn = server.connect();
+
+    let sig: Vec<f32> = (0..n).map(|i| (i as f32) - 4.0).collect();
+
+    // before the swap: default route serves plan A
+    let reply = request(
+        &mut conn,
+        &obj(vec![("op", Json::Str("forward".into())), ("signal", signal_json(&sig))]),
+    )
+    .unwrap();
+    assert_eq!(reply_signal(&reply), seq_reference(&plan_a, &sig, Direction::Adjoint));
+
+    // upload plan B as the new default
+    let reply = request(
+        &mut conn,
+        &obj(vec![
+            ("op", Json::Str("upload_plan".into())),
+            ("bytes", Json::Str(hex_encode(&plan_b.to_bytes()))),
+            ("default", Json::Bool(true)),
+        ]),
+    )
+    .unwrap();
+    assert_eq!(reply.get("ok").and_then(|v| v.as_bool()), Some(true), "{reply:?}");
+    assert_eq!(
+        reply.get("checksum").and_then(|v| v.as_str()),
+        Some(format!("{key_b:016x}").as_str())
+    );
+    assert_eq!(reply.get("n").and_then(|v| v.as_u64()), Some(n as u64));
+    assert_eq!(server.registry.stats().default_checksum, Some(key_b));
+
+    // after the swap: the same request serves plan B; plan A stays
+    // addressable by explicit checksum
+    let reply = request(
+        &mut conn,
+        &obj(vec![("op", Json::Str("forward".into())), ("signal", signal_json(&sig))]),
+    )
+    .unwrap();
+    assert_eq!(reply_signal(&reply), seq_reference(&plan_b, &sig, Direction::Adjoint));
+    let key_a = plan_a.content_checksum();
+    let reply = request(
+        &mut conn,
+        &obj(vec![
+            ("op", Json::Str("forward".into())),
+            ("signal", signal_json(&sig)),
+            ("plan", Json::Str(format!("{key_a:016x}"))),
+        ]),
+    )
+    .unwrap();
+    assert_eq!(reply_signal(&reply), seq_reference(&plan_a, &sig, Direction::Adjoint));
+
+    // corrupt upload bytes are a per-request error
+    let mut bytes = plan_b.to_bytes();
+    bytes.truncate(bytes.len() / 2);
+    let reply = request(
+        &mut conn,
+        &obj(vec![
+            ("op", Json::Str("upload_plan".into())),
+            ("bytes", Json::Str(hex_encode(&bytes))),
+        ]),
+    )
+    .unwrap();
+    assert_eq!(reply.get("code").and_then(|v| v.as_str()), Some("bad_request"));
+
+    // unknown routed checksum is a typed plan_unavailable
+    let reply = request(
+        &mut conn,
+        &obj(vec![
+            ("op", Json::Str("forward".into())),
+            ("signal", signal_json(&sig)),
+            ("plan", Json::Str("00000000deadbeef".into())),
+        ]),
+    )
+    .unwrap();
+    assert_eq!(reply.get("code").and_then(|v| v.as_str()), Some("plan_unavailable"));
+
+    let m = server.stop();
+    assert_eq!(m.errors, 0);
+}
