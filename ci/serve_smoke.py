@@ -14,8 +14,22 @@ then exercises the wire protocol end to end:
   3. `adjoint` of that reply round-trips back to the input (the G-chain
      is orthonormal, so synthesis(analysis(x)) ~= x)
   4. `metrics` now reports both transforms completed and zero errors
-  5. SIGTERM drains gracefully: the process prints "drained:" and
+  5. `filter` with an explicit diagonal response is **bitwise equal**
+     to the unfused reference computed client-side: analysis
+     coefficients from step 2, scaled in float32 (NumPy when available,
+     struct-emulated single-rounding otherwise), synthesized back via
+     an `adjoint` request
+  6. a kernel `filter` (heat) resolves against the plan's attached
+     spectrum and is non-expansive (heat responses lie in (0, 1])
+  7. `wavelet` with J scales returns the band-major (J+1)*n stack
+  8. `topk` returns ascending indices whose values are bitwise the
+     analysis coefficients of step 2, dominating every dropped one
+  9. SIGTERM drains gracefully: the process prints "drained:" and
      exits 0 with every in-flight reply already delivered
+
+Steps 5-8 need the served plan to be a version-2 `.fastplan` carrying
+its Lemma-1 spectrum (`fastes factor --kind sym --save-plan` and
+`fastes gft --save-plan` both write one).
 
 Any hang is bounded by socket/process timeouts; any protocol or
 drain failure exits non-zero with a diagnostic.
@@ -32,6 +46,33 @@ import threading
 import time
 
 TIMEOUT = 120.0  # generous: debug builds on loaded CI runners
+
+try:
+    import numpy as np
+except ImportError:  # struct-based f32 emulation below stays exact
+    np = None
+
+
+def f32(v):
+    """Round a float to its nearest binary32, returned as a Python float."""
+    return struct.unpack("<f", struct.pack("<f", v))[0]
+
+
+def f32_mul(a, b):
+    """Single-rounded binary32 product — the server's f32 arithmetic.
+
+    The f64 product of two binary32 values is exact (24+24 < 53 mantissa
+    bits), so rounding it once to binary32 is bitwise the correctly
+    rounded f32 multiply; the NumPy path and the struct fallback agree.
+    """
+    if np is not None:
+        return float(np.float32(a) * np.float32(b))
+    return f32(f32(a) * f32(b))
+
+
+def bits(v):
+    """The binary32 bit pattern of a float, for bitwise comparisons."""
+    return struct.pack("<f", f32(v))
 
 
 def send_frame(sock, obj):
@@ -131,6 +172,85 @@ def main():
             fail(f"metrics report {m['completed']} completed, want >= 2")
         if m["errors"] != 0:
             fail(f"metrics report {m['errors']} errors")
+
+        # ---- fused filter vs unfused loopback reference, bitwise ----
+        # `forward` is the analysis GFT, so y above is x-hat = U^T x.
+        # The fused filter is U diag(h) U^T x; the unfused reference is
+        # one client-side f32 diagonal scale of x-hat synthesized back
+        # through an `adjoint` request. Every traversal runs on the
+        # server, so fused-vs-unfused is isolated to the fusion itself.
+        xhat = y
+        h = [((3 * i) % 9 - 4) / 4.0 for i in range(n)]  # exact in f32
+        scaled = [f32_mul(c, hi) for c, hi in zip(xhat, h)]
+        ref = request(sock, {"op": "adjoint", "signal": scaled})
+        if not ref.get("ok"):
+            fail(f"reference synthesis refused: {ref}")
+        want = ref["signal"]
+
+        flt = request(sock, {"op": "filter", "signal": x, "response": h})
+        if not flt.get("ok"):
+            fail(f"filter refused: {flt}")
+        got = flt["signal"]
+        if len(got) != n:
+            fail(f"filter returned {len(got)} values, want {n}")
+        diverged = [i for i in range(n) if bits(got[i]) != bits(want[i])]
+        if diverged:
+            i = diverged[0]
+            fail(
+                f"fused filter diverged bitwise from the unfused reference at "
+                f"{len(diverged)}/{n} indices (first: [{i}] {got[i]} != {want[i]})"
+            )
+        print(f"serve smoke: fused filter == unfused reference bitwise ({n} values)")
+
+        # ---- kernel filter resolved on the plan's spectrum ----
+        kflt = request(sock, {"op": "filter", "signal": x, "kernel": "heat", "param": 0.5})
+        if not kflt.get("ok"):
+            fail(f"kernel filter refused (plan missing its spectrum?): {kflt}")
+        if len(kflt["signal"]) != n:
+            fail(f"kernel filter returned {len(kflt['signal'])} values, want {n}")
+        ein = sum(f32(v) ** 2 for v in x)
+        eout = sum(f32(v) ** 2 for v in kflt["signal"])
+        if eout > ein * (1.0 + 1e-3):
+            fail(f"heat filter expanded signal energy: {eout} > {ein}")
+        print(f"serve smoke: heat kernel filter ok (energy {eout:.3f} <= {ein:.3f})")
+
+        # ---- wavelet bank: band-major (J+1)*n stack ----
+        scales = 2
+        wav = request(sock, {"op": "wavelet", "signal": x, "scales": scales})
+        if not wav.get("ok"):
+            fail(f"wavelet refused: {wav}")
+        if len(wav["signal"]) != (scales + 1) * n:
+            fail(
+                f"wavelet reply has {len(wav['signal'])} values, "
+                f"want (J+1)*n = {(scales + 1) * n}"
+            )
+        print(f"serve smoke: wavelet bank returned {scales + 1} bands of {n}")
+
+        # ---- top-k: sparse spectral payload consistent with x-hat ----
+        k = 8
+        top = request(sock, {"op": "topk", "signal": x, "k": k})
+        if not top.get("ok"):
+            fail(f"topk refused: {top}")
+        idx, vals = top["indices"], top["values"]
+        if len(idx) != len(vals) or len(idx) > k:
+            fail(f"topk payload malformed: {len(idx)} indices / {len(vals)} values")
+        if idx != sorted(idx):
+            fail(f"topk indices not ascending: {idx}")
+        for i, v in zip(idx, vals):
+            if bits(v) != bits(xhat[i]):
+                fail(f"topk value at spectral index {i} is {v}, want coefficient {xhat[i]}")
+        kept = set(idx)
+        floor = min((abs(f32(v)) for v in vals), default=0.0)
+        worst = max((abs(f32(c)) for i, c in enumerate(xhat) if i not in kept), default=0.0)
+        if len(idx) == k and worst > floor:
+            fail(f"topk dropped a coefficient of magnitude {worst} > kept floor {floor}")
+        print(f"serve smoke: topk kept {len(idx)}/{n} coefficients, bitwise-consistent")
+
+        m = request(sock, {"op": "metrics"})["metrics"]
+        if m["completed"] < 7:
+            fail(f"metrics report {m['completed']} completed, want >= 7")
+        if m["errors"] != 0:
+            fail(f"metrics report {m['errors']} errors after spectral ops")
         sock.close()
 
         # graceful drain: SIGTERM, clean exit, "drained:" in the log

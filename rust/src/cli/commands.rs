@@ -16,6 +16,7 @@ use crate::factor::{
 };
 use crate::graphs::{self, RealWorldGraph};
 use crate::linalg::{eigh, Mat, Rng64};
+use crate::ops::{FilterOp, SpectralKernel, TopK, WaveletBank};
 use crate::plan::{Direction, ExecPolicy, FastOperator, Plan};
 use crate::runtime::autotune::{self, TuneEffort, TuneProfile, TunedConfig, WallTimer};
 use crate::serve::{
@@ -391,6 +392,20 @@ fn build_graph(a: &Args, rng: &mut Rng64) -> crate::Result<graphs::Graph> {
         "er" | "erdos-renyi" => graphs::erdos_renyi(n, 0.3, rng),
         "sensor" => graphs::sensor(n, rng),
         "ring" => graphs::ring(n),
+        "masked-grid" => {
+            // square-ish grid covering n vertices; cells beyond n plus a
+            // random --mask fraction are masked out (left isolated) —
+            // the irregular-domain shape spectral operators run on
+            let rows = ((n as f64).sqrt().round() as usize).max(1);
+            let cols = (n + rows - 1) / rows;
+            let p: f64 = a.get("mask", 0.2)?;
+            if !(0.0..1.0).contains(&p) {
+                bail!("--mask must be in [0, 1) (got {p})");
+            }
+            let mask: Vec<bool> =
+                (0..rows * cols).map(|i| i < n && !rng.bernoulli(p)).collect();
+            graphs::masked_grid(rows, cols, &mask)
+        }
         "minnesota" => graphs::real_world_substitute(RealWorldGraph::Minnesota, scale, rng),
         "protein" => graphs::real_world_substitute(RealWorldGraph::HumanProtein, scale, rng),
         "email" => graphs::real_world_substitute(RealWorldGraph::Email, scale, rng),
@@ -446,6 +461,163 @@ pub fn gft(a: &Args) -> crate::Result<()> {
         );
         maybe_save_plan(a, || f.plan())?;
     }
+    Ok(())
+}
+
+/// `fastes filter` — run the fused spectral-operator workloads on a
+/// factored fast eigenspace: a kernel graph filter (default), a Hammond
+/// wavelet bank (`--wavelet J`) or top-k / threshold spectral
+/// compression (`--topk K`, `--threshold T`). The operator comes from a
+/// saved version-2 artifact (`--plan FILE.fastplan`, spectrum attached)
+/// or an in-process factorization of a `--graph` Laplacian (the Lemma-1
+/// spectrum is attached automatically). The filter path verifies the
+/// fused single-pass route **bitwise** against the unfused
+/// adjoint → row-scale → forward reference and reports the flop
+/// accounting of both.
+pub fn filter(a: &Args) -> crate::Result<()> {
+    let seed: u64 = a.get("seed", 1)?;
+    let batch: usize = a.get("batch", 8)?;
+    let exec = a.get_str("exec", "seq");
+    let policy = exec_policy_from_args(a, &exec)?;
+    let mut rng = Rng64::new(seed);
+    let plan_path = a.get_str("plan", "");
+    let plan: Arc<Plan> = if plan_path.is_empty() {
+        let alpha: usize = a.get("alpha", 2)?;
+        let sweeps: usize = a.get("sweeps", 2)?;
+        let graph = build_graph(a, &mut rng)?;
+        let n = graph.n;
+        let l = graph.laplacian();
+        let g = budget(alpha, n);
+        println!(
+            "factoring {} graph n={n} |E|={} with g={g}…",
+            a.get_str("graph", "community"),
+            graph.num_edges()
+        );
+        let f =
+            SymFactorizer::new(&l, g, SymOptions { max_sweeps: sweeps, ..Default::default() })
+                .run();
+        println!("factored: rel_err={:.4}", f.relative_error(&l));
+        // SymFactorization::plan() attaches the Lemma-1 spectrum, so
+        // kernel-based responses resolve without a saved v2 artifact
+        f.plan()
+    } else {
+        if a.has("n") || a.has("graph") || a.has("alpha") {
+            bail!("--n/--graph/--alpha conflict with --plan (the artifact fixes the operator)");
+        }
+        let plan = Plan::load(&plan_path)?;
+        println!(
+            "loaded {plan_path}: kind={:?} n={} stages={} spectrum={}",
+            plan.kind(),
+            plan.n(),
+            plan.len(),
+            if plan.spectrum().is_some() { "attached (v2)" } else { "none (v1)" }
+        );
+        plan
+    };
+    let n = plan.n();
+    let signals: Vec<Vec<f32>> =
+        (0..batch).map(|_| (0..n).map(|_| rng.randn() as f32).collect()).collect();
+    let block = SignalBlock::from_signals(&signals)?;
+
+    // --topk K / --threshold T: sparse spectral compression
+    let k: usize = a.get("topk", 0)?;
+    let thr: f32 = a.get("threshold", 0.0f32)?;
+    if k > 0 || thr > 0.0 {
+        let rule = TopK { k, threshold: thr };
+        let t0 = Instant::now();
+        let payloads = rule.compress_spectral(&plan, &block, &policy)?;
+        let elapsed = t0.elapsed();
+        // reference spectral coefficients for the retained-energy report
+        let mut spectral = block.clone();
+        plan.apply(&mut spectral, Direction::Adjoint, &ExecPolicy::Seq)?;
+        let b = spectral.batch;
+        for (j, p) in payloads.iter().enumerate() {
+            let total: f64 = (0..n)
+                .map(|i| {
+                    let v = spectral.data[i * b + j] as f64;
+                    v * v
+                })
+                .sum();
+            let kept: f64 = p.values.iter().map(|&v| (v as f64) * (v as f64)).sum();
+            println!(
+                "signal {j}: kept {}/{n} coefficients ({} B sparse vs {} B dense, \
+                 {:.1}% of spectral energy)",
+                p.len(),
+                8 * p.len(),
+                4 * n,
+                100.0 * kept / total.max(f64::MIN_POSITIVE)
+            );
+        }
+        println!("compressed batch={batch} in {elapsed:.2?} (k={k}, threshold={thr})");
+        return Ok(());
+    }
+
+    // --wavelet J: Hammond bank over the shared-prefix DAG
+    let j: usize = a.get("wavelet", 0)?;
+    if j > 0 {
+        let bank = WaveletBank::hammond(Arc::clone(&plan), j)?;
+        let t0 = Instant::now();
+        let bands = bank.analyze(&block, &policy)?;
+        let elapsed = t0.elapsed();
+        let plan_flops = FastOperator::flops(plan.as_ref());
+        println!(
+            "Hammond bank: {} bands (scaling + {j} wavelets) analyzed batch={batch} in \
+             {elapsed:.2?}",
+            bank.bands()
+        );
+        println!(
+            "shared-prefix flops/apply {} vs {} as independent filters \
+             ({} reverse traversals saved)",
+            bank.flops(),
+            bank.bands() * (2 * plan_flops + n),
+            bank.bands() - 1
+        );
+        for (b, band) in bands.iter().enumerate() {
+            let energy: f64 = band.data.iter().map(|&v| (v as f64) * (v as f64)).sum();
+            let label = if b == 0 {
+                "scaling".to_string()
+            } else {
+                format!("scale {:.4}", bank.scales()[b - 1])
+            };
+            println!("band {b} ({label}): energy {energy:.4}");
+        }
+        return Ok(());
+    }
+
+    // default: one spectral filter, fused vs unfused
+    let response = a.get_str("response", "heat");
+    let param: f64 = a.get("param", 0.5)?;
+    let kernel = SpectralKernel::from_name(&response, param)?;
+    let op = FilterOp::from_kernel(Arc::clone(&plan), &kernel)?;
+    println!(
+        "filter {response}({param}) n={n} batch={batch}: fused flops/apply {} \
+         (= 2·{plan_flops} + {n}, one reverse + one forward traversal)",
+        FastOperator::flops(&op),
+        plan_flops = FastOperator::flops(plan.as_ref())
+    );
+    let mut fused = block.clone();
+    let t0 = Instant::now();
+    op.apply(&mut fused, Direction::Forward, &policy)?;
+    let el_fused = t0.elapsed();
+    // unfused sequential reference: adjoint → explicit row scale → forward
+    let mut want = block.clone();
+    let t0 = Instant::now();
+    plan.apply(&mut want, Direction::Adjoint, &ExecPolicy::Seq)?;
+    let b = want.batch;
+    for (i, &hi) in op.response_f32().iter().enumerate() {
+        for v in &mut want.data[i * b..(i + 1) * b] {
+            *v *= hi;
+        }
+    }
+    plan.apply(&mut want, Direction::Forward, &ExecPolicy::Seq)?;
+    let el_ref = t0.elapsed();
+    if fused.data != want.data {
+        bail!("fused filter diverged from the unfused sequential reference");
+    }
+    println!(
+        "fused apply ({exec}) {el_fused:.2?} vs unfused sequential {el_ref:.2?} — \
+         outputs bitwise identical"
+    );
     Ok(())
 }
 
@@ -885,6 +1057,9 @@ pub fn bench(a: &Args) -> crate::Result<()> {
     if a.has("factor") {
         return bench_factor(a);
     }
+    if a.has("filter") {
+        return bench_filter(a);
+    }
     let sizes = a.get_list("sizes", &[256, 512, 1024])?;
     let batch: usize = a.get("batch", 64)?;
     let alpha: usize = a.get("alpha", 2)?;
@@ -1023,6 +1198,121 @@ pub fn bench(a: &Args) -> crate::Result<()> {
             cfg.tile_cols,
             cfg.min_work,
             spawn_cfg.min_work,
+            entries.join(",\n")
+        );
+        std::fs::write(&out_path, json)
+            .map_err(|e| anyhow::anyhow!("cannot write {out_path}: {e}"))?;
+        println!("wrote {out_path}");
+    }
+    Ok(())
+}
+
+/// `fastes bench --filter` — fused-vs-unfused spectral filter benchmark.
+/// Per size, times the fused single-pass [`FilterOp`] against the
+/// unfused adjoint → row-scale → forward route (same plan, same heat
+/// response, bitwise-identical outputs — asserted before timing), both
+/// sequential and pooled. `--json` stamps the ns/stage rows into
+/// `BENCH_apply.json` (or `--out PATH`) as a `"bench": "filter"`
+/// document, so the fusion win is tracked alongside the plain apply
+/// trajectory.
+fn bench_filter(a: &Args) -> crate::Result<()> {
+    let sizes = a.get_list("sizes", &[256, 512, 1024])?;
+    let batch: usize = a.get("batch", 64)?;
+    let alpha: usize = a.get("alpha", 2)?;
+    let seed: u64 = a.get("seed", 1)?;
+    let pool = exec_policy_from_args(a, "pool")?;
+    let cfg = pool.config().expect("pool policy carries a config").clone();
+    let threads = cfg.threads;
+    let kernel_isa = cfg.kernel_isa();
+    println!("kernel ISA: {} (detected: {})", kernel_isa.as_str(), KernelIsa::detect().as_str());
+    let mut entries = Vec::new();
+    for &n in &sizes {
+        if n < 2 {
+            bail!("--sizes entries must be ≥ 2 (got {n})");
+        }
+        let g = budget(alpha, n);
+        // deterministic per-size seed so sizes can be re-run independently
+        let mut rng = Rng64::new(seed ^ ((n as u64) << 20));
+        let spectrum: Vec<f64> = (0..n).map(|_| rng.randn().abs() * 2.0).collect();
+        let plan = Plan::from(random_gplan(n, g, &mut rng)).spectrum(spectrum).build();
+        let op = FilterOp::from_kernel(Arc::clone(&plan), &SpectralKernel::Heat { t: 0.5 })?;
+        let h32: Vec<f32> = op.response_f32().to_vec();
+        let signals: Vec<Vec<f32>> =
+            (0..batch).map(|_| (0..n).map(|_| rng.randn() as f32).collect()).collect();
+        // the unfused reference route, shared by the check and the timings
+        let unfused = |blk: &mut SignalBlock, policy: &ExecPolicy| {
+            plan.apply(blk, Direction::Adjoint, policy).expect("dims match");
+            let b = blk.batch;
+            for (i, &hi) in h32.iter().enumerate() {
+                for v in &mut blk.data[i * b..(i + 1) * b] {
+                    *v *= hi;
+                }
+            }
+            plan.apply(blk, Direction::Forward, policy).expect("dims match");
+        };
+        // bitwise identity first — the speedup rows only mean anything if
+        // both routes compute the same answer
+        let mut fused_blk = SignalBlock::from_signals(&signals)?;
+        op.apply(&mut fused_blk, Direction::Forward, &ExecPolicy::Seq)?;
+        let mut ref_blk = SignalBlock::from_signals(&signals)?;
+        unfused(&mut ref_blk, &ExecPolicy::Seq);
+        if fused_blk.data != ref_blk.data {
+            bail!("fused filter diverged from the unfused reference at n={n}");
+        }
+
+        // a filter traverses every stage twice (reverse + forward)
+        let stages2 = 2 * g;
+        let mut timed = Vec::new();
+        for (label, is_fused, policy) in [
+            (format!("n={n} fused seq"), true, &ExecPolicy::Seq),
+            (format!("n={n} unfused seq"), false, &ExecPolicy::Seq),
+            (format!("n={n} fused pooled/{threads}t"), true, &pool),
+            (format!("n={n} unfused pooled/{threads}t"), false, &pool),
+        ] {
+            let mut blk = SignalBlock::from_signals(&signals)?;
+            let t = crate::bench_util::bench(&label, 5, 0.05, || {
+                if is_fused {
+                    op.apply(&mut blk, Direction::Forward, policy).expect("dims match");
+                } else {
+                    unfused(&mut blk, policy);
+                }
+                blk.data[0]
+            });
+            println!("{}", t.line());
+            timed.push(t);
+        }
+        println!(
+            "n={n} g={g} batch={batch}: fused {:.2}x vs unfused (seq), {:.2}x (pooled/{threads}t)",
+            timed[1].min_s / timed[0].min_s,
+            timed[3].min_s / timed[2].min_s
+        );
+        let mode = |t: &crate::bench_util::BenchResult| {
+            format!(
+                "{{\"ns_per_stage\": {:.4}, \"min_s\": {:.9}}}",
+                t.min_s * 1e9 / stages2 as f64,
+                t.min_s
+            )
+        };
+        entries.push(format!(
+            "    {{\"n\": {n}, \"stages\": {g}, \"traversed_stages\": {stages2}, \
+             \"fused_seq\": {}, \"unfused_seq\": {}, \"fused_pooled\": {}, \
+             \"unfused_pooled\": {}, \"fused_speedup_seq\": {:.4}, \
+             \"fused_speedup_pooled\": {:.4}}}",
+            mode(&timed[0]),
+            mode(&timed[1]),
+            mode(&timed[2]),
+            mode(&timed[3]),
+            timed[1].min_s / timed[0].min_s,
+            timed[3].min_s / timed[2].min_s
+        ));
+    }
+    if a.has("json") {
+        let out_path = a.get_str("out", "BENCH_apply.json");
+        let json = format!(
+            "{{\n  \"bench\": \"filter\",\n  \"kernel_isa\": \"{}\",\n  \"seed\": {seed},\n  \
+             \"alpha\": {alpha},\n  \"batch\": {batch},\n  \"threads\": {threads},\n  \
+             \"response\": \"heat(0.5)\",\n  \"results\": [\n{}\n  ]\n}}\n",
+            kernel_isa.as_str(),
             entries.join(",\n")
         );
         std::fs::write(&out_path, json)

@@ -11,6 +11,10 @@
 //!   reproducing the uninterrupted result bitwise).
 //! * `gft` — build a graph, factor its Laplacian, report the fast-GFT
 //!   accuracy and flop counts.
+//! * `filter` — run the fused spectral-operator workloads: a kernel
+//!   graph filter (fused single-pass, verified bitwise against the
+//!   unfused reference), a Hammond wavelet bank (`--wavelet J`) or
+//!   top-k spectral compression (`--topk K` / `--threshold T`).
 //! * `serve` — run the serving coordinator on a factored GFT and report
 //!   latency/throughput (`--exec pool` executes the fused plan on the
 //!   persistent worker pool; `spawn`/`seq` are the legacy strategies;
@@ -107,6 +111,7 @@ pub fn run(args: Args) -> crate::Result<()> {
         "repro" => figures::run(&args),
         "factor" => commands::factor(&args),
         "gft" => commands::gft(&args),
+        "filter" => commands::filter(&args),
         "serve" => commands::serve(&args),
         "schedule" => commands::schedule(&args),
         "tune" => commands::tune(&args),
@@ -146,9 +151,25 @@ COMMANDS
                        bitwise-identical to the uninterrupted result)
                        [--save-plan FILE.fastplan]
   gft                  fast GFT of a graph Laplacian
-                       [--graph community|er|sensor|minnesota|protein|email|facebook]
+                       [--graph community|er|sensor|ring|masked-grid|
+                        minnesota|protein|email|facebook]
                        [--n N] [--alpha A] [--directed] [--seed S]
-                       [--save-plan FILE.fastplan]
+                       [--mask F]  (masked-grid: fraction of vertices
+                       masked out, default 0.2)
+                       [--save-plan FILE.fastplan]  (v2 artifact carrying
+                       the Lemma-1 spectrum — spectral operators need it)
+  filter               fused spectral operators on a factored eigenspace
+                       [--plan FILE.fastplan | --graph G --n N --alpha A]
+                       [--response heat|lowpass|highpass|hammond]
+                       [--param F]  (diffusion time / cutoff / scale,
+                       default 0.5)
+                       [--wavelet J]  (Hammond bank: scaling + J wavelet
+                       bands over one shared reverse traversal)
+                       [--topk K] [--threshold T]  (sparse spectral
+                       compression: largest-|v| coefficients)
+                       [--batch B] [--seed S] [--exec seq|spawn|pool|auto]
+                       (filter path asserts fused == unfused bitwise and
+                       prints the one-reverse + one-forward flop account)
   serve                serve batched GFT requests
                        [--backend native|pjrt] [--requests N] [--batch B]
                        [--alpha A] [--artifacts DIR]
@@ -165,7 +186,8 @@ COMMANDS
                        --scheduled is the legacy alias for --exec spawn)
                        [--listen ADDR]  (hardened TCP front-end speaking
                        the length-prefixed JSON protocol — forward/
-                       adjoint/metrics/upload_plan — with deadlines,
+                       adjoint/filter/wavelet/topk/metrics/upload_plan
+                       — with deadlines,
                        priorities, typed rejections and graceful drain
                        on SIGTERM; native backend only)
                        [--registry-cap N]  (resident-plan LRU capacity,
@@ -191,6 +213,10 @@ COMMANDS
                        [--factor]  (benchmark plan construction instead:
                        sym/gen ns-per-step at 1 vs T threads, writes
                        BENCH_factor.json; [--sweeps K])
+                       [--filter]  (benchmark the fused spectral filter
+                       against the unfused adjoint+scale+forward route,
+                       seq and pooled; --json stamps the fused-vs-unfused
+                       ns/stage rows into BENCH_apply.json)
   kernels              report SIMD kernel dispatch: detected / default /
                        available ISAs (FASTES_KERNEL and --kernel pin it)
   eigen                symmetric eigensolver smoke [--n N] [--seed S]

@@ -93,7 +93,7 @@ impl GeneralFactorization {
     /// the plan's [`Direction::Adjoint`](crate::plan::Direction) is the
     /// chain inverse `T̄⁻¹`.
     pub fn plan(&self) -> std::sync::Arc<crate::plan::Plan> {
-        crate::plan::Plan::from(&self.chain).build()
+        crate::plan::Plan::from(&self.chain).spectrum(self.spectrum.clone()).build()
     }
 
     /// Relative Frobenius error `‖C − C̄‖_F / ‖C‖_F`.

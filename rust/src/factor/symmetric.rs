@@ -106,7 +106,7 @@ impl SymFactorization {
     /// [`FastOperator`](crate::plan::FastOperator), and the payload of a
     /// `.fastplan` artifact.
     pub fn plan(&self) -> std::sync::Arc<crate::plan::Plan> {
-        crate::plan::Plan::from(&self.chain).build()
+        crate::plan::Plan::from(&self.chain).spectrum(self.spectrum.clone()).build()
     }
 }
 

@@ -191,6 +191,40 @@ pub fn grid(rows: usize, cols: usize) -> Graph {
     Graph::undirected_from_edges(rows * cols, edges)
 }
 
+/// 2-D grid graph on `rows × cols` vertices with a vertex mask:
+/// `mask[r * cols + c] == false` removes every edge incident to that
+/// vertex, leaving it isolated (a zero row/column in the Laplacian — the
+/// irregular-domain shape spectral-operator workloads run on). The
+/// vertex set itself is untouched, so indices stay grid-addressable.
+///
+/// Panics when `mask.len() != rows * cols`.
+pub fn masked_grid(rows: usize, cols: usize, mask: &[bool]) -> Graph {
+    assert_eq!(
+        mask.len(),
+        rows * cols,
+        "mask length must be rows*cols ({} != {}*{})",
+        mask.len(),
+        rows,
+        cols
+    );
+    let idx = |r: usize, c: usize| r * cols + c;
+    let mut edges = Vec::new();
+    for r in 0..rows {
+        for c in 0..cols {
+            if !mask[idx(r, c)] {
+                continue;
+            }
+            if c + 1 < cols && mask[idx(r, c + 1)] {
+                edges.push((idx(r, c), idx(r, c + 1)));
+            }
+            if r + 1 < rows && mask[idx(r + 1, c)] {
+                edges.push((idx(r, c), idx(r + 1, c)));
+            }
+        }
+    }
+    Graph::undirected_from_edges(rows * cols, edges)
+}
+
 /// The four real-world graphs of the paper's Figs. 2/3/6.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum RealWorldGraph {
@@ -333,6 +367,40 @@ mod tests {
         assert_eq!(g.n, 20);
         assert_eq!(g.num_edges(), 4 * 4 + 3 * 5);
         assert!(g.is_connected());
+    }
+
+    #[test]
+    fn masked_grid_isolates_masked_vertices() {
+        // mask out the centre vertex and one corner of a 3×4 grid
+        let mut mask = vec![true; 12];
+        mask[5] = false; // (r=1, c=1)
+        mask[0] = false; // corner (r=0, c=0)
+        let g = masked_grid(3, 4, &mask);
+        assert_eq!(g.n, 12, "masked vertices stay in the vertex set");
+        let full = grid(3, 4);
+        assert!(g.num_edges() < full.num_edges());
+        let d = g.degrees();
+        assert_eq!(d[5], 0, "masked centre vertex is isolated");
+        assert_eq!(d[0], 0, "masked corner vertex is isolated");
+        // no surviving edge touches a masked vertex
+        for &(u, v) in &g.edges {
+            assert!(mask[u] && mask[v], "edge ({u},{v}) touches a masked vertex");
+        }
+        // the Laplacian stays symmetric with zero rows at masked vertices
+        let l = g.laplacian();
+        for i in 0..12 {
+            for j in 0..12 {
+                assert_eq!(l[(i, j)], l[(j, i)], "Laplacian asymmetric at ({i},{j})");
+            }
+            if !mask[i] {
+                for j in 0..12 {
+                    assert_eq!(l[(i, j)], 0.0, "masked row {i} must be zero");
+                }
+            }
+        }
+        // all-true mask reproduces the plain grid exactly
+        let all = masked_grid(3, 4, &vec![true; 12]);
+        assert_eq!(all.edges, full.edges);
     }
 
     #[test]

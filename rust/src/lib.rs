@@ -95,6 +95,7 @@ pub mod cli;
 pub mod factor;
 pub mod graphs;
 pub mod linalg;
+pub mod ops;
 pub mod plan;
 pub mod prop;
 pub mod runtime;

@@ -1,0 +1,226 @@
+//! Spectral operators: first-class filtering workloads on top of a
+//! factored fast eigenspace.
+//!
+//! The paper's fast GFT `Ū ≈ U` is rarely the product by itself — the
+//! downstream workloads compose it into **spectral operators**
+//! `y = Ū diag(h(s̄)) Ūᵀ x`: graph filters, Hammond-style wavelet frames,
+//! and coefficient compression for bandwidth-limited clients. This module
+//! makes those first-class citizens of the whole stack:
+//!
+//! * [`FilterOp`] — a spectral filter **fused into one plan execution**:
+//!   reverse stream traversal → in-register diagonal response → forward
+//!   stream traversal, one cache-resident pass per column tile, no
+//!   intermediate [`SignalBlock`](crate::transforms::SignalBlock)
+//!   materialization. Implements
+//!   [`FastOperator`](crate::plan::FastOperator), so autotuning, SIMD
+//!   kernels, the worker pool and the conformance matrix apply unchanged.
+//! * [`WaveletBank`] — a Hammond-style wavelet filter bank (kernel +
+//!   scaling function evaluated on the plan's spectrum `s̄`) executed as a
+//!   **shared-prefix DAG**: one reverse traversal computes the spectral
+//!   coefficients once, then each of the `J + 1` bands applies its
+//!   diagonal response and one forward traversal.
+//! * [`TopK`] — top-k / threshold coefficient compression returning
+//!   sparse `(index, value)` spectral payloads.
+//! * [`SpectralKernel`] — the analytic response functions (heat kernel,
+//!   ideal low/high-pass, the Hammond wavelet kernel) evaluated on a
+//!   plan's Lemma-1 spectrum.
+//!
+//! Kernel-based operators require a plan with an attached spectrum
+//! (version-2 `.fastplan` artifacts; [`crate::plan::PlanBuilder::spectrum`]).
+//! Explicit-response operators work on any G-chain plan.
+
+pub mod filter;
+pub mod topk;
+pub mod wavelet;
+
+pub use filter::FilterOp;
+pub use topk::{SparseSpectrum, TopK};
+pub use wavelet::WaveletBank;
+
+use anyhow::bail;
+
+/// Hammond wavelet design constants (sgwt-style): the kernel's
+/// polynomial/decay crossovers sit at `x1 = 1` and `x2 = 2`, and the
+/// spectrum floor used for scale placement is `lmax / K`.
+const HAMMOND_X1: f64 = 1.0;
+const HAMMOND_X2: f64 = 2.0;
+const HAMMOND_K: f64 = 20.0;
+
+/// An analytic spectral response function `h(λ)`, evaluated pointwise on
+/// a plan's Lemma-1 spectrum to produce the diagonal of
+/// `Ū diag(h(s̄)) Ūᵀ`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SpectralKernel {
+    /// Heat / diffusion kernel `h(λ) = exp(−t·max(λ, 0))`.
+    Heat {
+        /// Diffusion time.
+        t: f64,
+    },
+    /// Ideal low-pass: `h(λ) = 1` for `λ ≤ cutoff`, else `0`.
+    Lowpass {
+        /// Pass-band edge.
+        cutoff: f64,
+    },
+    /// Ideal high-pass: `h(λ) = 1` for `λ ≥ cutoff`, else `0`.
+    Highpass {
+        /// Stop-band edge.
+        cutoff: f64,
+    },
+    /// Hammond spectral-graph-wavelet kernel `g(scale·λ)`: `x²` below
+    /// `x1`, the cubic spline `−5 + 11x − 6x² + x³` on `[x1, x2]`, and
+    /// `x2²·x1² / x²` beyond (continuous, band-pass).
+    Hammond {
+        /// Wavelet scale `t_j` multiplying the eigenvalue.
+        scale: f64,
+    },
+    /// The wavelet bank's scaling (father) function: the smooth low-pass
+    /// `h(λ) = exp(−(λ / (0.3·lmax))⁴)` that captures the spectral mass
+    /// the band-pass kernels miss near zero.
+    Scaling {
+        /// Largest spectrum magnitude of the target plan.
+        lmax: f64,
+    },
+}
+
+impl SpectralKernel {
+    /// Evaluate the response at one eigenvalue.
+    pub fn eval(&self, lambda: f64) -> f64 {
+        match *self {
+            SpectralKernel::Heat { t } => (-t * lambda.max(0.0)).exp(),
+            SpectralKernel::Lowpass { cutoff } => {
+                if lambda <= cutoff {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            SpectralKernel::Highpass { cutoff } => {
+                if lambda >= cutoff {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            SpectralKernel::Hammond { scale } => hammond_g(scale * lambda),
+            SpectralKernel::Scaling { lmax } => {
+                let denom = (0.3 * lmax.abs()).max(f64::MIN_POSITIVE);
+                (-(lambda / denom).powi(4)).exp()
+            }
+        }
+    }
+
+    /// Evaluate the response on a whole spectrum.
+    pub fn response(&self, spectrum: &[f64]) -> Vec<f64> {
+        spectrum.iter().map(|&l| self.eval(l)).collect()
+    }
+
+    /// Parse a kernel by wire/CLI name plus its single parameter
+    /// (`heat` → diffusion time, `lowpass`/`highpass` → cutoff,
+    /// `hammond` → scale).
+    pub fn from_name(name: &str, param: f64) -> crate::Result<SpectralKernel> {
+        if !param.is_finite() {
+            bail!("spectral kernel parameter must be finite (got {param})");
+        }
+        Ok(match name {
+            "heat" => SpectralKernel::Heat { t: param },
+            "lowpass" => SpectralKernel::Lowpass { cutoff: param },
+            "highpass" => SpectralKernel::Highpass { cutoff: param },
+            "hammond" => SpectralKernel::Hammond { scale: param },
+            other => bail!(
+                "unknown spectral kernel '{other}' (known: heat, lowpass, highpass, hammond)"
+            ),
+        })
+    }
+}
+
+/// The Hammond wavelet generating kernel `g(x)` (band-pass, `g(0) = 0`,
+/// maximum near `x = 1`).
+fn hammond_g(x: f64) -> f64 {
+    let x = x.abs();
+    if x < HAMMOND_X1 {
+        x * x
+    } else if x <= HAMMOND_X2 {
+        -5.0 + 11.0 * x - 6.0 * x * x + x * x * x
+    } else {
+        HAMMOND_X2 * HAMMOND_X2 * HAMMOND_X1 * HAMMOND_X1 / (x * x)
+    }
+}
+
+/// Log-spaced Hammond wavelet scales `t_1 > … > t_J` for a spectrum with
+/// largest magnitude `lmax`: `t_1 = x2 / lmin` (so the coarsest wavelet
+/// peaks at the spectrum floor `lmin = lmax / K`) down to `t_J = x1 /
+/// lmax` (finest wavelet peaking at the spectrum ceiling).
+pub fn hammond_scales(lmax: f64, j: usize) -> Vec<f64> {
+    let lmax = lmax.abs().max(f64::MIN_POSITIVE);
+    let lmin = lmax / HAMMOND_K;
+    let smax = HAMMOND_X2 / lmin;
+    let smin = HAMMOND_X1 / lmax;
+    if j == 1 {
+        return vec![smax];
+    }
+    (0..j)
+        .map(|b| {
+            let frac = b as f64 / (j - 1) as f64;
+            (smax.ln() + frac * (smin.ln() - smax.ln())).exp()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hammond_kernel_shape() {
+        // band-pass: zero at 0, continuous at the crossovers, decaying tail
+        assert_eq!(hammond_g(0.0), 0.0);
+        assert!((hammond_g(1.0) - 1.0).abs() < 1e-12, "g(x1) = 1");
+        assert!((hammond_g(2.0) - 1.0).abs() < 1e-12, "g(x2) = 1");
+        let below = hammond_g(1.0 - 1e-9);
+        let above = hammond_g(1.0 + 1e-9);
+        assert!((below - above).abs() < 1e-6, "continuous at x1");
+        assert!(hammond_g(10.0) < 0.1, "decays beyond x2");
+        assert_eq!(hammond_g(-1.5), hammond_g(1.5), "even in x");
+    }
+
+    #[test]
+    fn scales_are_log_spaced_descending() {
+        let s = hammond_scales(4.0, 5);
+        assert_eq!(s.len(), 5);
+        for w in s.windows(2) {
+            assert!(w[0] > w[1], "scales must descend: {s:?}");
+        }
+        assert!((s[0] - HAMMOND_X2 / (4.0 / HAMMOND_K)).abs() < 1e-9);
+        assert!((s[4] - HAMMOND_X1 / 4.0).abs() < 1e-12);
+        assert_eq!(hammond_scales(4.0, 1), vec![HAMMOND_X2 / (4.0 / HAMMOND_K)]);
+    }
+
+    #[test]
+    fn kernels_evaluate_sanely() {
+        assert_eq!(SpectralKernel::Heat { t: 0.5 }.eval(0.0), 1.0);
+        assert!(SpectralKernel::Heat { t: 0.5 }.eval(4.0) < 0.2);
+        // negative eigenvalues (general symmetric S) clamp instead of blow up
+        assert_eq!(SpectralKernel::Heat { t: 0.5 }.eval(-3.0), 1.0);
+        assert_eq!(SpectralKernel::Lowpass { cutoff: 1.0 }.eval(0.5), 1.0);
+        assert_eq!(SpectralKernel::Lowpass { cutoff: 1.0 }.eval(1.5), 0.0);
+        assert_eq!(SpectralKernel::Highpass { cutoff: 1.0 }.eval(1.5), 1.0);
+        assert_eq!(SpectralKernel::Highpass { cutoff: 1.0 }.eval(0.5), 0.0);
+        let sc = SpectralKernel::Scaling { lmax: 2.0 };
+        assert!((sc.eval(0.0) - 1.0).abs() < 1e-12);
+        assert!(sc.eval(2.0) < 1e-4, "scaling function vanishes at lmax");
+    }
+
+    #[test]
+    fn kernel_parsing() {
+        assert_eq!(
+            SpectralKernel::from_name("heat", 0.7).unwrap(),
+            SpectralKernel::Heat { t: 0.7 }
+        );
+        assert_eq!(
+            SpectralKernel::from_name("hammond", 2.0).unwrap(),
+            SpectralKernel::Hammond { scale: 2.0 }
+        );
+        assert!(SpectralKernel::from_name("bogus", 1.0).is_err());
+        assert!(SpectralKernel::from_name("heat", f64::NAN).is_err());
+    }
+}

@@ -1,0 +1,212 @@
+//! [`TopK`]: deterministic top-k / threshold compression of spectral
+//! coefficients into sparse `(index, value)` payloads.
+//!
+//! Bandwidth-limited clients rarely want all `n` spectral coefficients —
+//! they want the `k` largest-magnitude ones (or everything above a noise
+//! floor). `TopK` selects them **deterministically**: candidates are
+//! ranked by `(|value| descending, index ascending)` using IEEE
+//! `total_cmp`, so ties and signed zeros break the same way on every
+//! platform, and the emitted payload is always in ascending index order.
+
+use anyhow::bail;
+
+use crate::plan::{Direction, ExecPolicy, Plan};
+use crate::transforms::SignalBlock;
+
+/// A sparse spectral payload: coefficient `values[i]` lives at spectral
+/// index `indices[i]`. Indices are strictly ascending.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SparseSpectrum {
+    /// Spectral indices (strictly ascending, each `< n`).
+    pub indices: Vec<u32>,
+    /// Coefficient values, parallel to `indices`.
+    pub values: Vec<f32>,
+}
+
+impl SparseSpectrum {
+    /// Number of retained coefficients.
+    pub fn len(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// `true` when nothing survived selection.
+    pub fn is_empty(&self) -> bool {
+        self.indices.is_empty()
+    }
+
+    /// Expand back to a dense length-`n` vector (zeros elsewhere).
+    pub fn to_dense(&self, n: usize) -> crate::Result<Vec<f32>> {
+        let mut out = vec![0.0f32; n];
+        for (&i, &v) in self.indices.iter().zip(&self.values) {
+            let Some(slot) = out.get_mut(i as usize) else {
+                bail!("sparse index {i} out of range for dense length {n}");
+            };
+            *slot = v;
+        }
+        Ok(out)
+    }
+}
+
+/// Top-k / threshold selection rule. `k == 0` means "no count limit"
+/// (threshold-only); `threshold == 0.0` keeps every nonzero coefficient
+/// up to the count limit. Both may be combined.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TopK {
+    /// Maximum number of coefficients to keep (`0` = unlimited).
+    pub k: usize,
+    /// Magnitude floor: coefficients with `|v| < threshold` are dropped.
+    pub threshold: f32,
+}
+
+impl TopK {
+    /// A pure count-limited rule.
+    pub fn k(k: usize) -> TopK {
+        TopK { k, threshold: 0.0 }
+    }
+
+    /// A pure magnitude-floor rule.
+    pub fn threshold(threshold: f32) -> TopK {
+        TopK { k: 0, threshold }
+    }
+
+    /// Validate the rule (a degenerate "keep nothing at any magnitude"
+    /// rule and non-finite floors are rejected at construction time so
+    /// the serve edge can fail requests early).
+    pub fn validate(&self) -> crate::Result<()> {
+        if !self.threshold.is_finite() || self.threshold < 0.0 {
+            bail!("top-k threshold must be finite and >= 0 (got {})", self.threshold);
+        }
+        if self.k == 0 && self.threshold == 0.0 {
+            bail!("top-k rule must bound the payload: set k > 0 and/or threshold > 0");
+        }
+        Ok(())
+    }
+
+    /// Compress one coefficient vector. Selection is by
+    /// `(|value| desc, index asc)` under `total_cmp`; the survivors are
+    /// emitted in ascending index order. Exact zeros never survive.
+    pub fn compress(&self, x: &[f32]) -> SparseSpectrum {
+        let mut ranked: Vec<(u32, f32)> = x
+            .iter()
+            .enumerate()
+            .filter(|(_, &v)| v.abs() >= self.threshold && v != 0.0)
+            .map(|(i, &v)| (i as u32, v))
+            .collect();
+        ranked.sort_by(|a, b| {
+            b.1.abs().total_cmp(&a.1.abs()).then_with(|| a.0.cmp(&b.0))
+        });
+        if self.k > 0 {
+            ranked.truncate(self.k);
+        }
+        ranked.sort_by_key(|&(i, _)| i);
+        SparseSpectrum {
+            indices: ranked.iter().map(|&(i, _)| i).collect(),
+            values: ranked.iter().map(|&(_, v)| v).collect(),
+        }
+    }
+
+    /// Compress the **spectral coefficients** of a batch: one reverse
+    /// traversal (`x̂ = Ūᵀ X` under `policy`) followed by per-column
+    /// [`TopK::compress`]. Returns one payload per batch column.
+    pub fn compress_spectral(
+        &self,
+        plan: &Plan,
+        block: &SignalBlock,
+        policy: &ExecPolicy,
+    ) -> crate::Result<Vec<SparseSpectrum>> {
+        self.validate()?;
+        if block.n != plan.n() {
+            bail!("block n {} != plan n {}", block.n, plan.n());
+        }
+        let mut spectral = block.clone();
+        plan.apply(&mut spectral, Direction::Adjoint, policy)?;
+        let (n, b) = (spectral.n, spectral.batch);
+        let mut col = vec![0.0f32; n];
+        let mut out = Vec::with_capacity(b);
+        for j in 0..b {
+            for (i, c) in col.iter_mut().enumerate() {
+                *c = spectral.data[i * b + j];
+            }
+            out.push(self.compress(&col));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cli::figures::random_gplan;
+    use crate::linalg::Rng64;
+
+    #[test]
+    fn selects_largest_magnitudes_in_index_order() {
+        let x = [0.1f32, -5.0, 0.0, 3.0, -0.2, 4.0];
+        let got = TopK::k(3).compress(&x);
+        assert_eq!(got.indices, vec![1, 3, 5]);
+        assert_eq!(got.values, vec![-5.0, 3.0, 4.0]);
+        assert_eq!(got.len(), 3);
+    }
+
+    #[test]
+    fn threshold_drops_small_and_zero_entries() {
+        let x = [0.1f32, -5.0, 0.0, 3.0, -0.2, 4.0];
+        let got = TopK::threshold(0.2).compress(&x);
+        assert_eq!(got.indices, vec![1, 3, 4, 5]);
+        assert_eq!(got.values, vec![-5.0, 3.0, -0.2, 4.0]);
+        // combined rule: floor first, then count cap
+        let both = TopK { k: 2, threshold: 0.2 }.compress(&x);
+        assert_eq!(both.indices, vec![1, 5]);
+        // zeros never survive even with threshold 0
+        let z = TopK::k(10).compress(&[0.0f32, -0.0, 1.0]);
+        assert_eq!(z.indices, vec![2]);
+    }
+
+    #[test]
+    fn ties_break_by_ascending_index() {
+        let x = [2.0f32, -2.0, 2.0, 1.0];
+        let got = TopK::k(2).compress(&x);
+        assert_eq!(got.indices, vec![0, 1], "equal magnitudes keep lowest indices");
+    }
+
+    #[test]
+    fn dense_round_trip() {
+        let x = [0.0f32, 7.0, 0.0, -1.5];
+        let sp = TopK::k(4).compress(&x);
+        assert_eq!(sp.to_dense(4).unwrap(), x.to_vec());
+        assert!(sp.to_dense(2).is_err(), "out-of-range index rejected");
+    }
+
+    #[test]
+    fn validation_rejects_degenerate_rules() {
+        assert!(TopK { k: 0, threshold: 0.0 }.validate().is_err());
+        assert!(TopK { k: 0, threshold: f32::NAN }.validate().is_err());
+        assert!(TopK { k: 0, threshold: -1.0 }.validate().is_err());
+        assert!(TopK::k(5).validate().is_ok());
+        assert!(TopK::threshold(1e-3).validate().is_ok());
+    }
+
+    #[test]
+    fn spectral_compression_matches_explicit_adjoint() {
+        let mut rng = Rng64::new(9201);
+        let n = 15;
+        let plan = crate::plan::Plan::from(random_gplan(n, 5 * n, &mut rng)).build();
+        let sigs: Vec<Vec<f32>> =
+            (0..3).map(|_| (0..n).map(|_| rng.randn() as f32).collect()).collect();
+        let block = SignalBlock::from_signals(&sigs).unwrap();
+        let rule = TopK::k(4);
+        let got = rule.compress_spectral(&plan, &block, &ExecPolicy::Seq).unwrap();
+        assert_eq!(got.len(), 3);
+        let mut spectral = block.clone();
+        plan.apply(&mut spectral, Direction::Adjoint, &ExecPolicy::Seq).unwrap();
+        for (j, payload) in got.iter().enumerate() {
+            assert!(payload.len() <= 4);
+            let col: Vec<f32> = (0..n).map(|i| spectral.data[i * 3 + j]).collect();
+            assert_eq!(*payload, rule.compress(&col), "column {j}");
+            // every reported value is bitwise the spectral coefficient
+            for (&i, &v) in payload.indices.iter().zip(&payload.values) {
+                assert_eq!(v.to_bits(), col[i as usize].to_bits());
+            }
+        }
+    }
+}

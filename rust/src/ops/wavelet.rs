@@ -1,0 +1,248 @@
+//! [`WaveletBank`]: a Hammond-style spectral graph wavelet frame executed
+//! as a shared-prefix plan DAG.
+//!
+//! A wavelet frame is a bank of `J + 1` spectral filters — one scaling
+//! (father) function capturing the spectral mass near zero plus `J`
+//! band-pass wavelet kernels `g(t_j · λ)` at log-spaced scales. Running
+//! each band as an independent [`FilterOp`](super::FilterOp) would cost
+//! `J + 1` reverse traversals of the same plan on the same input. The
+//! bank instead runs the **shared prefix once**: one reverse traversal
+//! computes the spectral coefficients `x̂ = Ūᵀ x`, then every band
+//! applies its diagonal response to a copy and synthesizes with one
+//! forward traversal — `1` reverse + `J + 1` forward traversals total.
+//! Per band the operations (and their order) are exactly those of the
+//! corresponding `FilterOp`, so each band's output is **bitwise
+//! identical** to filtering with that band alone.
+
+use std::sync::Arc;
+
+use anyhow::bail;
+
+use super::{hammond_scales, SpectralKernel};
+use crate::plan::{Direction, ExecPolicy, FastOperator, Plan};
+use crate::transforms::{ChainKind, SignalBlock};
+
+/// A bank of spectral filters sharing one plan and one analysis prefix.
+#[derive(Clone, Debug)]
+pub struct WaveletBank {
+    plan: Arc<Plan>,
+    /// The wavelet scales `t_1 > … > t_J` (empty for hand-built banks).
+    scales: Vec<f64>,
+    /// Per-band exact responses; band 0 is the scaling function for
+    /// Hammond banks.
+    h64: Vec<Vec<f64>>,
+    /// Per-band rounded responses (bitwise `f32` roundings of `h64`).
+    h32: Vec<Vec<f32>>,
+}
+
+impl WaveletBank {
+    /// Build a bank from explicit per-band responses (each of length
+    /// `plan.n()`, finite). The plan must hold a G-chain.
+    pub fn from_responses(plan: Arc<Plan>, responses: Vec<Vec<f64>>) -> crate::Result<WaveletBank> {
+        if plan.kind() != ChainKind::G {
+            bail!("wavelet banks require a G-chain plan (orthonormal Ū); got a T-chain");
+        }
+        if responses.is_empty() {
+            bail!("wavelet bank needs at least one band");
+        }
+        for (b, h) in responses.iter().enumerate() {
+            if h.len() != plan.n() {
+                bail!("band {b} response length {} != plan dimension {}", h.len(), plan.n());
+            }
+            if let Some(bad) = h.iter().find(|v| !v.is_finite()) {
+                bail!("band {b} response must be finite (got {bad})");
+            }
+        }
+        let h32 = responses.iter().map(|h| h.iter().map(|&v| v as f32).collect()).collect();
+        Ok(WaveletBank { plan, scales: Vec::new(), h64: responses, h32 })
+    }
+
+    /// Build the standard Hammond bank on the plan's attached spectrum:
+    /// band 0 is the scaling function, bands `1..=j` the wavelet kernel
+    /// at `j` log-spaced scales ([`hammond_scales`]). Fails when the plan
+    /// carries no spectrum or `j == 0`.
+    pub fn hammond(plan: Arc<Plan>, j: usize) -> crate::Result<WaveletBank> {
+        if j == 0 {
+            bail!("wavelet bank needs at least one scale (j >= 1)");
+        }
+        let Some(spectrum) = plan.spectrum() else {
+            bail!(
+                "plan carries no spectrum (v1 artifact?) — Hammond banks need a version-2 \
+                 .fastplan with the Lemma-1 spectrum attached"
+            );
+        };
+        let lmax = spectrum.iter().fold(0.0f64, |m, &l| m.max(l.abs()));
+        let scales = hammond_scales(lmax, j);
+        let mut responses =
+            vec![SpectralKernel::Scaling { lmax }.response(spectrum)];
+        for &t in &scales {
+            responses.push(SpectralKernel::Hammond { scale: t }.response(spectrum));
+        }
+        let mut bank = WaveletBank::from_responses(plan, responses)?;
+        bank.scales = scales;
+        Ok(bank)
+    }
+
+    /// The underlying plan.
+    pub fn plan(&self) -> &Arc<Plan> {
+        &self.plan
+    }
+
+    /// Number of bands (scaling function included for Hammond banks).
+    pub fn bands(&self) -> usize {
+        self.h64.len()
+    }
+
+    /// Problem dimension.
+    pub fn n(&self) -> usize {
+        self.plan.n()
+    }
+
+    /// The wavelet scales (empty for hand-built banks).
+    pub fn scales(&self) -> &[f64] {
+        &self.scales
+    }
+
+    /// Per-band rounded (`f32`) responses.
+    pub fn responses_f32(&self) -> &[Vec<f32>] {
+        &self.h32
+    }
+
+    /// Per-band exact (`f64`) responses.
+    pub fn responses(&self) -> &[Vec<f64>] {
+        &self.h64
+    }
+
+    /// Flop count of one bank apply under the shared-prefix DAG: one
+    /// reverse traversal plus, per band, `n` response multiplies and one
+    /// forward traversal.
+    pub fn flops(&self) -> usize {
+        let t = FastOperator::flops(self.plan.as_ref());
+        t + self.bands() * (self.plan.n() + t)
+    }
+
+    /// Analyze a batch: returns one filtered block per band
+    /// (`W_b = Ū diag(h_b) Ūᵀ X`). The shared reverse traversal runs
+    /// once under `policy`; each band then scales a copy and runs one
+    /// forward traversal under the same policy.
+    pub fn analyze(
+        &self,
+        block: &SignalBlock,
+        policy: &ExecPolicy,
+    ) -> crate::Result<Vec<SignalBlock>> {
+        if block.n != self.plan.n() {
+            bail!("block n {} != bank n {}", block.n, self.plan.n());
+        }
+        // shared prefix: x̂ = Ūᵀ X, computed exactly once
+        let mut spectral = block.clone();
+        self.plan.apply(&mut spectral, Direction::Adjoint, policy)?;
+        let b = spectral.batch;
+        let mut out = Vec::with_capacity(self.bands());
+        for h in &self.h32 {
+            let mut band = spectral.clone();
+            for (i, &hi) in h.iter().enumerate() {
+                for v in &mut band.data[i * b..(i + 1) * b] {
+                    *v *= hi;
+                }
+            }
+            self.plan.apply(&mut band, Direction::Forward, policy)?;
+            out.push(band);
+        }
+        Ok(out)
+    }
+
+    /// Analyze a single `f64` vector: one spectral coefficient vector per
+    /// band, synthesized back to the vertex domain.
+    pub fn analyze_vec(&self, x: &[f64]) -> crate::Result<Vec<Vec<f64>>> {
+        if x.len() != self.plan.n() {
+            bail!("vector length {} != bank n {}", x.len(), self.plan.n());
+        }
+        let mut spectral = x.to_vec();
+        self.plan.apply_vec(&mut spectral, Direction::Adjoint)?;
+        let mut out = Vec::with_capacity(self.bands());
+        for h in &self.h64 {
+            let mut band: Vec<f64> =
+                spectral.iter().zip(h.iter()).map(|(&v, &hi)| v * hi).collect();
+            self.plan.apply_vec(&mut band, Direction::Forward)?;
+            out.push(band);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cli::figures::random_gplan;
+    use crate::linalg::Rng64;
+    use crate::ops::FilterOp;
+
+    fn bank_fixture(n: usize, j: usize, seed: u64) -> (WaveletBank, Rng64) {
+        let mut rng = Rng64::new(seed);
+        let ch = random_gplan(n, 5 * n, &mut rng);
+        let spec: Vec<f64> = (0..n).map(|_| rng.randn().abs() * 2.0).collect();
+        let plan = Plan::from(&ch).spectrum(spec).build();
+        (WaveletBank::hammond(plan, j).unwrap(), rng)
+    }
+
+    #[test]
+    fn hammond_bank_shape() {
+        let (bank, _) = bank_fixture(14, 4, 9101);
+        assert_eq!(bank.bands(), 5, "J wavelets + 1 scaling function");
+        assert_eq!(bank.scales().len(), 4);
+        assert_eq!(bank.flops(), {
+            let t = FastOperator::flops(bank.plan().as_ref());
+            t + 5 * (14 + t)
+        });
+        // a spectrum-free plan is rejected
+        let mut rng = Rng64::new(1);
+        let plain = Plan::from(random_gplan(8, 24, &mut rng)).build();
+        assert!(WaveletBank::hammond(plain, 3).is_err());
+    }
+
+    #[test]
+    fn each_band_is_bitwise_the_equivalent_filter() {
+        let (bank, mut rng) = bank_fixture(13, 3, 9102);
+        let sigs: Vec<Vec<f32>> =
+            (0..4).map(|_| (0..13).map(|_| rng.randn() as f32).collect()).collect();
+        let block = SignalBlock::from_signals(&sigs).unwrap();
+        let bands = bank.analyze(&block, &ExecPolicy::Seq).unwrap();
+        assert_eq!(bands.len(), bank.bands());
+        for (b, got) in bands.iter().enumerate() {
+            let op =
+                FilterOp::new(bank.plan().clone(), bank.responses()[b].clone()).unwrap();
+            let mut want = block.clone();
+            op.apply(&mut want, Direction::Forward, &ExecPolicy::Seq).unwrap();
+            assert_eq!(want.data, got.data, "band {b} diverged from its FilterOp");
+        }
+    }
+
+    #[test]
+    fn vec_analysis_matches_filter_vec() {
+        let (bank, mut rng) = bank_fixture(11, 2, 9103);
+        let x: Vec<f64> = (0..11).map(|_| rng.randn()).collect();
+        let bands = bank.analyze_vec(&x).unwrap();
+        for (b, got) in bands.iter().enumerate() {
+            let op =
+                FilterOp::new(bank.plan().clone(), bank.responses()[b].clone()).unwrap();
+            let mut want = x.clone();
+            op.apply_vec(&mut want, Direction::Forward).unwrap();
+            assert_eq!(&want, got, "band {b} f64 diverged");
+        }
+    }
+
+    #[test]
+    fn explicit_responses_validate() {
+        let mut rng = Rng64::new(9104);
+        let plan = Plan::from(random_gplan(6, 18, &mut rng)).build();
+        assert!(WaveletBank::from_responses(plan.clone(), vec![]).is_err());
+        assert!(WaveletBank::from_responses(plan.clone(), vec![vec![1.0; 5]]).is_err());
+        assert!(
+            WaveletBank::from_responses(plan.clone(), vec![vec![f64::NAN; 6]]).is_err()
+        );
+        let bank =
+            WaveletBank::from_responses(plan, vec![vec![1.0; 6], vec![0.5; 6]]).unwrap();
+        assert_eq!(bank.bands(), 2);
+        assert!(bank.scales().is_empty());
+    }
+}

@@ -3,12 +3,12 @@
 //! `fastes serve --plan` (and, per the roadmap, to the PJRT superstage
 //! offload) without refactorizing.
 //!
-//! # Format (version 1, all fields little-endian)
+//! # Format (versions 1–2, all fields little-endian)
 //!
 //! ```text
 //! offset  size      field
 //! 0       8         magic  b"FASTPLAN"
-//! 8       4         format version (u32) = 1
+//! 8       4         format version (u32) = 1 or 2
 //! 12      1         chain kind: 0 = G, 1 = T
 //! 13      1         level-scheduled flag: 1 = greedy levels, 0 = original order
 //! 14      2         padding (zero)
@@ -25,8 +25,17 @@
 //! …       8·g       p0 (f64) — the exact coefficient stream
 //! …       8·g       p1 (f64)
 //! …       8·(s+1)   superstage table (u64 CSR offsets, forward stream)
+//! …       8·n       spectrum s̄ (f64 each) — version 2 only
 //! end−8   8         FNV-1a-64 checksum of every preceding byte
 //! ```
+//!
+//! **Version 2** appends the approximate spectrum `s̄` (Lemma 1's
+//! `diag(ŪᵀSŪ)`) between the superstage table and the checksum, so the
+//! serving tier can evaluate spectral responses `h(s̄)` for filter and
+//! wavelet workloads without the original matrix. The writer emits
+//! version 2 **only** when a spectrum is attached: spectrum-free plans
+//! still serialize byte-exactly as version 1, and the loader accepts
+//! both (a v1 artifact simply loads spectrum-free).
 //!
 //! Stages are stored in **application order** (chain order, `G_1` first),
 //! not layer order: the loader rebuilds the exact chain and recompiles,
@@ -44,8 +53,13 @@ use crate::transforms::{GChain, GKind, GTransform, TChain, TTransform};
 /// Artifact magic bytes.
 pub const MAGIC: [u8; 8] = *b"FASTPLAN";
 
-/// The artifact format version this build reads and writes.
+/// The base artifact format version (spectrum-free plans are written as
+/// this version for back-compat with v1 readers).
 pub const FORMAT_VERSION: u32 = 1;
+
+/// The format version carrying the spectrum section (written whenever a
+/// spectrum is attached to the plan).
+pub const FORMAT_VERSION_SPECTRUM: u32 = 2;
 
 const HEADER_LEN: usize = 48;
 /// Per-stage payload bytes: 4 + 4 + 1 + 4 + 4 + 8 + 8.
@@ -72,6 +86,8 @@ pub(crate) struct DecodedPlan {
     pub level: bool,
     pub superstage_stages: usize,
     pub superstage_table: Vec<usize>,
+    /// Lemma-1 spectrum `s̄` (version ≥ 2 artifacts only).
+    pub spectrum: Option<Vec<f64>>,
 }
 
 /// One stage in application order, as stored in the artifact.
@@ -138,14 +154,20 @@ pub(crate) fn encode(
     level: bool,
     superstage_stages: usize,
     superstage_table: &[usize],
+    spectrum: Option<&[f64]>,
 ) -> Vec<u8> {
     let (kind, n, stages) = stages_of(repr);
+    if let Some(s) = spectrum {
+        assert_eq!(s.len(), n, "spectrum length must equal the plan dimension");
+    }
     let g = stages.len();
     let supers = superstage_table.len().saturating_sub(1);
+    let spec_bytes = spectrum.map_or(0, |s| 8 * s.len());
+    let version = if spectrum.is_some() { FORMAT_VERSION_SPECTRUM } else { FORMAT_VERSION };
     let mut out =
-        Vec::with_capacity(HEADER_LEN + g * STAGE_BYTES + (supers + 1) * 8 + 8);
+        Vec::with_capacity(HEADER_LEN + g * STAGE_BYTES + (supers + 1) * 8 + spec_bytes + 8);
     out.extend_from_slice(&MAGIC);
-    out.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+    out.extend_from_slice(&version.to_le_bytes());
     out.push(kind);
     out.push(level as u8);
     out.extend_from_slice(&[0u8; 2]);
@@ -176,6 +198,11 @@ pub(crate) fn encode(
     }
     for &p in superstage_table {
         out.extend_from_slice(&(p as u64).to_le_bytes());
+    }
+    if let Some(spec) = spectrum {
+        for &v in spec {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
     }
     let checksum = fnv1a64(&out);
     out.extend_from_slice(&checksum.to_le_bytes());
@@ -212,8 +239,11 @@ pub(crate) fn decode(bytes: &[u8]) -> crate::Result<DecodedPlan> {
         bail!("not a fastplan artifact (bad magic)");
     }
     let version = read_u32(bytes, 8);
-    if version != FORMAT_VERSION {
-        bail!("unsupported fastplan version {version} (this build reads version {FORMAT_VERSION})");
+    if version != FORMAT_VERSION && version != FORMAT_VERSION_SPECTRUM {
+        bail!(
+            "unsupported fastplan version {version} (this build reads versions \
+             {FORMAT_VERSION} and {FORMAT_VERSION_SPECTRUM})"
+        );
     }
     if bytes.len() < HEADER_LEN + 8 {
         bail!("truncated fastplan artifact ({} bytes, header needs 48)", bytes.len());
@@ -230,11 +260,13 @@ pub(crate) fn decode(bytes: &[u8]) -> crate::Result<DecodedPlan> {
     let g = as_len(read_u64(bytes, 24), "stage count")?;
     let superstage_stages = as_len(read_u64(bytes, 32), "superstage budget")?;
     let supers = as_len(read_u64(bytes, 40), "superstage count")?;
+    let spec_bytes = if version >= FORMAT_VERSION_SPECTRUM { 8 * n } else { 0 };
     let expected = g
         .checked_mul(STAGE_BYTES)
         .and_then(|v| supers.checked_add(1).map(|s| (v, s)))
         .and_then(|(v, s)| s.checked_mul(8).map(|t| (v, t)))
         .and_then(|(v, t)| v.checked_add(t))
+        .and_then(|v| v.checked_add(spec_bytes))
         .and_then(|v| v.checked_add(HEADER_LEN + 8));
     let Some(expected) = expected else {
         bail!("fastplan payload size overflows");
@@ -317,6 +349,21 @@ pub(crate) fn decode(bytes: &[u8]) -> crate::Result<DecodedPlan> {
         bail!("malformed fastplan superstage table");
     }
 
+    let spectrum = if version >= FORMAT_VERSION_SPECTRUM {
+        let at_spec = at_table + 8 * (supers + 1);
+        let mut spec = Vec::with_capacity(n);
+        for k in 0..n {
+            let v = read_f64(bytes, at_spec + 8 * k);
+            if !v.is_finite() {
+                bail!("fastplan spectrum entry {k} is not finite ({v})");
+            }
+            spec.push(v);
+        }
+        Some(spec)
+    } else {
+        None
+    };
+
     let repr = if kind == 0 {
         // struct literal, NOT GTransform::new — the constructor's defensive
         // renormalization could perturb the stored bits and break the
@@ -346,7 +393,7 @@ pub(crate) fn decode(bytes: &[u8]) -> crate::Result<DecodedPlan> {
             .collect();
         ChainRepr::T(TChain { n, transforms })
     };
-    Ok(DecodedPlan { repr, level: level == 1, superstage_stages, superstage_table })
+    Ok(DecodedPlan { repr, level: level == 1, superstage_stages, superstage_table, spectrum })
 }
 
 #[cfg(test)]
@@ -364,11 +411,12 @@ mod tests {
     #[test]
     fn empty_plan_round_trips() {
         let repr = ChainRepr::G(GChain::identity(5));
-        let bytes = encode(&repr, true, 2048, &[0]);
+        let bytes = encode(&repr, true, 2048, &[0], None);
         let d = decode(&bytes).unwrap();
         assert!(d.level);
         assert_eq!(d.superstage_stages, 2048);
         assert_eq!(d.superstage_table, vec![0]);
+        assert!(d.spectrum.is_none());
         match d.repr {
             ChainRepr::G(ch) => {
                 assert_eq!(ch.n, 5);
@@ -379,11 +427,38 @@ mod tests {
     }
 
     #[test]
+    fn spectrum_free_encoding_is_version_1() {
+        // back-compat contract: attaching no spectrum must produce a
+        // byte stream indistinguishable from the v1 writer
+        let repr = ChainRepr::G(GChain::identity(5));
+        let bytes = encode(&repr, true, 2048, &[0], None);
+        assert_eq!(read_u32(&bytes, 8), FORMAT_VERSION);
+    }
+
+    #[test]
+    fn spectrum_round_trips_as_version_2() {
+        let repr = ChainRepr::G(GChain::identity(5));
+        let spec = vec![0.0, 0.5, -1.25, 3.75, 1e-30];
+        let bytes = encode(&repr, true, 2048, &[0], Some(&spec));
+        assert_eq!(read_u32(&bytes, 8), FORMAT_VERSION_SPECTRUM);
+        let d = decode(&bytes).unwrap();
+        assert_eq!(d.spectrum.as_deref(), Some(&spec[..]));
+
+        // non-finite spectrum entries are rejected even when the
+        // checksum is valid
+        let mut with_nan = spec.clone();
+        with_nan[2] = f64::NAN;
+        let bad = encode(&repr, true, 2048, &[0], Some(&with_nan));
+        let e = format!("{:#}", decode(&bad).unwrap_err());
+        assert!(e.contains("not finite"), "{e}");
+    }
+
+    #[test]
     fn rejects_oversized_dimension_before_allocating() {
         // a checksum-valid artifact declaring a huge n must come back as
         // Err, not abort inside the compiler's O(n) allocations
         let repr = ChainRepr::G(GChain::identity(1 << 30));
-        let bytes = encode(&repr, true, 2048, &[0]);
+        let bytes = encode(&repr, true, 2048, &[0], None);
         let e = format!("{:#}", decode(&bytes).unwrap_err());
         assert!(e.contains("exceeds the supported maximum"), "{e}");
     }
@@ -391,7 +466,7 @@ mod tests {
     #[test]
     fn rejects_bad_magic_version_checksum_truncation() {
         let repr = ChainRepr::G(GChain::identity(4));
-        let good = encode(&repr, true, 2048, &[0]);
+        let good = encode(&repr, true, 2048, &[0], None);
         assert!(decode(&good).is_ok());
 
         let mut bad = good.clone();

@@ -46,7 +46,7 @@
 mod artifact;
 mod policy;
 
-pub use artifact::FORMAT_VERSION;
+pub use artifact::{FORMAT_VERSION, FORMAT_VERSION_SPECTRUM};
 pub(crate) use artifact::fnv1a64;
 pub use policy::ExecPolicy;
 
@@ -190,11 +190,17 @@ pub struct PlanBuilder {
     repr: ChainRepr,
     schedule: ScheduleOptions,
     fuse: FuseOptions,
+    spectrum: Option<Vec<f64>>,
 }
 
 impl PlanBuilder {
     fn new(repr: ChainRepr) -> PlanBuilder {
-        PlanBuilder { repr, schedule: ScheduleOptions::default(), fuse: FuseOptions::default() }
+        PlanBuilder {
+            repr,
+            schedule: ScheduleOptions::default(),
+            fuse: FuseOptions::default(),
+            spectrum: None,
+        }
     }
 
     /// Override the scheduling options.
@@ -206,6 +212,15 @@ impl PlanBuilder {
     /// Override the fusion options.
     pub fn fuse(mut self, opts: FuseOptions) -> PlanBuilder {
         self.fuse = opts;
+        self
+    }
+
+    /// Attach the approximate spectrum `s̄` (Lemma 1's `diag(ŪᵀSŪ)`).
+    /// A plan with a spectrum serializes as a version-2 `.fastplan` and
+    /// can evaluate spectral responses (filter / wavelet workloads);
+    /// without one it stays a plain transform and serializes as v1.
+    pub fn spectrum(mut self, spectrum: Vec<f64>) -> PlanBuilder {
+        self.spectrum = Some(spectrum);
         self
     }
 
@@ -229,11 +244,19 @@ impl PlanBuilder {
                 self.fuse.superstage_stages,
             ),
         };
+        if let Some(s) = &self.spectrum {
+            assert_eq!(
+                s.len(),
+                compiled.n(),
+                "spectrum length must equal the plan dimension"
+            );
+        }
         Arc::new(Plan {
             repr: self.repr,
             compiled,
             schedule: self.schedule,
             fuse: self.fuse,
+            spectrum: self.spectrum,
             checksum: std::sync::OnceLock::new(),
         })
     }
@@ -287,6 +310,9 @@ pub struct Plan {
     compiled: CompiledPlan,
     schedule: ScheduleOptions,
     fuse: FuseOptions,
+    /// Lemma-1 spectrum `s̄`, when the factorizer attached one (carried
+    /// by version-2 `.fastplan` artifacts; `None` for v1 / plain plans).
+    spectrum: Option<Vec<f64>>,
     /// Lazily computed [`Plan::content_checksum`] (an apply under
     /// [`ExecPolicy::Auto`] consults it on every call, and serializing
     /// the coefficient streams each time would dwarf the apply itself).
@@ -339,6 +365,14 @@ impl Plan {
         (self.schedule, self.fuse)
     }
 
+    /// The attached Lemma-1 spectrum `s̄`, if any. Spectral operators
+    /// ([`crate::ops`]) evaluate their responses `h(s̄)` on it; a plan
+    /// without a spectrum can still serve plain transforms but rejects
+    /// kernel-based filter requests.
+    pub fn spectrum(&self) -> Option<&[f64]> {
+        self.spectrum.as_deref()
+    }
+
     /// FNV-1a-64 checksum of the plan's serialized `.fastplan` bytes —
     /// the plan's content identity. Used as the cache/profile key by the
     /// execution autotuner ([`crate::runtime::autotune`]): two plans with
@@ -381,6 +415,7 @@ impl Plan {
             self.schedule.level,
             self.fuse.superstage_stages,
             &self.compiled.superstage_table(),
+            self.spectrum.as_deref(),
         )
     }
 
@@ -394,6 +429,7 @@ impl Plan {
             repr: d.repr,
             schedule: ScheduleOptions { level: d.level },
             fuse: FuseOptions { superstage_stages: d.superstage_stages },
+            spectrum: d.spectrum,
         }
         .build();
         if plan.compiled.superstage_table() != d.superstage_table {
@@ -768,6 +804,25 @@ mod tests {
                 assert_eq!(a.data, b.data, "{label} {dir:?}: loaded plan diverged");
             }
         }
+    }
+
+    #[test]
+    fn spectrum_survives_bytes_round_trip() {
+        let mut rng = Rng64::new(4111);
+        let n = 12;
+        let ch = random_gplan(n, 4 * n, &mut rng);
+        let spec: Vec<f64> = (0..n).map(|_| rng.randn()).collect();
+        let plan = Plan::from(&ch).spectrum(spec.clone()).build();
+        assert_eq!(plan.spectrum(), Some(&spec[..]));
+        let bytes = plan.to_bytes();
+        let back = Plan::from_bytes(&bytes).unwrap();
+        assert_eq!(back.spectrum(), Some(&spec[..]), "spectrum lost in round trip");
+        assert_eq!(back.to_bytes(), bytes, "v2 re-serialization drifted");
+        // spectrum-free plans stay v1 and load spectrum-free
+        let plain = Plan::from(&ch).build();
+        assert!(plain.spectrum().is_none());
+        let plain_back = Plan::from_bytes(&plain.to_bytes()).unwrap();
+        assert!(plain_back.spectrum().is_none());
     }
 
     #[test]

@@ -4,6 +4,8 @@ use std::sync::Arc;
 
 use anyhow::bail;
 
+use super::{JobOp, Payload};
+use crate::ops::{FilterOp, WaveletBank};
 use crate::plan::{Direction, ExecPolicy, FastOperator, Plan};
 use crate::runtime::autotune::{self, TuneProfile, TunedConfig};
 use crate::runtime::{ArtifactKind, ArtifactStore};
@@ -43,12 +45,17 @@ pub trait Backend {
     /// coordinator) instead of the backend's own fixed route. The default
     /// rejects routing — only backends that can execute an arbitrary
     /// [`Plan`] (the native one) override it.
+    ///
+    /// Returns `None` when the answer is the transformed block itself
+    /// (dense, in place); `Some(payloads)` — one entry per block column —
+    /// when the op produces its own payloads (wavelet stacks, sparse
+    /// top-k coefficients).
     fn apply_routed(
         &mut self,
         plan: &Arc<Plan>,
-        op: super::JobOp,
+        op: &JobOp,
         block: &mut SignalBlock,
-    ) -> crate::Result<()> {
+    ) -> crate::Result<Option<Vec<Payload>>> {
         let _ = (plan, op, block);
         bail!("backend {} cannot serve registry-routed plans", self.name())
     }
@@ -82,8 +89,10 @@ pub struct NativeGftBackend {
     policy: ExecPolicy,
     direction: TransformDirection,
     max_batch: usize,
-    /// Spectral filter diagonal (Filter direction only).
-    filter: Option<Vec<f32>>,
+    /// Fused spectral filter (Filter direction only): the configured
+    /// diagonal compiled into a [`FilterOp`], so the fixed filter route
+    /// runs the one-traversal fused path like routed filter requests.
+    filter_op: Option<FilterOp>,
     /// `(summary, sweeps)` when the policy came from the autotuner.
     tuned: Option<(String, u64)>,
 }
@@ -106,11 +115,16 @@ impl NativeGftBackend {
         if plan.kind() != ChainKind::G {
             bail!("the GFT backend serves G-chain plans (got a T-chain plan)");
         }
-        if direction == TransformDirection::Filter
-            && !filter.as_ref().is_some_and(|h| h.len() == plan.n())
-        {
-            bail!("filter direction needs a length-{} diagonal", plan.n());
-        }
+        let filter_op = match direction {
+            TransformDirection::Filter => {
+                let Some(h) = filter.as_ref().filter(|h| h.len() == plan.n()) else {
+                    bail!("filter direction needs a length-{} diagonal", plan.n());
+                };
+                let h64: Vec<f64> = h.iter().map(|&v| v as f64).collect();
+                Some(FilterOp::new(Arc::clone(&plan), h64)?)
+            }
+            _ => None,
+        };
         let (policy, tuned) = match policy {
             ExecPolicy::Auto => {
                 let resolved = autotune::resolve(&plan, max_batch);
@@ -119,7 +133,7 @@ impl NativeGftBackend {
             }
             concrete => (concrete, None),
         };
-        Ok(NativeGftBackend { plan, policy, direction, max_batch, filter, tuned })
+        Ok(NativeGftBackend { plan, policy, direction, max_batch, filter_op, tuned })
     }
 
     /// Backend over a sweep result (`fastes serve --autotune`): runs the
@@ -161,16 +175,6 @@ impl NativeGftBackend {
     /// The execution policy applies run under.
     pub fn policy(&self) -> &ExecPolicy {
         &self.policy
-    }
-
-    /// `X ← diag(h) X` on the live block.
-    fn scale_rows(block: &mut SignalBlock, h: &[f32]) {
-        let b = block.batch;
-        for (i, &hi) in h.iter().enumerate() {
-            for v in &mut block.data[i * b..(i + 1) * b] {
-                *v *= hi;
-            }
-        }
     }
 }
 
@@ -225,12 +229,10 @@ impl Backend for NativeGftBackend {
             TransformDirection::Inverse => {
                 self.plan.apply(block, Direction::Forward, &self.policy)
             }
-            // spectral filter: y = Ū diag(h) Ūᵀ x
+            // spectral filter: y = Ū diag(h) Ūᵀ x, one fused traversal
             TransformDirection::Filter => {
-                let h = self.filter.as_ref().expect("checked in with_policy");
-                self.plan.apply(block, Direction::Adjoint, &self.policy)?;
-                Self::scale_rows(block, h);
-                self.plan.apply(block, Direction::Forward, &self.policy)
+                let f = self.filter_op.as_ref().expect("checked in with_policy");
+                f.apply(block, Direction::Forward, &self.policy)
             }
         }
     }
@@ -252,22 +254,57 @@ impl Backend for NativeGftBackend {
     fn apply_routed(
         &mut self,
         plan: &Arc<Plan>,
-        op: super::JobOp,
+        op: &JobOp,
         block: &mut SignalBlock,
-    ) -> crate::Result<()> {
+    ) -> crate::Result<Option<Vec<Payload>>> {
         if plan.kind() != ChainKind::G {
             bail!("the GFT backend serves G-chain plans (got a T-chain plan)");
         }
         if plan.n() != block.n {
             bail!("routed plan n {} != block n {}", plan.n(), block.n);
         }
-        let dir = match op {
+        match op {
             // analysis x̂ = Ūᵀ x
-            super::JobOp::Forward => Direction::Adjoint,
+            JobOp::Forward => {
+                plan.apply(block, Direction::Adjoint, &self.policy)?;
+                Ok(None)
+            }
             // synthesis x = Ū x̂
-            super::JobOp::Adjoint => Direction::Forward,
-        };
-        plan.apply(block, dir, &self.policy)
+            JobOp::Adjoint => {
+                plan.apply(block, Direction::Forward, &self.policy)?;
+                Ok(None)
+            }
+            // fused spectral filter on the routed plan; kernel specs
+            // resolve against *this* plan's spectrum, so in-flight
+            // requests drain on the plan they resolved at submit even
+            // across a registry hot swap
+            JobOp::Filter(spec) => {
+                let f = FilterOp::new(Arc::clone(plan), spec.resolve(plan)?)?;
+                f.apply(block, Direction::Forward, &self.policy)?;
+                Ok(None)
+            }
+            // shared-prefix wavelet bank: the reply for column b is the
+            // band-major stack [band0 | band1 | …] of length (J+1)·n
+            JobOp::Wavelet(spec) => {
+                let bank = WaveletBank::hammond(Arc::clone(plan), spec.scales)?;
+                let bands = bank.analyze(block, &self.policy)?;
+                let payloads = (0..block.batch)
+                    .map(|b| {
+                        let mut stacked = Vec::with_capacity(bands.len() * block.n);
+                        for band in &bands {
+                            stacked.extend(band.signal(b));
+                        }
+                        Payload::Dense(stacked)
+                    })
+                    .collect();
+                Ok(Some(payloads))
+            }
+            // top-k compression of the spectral coefficients
+            JobOp::TopK(spec) => {
+                let sparse = spec.rule.compress_spectral(plan, block, &self.policy)?;
+                Ok(Some(sparse.into_iter().map(Payload::Sparse).collect()))
+            }
+        }
     }
 
     fn name(&self) -> &str {

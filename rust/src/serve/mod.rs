@@ -63,6 +63,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail};
 
+use crate::ops::{SparseSpectrum, SpectralKernel, TopK};
 use crate::plan::Plan;
 use crate::transforms::SignalBlock;
 
@@ -98,16 +99,174 @@ pub enum Priority {
     Batch,
 }
 
+/// How a spectral request specifies its diagonal response `h`.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ResponseSpec {
+    /// Explicit per-eigenvalue response (works on any routed G-plan).
+    Explicit(Vec<f64>),
+    /// Analytic kernel, evaluated on the routed plan's Lemma-1 spectrum
+    /// at execution time — an in-flight request therefore always runs on
+    /// the spectrum of the plan it resolved at submit, even across a
+    /// registry hot swap.
+    Kernel(SpectralKernel),
+}
+
+/// A served spectral-filter request: one fused `Ū diag(h) Ūᵀ` apply.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FilterSpec {
+    /// The diagonal response.
+    pub response: ResponseSpec,
+}
+
+impl FilterSpec {
+    /// Resolve the concrete response against the routed plan.
+    pub fn resolve(&self, plan: &Plan) -> crate::Result<Vec<f64>> {
+        match &self.response {
+            ResponseSpec::Explicit(h) => Ok(h.clone()),
+            ResponseSpec::Kernel(k) => {
+                let Some(s) = plan.spectrum() else {
+                    bail!("routed plan carries no spectrum; kernel filters need a v2 .fastplan")
+                };
+                Ok(k.response(s))
+            }
+        }
+    }
+}
+
+/// A served wavelet-analysis request: the Hammond bank at `scales`
+/// wavelet scales (reply is the `(scales + 1)·n` band-major
+/// concatenation, band 0 = scaling function).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WaveletSpec {
+    /// Number of wavelet scales `J` (≥ 1).
+    pub scales: usize,
+}
+
+/// A served top-k compression request (sparse reply).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TopKSpec {
+    /// The selection rule.
+    pub rule: TopK,
+}
+
 /// Which transform a request asks for, relative to the serving
 /// convention: `Forward` is the analysis GFT `x̂ = Ūᵀ x`, `Adjoint` the
-/// synthesis `x = Ū x̂`.
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+/// synthesis `x = Ū x̂`. The spectral kinds (`Filter` / `Wavelet` /
+/// `TopK`) carry their spec in an `Arc` so queued jobs share it.
+#[derive(Clone, Debug, Default, PartialEq)]
 pub enum JobOp {
     /// Analysis / forward GFT (the default).
     #[default]
     Forward,
     /// Synthesis / inverse GFT.
     Adjoint,
+    /// Fused spectral filter `y = Ū diag(h) Ūᵀ x` (dense reply).
+    Filter(Arc<FilterSpec>),
+    /// Hammond wavelet-bank analysis (dense reply of `(J+1)·n` values).
+    Wavelet(Arc<WaveletSpec>),
+    /// Top-k spectral compression (sparse reply).
+    TopK(Arc<TopKSpec>),
+}
+
+impl JobOp {
+    /// `true` for the spectral request kinds, which need a registry-routed
+    /// plan (the fixed-route backends only serve plain transforms).
+    pub fn is_spectral(&self) -> bool {
+        matches!(self, JobOp::Filter(_) | JobOp::Wavelet(_) | JobOp::TopK(_))
+    }
+
+    /// Batch-compatibility: two ops co-batch when they would execute the
+    /// exact same computation (same kind, same spec — by pointer or by
+    /// value, so re-submitted identical specs still share a batch).
+    fn route_eq(&self, other: &JobOp) -> bool {
+        match (self, other) {
+            (JobOp::Forward, JobOp::Forward) | (JobOp::Adjoint, JobOp::Adjoint) => true,
+            (JobOp::Filter(a), JobOp::Filter(b)) => Arc::ptr_eq(a, b) || a == b,
+            (JobOp::Wavelet(a), JobOp::Wavelet(b)) => Arc::ptr_eq(a, b) || a == b,
+            (JobOp::TopK(a), JobOp::TopK(b)) => Arc::ptr_eq(a, b) || a == b,
+            _ => false,
+        }
+    }
+
+    /// Submit-time validation against the resolved route, so malformed
+    /// spectral requests shed as typed errors before touching the queue.
+    fn validate(&self, plan: Option<&Arc<Plan>>) -> Result<(), ServeError> {
+        if !self.is_spectral() {
+            return Ok(());
+        }
+        let Some(plan) = plan else {
+            return Err(ServeError::Rejected(Rejected::PlanUnavailable {
+                reason: "spectral requests (filter/wavelet/topk) need a registry-routed plan"
+                    .into(),
+            }));
+        };
+        match self {
+            JobOp::Forward | JobOp::Adjoint => Ok(()),
+            JobOp::Filter(spec) => match &spec.response {
+                ResponseSpec::Explicit(h) => {
+                    if h.len() != plan.n() {
+                        return Err(ServeError::Invalid(format!(
+                            "filter response length {} != plan n {}",
+                            h.len(),
+                            plan.n()
+                        )));
+                    }
+                    if let Some(bad) = h.iter().find(|v| !v.is_finite()) {
+                        return Err(ServeError::Invalid(format!(
+                            "filter response must be finite (got {bad})"
+                        )));
+                    }
+                    Ok(())
+                }
+                ResponseSpec::Kernel(_) => require_spectrum(plan),
+            },
+            JobOp::Wavelet(spec) => {
+                if spec.scales == 0 {
+                    return Err(ServeError::Invalid(
+                        "wavelet request needs scales >= 1".into(),
+                    ));
+                }
+                require_spectrum(plan)
+            }
+            JobOp::TopK(spec) => {
+                spec.rule.validate().map_err(|e| ServeError::Invalid(format!("{e:#}")))
+            }
+        }
+    }
+}
+
+fn require_spectrum(plan: &Plan) -> Result<(), ServeError> {
+    if plan.spectrum().is_some() {
+        Ok(())
+    } else {
+        Err(ServeError::Rejected(Rejected::PlanUnavailable {
+            reason: "routed plan carries no spectrum (v1 artifact?); kernel-based spectral \
+                     requests need a version-2 .fastplan"
+                .into(),
+        }))
+    }
+}
+
+/// A request's answer: a dense signal (plain transforms, filters,
+/// band-major wavelet stacks) or a sparse top-k spectral payload.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Payload {
+    /// A transformed signal (length `n`, or `(J+1)·n` for wavelet banks).
+    Dense(Vec<f32>),
+    /// Sparse spectral coefficients from a top-k request.
+    Sparse(SparseSpectrum),
+}
+
+impl Payload {
+    /// Extract the dense signal; sparse payloads become a typed error.
+    pub fn into_dense(self) -> Result<Vec<f32>, ServeError> {
+        match self {
+            Payload::Dense(v) => Ok(v),
+            Payload::Sparse(_) => Err(ServeError::Invalid(
+                "request produced a sparse payload; read it via wait_detailed".into(),
+            )),
+        }
+    }
 }
 
 /// Typed load-shedding answer: why a request was refused without (fully)
@@ -231,7 +390,7 @@ struct Job {
     /// is what makes registry hot swaps drain-safe.
     plan: Option<Arc<Plan>>,
     op: JobOp,
-    reply: SyncSender<Result<Vec<f32>, ServeError>>,
+    reply: SyncSender<Result<Payload, ServeError>>,
 }
 
 enum Msg {
@@ -241,22 +400,23 @@ enum Msg {
 
 /// Handle for an in-flight request.
 pub struct Ticket {
-    rx: Receiver<Result<Vec<f32>, ServeError>>,
+    rx: Receiver<Result<Payload, ServeError>>,
 }
 
 impl Ticket {
-    /// Block until the transformed signal is ready.
+    /// Block until the transformed signal is ready (dense replies only —
+    /// top-k requests must use [`Ticket::wait_detailed`]).
     pub fn wait(self) -> crate::Result<Vec<f32>> {
         match self.rx.recv() {
-            Ok(Ok(signal)) => Ok(signal),
+            Ok(Ok(payload)) => payload.into_dense().map_err(anyhow::Error::from),
             Ok(Err(e)) => Err(anyhow::Error::from(e)),
             Err(_) => Err(anyhow!("coordinator dropped the request")),
         }
     }
 
-    /// Block until the reply, keeping the typed [`ServeError`] (the
-    /// network front-end maps it onto wire rejection codes).
-    pub fn wait_detailed(self) -> Result<Vec<f32>, ServeError> {
+    /// Block until the reply, keeping the typed [`ServeError`] and the
+    /// full [`Payload`] (the network front-end maps both onto the wire).
+    pub fn wait_detailed(self) -> Result<Payload, ServeError> {
         match self.rx.recv() {
             Ok(r) => r,
             Err(_) => Err(ServeError::Backend("coordinator dropped the request".into())),
@@ -267,7 +427,7 @@ impl Ticket {
     /// forever on a wedged coordinator. Returns `None` on timeout — the
     /// request is still in flight and the ticket can be waited on again;
     /// a dropped coordinator comes back as `Some(Err(..))`.
-    pub fn wait_timeout(&self, timeout: Duration) -> Option<Result<Vec<f32>, ServeError>> {
+    pub fn wait_timeout(&self, timeout: Duration) -> Option<Result<Payload, ServeError>> {
         match self.rx.recv_timeout(timeout) {
             Ok(r) => Some(r),
             Err(RecvTimeoutError::Timeout) => None,
@@ -402,6 +562,12 @@ impl Coordinator {
         opts: SubmitOptions,
     ) -> Result<Ticket, ServeError> {
         let plan = self.resolve_route(&opts).map_err(|r| self.rejected(r))?;
+        if let Err(e) = opts.op.validate(plan.as_ref()) {
+            return Err(match e {
+                ServeError::Rejected(r) => self.rejected(r),
+                other => other,
+            });
+        }
         let want = plan.as_ref().map_or(self.n, |p| p.n());
         if signal.len() != want {
             return Err(ServeError::Invalid(format!(
@@ -501,11 +667,25 @@ impl Drop for Coordinator {
 }
 
 /// Batch-formation route: jobs are co-batchable only when they share the
-/// resolved plan (by pointer) and the transform op.
-type RouteKey = (usize, JobOp);
+/// resolved plan (by pointer) and an equivalent transform op
+/// ([`JobOp::route_eq`] — same kind, same spec).
+struct RouteKey {
+    plan_ptr: usize,
+    op: JobOp,
+}
+
+fn plan_ptr(j: &Job) -> usize {
+    j.plan.as_ref().map_or(0, |p| Arc::as_ptr(p) as usize)
+}
 
 fn route_key(j: &Job) -> RouteKey {
-    (j.plan.as_ref().map_or(0, |p| Arc::as_ptr(p) as usize), j.op)
+    RouteKey { plan_ptr: plan_ptr(j), op: j.op.clone() }
+}
+
+impl RouteKey {
+    fn matches(&self, j: &Job) -> bool {
+        self.plan_ptr == plan_ptr(j) && self.op.route_eq(&j.op)
+    }
 }
 
 fn expired(j: &Job) -> bool {
@@ -524,22 +704,22 @@ fn stage(qi: &mut VecDeque<Job>, qb: &mut VecDeque<Job>, j: Job) {
     }
 }
 
-fn same_route_count(qi: &VecDeque<Job>, qb: &VecDeque<Job>, key: RouteKey) -> usize {
-    qi.iter().chain(qb.iter()).filter(|j| route_key(j) == key).count()
+fn same_route_count(qi: &VecDeque<Job>, qb: &VecDeque<Job>, key: &RouteKey) -> usize {
+    qi.iter().chain(qb.iter()).filter(|j| key.matches(j)).count()
 }
 
 /// Move up to `max - jobs.len()` same-route jobs out of `q` (preserving
 /// order); expired ones are answered `DeadlineExceeded` instead.
 fn collect_route(
     q: &mut VecDeque<Job>,
-    key: RouteKey,
+    key: &RouteKey,
     max: usize,
     jobs: &mut Vec<Job>,
     metrics: &ServeMetrics,
 ) {
     let mut rest = VecDeque::with_capacity(q.len());
     while let Some(j) = q.pop_front() {
-        if route_key(&j) != key {
+        if !key.matches(&j) {
             rest.push_back(j);
         } else if expired(&j) {
             reject(metrics, j, Rejected::DeadlineExceeded);
@@ -613,7 +793,7 @@ fn worker_loop(
         // soak the batch window for more co-batchable arrivals
         if !draining {
             let window_end = Instant::now() + config.batch_window;
-            while same_route_count(&qi, &qb, key) + 1 < config.max_batch {
+            while same_route_count(&qi, &qb, &key) + 1 < config.max_batch {
                 let now = Instant::now();
                 if now >= window_end {
                     break;
@@ -635,12 +815,12 @@ fn worker_loop(
 
         // form the batch: head + same-route staged jobs, interactive first
         let mut jobs = vec![head];
-        collect_route(&mut qi, key, config.max_batch, &mut jobs, metrics);
-        collect_route(&mut qb, key, config.max_batch, &mut jobs, metrics);
+        collect_route(&mut qi, &key, config.max_batch, &mut jobs, metrics);
+        collect_route(&mut qb, &key, config.max_batch, &mut jobs, metrics);
 
         // assemble the (n, backend_batch) block, padding unused columns
         let route_plan = jobs[0].plan.clone();
-        let op = jobs[0].op;
+        let op = jobs[0].op.clone();
         let n = route_plan.as_ref().map_or(default_n, |p| p.n());
         let batch = jobs.len();
         let mut block = SignalBlock::zeros(n, backend.max_batch());
@@ -657,19 +837,37 @@ fn worker_loop(
                 faults::apply_exec_action(action)?;
             }
             match &route_plan {
-                Some(p) => backend.apply_routed(p, op, &mut block),
-                None => match op {
-                    JobOp::Forward => backend.forward(&mut block),
-                    JobOp::Adjoint => backend.adjoint(&mut block),
+                Some(p) => backend.apply_routed(p, &op, &mut block),
+                None => match &op {
+                    JobOp::Forward => backend.forward(&mut block).map(|()| None),
+                    JobOp::Adjoint => backend.adjoint(&mut block).map(|()| None),
+                    // validated out at submit time: spectral ops always
+                    // carry a resolved plan
+                    spectral => Err(anyhow!(
+                        "spectral request {spectral:?} reached a coordinator without a plan route"
+                    )),
                 },
             }
         }));
         let exec_s = t0.elapsed().as_secs_f64();
 
+        // a backend returning per-job payloads must cover every block
+        // column; anything short is a backend bug answered as an error
+        let outcome = match outcome {
+            Ok(Ok(Some(ps))) if ps.len() < batch => Ok(Err(anyhow!(
+                "backend returned {} payloads for a batch of {batch}",
+                ps.len()
+            ))),
+            o => o,
+        };
+
         match outcome {
-            Ok(Ok(())) => {
+            Ok(Ok(payloads)) => {
                 for (b, j) in jobs.into_iter().enumerate() {
-                    let out = block.signal(b);
+                    let out = match &payloads {
+                        Some(ps) => ps[b].clone(),
+                        None => Payload::Dense(block.signal(b)),
+                    };
                     let latency = j.enqueued.elapsed().as_secs_f64();
                     metrics.record(latency, exec_s, batch);
                     let _ = j.reply.send(Ok(out));
@@ -921,16 +1119,207 @@ mod tests {
         );
         // the reply arrives late — a second wait on the same ticket gets it
         let late = t.wait_timeout(Duration::from_secs(10)).expect("must complete");
-        assert_eq!(late.unwrap(), vec![1.0, 2.0]);
+        assert_eq!(late.unwrap(), Payload::Dense(vec![1.0, 2.0]));
         coord.shutdown();
 
         // dropped sender: the reply channel dies without an answer
-        let (tx, rx) = sync_channel::<Result<Vec<f32>, ServeError>>(1);
+        let (tx, rx) = sync_channel::<Result<Payload, ServeError>>(1);
         let ticket = Ticket { rx };
         drop(tx);
         match ticket.wait_timeout(Duration::from_millis(1)) {
             Some(Err(ServeError::Backend(msg))) => assert!(msg.contains("dropped"), "{msg}"),
             other => panic!("want dropped-sender error, got {:?}", other.map(|r| r.map(|_| ()))),
         }
+    }
+
+    fn spectral_fixture(
+        n: usize,
+        seed: u64,
+        with_spectrum: bool,
+    ) -> (Arc<Plan>, Arc<PlanRegistry>, Coordinator, crate::linalg::Rng64) {
+        use crate::cli::figures::random_gplan;
+        let mut rng = crate::linalg::Rng64::new(seed);
+        let ch = random_gplan(n, 5 * n, &mut rng);
+        let mut builder = Plan::from(&ch);
+        if with_spectrum {
+            let spec: Vec<f64> = (0..n).map(|_| rng.randn().abs() + 0.1).collect();
+            builder = builder.spectrum(spec);
+        }
+        let plan = builder.build();
+        let registry = Arc::new(PlanRegistry::new(4));
+        registry.install_default(Arc::clone(&plan));
+        let backend_plan = Arc::clone(&plan);
+        let coord = Coordinator::start_with_registry(
+            move || {
+                Ok(Box::new(NativeGftBackend::with_policy(
+                    backend_plan,
+                    TransformDirection::Forward,
+                    4,
+                    None,
+                    ExecPolicy::Seq,
+                )?) as Box<dyn Backend>)
+            },
+            ServeConfig::default(),
+            Some(Arc::clone(&registry)),
+        )
+        .unwrap();
+        (plan, registry, coord, rng)
+    }
+
+    #[test]
+    fn served_spectral_requests_match_local_references_bitwise() {
+        use crate::ops::{FilterOp, WaveletBank};
+        use crate::plan::Direction;
+        let n = 11;
+        let (plan, _registry, coord, mut rng) = spectral_fixture(n, 7201, true);
+        let sig: Vec<f32> = (0..n).map(|_| rng.randn() as f32).collect();
+        let block = SignalBlock::from_signals(&[sig.clone()]).unwrap();
+
+        // filter: the served reply is bitwise the fused FilterOp answer
+        let h: Vec<f64> = (0..n).map(|_| rng.randn()).collect();
+        let op = JobOp::Filter(Arc::new(FilterSpec {
+            response: ResponseSpec::Explicit(h.clone()),
+        }));
+        let got = coord
+            .submit_with(sig.clone(), SubmitOptions { op, ..Default::default() })
+            .unwrap()
+            .wait_detailed()
+            .unwrap();
+        let fop = FilterOp::new(Arc::clone(&plan), h).unwrap();
+        let mut want = block.clone();
+        fop.apply(&mut want, Direction::Forward, &ExecPolicy::Seq).unwrap();
+        assert_eq!(got, Payload::Dense(want.signal(0)));
+
+        // kernel-based filter resolves against the routed plan's spectrum
+        let kop = JobOp::Filter(Arc::new(FilterSpec {
+            response: ResponseSpec::Kernel(SpectralKernel::Heat { t: 0.4 }),
+        }));
+        let got = coord
+            .submit_with(sig.clone(), SubmitOptions { op: kop, ..Default::default() })
+            .unwrap()
+            .wait_detailed()
+            .unwrap();
+        let kf = FilterOp::from_kernel(Arc::clone(&plan), &SpectralKernel::Heat { t: 0.4 })
+            .unwrap();
+        let mut want = block.clone();
+        kf.apply(&mut want, Direction::Forward, &ExecPolicy::Seq).unwrap();
+        assert_eq!(got, Payload::Dense(want.signal(0)));
+
+        // wavelet: band-major stack of the shared-prefix bank
+        let wop = JobOp::Wavelet(Arc::new(WaveletSpec { scales: 2 }));
+        let got = coord
+            .submit_with(sig.clone(), SubmitOptions { op: wop, ..Default::default() })
+            .unwrap()
+            .wait_detailed()
+            .unwrap();
+        let bank = WaveletBank::hammond(Arc::clone(&plan), 2).unwrap();
+        let bands = bank.analyze(&block, &ExecPolicy::Seq).unwrap();
+        let stacked: Vec<f32> = bands.iter().flat_map(|b| b.signal(0)).collect();
+        assert_eq!(got, Payload::Dense(stacked));
+
+        // top-k: sparse payload of the plan's spectral coefficients
+        let top = JobOp::TopK(Arc::new(TopKSpec { rule: TopK::k(3) }));
+        let got = coord
+            .submit_with(sig.clone(), SubmitOptions { op: top, ..Default::default() })
+            .unwrap()
+            .wait_detailed()
+            .unwrap();
+        let mut want = TopK::k(3)
+            .compress_spectral(&plan, &block, &ExecPolicy::Seq)
+            .unwrap();
+        assert_eq!(got, Payload::Sparse(want.remove(0)));
+        // dense-only wait() refuses sparse payloads with a typed error
+        let top = JobOp::TopK(Arc::new(TopKSpec { rule: TopK::k(3) }));
+        let err = coord
+            .submit_with(sig, SubmitOptions { op: top, ..Default::default() })
+            .unwrap()
+            .wait()
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("sparse"), "{err:#}");
+
+        let m = coord.shutdown();
+        assert!(m.completed >= 5);
+    }
+
+    #[test]
+    fn spectral_requests_validate_at_submit_time() {
+        // no registry at all → PlanUnavailable before anything queues
+        let coord =
+            Coordinator::start(|| identity_backend(4, 8), ServeConfig::default()).unwrap();
+        let op = JobOp::TopK(Arc::new(TopKSpec { rule: TopK::k(2) }));
+        match coord.submit_with(vec![0.0; 4], SubmitOptions { op, ..Default::default() }) {
+            Err(ServeError::Rejected(Rejected::PlanUnavailable { .. })) => {}
+            other => panic!("want PlanUnavailable, got {:?}", other.map(|_| ())),
+        }
+        coord.shutdown();
+
+        // spectrum-free routed plan: kernel filters and wavelets are
+        // rejected, explicit-response filters still work
+        let n = 6;
+        let (_plan, _registry, coord, mut rng) = spectral_fixture(n, 7202, false);
+        let sig: Vec<f32> = (0..n).map(|_| rng.randn() as f32).collect();
+        let kop = JobOp::Filter(Arc::new(FilterSpec {
+            response: ResponseSpec::Kernel(SpectralKernel::Heat { t: 0.4 }),
+        }));
+        match coord.submit_with(sig.clone(), SubmitOptions { op: kop, ..Default::default() }) {
+            Err(ServeError::Rejected(Rejected::PlanUnavailable { reason })) => {
+                assert!(reason.contains("spectrum"), "{reason}")
+            }
+            other => panic!("want PlanUnavailable, got {:?}", other.map(|_| ())),
+        }
+        let wop = JobOp::Wavelet(Arc::new(WaveletSpec { scales: 2 }));
+        assert!(matches!(
+            coord.submit_with(sig.clone(), SubmitOptions { op: wop, ..Default::default() }),
+            Err(ServeError::Rejected(Rejected::PlanUnavailable { .. }))
+        ));
+        // malformed specs are client errors, not rejections
+        let bad_len = JobOp::Filter(Arc::new(FilterSpec {
+            response: ResponseSpec::Explicit(vec![1.0; n + 1]),
+        }));
+        assert!(matches!(
+            coord.submit_with(sig.clone(), SubmitOptions { op: bad_len, ..Default::default() }),
+            Err(ServeError::Invalid(_))
+        ));
+        let zero_scales = JobOp::Wavelet(Arc::new(WaveletSpec { scales: 0 }));
+        assert!(matches!(
+            coord
+                .submit_with(sig.clone(), SubmitOptions { op: zero_scales, ..Default::default() }),
+            Err(ServeError::Invalid(_))
+        ));
+        let unbounded = JobOp::TopK(Arc::new(TopKSpec { rule: TopK { k: 0, threshold: 0.0 } }));
+        assert!(matches!(
+            coord.submit_with(sig.clone(), SubmitOptions { op: unbounded, ..Default::default() }),
+            Err(ServeError::Invalid(_))
+        ));
+        // explicit responses never need a spectrum
+        let ok = JobOp::Filter(Arc::new(FilterSpec {
+            response: ResponseSpec::Explicit(vec![0.5; n]),
+        }));
+        coord
+            .submit_with(sig, SubmitOptions { op: ok, ..Default::default() })
+            .unwrap()
+            .wait()
+            .unwrap();
+        coord.shutdown();
+    }
+
+    #[test]
+    fn identical_filter_specs_share_a_batch_route() {
+        // two separately-built but equal specs must co-batch (route_eq
+        // falls back to value equality when the Arcs differ)
+        let a = JobOp::Filter(Arc::new(FilterSpec {
+            response: ResponseSpec::Explicit(vec![1.0, 2.0]),
+        }));
+        let b = JobOp::Filter(Arc::new(FilterSpec {
+            response: ResponseSpec::Explicit(vec![1.0, 2.0]),
+        }));
+        let c = JobOp::Filter(Arc::new(FilterSpec {
+            response: ResponseSpec::Explicit(vec![1.0, 3.0]),
+        }));
+        assert!(a.route_eq(&b));
+        assert!(!a.route_eq(&c));
+        assert!(!a.route_eq(&JobOp::Forward));
+        assert!(JobOp::Forward.route_eq(&JobOp::Forward));
+        assert!(!JobOp::Forward.route_eq(&JobOp::Adjoint));
     }
 }

@@ -16,17 +16,32 @@
 //!  "priority":"interactive"|"batch",        // optional, default interactive
 //!  "deadline_ms":N}                         // optional relative deadline
 //! {"op":"adjoint","signal":[..], ...}       // synthesis GFT
+//! {"op":"filter","signal":[..],             // fused filter Ū diag(h) Ūᵀ x:
+//!  "response":[..]}                         //   explicit diagonal h, or
+//! {"op":"filter","signal":[..],             //   an analytic kernel
+//!  "kernel":"heat","param":0.5}             //   evaluated on the plan's s̄
+//! {"op":"wavelet","signal":[..],"scales":J} // Hammond bank, J+1 bands
+//! {"op":"topk","signal":[..],               // sparse top-k of Ūᵀ x
+//!  "k":K,"threshold":T}                     //   (k and/or threshold)
 //! {"op":"metrics"}                          // serving + registry counters
 //! {"op":"upload_plan","bytes":"<hex>",      // .fastplan bytes, hex-encoded
 //!  "default":true|false}                    // true = atomic hot swap
 //! ```
 //!
-//! Replies: `{"ok":true,"signal":[..]}` for transforms,
-//! `{"ok":true,"metrics":{..}}`, `{"ok":true,"checksum":"<16-hex>",
-//! "n":N,"stages":G}` for uploads — or `{"ok":false,"code":C,
-//! "error":MSG}` where `code` is one of `queue_full` (plus
-//! `"retry_after_ms":N` — back off at least that long), `deadline_exceeded`,
-//! `shutting_down`, `plan_unavailable`, `backend_error`, or `bad_request`.
+//! The spectral ops (`filter`/`wavelet`/`topk`) need a registry-routed
+//! plan; kernel filters and wavelets additionally need the plan to carry
+//! its spectrum (a version-2 `.fastplan`). A wavelet reply's `signal` is
+//! the band-major stack `[band0 | band1 | … | bandJ]` of `(J+1)·n` values
+//! (band 0 = scaling function).
+//!
+//! Replies: `{"ok":true,"signal":[..]}` for transforms/filters/wavelets,
+//! `{"ok":true,"indices":[..],"values":[..]}` for top-k (parallel arrays,
+//! indices ascending), `{"ok":true,"metrics":{..}}`,
+//! `{"ok":true,"checksum":"<16-hex>","n":N,"stages":G}` for uploads — or
+//! `{"ok":false,"code":C,"error":MSG}` where `code` is one of
+//! `queue_full` (plus `"retry_after_ms":N` — back off at least that
+//! long), `deadline_exceeded`, `shutting_down`, `plan_unavailable`,
+//! `backend_error`, or `bad_request`.
 //!
 //! Signals travel as JSON numbers printed with Rust's shortest-round-trip
 //! `f32` formatting and are re-parsed **directly as `f32`** (never through
@@ -54,7 +69,11 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context};
 
-use super::{Coordinator, JobOp, MetricsSnapshot, Priority, ServeError, SubmitOptions};
+use super::{
+    Coordinator, FilterSpec, JobOp, MetricsSnapshot, Payload, Priority, ResponseSpec,
+    ServeError, SubmitOptions, TopKSpec, WaveletSpec,
+};
+use crate::ops::{SpectralKernel, TopK};
 use crate::plan::Plan;
 
 /// Hard cap on request/reply payload size (64 MiB — a full batch of
@@ -714,9 +733,20 @@ fn handle_transform(coord: &Coordinator, req: &Json, op: JobOp, opts: &NetServer
         Err(e) => return serve_error_reply(&e),
     };
     match ticket.wait_timeout(opts.reply_timeout) {
-        Some(Ok(out)) => Json::Obj(vec![
+        Some(Ok(Payload::Dense(out))) => Json::Obj(vec![
             ("ok".to_string(), Json::Bool(true)),
             ("signal".to_string(), Json::Arr(out.into_iter().map(Json::f32).collect())),
+        ]),
+        Some(Ok(Payload::Sparse(sp))) => Json::Obj(vec![
+            ("ok".to_string(), Json::Bool(true)),
+            (
+                "indices".to_string(),
+                Json::Arr(sp.indices.into_iter().map(|i| Json::u64(i as u64)).collect()),
+            ),
+            (
+                "values".to_string(),
+                Json::Arr(sp.values.into_iter().map(Json::f32).collect()),
+            ),
         ]),
         Some(Err(e)) => serve_error_reply(&e),
         None => err_reply(
@@ -724,6 +754,105 @@ fn handle_transform(coord: &Coordinator, req: &Json, op: JobOp, opts: &NetServer
             &format!("no reply within {:?}", opts.reply_timeout),
             None,
         ),
+    }
+}
+
+/// Build the [`JobOp`] for a spectral request (`filter` / `wavelet` /
+/// `topk`), or the `bad_request` reply describing what was malformed.
+fn parse_spectral_op(op: &str, req: &Json) -> Result<JobOp, Json> {
+    match op {
+        "filter" => {
+            match (req.get("response"), req.get("kernel")) {
+                (Some(resp), None) => {
+                    let Some(items) = resp.as_arr() else {
+                        return Err(err_reply(
+                            "bad_request",
+                            "\"response\" must be an array of numbers",
+                            None,
+                        ));
+                    };
+                    let mut h = Vec::with_capacity(items.len());
+                    for v in items {
+                        match v.as_f64() {
+                            Some(x) if x.is_finite() => h.push(x),
+                            _ => {
+                                return Err(err_reply(
+                                    "bad_request",
+                                    "\"response\" must hold finite numbers",
+                                    None,
+                                ))
+                            }
+                        }
+                    }
+                    Ok(JobOp::Filter(Arc::new(FilterSpec {
+                        response: ResponseSpec::Explicit(h),
+                    })))
+                }
+                (None, Some(kernel)) => {
+                    let Some(name) = kernel.as_str() else {
+                        return Err(err_reply("bad_request", "\"kernel\" must be a string", None));
+                    };
+                    let Some(param) = req.get("param").and_then(|v| v.as_f64()) else {
+                        return Err(err_reply(
+                            "bad_request",
+                            "kernel filters need a numeric \"param\"",
+                            None,
+                        ));
+                    };
+                    match SpectralKernel::from_name(name, param) {
+                        Ok(k) => Ok(JobOp::Filter(Arc::new(FilterSpec {
+                            response: ResponseSpec::Kernel(k),
+                        }))),
+                        Err(e) => Err(err_reply("bad_request", &format!("{e:#}"), None)),
+                    }
+                }
+                _ => Err(err_reply(
+                    "bad_request",
+                    "filter requests need exactly one of \"response\" or \"kernel\"+\"param\"",
+                    None,
+                )),
+            }
+        }
+        "wavelet" => match req.get("scales").and_then(|v| v.as_u64()) {
+            Some(j) if j >= 1 => {
+                Ok(JobOp::Wavelet(Arc::new(WaveletSpec { scales: j as usize })))
+            }
+            _ => Err(err_reply(
+                "bad_request",
+                "wavelet requests need an integer \"scales\" >= 1",
+                None,
+            )),
+        },
+        "topk" => {
+            let k = match req.get("k") {
+                Some(v) => match v.as_u64() {
+                    Some(k) => k as usize,
+                    None => {
+                        return Err(err_reply(
+                            "bad_request",
+                            "\"k\" must be a non-negative integer",
+                            None,
+                        ))
+                    }
+                },
+                None => 0,
+            };
+            let threshold = match req.get("threshold") {
+                Some(v) => match v.as_f32() {
+                    Some(t) => t,
+                    None => {
+                        return Err(err_reply("bad_request", "\"threshold\" must be a number", None))
+                    }
+                },
+                None => 0.0,
+            };
+            let rule = TopK { k, threshold };
+            if let Err(e) = rule.validate() {
+                return Err(err_reply("bad_request", &format!("{e:#}"), None));
+            }
+            Ok(JobOp::TopK(Arc::new(TopKSpec { rule })))
+        }
+        other => Err(err_reply("bad_request", &format!("not a spectral op: {other:?}"), None)),
     }
 }
 
@@ -783,10 +912,20 @@ pub fn handle_request(
             let job_op = if op == "adjoint" { JobOp::Adjoint } else { JobOp::Forward };
             handle_transform(coord, &req, job_op, opts)
         }
+        "filter" | "wavelet" | "topk" => {
+            if draining.load(Ordering::SeqCst) {
+                return err_reply("shutting_down", "coordinator is shutting down", None);
+            }
+            match parse_spectral_op(op, &req) {
+                Ok(job_op) => handle_transform(coord, &req, job_op, opts),
+                Err(reply) => reply,
+            }
+        }
         other => err_reply(
             "bad_request",
             &format!(
-                "unknown op {other:?} (want submit|forward|adjoint|metrics|upload_plan)"
+                "unknown op {other:?} (want submit|forward|adjoint|filter|wavelet|topk|\
+                 metrics|upload_plan)"
             ),
             None,
         ),

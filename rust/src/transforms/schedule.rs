@@ -784,6 +784,222 @@ impl CompiledPlan {
         }
     }
 
+    // ---------------- f32 batched execution: fused spectral filter ------
+    //
+    // A spectral filter `y = Ū diag(h) Ūᵀ x` is three commuting-per-column
+    // stages. The unfused route materializes the intermediate spectral
+    // block twice (reverse apply, separate row scaling, forward apply —
+    // three full sweeps of the (n, batch) buffer through memory). The
+    // fused route below pushes one cache tile through reverse stream →
+    // in-register diagonal response → forward stream while the tile stays
+    // L1/L2-resident (packed once, unpacked once): exactly one reverse and
+    // one forward stream traversal, no intermediate block allocation.
+    // Columns are independent in all three stages and the SIMD scale
+    // kernel performs the same IEEE f32 multiply as the scalar row
+    // scaling, so the fused result is **bitwise identical** to the
+    // unfused sequential reference.
+
+    /// Fused filter over columns `[c0, c1)`: reverse stream, per-row
+    /// diagonal response `h`, forward stream — one tile-resident pass.
+    ///
+    /// # Safety
+    /// Same contract as [`FusedStream::run_cols_f32`]; additionally
+    /// `h.len()` must equal the plan dimension `n` and rows `0..n` must
+    /// all belong to the buffer.
+    unsafe fn run_filter_cols_f32(
+        &self,
+        ptr: *mut f32,
+        batch: usize,
+        c0: usize,
+        c1: usize,
+        h: &[f32],
+        isa: KernelIsa,
+    ) {
+        let w = c1 - c0;
+        self.rev.run_cols_f32(ptr, batch, c0, c1, isa);
+        for (i, &hi) in h.iter().enumerate() {
+            let ri = ptr.add(i * batch + c0);
+            simd::apply_stage(isa, F_SCALE, ri, ri, w, hi, 0.0);
+        }
+        self.fwd.run_cols_f32(ptr, batch, c0, c1, isa);
+    }
+
+    /// [`CompiledPlan::run_filter_cols_f32`] with the packed-tile
+    /// optimization of [`FusedStream::run_tile`]: the tile is packed once,
+    /// pushed through *both* stream traversals and the response while
+    /// compact, and unpacked once (the filter's doubled depth amortizes
+    /// the copy twice as fast as a single-direction apply).
+    ///
+    /// # Safety
+    /// Same contract as [`CompiledPlan::run_filter_cols_f32`].
+    unsafe fn run_filter_tile(
+        &self,
+        ptr: *mut f32,
+        batch: usize,
+        c0: usize,
+        c1: usize,
+        h: &[f32],
+        isa: KernelIsa,
+    ) {
+        let n = self.n;
+        let w = c1 - c0;
+        let depth = 2 * self.op.len() + n;
+        let deep_enough = depth >= PACK_MIN_STAGES_PER_ROW * n;
+        if w < batch && deep_enough && n * w <= PACK_TILE_MAX_ELEMS {
+            TILE_SCRATCH.with(|cell| {
+                let mut scratch = cell.borrow_mut();
+                if scratch.len() < n * w {
+                    scratch.resize(n * w, 0.0);
+                }
+                let sp = scratch.as_mut_ptr();
+                for i in 0..n {
+                    std::ptr::copy_nonoverlapping(ptr.add(i * batch + c0), sp.add(i * w), w);
+                }
+                // SAFETY: scratch is this thread's exclusive buffer; the
+                // packed tile is an (n, w) block with stride w
+                self.run_filter_cols_f32(sp, w, 0, w, h, isa);
+                for i in 0..n {
+                    let src = sp.add(i * w) as *const f32;
+                    std::ptr::copy_nonoverlapping(src, ptr.add(i * batch + c0), w);
+                }
+            });
+        } else {
+            self.run_filter_cols_f32(ptr, batch, c0, c1, h, isa);
+        }
+    }
+
+    /// Fused sequential filter apply: `X ← Ū diag(h) Ūᵀ X` in one pass on
+    /// the calling thread (process-default SIMD kernel). Bitwise identical
+    /// to reverse apply → row scaling → forward apply under
+    /// [`ExecPolicy::Seq`](crate::plan::ExecPolicy).
+    pub fn apply_filter_batch_inline(&self, block: &mut SignalBlock, h: &[f32]) {
+        self.apply_filter_batch_inline_isa(block, h, simd::default_kernel())
+    }
+
+    /// [`CompiledPlan::apply_filter_batch_inline`] with an explicit SIMD
+    /// kernel (clamped to scalar when unsupported on this host).
+    pub fn apply_filter_batch_inline_isa(
+        &self,
+        block: &mut SignalBlock,
+        h: &[f32],
+        isa: KernelIsa,
+    ) {
+        assert_eq!(block.n, self.n, "plan/block dimension mismatch");
+        assert_eq!(h.len(), self.n, "response/plan dimension mismatch");
+        if block.batch == 0 {
+            return;
+        }
+        let isa = if isa.is_supported() { isa } else { KernelIsa::Scalar };
+        let batch = block.batch;
+        // SAFETY: exclusive &mut borrow of the block; single thread.
+        unsafe { self.run_filter_cols_f32(block.data.as_mut_ptr(), batch, 0, batch, h, isa) };
+    }
+
+    /// Fused pooled filter apply — the serving hot path for `filter`
+    /// requests. Column tiles are claimed from an atomic cursor by the
+    /// persistent pool workers; each tile runs reverse stream → response →
+    /// forward stream while resident. Bitwise identical to the sequential
+    /// filter (columns never interact).
+    pub fn apply_filter_batch_pooled(
+        &self,
+        block: &mut SignalBlock,
+        h: &[f32],
+        pool: &WorkerPool,
+        cfg: &ExecConfig,
+    ) {
+        assert_eq!(block.n, self.n, "plan/block dimension mismatch");
+        assert_eq!(h.len(), self.n, "response/plan dimension mismatch");
+        if block.batch == 0 {
+            return;
+        }
+        let isa = cfg.kernel_isa();
+        let batch = block.batch;
+        let threads = cfg.threads.max(1).min(pool.workers() + 1);
+        let per_thread = (batch + threads - 1) / threads;
+        let max_tile = cfg.tile_cols.max(1).min(batch);
+        let min_tile = MIN_TILE_COLS.min(max_tile);
+        let tile = per_thread.clamp(min_tile, max_tile);
+        let tiles = (batch + tile - 1) / tile;
+        let worth = threads > 1 && (2 * self.len() + self.n) * batch >= cfg.min_work;
+        let tile_threads = threads.min(tiles);
+        if worth && tile_threads > 1 {
+            let shared = SendPtr(block.data.as_mut_ptr());
+            let cursor = AtomicUsize::new(0);
+            let job = |_slot: usize| loop {
+                let t = cursor.fetch_add(1, Ordering::Relaxed);
+                if t >= tiles {
+                    break;
+                }
+                let c0 = t * tile;
+                let c1 = (c0 + tile).min(batch);
+                // SAFETY: the cursor hands each tile index to exactly one
+                // participant; tiles are pairwise-disjoint column ranges,
+                // and the pool joins every participant before `run`
+                // returns (i.e. before the &mut borrow of the block ends).
+                unsafe { self.run_filter_tile(shared.0, batch, c0, c1, h, isa) };
+            };
+            pool.run(tile_threads - 1, &job);
+        } else {
+            let ptr = block.data.as_mut_ptr();
+            for t in 0..tiles {
+                let c0 = t * tile;
+                let c1 = (c0 + tile).min(batch);
+                // SAFETY: exclusive &mut borrow of the block; one thread.
+                unsafe { self.run_filter_tile(ptr, batch, c0, c1, h, isa) };
+            }
+        }
+    }
+
+    /// Fused filter apply on scoped worker threads (the spawn-per-apply
+    /// engine): each worker owns a contiguous column range and runs the
+    /// whole reverse → response → forward pipeline over it.
+    pub fn apply_filter_batch_spawn(&self, block: &mut SignalBlock, h: &[f32], cfg: &ExecConfig) {
+        assert_eq!(block.n, self.n, "plan/block dimension mismatch");
+        assert_eq!(h.len(), self.n, "response/plan dimension mismatch");
+        if block.batch == 0 {
+            return;
+        }
+        let isa = cfg.kernel_isa();
+        let batch = block.batch;
+        let threads = cfg.threads.max(1).min(batch);
+        let worth = (2 * self.len() + self.n) * batch >= cfg.min_work;
+        if worth && threads > 1 && batch >= 2 * threads {
+            let shared = SendPtr(block.data.as_mut_ptr());
+            std::thread::scope(|scope| {
+                for t in 0..threads {
+                    let c0 = t * batch / threads;
+                    let c1 = (t + 1) * batch / threads;
+                    if c0 == c1 {
+                        continue;
+                    }
+                    let shared = &shared;
+                    scope.spawn(move || {
+                        // SAFETY: workers touch pairwise-disjoint column
+                        // ranges [c0, c1) of every row; the scope joins
+                        // before the &mut borrow of the block ends.
+                        unsafe { self.run_filter_tile(shared.0, batch, c0, c1, h, isa) };
+                    });
+                }
+            });
+        } else {
+            let ptr = block.data.as_mut_ptr();
+            // SAFETY: exclusive &mut borrow of the block; single thread.
+            unsafe { self.run_filter_cols_f32(ptr, batch, 0, batch, h, isa) };
+        }
+    }
+
+    /// Fused `f64` single-vector filter: `x ← Ū diag(h) Ūᵀ x` through the
+    /// exact coefficient streams.
+    pub fn apply_filter_vec(&self, x: &mut [f64], h: &[f64]) {
+        assert_eq!(x.len(), self.n, "vector length mismatch");
+        assert_eq!(h.len(), self.n, "response length mismatch");
+        self.rev.apply_vec_f64(x);
+        for (v, &hi) in x.iter_mut().zip(h.iter()) {
+            *v *= hi;
+        }
+        self.fwd.apply_vec_f64(x);
+    }
+
     /// Pooled layer-parallel mode (single signal / tiny batch with wide
     /// layers): within each layer the stages are dealt round-robin to the
     /// participants — supports inside a layer are pairwise disjoint, so
@@ -1511,5 +1727,77 @@ mod tests {
         assert!(st.layers >= 120 / (20 / 2), "layers {} too few", st.layers);
         assert!(st.max_width <= 10, "width {} exceeds n/2", st.max_width);
         assert!((st.mean_width - 120.0 / st.layers as f64).abs() < 1e-12);
+    }
+
+    /// The unfused filter reference: reverse apply, explicit row scaling,
+    /// forward apply — three separate sweeps, all sequential.
+    fn unfused_filter(cp: &CompiledPlan, block: &mut SignalBlock, h: &[f32]) {
+        cp.apply_batch_inline(block, true);
+        let b = block.batch;
+        for (i, &hi) in h.iter().enumerate() {
+            for v in &mut block.data[i * b..(i + 1) * b] {
+                *v *= hi;
+            }
+        }
+        cp.apply_batch_inline(block, false);
+    }
+
+    #[test]
+    fn fused_filter_matches_unfused_bitwise() {
+        // odd n → kernel tail loops; batches straddle lane widths; small
+        // tiles force ragged packed tiles through the pooled/spawn paths
+        let pool = WorkerPool::new(2);
+        let mut rng = Rng64::new(7116);
+        let n = 29;
+        let ch = random_gplan(n, 6 * n, &mut rng);
+        let cp = CompiledPlan::from_gchain(&ch);
+        let h: Vec<f32> = (0..n).map(|_| rng.randn() as f32).collect();
+        for batch in [1usize, 7, 9, 17, 33] {
+            let signals: Vec<Vec<f32>> = (0..batch)
+                .map(|_| (0..n).map(|_| rng.randn() as f32).collect())
+                .collect();
+            let mut reference = SignalBlock::from_signals(&signals).unwrap();
+            unfused_filter(&cp, &mut reference, &h);
+            for isa in KernelIsa::available() {
+                let mut inline = SignalBlock::from_signals(&signals).unwrap();
+                cp.apply_filter_batch_inline_isa(&mut inline, &h, isa);
+                assert_eq!(reference.data, inline.data, "fused inline {isa:?} batch={batch}");
+                let cfg = eager_cfg(3, 5).with_kernel(Some(isa));
+                let mut pooled = SignalBlock::from_signals(&signals).unwrap();
+                cp.apply_filter_batch_pooled(&mut pooled, &h, &pool, &cfg);
+                assert_eq!(reference.data, pooled.data, "fused pooled {isa:?} batch={batch}");
+                let mut spawned = SignalBlock::from_signals(&signals).unwrap();
+                cp.apply_filter_batch_spawn(&mut spawned, &h, &cfg);
+                assert_eq!(reference.data, spawned.data, "fused spawn {isa:?} batch={batch}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_filter_vec_matches_unfused_f64() {
+        let mut rng = Rng64::new(7117);
+        let n = 21;
+        let ch = random_gplan(n, 5 * n, &mut rng);
+        let cp = CompiledPlan::from_gchain(&ch);
+        let h: Vec<f64> = (0..n).map(|_| rng.randn()).collect();
+        let x: Vec<f64> = (0..n).map(|_| rng.randn()).collect();
+        let mut want = x.clone();
+        cp.apply_vec_rev(&mut want);
+        for (v, &hi) in want.iter_mut().zip(h.iter()) {
+            *v *= hi;
+        }
+        cp.apply_vec(&mut want);
+        let mut got = x.clone();
+        cp.apply_filter_vec(&mut got, &h);
+        assert_eq!(want, got, "fused f64 filter diverged");
+    }
+
+    #[test]
+    fn fused_filter_on_empty_plan_is_row_scaling() {
+        let cp = CompiledPlan::from_gchain(&GChain::identity(4));
+        let h = [2.0f32, 0.5, -1.0, 0.0];
+        let mut block = SignalBlock::from_signals(&[vec![1.0f32, 2.0, 3.0, 4.0]]).unwrap();
+        cp.apply_filter_batch_inline(&mut block, &h);
+        assert_eq!(block.signal(0), vec![2.0f32, 1.0, -3.0, 0.0]);
     }
 }

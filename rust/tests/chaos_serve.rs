@@ -18,11 +18,13 @@ use std::time::{Duration, Instant};
 
 use fastes::cli::figures::random_gplan;
 use fastes::linalg::Rng64;
+use fastes::ops::{FilterOp, SpectralKernel, TopK, WaveletBank};
 use fastes::plan::{Direction, ExecPolicy, Plan};
 use fastes::serve::faults::{self, FaultAction, FaultPlan};
 use fastes::serve::{
-    Backend, Coordinator, NativeGftBackend, PlanRegistry, Priority, Rejected, ServeConfig,
-    ServeError, SubmitOptions, TransformDirection,
+    Backend, Coordinator, FilterSpec, JobOp, NativeGftBackend, Payload, PlanRegistry, Priority,
+    Rejected, ResponseSpec, ServeConfig, ServeError, SubmitOptions, TopKSpec,
+    TransformDirection, WaveletSpec,
 };
 use fastes::transforms::SignalBlock;
 
@@ -51,6 +53,39 @@ const WAIT: Duration = Duration::from_secs(30);
 fn plan_of(n: usize, seed: u64) -> Arc<Plan> {
     let mut rng = Rng64::new(seed);
     Plan::from(random_gplan(n, 8 * n, &mut rng)).build()
+}
+
+/// A plan with an attached Lemma-1 spectrum, so kernel-based spectral
+/// requests (filter/wavelet) resolve against it.
+fn spectral_plan_of(n: usize, seed: u64) -> Arc<Plan> {
+    let mut rng = Rng64::new(seed);
+    let ch = random_gplan(n, 8 * n, &mut rng);
+    let spectrum: Vec<f64> = (0..n).map(|_| rng.randn().abs() + 0.1).collect();
+    Plan::from(ch).spectrum(spectrum).build()
+}
+
+/// The heat-kernel filter request used by the spectral chaos tests.
+fn heat_filter_op() -> JobOp {
+    JobOp::Filter(Arc::new(FilterSpec {
+        response: ResponseSpec::Kernel(SpectralKernel::Heat { t: 0.3 }),
+    }))
+}
+
+/// Local fused reference for [`heat_filter_op`] on a given plan.
+fn filter_reference(plan: &Arc<Plan>, sig: &[f32]) -> Vec<f32> {
+    let op = FilterOp::from_kernel(Arc::clone(plan), &SpectralKernel::Heat { t: 0.3 }).unwrap();
+    let mut block = SignalBlock::from_signals(&[sig.to_vec()]).unwrap();
+    op.apply(&mut block, Direction::Forward, &ExecPolicy::Seq).unwrap();
+    block.signal(0)
+}
+
+/// Local reference for a served wavelet request: band-major stack of the
+/// Hammond bank's per-band outputs.
+fn wavelet_reference(plan: &Arc<Plan>, sig: &[f32], scales: usize) -> Vec<f32> {
+    let bank = WaveletBank::hammond(Arc::clone(plan), scales).unwrap();
+    let block = SignalBlock::from_signals(&[sig.to_vec()]).unwrap();
+    let bands = bank.analyze(&block, &ExecPolicy::Seq).unwrap();
+    bands.iter().flat_map(|b| b.signal(0)).collect()
 }
 
 fn signal_of(n: usize, seed: u64) -> Vec<f32> {
@@ -92,6 +127,11 @@ fn seq_coordinator(
 
 /// Bounded wait: a hang here is the deadlock the suite exists to catch.
 fn bounded(t: &fastes::serve::Ticket) -> Result<Vec<f32>, ServeError> {
+    bounded_payload(t).and_then(Payload::into_dense)
+}
+
+/// Bounded wait keeping the full [`Payload`] (sparse top-k replies).
+fn bounded_payload(t: &fastes::serve::Ticket) -> Result<Payload, ServeError> {
     t.wait_timeout(WAIT).expect("coordinator wedged: no reply within the deadlock bound")
 }
 
@@ -335,4 +375,156 @@ fn interactive_class_preempts_batch_class_under_injected_slowness() {
     );
     assert!(bounded(&batch_job).is_ok());
     coord.shutdown();
+}
+
+#[test]
+fn spectral_backend_panic_fails_one_batch_and_spectral_serving_continues() {
+    let _chaos = Chaos::begin();
+    // second batch panics; everything else is healthy
+    faults::install("serve.backend", FaultPlan::once_at(FaultAction::Panic, 1));
+
+    let n = 12;
+    let plan = spectral_plan_of(n, 80);
+    let registry = Arc::new(PlanRegistry::new(4));
+    registry.install_default(Arc::clone(&plan));
+    let coord = seq_coordinator(
+        &plan,
+        ServeConfig { max_batch: 1, ..Default::default() },
+        Some(Arc::clone(&registry)),
+    );
+    let filter = SubmitOptions { op: heat_filter_op(), ..Default::default() };
+
+    // batch 0: a filter request serves bitwise-correctly
+    let s0 = signal_of(n, 8000);
+    let t0 = coord.submit_with(s0.clone(), filter.clone()).unwrap();
+    assert_eq!(bounded(&t0).unwrap(), filter_reference(&plan, &s0));
+
+    // batch 1: the panicking filter batch fails typed, not process-fatal
+    let t1 = coord.submit_with(signal_of(n, 8001), filter.clone()).unwrap();
+    match bounded(&t1) {
+        Err(ServeError::Backend(msg)) => {
+            assert!(msg.contains("panic"), "typed panic error expected, got {msg:?}");
+        }
+        other => panic!("panicking batch must fail typed, got {:?}", other.map(|_| ())),
+    }
+
+    // the worker survived: a wavelet request serves normally and bitwise
+    let s2 = signal_of(n, 8002);
+    let wavelet = SubmitOptions {
+        op: JobOp::Wavelet(Arc::new(WaveletSpec { scales: 2 })),
+        ..Default::default()
+    };
+    let t2 = coord.submit_with(s2.clone(), wavelet).unwrap();
+    let got = bounded(&t2).unwrap();
+    assert_eq!(got.len(), 3 * n, "scaling + 2 wavelet bands, band-major");
+    assert_eq!(got, wavelet_reference(&plan, &s2, 2));
+
+    let m = coord.shutdown();
+    assert_eq!(m.panics_contained, 1, "exactly one contained panic");
+    assert_eq!(m.errors, 1);
+    assert_eq!(m.completed, 2);
+}
+
+#[test]
+fn expired_deadline_answers_filter_request_without_executing() {
+    let _chaos = Chaos::begin();
+    // every batch takes ≥ 40 ms, so a queued 5 ms deadline must expire
+    faults::install("serve.backend", FaultPlan::always(FaultAction::SleepMs(40)));
+
+    let n = 10;
+    let plan = spectral_plan_of(n, 81);
+    let registry = Arc::new(PlanRegistry::new(4));
+    registry.install_default(Arc::clone(&plan));
+    let coord = seq_coordinator(
+        &plan,
+        ServeConfig { max_batch: 1, ..Default::default() },
+        Some(Arc::clone(&registry)),
+    );
+
+    let head = coord.submit_with(signal_of(n, 8100), SubmitOptions::default()).unwrap();
+    let doomed = coord
+        .submit_with(
+            signal_of(n, 8101),
+            SubmitOptions {
+                op: heat_filter_op(),
+                deadline: Some(Instant::now() + Duration::from_millis(5)),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    match bounded(&doomed) {
+        Err(ServeError::Rejected(Rejected::DeadlineExceeded)) => {}
+        other => panic!("queued-past-deadline job must reject typed, got {:?}", other.map(|_| ())),
+    }
+    assert!(bounded(&head).is_ok());
+
+    let m = coord.shutdown();
+    assert_eq!(m.rejected_deadline, 1);
+    assert_eq!(m.completed, 1, "the expired filter job must never reach the backend");
+}
+
+#[test]
+fn hot_swap_drains_inflight_filters_on_old_plans_spectrum() {
+    let _chaos = Chaos::begin();
+    // slow batches so r1 is genuinely in flight when the swap happens
+    faults::install("serve.backend", FaultPlan::always(FaultAction::SleepMs(25)));
+
+    let n = 14;
+    let plan_a = spectral_plan_of(n, 82);
+    let plan_b = spectral_plan_of(n, 83);
+    assert_ne!(plan_a.content_checksum(), plan_b.content_checksum());
+    assert_ne!(plan_a.spectrum().unwrap(), plan_b.spectrum().unwrap());
+
+    let registry = Arc::new(PlanRegistry::new(8));
+    registry.install_default(Arc::clone(&plan_a));
+    let coord = seq_coordinator(
+        &plan_a,
+        ServeConfig { max_batch: 1, ..Default::default() },
+        Some(Arc::clone(&registry)),
+    );
+    let filter = SubmitOptions { op: heat_filter_op(), ..Default::default() };
+
+    // r1 resolves plan A (and therefore A's spectrum) at submit time
+    let s1 = signal_of(n, 8200);
+    let r1 = coord.submit_with(s1.clone(), filter.clone()).unwrap();
+
+    // atomic hot swap while r1 is in flight
+    registry.install_default(Arc::clone(&plan_b));
+
+    // r2 submitted after the swap resolves plan B
+    let s2 = signal_of(n, 8201);
+    let r2 = coord.submit_with(s2.clone(), filter.clone()).unwrap();
+
+    assert_eq!(
+        bounded(&r1).unwrap(),
+        filter_reference(&plan_a, &s1),
+        "in-flight filter must drain on the OLD plan's spectrum"
+    );
+    assert_eq!(
+        bounded(&r2).unwrap(),
+        filter_reference(&plan_b, &s2),
+        "post-swap filter must use the NEW plan's spectrum"
+    );
+
+    // a post-swap top-k request compresses plan B's spectral coefficients
+    let s3 = signal_of(n, 8202);
+    let topk = SubmitOptions {
+        op: JobOp::TopK(Arc::new(TopKSpec { rule: TopK::k(3) })),
+        ..Default::default()
+    };
+    let r3 = coord.submit_with(s3.clone(), topk).unwrap();
+    let got = match bounded_payload(&r3).unwrap() {
+        Payload::Sparse(sp) => sp,
+        Payload::Dense(_) => panic!("top-k must answer with a sparse payload"),
+    };
+    let block = SignalBlock::from_signals(&[s3.clone()]).unwrap();
+    let want = TopK::k(3)
+        .compress_spectral(&plan_b, &block, &ExecPolicy::Seq)
+        .unwrap()
+        .remove(0);
+    assert_eq!(got, want, "served top-k diverged from the local reference");
+
+    let m = coord.shutdown();
+    assert_eq!(m.completed, 3);
+    assert_eq!(m.errors, 0);
 }

@@ -21,9 +21,17 @@
 //! tail loops break first: odd `n`, batch widths of 1 and `lanes ± 1`,
 //! tile widths that do not divide the vector width, and single-stage
 //! plans.
+//!
+//! A third family extends the same matrix to the fused spectral
+//! operators ([`FilterOp`], [`WaveletBank`], [`TopK`]): every engine ×
+//! ISA × precision must be bitwise equal to the unfused sequential
+//! reference (adjoint → explicit row scale → forward).
+
+use std::sync::Arc;
 
 use fastes::cli::figures::{random_gplan, random_tplan};
 use fastes::linalg::Rng64;
+use fastes::ops::{FilterOp, SpectralKernel, TopK, WaveletBank};
 use fastes::plan::{Direction, ExecPolicy, FastOperator, Plan};
 use fastes::runtime::autotune;
 use fastes::transforms::{
@@ -250,6 +258,129 @@ fn auto_policy_bitwise_equals_its_resolved_policy_on_randomized_plans() {
             let again = autotune::resolve(plan, batch);
             assert_eq!(again.swept, 0, "{label}: repeat resolution must not re-sweep");
             assert_eq!(again.tuned.policy, resolved.tuned.policy);
+        }
+    }
+}
+
+#[test]
+fn spectral_operator_matrix_bitwise_equal_unfused_reference() {
+    // FilterOp / WaveletBank / TopK across {Seq, Spawn, Pool} × every
+    // available SIMD kernel × {f32, f64}, including odd n and batch 1:
+    // every combination must be bitwise equal to the unfused sequential
+    // reference (adjoint → explicit row scale → forward).
+    let mut rng = Rng64::new(20_009);
+    for (n, batch, tile) in [(19usize, 1usize, 3usize), (24, 13, 5), (31, 9, 7)] {
+        let ch = random_gplan(n, 6 * n, &mut rng);
+        let spectrum: Vec<f64> = (0..n).map(|_| rng.randn().abs() * 2.0).collect();
+        let plan = Plan::from(&ch).spectrum(spectrum).build();
+        let op =
+            FilterOp::from_kernel(Arc::clone(&plan), &SpectralKernel::Heat { t: 0.4 }).unwrap();
+        let h32: Vec<f32> = op.response_f32().to_vec();
+        let sigs = signals(&mut rng, n, batch);
+
+        // ---- FilterOp, f32 block path ----
+        let mut want = SignalBlock::from_signals(&sigs).unwrap();
+        plan.apply(&mut want, Direction::Adjoint, &ExecPolicy::Seq).unwrap();
+        let b = want.batch;
+        for (i, &hi) in h32.iter().enumerate() {
+            for v in &mut want.data[i * b..(i + 1) * b] {
+                *v *= hi;
+            }
+        }
+        plan.apply(&mut want, Direction::Forward, &ExecPolicy::Seq).unwrap();
+        for isa in KernelIsa::available() {
+            // fused Seq sweep under an explicit kernel pin
+            let mut got = SignalBlock::from_signals(&sigs).unwrap();
+            plan.compiled().apply_filter_batch_inline_isa(&mut got, &h32, isa);
+            assert_eq!(
+                want.data,
+                got.data,
+                "filter seq/{} n={n} batch={batch} diverged",
+                isa.as_str()
+            );
+            for policy in [
+                ExecPolicy::Spawn(eager_cfg(3, tile, isa)),
+                ExecPolicy::Pool(eager_cfg(3, tile, isa)),
+            ] {
+                let mut got = SignalBlock::from_signals(&sigs).unwrap();
+                op.apply(&mut got, Direction::Forward, &policy).unwrap();
+                assert_eq!(
+                    want.data,
+                    got.data,
+                    "filter {}/{} n={n} batch={batch} diverged",
+                    policy.engine(),
+                    isa.as_str()
+                );
+            }
+        }
+
+        // ---- FilterOp, f64 vector path ----
+        let x: Vec<f64> = (0..n).map(|_| rng.randn()).collect();
+        let mut want64 = x.clone();
+        plan.apply_vec(&mut want64, Direction::Adjoint).unwrap();
+        for (v, hi) in want64.iter_mut().zip(op.response().iter()) {
+            *v *= *hi;
+        }
+        plan.apply_vec(&mut want64, Direction::Forward).unwrap();
+        let mut got64 = x.clone();
+        op.apply_vec(&mut got64, Direction::Forward).unwrap();
+        assert_eq!(want64, got64, "filter f64 n={n} diverged");
+
+        // ---- WaveletBank: every band, every engine × ISA ----
+        let bank = WaveletBank::hammond(Arc::clone(&plan), 2).unwrap();
+        let ref_bands: Vec<SignalBlock> = bank
+            .responses_f32()
+            .iter()
+            .map(|h| {
+                let mut blk = SignalBlock::from_signals(&sigs).unwrap();
+                plan.apply(&mut blk, Direction::Adjoint, &ExecPolicy::Seq).unwrap();
+                let b = blk.batch;
+                for (i, &hi) in h.iter().enumerate() {
+                    for v in &mut blk.data[i * b..(i + 1) * b] {
+                        *v *= hi;
+                    }
+                }
+                plan.apply(&mut blk, Direction::Forward, &ExecPolicy::Seq).unwrap();
+                blk
+            })
+            .collect();
+        let mut policies = vec![ExecPolicy::Seq];
+        for isa in KernelIsa::available() {
+            policies.push(ExecPolicy::Spawn(eager_cfg(3, tile, isa)));
+            policies.push(ExecPolicy::Pool(eager_cfg(3, tile, isa)));
+        }
+        for policy in &policies {
+            let block = SignalBlock::from_signals(&sigs).unwrap();
+            let bands = bank.analyze(&block, policy).unwrap();
+            for (bi, (got, want)) in bands.iter().zip(&ref_bands).enumerate() {
+                assert_eq!(
+                    want.data,
+                    got.data,
+                    "wavelet band {bi} {} n={n} batch={batch} diverged",
+                    policy.engine()
+                );
+            }
+        }
+        // f64 wavelet path vs per-band unfused vector route
+        let bands64 = bank.analyze_vec(&x).unwrap();
+        for (bi, got) in bands64.iter().enumerate() {
+            let mut want = x.clone();
+            plan.apply_vec(&mut want, Direction::Adjoint).unwrap();
+            for (v, hi) in want.iter_mut().zip(bank.responses()[bi].iter()) {
+                *v *= *hi;
+            }
+            plan.apply_vec(&mut want, Direction::Forward).unwrap();
+            assert_eq!(&want, got, "wavelet f64 band {bi} n={n} diverged");
+        }
+
+        // ---- TopK: selection is engine-invariant ----
+        let block = SignalBlock::from_signals(&sigs).unwrap();
+        let rule = TopK { k: 5, threshold: 0.0 };
+        let want_topk = rule.compress_spectral(&plan, &block, &ExecPolicy::Seq).unwrap();
+        assert_eq!(want_topk.len(), batch);
+        for policy in &policies {
+            let got = rule.compress_spectral(&plan, &block, policy).unwrap();
+            assert_eq!(want_topk, got, "top-k {} n={n} batch={batch} diverged", policy.engine());
         }
     }
 }

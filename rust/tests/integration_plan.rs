@@ -278,6 +278,34 @@ fn ragged_batches_error_through_the_public_surface() {
 }
 
 #[test]
+fn v2_spectrum_artifacts_round_trip_and_spectrum_free_writes_stay_v1() {
+    // back-compat contract of the version-2 format: attaching a spectrum
+    // bumps the version and appends exactly the 8·n spectrum section;
+    // spectrum-free plans keep writing byte-exact version-1 artifacts
+    // (the committed golden fixture pins that), and v1 artifacts load
+    // spectrum-free on today's reader.
+    let mut rng = Rng64::new(520);
+    let ch = random_gplan(12, 48, &mut rng);
+    let spectrum: Vec<f64> = (0..12).map(|_| rng.randn()).collect();
+    let v2 = Plan::from(&ch).spectrum(spectrum.clone()).build();
+    let v1 = Plan::from(&ch).build();
+    let b2 = v2.to_bytes();
+    let b1 = v1.to_bytes();
+    assert_eq!(u32::from_le_bytes(b1[8..12].try_into().unwrap()), 1, "spectrum-free stays v1");
+    assert_eq!(u32::from_le_bytes(b2[8..12].try_into().unwrap()), 2, "spectrum bumps to v2");
+    assert_eq!(b2.len(), b1.len() + 8 * 12, "v2 appends exactly the spectrum section");
+    let back = Plan::from_bytes(&b2).expect("v2 artifact must load");
+    for (a, b) in back.spectrum().expect("spectrum must survive").iter().zip(&spectrum) {
+        assert_eq!(a.to_bits(), b.to_bits(), "spectrum must round-trip bitwise");
+    }
+    // the reader accepts v1: the committed fixture is one, and loads
+    // spectrum-free (kernel-based spectral operators then reject it with
+    // a typed error instead of inventing a spectrum)
+    let loaded = Plan::load(golden_fixture_path()).unwrap();
+    assert!(loaded.spectrum().is_none(), "v1 artifacts must load spectrum-free");
+}
+
+#[test]
 fn fuzz_from_bytes_survives_truncation_bitflips_and_garbage() {
     // robustness contract for the serving edge: `Plan::from_bytes` on a
     // hostile buffer must always return a typed Err — never panic, never
@@ -289,7 +317,11 @@ fn fuzz_from_bytes_survives_truncation_bitflips_and_garbage() {
     let mut rng = Rng64::new(519);
     let gplan = Plan::from(random_gplan(10, 40, &mut rng)).build();
     let tplan = Plan::from(random_tplan(10, 40, &mut rng)).build();
-    for (label, plan) in [("G", &gplan), ("T", &tplan)] {
+    // a version-2 artifact: the spectrum section must enjoy the same
+    // truncation/bit-flip robustness as the v1 payload before it
+    let spectrum: Vec<f64> = (0..10).map(|_| rng.randn().abs() + 0.1).collect();
+    let vplan = Plan::from(random_gplan(10, 40, &mut rng)).spectrum(spectrum).build();
+    for (label, plan) in [("G", &gplan), ("T", &tplan), ("G+spectrum/v2", &vplan)] {
         let good = plan.to_bytes();
         assert!(Plan::from_bytes(&good).is_ok(), "{label}: pristine bytes must load");
 
