@@ -3,11 +3,14 @@
 
 Usage: check_bench_regression.py BENCH_apply.json ci/bench_snapshot.json
        check_bench_regression.py BENCH_factor.json ci/factor_snapshot.json
+       check_bench_regression.py BENCH_error.json ci/error_snapshot.json
 
 The artifact's top-level `bench` field ("apply" — the default when the
-field is absent — or "factor") selects the comparison: apply artifacts
-gate pooled ns/stage per size, factor artifacts gate ns/step per
-(kind, n, threads) row. The snapshot must be of the same kind.
+field is absent — "factor", or "error") selects the comparison: apply
+artifacts gate pooled ns/stage per size, factor artifacts gate ns/step
+per (kind, n, threads) row, error artifacts gate the bake-off's
+certified rel_err per (family, method, g) row. The snapshot must be of
+the same kind.
 
 Fails (exit 1) when any compared number regresses more than the
 snapshot's `max_regression` factor — but only once the snapshot is
@@ -60,6 +63,38 @@ def check_factor(bench, snap, calibrated, limit):
     return 0
 
 
+def check_error(bench, snap, calibrated, limit):
+    """Gate a BENCH_error.json: certified rel_err per (family, method, g).
+
+    The bake-off runs under a fixed seed, so accuracy is deterministic
+    per runner-independent arithmetic — once calibrated the limit can
+    sit close to 1.0x. Until then every row prints as advisory.
+    """
+    baseline = snap.get("rel_err", {})
+    failures = []
+    for row in bench["results"]:
+        key = f"{row['family']}/{row['method']}/{row['g']}"
+        now = float(row["rel_err"])
+        base = baseline.get(key)
+        if base is None:
+            print(f"{key}: rel_err {now:.4e} (no baseline for this key — advisory)")
+            continue
+        envelope = float(base) * limit
+        status = "OK" if now <= envelope else "REGRESSION"
+        print(
+            f"{key}: rel_err {now:.4e} vs baseline {float(base):.4e} "
+            f"— envelope <= {envelope:.4e} ({limit:.2f}x) {status}"
+        )
+        if now > envelope:
+            failures.append(key)
+    if failures and calibrated:
+        print(f"certified rel_err regressed beyond {limit:.2f}x for {failures}")
+        return 1
+    if failures:
+        print("regressions observed but snapshot is uncalibrated — advisory only")
+    return 0
+
+
 def main() -> int:
     bench_path, snap_path = sys.argv[1], sys.argv[2]
     snap = json.load(open(snap_path))
@@ -91,6 +126,8 @@ def main() -> int:
         return 1
     if bench_kind == "factor":
         return check_factor(bench, snap, calibrated, limit)
+    if bench_kind == "error":
+        return check_error(bench, snap, calibrated, limit)
 
     kernel = bench.get("kernel_isa")
     if not kernel:

@@ -22,6 +22,14 @@ dispatched on the documents' top-level `bench` field) —
   * artifact/snapshot kind mismatch             -> fail
   * every gated row prints its enforced envelope (baseline x limit)
 
+and the error-artifact path (BENCH_error.json vs error_snapshot.json,
+gating the bake-off's certified rel_err per family/method/g row) —
+
+  * uncalibrated error snapshot                 -> advisory (pass)
+  * calibrated + rel_err beyond the envelope    -> fail
+  * calibrated + within the envelope            -> pass
+  * error artifact against an apply snapshot    -> fail
+
 Run: python3 ci/test_check_bench_regression.py
 """
 
@@ -88,6 +96,31 @@ def factor_bench(ns=100.0):
                 "ns_per_step": ns,
                 "steps_per_sec": 1e9 / ns,
                 "rel_err": 0.3,
+            }
+        ],
+    }
+
+
+def error_snapshot(calibrated=False, baseline=None, limit=1.05):
+    return {
+        "bench": "error",
+        "calibrated": calibrated,
+        "max_regression": limit,
+        "rel_err": baseline or {},
+    }
+
+
+def error_bench(rel=0.25):
+    return {
+        "bench": "error",
+        "results": [
+            {
+                "family": "er",
+                "method": "givens",
+                "n": 32,
+                "g": 160,
+                "flops": 960,
+                "rel_err": rel,
             }
         ],
     }
@@ -212,6 +245,34 @@ def main() -> int:
             factor_snapshot(calibrated=True, baseline={"gen/32/4": 100.0}),
             0,
             "no baseline for this key",
+        ),
+        (
+            "error: uncalibrated snapshot stays advisory",
+            error_bench(rel=0.25),
+            error_snapshot(),
+            0,
+            "no baseline",
+        ),
+        (
+            "error: calibrated rel_err regression fails",
+            error_bench(rel=0.30),
+            error_snapshot(calibrated=True, baseline={"er/givens/160": 0.25}),
+            1,
+            "REGRESSION",
+        ),
+        (
+            "error: calibrated within the envelope passes",
+            error_bench(rel=0.255),
+            error_snapshot(calibrated=True, baseline={"er/givens/160": 0.25}),
+            0,
+            "OK",
+        ),
+        (
+            "error artifact against apply snapshot fails",
+            error_bench(rel=0.25),
+            snapshot(),
+            1,
+            "do not match",
         ),
     ]
     failed = 0

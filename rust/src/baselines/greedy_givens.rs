@@ -103,7 +103,8 @@ pub fn greedy_givens(s: &Mat, g: usize) -> JacobiResult {
     picked.reverse();
     let chain = GChain { n, transforms: picked };
     let spectrum = w.diag();
-    JacobiResult { chain, spectrum, objective: w.off_diag_sq() }
+    let objective = crate::transforms::error::off_diagonal_sq(&w);
+    JacobiResult { chain, spectrum, objective }
 }
 
 #[cfg(test)]

@@ -86,7 +86,10 @@ pub fn truncated_jacobi(s: &Mat, g: usize) -> JacobiResult {
     picked.reverse(); // application order: first-picked acts last on S…
     let chain = GChain { n, transforms: picked };
     let spectrum = w.diag();
-    JacobiResult { chain, spectrum, objective: w.off_diag_sq() }
+    // off-diagonal energy == the shared diagonalization residual at the
+    // working matrix's own diagonal (bitwise — pinned in transforms::error)
+    let objective = crate::transforms::error::off_diagonal_sq(&w);
+    JacobiResult { chain, spectrum, objective }
 }
 
 #[cfg(test)]

@@ -1,5 +1,5 @@
 //! Non-figure CLI commands: factor / gft / serve / schedule / bench /
-//! eigen / bench-apply.
+//! bakeoff / eigen / bench-apply.
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -9,6 +9,9 @@ use anyhow::bail;
 
 use super::figures::{budget, random_gplan, random_tplan};
 use super::Args;
+use crate::baselines::{
+    factor_orthonormal, greedy_givens, lowrank_error_symmetric, truncated_jacobi,
+};
 use crate::factor::{
     load_checkpoint, mat_checksum, save_gen_checkpoint, save_sym_checkpoint, CheckpointMeta,
     FactorExec, GenCheckpoint, GenRunControl, GeneralFactorizer, GeneralOptions, LoadedState,
@@ -23,7 +26,7 @@ use crate::serve::{
     net, Backend, Coordinator, NativeGftBackend, PjrtGftBackend, PlanRegistry, ServeConfig,
     TransformDirection,
 };
-use crate::transforms::{simd, ExecConfig, GChain, KernelIsa, SignalBlock};
+use crate::transforms::{certify_g, simd, ExecConfig, GChain, KernelIsa, SignalBlock};
 
 /// Parse the `--kernel auto|scalar|avx2|avx512|neon` flag: `auto` (the
 /// default) keeps the process default ([`simd::default_kernel`] —
@@ -132,6 +135,12 @@ pub fn factor(a: &Args) -> crate::Result<()> {
     let resume = a.get_str("resume", "");
     if !resume.is_empty() {
         return factor_resume(a, &resume);
+    }
+    if a.has("error-budget") {
+        return factor_to_budget(a);
+    }
+    if a.has("max-g") {
+        bail!("--max-g only bounds a budgeted run; it needs --error-budget EPS");
     }
     let n: usize = a.get("n", 128)?;
     let g: usize = a.get("budget", budget(2, n))?;
@@ -266,6 +275,91 @@ pub fn factor(a: &Args) -> crate::Result<()> {
                 );
             }
             maybe_save_plan(a, || f.plan())?;
+        }
+        other => bail!("--kind must be sym|psd|gen (got {other})"),
+    }
+    Ok(())
+}
+
+/// `fastes factor --error-budget EPS` — grow the transform budget
+/// (doubling from `--budget`, capped at `--max-g`) until the measured
+/// relative error `‖S − Ū diag(s̄) Ūᵀ‖_F / ‖S‖_F` meets EPS, then report
+/// the resulting error certificate. With `--save-plan` the artifact is a
+/// version-3 `.fastplan` carrying that certificate, which
+/// `fastes serve --max-error` enforces at routing time.
+fn factor_to_budget(a: &Args) -> crate::Result<()> {
+    for k in ["checkpoint", "checkpoint-every", "halt-after"] {
+        if a.has(k) {
+            bail!(
+                "--{k} conflicts with --error-budget (the budgeted run drives the \
+                 checkpoint machinery internally to grow g)"
+            );
+        }
+    }
+    let eps: f64 = a.get("error-budget", 0.0)?;
+    if !(eps.is_finite() && eps > 0.0) {
+        bail!("--error-budget must be a positive relative error (got {eps})");
+    }
+    let n: usize = a.get("n", 128)?;
+    let g_start: usize = a.get("budget", budget(2, n))?;
+    let g_max: usize = a.get("max-g", (n * (n - 1) / 2).max(g_start))?;
+    if g_max < g_start {
+        bail!("--max-g {g_max} is below the starting --budget {g_start}");
+    }
+    let seed: u64 = a.get("seed", 1)?;
+    let sweeps: usize = a.get("sweeps", 2)?;
+    let kind = a.get_str("kind", "sym");
+    let exec = factor_exec_from_args(a)?;
+    let mut rng = Rng64::new(seed);
+    let x = Mat::randn(n, n, &mut rng);
+    let t0 = Instant::now();
+    match kind.as_str() {
+        "sym" | "psd" => {
+            let s = if kind == "psd" { x.matmul(&x.transpose()) } else { &x + &x.transpose() };
+            let opts = SymOptions {
+                max_sweeps: sweeps,
+                eps: a.get("eps", SymOptions::default().eps)?,
+                full_update: a.has("full-update"),
+                exec,
+                ..Default::default()
+            };
+            let (f, cert) = SymFactorizer::run_to_budget(&s, eps, g_start, g_max, opts);
+            let met = if cert.meets(eps) { "met" } else { "NOT met (g capped)" };
+            println!(
+                "sym n={n} error-budget={eps:.3e} {met}: g={} rel_err={:.6e} \
+                 fro_err={:.3e} sweeps={} flops/apply={} dense={} elapsed={:.2?}",
+                cert.g,
+                cert.rel_err,
+                cert.fro_err,
+                f.sweeps_run,
+                f.chain.flops(),
+                2 * n * n,
+                t0.elapsed()
+            );
+            maybe_save_plan(a, || f.certified_plan(&s))?;
+        }
+        "gen" => {
+            let opts = GeneralOptions {
+                max_sweeps: sweeps,
+                eps: a.get("eps", GeneralOptions::default().eps)?,
+                full_update: a.has("full-update"),
+                exec,
+                ..Default::default()
+            };
+            let (f, cert) = GeneralFactorizer::run_to_budget(&x, eps, g_start, g_max, opts);
+            let met = if cert.meets(eps) { "met" } else { "NOT met (m capped)" };
+            println!(
+                "gen n={n} error-budget={eps:.3e} {met}: m={} rel_err={:.6e} \
+                 fro_err={:.3e} sweeps={} flops/apply={} dense={} elapsed={:.2?}",
+                cert.g,
+                cert.rel_err,
+                cert.fro_err,
+                f.sweeps_run,
+                f.chain.flops(),
+                2 * n * n,
+                t0.elapsed()
+            );
+            maybe_save_plan(a, || f.certified_plan(&x))?;
         }
         other => bail!("--kind must be sym|psd|gen (got {other})"),
     }
@@ -738,7 +832,19 @@ pub fn serve(a: &Args) -> crate::Result<()> {
         None => policy,
     };
 
-    let config = ServeConfig { max_batch: batch, ..Default::default() };
+    // `--max-error EPS`: refuse to route to plans whose .fastplan error
+    // certificate exceeds EPS (or that carry no certificate at all)
+    let max_error = match a.has("max-error") {
+        true => {
+            let eps: f64 = a.get("max-error", 0.0)?;
+            if !(eps.is_finite() && eps > 0.0) {
+                bail!("--max-error must be a positive relative error (got {eps})");
+            }
+            Some(eps)
+        }
+        false => None,
+    };
+    let config = ServeConfig { max_batch: batch, max_error, ..Default::default() };
 
     // `--listen ADDR`: run the hardened TCP front-end (serve/net.rs)
     // instead of the in-process self-driving load loop
@@ -1455,5 +1561,149 @@ pub fn bench_apply(a: &Args) -> crate::Result<()> {
         (2 * n * n) as f64 / (6 * g) as f64,
         td.min_s / tb.min_s
     );
+    Ok(())
+}
+
+/// The Lemma-1 spectrum `s̄ = diag(ŪᵀSŪ)` of a chain against a symmetric
+/// matrix — the diagonal [`certify_g`] measures the residual against
+/// (same conjugation order as the certificate itself).
+fn lemma1_spectrum(chain: &GChain, s: &Mat) -> Vec<f64> {
+    let mut w = s.clone();
+    for t in chain.transforms.iter().rev() {
+        t.conjugate_t(&mut w);
+    }
+    (0..chain.n).map(|i| w[(i, i)]).collect()
+}
+
+/// Laplacian of a named bakeoff graph family. Masked-grid may round the
+/// vertex count up to the enclosing grid (masked cells stay isolated).
+fn bakeoff_graph(family: &str, n: usize, rng: &mut Rng64) -> crate::Result<Mat> {
+    Ok(match family {
+        "community" => graphs::community(n, rng).laplacian(),
+        "er" | "erdos-renyi" => graphs::erdos_renyi(n, 0.3, rng).laplacian(),
+        "masked-grid" => {
+            let rows = ((n as f64).sqrt().round() as usize).max(1);
+            let cols = (n + rows - 1) / rows;
+            let mask: Vec<bool> =
+                (0..rows * cols).map(|i| i < n && !rng.bernoulli(0.2)).collect();
+            graphs::masked_grid(rows, cols, &mask).laplacian()
+        }
+        other => bail!("bakeoff: unknown family '{other}' (er|community|masked-grid)"),
+    })
+}
+
+/// Print one bakeoff frontier point and return it as a JSON results row.
+fn bakeoff_row(family: &str, method: &str, n: usize, g: usize, flops: usize, rel: f64) -> String {
+    println!("{family:<12} {method:<14} n={n:4} g={g:5} flops={flops:8} rel_err={rel:.4e}");
+    format!(
+        "    {{ \"family\": \"{family}\", \"method\": \"{method}\", \"n\": {n}, \"g\": {g}, \
+         \"flops\": {flops}, \"rel_err\": {rel:.6e} }}"
+    )
+}
+
+/// `fastes bakeoff` — our Givens factorizer against the baseline methods
+/// on the flops-vs-error frontier, per graph family. Every chain method
+/// is scored with the same certificate metric
+/// (`‖S − Ū diag(s̄) Ūᵀ‖_F / ‖S‖_F`, [`certify_g`]); the low-rank
+/// baseline is scored at the flop-matched rank `r = 3g/n` (a rank-`r`
+/// apply costs `2rn` flops vs 6 per G-transform). `--json` writes
+/// `BENCH_error.json` (override with `--out`).
+pub fn bakeoff(a: &Args) -> crate::Result<()> {
+    let n: usize = a.get("n", 64)?;
+    let seed: u64 = a.get("seed", 1)?;
+    let sweeps: usize = a.get("sweeps", 2)?;
+    let alphas = a.get_list("alphas", &[1, 2, 4])?;
+    if alphas.is_empty() {
+        bail!("--alphas must name at least one budget multiplier");
+    }
+    let fams_raw = a.get_str("families", "er,community,masked-grid");
+    let families: Vec<String> = fams_raw
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    if families.len() < 2 {
+        bail!("bakeoff needs at least two graph families (got '{fams_raw}')");
+    }
+    let mut entries: Vec<String> = Vec::new();
+    for (fi, family) in families.iter().enumerate() {
+        // per-family deterministic stream, stable under --seed
+        let mut rng = Rng64::new(seed ^ ((fi as u64 + 1) << 32));
+        let l = bakeoff_graph(family, n, &mut rng)?;
+        let n_eff = l.rows();
+        let norm_sq = l.fro_norm_sq();
+        // the direct-U baseline factors the *known* eigenspace
+        let u = eigh(&l).vectors;
+        let ones = vec![1.0; n_eff];
+        for &alpha in &alphas {
+            let g = budget(alpha, n_eff);
+            let f = SymFactorizer::new(
+                &l,
+                g,
+                SymOptions { max_sweeps: sweeps, ..Default::default() },
+            )
+            .run();
+            let cert = f.certificate(&l);
+            entries.push(bakeoff_row(
+                family,
+                "givens",
+                n_eff,
+                f.chain.len(),
+                f.chain.flops(),
+                cert.rel_err,
+            ));
+            let r = greedy_givens(&l, g);
+            let c = certify_g(&r.chain, &l, &r.spectrum, &[]);
+            entries.push(bakeoff_row(
+                family,
+                "greedy-givens",
+                n_eff,
+                r.chain.len(),
+                r.chain.flops(),
+                c.rel_err,
+            ));
+            let r = truncated_jacobi(&l, g);
+            let c = certify_g(&r.chain, &l, &r.spectrum, &[]);
+            entries.push(bakeoff_row(
+                family,
+                "jacobi",
+                n_eff,
+                r.chain.len(),
+                r.chain.flops(),
+                c.rel_err,
+            ));
+            let d = factor_orthonormal(&u, &ones, g);
+            let spec = lemma1_spectrum(&d.chain, &l);
+            let c = certify_g(&d.chain, &l, &spec, &[]);
+            entries.push(bakeoff_row(
+                family,
+                "direct-u",
+                n_eff,
+                d.chain.len(),
+                d.chain.flops(),
+                c.rel_err,
+            ));
+            // flop-matched rank: 2rn ≈ 6g per apply ("g" records the rank)
+            let rank = ((6 * g) / (2 * n_eff)).clamp(1, n_eff);
+            let rel = (lowrank_error_symmetric(&l, rank) / norm_sq).sqrt();
+            entries.push(bakeoff_row(family, "lowrank", n_eff, rank, 2 * rank * n_eff, rel));
+        }
+    }
+    if a.has("json") {
+        let out_path = a.get_str("out", "BENCH_error.json");
+        let alphas_json =
+            alphas.iter().map(ToString::to_string).collect::<Vec<_>>().join(", ");
+        let fams_json =
+            families.iter().map(|f| format!("\"{f}\"")).collect::<Vec<_>>().join(", ");
+        let json = format!(
+            "{{\n  \"bench\": \"error\",\n  \"n\": {n},\n  \"seed\": {seed},\n  \
+             \"sweeps\": {sweeps},\n  \"alphas\": [{alphas_json}],\n  \
+             \"families\": [{fams_json}],\n  \"results\": [\n{}\n  ]\n}}\n",
+            entries.join(",\n")
+        );
+        std::fs::write(&out_path, json)
+            .map_err(|e| anyhow::anyhow!("cannot write {out_path}: {e}"))?;
+        println!("wrote {out_path}");
+    }
     Ok(())
 }

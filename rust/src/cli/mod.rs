@@ -32,6 +32,10 @@
 //!   `kernel_isa`; `--autotune` adds the auto-tuned mode and stamps the
 //!   tuned config). `bench --factor` benchmarks plan *construction*
 //!   instead (ns/step per kind/n/threads, `BENCH_factor.json`).
+//! * `bakeoff` — our Givens factorizer vs the baseline methods
+//!   (greedy-givens / jacobi / direct-U / low-rank) on the
+//!   flops-vs-error frontier per graph family, all scored with the
+//!   shared certificate metric; `--json` writes `BENCH_error.json`.
 //! * `kernels` — report the SIMD kernel dispatch of this host (detected
 //!   / default / available ISAs).
 //! * `eigen` — eigendecomposition smoke (substrate sanity).
@@ -116,6 +120,7 @@ pub fn run(args: Args) -> crate::Result<()> {
         "schedule" => commands::schedule(&args),
         "tune" => commands::tune(&args),
         "bench" => commands::bench(&args),
+        "bakeoff" => commands::bakeoff(&args),
         "kernels" => commands::kernels(&args),
         "eigen" => commands::eigen(&args),
         "bench-apply" => commands::bench_apply(&args),
@@ -149,6 +154,11 @@ COMMANDS
                        checkpointing the partial run)
                        [--resume BASE]  (continue a checkpointed run —
                        bitwise-identical to the uninterrupted result)
+                       [--error-budget EPS]  (grow the budget — doubling
+                       from --budget, capped at --max-g — until the
+                       measured relative error meets EPS; --save-plan
+                       then writes a v3 .fastplan carrying the error
+                       certificate) [--max-g G]
                        [--save-plan FILE.fastplan]
   gft                  fast GFT of a graph Laplacian
                        [--graph community|er|sensor|ring|masked-grid|
@@ -193,6 +203,9 @@ COMMANDS
                        [--registry-cap N]  (resident-plan LRU capacity,
                        default 64) [--plan-dir DIR]  (load
                        {checksum:016x}.fastplan artifacts on demand)
+                       [--max-error EPS]  (refuse to route to plans whose
+                       .fastplan error certificate exceeds EPS, or that
+                       carry none — typed unsupported_plan rejection)
   schedule             level-schedule a chain, report layers/depth/
                        superstages and time sequential vs spawn vs pooled
                        apply [--n N] [--alpha A] [--batch B] [--threads T]
@@ -217,6 +230,13 @@ COMMANDS
                        against the unfused adjoint+scale+forward route,
                        seq and pooled; --json stamps the fused-vs-unfused
                        ns/stage rows into BENCH_apply.json)
+  bakeoff              factorizer bake-off on the flops-vs-error frontier:
+                       givens (ours) vs greedy-givens vs jacobi vs
+                       direct-U vs flop-matched low-rank, per graph
+                       family, all scored with the certificate metric
+                       [--n N] [--alphas a,b,c] [--sweeps K] [--seed S]
+                       [--families er,community,masked-grid]
+                       [--json] [--out BENCH_error.json]
   kernels              report SIMD kernel dispatch: detected / default /
                        available ISAs (FASTES_KERNEL and --kernel pin it)
   eigen                symmetric eigensolver smoke [--n N] [--seed S]

@@ -100,6 +100,28 @@ impl GeneralFactorization {
     pub fn relative_error(&self, c: &Mat) -> f64 {
         (self.objective() / c.fro_norm_sq().max(1e-300)).sqrt()
     }
+
+    /// Measure the error certificate of this factorization against the
+    /// original matrix. The residual is recomputed from a fresh
+    /// reconstruction, so `rel_err` can differ from
+    /// [`relative_error`](Self::relative_error) in the last ulps (the
+    /// sweep trace is tracked incrementally); the certificate is the
+    /// authoritative measured value.
+    pub fn certificate(&self, c: &Mat) -> crate::transforms::ErrorCertificate {
+        let mut trace = Vec::with_capacity(self.objective_trace.len() + 1);
+        trace.push(self.init_objective);
+        trace.extend_from_slice(&self.objective_trace);
+        crate::transforms::certify_t(&self.chain, c, &self.spectrum, &trace)
+    }
+
+    /// [`plan`](Self::plan) with the measured [`certificate`](Self::
+    /// certificate) attached — saved as a version-3 `.fastplan`.
+    pub fn certified_plan(&self, c: &Mat) -> std::sync::Arc<crate::plan::Plan> {
+        crate::plan::Plan::from(&self.chain)
+            .spectrum(self.spectrum.clone())
+            .certificate(self.certificate(c))
+            .build()
+    }
 }
 
 /// A resumable snapshot of a general factorization in progress.
@@ -192,6 +214,46 @@ impl<'a> GeneralFactorizer<'a> {
     pub fn run_with_chain(self, chain: TChain) -> GeneralFactorization {
         assert_eq!(chain.n, self.c.rows(), "chain dimension mismatch");
         self.drive(None, Some(chain), &mut GenRunControl::default())
+    }
+
+    /// Grow `m` until the measured relative Frobenius error meets
+    /// `budget`, or `m_max` is reached, or the greedy initializer runs
+    /// out of improving factors — the general-case mirror of
+    /// [`SymFactorizer::run_to_budget`](super::SymFactorizer::
+    /// run_to_budget). The already-built (and polished) chain is
+    /// replayed as an in-init checkpoint so each growth step appends
+    /// factors and re-polishes; the returned certificate's recomputed
+    /// `rel_err` (not the incremental sweep trace) is the acceptance
+    /// authority, so "budget met ⇒ certificate ≤ budget" holds exactly.
+    pub fn run_to_budget(
+        c: &Mat,
+        budget: f64,
+        m_start: usize,
+        m_max: usize,
+        opts: GeneralOptions,
+    ) -> (GeneralFactorization, crate::transforms::ErrorCertificate) {
+        assert!(budget.is_finite() && budget > 0.0, "error budget must be positive");
+        assert!(m_start >= 1 && m_max >= m_start, "need 1 ≤ m_start ≤ m_max");
+        let mut m = m_start;
+        let mut f = GeneralFactorizer::new(c, m, opts.clone()).run();
+        loop {
+            let cert = f.certificate(c);
+            if cert.meets(budget) || m >= m_max || f.chain.len() < m {
+                return (f, cert);
+            }
+            m = m.saturating_mul(2).min(m_max);
+            let ck = GenCheckpoint {
+                chain: f.chain.clone(),
+                spectrum: f.spectrum.clone(),
+                init_objective: None,
+                objective_trace: Vec::new(),
+                sweeps_run: 0,
+                steps_done: f.chain.len(),
+                in_init: true,
+            };
+            f = GeneralFactorizer::new(c, m, opts.clone())
+                .resume(ck, &mut GenRunControl::default());
+        }
     }
 
     fn initial_spectrum(&self) -> Vec<f64> {
@@ -1631,5 +1693,24 @@ mod tests {
         assert_eq!(resumed.spectrum, full.spectrum);
         assert_eq!(resumed.objective_trace, full.objective_trace);
         assert!(!resumed.halted);
+    }
+
+    #[test]
+    fn run_to_budget_certificate_is_the_acceptance_authority() {
+        let c = random_mat(8, 310);
+        // loose budget: growth must stop with a certificate that meets it
+        let (f, cert) =
+            GeneralFactorizer::run_to_budget(&c, 0.5, 4, 256, GeneralOptions::default());
+        assert!(cert.meets(0.5), "returned certificate violates the budget: {}", cert.rel_err);
+        assert_eq!(cert.g, f.chain.len());
+        // the certificate's error is the freshly reconstructed one, within
+        // rounding of the (incrementally tracked) driver report
+        let rel = f.relative_error(&c);
+        assert!((cert.rel_err - rel).abs() <= 1e-9 * (1.0 + rel), "{} vs {rel}", cert.rel_err);
+        // unreachable budget: the m-cap bounds the chain
+        let (f2, cert2) =
+            GeneralFactorizer::run_to_budget(&c, 1e-15, 3, 10, GeneralOptions::default());
+        assert!(f2.chain.len() <= 10);
+        assert!(cert2.rel_err > 1e-15);
     }
 }

@@ -108,6 +108,26 @@ impl SymFactorization {
     pub fn plan(&self) -> std::sync::Arc<crate::plan::Plan> {
         crate::plan::Plan::from(&self.chain).spectrum(self.spectrum.clone()).build()
     }
+
+    /// Measure the error certificate of this factorization against the
+    /// original matrix. `rel_err` equals [`relative_error`](Self::
+    /// relative_error) **bitwise**: the certificate recomputes the
+    /// objective through the exact conjugation sequence the driver uses.
+    pub fn certificate(&self, s: &Mat) -> crate::transforms::ErrorCertificate {
+        let mut trace = Vec::with_capacity(self.objective_trace.len() + 1);
+        trace.push(self.init_objective);
+        trace.extend_from_slice(&self.objective_trace);
+        crate::transforms::certify_g(&self.chain, s, &self.spectrum, &trace)
+    }
+
+    /// [`plan`](Self::plan) with the measured [`certificate`](Self::
+    /// certificate) attached — saved as a version-3 `.fastplan`.
+    pub fn certified_plan(&self, s: &Mat) -> std::sync::Arc<crate::plan::Plan> {
+        crate::plan::Plan::from(&self.chain)
+            .spectrum(self.spectrum.clone())
+            .certificate(self.certificate(s))
+            .build()
+    }
 }
 
 /// A resumable snapshot of a symmetric factorization in progress.
@@ -197,6 +217,60 @@ impl<'a> SymFactorizer<'a> {
     /// replayed exactly and the result equals the uninterrupted run's.
     pub fn resume(self, ck: SymCheckpoint, ctrl: &mut SymRunControl) -> SymFactorization {
         self.drive(Some(ck), ctrl)
+    }
+
+    /// Grow `g` until the measured relative Frobenius error meets
+    /// `budget`, or `g_max` is reached, or the greedy initializer runs
+    /// out of improving factors.
+    ///
+    /// Starts a full run at `g_start` and then doubles `g` (capped at
+    /// `g_max`), continuing each time through the checkpoint/resume
+    /// machinery: the already-built (and swept) chain is replayed as an
+    /// in-init checkpoint, so the greedy initializer appends factors to
+    /// the warm-started chain and the sweeps re-polish at the new size.
+    /// The objective never increases across growth steps — greedy only
+    /// accepts strictly improving factors, and sweeps/Lemma-1 refreshes
+    /// only decrease it.
+    ///
+    /// The returned certificate is the acceptance authority: the loop
+    /// stops on `certificate.rel_err ≤ budget` (bitwise-identical to
+    /// [`SymFactorization::relative_error`]), so "budget met" and
+    /// "certificate meets budget" can never disagree.
+    pub fn run_to_budget(
+        s: &Mat,
+        budget: f64,
+        g_start: usize,
+        g_max: usize,
+        opts: SymOptions,
+    ) -> (SymFactorization, crate::transforms::ErrorCertificate) {
+        assert!(budget.is_finite() && budget > 0.0, "error budget must be positive");
+        assert!(g_start >= 1 && g_max >= g_start, "need 1 ≤ g_start ≤ g_max");
+        let mut g = g_start;
+        let mut f = SymFactorizer::new(s, g, opts.clone()).run();
+        loop {
+            let cert = f.certificate(s);
+            // `chain.len() < g` means the greedy initializer found no
+            // further factor with positive gain — growing g again would
+            // change nothing.
+            if cert.meets(budget) || g >= g_max || f.chain.len() < g {
+                return (f, cert);
+            }
+            g = g.saturating_mul(2).min(g_max);
+            let ck = SymCheckpoint {
+                chain: f.chain.clone(),
+                spectrum: f.spectrum.clone(),
+                // fresh init/sweep bookkeeping: carrying the old trace
+                // into the grown run would trip the sweep stop rule on
+                // stale deltas before the new factors get polished
+                init_objective: None,
+                objective_trace: Vec::new(),
+                sweeps_run: 0,
+                steps_done: f.chain.len(),
+                in_init: true,
+            };
+            f = SymFactorizer::new(s, g, opts.clone())
+                .resume(ck, &mut SymRunControl::default());
+        }
     }
 
     fn drive(self, resume: Option<SymCheckpoint>, ctrl: &mut SymRunControl) -> SymFactorization {
@@ -459,17 +533,11 @@ fn conjugated(s: &Mat, chain: &GChain) -> Mat {
     w
 }
 
-/// `‖S − Ū diag(s̄) Ūᵀ‖²_F = ‖W − diag(s̄)‖²_F` where `W = Ūᵀ S Ū`.
+/// `‖S − Ū diag(s̄) Ūᵀ‖²_F = ‖W − diag(s̄)‖²_F` where `W = Ūᵀ S Ū` —
+/// the shared metric from [`crate::transforms::error`] (bitwise-equal to
+/// the historic inline loop; pinned by the tests there).
 fn objective_from_working(w: &Mat, spectrum: &[f64]) -> f64 {
-    let n = w.rows();
-    let mut obj = 0.0;
-    for i in 0..n {
-        for j in 0..n {
-            let d = if i == j { w[(i, j)] - spectrum[i] } else { w[(i, j)] };
-            obj += d * d;
-        }
-    }
-    obj
+    crate::transforms::error::diag_residual_sq(w, spectrum)
 }
 
 /// Theorem 1 score for pair `(i, j)` of the working matrix.
@@ -1478,5 +1546,81 @@ mod tests {
             SymFactorizer::new(&s, 16, opts).resume(ck, &mut SymRunControl::default());
         assert_eq!(resumed.chain, full.chain);
         assert_eq!(resumed.objective_trace, full.objective_trace);
+    }
+
+    #[test]
+    fn certificate_rel_err_matches_relative_error_bitwise() {
+        // the certificate recomputes the objective through the driver's
+        // exact conjugation sequence, so the two accuracy reports agree
+        // to the last bit — with sweeps and without
+        let s = random_sym(12, 230);
+        for max_sweeps in [0usize, 4] {
+            let opts = SymOptions { max_sweeps, ..Default::default() };
+            let f = SymFactorizer::new(&s, 30, opts).run();
+            let cert = f.certificate(&s);
+            assert_eq!(
+                cert.rel_err.to_bits(),
+                f.relative_error(&s).to_bits(),
+                "max_sweeps = {max_sweeps}"
+            );
+            assert_eq!(cert.g, f.chain.len());
+            assert_eq!(
+                *cert.trace_tail.last().unwrap(),
+                f.objective(),
+                "tail must end at the final objective (max_sweeps = {max_sweeps})"
+            );
+        }
+    }
+
+    #[test]
+    fn run_to_budget_grows_until_budget_met() {
+        let s = random_sym(10, 231);
+        // a loose budget a moderate g can reach on a 10×10 dense matrix
+        let budget = 0.35;
+        let (f, cert) = SymFactorizer::run_to_budget(&s, budget, 4, 256, SymOptions::default());
+        assert!(
+            cert.rel_err <= budget || f.chain.len() >= 256 || f.chain.len() < 4,
+            "stopped without meeting the budget or a cap: rel_err {} at g {}",
+            cert.rel_err,
+            f.chain.len()
+        );
+        assert!(cert.meets(budget), "10×10 should reach rel_err ≤ {budget}: {}", cert.rel_err);
+        assert_eq!(cert.rel_err.to_bits(), f.relative_error(&s).to_bits());
+        // the emitted certificate must describe exactly this chain
+        assert_eq!(cert.g, f.chain.len());
+    }
+
+    #[test]
+    fn run_to_budget_error_is_monotone_in_growth() {
+        let s = random_sym(12, 232);
+        // unreachably tight budget → the loop walks the full growth
+        // ladder 2 → 4 → … → 64; errors along it must be non-increasing
+        // (small relative slack for the general-case ulp caveat; the
+        // symmetric path is exact but the contract is ≤ with slack)
+        let mut errs = Vec::new();
+        let mut g = 2usize;
+        while g <= 64 {
+            let (_, cert) = SymFactorizer::run_to_budget(&s, 1e-15, 2, g, SymOptions::default());
+            errs.push(cert.rel_err);
+            g *= 2;
+        }
+        for w in errs.windows(2) {
+            assert!(
+                w[1] <= w[0] * (1.0 + 1e-7) + 1e-12,
+                "error increased while growing g: {errs:?}"
+            );
+        }
+        assert!(
+            errs.last().unwrap() < &errs[0],
+            "growing 2 → 64 factors should measurably improve: {errs:?}"
+        );
+    }
+
+    #[test]
+    fn run_to_budget_stops_at_g_cap() {
+        let s = random_sym(10, 233);
+        let (f, cert) = SymFactorizer::run_to_budget(&s, 1e-15, 3, 12, SymOptions::default());
+        assert!(f.chain.len() <= 12, "g cap violated: {}", f.chain.len());
+        assert!(cert.rel_err > 1e-15, "1e-15 cannot be met by 12 factors on random 10×10");
     }
 }

@@ -3,12 +3,12 @@
 //! `fastes serve --plan` (and, per the roadmap, to the PJRT superstage
 //! offload) without refactorizing.
 //!
-//! # Format (versions 1–2, all fields little-endian)
+//! # Format (versions 1–3, all fields little-endian)
 //!
 //! ```text
 //! offset  size      field
 //! 0       8         magic  b"FASTPLAN"
-//! 8       4         format version (u32) = 1 or 2
+//! 8       4         format version (u32) = 1, 2 or 3
 //! 12      1         chain kind: 0 = G, 1 = T
 //! 13      1         level-scheduled flag: 1 = greedy levels, 0 = original order
 //! 14      2         padding (zero)
@@ -25,17 +25,33 @@
 //! …       8·g       p0 (f64) — the exact coefficient stream
 //! …       8·g       p1 (f64)
 //! …       8·(s+1)   superstage table (u64 CSR offsets, forward stream)
-//! …       8·n       spectrum s̄ (f64 each) — version 2 only
+//! …       8·n       spectrum s̄ (f64 each) — versions ≥ 2 only
+//! …       128       error certificate — version 3 only (fixed size):
+//!                     fro_err (f64), rel_err (f64), g (u64),
+//!                     band_err[4] (f64 — spectrum-quartile residuals),
+//!                     tail_len (u64 ≤ 8), trace_tail[8] (f64 — oldest
+//!                     first, unused slots zero)
 //! end−8   8         FNV-1a-64 checksum of every preceding byte
 //! ```
 //!
 //! **Version 2** appends the approximate spectrum `s̄` (Lemma 1's
 //! `diag(ŪᵀSŪ)`) between the superstage table and the checksum, so the
 //! serving tier can evaluate spectral responses `h(s̄)` for filter and
-//! wavelet workloads without the original matrix. The writer emits
-//! version 2 **only** when a spectrum is attached: spectrum-free plans
-//! still serialize byte-exactly as version 1, and the loader accepts
-//! both (a v1 artifact simply loads spectrum-free).
+//! wavelet workloads without the original matrix.
+//!
+//! **Version 3** appends a measured [`ErrorCertificate`] between the
+//! spectrum section and the checksum: the Frobenius/relative
+//! reconstruction error, the per-band residual over quartiles of the
+//! Lemma-1 spectrum, the stage count at certification and the tail of
+//! the factorization's objective trace. The section has a fixed size so
+//! the loader still computes the exact artifact length from the header
+//! alone before parsing anything. A certificate implies a spectrum
+//! (band errors are quartiles *of* it).
+//!
+//! The writer always emits the **lowest** version that carries the
+//! attached data: certificate-free plans serialize byte-exactly as
+//! version 2, spectrum-free plans as version 1, and the loader accepts
+//! all three (older artifacts simply load certificate-/spectrum-free).
 //!
 //! Stages are stored in **application order** (chain order, `G_1` first),
 //! not layer order: the loader rebuilds the exact chain and recompiles,
@@ -48,7 +64,8 @@
 use anyhow::bail;
 
 use super::ChainRepr;
-use crate::transforms::{GChain, GKind, GTransform, TChain, TTransform};
+use crate::transforms::error::{CERT_BANDS, CERT_TRACE_TAIL};
+use crate::transforms::{ErrorCertificate, GChain, GKind, GTransform, TChain, TTransform};
 
 /// Artifact magic bytes.
 pub const MAGIC: [u8; 8] = *b"FASTPLAN";
@@ -58,12 +75,19 @@ pub const MAGIC: [u8; 8] = *b"FASTPLAN";
 pub const FORMAT_VERSION: u32 = 1;
 
 /// The format version carrying the spectrum section (written whenever a
-/// spectrum is attached to the plan).
+/// spectrum but no certificate is attached to the plan).
 pub const FORMAT_VERSION_SPECTRUM: u32 = 2;
+
+/// The format version carrying the error-certificate section (written
+/// whenever a certificate is attached to the plan).
+pub const FORMAT_VERSION_CERT: u32 = 3;
 
 const HEADER_LEN: usize = 48;
 /// Per-stage payload bytes: 4 + 4 + 1 + 4 + 4 + 8 + 8.
 const STAGE_BYTES: usize = 33;
+/// Fixed certificate section size: fro_err + rel_err + g + band_err[4] +
+/// tail_len + trace_tail[8] = 8 + 8 + 8 + 32 + 8 + 64.
+const CERT_BYTES: usize = 8 + 8 + 8 + 8 * CERT_BANDS + 8 + 8 * CERT_TRACE_TAIL;
 
 /// Largest dimension a loaded artifact may declare. `n` is otherwise
 /// only an upper bound for stage coordinates, so a tiny file claiming
@@ -88,6 +112,8 @@ pub(crate) struct DecodedPlan {
     pub superstage_table: Vec<usize>,
     /// Lemma-1 spectrum `s̄` (version ≥ 2 artifacts only).
     pub spectrum: Option<Vec<f64>>,
+    /// Measured error certificate (version ≥ 3 artifacts only).
+    pub certificate: Option<ErrorCertificate>,
 }
 
 /// One stage in application order, as stored in the artifact.
@@ -155,17 +181,34 @@ pub(crate) fn encode(
     superstage_stages: usize,
     superstage_table: &[usize],
     spectrum: Option<&[f64]>,
+    certificate: Option<&ErrorCertificate>,
 ) -> Vec<u8> {
     let (kind, n, stages) = stages_of(repr);
     if let Some(s) = spectrum {
         assert_eq!(s.len(), n, "spectrum length must equal the plan dimension");
     }
     let g = stages.len();
+    if let Some(cert) = certificate {
+        assert!(
+            spectrum.is_some(),
+            "a certificate implies a spectrum (its band errors are quartiles of it)"
+        );
+        assert_eq!(cert.g, g, "certificate g must equal the plan's stage count");
+        assert!(cert.trace_tail.len() <= CERT_TRACE_TAIL, "certificate trace tail too long");
+    }
     let supers = superstage_table.len().saturating_sub(1);
     let spec_bytes = spectrum.map_or(0, |s| 8 * s.len());
-    let version = if spectrum.is_some() { FORMAT_VERSION_SPECTRUM } else { FORMAT_VERSION };
-    let mut out =
-        Vec::with_capacity(HEADER_LEN + g * STAGE_BYTES + (supers + 1) * 8 + spec_bytes + 8);
+    let cert_bytes = if certificate.is_some() { CERT_BYTES } else { 0 };
+    let version = if certificate.is_some() {
+        FORMAT_VERSION_CERT
+    } else if spectrum.is_some() {
+        FORMAT_VERSION_SPECTRUM
+    } else {
+        FORMAT_VERSION
+    };
+    let mut out = Vec::with_capacity(
+        HEADER_LEN + g * STAGE_BYTES + (supers + 1) * 8 + spec_bytes + cert_bytes + 8,
+    );
     out.extend_from_slice(&MAGIC);
     out.extend_from_slice(&version.to_le_bytes());
     out.push(kind);
@@ -204,6 +247,19 @@ pub(crate) fn encode(
             out.extend_from_slice(&v.to_le_bytes());
         }
     }
+    if let Some(cert) = certificate {
+        out.extend_from_slice(&cert.fro_err.to_le_bytes());
+        out.extend_from_slice(&cert.rel_err.to_le_bytes());
+        out.extend_from_slice(&(cert.g as u64).to_le_bytes());
+        for &b in &cert.band_err {
+            out.extend_from_slice(&b.to_le_bytes());
+        }
+        out.extend_from_slice(&(cert.trace_tail.len() as u64).to_le_bytes());
+        for slot in 0..CERT_TRACE_TAIL {
+            let v = cert.trace_tail.get(slot).copied().unwrap_or(0.0);
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
     let checksum = fnv1a64(&out);
     out.extend_from_slice(&checksum.to_le_bytes());
     out
@@ -239,10 +295,10 @@ pub(crate) fn decode(bytes: &[u8]) -> crate::Result<DecodedPlan> {
         bail!("not a fastplan artifact (bad magic)");
     }
     let version = read_u32(bytes, 8);
-    if version != FORMAT_VERSION && version != FORMAT_VERSION_SPECTRUM {
+    if !(FORMAT_VERSION..=FORMAT_VERSION_CERT).contains(&version) {
         bail!(
             "unsupported fastplan version {version} (this build reads versions \
-             {FORMAT_VERSION} and {FORMAT_VERSION_SPECTRUM})"
+             {FORMAT_VERSION} through {FORMAT_VERSION_CERT})"
         );
     }
     if bytes.len() < HEADER_LEN + 8 {
@@ -261,12 +317,14 @@ pub(crate) fn decode(bytes: &[u8]) -> crate::Result<DecodedPlan> {
     let superstage_stages = as_len(read_u64(bytes, 32), "superstage budget")?;
     let supers = as_len(read_u64(bytes, 40), "superstage count")?;
     let spec_bytes = if version >= FORMAT_VERSION_SPECTRUM { 8 * n } else { 0 };
+    let cert_bytes = if version >= FORMAT_VERSION_CERT { CERT_BYTES } else { 0 };
     let expected = g
         .checked_mul(STAGE_BYTES)
         .and_then(|v| supers.checked_add(1).map(|s| (v, s)))
         .and_then(|(v, s)| s.checked_mul(8).map(|t| (v, t)))
         .and_then(|(v, t)| v.checked_add(t))
         .and_then(|v| v.checked_add(spec_bytes))
+        .and_then(|v| v.checked_add(cert_bytes))
         .and_then(|v| v.checked_add(HEADER_LEN + 8));
     let Some(expected) = expected else {
         bail!("fastplan payload size overflows");
@@ -364,6 +422,49 @@ pub(crate) fn decode(bytes: &[u8]) -> crate::Result<DecodedPlan> {
         None
     };
 
+    let certificate = if version >= FORMAT_VERSION_CERT {
+        let at = at_table + 8 * (supers + 1) + spec_bytes;
+        let fro_err = read_f64(bytes, at);
+        let rel_err = read_f64(bytes, at + 8);
+        let cert_g = as_len(read_u64(bytes, at + 16), "certificate g")?;
+        if !(fro_err.is_finite() && fro_err >= 0.0 && rel_err.is_finite() && rel_err >= 0.0) {
+            bail!("fastplan certificate errors must be finite and non-negative");
+        }
+        if cert_g != g {
+            bail!("fastplan certificate g = {cert_g} disagrees with the stage count {g}");
+        }
+        let mut band_err = [0.0f64; CERT_BANDS];
+        for (b, slot) in band_err.iter_mut().enumerate() {
+            let v = read_f64(bytes, at + 24 + 8 * b);
+            if !(v.is_finite() && v >= 0.0) {
+                bail!("fastplan certificate band error {b} must be finite and non-negative");
+            }
+            *slot = v;
+        }
+        let at_tail = at + 24 + 8 * CERT_BANDS;
+        let tail_len = as_len(read_u64(bytes, at_tail), "certificate tail length")?;
+        if tail_len > CERT_TRACE_TAIL {
+            bail!("fastplan certificate trace tail {tail_len} exceeds the cap {CERT_TRACE_TAIL}");
+        }
+        let mut trace_tail = Vec::with_capacity(tail_len);
+        for k in 0..CERT_TRACE_TAIL {
+            let v = read_f64(bytes, at_tail + 8 + 8 * k);
+            if k < tail_len {
+                if !v.is_finite() {
+                    bail!("fastplan certificate trace entry {k} is not finite ({v})");
+                }
+                trace_tail.push(v);
+            } else if v.to_bits() != 0 {
+                // unused slots are part of the checksummed stream and must
+                // be exactly +0.0 — anything else is a malformed writer
+                bail!("fastplan certificate has a non-zero unused trace slot {k}");
+            }
+        }
+        Some(ErrorCertificate { fro_err, rel_err, g: cert_g, band_err, trace_tail })
+    } else {
+        None
+    };
+
     let repr = if kind == 0 {
         // struct literal, NOT GTransform::new — the constructor's defensive
         // renormalization could perturb the stored bits and break the
@@ -393,7 +494,14 @@ pub(crate) fn decode(bytes: &[u8]) -> crate::Result<DecodedPlan> {
             .collect();
         ChainRepr::T(TChain { n, transforms })
     };
-    Ok(DecodedPlan { repr, level: level == 1, superstage_stages, superstage_table, spectrum })
+    Ok(DecodedPlan {
+        repr,
+        level: level == 1,
+        superstage_stages,
+        superstage_table,
+        spectrum,
+        certificate,
+    })
 }
 
 #[cfg(test)]
@@ -411,7 +519,7 @@ mod tests {
     #[test]
     fn empty_plan_round_trips() {
         let repr = ChainRepr::G(GChain::identity(5));
-        let bytes = encode(&repr, true, 2048, &[0], None);
+        let bytes = encode(&repr, true, 2048, &[0], None, None);
         let d = decode(&bytes).unwrap();
         assert!(d.level);
         assert_eq!(d.superstage_stages, 2048);
@@ -431,7 +539,7 @@ mod tests {
         // back-compat contract: attaching no spectrum must produce a
         // byte stream indistinguishable from the v1 writer
         let repr = ChainRepr::G(GChain::identity(5));
-        let bytes = encode(&repr, true, 2048, &[0], None);
+        let bytes = encode(&repr, true, 2048, &[0], None, None);
         assert_eq!(read_u32(&bytes, 8), FORMAT_VERSION);
     }
 
@@ -439,7 +547,7 @@ mod tests {
     fn spectrum_round_trips_as_version_2() {
         let repr = ChainRepr::G(GChain::identity(5));
         let spec = vec![0.0, 0.5, -1.25, 3.75, 1e-30];
-        let bytes = encode(&repr, true, 2048, &[0], Some(&spec));
+        let bytes = encode(&repr, true, 2048, &[0], Some(&spec), None);
         assert_eq!(read_u32(&bytes, 8), FORMAT_VERSION_SPECTRUM);
         let d = decode(&bytes).unwrap();
         assert_eq!(d.spectrum.as_deref(), Some(&spec[..]));
@@ -448,7 +556,7 @@ mod tests {
         // checksum is valid
         let mut with_nan = spec.clone();
         with_nan[2] = f64::NAN;
-        let bad = encode(&repr, true, 2048, &[0], Some(&with_nan));
+        let bad = encode(&repr, true, 2048, &[0], Some(&with_nan), None);
         let e = format!("{:#}", decode(&bad).unwrap_err());
         assert!(e.contains("not finite"), "{e}");
     }
@@ -458,7 +566,7 @@ mod tests {
         // a checksum-valid artifact declaring a huge n must come back as
         // Err, not abort inside the compiler's O(n) allocations
         let repr = ChainRepr::G(GChain::identity(1 << 30));
-        let bytes = encode(&repr, true, 2048, &[0], None);
+        let bytes = encode(&repr, true, 2048, &[0], None, None);
         let e = format!("{:#}", decode(&bytes).unwrap_err());
         assert!(e.contains("exceeds the supported maximum"), "{e}");
     }
@@ -466,7 +574,7 @@ mod tests {
     #[test]
     fn rejects_bad_magic_version_checksum_truncation() {
         let repr = ChainRepr::G(GChain::identity(4));
-        let good = encode(&repr, true, 2048, &[0], None);
+        let good = encode(&repr, true, 2048, &[0], None, None);
         assert!(decode(&good).is_ok());
 
         let mut bad = good.clone();
@@ -489,5 +597,126 @@ mod tests {
         assert!(e.contains("truncated"), "{e}");
         let e = format!("{:#}", decode(&good[..10]).unwrap_err());
         assert!(e.contains("truncated"), "{e}");
+    }
+
+    fn sample_cert(g: usize) -> ErrorCertificate {
+        ErrorCertificate {
+            fro_err: 0.125,
+            rel_err: 1e-3,
+            g,
+            band_err: [0.1, 0.05, 0.025, 1e-9],
+            trace_tail: vec![0.5, 0.25, 0.015625],
+        }
+    }
+
+    #[test]
+    fn certificate_round_trips_as_version_3_bitwise() {
+        let repr = ChainRepr::G(GChain::identity(5));
+        let spec = vec![0.0, 0.5, -1.25, 3.75, 1e-30];
+        let cert = sample_cert(0);
+        let bytes = encode(&repr, true, 2048, &[0], Some(&spec), Some(&cert));
+        assert_eq!(read_u32(&bytes, 8), FORMAT_VERSION_CERT);
+        let d = decode(&bytes).unwrap();
+        assert_eq!(d.spectrum.as_deref(), Some(&spec[..]));
+        let got = d.certificate.expect("v3 must carry a certificate");
+        // identical f64 bits, field by field
+        assert_eq!(got.fro_err.to_bits(), cert.fro_err.to_bits());
+        assert_eq!(got.rel_err.to_bits(), cert.rel_err.to_bits());
+        assert_eq!(got.g, cert.g);
+        for b in 0..CERT_BANDS {
+            assert_eq!(got.band_err[b].to_bits(), cert.band_err[b].to_bits());
+        }
+        assert_eq!(got.trace_tail.len(), cert.trace_tail.len());
+        for (a, b) in got.trace_tail.iter().zip(&cert.trace_tail) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // and a re-encode of the decoded plan is the identical byte stream
+        let again = encode(
+            &d.repr,
+            d.level,
+            d.superstage_stages,
+            &d.superstage_table,
+            d.spectrum.as_deref(),
+            d.certificate.as_ref(),
+        );
+        assert_eq!(again, bytes);
+    }
+
+    #[test]
+    fn certificate_free_encoding_stays_version_2_byte_exact() {
+        // adding v3 must not perturb a single byte of certificate-free
+        // writes — v2 readers keep working on them
+        let repr = ChainRepr::G(GChain::identity(5));
+        let spec = vec![0.0, 0.5, -1.25, 3.75, 1e-30];
+        let bytes = encode(&repr, true, 2048, &[0], Some(&spec), None);
+        assert_eq!(read_u32(&bytes, 8), FORMAT_VERSION_SPECTRUM);
+        let expected_len = HEADER_LEN + 8 + 8 * spec.len() + 8; // + table + spectrum + checksum
+        assert_eq!(bytes.len(), expected_len);
+    }
+
+    #[test]
+    fn certificate_section_fuzz_rejects_corruption() {
+        let repr = ChainRepr::G(GChain::identity(5));
+        let spec = vec![0.0, 0.5, -1.25, 3.75, 1e-30];
+        let good = encode(&repr, true, 2048, &[0], Some(&spec), Some(&sample_cert(0)));
+        assert!(decode(&good).is_ok());
+        let cert_at = good.len() - 8 - CERT_BYTES;
+
+        // any single bit flip anywhere in the certificate section trips
+        // the checksum
+        for k in (0..CERT_BYTES).step_by(7) {
+            let mut bad = good.clone();
+            bad[cert_at + k] ^= 1 << (k % 8);
+            let e = format!("{:#}", decode(&bad).unwrap_err());
+            assert!(e.contains("checksum mismatch"), "byte {k}: {e}");
+        }
+
+        // truncating the section (with a re-stamped checksum so only the
+        // length check can catch it) is rejected
+        for cut in [1usize, 8, CERT_BYTES] {
+            let mut bad = good[..good.len() - 8 - cut].to_vec();
+            let sum = fnv1a64(&bad);
+            bad.extend_from_slice(&sum.to_le_bytes());
+            let e = format!("{:#}", decode(&bad).unwrap_err());
+            assert!(e.contains("truncated"), "cut {cut}: {e}");
+        }
+
+        // checksum-valid but semantically invalid certificates are
+        // rejected field by field
+        let mut restamp = |f: &mut dyn FnMut(&mut Vec<u8>)| {
+            let mut bad = good[..good.len() - 8].to_vec();
+            f(&mut bad);
+            let sum = fnv1a64(&bad);
+            bad.extend_from_slice(&sum.to_le_bytes());
+            format!("{:#}", decode(&bad).unwrap_err())
+        };
+        let e = restamp(&mut |b| {
+            b[cert_at..cert_at + 8].copy_from_slice(&f64::NAN.to_le_bytes());
+        });
+        assert!(e.contains("finite and non-negative"), "{e}");
+        let e = restamp(&mut |b| {
+            b[cert_at + 8..cert_at + 16].copy_from_slice(&(-1.0f64).to_le_bytes());
+        });
+        assert!(e.contains("finite and non-negative"), "{e}");
+        let e = restamp(&mut |b| {
+            b[cert_at + 16..cert_at + 24].copy_from_slice(&7u64.to_le_bytes());
+        });
+        assert!(e.contains("disagrees with the stage count"), "{e}");
+        let e = restamp(&mut |b| {
+            b[cert_at + 24..cert_at + 32].copy_from_slice(&f64::INFINITY.to_le_bytes());
+        });
+        assert!(e.contains("band error"), "{e}");
+        let tail_at = cert_at + 24 + 8 * CERT_BANDS;
+        let e = restamp(&mut |b| {
+            b[tail_at..tail_at + 8]
+                .copy_from_slice(&((CERT_TRACE_TAIL as u64 + 1).to_le_bytes()));
+        });
+        assert!(e.contains("exceeds the cap"), "{e}");
+        // a non-zero unused tail slot (slot index 3 ≥ tail_len 3)
+        let e = restamp(&mut |b| {
+            let slot = tail_at + 8 + 8 * 3;
+            b[slot..slot + 8].copy_from_slice(&1.0f64.to_le_bytes());
+        });
+        assert!(e.contains("non-zero unused trace slot"), "{e}");
     }
 }

@@ -46,7 +46,7 @@
 mod artifact;
 mod policy;
 
-pub use artifact::{FORMAT_VERSION, FORMAT_VERSION_SPECTRUM};
+pub use artifact::{FORMAT_VERSION, FORMAT_VERSION_CERT, FORMAT_VERSION_SPECTRUM};
 pub(crate) use artifact::fnv1a64;
 pub use policy::ExecPolicy;
 
@@ -59,7 +59,7 @@ use crate::linalg::Mat;
 use crate::transforms::schedule::DEFAULT_SUPERSTAGE_STAGES;
 use crate::transforms::{
     apply_gchain_batch_f32, apply_gchain_batch_f32_t, apply_tchain_batch_f32, global_pool,
-    ChainKind, CompiledPlan, GChain, ScheduleStats, SignalBlock, TChain,
+    ChainKind, CompiledPlan, ErrorCertificate, GChain, ScheduleStats, SignalBlock, TChain,
 };
 
 /// Which direction of the operator an apply runs.
@@ -191,6 +191,7 @@ pub struct PlanBuilder {
     schedule: ScheduleOptions,
     fuse: FuseOptions,
     spectrum: Option<Vec<f64>>,
+    certificate: Option<ErrorCertificate>,
 }
 
 impl PlanBuilder {
@@ -200,6 +201,7 @@ impl PlanBuilder {
             schedule: ScheduleOptions::default(),
             fuse: FuseOptions::default(),
             spectrum: None,
+            certificate: None,
         }
     }
 
@@ -221,6 +223,18 @@ impl PlanBuilder {
     /// without one it stays a plain transform and serializes as v1.
     pub fn spectrum(mut self, spectrum: Vec<f64>) -> PlanBuilder {
         self.spectrum = Some(spectrum);
+        self
+    }
+
+    /// Attach a measured [`ErrorCertificate`]
+    /// (e.g. [`SymFactorization::certificate`](crate::factor::
+    /// SymFactorization::certificate)). A certified plan serializes as a
+    /// version-3 `.fastplan`, surfaces its accuracy in serve metrics and
+    /// is eligible under a `serve --max-error` budget. Requires a
+    /// spectrum (the certificate's band errors are quartiles of it) —
+    /// [`build`](Self::build) asserts that.
+    pub fn certificate(mut self, certificate: ErrorCertificate) -> PlanBuilder {
+        self.certificate = Some(certificate);
         self
     }
 
@@ -251,12 +265,24 @@ impl PlanBuilder {
                 "spectrum length must equal the plan dimension"
             );
         }
+        if let Some(cert) = &self.certificate {
+            assert!(
+                self.spectrum.is_some(),
+                "a certificate implies a spectrum (its band errors are quartiles of it)"
+            );
+            assert_eq!(
+                cert.g,
+                compiled.len(),
+                "certificate g must equal the plan's stage count"
+            );
+        }
         Arc::new(Plan {
             repr: self.repr,
             compiled,
             schedule: self.schedule,
             fuse: self.fuse,
             spectrum: self.spectrum,
+            certificate: self.certificate,
             checksum: std::sync::OnceLock::new(),
         })
     }
@@ -313,6 +339,9 @@ pub struct Plan {
     /// Lemma-1 spectrum `s̄`, when the factorizer attached one (carried
     /// by version-2 `.fastplan` artifacts; `None` for v1 / plain plans).
     spectrum: Option<Vec<f64>>,
+    /// Measured error certificate, when the factorizer attached one
+    /// (carried by version-3 `.fastplan` artifacts).
+    certificate: Option<ErrorCertificate>,
     /// Lazily computed [`Plan::content_checksum`] (an apply under
     /// [`ExecPolicy::Auto`] consults it on every call, and serializing
     /// the coefficient streams each time would dwarf the apply itself).
@@ -373,6 +402,15 @@ impl Plan {
         self.spectrum.as_deref()
     }
 
+    /// The measured error certificate, if the factorizer attached one.
+    /// The serving tier surfaces it per resident plan and a
+    /// `serve --max-error` budget gates routing on its `rel_err`;
+    /// uncertified plans (v1/v2 artifacts, hand-built plans) return
+    /// `None` and are rejected under a budget.
+    pub fn certificate(&self) -> Option<&ErrorCertificate> {
+        self.certificate.as_ref()
+    }
+
     /// FNV-1a-64 checksum of the plan's serialized `.fastplan` bytes —
     /// the plan's content identity. Used as the cache/profile key by the
     /// execution autotuner ([`crate::runtime::autotune`]): two plans with
@@ -416,6 +454,7 @@ impl Plan {
             self.fuse.superstage_stages,
             &self.compiled.superstage_table(),
             self.spectrum.as_deref(),
+            self.certificate.as_ref(),
         )
     }
 
@@ -430,6 +469,7 @@ impl Plan {
             schedule: ScheduleOptions { level: d.level },
             fuse: FuseOptions { superstage_stages: d.superstage_stages },
             spectrum: d.spectrum,
+            certificate: d.certificate,
         }
         .build();
         if plan.compiled.superstage_table() != d.superstage_table {
@@ -823,6 +863,45 @@ mod tests {
         assert!(plain.spectrum().is_none());
         let plain_back = Plan::from_bytes(&plain.to_bytes()).unwrap();
         assert!(plain_back.spectrum().is_none());
+    }
+
+    #[test]
+    fn certificate_survives_bytes_round_trip() {
+        let mut rng = Rng64::new(4112);
+        let n = 12;
+        let ch = random_gplan(n, 4 * n, &mut rng);
+        let spec: Vec<f64> = (0..n).map(|_| rng.randn()).collect();
+        let cert = crate::transforms::certify_g(
+            &ch,
+            &Mat::from_diag(&spec),
+            &spec,
+            &[2.0, 1.0, 0.5],
+        );
+        let plan = Plan::from(&ch).spectrum(spec.clone()).certificate(cert.clone()).build();
+        assert_eq!(plan.certificate(), Some(&cert));
+        let bytes = plan.to_bytes();
+        let back = Plan::from_bytes(&bytes).unwrap();
+        let got = back.certificate().expect("certificate lost in round trip");
+        // identical f64 bits across the save/load boundary
+        assert_eq!(got.fro_err.to_bits(), cert.fro_err.to_bits());
+        assert_eq!(got.rel_err.to_bits(), cert.rel_err.to_bits());
+        assert_eq!(got.g, cert.g);
+        for (a, b) in got.band_err.iter().zip(&cert.band_err) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(
+            got.trace_tail.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            cert.trace_tail.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!(back.to_bytes(), bytes, "v3 re-serialization drifted");
+        // v2→v3 back-compat: a certificate-free plan with a spectrum is
+        // byte-identical to the pre-v3 writer's output and loads
+        // certificate-free
+        let v2 = Plan::from(&ch).spectrum(spec.clone()).build();
+        assert!(v2.certificate().is_none());
+        let v2_back = Plan::from_bytes(&v2.to_bytes()).unwrap();
+        assert!(v2_back.certificate().is_none());
+        assert_eq!(v2_back.spectrum(), Some(&spec[..]));
     }
 
     #[test]

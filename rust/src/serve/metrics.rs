@@ -92,6 +92,7 @@ struct Inner {
     rejected_deadline: u64,
     rejected_shutdown: u64,
     rejected_plan_unavailable: u64,
+    rejected_unsupported_plan: u64,
     /// SIMD kernel ISA the serving backend dispatches to (set once by the
     /// worker at startup; `None` until a backend reports in).
     kernel_isa: Option<&'static str>,
@@ -116,6 +117,7 @@ impl Inner {
             rejected_deadline: 0,
             rejected_shutdown: 0,
             rejected_plan_unavailable: 0,
+            rejected_unsupported_plan: 0,
             kernel_isa: None,
             tuned: None,
         }
@@ -139,6 +141,9 @@ pub struct MetricsSnapshot {
     pub rejected_shutdown: u64,
     /// [`Rejected::PlanUnavailable`] answers.
     pub rejected_plan_unavailable: u64,
+    /// [`Rejected::UnsupportedPlan`] answers (capability mismatch or
+    /// `--max-error` budget violation — the route resolved fine).
+    pub rejected_unsupported_plan: u64,
     /// Backend panics the worker contained (each failed one batch but
     /// kept the coordinator serving).
     pub panics_contained: u64,
@@ -199,6 +204,7 @@ impl ServeMetrics {
             Rejected::DeadlineExceeded => g.rejected_deadline += 1,
             Rejected::ShuttingDown => g.rejected_shutdown += 1,
             Rejected::PlanUnavailable { .. } => g.rejected_plan_unavailable += 1,
+            Rejected::UnsupportedPlan { .. } => g.rejected_unsupported_plan += 1,
         }
     }
 
@@ -237,11 +243,13 @@ impl ServeMetrics {
             rejected: g.rejected_queue_full
                 + g.rejected_deadline
                 + g.rejected_shutdown
-                + g.rejected_plan_unavailable,
+                + g.rejected_plan_unavailable
+                + g.rejected_unsupported_plan,
             rejected_queue_full: g.rejected_queue_full,
             rejected_deadline: g.rejected_deadline,
             rejected_shutdown: g.rejected_shutdown,
             rejected_plan_unavailable: g.rejected_plan_unavailable,
+            rejected_unsupported_plan: g.rejected_unsupported_plan,
             panics_contained: g.panics,
             mean_latency_s: g.latency.mean(),
             p50_latency_s: crate::linalg::percentile(&g.latency_samples.samples, 50.0),
@@ -335,15 +343,17 @@ mod tests {
         m.record_rejected(&Rejected::DeadlineExceeded);
         m.record_rejected(&Rejected::ShuttingDown);
         m.record_rejected(&Rejected::PlanUnavailable { reason: "x".into() });
+        m.record_rejected(&Rejected::UnsupportedPlan { reason: "y".into() });
         m.record_panic();
         let s = m.snapshot();
         assert_eq!(s.rejected_queue_full, 2);
         assert_eq!(s.rejected_deadline, 1);
         assert_eq!(s.rejected_shutdown, 1);
         assert_eq!(s.rejected_plan_unavailable, 1);
-        assert_eq!(s.rejected, 5);
+        assert_eq!(s.rejected_unsupported_plan, 1);
+        assert_eq!(s.rejected, 6);
         assert_eq!(s.panics_contained, 1);
-        assert!(s.line().contains("rejected=5"));
+        assert!(s.line().contains("rejected=6"));
         assert!(s.line().contains("panics=1"));
     }
 

@@ -53,7 +53,7 @@ mod registry;
 
 pub use backend::{Backend, NativeGftBackend, PjrtGftBackend, TransformDirection};
 pub use metrics::{MetricsSnapshot, ServeMetrics, RESERVOIR_CAP};
-pub use registry::{PlanRegistry, RegistryStats};
+pub use registry::{PlanRegistry, RegistryStats, ResidentPlanInfo};
 
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -76,6 +76,11 @@ pub struct ServeConfig {
     pub batch_window: Duration,
     /// Bounded queue capacity (backpressure limit).
     pub queue_capacity: usize,
+    /// Error budget (`serve --max-error ε`): refuse to route to plans
+    /// whose `.fastplan` error certificate reports `rel_err > ε`, and to
+    /// plans that carry no certificate at all (nothing to audit against).
+    /// `None` (the default) disables the gate.
+    pub max_error: Option<f64>,
 }
 
 impl Default for ServeConfig {
@@ -84,6 +89,7 @@ impl Default for ServeConfig {
             max_batch: 8,
             batch_window: Duration::from_micros(200),
             queue_capacity: 1024,
+            max_error: None,
         }
     }
 }
@@ -239,7 +245,9 @@ fn require_spectrum(plan: &Plan) -> Result<(), ServeError> {
     if plan.spectrum().is_some() {
         Ok(())
     } else {
-        Err(ServeError::Rejected(Rejected::PlanUnavailable {
+        // the plan *resolved* fine — it just can't serve this request
+        // kind, which is a different failure than an unresolvable route
+        Err(ServeError::Rejected(Rejected::UnsupportedPlan {
             reason: "routed plan carries no spectrum (v1 artifact?); kernel-based spectral \
                      requests need a version-2 .fastplan"
                 .into(),
@@ -294,6 +302,15 @@ pub enum Rejected {
         /// Human-readable resolution failure.
         reason: String,
     },
+    /// The routed plan resolved fine but cannot serve this request: it
+    /// lacks a capability the request needs (e.g. a spectrum-less v1
+    /// artifact asked for a kernel filter) or fails the coordinator's
+    /// error budget (`--max-error`). Distinct from `PlanUnavailable` so
+    /// clients don't uselessly retry an unresolvable route.
+    UnsupportedPlan {
+        /// Human-readable capability mismatch.
+        reason: String,
+    },
 }
 
 impl Rejected {
@@ -304,6 +321,7 @@ impl Rejected {
             Rejected::DeadlineExceeded => "deadline_exceeded",
             Rejected::ShuttingDown => "shutting_down",
             Rejected::PlanUnavailable { .. } => "plan_unavailable",
+            Rejected::UnsupportedPlan { .. } => "unsupported_plan",
         }
     }
 
@@ -325,6 +343,7 @@ impl std::fmt::Display for Rejected {
             Rejected::DeadlineExceeded => write!(f, "deadline exceeded before execution"),
             Rejected::ShuttingDown => write!(f, "coordinator is shutting down"),
             Rejected::PlanUnavailable { reason } => write!(f, "plan unavailable: {reason}"),
+            Rejected::UnsupportedPlan { reason } => write!(f, "unsupported plan: {reason}"),
         }
     }
 }
@@ -537,6 +556,32 @@ impl Coordinator {
         }
     }
 
+    /// Enforce the coordinator's error budget (`--max-error ε`) against
+    /// the resolved route's `.fastplan` error certificate. Plans without
+    /// a certificate are refused outright under a budget: an unmeasured
+    /// plan cannot demonstrate it meets ε.
+    fn check_error_budget(&self, plan: Option<&Arc<Plan>>) -> Result<(), Rejected> {
+        let (Some(eps), Some(plan)) = (self.config.max_error, plan) else {
+            return Ok(());
+        };
+        match plan.certificate() {
+            None => Err(Rejected::UnsupportedPlan {
+                reason: format!(
+                    "coordinator enforces --max-error {eps:e} but the routed plan carries no \
+                     error certificate (pre-v3 .fastplan?); re-factor with --error-budget"
+                ),
+            }),
+            Some(cert) if !cert.meets(eps) => Err(Rejected::UnsupportedPlan {
+                reason: format!(
+                    "routed plan's certified relative error {:e} exceeds the --max-error \
+                     budget {eps:e} (g = {})",
+                    cert.rel_err, cert.g
+                ),
+            }),
+            Some(_) => Ok(()),
+        }
+    }
+
     fn rejected(&self, r: Rejected) -> ServeError {
         self.metrics.record_rejected(&r);
         ServeError::Rejected(r)
@@ -562,6 +607,7 @@ impl Coordinator {
         opts: SubmitOptions,
     ) -> Result<Ticket, ServeError> {
         let plan = self.resolve_route(&opts).map_err(|r| self.rejected(r))?;
+        self.check_error_budget(plan.as_ref()).map_err(|r| self.rejected(r))?;
         if let Err(e) = opts.op.validate(plan.as_ref()) {
             return Err(match e {
                 ServeError::Rejected(r) => self.rejected(r),
@@ -602,6 +648,8 @@ impl Coordinator {
     pub fn submit(&self, signal: Vec<f32>) -> crate::Result<Ticket> {
         let opts = SubmitOptions::default();
         let plan = self.resolve_route(&opts).map_err(anyhow::Error::from)?;
+        self.check_error_budget(plan.as_ref())
+            .map_err(|r| anyhow::Error::from(self.rejected(r)))?;
         let want = plan.as_ref().map_or(self.n, |p| p.n());
         if signal.len() != want {
             bail!("signal length {} != n {}", signal.len(), want);
@@ -1254,7 +1302,8 @@ mod tests {
         coord.shutdown();
 
         // spectrum-free routed plan: kernel filters and wavelets are
-        // rejected, explicit-response filters still work
+        // rejected as *unsupported* (the route resolved — it just can't
+        // serve the request kind), explicit-response filters still work
         let n = 6;
         let (_plan, _registry, coord, mut rng) = spectral_fixture(n, 7202, false);
         let sig: Vec<f32> = (0..n).map(|_| rng.randn() as f32).collect();
@@ -1262,15 +1311,16 @@ mod tests {
             response: ResponseSpec::Kernel(SpectralKernel::Heat { t: 0.4 }),
         }));
         match coord.submit_with(sig.clone(), SubmitOptions { op: kop, ..Default::default() }) {
-            Err(ServeError::Rejected(Rejected::PlanUnavailable { reason })) => {
-                assert!(reason.contains("spectrum"), "{reason}")
+            Err(ServeError::Rejected(r @ Rejected::UnsupportedPlan { .. })) => {
+                assert_eq!(r.code(), "unsupported_plan");
+                assert!(format!("{r}").contains("spectrum"), "{r}");
             }
-            other => panic!("want PlanUnavailable, got {:?}", other.map(|_| ())),
+            other => panic!("want UnsupportedPlan, got {:?}", other.map(|_| ())),
         }
         let wop = JobOp::Wavelet(Arc::new(WaveletSpec { scales: 2 }));
         assert!(matches!(
             coord.submit_with(sig.clone(), SubmitOptions { op: wop, ..Default::default() }),
-            Err(ServeError::Rejected(Rejected::PlanUnavailable { .. }))
+            Err(ServeError::Rejected(Rejected::UnsupportedPlan { .. }))
         ));
         // malformed specs are client errors, not rejections
         let bad_len = JobOp::Filter(Arc::new(FilterSpec {
@@ -1300,7 +1350,84 @@ mod tests {
             .unwrap()
             .wait()
             .unwrap();
+        let m = coord.shutdown();
+        assert_eq!(m.rejected_unsupported_plan, 2, "kernel filter + wavelet");
+    }
+
+    #[test]
+    fn max_error_budget_gates_routing_on_the_certificate() {
+        use crate::linalg::Mat;
+        use crate::transforms::certify_g;
+        let n = 5;
+        let mut rng = crate::linalg::Rng64::new(7301);
+        let ch = crate::cli::figures::random_gplan(n, 4 * n, &mut rng);
+        let spec: Vec<f64> = (0..n).map(|i| i as f64 + 1.0).collect();
+        // a deliberately wrong target makes the certified error non-zero
+        let target = Mat::randn(n, n, &mut rng);
+        let target = &target + &target.transpose();
+        let cert = certify_g(&ch, &target, &spec, &[1.0]);
+        assert!(cert.rel_err > 0.0);
+        let certified = Plan::from(&ch).spectrum(spec.clone()).certificate(cert.clone()).build();
+        let uncertified = Plan::from(&ch).spectrum(spec).build();
+
+        let start = |plan: Arc<Plan>, max_error: Option<f64>| {
+            let registry = Arc::new(PlanRegistry::new(4));
+            registry.install_default(Arc::clone(&plan));
+            let backend_plan = Arc::clone(&plan);
+            Coordinator::start_with_registry(
+                move || {
+                    Ok(Box::new(NativeGftBackend::with_policy(
+                        backend_plan,
+                        TransformDirection::Forward,
+                        4,
+                        None,
+                        ExecPolicy::Seq,
+                    )?) as Box<dyn Backend>)
+                },
+                ServeConfig { max_error, ..Default::default() },
+                Some(registry),
+            )
+            .unwrap()
+        };
+        let sig = vec![1.0f32; n];
+
+        // no budget: both plans route
+        let coord = start(Arc::clone(&uncertified), None);
+        coord.submit_with(sig.clone(), SubmitOptions::default()).unwrap().wait().unwrap();
         coord.shutdown();
+
+        // budget + uncertified plan: refused with the certificate reason
+        let coord = start(uncertified, Some(0.5));
+        match coord.submit_with(sig.clone(), SubmitOptions::default()) {
+            Err(ServeError::Rejected(r @ Rejected::UnsupportedPlan { .. })) => {
+                assert!(format!("{r}").contains("no error certificate"), "{r}");
+            }
+            other => panic!("want UnsupportedPlan, got {:?}", other.map(|_| ())),
+        }
+        // the blocking submit path enforces the same gate
+        assert!(coord.submit(sig.clone()).is_err());
+        let m = coord.shutdown();
+        assert_eq!(m.rejected_unsupported_plan, 2);
+
+        // budget tighter than the certified error: refused, naming both
+        let tight = cert.rel_err / 2.0;
+        let coord = start(Arc::clone(&certified), Some(tight));
+        match coord.submit_with(sig.clone(), SubmitOptions::default()) {
+            Err(ServeError::Rejected(r @ Rejected::UnsupportedPlan { .. })) => {
+                let msg = format!("{r}");
+                assert!(msg.contains("exceeds"), "{msg}");
+                assert_eq!(r.retry_after_ms(), None, "capability mismatch has no backoff");
+            }
+            other => panic!("want UnsupportedPlan, got {:?}", other.map(|_| ())),
+        }
+        coord.shutdown();
+
+        // budget looser than the certified error: serves normally
+        let coord = start(certified, Some(cert.rel_err * 2.0));
+        coord.submit_with(sig, SubmitOptions::default()).unwrap().wait().unwrap();
+        let m = coord.shutdown();
+        assert_eq!(m.rejected_unsupported_plan, 0);
+        assert_eq!(m.completed, 1);
     }
 
     #[test]

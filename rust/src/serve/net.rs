@@ -41,7 +41,15 @@
 //! `{"ok":false,"code":C,"error":MSG}` where `code` is one of
 //! `queue_full` (plus `"retry_after_ms":N` — back off at least that
 //! long), `deadline_exceeded`, `shutting_down`, `plan_unavailable`,
+//! `unsupported_plan` (the route resolved but can't serve the request:
+//! spectrum-less v1 artifact asked for a kernel filter, or the plan's
+//! error certificate violates the server's `--max-error` budget),
 //! `backend_error`, or `bad_request`.
+//!
+//! The `metrics` reply's `registry` object carries a `plans` array — one
+//! entry per resident plan with its checksum, dimensions, and, when the
+//! artifact is a certified v3 `.fastplan`, the measured `rel_err` /
+//! `fro_err` of its error certificate (null otherwise).
 //!
 //! Signals travel as JSON numbers printed with Rust's shortest-round-trip
 //! `f32` formatting and are re-parsed **directly as `f32`** (never through
@@ -658,6 +666,7 @@ fn metrics_json(m: &MetricsSnapshot, coord: &Coordinator) -> Json {
         ("rejected_deadline".to_string(), Json::u64(m.rejected_deadline)),
         ("rejected_shutdown".to_string(), Json::u64(m.rejected_shutdown)),
         ("rejected_plan_unavailable".to_string(), Json::u64(m.rejected_plan_unavailable)),
+        ("rejected_unsupported_plan".to_string(), Json::u64(m.rejected_unsupported_plan)),
         ("panics_contained".to_string(), Json::u64(m.panics_contained)),
         ("p50_latency_s".to_string(), Json::f64(m.p50_latency_s)),
         ("p99_latency_s".to_string(), Json::f64(m.p99_latency_s)),
@@ -683,6 +692,31 @@ fn metrics_json(m: &MetricsSnapshot, coord: &Coordinator) -> Json {
                     "default_checksum".to_string(),
                     s.default_checksum
                         .map_or(Json::Null, |k| Json::Str(format!("{k:016x}"))),
+                ),
+                (
+                    "plans".to_string(),
+                    Json::Arr(
+                        reg.resident_plans()
+                            .into_iter()
+                            .map(|p| {
+                                let (rel, fro, cg) = match &p.certificate {
+                                    Some(c) => {
+                                        (Json::f64(c.rel_err), Json::f64(c.fro_err), Json::u64(c.g as u64))
+                                    }
+                                    None => (Json::Null, Json::Null, Json::Null),
+                                };
+                                Json::Obj(vec![
+                                    ("checksum".to_string(), Json::Str(format!("{:016x}", p.checksum))),
+                                    ("n".to_string(), Json::u64(p.n as u64)),
+                                    ("stages".to_string(), Json::u64(p.g as u64)),
+                                    ("default".to_string(), Json::Bool(p.is_default)),
+                                    ("rel_err".to_string(), rel),
+                                    ("fro_err".to_string(), fro),
+                                    ("cert_g".to_string(), cg),
+                                ])
+                            })
+                            .collect(),
+                    ),
                 ),
             ]),
         ));

@@ -25,6 +25,7 @@ use anyhow::Context;
 
 use super::faults::{self, FaultAction};
 use crate::plan::Plan;
+use crate::transforms::ErrorCertificate;
 
 struct Entry {
     plan: Arc<Plan>,
@@ -63,6 +64,23 @@ pub struct RegistryStats {
     pub evictions: u64,
     /// Content checksum of the current default plan.
     pub default_checksum: Option<u64>,
+}
+
+/// One resident plan's routing identity and accuracy, as surfaced by the
+/// serve `metrics` wire reply: routing key, dimensions, and the measured
+/// `.fastplan` error certificate when the artifact carries one (v3).
+#[derive(Clone, Debug)]
+pub struct ResidentPlanInfo {
+    /// Content checksum (the routing key).
+    pub checksum: u64,
+    /// Signal dimension.
+    pub n: usize,
+    /// Compiled stage count `g`.
+    pub g: usize,
+    /// Whether this plan backs the default route.
+    pub is_default: bool,
+    /// The artifact's measured error certificate, if it has one.
+    pub certificate: Option<ErrorCertificate>,
 }
 
 /// Capacity-bounded LRU of `Arc<Plan>`s keyed by content checksum (see
@@ -159,6 +177,26 @@ impl PlanRegistry {
                 Err(e)
             }
         }
+    }
+
+    /// Snapshot of every resident plan's identity and error certificate,
+    /// sorted by checksum (deterministic for the metrics reply). Does not
+    /// touch LRU state — observation must not change eviction order.
+    pub fn resident_plans(&self) -> Vec<ResidentPlanInfo> {
+        let g = self.inner.lock().unwrap();
+        let mut out: Vec<ResidentPlanInfo> = g
+            .plans
+            .iter()
+            .map(|(&key, e)| ResidentPlanInfo {
+                checksum: key,
+                n: e.plan.n(),
+                g: e.plan.len(),
+                is_default: Some(key) == g.default_key,
+                certificate: e.plan.certificate().cloned(),
+            })
+            .collect();
+        out.sort_by_key(|p| p.checksum);
+        out
     }
 
     /// Current counters.
@@ -303,6 +341,36 @@ mod tests {
         assert!(reg.get(d).is_ok(), "default must never be evicted");
         assert!(reg.get(k2).is_ok(), "most recent insert survives");
         assert!(reg.get(k1).is_err(), "LRU entry was evicted");
+    }
+
+    #[test]
+    fn resident_plans_surface_certificates_without_touching_lru() {
+        let reg = PlanRegistry::new(4);
+        let plain = plan_with(6, 8, 30);
+        let kp = reg.install_default(Arc::clone(&plain));
+
+        // build a certified plan (exact factorization → rel_err == 0)
+        let mut rng = crate::linalg::Rng64::new(31);
+        let ch = crate::cli::figures::random_gplan(6, 12, &mut rng);
+        let spec: Vec<f64> = (0..6).map(|i| i as f64 + 0.5).collect();
+        let s = ch.reconstruct(&spec);
+        let cert = crate::transforms::certify_g(&ch, &s, &spec, &[0.25]);
+        let certified = Plan::from(&ch).spectrum(spec).certificate(cert.clone()).build();
+        let kc = reg.insert(Arc::clone(&certified));
+
+        let infos = reg.resident_plans();
+        assert_eq!(infos.len(), 2);
+        assert!(infos.windows(2).all(|w| w[0].checksum < w[1].checksum), "sorted");
+        let p = infos.iter().find(|i| i.checksum == kp).unwrap();
+        assert!(p.is_default && p.certificate.is_none());
+        assert_eq!((p.n, p.g), (6, 8));
+        let c = infos.iter().find(|i| i.checksum == kc).unwrap();
+        assert!(!c.is_default);
+        let got = c.certificate.as_ref().unwrap();
+        assert_eq!(got.rel_err.to_bits(), cert.rel_err.to_bits());
+        assert_eq!(got.g, 12);
+        // observation is not a use: LRU counters untouched
+        assert_eq!(reg.stats().hits, 0);
     }
 
     #[test]

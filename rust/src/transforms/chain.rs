@@ -126,14 +126,7 @@ impl GChain {
 
     /// Objective `‖S − Ū diag(s̄) Ūᵀ‖²_F` (test/metric helper, `O(gn + n²)`).
     pub fn objective(&self, s: &Mat, spectrum: &[f64]) -> f64 {
-        // cheaper equivalent: ‖Ūᵀ S Ū − diag(s̄)‖²_F by Frobenius invariance
-        let mut w = s.clone();
-        self.apply_left_t(&mut w);
-        self.apply_right(&mut w);
-        for (i, &sv) in spectrum.iter().enumerate() {
-            w[(i, i)] -= sv;
-        }
-        w.fro_norm_sq()
+        super::error::g_objective(self, s, spectrum)
     }
 
     /// Dense materialization of `Ū` (tests / baselines; `O(gn)`).
@@ -279,7 +272,7 @@ impl TChain {
 
     /// Objective `‖C − T̄ diag(c̄) T̄⁻¹‖²_F` (`O(mn + n²)`).
     pub fn objective(&self, c: &Mat, spectrum: &[f64]) -> f64 {
-        self.reconstruct(spectrum).fro_dist_sq(c)
+        super::error::t_objective(self, c, spectrum)
     }
 
     /// Dense materialization of `T̄`.

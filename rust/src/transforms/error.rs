@@ -1,0 +1,326 @@
+//! The one shared error-metric module: every quantity the repo calls an
+//! "objective" or "(relative) error" is defined here, exactly once.
+//!
+//! Before this module the same metric lived in three places — the
+//! symmetric factorizer's private `objective_from_working`, the chains'
+//! `GChain::objective` / `TChain::objective` and the baselines' ad-hoc
+//! `objective` fields — which made the bake-off's flops-vs-error frontier
+//! comparisons only *approximately* comparable. All of those now delegate
+//! here, and the property tests in this module pin the delegations
+//! **bitwise** (same accumulation order, same formulas), so a number
+//! reported by the factorizer, a baseline, a `.fastplan` error
+//! certificate and the bake-off harness is the same number.
+//!
+//! The measured accuracy of a finished factorization is packaged as an
+//! [`ErrorCertificate`] — the payload appended by version-3 `.fastplan`
+//! artifacts and surfaced by the serving tier (`serve --max-error`).
+
+use crate::linalg::Mat;
+
+use super::chain::{GChain, TChain};
+
+/// `‖W − diag(s̄)‖²_F = Σ_{i,j} (W_ij − δ_ij·s̄_i)²` — the canonical
+/// diagonalization residual on a working matrix `W = Ūᵀ S Ū` (row-major
+/// accumulation from `+0.0`; every other metric in this module reduces to
+/// this order so the delegations stay bitwise).
+pub fn diag_residual_sq(w: &Mat, spectrum: &[f64]) -> f64 {
+    let n = w.rows();
+    assert_eq!(spectrum.len(), n, "spectrum length must equal the matrix dimension");
+    let mut obj = 0.0;
+    for i in 0..n {
+        for j in 0..n {
+            let d = if i == j { w[(i, j)] - spectrum[i] } else { w[(i, j)] };
+            obj += d * d;
+        }
+    }
+    obj
+}
+
+/// Off-diagonal energy `off(W)² = Σ_{i≠j} W_ij²` — the truncated-Jacobi
+/// objective. Equal to [`diag_residual_sq`]`(w, w.diag())` **bitwise**:
+/// the diagonal terms there are exactly `(W_ii − W_ii)² = +0.0`, and
+/// adding `+0.0` to the (non-negative) accumulator does not change it.
+pub fn off_diagonal_sq(w: &Mat) -> f64 {
+    w.off_diag_sq()
+}
+
+/// Symmetric-case objective `‖S − Ū diag(s̄) Ūᵀ‖²_F`, computed in the
+/// conjugated frame (`‖Ūᵀ S Ū − diag(s̄)‖²_F` by Frobenius invariance,
+/// `O(gn + n²)` instead of reconstructing).
+pub fn g_objective(chain: &GChain, s: &Mat, spectrum: &[f64]) -> f64 {
+    let mut w = s.clone();
+    chain.apply_left_t(&mut w);
+    chain.apply_right(&mut w);
+    diag_residual_sq(&w, spectrum)
+}
+
+/// General-case objective `‖C − T̄ diag(c̄) T̄⁻¹‖²_F` (reconstruct and
+/// difference; `O(mn + n²)`).
+pub fn t_objective(chain: &TChain, c: &Mat, spectrum: &[f64]) -> f64 {
+    chain.reconstruct(spectrum).fro_dist_sq(c)
+}
+
+/// Relative Frobenius error `‖residual‖_F / ‖target‖_F` from the two
+/// *squared* norms — the one formula behind
+/// `SymFactorization::relative_error`, `GeneralFactorization::
+/// relative_error` and the certificate's `rel_err`.
+pub fn relative_error(objective_sq: f64, target_fro_sq: f64) -> f64 {
+    (objective_sq / target_fro_sq.max(1e-300)).sqrt()
+}
+
+/// Number of spectral bands in a certificate (quartiles of the Lemma-1
+/// spectrum).
+pub const CERT_BANDS: usize = 4;
+
+/// Maximum objective-trace entries a certificate retains (the tail — the
+/// part that shows whether the run had converged).
+pub const CERT_TRACE_TAIL: usize = 8;
+
+/// A measured accuracy certificate for a factored plan — the payload of
+/// the version-3 `.fastplan` section and the quantity `serve --max-error`
+/// gates on.
+///
+/// Every field is *measured* against the original matrix at
+/// certification time, not estimated: `fro_err` is the Frobenius
+/// reconstruction error `‖S − Ū diag(s̄) Ūᵀ‖_F` (resp. the T̄ analogue),
+/// `rel_err` normalizes it by `‖S‖_F`, and `band_err` splits the same
+/// residual by quartiles of the Lemma-1 spectrum so a consumer can see
+/// *where* on the spectrum the approximation is weak (fast-GFT
+/// applications typically care most about the low end).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ErrorCertificate {
+    /// Frobenius reconstruction error `‖S − S̄‖_F`.
+    pub fro_err: f64,
+    /// Relative error `fro_err / ‖S‖_F`.
+    pub rel_err: f64,
+    /// Number of fundamental components `g` (resp. `m`) when measured.
+    pub g: usize,
+    /// Per-band residual norm over quartiles of the Lemma-1 spectrum
+    /// (band 0 = lowest quartile). Entries satisfy
+    /// `Σ band_err[b]² = fro_err²` up to rounding.
+    pub band_err: [f64; CERT_BANDS],
+    /// Tail of the objective trace (last ≤ [`CERT_TRACE_TAIL`] sweeps,
+    /// oldest first) — shows whether the run had converged at this `g`.
+    pub trace_tail: Vec<f64>,
+}
+
+impl ErrorCertificate {
+    /// `true` when the measured relative error satisfies the budget.
+    pub fn meets(&self, budget: f64) -> bool {
+        self.rel_err <= budget
+    }
+}
+
+/// Partition `0..n` into [`CERT_BANDS`] contiguous bands of the spectrum
+/// sorted ascending (ties broken by index — deterministic), and return
+/// the Frobenius norm of the residual rows falling in each band.
+fn band_errors(resid: &Mat, spectrum: &[f64]) -> [f64; CERT_BANDS] {
+    let n = spectrum.len();
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| spectrum[a].partial_cmp(&spectrum[b]).unwrap().then(a.cmp(&b)));
+    let mut acc = [0.0f64; CERT_BANDS];
+    for (rank, &i) in idx.iter().enumerate() {
+        let band = (rank * CERT_BANDS) / n.max(1);
+        acc[band] += resid.row(i).iter().map(|v| v * v).sum::<f64>();
+    }
+    acc.map(f64::sqrt)
+}
+
+fn finish_certificate(
+    resid: &Mat,
+    target_fro_sq: f64,
+    g: usize,
+    spectrum: &[f64],
+    trace: &[f64],
+) -> ErrorCertificate {
+    let objective_sq = resid.fro_norm_sq();
+    let tail_start = trace.len().saturating_sub(CERT_TRACE_TAIL);
+    ErrorCertificate {
+        fro_err: objective_sq.sqrt(),
+        rel_err: relative_error(objective_sq, target_fro_sq),
+        g,
+        band_err: band_errors(resid, spectrum),
+        trace_tail: trace[tail_start..].to_vec(),
+    }
+}
+
+/// Measure a certificate for a symmetric factorization `S ≈ Ū diag(s̄) Ūᵀ`.
+///
+/// The residual is evaluated in the conjugated frame through the exact
+/// per-factor `conjugate_t` sequence the factorizer itself uses, so
+/// `rel_err` equals `SymFactorization::relative_error` **bitwise** for
+/// the chain/spectrum the run produced (the "budget met ⇒ certificate
+/// meets budget" contract of `run_to_budget` depends on this).
+pub fn certify_g(chain: &GChain, s: &Mat, spectrum: &[f64], trace: &[f64]) -> ErrorCertificate {
+    assert_eq!(spectrum.len(), chain.n, "spectrum length must equal the chain dimension");
+    let mut w = s.clone();
+    for t in chain.transforms.iter().rev() {
+        t.conjugate_t(&mut w);
+    }
+    for (i, &sv) in spectrum.iter().enumerate() {
+        w[(i, i)] -= sv;
+    }
+    finish_certificate(&w, s.fro_norm_sq(), chain.len(), spectrum, trace)
+}
+
+/// Measure a certificate for a general factorization `C ≈ T̄ diag(c̄) T̄⁻¹`.
+pub fn certify_t(chain: &TChain, c: &Mat, spectrum: &[f64], trace: &[f64]) -> ErrorCertificate {
+    assert_eq!(spectrum.len(), chain.n, "spectrum length must equal the chain dimension");
+    let mut resid = chain.reconstruct(spectrum);
+    resid.axpy(-1.0, c);
+    finish_certificate(&resid, c.fro_norm_sq(), chain.len(), spectrum, trace)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Rng64;
+    use crate::transforms::{GKind, GTransform, TTransform};
+
+    fn random_gchain(rng: &mut Rng64, n: usize, g: usize) -> GChain {
+        let mut ch = GChain::identity(n);
+        for _ in 0..g {
+            let i = rng.below(n - 1);
+            let j = i + 1 + rng.below(n - 1 - i);
+            let th = rng.uniform_in(0.0, std::f64::consts::TAU);
+            let kind = if rng.bernoulli(0.5) { GKind::Rotation } else { GKind::Reflection };
+            ch.transforms.push(GTransform::new(i, j, th.cos(), th.sin(), kind));
+        }
+        ch
+    }
+
+    fn random_tchain(rng: &mut Rng64, n: usize, m: usize) -> TChain {
+        let mut ch = TChain::identity(n);
+        for _ in 0..m {
+            let i = rng.below(n - 1);
+            let j = i + 1 + rng.below(n - 1 - i);
+            ch.transforms.push(match rng.below(3) {
+                0 => TTransform::Scaling { i, a: rng.randn().abs() + 0.2 },
+                1 => TTransform::UpperShear { i, j, a: 0.5 * rng.randn() },
+                _ => TTransform::LowerShear { i, j, a: 0.5 * rng.randn() },
+            });
+        }
+        ch
+    }
+
+    fn random_sym(n: usize, seed: u64) -> Mat {
+        let mut rng = Rng64::new(seed);
+        let x = Mat::randn(n, n, &mut rng);
+        &x + &x.transpose()
+    }
+
+    #[test]
+    fn chain_objectives_delegate_bitwise() {
+        // the unification contract: the chains' objective methods and the
+        // shared module compute identical bits on random chains, and both
+        // agree (within rounding) with the defining reconstruction
+        // ‖S − Ū diag(s̄) Ūᵀ‖²_F
+        let mut rng = Rng64::new(9301);
+        for trial in 0..20 {
+            let n = 6 + rng.below(6);
+            let s = random_sym(n, 9400 + trial);
+            let spec: Vec<f64> = (0..n).map(|_| rng.randn()).collect();
+            let gch = random_gchain(&mut rng, n, 3 * n);
+            let shared = g_objective(&gch, &s, &spec);
+            assert_eq!(
+                gch.objective(&s, &spec).to_bits(),
+                shared.to_bits(),
+                "trial {trial}: GChain::objective diverged from the shared metric"
+            );
+            let defn = gch.reconstruct(&spec).fro_dist_sq(&s);
+            assert!(
+                (shared - defn).abs() <= 1e-10 * (1.0 + defn),
+                "trial {trial}: conjugated-frame objective {shared} vs reconstruction {defn}"
+            );
+            let tch = random_tchain(&mut rng, n, 3 * n);
+            assert_eq!(
+                tch.objective(&s, &spec).to_bits(),
+                t_objective(&tch, &s, &spec).to_bits(),
+                "trial {trial}: TChain::objective diverged from the shared metric"
+            );
+        }
+    }
+
+    #[test]
+    fn diag_residual_equals_subtract_then_fro_bitwise() {
+        // the symmetric factorizer's historical formulation: subtract the
+        // spectrum on the diagonal, then take ‖·‖²_F
+        let mut rng = Rng64::new(9302);
+        for trial in 0..20 {
+            let n = 5 + rng.below(7);
+            let w = random_sym(n, 9500 + trial);
+            let spec: Vec<f64> = (0..n).map(|_| rng.randn()).collect();
+            let via_shared = diag_residual_sq(&w, &spec);
+            let mut sub = w.clone();
+            for (i, &sv) in spec.iter().enumerate() {
+                sub[(i, i)] -= sv;
+            }
+            assert_eq!(
+                via_shared.to_bits(),
+                sub.fro_norm_sq().to_bits(),
+                "trial {trial}: accumulation order drifted"
+            );
+        }
+    }
+
+    #[test]
+    fn off_diagonal_is_diag_residual_at_own_diagonal_bitwise() {
+        // the truncated-Jacobi objective is the shared residual with the
+        // spectrum set to the working diagonal — bitwise, diagonal zeros
+        // included
+        let mut rng = Rng64::new(9303);
+        for trial in 0..20 {
+            let n = 4 + rng.below(8);
+            let w = random_sym(n, 9600 + trial);
+            assert_eq!(
+                off_diagonal_sq(&w).to_bits(),
+                diag_residual_sq(&w, &w.diag()).to_bits(),
+                "trial {trial}"
+            );
+        }
+    }
+
+    #[test]
+    fn certificate_bands_recompose_to_fro_err() {
+        let mut rng = Rng64::new(9304);
+        let n = 12;
+        let s = random_sym(n, 9701);
+        let spec: Vec<f64> = (0..n).map(|_| rng.randn()).collect();
+        let ch = random_gchain(&mut rng, n, 4 * n);
+        let cert = certify_g(&ch, &s, &spec, &[3.0, 2.0, 1.5]);
+        assert_eq!(cert.g, ch.len());
+        assert_eq!(cert.trace_tail, vec![3.0, 2.0, 1.5]);
+        let bands_sq: f64 = cert.band_err.iter().map(|b| b * b).sum();
+        assert!(
+            (bands_sq - cert.fro_err * cert.fro_err).abs() < 1e-9 * (1.0 + bands_sq),
+            "band decomposition lost energy: {bands_sq} vs {}",
+            cert.fro_err * cert.fro_err
+        );
+        assert!(cert.rel_err > 0.0 && cert.rel_err.is_finite());
+        // a perfect factorization certifies (numerically) zero error
+        let exact = certify_t(&TChain::identity(n), &Mat::from_diag(&spec), &spec, &[]);
+        assert!(exact.fro_err == 0.0 && exact.rel_err == 0.0);
+        assert!(exact.meets(1e-12));
+    }
+
+    #[test]
+    fn trace_tail_is_capped() {
+        let n = 5;
+        let s = Mat::from_diag(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        let spec = s.diag();
+        let trace: Vec<f64> = (0..20).map(|i| 20.0 - i as f64).collect();
+        let cert = certify_g(&GChain::identity(n), &s, &spec, &trace);
+        assert_eq!(cert.trace_tail.len(), CERT_TRACE_TAIL);
+        assert_eq!(cert.trace_tail, trace[20 - CERT_TRACE_TAIL..].to_vec());
+    }
+
+    #[test]
+    fn band_split_handles_tiny_dimensions() {
+        for n in 1..=5usize {
+            let spec: Vec<f64> = (0..n).map(|i| i as f64).collect();
+            let s = Mat::from_diag(&spec);
+            let cert = certify_g(&GChain::identity(n), &s, &spec, &[]);
+            assert!(cert.band_err.iter().all(|b| *b == 0.0), "n={n}: {:?}", cert.band_err);
+        }
+    }
+}

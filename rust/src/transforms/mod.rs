@@ -32,6 +32,7 @@
 
 pub mod batch;
 mod chain;
+pub mod error;
 mod gtransform;
 pub mod pool;
 pub mod schedule;
@@ -42,6 +43,7 @@ pub use batch::{
     apply_gchain_batch_f32, apply_gchain_batch_f32_t, apply_tchain_batch_f32, SignalBlock,
 };
 pub use chain::{GChain, PlanArrays, TChain};
+pub use error::{certify_g, certify_t, ErrorCertificate};
 pub use gtransform::{GKind, GTransform};
 pub use pool::{global_pool, ExecConfig, WorkerPool};
 pub use schedule::{default_threads, ChainKind, CompiledPlan, ScheduleStats};

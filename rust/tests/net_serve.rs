@@ -17,7 +17,7 @@ use fastes::serve::net::{
 use fastes::serve::{
     Backend, Coordinator, NativeGftBackend, PlanRegistry, ServeConfig, TransformDirection,
 };
-use fastes::transforms::SignalBlock;
+use fastes::transforms::{certify_g, SignalBlock};
 
 fn plan_of(n: usize, seed: u64) -> Arc<Plan> {
     let mut rng = Rng64::new(seed);
@@ -40,6 +40,10 @@ struct Server {
 
 impl Server {
     fn start(plan: &Arc<Plan>, opts: NetServerOptions) -> Server {
+        Self::start_cfg(plan, opts, ServeConfig { max_batch: 4, ..Default::default() })
+    }
+
+    fn start_cfg(plan: &Arc<Plan>, opts: NetServerOptions, config: ServeConfig) -> Server {
         let registry = Arc::new(PlanRegistry::new(8));
         registry.install_default(Arc::clone(plan));
         let p = Arc::clone(plan);
@@ -53,7 +57,7 @@ impl Server {
                     ExecPolicy::Seq,
                 )?) as Box<dyn Backend>)
             },
-            ServeConfig { max_batch: 4, ..Default::default() },
+            config,
             Some(Arc::clone(&registry)),
         )
         .unwrap();
@@ -360,4 +364,127 @@ fn upload_plan_hot_swaps_the_default_route_over_the_wire() {
 
     let m = server.stop();
     assert_eq!(m.errors, 0);
+}
+
+/// Build a certified plan measured against its own reconstruction, so
+/// rel_err is round-off-tiny and passes any realistic error budget.
+fn certified_plan_of(n: usize, seed: u64) -> Arc<Plan> {
+    let mut rng = Rng64::new(seed);
+    let ch = random_gplan(n, 6 * n, &mut rng);
+    let spec: Vec<f64> = (0..n).map(|i| i as f64 + 0.5).collect();
+    let s = ch.reconstruct(&spec);
+    let cert = certify_g(&ch, &s, &spec, &[1.0, 0.5]);
+    Plan::from(&ch).spectrum(spec).certificate(cert).build()
+}
+
+#[test]
+fn unsupported_plan_rejections_and_certificates_on_the_wire() {
+    let n = 10;
+    // the default plan carries no spectrum and no certificate (a v1-style
+    // artifact): kernel filters against it must come back unsupported
+    let plan = plan_of(n, 88);
+    let server = Server::start(&plan, NetServerOptions::default());
+    let mut conn = server.connect();
+    let sig = vec![1.0f32; n];
+
+    let reply = request(
+        &mut conn,
+        &obj(vec![
+            ("op", Json::Str("filter".into())),
+            ("signal", signal_json(&sig)),
+            ("kernel", Json::Str("heat".into())),
+            ("param", Json::f64(0.4)),
+        ]),
+    )
+    .unwrap();
+    assert_eq!(reply.get("ok").and_then(|v| v.as_bool()), Some(false), "{reply:?}");
+    assert_eq!(reply.get("code").and_then(|v| v.as_str()), Some("unsupported_plan"));
+    let msg = reply.get("error").and_then(|v| v.as_str()).unwrap();
+    assert!(msg.contains("spectrum"), "{msg}");
+    assert!(reply.get("retry_after_ms").is_none(), "capability mismatch has no backoff");
+
+    // upload a certified plan; the metrics reply must surface both
+    // residents' certificate state
+    let certified = certified_plan_of(n, 89);
+    let reply = request(
+        &mut conn,
+        &obj(vec![
+            ("op", Json::Str("upload_plan".into())),
+            ("bytes", Json::Str(hex_encode(&certified.to_bytes()))),
+        ]),
+    )
+    .unwrap();
+    assert_eq!(reply.get("ok").and_then(|v| v.as_bool()), Some(true), "{reply:?}");
+
+    let reply = request(&mut conn, &obj(vec![("op", Json::Str("metrics".into()))])).unwrap();
+    let m = reply.get("metrics").expect("metrics object");
+    assert_eq!(m.get("rejected_unsupported_plan").and_then(|v| v.as_u64()), Some(1));
+    let plans = m
+        .get("registry")
+        .and_then(|r| r.get("plans"))
+        .and_then(|v| v.as_arr())
+        .expect("per-plan array");
+    assert_eq!(plans.len(), 2);
+    let key = format!("{:016x}", certified.content_checksum());
+    let cert_entry = plans
+        .iter()
+        .find(|p| p.get("checksum").and_then(|v| v.as_str()) == Some(key.as_str()))
+        .expect("uploaded plan listed");
+    let rel = cert_entry.get("rel_err").and_then(|v| v.as_f64()).expect("certified rel_err");
+    assert!(rel < 1e-10, "self-measured plan must certify at round-off level, got {rel}");
+    assert_eq!(cert_entry.get("cert_g").and_then(|v| v.as_u64()), Some(6 * n as u64));
+    assert_eq!(cert_entry.get("default").and_then(|v| v.as_bool()), Some(false));
+    let default_entry = plans
+        .iter()
+        .find(|p| p.get("default").and_then(|v| v.as_bool()) == Some(true))
+        .expect("default plan listed");
+    assert_eq!(default_entry.get("rel_err"), Some(&Json::Null), "uncertified → null");
+
+    server.stop();
+}
+
+#[test]
+fn max_error_budget_refuses_uncertified_routes_on_the_wire() {
+    let n = 8;
+    let uncertified = plan_of(n, 90);
+    let server = Server::start_cfg(
+        &uncertified,
+        NetServerOptions::default(),
+        ServeConfig { max_batch: 4, max_error: Some(1e-6), ..Default::default() },
+    );
+    let mut conn = server.connect();
+    let sig = vec![0.5f32; n];
+
+    // even a plain forward is refused: the route cannot prove it meets ε
+    let reply = request(
+        &mut conn,
+        &obj(vec![("op", Json::Str("forward".into())), ("signal", signal_json(&sig))]),
+    )
+    .unwrap();
+    assert_eq!(reply.get("code").and_then(|v| v.as_str()), Some("unsupported_plan"));
+    let msg = reply.get("error").and_then(|v| v.as_str()).unwrap();
+    assert!(msg.contains("certificate"), "{msg}");
+
+    // hot-swap in a certified (exact) plan: the same request now serves
+    let certified = certified_plan_of(n, 91);
+    let reply = request(
+        &mut conn,
+        &obj(vec![
+            ("op", Json::Str("upload_plan".into())),
+            ("bytes", Json::Str(hex_encode(&certified.to_bytes()))),
+            ("default", Json::Bool(true)),
+        ]),
+    )
+    .unwrap();
+    assert_eq!(reply.get("ok").and_then(|v| v.as_bool()), Some(true), "{reply:?}");
+    let reply = request(
+        &mut conn,
+        &obj(vec![("op", Json::Str("forward".into())), ("signal", signal_json(&sig))]),
+    )
+    .unwrap();
+    assert_eq!(reply_signal(&reply), seq_reference(&certified, &sig, Direction::Adjoint));
+
+    let m = server.stop();
+    assert_eq!(m.rejected_unsupported_plan, 1);
+    assert_eq!(m.completed, 1);
 }
