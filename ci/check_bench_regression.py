@@ -6,11 +6,13 @@ Usage: check_bench_regression.py BENCH_apply.json ci/bench_snapshot.json
        check_bench_regression.py BENCH_error.json ci/error_snapshot.json
 
 The artifact's top-level `bench` field ("apply" — the default when the
-field is absent — "factor", or "error") selects the comparison: apply
-artifacts gate pooled ns/stage per size, factor artifacts gate ns/step
-per (kind, n, threads) row, error artifacts gate the bake-off's
-certified rel_err per (family, method, g) row. The snapshot must be of
-the same kind.
+field is absent — "factor", "error", or "refactor") selects the
+comparison: apply artifacts gate pooled ns/stage per size, factor
+artifacts gate ns/step per (kind, n, threads) row, error artifacts gate
+the bake-off's certified rel_err per (family, method, g) row, and
+refactor artifacts gate the warm-vs-cold sweeps ratio per (family, n)
+row (warm-starting a drifted graph must keep beating a cold
+refactorization). The snapshot must be of the same kind.
 
 Fails (exit 1) when any compared number regresses more than the
 snapshot's `max_regression` factor — but only once the snapshot is
@@ -95,6 +97,53 @@ def check_error(bench, snap, calibrated, limit):
     return 0
 
 
+def check_refactor(bench, snap, calibrated, limit):
+    """Gate a BENCH_refactor.json: warm-vs-cold sweeps ratio per (family, n).
+
+    The ratio is warm.total_sweeps / cold.total_sweeps for the same
+    drifted graph at the same error budget — below 1.0 means the warm
+    start reached the budget with less work. Both runs are fixed-seed
+    deterministic, so once calibrated the envelope can sit close to
+    1.0x. Independently of calibration, a row whose warm run misses the
+    budget it claims to have met is a hard structural failure.
+    """
+    baseline = snap.get("warm_vs_cold_sweeps", {})
+    failures = []
+    broken = []
+    for row in bench["results"]:
+        key = f"{row['family']}/{row['n']}"
+        ratio = float(row["warm_vs_cold_sweeps"])
+        budget = float(row["budget"])
+        for mode in ("cold", "warm"):
+            if float(row[mode]["rel_err"]) > budget:
+                broken.append(
+                    f"{key}: {mode} run rel_err {float(row[mode]['rel_err']):.4e} "
+                    f"misses its own budget {budget:.4e}"
+                )
+        base = baseline.get(key)
+        if base is None:
+            print(f"{key}: warm/cold sweeps {ratio:.3f} (no baseline for this key — advisory)")
+            continue
+        envelope = float(base) * limit
+        status = "OK" if ratio <= envelope else "REGRESSION"
+        print(
+            f"{key}: warm/cold sweeps {ratio:.3f} vs baseline {float(base):.3f} "
+            f"— envelope <= {envelope:.3f} ({limit:.2f}x) {status}"
+        )
+        if ratio > envelope:
+            failures.append(key)
+    for msg in broken:
+        print(f"ERROR: {msg}")
+    if broken:
+        return 1
+    if failures and calibrated:
+        print(f"warm-vs-cold sweeps ratio regressed beyond {limit:.2f}x for {failures}")
+        return 1
+    if failures:
+        print("regressions observed but snapshot is uncalibrated — advisory only")
+    return 0
+
+
 def main() -> int:
     bench_path, snap_path = sys.argv[1], sys.argv[2]
     snap = json.load(open(snap_path))
@@ -128,6 +177,8 @@ def main() -> int:
         return check_factor(bench, snap, calibrated, limit)
     if bench_kind == "error":
         return check_error(bench, snap, calibrated, limit)
+    if bench_kind == "refactor":
+        return check_refactor(bench, snap, calibrated, limit)
 
     kernel = bench.get("kernel_isa")
     if not kernel:

@@ -24,7 +24,15 @@ then exercises the wire protocol end to end:
   7. `wavelet` with J scales returns the band-major (J+1)*n stack
   8. `topk` returns ascending indices whose values are bitwise the
      analysis coefficients of step 2, dominating every dropped one
-  9. SIGTERM drains gracefully: the process prints "drained:" and
+  9. drift leg: a `refactor` request carrying a drifted matrix (built
+     over the wire as S' = U diag(d) U^T via explicit-response filter
+     requests on the basis vectors, symmetrized in f64) schedules a
+     background warm refactorization; an in-flight `forward` submitted
+     right behind it must drain on a complete plan (bitwise equal to
+     the old plan's reply or the new one's — never a torn mix), and
+     `metrics` must eventually show the swapped default checksum with a
+     certified `rel_err`
+ 10. SIGTERM drains gracefully: the process prints "drained:" and
      exits 0 with every in-flight reply already delivered
 
 Steps 5-8 need the served plan to be a version-2 `.fastplan` carrying
@@ -251,6 +259,74 @@ def main():
             fail(f"metrics report {m['completed']} completed, want >= 7")
         if m["errors"] != 0:
             fail(f"metrics report {m['errors']} errors after spectral ops")
+
+        # ---- drift leg: background warm refactor + zero-downtime swap ----
+        reg = m.get("registry") or {}
+        old_key = reg.get("default_checksum")
+        if old_key is None:
+            fail("drift leg: metrics carry no registry default checksum")
+        # Build a drifted matrix the served chain still nearly
+        # diagonalizes: S' = U diag(d) U^T, one column per
+        # explicit-response filter request on a basis vector, then
+        # symmetrized in f64 (the replies are f32-rounded).
+        d = [1.5 + 0.25 * i for i in range(n)]
+        cols = []
+        for j in range(n):
+            e = [0.0] * n
+            e[j] = 1.0
+            r = request(sock, {"op": "filter", "signal": e, "response": d})
+            if not r.get("ok"):
+                fail(f"drift leg: basis filter request refused: {r}")
+            cols.append(r["signal"])
+        matrix = [
+            (cols[j][i] + cols[i][j]) / 2.0 for i in range(n) for j in range(n)
+        ]
+        sched = request(sock, {"op": "refactor", "matrix": matrix})
+        if not sched.get("ok") or sched.get("status") != "scheduled":
+            fail(f"drift leg: refactor was not scheduled: {sched}")
+        # an in-flight request racing the background swap must drain on a
+        # complete plan: its reply is bitwise the old plan's answer or the
+        # new plan's answer, never a torn mix (y is the old plan's
+        # forward of x from step 2)
+        mid = request(sock, {"op": "forward", "signal": x})
+        if not mid.get("ok") or len(mid["signal"]) != n:
+            fail(f"drift leg: in-flight forward failed during refactor: {mid}")
+        deadline = time.monotonic() + TIMEOUT
+        new_key = new_rel = None
+        while time.monotonic() < deadline:
+            reg = request(sock, {"op": "metrics"})["metrics"]["registry"]
+            key = reg.get("default_checksum")
+            if key and key != old_key:
+                new_key = key
+                for p in reg.get("plans", []):
+                    if p.get("checksum") == key:
+                        new_rel = p.get("rel_err")
+                break
+            time.sleep(0.1)
+        if new_key is None:
+            fail("drift leg: background refactor never swapped the default plan")
+        if new_rel is None or not (0.0 <= new_rel < 1.0):
+            fail(f"drift leg: swapped-in plan has no certified rel_err: {new_rel}")
+        post = request(sock, {"op": "forward", "signal": x})
+        if not post.get("ok"):
+            fail(f"drift leg: post-swap forward refused: {post}")
+        mid_bits = [bits(v) for v in mid["signal"]]
+        old_bits = [bits(v) for v in y]
+        post_bits = [bits(v) for v in post["signal"]]
+        if mid_bits != old_bits and mid_bits != post_bits:
+            fail(
+                "drift leg: in-flight reply matches neither the old plan's "
+                "answer nor the new plan's — torn across the swap"
+            )
+        which = "old" if mid_bits == old_bits else "new"
+        print(
+            f"serve smoke: drift refactor hot-swapped {old_key} -> {new_key} "
+            f"(rel_err {new_rel:.2e}); in-flight reply drained on the {which} plan"
+        )
+
+        m = request(sock, {"op": "metrics"})["metrics"]
+        if m["errors"] != 0:
+            fail(f"metrics report {m['errors']} errors after the drift leg")
         sock.close()
 
         # graceful drain: SIGTERM, clean exit, "drained:" in the log

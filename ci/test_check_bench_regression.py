@@ -30,6 +30,15 @@ gating the bake-off's certified rel_err per family/method/g row) —
   * calibrated + within the envelope            -> pass
   * error artifact against an apply snapshot    -> fail
 
+and the refactor-artifact path (BENCH_refactor.json vs
+refactor_snapshot.json, gating the warm-vs-cold sweeps ratio per
+family/n row) —
+
+  * uncalibrated refactor snapshot              -> advisory (pass)
+  * calibrated + ratio beyond the envelope      -> fail
+  * calibrated + within the envelope            -> pass
+  * a run missing its own budget                -> fail even uncalibrated
+
 Run: python3 ci/test_check_bench_regression.py
 """
 
@@ -121,6 +130,43 @@ def error_bench(rel=0.25):
                 "g": 160,
                 "flops": 960,
                 "rel_err": rel,
+            }
+        ],
+    }
+
+
+def refactor_snapshot(calibrated=False, baseline=None, limit=1.10):
+    return {
+        "bench": "refactor",
+        "calibrated": calibrated,
+        "max_regression": limit,
+        "warm_vs_cold_sweeps": baseline or {},
+    }
+
+
+def refactor_bench(ratio=0.5, warm_rel=0.2, cold_rel=0.2, budget=0.25):
+    def mode(rel, sweeps):
+        return {
+            "g": 96,
+            "sweeps": sweeps,
+            "growth_rounds": 0,
+            "factors_added": 0,
+            "rel_err": rel,
+            "total_s": 0.01,
+        }
+
+    return {
+        "bench": "refactor",
+        "results": [
+            {
+                "family": "community",
+                "n": 48,
+                "budget": budget,
+                "drift_steps": 6,
+                "donor_g": 96,
+                "cold": mode(cold_rel, 4),
+                "warm": mode(warm_rel, 2),
+                "warm_vs_cold_sweeps": ratio,
             }
         ],
     }
@@ -273,6 +319,34 @@ def main() -> int:
             snapshot(),
             1,
             "do not match",
+        ),
+        (
+            "refactor: uncalibrated snapshot stays advisory",
+            refactor_bench(ratio=0.5),
+            refactor_snapshot(),
+            0,
+            "no baseline",
+        ),
+        (
+            "refactor: calibrated ratio regression fails",
+            refactor_bench(ratio=0.9),
+            refactor_snapshot(calibrated=True, baseline={"community/48": 0.5}),
+            1,
+            "REGRESSION",
+        ),
+        (
+            "refactor: calibrated within the envelope passes",
+            refactor_bench(ratio=0.52),
+            refactor_snapshot(calibrated=True, baseline={"community/48": 0.5}),
+            0,
+            "OK",
+        ),
+        (
+            "refactor: a warm run missing its budget fails even uncalibrated",
+            refactor_bench(ratio=0.5, warm_rel=0.4, budget=0.25),
+            refactor_snapshot(),
+            1,
+            "misses its own budget",
         ),
     ]
     failed = 0

@@ -13,9 +13,9 @@ use crate::baselines::{
     factor_orthonormal, greedy_givens, lowrank_error_symmetric, truncated_jacobi,
 };
 use crate::factor::{
-    load_checkpoint, mat_checksum, save_gen_checkpoint, save_sym_checkpoint, CheckpointMeta,
-    FactorExec, GenCheckpoint, GenRunControl, GeneralFactorizer, GeneralOptions, LoadedState,
-    SymCheckpoint, SymFactorizer, SymOptions, SymRunControl,
+    load_checkpoint, mat_checksum, save_gen_checkpoint, save_sym_checkpoint, verify_matrix,
+    CheckpointMeta, FactorExec, GenCheckpoint, GenRunControl, GeneralFactorizer, GeneralOptions,
+    LoadedState, SymCheckpoint, SymFactorizer, SymOptions, SymRunControl,
 };
 use crate::graphs::{self, RealWorldGraph};
 use crate::linalg::{eigh, Mat, Rng64};
@@ -23,8 +23,8 @@ use crate::ops::{FilterOp, SpectralKernel, TopK, WaveletBank};
 use crate::plan::{Direction, ExecPolicy, FastOperator, Plan};
 use crate::runtime::autotune::{self, TuneEffort, TuneProfile, TunedConfig, WallTimer};
 use crate::serve::{
-    net, Backend, Coordinator, NativeGftBackend, PjrtGftBackend, PlanRegistry, ServeConfig,
-    TransformDirection,
+    net, refactor_plan, Backend, Coordinator, NativeGftBackend, PjrtGftBackend, PlanRegistry,
+    RefactorJob, RefactorOptions, RefactorWorker, ServeConfig, TransformDirection,
 };
 use crate::transforms::{certify_g, simd, ExecConfig, GChain, KernelIsa, SignalBlock};
 
@@ -398,9 +398,8 @@ fn factor_resume(a: &Args, base: &str) -> crate::Result<()> {
             } else {
                 &x + &x.transpose()
             };
-            if mat_checksum(&s) != meta.matrix_checksum {
-                bail!("--resume {base}: the regenerated matrix does not match the checkpoint");
-            }
+            verify_matrix(&meta, &s)
+                .map_err(|e| e.context(format!("--resume {base}")))?;
             let opts = SymOptions {
                 max_sweeps: meta.max_sweeps,
                 eps: meta.eps,
@@ -436,9 +435,8 @@ fn factor_resume(a: &Args, base: &str) -> crate::Result<()> {
             maybe_save_plan(a, || f.plan())?;
         }
         LoadedState::Gen(ck) => {
-            if mat_checksum(&x) != meta.matrix_checksum {
-                bail!("--resume {base}: the regenerated matrix does not match the checkpoint");
-            }
+            verify_matrix(&meta, &x)
+                .map_err(|e| e.context(format!("--resume {base}")))?;
             let opts = GeneralOptions {
                 max_sweeps: meta.max_sweeps,
                 eps: meta.eps,
@@ -477,8 +475,143 @@ fn factor_resume(a: &Args, base: &str) -> crate::Result<()> {
     Ok(())
 }
 
+/// `fastes refactor --from PLAN` — warm-start refactorization against a
+/// drifted graph. Regenerates the base graph from `--graph`/`--seed`,
+/// applies `--drift K` deterministic edge updates (`--drift-seed`), then
+/// re-polishes the donor plan's chain against the drifted Laplacian:
+/// the Lemma-1 spectrum and the error certificate are re-measured
+/// against the drifted matrix, never inherited from the artifact. With
+/// `--error-budget EPS` the chain also grows (doubling, capped at
+/// `--max-g`) until the re-measured certificate meets EPS.
+/// `--compare-cold` times a from-scratch budgeted run on the same
+/// drifted matrix so the warm-start saving is visible; `--save-plan`
+/// writes the re-certified artifact.
+pub fn refactor(a: &Args) -> crate::Result<()> {
+    let from = a.get_str("from", "");
+    if from.is_empty() {
+        bail!("refactor needs --from FILE.fastplan (the donor plan to warm-start)");
+    }
+    let donor = Plan::load(&from)?;
+    let n = donor.n();
+    let donor_g = donor.len();
+    println!(
+        "donor {from}: kind={:?} n={n} stages={donor_g} checksum={:016x}",
+        donor.kind(),
+        donor.content_checksum()
+    );
+    let n_flag: usize = a.get("n", n)?;
+    if n_flag != n {
+        bail!("--n {n_flag} conflicts with the donor plan (n={n})");
+    }
+    let seed: u64 = a.get("seed", 1)?;
+    let drift_steps: usize = a.get("drift", 8)?;
+    let drift_seed: u64 = a.get("drift-seed", seed)?;
+    let budget_eps = match a.has("error-budget") {
+        true => {
+            let eps: f64 = a.get("error-budget", 0.0)?;
+            if !(eps.is_finite() && eps > 0.0) {
+                bail!("--error-budget must be a positive relative error (got {eps})");
+            }
+            Some(eps)
+        }
+        false => None,
+    };
+    if a.has("max-g") && budget_eps.is_none() {
+        bail!("--max-g only bounds a budgeted refactor; it needs --error-budget EPS");
+    }
+    let opts = RefactorOptions {
+        budget: budget_eps,
+        max_g: match a.has("max-g") {
+            true => Some(a.get("max-g", 0usize)?.max(1)),
+            false => None,
+        },
+        max_error: None,
+        max_sweeps: a.get("sweeps", RefactorOptions::default().max_sweeps)?,
+        exec: factor_exec_from_args(a)?,
+    };
+
+    // regenerate the base graph the donor was factored from, then drift
+    let mut rng = Rng64::new(seed);
+    let mut graph = build_graph_sized(a, n, &mut rng)?;
+    if graph.n != n {
+        bail!(
+            "--graph {} regenerates n={} vertices, but the donor plan is for n={n}",
+            a.get_str("graph", "community"),
+            graph.n
+        );
+    }
+    let edges_before = graph.num_edges();
+    let updates = graphs::drift(&mut graph, drift_steps, drift_seed);
+    let l = graph.laplacian();
+    println!(
+        "drifted {} graph n={n}: {} edge updates, |E| {edges_before} → {}",
+        a.get_str("graph", "community"),
+        updates.len(),
+        graph.num_edges()
+    );
+
+    let t0 = Instant::now();
+    let r = refactor_plan(&donor, &l, &opts)?;
+    let warm_s = t0.elapsed().as_secs_f64();
+    let met = match budget_eps {
+        Some(eps) if r.certificate.meets(eps) => " (budget met)",
+        Some(_) => " (budget NOT met — g capped)",
+        None => "",
+    };
+    println!(
+        "warm refactor: g={} rel_err={:.6e} fro_err={:.3e} sweeps={} growth_rounds={} \
+         factors_added={} elapsed={warm_s:.3}s{met}",
+        r.g,
+        r.certificate.rel_err,
+        r.certificate.fro_err,
+        r.stats.total_sweeps,
+        r.stats.growth_rounds,
+        r.stats.factors_added
+    );
+
+    if a.has("compare-cold") {
+        let Some(eps) = budget_eps else {
+            bail!("--compare-cold compares iterations-to-budget; it needs --error-budget EPS");
+        };
+        let sym_opts = SymOptions {
+            max_sweeps: opts.max_sweeps,
+            exec: opts.exec,
+            ..Default::default()
+        };
+        let g_start = budget(a.get("alpha", 2)?, n);
+        let g_max = opts.max_g.unwrap_or_else(|| donor_g.saturating_mul(4).max(1));
+        let t0 = Instant::now();
+        let (cf, ccert, cstats) =
+            SymFactorizer::run_to_budget_stats(&l, eps, g_start, g_max.max(g_start), sym_opts);
+        let cold_s = t0.elapsed().as_secs_f64();
+        println!(
+            "cold baseline: g={} rel_err={:.6e} sweeps={} growth_rounds={} elapsed={cold_s:.3}s",
+            cf.chain.len(),
+            ccert.rel_err,
+            cstats.total_sweeps,
+            cstats.growth_rounds
+        );
+        println!(
+            "warm vs cold: {}/{} sweeps ({:.2}x), {:.2}x wall-clock",
+            r.stats.total_sweeps,
+            cstats.total_sweeps,
+            cstats.total_sweeps as f64 / r.stats.total_sweeps.max(1) as f64,
+            cold_s / warm_s.max(1e-12)
+        );
+    }
+
+    maybe_save_plan(a, || Arc::clone(&r.plan))?;
+    Ok(())
+}
+
 fn build_graph(a: &Args, rng: &mut Rng64) -> crate::Result<graphs::Graph> {
     let n: usize = a.get("n", 128)?;
+    build_graph_sized(a, n, rng)
+}
+
+/// [`build_graph`] with the vertex count pinned by the caller instead of
+/// `--n` (the `refactor` command takes it from the donor plan).
+fn build_graph_sized(a: &Args, n: usize, rng: &mut Rng64) -> crate::Result<graphs::Graph> {
     let name = a.get_str("graph", "community");
     let scale: f64 = a.get("scale", 0.25)?;
     Ok(match name.as_str() {
@@ -715,6 +848,73 @@ pub fn filter(a: &Args) -> crate::Result<()> {
     Ok(())
 }
 
+/// Parse a `--watch-graph` file: JSON `{"matrix":[..n·n..]}` holding the
+/// drifted matrix row-major (same shape as the wire `refactor` op).
+fn load_watch_matrix(path: &str) -> crate::Result<Mat> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading --watch-graph {path}: {e}"))?;
+    let v = net::Json::parse(&text)?;
+    let items = v
+        .get("matrix")
+        .and_then(|m| m.as_arr())
+        .ok_or_else(|| anyhow::anyhow!("{path} needs a row-major \"matrix\" array"))?;
+    let mut data = Vec::with_capacity(items.len());
+    for item in items {
+        match item.as_f64() {
+            Some(x) if x.is_finite() => data.push(x),
+            _ => bail!("{path}: \"matrix\" must hold finite numbers"),
+        }
+    }
+    let n = (data.len() as f64).sqrt().round() as usize;
+    if n == 0 || n * n != data.len() {
+        bail!("{path}: \"matrix\" has {} entries, not a square n×n count", data.len());
+    }
+    Ok(Mat::from_rows(n, n, &data))
+}
+
+/// Poll a `--watch-graph` file and enqueue a warm-start refactorization
+/// whenever its modification time changes. Jobs are asynchronous: the
+/// worker warm-starts from the resident default plan, re-certifies
+/// against the drifted matrix, and swaps (or refuses under
+/// `--max-error`) while the server keeps serving.
+fn spawn_graph_watcher(
+    path: String,
+    worker: Arc<RefactorWorker>,
+    opts: RefactorOptions,
+    stop: Arc<std::sync::atomic::AtomicBool>,
+) -> std::thread::JoinHandle<()> {
+    std::thread::Builder::new()
+        .name("fastes-watch-graph".into())
+        .spawn(move || {
+            let mtime_of = |p: &str| {
+                std::fs::metadata(p).and_then(|m| m.modified()).ok()
+            };
+            let mut last = mtime_of(&path);
+            while !stop.load(std::sync::atomic::Ordering::SeqCst) {
+                std::thread::sleep(std::time::Duration::from_millis(200));
+                let now = mtime_of(&path);
+                if now.is_some() && now != last {
+                    last = now;
+                    match load_watch_matrix(&path) {
+                        Ok(matrix) => {
+                            let job = RefactorJob {
+                                matrix,
+                                from: None,
+                                opts: opts.clone(),
+                                reply: None,
+                            };
+                            if !worker.submit(job) {
+                                return;
+                            }
+                        }
+                        Err(e) => eprintln!("watch-graph: {e:#}"),
+                    }
+                }
+            }
+        })
+        .expect("spawn graph watcher")
+}
+
 /// `fastes serve` — serve batched GFT requests through the coordinator
 /// and report latency/throughput. The operator comes either from an
 /// in-process factorization (default: a community-graph Laplacian) or
@@ -859,6 +1059,34 @@ pub fn serve(a: &Args) -> crate::Result<()> {
             if plan_dir.is_empty() { Vec::new() } else { vec![PathBuf::from(&plan_dir)] };
         let registry = Arc::new(PlanRegistry::with_search_dirs(registry_cap, search_dirs));
         let default_key = registry.install_default(Arc::clone(&plan));
+        // Background warm-start refactorization: wire `refactor` requests
+        // and `--watch-graph` file events re-polish the resident chain
+        // against a drifted matrix and atomically swap the default plan
+        // while in-flight batches drain on the old one.
+        let refactor_worker = Arc::new(RefactorWorker::start(Arc::clone(&registry)));
+        let watch_graph = a.get_str("watch-graph", "");
+        let watch_stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let watch_handle = if watch_graph.is_empty() {
+            None
+        } else {
+            let refactor_budget = match a.has("refactor-budget") {
+                true => {
+                    let eps: f64 = a.get("refactor-budget", 0.0)?;
+                    if !(eps.is_finite() && eps > 0.0) {
+                        bail!("--refactor-budget must be a positive relative error (got {eps})");
+                    }
+                    Some(eps)
+                }
+                false => None,
+            };
+            println!("watching {watch_graph} for drifted matrices");
+            Some(spawn_graph_watcher(
+                watch_graph,
+                Arc::clone(&refactor_worker),
+                RefactorOptions { budget: refactor_budget, max_error, ..Default::default() },
+                Arc::clone(&watch_stop),
+            ))
+        };
         let p = Arc::clone(&plan);
         let pol = policy.clone();
         let tuned = tuned_for_backend;
@@ -898,7 +1126,15 @@ pub fn serve(a: &Args) -> crate::Result<()> {
         std::io::stdout().flush().ok();
         net::install_termination_handler();
         let shutdown = Arc::new(std::sync::atomic::AtomicBool::new(false));
-        let m = net::serve(listener, coordinator, net::NetServerOptions::default(), shutdown)?;
+        let net_opts = net::NetServerOptions {
+            refactor: Some(Arc::clone(&refactor_worker)),
+            ..Default::default()
+        };
+        let m = net::serve(listener, coordinator, net_opts, shutdown)?;
+        watch_stop.store(true, std::sync::atomic::Ordering::SeqCst);
+        if let Some(h) = watch_handle {
+            let _ = h.join();
+        }
         println!("drained: {}", m.line());
         return Ok(());
     }
@@ -1165,6 +1401,9 @@ pub fn bench(a: &Args) -> crate::Result<()> {
     }
     if a.has("filter") {
         return bench_filter(a);
+    }
+    if a.has("refactor") {
+        return bench_refactor(a);
     }
     let sizes = a.get_list("sizes", &[256, 512, 1024])?;
     let batch: usize = a.get("batch", 64)?;
@@ -1518,6 +1757,131 @@ fn bench_factor(a: &Args) -> crate::Result<()> {
         let json = format!(
             "{{\n  \"bench\": \"factor\",\n  \"seed\": {seed},\n  \"alpha\": {alpha},\n  \
              \"sweeps\": {sweeps},\n  \"threads\": [{threads_json}],\n  \
+             \"results\": [\n{}\n  ]\n}}\n",
+            entries.join(",\n")
+        );
+        std::fs::write(&out_path, json)
+            .map_err(|e| anyhow::anyhow!("cannot write {out_path}: {e}"))?;
+        println!("wrote {out_path}");
+    }
+    Ok(())
+}
+
+/// One `BENCH_refactor.json` start-mode object (`"cold"` / `"warm"`).
+fn bench_refactor_mode(
+    g: usize,
+    rel: f64,
+    stats: &crate::factor::BudgetRunStats,
+    secs: f64,
+) -> String {
+    format!(
+        "{{\"g\": {g}, \"sweeps\": {}, \"growth_rounds\": {}, \"factors_added\": {}, \
+         \"rel_err\": {rel:.6e}, \"total_s\": {secs:.6}}}",
+        stats.total_sweeps, stats.growth_rounds, stats.factors_added
+    )
+}
+
+/// `fastes bench --refactor` — warm-vs-cold iterations-to-budget on
+/// drifted graphs. Per (family, n): cold-factor the base Laplacian to
+/// `--error-budget` (that run's chain is the donor), apply `--drift K`
+/// deterministic edge updates, then reach the same budget on the
+/// drifted Laplacian both cold (from scratch) and warm (donor chain
+/// re-polished via [`SymFactorizer::run_to_budget_warm`]). The warm row
+/// should hit budget in measurably fewer sweeps; `--json` writes the
+/// rows to `BENCH_refactor.json` (or `--out PATH`) so the warm-start
+/// advantage is tracked like the other bench artifacts.
+fn bench_refactor(a: &Args) -> crate::Result<()> {
+    let sizes = a.get_list("sizes", &[48, 64])?;
+    let alpha: usize = a.get("alpha", 2)?;
+    let seed: u64 = a.get("seed", 1)?;
+    let sweeps: usize = a.get("sweeps", 2)?;
+    let drift_steps: usize = a.get("drift", 6)?;
+    let eps: f64 = a.get("error-budget", 0.25)?;
+    if !(eps.is_finite() && eps > 0.0) {
+        bail!("--error-budget must be a positive relative error (got {eps})");
+    }
+    let fams_raw = a.get_str("families", "community,er");
+    let families: Vec<String> = fams_raw
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    if families.is_empty() {
+        bail!("--families must name at least one graph family (got '{fams_raw}')");
+    }
+    let exec = factor_exec_from_args(a)?;
+    let sym_opts = SymOptions { max_sweeps: sweeps, exec, ..Default::default() };
+    let mut entries = Vec::new();
+    for (fi, family) in families.iter().enumerate() {
+        for &n in &sizes {
+            if n < 2 {
+                bail!("--sizes entries must be ≥ 2 (got {n})");
+            }
+            // per-(family, size) deterministic stream so rows can be
+            // re-run independently
+            let mut rng = Rng64::new(seed ^ ((fi as u64 + 1) << 32) ^ ((n as u64) << 20));
+            let mut graph = match family.as_str() {
+                "community" => graphs::community(n, &mut rng),
+                "er" | "erdos-renyi" => graphs::erdos_renyi(n, 0.3, &mut rng),
+                "sensor" => graphs::sensor(n, &mut rng),
+                other => bail!("--families supports community|er|sensor (got {other})"),
+            };
+            let g_start = budget(alpha, n);
+            let g_max = (n * (n - 1) / 2).max(g_start);
+            // donor: cold run against the pre-drift Laplacian
+            let l0 = graph.laplacian();
+            let (donor, _, _) =
+                SymFactorizer::run_to_budget_stats(&l0, eps, g_start, g_max, sym_opts.clone());
+            let updates = graphs::drift(&mut graph, drift_steps, seed ^ ((n as u64) << 8));
+            let l1 = graph.laplacian();
+            // cold: same budgeted procedure from scratch on the drifted
+            // matrix — the baseline the warm start must beat
+            let t0 = Instant::now();
+            let (cf, ccert, cstats) =
+                SymFactorizer::run_to_budget_stats(&l1, eps, g_start, g_max, sym_opts.clone());
+            let cold_s = t0.elapsed().as_secs_f64();
+            // warm: donor chain re-polished against the drifted matrix
+            let t0 = Instant::now();
+            let (wf, wcert, wstats) = SymFactorizer::run_to_budget_warm(
+                &l1,
+                donor.chain.clone(),
+                eps,
+                g_max,
+                sym_opts.clone(),
+            );
+            let warm_s = t0.elapsed().as_secs_f64();
+            let ratio = wstats.total_sweeps as f64 / cstats.total_sweeps.max(1) as f64;
+            println!(
+                "{family} n={n} drift={} budget={eps:.3e}: cold g={} sweeps={} \
+                 rel={:.4} {cold_s:.3}s | warm g={} sweeps={} rel={:.4} {warm_s:.3}s \
+                 ({ratio:.2}x sweeps)",
+                updates.len(),
+                cf.chain.len(),
+                cstats.total_sweeps,
+                ccert.rel_err,
+                wf.chain.len(),
+                wstats.total_sweeps,
+                wcert.rel_err
+            );
+            entries.push(format!(
+                "    {{\"family\": \"{family}\", \"n\": {n}, \"budget\": {eps:.6e}, \
+                 \"drift_steps\": {}, \"donor_g\": {}, \"cold\": {}, \"warm\": {}, \
+                 \"warm_vs_cold_sweeps\": {ratio:.4}}}",
+                updates.len(),
+                donor.chain.len(),
+                bench_refactor_mode(cf.chain.len(), ccert.rel_err, &cstats, cold_s),
+                bench_refactor_mode(wf.chain.len(), wcert.rel_err, &wstats, warm_s)
+            ));
+        }
+    }
+    if a.has("json") {
+        let out_path = a.get_str("out", "BENCH_refactor.json");
+        let fams_json =
+            families.iter().map(|f| format!("\"{f}\"")).collect::<Vec<_>>().join(", ");
+        let json = format!(
+            "{{\n  \"bench\": \"refactor\",\n  \"seed\": {seed},\n  \"alpha\": {alpha},\n  \
+             \"sweeps\": {sweeps},\n  \"drift\": {drift_steps},\n  \
+             \"error_budget\": {eps:.6e},\n  \"families\": [{fams_json}],\n  \
              \"results\": [\n{}\n  ]\n}}\n",
             entries.join(",\n")
         );

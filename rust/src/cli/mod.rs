@@ -9,6 +9,10 @@
 //!   `--checkpoint BASE` persists resumable `.fastplan`/`.fastckpt`
 //!   pairs and `--resume BASE` continues a halted/killed run,
 //!   reproducing the uninterrupted result bitwise).
+//! * `refactor` — warm-start refactorization for drifted graphs: replay
+//!   a saved plan's chain against a drifted Laplacian, re-measure the
+//!   Lemma-1 spectrum and error certificate against the drifted matrix
+//!   (never inherited), optionally grow to `--error-budget`.
 //! * `gft` — build a graph, factor its Laplacian, report the fast-GFT
 //!   accuracy and flop counts.
 //! * `filter` — run the fused spectral-operator workloads: a kernel
@@ -114,6 +118,7 @@ pub fn run(args: Args) -> crate::Result<()> {
     match args.command.as_str() {
         "repro" => figures::run(&args),
         "factor" => commands::factor(&args),
+        "refactor" => commands::refactor(&args),
         "gft" => commands::gft(&args),
         "filter" => commands::filter(&args),
         "serve" => commands::serve(&args),
@@ -160,6 +165,22 @@ COMMANDS
                        then writes a v3 .fastplan carrying the error
                        certificate) [--max-g G]
                        [--save-plan FILE.fastplan]
+  refactor             warm-start refactorization for a drifted graph
+                       --from FILE.fastplan  (donor plan; its chain seeds
+                       the run, but spectrum + certificate are
+                       re-measured against the drifted matrix)
+                       [--graph G] [--seed S]  (regenerate the base
+                       graph; n comes from the donor plan)
+                       [--drift K] [--drift-seed D]  (apply K
+                       deterministic edge add/remove/reweight updates)
+                       [--error-budget EPS] [--max-g G]  (grow the chain
+                       until the re-measured certificate meets EPS)
+                       [--sweeps K] [--threads T] [--factor-min-work W]
+                       [--compare-cold]  (also run the cold budgeted
+                       baseline on the drifted matrix and report the
+                       sweeps/wall-clock saving)
+                       [--save-plan FILE.fastplan]  (v3 artifact with the
+                       re-measured certificate)
   gft                  fast GFT of a graph Laplacian
                        [--graph community|er|sensor|ring|masked-grid|
                         minnesota|protein|email|facebook]
@@ -205,7 +226,15 @@ COMMANDS
                        {checksum:016x}.fastplan artifacts on demand)
                        [--max-error EPS]  (refuse to route to plans whose
                        .fastplan error certificate exceeds EPS, or that
-                       carry none — typed unsupported_plan rejection)
+                       carry none — typed unsupported_plan rejection;
+                       also refuses hot-swapping a refactored plan whose
+                       re-measured certificate misses EPS)
+                       [--watch-graph FILE]  (poll FILE for a drifted
+                       matrix — JSON {\"matrix\":[..n*n..]} — and
+                       warm-refactor + hot-swap the default plan in the
+                       background; --listen only)
+                       [--refactor-budget EPS]  (grow warm-started chains
+                       until the re-measured certificate meets EPS)
   schedule             level-schedule a chain, report layers/depth/
                        superstages and time sequential vs spawn vs pooled
                        apply [--n N] [--alpha A] [--batch B] [--threads T]
@@ -230,6 +259,11 @@ COMMANDS
                        against the unfused adjoint+scale+forward route,
                        seq and pooled; --json stamps the fused-vs-unfused
                        ns/stage rows into BENCH_apply.json)
+                       [--refactor]  (warm-vs-cold iterations-to-budget
+                       on drifted graphs: cold-factor the base Laplacian,
+                       drift it, reach --error-budget cold vs warm-start;
+                       writes BENCH_refactor.json; [--families f,g]
+                       [--drift K] [--error-budget EPS])
   bakeoff              factorizer bake-off on the flops-vs-error frontier:
                        givens (ours) vs greedy-givens vs jacobi vs
                        direct-U vs flop-matched low-rank, per graph

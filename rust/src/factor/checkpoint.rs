@@ -66,6 +66,51 @@ pub struct CheckpointMeta {
     pub matrix_checksum: u64,
 }
 
+/// Why a resume refused to proceed even though the checkpoint pair
+/// itself loaded cleanly — i.e. the *problem* is wrong, not the
+/// artifact. Artifact damage (truncation, checksum mismatch, version
+/// skew) keeps its existing untyped load errors; this type exists so
+/// callers (and `fastes factor --resume`) can tell "your graph drifted"
+/// apart from "your file is corrupt" and point at `fastes refactor`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ResumeError {
+    /// The regenerated problem matrix's FNV fingerprint does not match
+    /// the one stamped into the sidecar: the matrix changed under the
+    /// checkpoint (graph drifted), so resuming would bitwise-diverge.
+    MatrixDrift {
+        /// Fingerprint the sidecar was written against.
+        expected: u64,
+        /// Fingerprint of the matrix regenerated now.
+        actual: u64,
+    },
+}
+
+impl std::fmt::Display for ResumeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ResumeError::MatrixDrift { expected, actual } => write!(
+                f,
+                "problem matrix changed (graph drifted — use `fastes refactor` to warm-start \
+                 against the new matrix instead of resuming): checkpoint was written against \
+                 matrix {expected:016x}, regenerated matrix is {actual:016x}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ResumeError {}
+
+/// Check a regenerated problem matrix against the fingerprint in a
+/// loaded sidecar. Returns [`ResumeError::MatrixDrift`] (typed,
+/// downcastable) on mismatch.
+pub fn verify_matrix(meta: &CheckpointMeta, m: &crate::linalg::Mat) -> crate::Result<()> {
+    let actual = mat_checksum(m);
+    if actual != meta.matrix_checksum {
+        return Err(ResumeError::MatrixDrift { expected: meta.matrix_checksum, actual }.into());
+    }
+    Ok(())
+}
+
 /// The factorizer-state half of a loaded checkpoint.
 #[derive(Clone, Debug)]
 pub enum LoadedState {
@@ -474,6 +519,53 @@ mod tests {
         std::fs::write(&p, &text).unwrap();
         let err = load_checkpoint(&base).unwrap_err();
         assert!(format!("{err:#}").contains("checksum mismatch"), "{err:#}");
+    }
+
+    #[test]
+    fn matrix_drift_is_a_typed_error_distinct_from_corruption() {
+        let mut rng = Rng64::new(7302);
+        let x = Mat::randn(12, 12, &mut rng);
+        let s = &x + &x.transpose();
+        let mut meta = sample_meta();
+        meta.matrix_checksum = mat_checksum(&s);
+
+        // unchanged matrix verifies cleanly
+        verify_matrix(&meta, &s).unwrap();
+
+        // a drifted matrix produces the typed, downcastable error with
+        // both fingerprints and the refactor hint
+        let mut drifted = s.clone();
+        drifted[(0, 1)] += 0.5;
+        drifted[(1, 0)] += 0.5;
+        let err = verify_matrix(&meta, &drifted).unwrap_err();
+        let typed = err
+            .downcast_ref::<ResumeError>()
+            .expect("matrix drift must surface as ResumeError");
+        let ResumeError::MatrixDrift { expected, actual } = typed;
+        assert_eq!(*expected, meta.matrix_checksum);
+        assert_eq!(*actual, mat_checksum(&drifted));
+        let msg = format!("{err:#}");
+        assert!(msg.contains("graph drifted"), "{msg}");
+        assert!(msg.contains("fastes refactor"), "{msg}");
+    }
+
+    #[test]
+    fn corruption_is_not_a_resume_error() {
+        // artifact damage keeps its own (untyped) error shape — a caller
+        // matching on ResumeError must never catch a corrupt sidecar
+        let base = tmp_base("sym-corrupt-vs-drift");
+        let ck = capture_sym_checkpoint();
+        save_sym_checkpoint(&base, &sample_meta(), &ck).unwrap();
+        let p = sidecar_path(&base);
+        let mut text = std::fs::read_to_string(&p).unwrap();
+        let pat = "\"spectrum_bits\": [\"";
+        let at = text.find(pat).unwrap() + pat.len();
+        let repl = if &text[at..at + 1] == "0" { "1" } else { "0" };
+        text.replace_range(at..at + 1, repl);
+        std::fs::write(&p, &text).unwrap();
+        let err = load_checkpoint(&base).unwrap_err();
+        assert!(err.downcast_ref::<ResumeError>().is_none(), "corruption must stay untyped");
+        assert!(format!("{err:#}").contains("checksum mismatch"));
     }
 
     #[test]

@@ -216,6 +216,49 @@ impl<'a> GeneralFactorizer<'a> {
         self.drive(None, Some(chain), &mut GenRunControl::default())
     }
 
+    /// Warm start against a (possibly drifted) matrix: replay the donor
+    /// chain as an in-init checkpoint so the greedy initializer can
+    /// append factors up to `m` and the sweeps re-polish — the general
+    /// mirror of [`SymFactorizer::run_with_chain`](super::SymFactorizer::
+    /// run_with_chain). Unlike [`run_with_chain`](Self::run_with_chain)
+    /// (which polishes at fixed length with the raw-diagonal spectrum),
+    /// the starting spectrum here is the Lemma-2 refresh of the donor
+    /// chain against *this* matrix — never a donor plan's stale
+    /// spectrum — matching what [`run_to_budget`](Self::run_to_budget)
+    /// carries between growth rounds. Fresh init/sweep bookkeeping, so
+    /// the sweep stop rule sees only this run's deltas.
+    pub fn run_with_chain_warm(self, chain: TChain) -> GeneralFactorization {
+        self.run_with_chain_warm_controlled(chain, &mut GenRunControl::default())
+    }
+
+    /// [`run_with_chain_warm`](Self::run_with_chain_warm) with
+    /// checkpoint emission / early halt.
+    pub fn run_with_chain_warm_controlled(
+        self,
+        chain: TChain,
+        ctrl: &mut GenRunControl,
+    ) -> GeneralFactorization {
+        assert_eq!(chain.n, self.c.rows(), "donor chain dimension mismatch");
+        let spectrum = match &self.opts.spectrum {
+            SpectrumRule::Update => lemma2_spectrum_exec(self.c, &chain, &self.opts.exec)
+                .unwrap_or_else(|| self.initial_spectrum()),
+            _ => self.initial_spectrum(),
+        };
+        let steps_done = chain.len();
+        let ck = GenCheckpoint {
+            chain,
+            spectrum,
+            // fresh bookkeeping: a donor trace would trip the sweep stop
+            // rule on stale deltas before the drifted matrix is polished
+            init_objective: None,
+            objective_trace: Vec::new(),
+            sweeps_run: 0,
+            steps_done,
+            in_init: true,
+        };
+        self.drive(Some(ck), None, ctrl)
+    }
+
     /// Grow `m` until the measured relative Frobenius error meets
     /// `budget`, or `m_max` is reached, or the greedy initializer runs
     /// out of improving factors — the general-case mirror of
@@ -232,14 +275,65 @@ impl<'a> GeneralFactorizer<'a> {
         m_max: usize,
         opts: GeneralOptions,
     ) -> (GeneralFactorization, crate::transforms::ErrorCertificate) {
+        let (f, cert, _) = Self::run_to_budget_stats(c, budget, m_start, m_max, opts);
+        (f, cert)
+    }
+
+    /// [`run_to_budget`](Self::run_to_budget) returning the cumulative
+    /// work ([`BudgetRunStats`](super::BudgetRunStats)) alongside the
+    /// result — the cold-start side of the warm-vs-cold comparison.
+    pub fn run_to_budget_stats(
+        c: &Mat,
+        budget: f64,
+        m_start: usize,
+        m_max: usize,
+        opts: GeneralOptions,
+    ) -> (GeneralFactorization, crate::transforms::ErrorCertificate, super::BudgetRunStats) {
         assert!(budget.is_finite() && budget > 0.0, "error budget must be positive");
         assert!(m_start >= 1 && m_max >= m_start, "need 1 ≤ m_start ≤ m_max");
+        let f = GeneralFactorizer::new(c, m_start, opts.clone()).run();
+        Self::grow_to_budget(c, f, budget, m_start, m_max, 0, opts)
+    }
+
+    /// Warm-started [`run_to_budget`](Self::run_to_budget): seed the
+    /// growth loop with a donor chain replayed against the (possibly
+    /// drifted) `c` — Lemma-2 spectrum recomputed against `c`, fresh
+    /// bookkeeping — then grow `m` until the certificate meets `budget`.
+    pub fn run_to_budget_warm(
+        c: &Mat,
+        donor: TChain,
+        budget: f64,
+        m_max: usize,
+        opts: GeneralOptions,
+    ) -> (GeneralFactorization, crate::transforms::ErrorCertificate, super::BudgetRunStats) {
+        assert!(budget.is_finite() && budget > 0.0, "error budget must be positive");
+        let m_start = donor.len().max(1);
+        let m_max = m_max.max(m_start);
+        let base_len = donor.len();
+        let f = GeneralFactorizer::new(c, m_start, opts.clone()).run_with_chain_warm(donor);
+        Self::grow_to_budget(c, f, budget, m_start, m_max, base_len, opts)
+    }
+
+    fn grow_to_budget(
+        c: &Mat,
+        mut f: GeneralFactorization,
+        budget: f64,
+        m_start: usize,
+        m_max: usize,
+        base_len: usize,
+        opts: GeneralOptions,
+    ) -> (GeneralFactorization, crate::transforms::ErrorCertificate, super::BudgetRunStats) {
         let mut m = m_start;
-        let mut f = GeneralFactorizer::new(c, m, opts.clone()).run();
+        let mut stats = super::BudgetRunStats {
+            growth_rounds: 0,
+            total_sweeps: f.sweeps_run,
+            factors_added: 0,
+        };
         loop {
             let cert = f.certificate(c);
             if cert.meets(budget) || m >= m_max || f.chain.len() < m {
-                return (f, cert);
+                stats.factors_added = f.chain.len().saturating_sub(base_len);
+                return (f, cert, stats);
             }
             m = m.saturating_mul(2).min(m_max);
             let ck = GenCheckpoint {
@@ -253,6 +347,8 @@ impl<'a> GeneralFactorizer<'a> {
             };
             f = GeneralFactorizer::new(c, m, opts.clone())
                 .resume(ck, &mut GenRunControl::default());
+            stats.growth_rounds += 1;
+            stats.total_sweeps += f.sweeps_run;
         }
     }
 

@@ -41,14 +41,16 @@ pub mod parallel;
 pub mod symmetric;
 
 pub use checkpoint::{
-    load_checkpoint, mat_checksum, save_gen_checkpoint, save_sym_checkpoint, CheckpointMeta,
-    LoadedState,
+    load_checkpoint, mat_checksum, save_gen_checkpoint, save_sym_checkpoint, verify_matrix,
+    CheckpointMeta, LoadedState, ResumeError,
 };
 pub use general::{
     GenCheckpoint, GenRunControl, GeneralFactorization, GeneralFactorizer, GeneralOptions,
 };
 pub use parallel::FactorExec;
-pub use symmetric::{SymCheckpoint, SymFactorization, SymFactorizer, SymOptions, SymRunControl};
+pub use symmetric::{
+    BudgetRunStats, SymCheckpoint, SymFactorization, SymFactorizer, SymOptions, SymRunControl,
+};
 
 /// How the spectrum estimate is produced and maintained (paper Algorithm 1
 /// input "update rule").

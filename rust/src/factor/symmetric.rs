@@ -130,6 +130,22 @@ impl SymFactorization {
     }
 }
 
+/// Cumulative work of a budgeted (possibly warm-started) run, for the
+/// warm-vs-cold comparison in `bench --refactor`: `growth_rounds`
+/// counts the `g`-doublings after the first round, `total_sweeps` sums
+/// polish sweeps across all rounds, and `factors_added` counts factors
+/// appended beyond the starting chain (the whole chain for a cold
+/// start, only the growth beyond the donor for a warm start).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct BudgetRunStats {
+    /// `g`-doubling rounds after the initial run.
+    pub growth_rounds: usize,
+    /// Polish sweeps summed over every round.
+    pub total_sweeps: usize,
+    /// Factors appended beyond the starting chain.
+    pub factors_added: usize,
+}
+
 /// A resumable snapshot of a symmetric factorization in progress.
 ///
 /// RNG-free and exact: together with the same input matrix, budget and
@@ -219,6 +235,56 @@ impl<'a> SymFactorizer<'a> {
         self.drive(Some(ck), ctrl)
     }
 
+    /// Warm start: re-polish an existing chain against *this*
+    /// factorizer's matrix — the symmetric counterpart of
+    /// [`GeneralFactorizer::run_with_chain`](super::GeneralFactorizer::run_with_chain),
+    /// and the entry point for refactorizing after a graph drift (the
+    /// coordinate minimizers accept any initialization, so the donor
+    /// chain is a legal starting point for the drifted `S′`).
+    ///
+    /// The donor chain is replayed as an in-init checkpoint whose
+    /// spectrum is re-derived from *this* matrix — for the `'update'`
+    /// rule the Lemma-1 diagonal `diag(ŪᵀS′Ū)`, never the donor plan's
+    /// stale spectrum — so the greedy initializer can append factors up
+    /// to `g` (a `g` at or below the donor length only re-polishes) and
+    /// the sweeps then re-polish every factor. Init/sweep bookkeeping
+    /// starts fresh (no donor objective trace), so the sweep stop rule
+    /// sees only this run's deltas. Bitwise-deterministic at any thread
+    /// count, like every other entry point.
+    pub fn run_with_chain(self, chain: GChain) -> SymFactorization {
+        self.run_with_chain_controlled(chain, &mut SymRunControl::default())
+    }
+
+    /// [`run_with_chain`](Self::run_with_chain) with checkpoint
+    /// emission / early halt.
+    pub fn run_with_chain_controlled(
+        self,
+        chain: GChain,
+        ctrl: &mut SymRunControl,
+    ) -> SymFactorization {
+        assert_eq!(chain.n, self.s.rows(), "donor chain dimension mismatch");
+        let spectrum = if matches!(self.opts.spectrum, SpectrumRule::Update) {
+            // bitwise-identical to the diagonal the drive tracks while
+            // replaying the donor prefix (same reversed-order conjugation)
+            conjugated(self.s, &chain).diag()
+        } else {
+            initial_spectrum(self.s, &self.opts.spectrum)
+        };
+        let steps_done = chain.len();
+        let ck = SymCheckpoint {
+            chain,
+            spectrum,
+            // fresh bookkeeping: a donor trace would trip the sweep stop
+            // rule on stale deltas before the drifted matrix is polished
+            init_objective: None,
+            objective_trace: Vec::new(),
+            sweeps_run: 0,
+            steps_done,
+            in_init: true,
+        };
+        self.drive(Some(ck), ctrl)
+    }
+
     /// Grow `g` until the measured relative Frobenius error meets
     /// `budget`, or `g_max` is reached, or the greedy initializer runs
     /// out of improving factors.
@@ -243,17 +309,69 @@ impl<'a> SymFactorizer<'a> {
         g_max: usize,
         opts: SymOptions,
     ) -> (SymFactorization, crate::transforms::ErrorCertificate) {
+        let (f, cert, _) = Self::run_to_budget_stats(s, budget, g_start, g_max, opts);
+        (f, cert)
+    }
+
+    /// [`run_to_budget`](Self::run_to_budget) returning the cumulative
+    /// work ([`BudgetRunStats`]) alongside the result — the cold-start
+    /// side of the warm-vs-cold comparison in `bench --refactor`.
+    pub fn run_to_budget_stats(
+        s: &Mat,
+        budget: f64,
+        g_start: usize,
+        g_max: usize,
+        opts: SymOptions,
+    ) -> (SymFactorization, crate::transforms::ErrorCertificate, BudgetRunStats) {
         assert!(budget.is_finite() && budget > 0.0, "error budget must be positive");
         assert!(g_start >= 1 && g_max >= g_start, "need 1 ≤ g_start ≤ g_max");
+        let f = SymFactorizer::new(s, g_start, opts.clone()).run();
+        Self::grow_to_budget(s, f, budget, g_start, g_max, 0, opts)
+    }
+
+    /// Warm-started [`run_to_budget`](Self::run_to_budget): seed the
+    /// growth loop with an existing (donor) chain instead of a cold run.
+    /// The first round replays the donor against the (possibly drifted)
+    /// `s` via [`run_with_chain`](Self::run_with_chain) — recomputing
+    /// the Lemma-1 spectrum against `s` — then doubles `g` through the
+    /// same checkpoint machinery until the measured certificate meets
+    /// `budget`. `stats.factors_added` counts factors beyond the donor
+    /// chain, so warm-vs-cold work is directly comparable.
+    pub fn run_to_budget_warm(
+        s: &Mat,
+        donor: GChain,
+        budget: f64,
+        g_max: usize,
+        opts: SymOptions,
+    ) -> (SymFactorization, crate::transforms::ErrorCertificate, BudgetRunStats) {
+        assert!(budget.is_finite() && budget > 0.0, "error budget must be positive");
+        let g_start = donor.len().max(1);
+        let g_max = g_max.max(g_start);
+        let base_len = donor.len();
+        let f = SymFactorizer::new(s, g_start, opts.clone()).run_with_chain(donor);
+        Self::grow_to_budget(s, f, budget, g_start, g_max, base_len, opts)
+    }
+
+    fn grow_to_budget(
+        s: &Mat,
+        mut f: SymFactorization,
+        budget: f64,
+        g_start: usize,
+        g_max: usize,
+        base_len: usize,
+        opts: SymOptions,
+    ) -> (SymFactorization, crate::transforms::ErrorCertificate, BudgetRunStats) {
         let mut g = g_start;
-        let mut f = SymFactorizer::new(s, g, opts.clone()).run();
+        let mut stats =
+            BudgetRunStats { growth_rounds: 0, total_sweeps: f.sweeps_run, factors_added: 0 };
         loop {
             let cert = f.certificate(s);
             // `chain.len() < g` means the greedy initializer found no
             // further factor with positive gain — growing g again would
             // change nothing.
             if cert.meets(budget) || g >= g_max || f.chain.len() < g {
-                return (f, cert);
+                stats.factors_added = f.chain.len().saturating_sub(base_len);
+                return (f, cert, stats);
             }
             g = g.saturating_mul(2).min(g_max);
             let ck = SymCheckpoint {
@@ -270,6 +388,8 @@ impl<'a> SymFactorizer<'a> {
             };
             f = SymFactorizer::new(s, g, opts.clone())
                 .resume(ck, &mut SymRunControl::default());
+            stats.growth_rounds += 1;
+            stats.total_sweeps += f.sweeps_run;
         }
     }
 

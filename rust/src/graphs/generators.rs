@@ -298,6 +298,68 @@ pub fn real_world_substitute(which: RealWorldGraph, scale: f64, rng: &mut Rng64)
     g
 }
 
+/// One edge mutation produced by [`drift`] (or hand-built for tests).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum EdgeUpdate {
+    /// Insert a new edge `(u, v)` with weight `w`.
+    Add { u: usize, v: usize, w: f64 },
+    /// Delete the existing edge `(u, v)`.
+    Remove { u: usize, v: usize },
+    /// Change the weight of the existing edge `(u, v)` to `w`.
+    Reweight { u: usize, v: usize, w: f64 },
+}
+
+impl EdgeUpdate {
+    /// Apply this update to `g` through the normalization-preserving
+    /// edge-update API.
+    pub fn apply(self, g: &mut Graph) {
+        match self {
+            EdgeUpdate::Add { u, v, w } => g.add_edge(u, v, w),
+            EdgeUpdate::Remove { u, v } => g.remove_edge(u, v),
+            EdgeUpdate::Reweight { u, v, w } => g.reweight(u, v, w),
+        }
+    }
+}
+
+/// Deterministic drift: mutate `g` in place with `steps` edge updates
+/// drawn from `seed` (≈40% adds, ≈30% removes, ≈30% reweights; removes
+/// fall back to adds on an edgeless graph and adds fall back to
+/// reweights on a complete one). Returns the applied updates in order,
+/// so a driver can replay or log the exact drift. Same `(g, steps,
+/// seed)` ⇒ same drifted graph, which is what makes the warm-start
+/// conformance and serve-smoke legs reproducible.
+pub fn drift(g: &mut Graph, steps: usize, seed: u64) -> Vec<EdgeUpdate> {
+    assert!(g.n >= 2, "drift needs at least 2 vertices");
+    let mut rng = Rng64::new(seed ^ 0xD21F_7A3B_55C4_9E01);
+    let max_edges = if g.directed { g.n * (g.n - 1) } else { g.n * (g.n - 1) / 2 };
+    let mut out = Vec::with_capacity(steps);
+    for _ in 0..steps {
+        let roll = rng.below(10);
+        let have = g.num_edges();
+        let upd = if (roll < 4 || have == 0) && have < max_edges {
+            // sample a non-edge; bounded rejection loop is fine at the
+            // densities the generators produce
+            loop {
+                let u = rng.below(g.n);
+                let v = rng.below(g.n);
+                if u == v || g.edge_index(u, v).is_some() {
+                    continue;
+                }
+                break EdgeUpdate::Add { u, v, w: rng.uniform_in(0.5, 2.0) };
+            }
+        } else if roll < 7 && have > 1 {
+            let (u, v) = g.edges[rng.below(have)];
+            EdgeUpdate::Remove { u, v }
+        } else {
+            let (u, v) = g.edges[rng.below(have)];
+            EdgeUpdate::Reweight { u, v, w: rng.uniform_in(0.5, 2.0) }
+        };
+        upd.apply(g);
+        out.push(upd);
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -309,6 +371,55 @@ mod tests {
         let expected = 0.3 * (100.0 * 99.0 / 2.0);
         let got = g.num_edges() as f64;
         assert!((got - expected).abs() < 0.15 * expected, "{got} vs {expected}");
+    }
+
+    #[test]
+    fn drift_is_deterministic_and_preserves_invariants() {
+        let mut rng = Rng64::new(710);
+        let base = community(32, &mut rng);
+        let mut a = base.clone();
+        let mut b = base.clone();
+        let ua = drift(&mut a, 25, 42);
+        let ub = drift(&mut b, 25, 42);
+        assert_eq!(ua, ub, "same seed ⇒ same update sequence");
+        assert_eq!(a.edges, b.edges);
+        assert_eq!(a.weights, b.weights);
+        // u < v normalization and sortedness survive every update
+        for win in a.edges.windows(2) {
+            assert!(win[0] < win[1], "edges stay sorted/deduped: {win:?}");
+        }
+        for &(u, v) in &a.edges {
+            assert!(u < v && v < a.n);
+        }
+        if !a.weights.is_empty() {
+            assert_eq!(a.weights.len(), a.edges.len());
+            assert!(a.weights.iter().all(|w| w.is_finite() && *w > 0.0));
+        }
+        // a different seed actually drifts differently
+        let mut c = base.clone();
+        let uc = drift(&mut c, 25, 43);
+        assert_ne!(ua, uc, "different seed ⇒ different drift");
+        // the drifted Laplacian stays symmetric with zero row sums
+        let l = a.laplacian();
+        assert_eq!(l.symmetry_defect(), 0.0);
+        for i in 0..a.n {
+            let s: f64 = l.row(i).iter().sum();
+            assert!(s.abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn drift_replay_via_updates_matches() {
+        let mut rng = Rng64::new(711);
+        let base = erdos_renyi(24, 0.2, &mut rng);
+        let mut a = base.clone();
+        let updates = drift(&mut a, 12, 9);
+        let mut b = base.clone();
+        for u in updates {
+            u.apply(&mut b);
+        }
+        assert_eq!(a.edges, b.edges);
+        assert_eq!(a.weights, b.weights);
     }
 
     #[test]

@@ -6,6 +6,13 @@ use crate::linalg::{Mat, Rng64};
 ///
 /// Stored as an edge list; undirected edges are stored once with
 /// `u < v`. Directed edges `(u, v)` mean `u → v`.
+///
+/// Edges are unweighted by default (`weights` empty ⇒ every edge has
+/// weight exactly `1.0`, and the adjacency/Laplacian are bitwise what
+/// they were before weights existed). The edge-update API
+/// ([`add_edge`](Self::add_edge) / [`remove_edge`](Self::remove_edge) /
+/// [`reweight`](Self::reweight)) materializes per-edge weights lazily
+/// the first time a non-unit weight appears.
 #[derive(Clone, Debug)]
 pub struct Graph {
     /// Number of vertices.
@@ -14,12 +21,14 @@ pub struct Graph {
     pub directed: bool,
     /// Edge list. For undirected graphs each pair appears once, `u < v`.
     pub edges: Vec<(usize, usize)>,
+    /// Per-edge weights, parallel to `edges`. Empty means "all 1.0".
+    pub weights: Vec<f64>,
 }
 
 impl Graph {
     /// Empty (edgeless) graph.
     pub fn empty(n: usize, directed: bool) -> Self {
-        Graph { n, directed, edges: Vec::new() }
+        Graph { n, directed, edges: Vec::new(), weights: Vec::new() }
     }
 
     /// Build an undirected graph from an edge list, normalizing order and
@@ -35,12 +44,83 @@ impl Graph {
         for &(u, v) in &es {
             assert!(u < n && v < n, "edge out of range");
         }
-        Graph { n, directed: false, edges: es }
+        Graph { n, directed: false, edges: es, weights: Vec::new() }
     }
 
     /// Number of edges.
     pub fn num_edges(&self) -> usize {
         self.edges.len()
+    }
+
+    /// Weight of the `k`-th edge (1.0 while the graph is unweighted).
+    pub fn weight_of(&self, k: usize) -> f64 {
+        if self.weights.is_empty() { 1.0 } else { self.weights[k] }
+    }
+
+    /// Canonical storage key for an edge: undirected edges live as
+    /// `(min, max)`; directed edges keep their orientation.
+    fn edge_key(&self, u: usize, v: usize) -> (usize, usize) {
+        if !self.directed && u > v { (v, u) } else { (u, v) }
+    }
+
+    /// Index of edge `(u, v)` in the edge list, if present.
+    pub fn edge_index(&self, u: usize, v: usize) -> Option<usize> {
+        let key = self.edge_key(u, v);
+        self.edges.iter().position(|&e| e == key)
+    }
+
+    /// Materialize the parallel weight vector (all 1.0) so per-edge
+    /// weights can be stored.
+    fn materialize_weights(&mut self) {
+        if self.weights.is_empty() {
+            self.weights = vec![1.0; self.edges.len()];
+        }
+    }
+
+    /// Add edge `(u, v)` with weight `w`, preserving the `u < v`
+    /// normalization for undirected graphs and the canonical sorted
+    /// edge order. Panics on self loops, out-of-range endpoints,
+    /// duplicate edges, or non-finite/non-positive weights.
+    pub fn add_edge(&mut self, u: usize, v: usize, w: f64) {
+        assert!(u != v, "add_edge: self loop ({u}, {u})");
+        assert!(u < self.n && v < self.n, "add_edge: endpoint out of range");
+        assert!(w.is_finite() && w > 0.0, "add_edge: weight must be finite and positive");
+        let key = self.edge_key(u, v);
+        assert!(self.edge_index(u, v).is_none(), "add_edge: edge {key:?} already present");
+        if w != 1.0 {
+            self.materialize_weights();
+        }
+        // keep the deterministic sorted order undirected_from_edges
+        // establishes (insertion point by linear scan: edge counts are
+        // small and drift batches smaller)
+        let at = self.edges.iter().position(|&e| e > key).unwrap_or(self.edges.len());
+        self.edges.insert(at, key);
+        if !self.weights.is_empty() {
+            self.weights.insert(at, w);
+        }
+    }
+
+    /// Remove edge `(u, v)` (order-insensitive for undirected graphs).
+    /// Panics if the edge is absent.
+    pub fn remove_edge(&mut self, u: usize, v: usize) {
+        let k = self
+            .edge_index(u, v)
+            .unwrap_or_else(|| panic!("remove_edge: edge ({u}, {v}) not present"));
+        self.edges.remove(k);
+        if !self.weights.is_empty() {
+            self.weights.remove(k);
+        }
+    }
+
+    /// Set the weight of existing edge `(u, v)` to `w`. Panics if the
+    /// edge is absent or the weight is non-finite/non-positive.
+    pub fn reweight(&mut self, u: usize, v: usize, w: f64) {
+        assert!(w.is_finite() && w > 0.0, "reweight: weight must be finite and positive");
+        let k = self
+            .edge_index(u, v)
+            .unwrap_or_else(|| panic!("reweight: edge ({u}, {v}) not present"));
+        self.materialize_weights();
+        self.weights[k] = w;
     }
 
     /// Degree sequence (total degree; for directed graphs in+out).
@@ -53,14 +133,15 @@ impl Graph {
         d
     }
 
-    /// Dense adjacency matrix (`A_ij = 1` for an edge `i → j`; symmetric
-    /// when undirected).
+    /// Dense adjacency matrix (`A_ij = w` for an edge `i → j`, `1.0`
+    /// while unweighted; symmetric when undirected).
     pub fn adjacency(&self) -> Mat {
         let mut a = Mat::zeros(self.n, self.n);
-        for &(u, v) in &self.edges {
-            a[(u, v)] = 1.0;
+        for (k, &(u, v)) in self.edges.iter().enumerate() {
+            let w = self.weight_of(k);
+            a[(u, v)] = w;
             if !self.directed {
-                a[(v, u)] = 1.0;
+                a[(v, u)] = w;
             }
         }
         a
@@ -89,7 +170,7 @@ impl Graph {
             .iter()
             .map(|&(u, v)| if rng.bernoulli(0.5) { (u, v) } else { (v, u) })
             .collect();
-        Graph { n: self.n, directed: true, edges }
+        Graph { n: self.n, directed: true, edges, weights: self.weights.clone() }
     }
 
     /// Connectivity check via BFS over the undirected support.
@@ -126,6 +207,9 @@ impl Graph {
         while self.edges.len() > target {
             let k = rng.below(self.edges.len());
             self.edges.swap_remove(k);
+            if !self.weights.is_empty() {
+                self.weights.swap_remove(k);
+            }
         }
     }
 
@@ -148,6 +232,9 @@ impl Graph {
             }
             if have.insert(e) {
                 self.edges.push(e);
+                if !self.weights.is_empty() {
+                    self.weights.push(1.0);
+                }
             }
         }
     }
@@ -183,7 +270,12 @@ mod tests {
 
     #[test]
     fn directed_laplacian_row_sums() {
-        let g = Graph { n: 3, directed: true, edges: vec![(0, 1), (1, 2), (2, 0), (0, 2)] };
+        let g = Graph {
+            n: 3,
+            directed: true,
+            edges: vec![(0, 1), (1, 2), (2, 0), (0, 2)],
+            weights: Vec::new(),
+        };
         let l = g.laplacian();
         for i in 0..3 {
             let s: f64 = l.row(i).iter().sum();
@@ -213,6 +305,55 @@ mod tests {
         assert!(!g.is_connected());
         let g2 = Graph::undirected_from_edges(4, vec![(0, 1), (1, 2), (2, 3)]);
         assert!(g2.is_connected());
+    }
+
+    #[test]
+    fn edge_updates_preserve_normalization() {
+        let mut g = Graph::undirected_from_edges(5, vec![(0, 1), (1, 2), (2, 3)]);
+        // reversed endpoints normalize to u < v and keep sorted order
+        g.add_edge(4, 0, 1.0);
+        assert_eq!(g.edges, vec![(0, 1), (0, 4), (1, 2), (2, 3)]);
+        assert!(g.weights.is_empty(), "unit weights stay implicit");
+        // adjacency/Laplacian bitwise-identical to the unweighted form
+        let l = g.laplacian();
+        assert_eq!(l[(0, 0)], 2.0);
+        assert_eq!(l[(0, 4)], -1.0);
+
+        g.reweight(4, 0, 2.5);
+        assert_eq!(g.weights, vec![1.0, 2.5, 1.0, 1.0]);
+        let l = g.laplacian();
+        assert_eq!(l[(0, 4)], -2.5);
+        assert_eq!(l[(4, 0)], -2.5);
+        assert_eq!(l[(0, 0)], 3.5); // 1.0 + 2.5
+        // weighted Laplacian rows still sum to zero and stay symmetric
+        for i in 0..5 {
+            let s: f64 = l.row(i).iter().sum();
+            assert!(s.abs() < 1e-12);
+        }
+        assert_eq!(l.symmetry_defect(), 0.0);
+
+        g.remove_edge(0, 4);
+        assert_eq!(g.edges, vec![(0, 1), (1, 2), (2, 3)]);
+        assert_eq!(g.weights, vec![1.0, 1.0, 1.0]);
+        assert_eq!(g.edge_index(4, 0), None);
+
+        g.add_edge(3, 4, 0.75);
+        assert_eq!(g.edge_index(4, 3), Some(3));
+        assert_eq!(g.weight_of(3), 0.75);
+    }
+
+    #[test]
+    #[should_panic(expected = "already present")]
+    fn add_duplicate_edge_panics() {
+        let mut g = Graph::undirected_from_edges(3, vec![(0, 1)]);
+        g.add_edge(1, 0, 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "not present")]
+    fn remove_missing_edge_panics() {
+        let mut g = Graph::undirected_from_edges(3, vec![(0, 1)]);
+        g.remove_edge(1, 2);
     }
 
     #[test]

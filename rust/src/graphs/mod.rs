@@ -13,7 +13,7 @@ mod generators;
 mod graph;
 
 pub use generators::{
-    barabasi_albert, community, erdos_renyi, grid, masked_grid, real_world_substitute, ring,
-    road_like, sensor, RealWorldGraph,
+    barabasi_albert, community, drift, erdos_renyi, grid, masked_grid, real_world_substitute,
+    ring, road_like, sensor, EdgeUpdate, RealWorldGraph,
 };
 pub use graph::Graph;

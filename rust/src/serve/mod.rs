@@ -49,10 +49,15 @@ mod backend;
 pub mod faults;
 mod metrics;
 pub mod net;
+pub mod refactor;
 mod registry;
 
 pub use backend::{Backend, NativeGftBackend, PjrtGftBackend, TransformDirection};
 pub use metrics::{MetricsSnapshot, ServeMetrics, RESERVOIR_CAP};
+pub use refactor::{
+    refactor_and_swap, refactor_plan, RefactorJob, RefactorOptions, RefactorOutcome,
+    RefactorResult, RefactorWorker,
+};
 pub use registry::{PlanRegistry, RegistryStats, ResidentPlanInfo};
 
 use std::collections::VecDeque;
@@ -537,6 +542,12 @@ impl Coordinator {
     /// The attached plan registry, if any.
     pub fn registry(&self) -> Option<&Arc<PlanRegistry>> {
         self.registry.as_ref()
+    }
+
+    /// The `serve --max-error` budget, if set — also the refactor
+    /// worker's swap-refusal threshold.
+    pub fn max_error(&self) -> Option<f64> {
+        self.config.max_error
     }
 
     /// Resolve the route a request with `opts` would execute on.

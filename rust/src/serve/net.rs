@@ -26,6 +26,10 @@
 //! {"op":"metrics"}                          // serving + registry counters
 //! {"op":"upload_plan","bytes":"<hex>",      // .fastplan bytes, hex-encoded
 //!  "default":true|false}                    // true = atomic hot swap
+//! {"op":"refactor","matrix":[..n·n..],      // drifted S′ (row-major, f64):
+//!  "from":"<16-hex checksum>",              //   optional donor (default:
+//!  "budget":E,"max_g":G,                    //   the default plan), optional
+//!  "sync":true|false}                       //   growth budget; sync waits
 //! ```
 //!
 //! The spectral ops (`filter`/`wavelet`/`topk`) need a registry-routed
@@ -33,6 +37,18 @@
 //! its spectrum (a version-2 `.fastplan`). A wavelet reply's `signal` is
 //! the band-major stack `[band0 | band1 | … | bandJ]` of `(J+1)·n` values
 //! (band 0 = scaling function).
+//!
+//! The `refactor` op hands the drifted matrix to the background
+//! [`RefactorWorker`]: it warm-starts from the donor plan's chain,
+//! re-certifies against the drifted matrix, and atomically swaps the
+//! registry default while in-flight batches drain on the old plan —
+//! unless the new certificate misses the server's `--max-error` budget,
+//! in which case the swap is refused and the resident plan stays.
+//! `"sync":true` waits for the outcome
+//! (`{"ok":true,"swapped":B,"checksum":..,"old_checksum":..,
+//! "rel_err":..,"g":..,"sweeps":..,"refused":MSG?}`); the default
+//! replies `{"ok":true,"status":"scheduled"}` immediately and the swap
+//! becomes visible in `metrics` (new default checksum + `rel_err`).
 //!
 //! Replies: `{"ok":true,"signal":[..]}` for transforms/filters/wavelets,
 //! `{"ok":true,"indices":[..],"values":[..]}` for top-k (parallel arrays,
@@ -78,9 +94,11 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Context};
 
 use super::{
-    Coordinator, FilterSpec, JobOp, MetricsSnapshot, Payload, Priority, ResponseSpec,
-    ServeError, SubmitOptions, TopKSpec, WaveletSpec,
+    Coordinator, FilterSpec, JobOp, MetricsSnapshot, Payload, Priority, RefactorJob,
+    RefactorOptions, RefactorWorker, ResponseSpec, ServeError, SubmitOptions, TopKSpec,
+    WaveletSpec,
 };
+use crate::linalg::Mat;
 use crate::ops::{SpectralKernel, TopK};
 use crate::plan::Plan;
 
@@ -105,6 +123,9 @@ pub struct NetServerOptions {
     pub reply_timeout: Duration,
     /// Per-frame payload cap.
     pub max_frame: usize,
+    /// Background refactor worker for `refactor` wire requests /
+    /// `--watch-graph`. `None` answers `refactor` with `bad_request`.
+    pub refactor: Option<Arc<RefactorWorker>>,
 }
 
 impl Default for NetServerOptions {
@@ -115,6 +136,7 @@ impl Default for NetServerOptions {
             write_timeout: Duration::from_secs(5),
             reply_timeout: Duration::from_secs(60),
             max_frame: MAX_FRAME,
+            refactor: None,
         }
     }
 }
@@ -918,6 +940,93 @@ fn handle_upload(coord: &Coordinator, req: &Json) -> Json {
     ])
 }
 
+fn handle_refactor(coord: &Coordinator, req: &Json, opts: &NetServerOptions) -> Json {
+    if coord.registry().is_none() {
+        return err_reply("bad_request", "this server has no plan registry", None);
+    }
+    let Some(worker) = opts.refactor.as_ref() else {
+        return err_reply("bad_request", "this server has no refactor worker", None);
+    };
+    let Some(items) = req.get("matrix").and_then(|v| v.as_arr()) else {
+        return err_reply("bad_request", "refactor needs a row-major \"matrix\" array", None);
+    };
+    let mut data = Vec::with_capacity(items.len());
+    for v in items {
+        match v.as_f64() {
+            Some(x) if x.is_finite() => data.push(x),
+            _ => return err_reply("bad_request", "\"matrix\" must hold finite numbers", None),
+        }
+    }
+    let n = (data.len() as f64).sqrt().round() as usize;
+    if n == 0 || n * n != data.len() {
+        return err_reply(
+            "bad_request",
+            &format!("\"matrix\" has {} entries, not a square n×n count", data.len()),
+            None,
+        );
+    }
+    let matrix = Mat::from_rows(n, n, &data);
+    let from = match req.get("from") {
+        Some(v) => match v.as_str().map(parse_checksum) {
+            Some(Ok(key)) => Some(key),
+            _ => return err_reply("bad_request", "\"from\" must be a 16-hex checksum", None),
+        },
+        None => None,
+    };
+    let mut ropts = RefactorOptions { max_error: coord.max_error(), ..Default::default() };
+    if let Some(v) = req.get("budget") {
+        match v.as_f64() {
+            Some(b) if b.is_finite() && b > 0.0 => ropts.budget = Some(b),
+            _ => return err_reply("bad_request", "\"budget\" must be a positive number", None),
+        }
+    }
+    if let Some(v) = req.get("max_g") {
+        match v.as_u64() {
+            Some(g) if g >= 1 => ropts.max_g = Some(g as usize),
+            _ => return err_reply("bad_request", "\"max_g\" must be an integer >= 1", None),
+        }
+    }
+    let sync = req.get("sync").and_then(|v| v.as_bool()).unwrap_or(false);
+    if !sync {
+        if !worker.submit(RefactorJob { matrix, from, opts: ropts, reply: None }) {
+            return err_reply("backend_error", "refactor worker is gone", None);
+        }
+        return Json::Obj(vec![
+            ("ok".to_string(), Json::Bool(true)),
+            ("status".to_string(), Json::Str("scheduled".to_string())),
+        ]);
+    }
+    let (tx, rx) = std::sync::mpsc::channel();
+    if !worker.submit(RefactorJob { matrix, from, opts: ropts, reply: Some(tx) }) {
+        return err_reply("backend_error", "refactor worker is gone", None);
+    }
+    match rx.recv_timeout(opts.reply_timeout) {
+        Ok(Ok(o)) => {
+            let mut fields = vec![
+                ("ok".to_string(), Json::Bool(true)),
+                ("swapped".to_string(), Json::Bool(o.swapped)),
+                ("checksum".to_string(), Json::Str(format!("{:016x}", o.new_checksum))),
+                ("old_checksum".to_string(), Json::Str(format!("{:016x}", o.old_checksum))),
+                ("rel_err".to_string(), Json::f64(o.rel_err)),
+                ("g".to_string(), Json::u64(o.g as u64)),
+                ("sweeps".to_string(), Json::u64(o.sweeps as u64)),
+                ("growth_rounds".to_string(), Json::u64(o.growth_rounds as u64)),
+                ("factors_added".to_string(), Json::u64(o.factors_added as u64)),
+            ];
+            if let Some(msg) = o.refused {
+                fields.push(("refused".to_string(), Json::Str(msg)));
+            }
+            Json::Obj(fields)
+        }
+        Ok(Err(e)) => err_reply("bad_request", &format!("refactor failed: {e:#}"), None),
+        Err(_) => err_reply(
+            "backend_error",
+            &format!("refactor did not finish within {:?}", opts.reply_timeout),
+            None,
+        ),
+    }
+}
+
 /// Answer one request frame (exposed for tests).
 pub fn handle_request(
     coord: &Coordinator,
@@ -939,6 +1048,12 @@ pub fn handle_request(
             }
             handle_upload(coord, &req)
         }
+        "refactor" => {
+            if draining.load(Ordering::SeqCst) {
+                return err_reply("shutting_down", "coordinator is shutting down", None);
+            }
+            handle_refactor(coord, &req, opts)
+        }
         "submit" | "forward" | "adjoint" => {
             if draining.load(Ordering::SeqCst) {
                 return err_reply("shutting_down", "coordinator is shutting down", None);
@@ -959,7 +1074,7 @@ pub fn handle_request(
             "bad_request",
             &format!(
                 "unknown op {other:?} (want submit|forward|adjoint|filter|wavelet|topk|\
-                 metrics|upload_plan)"
+                 metrics|upload_plan|refactor)"
             ),
             None,
         ),

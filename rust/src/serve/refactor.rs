@@ -1,0 +1,290 @@
+//! Background warm-start refactorization for drifted graphs.
+//!
+//! When the served graph drifts (edge added/removed/reweighted), the
+//! resident plan's chain is still a legal initialization for the new
+//! Laplacian — the paper's coordinate minimizers accept any starting
+//! point. This module re-polishes the donor chain against the drifted
+//! matrix ([`SymFactorizer::run_with_chain`] /
+//! [`SymFactorizer::run_to_budget_warm`]), re-measures the error
+//! certificate **against the drifted matrix** (a warm-started plan must
+//! never inherit the donor's Lemma-1 spectrum or certificate), and
+//! atomically [`PlanRegistry::install_default`]s the new `Arc<Plan>`
+//! while in-flight batches drain on the old one.
+//!
+//! The swap is the registry's existing atomic primitive, so the
+//! zero-downtime property comes for free: requests resolve their plan at
+//! submit time and own the `Arc`, so anything submitted before the swap
+//! completes bitwise-identically on the old plan.
+//!
+//! [`RefactorWorker`] runs these jobs on one dedicated background
+//! thread: wire `refactor` requests and `--watch-graph` file events
+//! enqueue, the server keeps serving, and jobs are serialized so two
+//! drift events can never race their `install_default` ordering.
+
+use std::sync::mpsc::{self, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::bail;
+
+use crate::factor::{BudgetRunStats, FactorExec, SymFactorizer, SymOptions};
+use crate::linalg::Mat;
+use crate::plan::Plan;
+use crate::transforms::ErrorCertificate;
+
+use super::registry::PlanRegistry;
+
+/// Tunables for one warm-start refactorization.
+#[derive(Clone, Debug)]
+pub struct RefactorOptions {
+    /// Error budget: grow `g` (through the `run_to_budget` machinery)
+    /// until the re-measured certificate meets this. `None` re-polishes
+    /// at the donor length without growing.
+    pub budget: Option<f64>,
+    /// Growth cap on `g` when a budget is set. `None` → 4× the donor
+    /// length.
+    pub max_g: Option<usize>,
+    /// Swap refusal threshold (`serve --max-error`): the refactored
+    /// plan is not installed as default unless its certificate meets
+    /// this budget.
+    pub max_error: Option<f64>,
+    /// Sweep cap for each polish round.
+    pub max_sweeps: usize,
+    /// Deterministic parallel execution config for the factorizer.
+    pub exec: FactorExec,
+}
+
+impl Default for RefactorOptions {
+    fn default() -> Self {
+        RefactorOptions {
+            budget: None,
+            max_g: None,
+            max_error: None,
+            max_sweeps: SymOptions::default().max_sweeps,
+            exec: FactorExec::default(),
+        }
+    }
+}
+
+/// A refactored plan, before any swap decision.
+#[derive(Clone, Debug)]
+pub struct RefactorResult {
+    /// The warm-started plan: donor chain re-polished against the
+    /// drifted matrix, Lemma-1 spectrum and certificate re-measured
+    /// against it.
+    pub plan: Arc<Plan>,
+    /// Certificate measured against the drifted matrix.
+    pub certificate: ErrorCertificate,
+    /// Cumulative warm-start work (sweeps, growth rounds, appended
+    /// factors beyond the donor chain).
+    pub stats: BudgetRunStats,
+    /// Final chain length.
+    pub g: usize,
+}
+
+/// What a refactor-and-swap attempt did.
+#[derive(Clone, Debug)]
+pub struct RefactorOutcome {
+    /// Content checksum of the donor plan.
+    pub old_checksum: u64,
+    /// Content checksum of the refactored plan.
+    pub new_checksum: u64,
+    /// Re-measured relative error against the drifted matrix.
+    pub rel_err: f64,
+    /// Final chain length.
+    pub g: usize,
+    /// Polish sweeps summed over every growth round.
+    pub sweeps: usize,
+    /// `g`-doubling rounds beyond the first warm replay.
+    pub growth_rounds: usize,
+    /// Factors appended beyond the donor chain.
+    pub factors_added: usize,
+    /// Whether the registry default was swapped to the new plan.
+    pub swapped: bool,
+    /// Why the swap was refused (`swapped == false` and the resident
+    /// plan stays).
+    pub refused: Option<String>,
+}
+
+/// Warm-start the donor plan's chain against the drifted matrix `s` and
+/// build a freshly certified plan. The spectrum is the Lemma-1 diagonal
+/// `diag(ŪᵀS′Ū)` recomputed against `s` and the certificate is measured
+/// against `s` — nothing is inherited from the donor artifact.
+pub fn refactor_plan(
+    donor: &Plan,
+    s: &Mat,
+    opts: &RefactorOptions,
+) -> crate::Result<RefactorResult> {
+    let Some(chain) = donor.as_gchain() else {
+        bail!(
+            "refactor needs a G-chain (symmetric) donor plan; plan {:016x} holds a T-chain",
+            donor.content_checksum()
+        );
+    };
+    if s.rows() != chain.n {
+        bail!(
+            "drifted matrix is {}×{} but donor plan {:016x} is for n={}",
+            s.rows(),
+            s.cols(),
+            donor.content_checksum(),
+            chain.n
+        );
+    }
+    if s.symmetry_defect() >= 1e-8 * (1.0 + s.max_abs()) {
+        bail!(
+            "drifted matrix is not symmetric (defect {:.3e}) — a G-chain warm start needs a \
+             symmetric matrix",
+            s.symmetry_defect()
+        );
+    }
+    let sym_opts =
+        SymOptions { max_sweeps: opts.max_sweeps, exec: opts.exec, ..Default::default() };
+    let (f, cert, stats) = match opts.budget {
+        Some(budget) => {
+            let g_max = opts.max_g.unwrap_or_else(|| chain.len().saturating_mul(4).max(1));
+            SymFactorizer::run_to_budget_warm(s, chain.clone(), budget, g_max, sym_opts)
+        }
+        None => {
+            let g = chain.len().max(1);
+            let donor_len = chain.len();
+            let f = SymFactorizer::new(s, g, sym_opts).run_with_chain(chain.clone());
+            let cert = f.certificate(s);
+            let stats = BudgetRunStats {
+                growth_rounds: 0,
+                total_sweeps: f.sweeps_run,
+                factors_added: f.chain.len().saturating_sub(donor_len),
+            };
+            (f, cert, stats)
+        }
+    };
+    let g = f.chain.len();
+    let plan = Plan::from(&f.chain)
+        .spectrum(f.spectrum.clone())
+        .certificate(cert.clone())
+        .build();
+    Ok(RefactorResult { plan, certificate: cert, stats, g })
+}
+
+/// [`refactor_plan`] + swap decision: install the refactored plan as
+/// the registry default unless its certificate misses
+/// [`RefactorOptions::max_error`] (in which case the resident plan
+/// stays and the outcome says why). The swap is atomic; in-flight
+/// batches drain on the old plan.
+pub fn refactor_and_swap(
+    registry: &PlanRegistry,
+    donor: &Plan,
+    s: &Mat,
+    opts: &RefactorOptions,
+) -> crate::Result<RefactorOutcome> {
+    let r = refactor_plan(donor, s, opts)?;
+    let mut outcome = RefactorOutcome {
+        old_checksum: donor.content_checksum(),
+        new_checksum: r.plan.content_checksum(),
+        rel_err: r.certificate.rel_err,
+        g: r.g,
+        sweeps: r.stats.total_sweeps,
+        growth_rounds: r.stats.growth_rounds,
+        factors_added: r.stats.factors_added,
+        swapped: false,
+        refused: None,
+    };
+    if let Some(eps) = opts.max_error {
+        if !r.certificate.meets(eps) {
+            outcome.refused = Some(format!(
+                "refactored certificate rel_err {:.3e} exceeds --max-error {eps:.3e} — keeping \
+                 the resident plan",
+                r.certificate.rel_err
+            ));
+            return Ok(outcome);
+        }
+    }
+    registry.install_default(r.plan);
+    outcome.swapped = true;
+    Ok(outcome)
+}
+
+/// One queued refactorization.
+pub struct RefactorJob {
+    /// The drifted (symmetric) matrix to warm-start against.
+    pub matrix: Mat,
+    /// Donor plan checksum; `None` warm-starts from the registry
+    /// default at the moment the job runs.
+    pub from: Option<u64>,
+    /// Per-job tunables (budget, growth cap, swap threshold).
+    pub opts: RefactorOptions,
+    /// Reply channel for synchronous callers; `None` logs to stderr.
+    pub reply: Option<Sender<crate::Result<RefactorOutcome>>>,
+}
+
+/// Dedicated background thread running [`RefactorJob`]s in order.
+pub struct RefactorWorker {
+    tx: Option<Sender<RefactorJob>>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl std::fmt::Debug for RefactorWorker {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("RefactorWorker")
+    }
+}
+
+impl RefactorWorker {
+    /// Spawn the worker over the registry it will swap plans into.
+    pub fn start(registry: Arc<PlanRegistry>) -> RefactorWorker {
+        let (tx, rx) = mpsc::channel::<RefactorJob>();
+        let handle = std::thread::Builder::new()
+            .name("fastes-refactor".into())
+            .spawn(move || {
+                for job in rx {
+                    let RefactorJob { matrix, from, opts, reply } = job;
+                    let res = (|| {
+                        let donor = match from {
+                            Some(key) => registry.get(key)?,
+                            None => registry.default_plan().ok_or_else(|| {
+                                anyhow::anyhow!("no default plan to warm-start from")
+                            })?,
+                        };
+                        refactor_and_swap(&registry, &donor, &matrix, &opts)
+                    })();
+                    match reply {
+                        Some(tx) => {
+                            let _ = tx.send(res);
+                        }
+                        None => match res {
+                            Ok(o) if o.swapped => eprintln!(
+                                "refactor: swapped default {:016x} → {:016x} \
+                                 (rel_err {:.3e}, g {}, {} sweeps)",
+                                o.old_checksum, o.new_checksum, o.rel_err, o.g, o.sweeps
+                            ),
+                            Ok(o) => eprintln!(
+                                "refactor: swap refused: {}",
+                                o.refused.as_deref().unwrap_or("(no reason)")
+                            ),
+                            Err(e) => eprintln!("refactor failed: {e:#}"),
+                        },
+                    }
+                }
+            })
+            .expect("spawn refactor worker");
+        RefactorWorker { tx: Some(tx), handle: Some(handle) }
+    }
+
+    /// Enqueue a job; `false` if the worker thread is gone.
+    pub fn submit(&self, job: RefactorJob) -> bool {
+        match &self.tx {
+            Some(tx) => tx.send(job).is_ok(),
+            None => false,
+        }
+    }
+}
+
+impl Drop for RefactorWorker {
+    fn drop(&mut self) {
+        // closing the channel ends the worker loop; join so queued
+        // swaps complete before shutdown returns
+        drop(self.tx.take());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}

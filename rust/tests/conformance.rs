@@ -26,10 +26,21 @@
 //! operators ([`FilterOp`], [`WaveletBank`], [`TopK`]): every engine ×
 //! ISA × precision must be bitwise equal to the unfused sequential
 //! reference (adjoint → explicit row scale → forward).
+//!
+//! A fourth family extends the determinism guarantee to **warm-started**
+//! factorizations on drifted graphs: re-polishing a donor chain against
+//! the drifted Laplacian must produce identical chain / spectrum /
+//! trace / plan checksum at any thread count, and a warm-started run
+//! must checkpoint → halt → resume byte-identically.
 
 use std::sync::Arc;
 
 use fastes::cli::figures::{random_gplan, random_tplan};
+use fastes::factor::{
+    FactorExec, GeneralFactorizer, GeneralOptions, SymCheckpoint, SymFactorizer, SymOptions,
+    SymRunControl,
+};
+use fastes::graphs;
 use fastes::linalg::Rng64;
 use fastes::ops::{FilterOp, SpectralKernel, TopK, WaveletBank};
 use fastes::plan::{Direction, ExecPolicy, FastOperator, Plan};
@@ -402,4 +413,130 @@ fn scalar_pin_matches_default_kernel_results() {
             .unwrap();
         assert_eq!(default_run.data, scalar_run.data, "{dir:?}: default kernel != scalar");
     }
+}
+
+#[test]
+fn warm_start_is_thread_count_invariant_on_drifted_graphs() {
+    // the warm-start entry points must keep the bitwise guarantee of the
+    // cold factorizers: re-polishing a donor chain against a drifted
+    // Laplacian yields the same chain / spectrum / trace / plan checksum
+    // at any thread count.
+    //
+    // --- symmetric, community graph ---
+    let mut rng = Rng64::new(21_001);
+    let mut graph = graphs::community(32, &mut rng);
+    let l0 = graph.laplacian();
+    let g = 32 * 4;
+    let serial =
+        SymOptions { exec: FactorExec::serial(), max_sweeps: 2, ..Default::default() };
+    let donor = SymFactorizer::new(&l0, g, serial.clone()).run();
+    assert!(!donor.chain.is_empty());
+    graphs::drift(&mut graph, 5, 21_002);
+    let l1 = graph.laplacian();
+    let base = SymFactorizer::new(&l1, g, serial.clone()).run_with_chain(donor.chain.clone());
+    assert!(base.sweeps_run >= 1, "warm start must re-polish the drifted matrix");
+    for threads in [2usize, 8] {
+        let opts = SymOptions {
+            exec: FactorExec { threads, min_work: 0 },
+            max_sweeps: 2,
+            ..Default::default()
+        };
+        let got = SymFactorizer::new(&l1, g, opts).run_with_chain(donor.chain.clone());
+        assert_eq!(got.chain, base.chain, "sym warm chain diverged at {threads} threads");
+        assert_eq!(got.spectrum, base.spectrum, "sym warm spectrum diverged at {threads} threads");
+        assert_eq!(
+            got.objective_trace, base.objective_trace,
+            "sym warm trace diverged at {threads} threads"
+        );
+        assert_eq!(
+            got.plan().content_checksum(),
+            base.plan().content_checksum(),
+            "sym warm plan checksum diverged at {threads} threads"
+        );
+    }
+
+    // --- general, randomly directed Erdős–Rényi graph ---
+    let mut rng = Rng64::new(21_003);
+    let mut ug = graphs::erdos_renyi(24, 0.3, &mut rng);
+    let c0 = ug.randomly_directed(&mut Rng64::new(21_004)).laplacian();
+    let m = 24 * 4;
+    let gserial =
+        GeneralOptions { exec: FactorExec::serial(), max_sweeps: 2, ..Default::default() };
+    let gdonor = GeneralFactorizer::new(&c0, m, gserial.clone()).run();
+    assert!(!gdonor.chain.is_empty());
+    graphs::drift(&mut ug, 4, 21_005);
+    let c1 = ug.randomly_directed(&mut Rng64::new(21_006)).laplacian();
+    let gbase =
+        GeneralFactorizer::new(&c1, m, gserial).run_with_chain_warm(gdonor.chain.clone());
+    assert!(gbase.sweeps_run >= 1, "gen warm start must re-polish the drifted matrix");
+    for threads in [2usize, 8] {
+        let opts = GeneralOptions {
+            exec: FactorExec { threads, min_work: 0 },
+            max_sweeps: 2,
+            ..Default::default()
+        };
+        let got = GeneralFactorizer::new(&c1, m, opts).run_with_chain_warm(gdonor.chain.clone());
+        assert_eq!(got.chain, gbase.chain, "gen warm chain diverged at {threads} threads");
+        assert_eq!(got.spectrum, gbase.spectrum, "gen warm spectrum diverged at {threads} threads");
+        assert_eq!(
+            got.objective_trace, gbase.objective_trace,
+            "gen warm trace diverged at {threads} threads"
+        );
+        assert_eq!(
+            got.plan().content_checksum(),
+            gbase.plan().content_checksum(),
+            "gen warm plan checksum diverged at {threads} threads"
+        );
+    }
+}
+
+#[test]
+fn warm_start_checkpoint_halt_resume_is_byte_identical() {
+    // a warm-started run flows through the same checkpoint machinery as
+    // a cold one: halting mid-append past the replayed donor prefix and
+    // resuming from the emitted checkpoint must reproduce the
+    // uninterrupted warm run bit for bit.
+    let mut rng = Rng64::new(21_010);
+    let mut graph = graphs::community(24, &mut rng);
+    let l0 = graph.laplacian();
+    let opts = SymOptions { max_sweeps: 2, ..Default::default() };
+    let donor = SymFactorizer::new(&l0, 24 * 3, opts.clone()).run();
+    let donor_len = donor.chain.len();
+    assert!(donor_len >= 8);
+    graphs::drift(&mut graph, 6, 21_011);
+    let l1 = graph.laplacian();
+    // target g above the donor length so the run appends fresh factors
+    // (init phase) and then sweeps — the halt lands mid-append.
+    let g = donor_len + 16;
+    let full = SymFactorizer::new(&l1, g, opts.clone()).run_with_chain(donor.chain.clone());
+    assert!(!full.halted);
+
+    let mut last: Option<SymCheckpoint> = None;
+    let mut ctrl = SymRunControl {
+        checkpoint_every: 5,
+        // init-phase steps count the replayed donor prefix, so this halts
+        // 7 freshly appended factors into the init phase
+        halt_after: Some(donor_len + 7),
+        on_checkpoint: Some(Box::new(|ck: &SymCheckpoint| last = Some(ck.clone()))),
+    };
+    let halted =
+        SymFactorizer::new(&l1, g, opts.clone()).run_with_chain_controlled(donor.chain.clone(), &mut ctrl);
+    drop(ctrl);
+    assert!(halted.halted, "run should have stopped at halt_after");
+    let ck = last.expect("halt must emit a final checkpoint");
+    assert!(ck.in_init, "halt_after={} should land in the append phase", donor_len + 7);
+    assert_eq!(ck.chain.len(), donor_len + 7);
+
+    let resumed = SymFactorizer::new(&l1, g, opts).resume(ck, &mut SymRunControl::default());
+    assert!(!resumed.halted);
+    assert_eq!(resumed.chain, full.chain, "resumed warm chain != uninterrupted");
+    assert_eq!(resumed.spectrum, full.spectrum, "resumed warm spectrum != uninterrupted");
+    assert_eq!(resumed.init_objective, full.init_objective);
+    assert_eq!(resumed.objective_trace, full.objective_trace);
+    assert_eq!(resumed.sweeps_run, full.sweeps_run);
+    assert_eq!(
+        resumed.plan().content_checksum(),
+        full.plan().content_checksum(),
+        "resumed warm plan checksum != uninterrupted"
+    );
 }

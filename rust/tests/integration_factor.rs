@@ -343,3 +343,102 @@ fn psd_easier_than_indefinite() {
     }
     assert!(errs[0] < errs[1], "psd {} vs indefinite {}", errs[0], errs[1]);
 }
+
+#[test]
+fn warm_start_does_not_inherit_a_stale_donor_trace() {
+    // adversarial setup for the sweep stop rule: a donor polished to a
+    // flat objective trace. If a warm start carried that trace over, the
+    // loop-top rule |ε_{i−1} − ε_i| < eps·‖S‖²_F would fire before the
+    // drifted matrix is polished even once.
+    let mut rng = Rng64::new(915);
+    let mut graph = graphs::community(32, &mut rng);
+    let l0 = graph.laplacian();
+    let g = 32 * 4;
+    let donor = SymFactorizer::new(&l0, g, SymOptions::default()).run();
+    graphs::drift(&mut graph, 8, 916);
+    let l1 = graph.laplacian();
+
+    // exhibit the hazard: resuming with the donor's bookkeeping (a flat
+    // trace) stops instantly — zero sweeps against the drifted matrix
+    let stale = SymCheckpoint {
+        chain: donor.chain.clone(),
+        spectrum: oracle::lemma1_spectrum(&l1, &donor.chain),
+        init_objective: Some(donor.init_objective),
+        // converged-looking trace: two identical entries
+        objective_trace: vec![donor.objective(), donor.objective()],
+        sweeps_run: donor.sweeps_run.max(2),
+        steps_done: donor.chain.len(),
+        in_init: false,
+    };
+    let stale_sweeps = stale.sweeps_run;
+    let hijacked = SymFactorizer::new(
+        &l1,
+        g,
+        SymOptions { max_sweeps: stale_sweeps + 4, ..Default::default() },
+    )
+    .resume(stale, &mut SymRunControl::default());
+    assert_eq!(
+        hijacked.sweeps_run, stale_sweeps,
+        "a stale flat trace stops the run before any drifted-matrix sweep"
+    );
+
+    // the warm-start entry point rebuilds fresh bookkeeping instead
+    let warm = SymFactorizer::new(&l1, g, SymOptions { max_sweeps: 4, ..Default::default() })
+        .run_with_chain(donor.chain.clone());
+    assert!(warm.sweeps_run >= 1, "warm start must actually sweep the drifted matrix");
+    assert_eq!(
+        warm.objective_trace.len(),
+        warm.sweeps_run,
+        "warm trace must contain only this run's sweeps, not the donor's"
+    );
+    assert!(
+        warm.objective() <= warm.init_objective,
+        "warm sweeps must not increase the objective"
+    );
+}
+
+#[test]
+fn warm_budgeted_run_does_no_more_work_than_cold() {
+    // the refactorization story: a donor certified on the pre-drift
+    // Laplacian warm-starts the budgeted run on the drifted one, and
+    // reaches the budget with no more growth rounds / sweeps than a
+    // cold start (BENCH_refactor.json records the measured gap).
+    let mut rng = Rng64::new(917);
+    let mut graph = graphs::community(48, &mut rng);
+    let l0 = graph.laplacian();
+    let opts = SymOptions { max_sweeps: 2, ..Default::default() };
+    let g_start = 48 * 2;
+    let g_max = 48 * 47 / 2;
+    let eps = 0.30;
+    let (donor, donor_cert, _) =
+        SymFactorizer::run_to_budget_stats(&l0, eps, g_start, g_max, opts.clone());
+    assert!(donor_cert.meets(eps), "donor must meet the budget on the pre-drift matrix");
+
+    graphs::drift(&mut graph, 3, 918);
+    let l1 = graph.laplacian();
+    let (_, cold_cert, cold) =
+        SymFactorizer::run_to_budget_stats(&l1, eps, g_start, g_max, opts.clone());
+    let (warm_f, warm_cert, warm) =
+        SymFactorizer::run_to_budget_warm(&l1, donor.chain.clone(), eps, g_max, opts);
+
+    assert!(warm_cert.meets(eps), "warm refactorization must meet the budget");
+    assert!(cold_cert.meets(eps), "cold run must meet the budget on this graph");
+    assert!(
+        warm.growth_rounds <= cold.growth_rounds,
+        "warm growth rounds {} > cold {}",
+        warm.growth_rounds,
+        cold.growth_rounds
+    );
+    assert!(
+        warm.total_sweeps <= cold.total_sweeps,
+        "warm sweeps {} > cold {}",
+        warm.total_sweeps,
+        cold.total_sweeps
+    );
+    // warm stats count work beyond the donor chain, so the comparison is
+    // donor-relative by construction
+    assert_eq!(warm.factors_added, warm_f.chain.len() - donor.chain.len());
+    // and the warm certificate is measured against the *drifted* matrix
+    let fresh = warm_f.certificate(&l1);
+    assert_eq!(warm_cert.rel_err, fresh.rel_err);
+}

@@ -5,15 +5,18 @@ use std::path::Path;
 use std::sync::Arc;
 
 use fastes::cli::figures::random_gplan;
-use fastes::factor::{SymFactorizer, SymOptions};
+use fastes::factor::{oracle, SymFactorizer, SymOptions};
 use fastes::graphs;
 use fastes::linalg::Rng64;
-use fastes::plan::{ExecPolicy, Plan};
+use fastes::ops::{FilterOp, SpectralKernel, WaveletBank};
+use fastes::plan::{Direction, ExecPolicy, Plan};
 use fastes::runtime::autotune::{self, TuneEffort, TuneProfile};
 use fastes::runtime::ArtifactStore;
 use fastes::serve::{
-    Backend, Coordinator, NativeGftBackend, PjrtGftBackend, ServeConfig, TransformDirection,
+    refactor_and_swap, Backend, Coordinator, NativeGftBackend, PjrtGftBackend, PlanRegistry,
+    RefactorOptions, ServeConfig, TransformDirection,
 };
+use fastes::transforms::SignalBlock;
 
 /// Native backend over a plan with the given policy, boxed for the
 /// coordinator factory.
@@ -269,4 +272,167 @@ fn filter_serving_is_consistent_with_manual_composition() {
     for (w, o) in want.iter().zip(out.iter()) {
         assert!((*w as f32 - o).abs() < 1e-3, "{w} vs {o}");
     }
+}
+
+/// What the native backend replies for a forward (analysis) request on
+/// `plan`: `x̂ = Ūᵀ x`, i.e. the plan applied in the adjoint direction
+/// with the sequential engine (bitwise-identical at any batch width —
+/// columns are independent).
+fn forward_reference(plan: &Arc<Plan>, sig: &[f32]) -> Vec<f32> {
+    let mut block = SignalBlock::from_signals(&[sig.to_vec()]).unwrap();
+    plan.apply(&mut block, Direction::Adjoint, &ExecPolicy::Seq).unwrap();
+    block.signal(0)
+}
+
+#[test]
+fn stale_spectrum_plan_answers_kernel_requests_wrongly_after_drift() {
+    // the warm-start bugfix regression: a refactored plan that kept the
+    // donor's Lemma-1 spectrum serves kernel filter / wavelet requests
+    // against the *old* eigenvalues. The refreshed plan (diag(ŪᵀS′Ū)
+    // recomputed against the drifted matrix) must be bitwise equal to
+    // the unfused reference; the stale one must not.
+    let n = 24;
+    let mut rng = Rng64::new(1007);
+    let mut graph = graphs::community(n, &mut rng);
+    let l0 = graph.laplacian();
+    let f = SymFactorizer::new(&l0, 6 * n, SymOptions { max_sweeps: 2, ..Default::default() })
+        .run();
+    let chain = f.chain.clone();
+    let stale_plan = Plan::from(&chain).spectrum(f.spectrum.clone()).build();
+
+    graphs::drift(&mut graph, 10, 1008);
+    let l1 = graph.laplacian();
+    let refreshed = oracle::lemma1_spectrum(&l1, &chain);
+    assert!(
+        refreshed
+            .iter()
+            .zip(f.spectrum.iter())
+            .any(|(a, b)| (a - b).abs() > 1e-9),
+        "drift must actually move the Lemma-1 spectrum"
+    );
+    let fixed_plan = Plan::from(&chain).spectrum(refreshed).build();
+
+    let sigs: Vec<Vec<f32>> = (0..7)
+        .map(|_| (0..n).map(|_| rng.randn() as f32).collect())
+        .collect();
+
+    // ---- kernel filter ----
+    let kernel = SpectralKernel::Heat { t: 0.5 };
+    let stale_op = FilterOp::from_kernel(Arc::clone(&stale_plan), &kernel).unwrap();
+    let fixed_op = FilterOp::from_kernel(Arc::clone(&fixed_plan), &kernel).unwrap();
+    assert_ne!(
+        stale_op.response_f32(),
+        fixed_op.response_f32(),
+        "heat responses must differ once the spectrum moved"
+    );
+    // unfused reference against the refreshed spectrum
+    let mut want = SignalBlock::from_signals(&sigs).unwrap();
+    fixed_plan.apply(&mut want, Direction::Adjoint, &ExecPolicy::Seq).unwrap();
+    let b = want.batch;
+    for (i, &hi) in fixed_op.response_f32().iter().enumerate() {
+        for v in &mut want.data[i * b..(i + 1) * b] {
+            *v *= hi;
+        }
+    }
+    fixed_plan.apply(&mut want, Direction::Forward, &ExecPolicy::Seq).unwrap();
+    let mut got_fixed = SignalBlock::from_signals(&sigs).unwrap();
+    fixed_op.apply(&mut got_fixed, Direction::Forward, &ExecPolicy::Seq).unwrap();
+    assert_eq!(want.data, got_fixed.data, "refreshed filter must match the unfused reference");
+    let mut got_stale = SignalBlock::from_signals(&sigs).unwrap();
+    stale_op.apply(&mut got_stale, Direction::Forward, &ExecPolicy::Seq).unwrap();
+    assert_ne!(
+        want.data, got_stale.data,
+        "a stale-spectrum plan must answer heat-kernel filters wrongly"
+    );
+
+    // ---- wavelet bank ----
+    let stale_bank = WaveletBank::hammond(Arc::clone(&stale_plan), 2).unwrap();
+    let fixed_bank = WaveletBank::hammond(Arc::clone(&fixed_plan), 2).unwrap();
+    let block = SignalBlock::from_signals(&sigs).unwrap();
+    let stale_bands = stale_bank.analyze(&block, &ExecPolicy::Seq).unwrap();
+    let fixed_bands = fixed_bank.analyze(&block, &ExecPolicy::Seq).unwrap();
+    // refreshed bank == unfused per-band reference
+    for (bi, h) in fixed_bank.responses_f32().iter().enumerate() {
+        let mut wb = SignalBlock::from_signals(&sigs).unwrap();
+        fixed_plan.apply(&mut wb, Direction::Adjoint, &ExecPolicy::Seq).unwrap();
+        for (i, &hi) in h.iter().enumerate() {
+            for v in &mut wb.data[i * b..(i + 1) * b] {
+                *v *= hi;
+            }
+        }
+        fixed_plan.apply(&mut wb, Direction::Forward, &ExecPolicy::Seq).unwrap();
+        assert_eq!(wb.data, fixed_bands[bi].data, "refreshed wavelet band {bi} diverged");
+    }
+    // stale bank disagrees somewhere (the scales were placed on the old
+    // spectrum's range and the responses sampled at the old eigenvalues)
+    assert!(
+        stale_bands
+            .iter()
+            .zip(fixed_bands.iter())
+            .any(|(s, f)| s.data != f.data),
+        "a stale-spectrum plan must answer wavelet requests wrongly"
+    );
+}
+
+#[test]
+fn refactor_hot_swap_drains_in_flight_requests_on_the_old_plan() {
+    // zero-downtime swap semantics: jobs resolve their plan Arc at
+    // submit time, so everything submitted before the swap drains
+    // bitwise on the old plan while new submissions serve the
+    // refactored one.
+    let n = 20;
+    let mut rng = Rng64::new(1009);
+    let mut graph = graphs::community(n, &mut rng);
+    let l0 = graph.laplacian();
+    let f = SymFactorizer::new(&l0, 5 * n, SymOptions { max_sweeps: 1, ..Default::default() })
+        .run();
+    let old_plan = f.certified_plan(&l0);
+    let registry = Arc::new(PlanRegistry::new(8));
+    registry.install_default(Arc::clone(&old_plan));
+
+    let factory_plan = Arc::clone(&old_plan);
+    let coord = Coordinator::start_with_registry(
+        move || native(factory_plan, TransformDirection::Forward, 4, None, ExecPolicy::Seq),
+        ServeConfig { max_batch: 4, ..Default::default() },
+        Some(Arc::clone(&registry)),
+    )
+    .unwrap();
+
+    // in-flight load submitted against the resident (old) plan
+    let sigs: Vec<Vec<f32>> = (0..32)
+        .map(|_| (0..n).map(|_| rng.randn() as f32).collect())
+        .collect();
+    let tickets: Vec<_> = sigs.iter().map(|s| coord.submit(s.clone()).unwrap()).collect();
+
+    // warm refactor against the drifted Laplacian, then atomic swap
+    graphs::drift(&mut graph, 6, 1010);
+    let l1 = graph.laplacian();
+    let outcome =
+        refactor_and_swap(&registry, &old_plan, &l1, &RefactorOptions::default()).unwrap();
+    assert!(outcome.swapped, "no --max-error configured: the swap must go through");
+    assert_ne!(outcome.new_checksum, outcome.old_checksum);
+    assert_eq!(registry.stats().default_checksum, Some(outcome.new_checksum));
+
+    // the pre-swap submissions drain bitwise on the old plan
+    for (sig, t) in sigs.iter().zip(tickets) {
+        let out = t.wait().unwrap();
+        assert_eq!(
+            out,
+            forward_reference(&old_plan, sig),
+            "in-flight request must drain on the plan it resolved at submit"
+        );
+    }
+
+    // new submissions serve the refactored plan, whose certificate was
+    // measured against the drifted matrix
+    let new_plan = registry.default_plan().unwrap();
+    assert_eq!(new_plan.content_checksum(), outcome.new_checksum);
+    let cert = new_plan.certificate().expect("refactored plan must carry a certificate");
+    assert_eq!(cert.rel_err, outcome.rel_err);
+    let sig: Vec<f32> = (0..n).map(|_| rng.randn() as f32).collect();
+    let out = coord.submit(sig.clone()).unwrap().wait().unwrap();
+    assert_eq!(out, forward_reference(&new_plan, &sig), "post-swap request must serve the new plan");
+
+    let m = coord.shutdown();
+    assert_eq!(m.errors, 0);
 }

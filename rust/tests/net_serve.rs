@@ -9,13 +9,16 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use fastes::cli::figures::random_gplan;
-use fastes::linalg::Rng64;
+use fastes::factor::{SymFactorizer, SymOptions};
+use fastes::graphs;
+use fastes::linalg::{Mat, Rng64};
 use fastes::plan::{Direction, ExecPolicy, Plan};
 use fastes::serve::net::{
     self, hex_encode, read_frame, request, write_frame, Json, NetServerOptions,
 };
 use fastes::serve::{
-    Backend, Coordinator, NativeGftBackend, PlanRegistry, ServeConfig, TransformDirection,
+    refactor_plan, Backend, Coordinator, NativeGftBackend, PlanRegistry, RefactorOptions,
+    RefactorWorker, ServeConfig, TransformDirection,
 };
 use fastes::transforms::{certify_g, SignalBlock};
 
@@ -43,9 +46,13 @@ impl Server {
         Self::start_cfg(plan, opts, ServeConfig { max_batch: 4, ..Default::default() })
     }
 
-    fn start_cfg(plan: &Arc<Plan>, opts: NetServerOptions, config: ServeConfig) -> Server {
+    fn start_cfg(plan: &Arc<Plan>, mut opts: NetServerOptions, config: ServeConfig) -> Server {
         let registry = Arc::new(PlanRegistry::new(8));
         registry.install_default(Arc::clone(plan));
+        // every loopback server gets a refactor worker, like `fastes serve`
+        if opts.refactor.is_none() {
+            opts.refactor = Some(Arc::new(RefactorWorker::start(Arc::clone(&registry))));
+        }
         let p = Arc::clone(plan);
         let coordinator = Coordinator::start_with_registry(
             move || {
@@ -487,4 +494,139 @@ fn max_error_budget_refuses_uncertified_routes_on_the_wire() {
     let m = server.stop();
     assert_eq!(m.rejected_unsupported_plan, 1);
     assert_eq!(m.completed, 1);
+}
+
+fn matrix_json(m: &Mat) -> Json {
+    Json::Arr(m.as_slice().iter().map(|&x| Json::f64(x)).collect())
+}
+
+#[test]
+fn refactor_wire_op_warm_starts_and_hot_swaps_the_default_plan() {
+    // end-to-end drift story over the wire: a resident plan factored on
+    // the pre-drift Laplacian, a `refactor` request carrying the drifted
+    // matrix, and the registry default atomically repointed at the
+    // re-certified warm-start result.
+    let n = 16;
+    let mut rng = Rng64::new(95);
+    let mut graph = graphs::community(n, &mut rng);
+    let l0 = graph.laplacian();
+    let f = SymFactorizer::new(&l0, 5 * n, SymOptions { max_sweeps: 1, ..Default::default() })
+        .run();
+    let donor = f.plan();
+    let server = Server::start(&donor, NetServerOptions::default());
+    let mut conn = server.connect();
+
+    graphs::drift(&mut graph, 6, 96);
+    let l1 = graph.laplacian();
+    // the factorizer is bitwise-deterministic, so the server's result is
+    // reproducible locally
+    let want = refactor_plan(&donor, &l1, &RefactorOptions::default()).unwrap();
+    let want_key = want.plan.content_checksum();
+
+    // --- sync: the reply carries the swap outcome ---
+    let reply = request(
+        &mut conn,
+        &obj(vec![
+            ("op", Json::Str("refactor".into())),
+            ("matrix", matrix_json(&l1)),
+            ("sync", Json::Bool(true)),
+        ]),
+    )
+    .unwrap();
+    assert_eq!(reply.get("ok").and_then(|v| v.as_bool()), Some(true), "{reply:?}");
+    assert_eq!(reply.get("swapped").and_then(|v| v.as_bool()), Some(true), "{reply:?}");
+    assert_eq!(
+        reply.get("checksum").and_then(|v| v.as_str()),
+        Some(format!("{want_key:016x}").as_str()),
+        "server warm start must reproduce the local one bitwise"
+    );
+    assert_eq!(
+        reply.get("old_checksum").and_then(|v| v.as_str()),
+        Some(format!("{:016x}", donor.content_checksum()).as_str())
+    );
+    let rel = reply.get("rel_err").and_then(|v| v.as_f64()).expect("rel_err present");
+    assert!(
+        (rel - want.certificate.rel_err).abs() <= 1e-12 * (1.0 + want.certificate.rel_err),
+        "wire rel_err {rel} != local {}",
+        want.certificate.rel_err
+    );
+    assert_eq!(server.registry.stats().default_checksum, Some(want_key));
+
+    // forwards now serve the refactored plan, bitwise
+    let sig: Vec<f32> = (0..n).map(|_| rng.randn() as f32).collect();
+    let reply = request(
+        &mut conn,
+        &obj(vec![("op", Json::Str("forward".into())), ("signal", signal_json(&sig))]),
+    )
+    .unwrap();
+    assert_eq!(reply_signal(&reply), seq_reference(&want.plan, &sig, Direction::Adjoint));
+
+    // --- async: scheduled in the background, visible in the registry ---
+    graphs::drift(&mut graph, 4, 97);
+    let l2 = graph.laplacian();
+    let want2 = refactor_plan(&want.plan, &l2, &RefactorOptions::default()).unwrap();
+    let want2_key = want2.plan.content_checksum();
+    let reply = request(
+        &mut conn,
+        &obj(vec![("op", Json::Str("refactor".into())), ("matrix", matrix_json(&l2))]),
+    )
+    .unwrap();
+    assert_eq!(reply.get("ok").and_then(|v| v.as_bool()), Some(true), "{reply:?}");
+    assert_eq!(reply.get("status").and_then(|v| v.as_str()), Some("scheduled"), "{reply:?}");
+    let deadline = std::time::Instant::now() + Duration::from_secs(30);
+    while server.registry.stats().default_checksum != Some(want2_key) {
+        assert!(std::time::Instant::now() < deadline, "background refactor never swapped");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    // malformed matrices are per-request errors
+    let reply = request(
+        &mut conn,
+        &obj(vec![
+            ("op", Json::Str("refactor".into())),
+            ("matrix", Json::Arr(vec![Json::f64(1.0); 7])),
+        ]),
+    )
+    .unwrap();
+    assert_eq!(reply.get("code").and_then(|v| v.as_str()), Some("bad_request"));
+
+    let m = server.stop();
+    assert_eq!(m.errors, 0);
+}
+
+#[test]
+fn refactor_swap_is_refused_when_the_new_certificate_misses_max_error() {
+    // `serve --max-error` gates the hot swap: a drifted matrix whose
+    // warm-start certificate misses the budget keeps the resident plan.
+    let n = 16;
+    let certified = certified_plan_of(n, 98);
+    let server = Server::start_cfg(
+        &certified,
+        NetServerOptions::default(),
+        ServeConfig { max_batch: 4, max_error: Some(1e-9), ..Default::default() },
+    );
+    let mut conn = server.connect();
+    let old_key = certified.content_checksum();
+
+    // a real graph Laplacian is nothing like the donor's reconstruction,
+    // so the refactored certificate cannot meet 1e-9
+    let l = graphs::community(n, &mut Rng64::new(99)).laplacian();
+    let reply = request(
+        &mut conn,
+        &obj(vec![
+            ("op", Json::Str("refactor".into())),
+            ("matrix", matrix_json(&l)),
+            ("sync", Json::Bool(true)),
+        ]),
+    )
+    .unwrap();
+    assert_eq!(reply.get("ok").and_then(|v| v.as_bool()), Some(true), "{reply:?}");
+    assert_eq!(reply.get("swapped").and_then(|v| v.as_bool()), Some(false), "{reply:?}");
+    let refused = reply.get("refused").and_then(|v| v.as_str()).expect("refusal reason");
+    assert!(refused.contains("max-error"), "unexpected refusal: {refused}");
+    // the resident plan stays the default route
+    assert_eq!(server.registry.stats().default_checksum, Some(old_key));
+
+    let m = server.stop();
+    assert_eq!(m.errors, 0);
 }

@@ -5,7 +5,9 @@
 //! uses: the [`Error`] type (a dynamic error with a context chain), the
 //! [`Result`] alias, the [`anyhow!`] / [`bail!`] macros, and the
 //! [`Context`] extension trait. Errors are stored as a flattened chain of
-//! messages (outermost context first); no downcasting is supported.
+//! messages (outermost context first) plus the original error value,
+//! which [`Error::downcast_ref`] can recover (so typed errors like
+//! `factor::ResumeError` survive `?`-conversion and added context).
 
 use std::error::Error as StdError;
 use std::fmt;
@@ -13,6 +15,9 @@ use std::fmt;
 /// Dynamic error type: a chain of messages, outermost context first.
 pub struct Error {
     chain: Vec<String>,
+    /// The original typed error (when built via `From<E: StdError>`),
+    /// kept for [`Self::downcast_ref`]. `None` for message-only errors.
+    payload: Option<Box<dyn std::any::Any + Send + Sync>>,
 }
 
 /// `Result<T, anyhow::Error>` alias, matching the real crate's signature.
@@ -21,7 +26,7 @@ pub type Result<T, E = Error> = std::result::Result<T, E>;
 impl Error {
     /// Construct from any displayable message.
     pub fn msg<M: fmt::Display>(message: M) -> Error {
-        Error { chain: vec![message.to_string()] }
+        Error { chain: vec![message.to_string()], payload: None }
     }
 
     /// Wrap with an additional layer of context (becomes the new outermost
@@ -34,6 +39,13 @@ impl Error {
     /// Iterate the message chain, outermost first.
     pub fn chain(&self) -> impl Iterator<Item = &str> {
         self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// Recover the original typed error, if this `Error` was converted
+    /// from one (context layers added afterwards don't hide it) — the
+    /// subset of real anyhow's downcasting the codebase relies on.
+    pub fn downcast_ref<E: 'static>(&self) -> Option<&E> {
+        self.payload.as_ref()?.downcast_ref::<E>()
     }
 }
 
@@ -69,7 +81,7 @@ impl<E: StdError + Send + Sync + 'static> From<E> for Error {
             chain.push(s.to_string());
             source = s.source();
         }
-        Error { chain }
+        Error { chain, payload: Some(Box::new(e)) }
     }
 }
 
@@ -152,6 +164,16 @@ mod tests {
             bail!("boom {}", 7)
         }
         assert_eq!(fails().unwrap_err().to_string(), "boom 7");
+    }
+
+    #[test]
+    fn downcast_ref_recovers_typed_errors_through_context() {
+        let e: Error = Error::from(io_err()).context("opening config");
+        let io = e.downcast_ref::<std::io::Error>().expect("typed error survives context");
+        assert_eq!(io.kind(), std::io::ErrorKind::NotFound);
+        assert!(e.downcast_ref::<fmt::Error>().is_none());
+        // message-only errors carry no payload
+        assert!(anyhow!("plain").downcast_ref::<std::io::Error>().is_none());
     }
 
     #[test]
